@@ -1,0 +1,61 @@
+//! Quickstart: define services + SLOs, run the optimizer, inspect the
+//! deployment.
+//!
+//! ```bash
+//! cargo run --release --offline --example quickstart
+//! ```
+
+use mig_serving::optimizer::{
+    lower_bound_gpus, Greedy, OptimizerProcedure, ProblemCtx,
+};
+use mig_serving::perf::ProfileBank;
+use mig_serving::spec::{Slo, Workload};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Profiles: the bank ships the paper's 49 study models plus the
+    //    five real-world served models (synthesized; see DESIGN.md §1).
+    let bank = ProfileBank::synthetic();
+
+    // 2. A workload: three services with throughput + p90 latency SLOs.
+    let workload = Workload::new(
+        "quickstart",
+        vec![
+            // A sub-linear vision model: loves small instances.
+            ("densenet121".to_string(), Slo::new(3000.0, 100.0)),
+            // A super-linear NLP model: wants big instances.
+            ("xlnet-large-cased".to_string(), Slo::new(250.0, 200.0)),
+            // A mid-size classifier.
+            ("resnet50".to_string(), Slo::new(400.0, 150.0)),
+        ],
+    );
+
+    // 3. Problem context precomputes each service's effective
+    //    throughput per instance size under its latency SLO (§5.1).
+    let ctx = ProblemCtx::new(&bank, &workload)?;
+
+    // 4. The fast algorithm (heuristic greedy, §5.3 / App. A.1).
+    let deployment = Greedy::new().solve(&ctx)?;
+
+    println!("deployment for {:?}:", workload.name);
+    for (i, gpu) in deployment.gpus.iter().enumerate() {
+        println!("  GPU {i}: {}", gpu.label());
+    }
+    println!(
+        "\n{} GPUs used (rule-free lower bound: {})",
+        deployment.num_gpus(),
+        lower_bound_gpus(&ctx)
+    );
+
+    // 5. Validity: every SLO is met.
+    let completion = deployment.completion(&ctx);
+    for s in &workload.services {
+        println!(
+            "  {:<22} completion {:>6.1}%",
+            s.model,
+            completion.get(s.id) * 100.0
+        );
+    }
+    assert!(deployment.is_valid(&ctx));
+    println!("\nall SLOs satisfied ✓");
+    Ok(())
+}

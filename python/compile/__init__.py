@@ -1,0 +1,1 @@
+# build-time package: JAX model definitions + Pallas kernels + AOT lowering.

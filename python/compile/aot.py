@@ -1,0 +1,156 @@
+"""AOT pipeline: lower every (model, batch) pair to HLO **text** + weights.
+
+Run once at build time (``make artifacts``); the Rust runtime
+(rust/src/runtime/) loads the HLO text via ``HloModuleProto::from_text_file``
+and executes it on the PJRT CPU client.  Python never runs on the request
+path.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax >=
+0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs under ``artifacts/``:
+
+* ``<model>.b<batch>.hlo.txt``   — the lowered forward pass (2 params:
+  flat weights f32[P], input f32[batch, ...]).
+* ``<model>.weights.bin``        — raw little-endian f32 flat weights.
+* ``goldens/<model>.b<batch>.json`` — expected logits for the
+  deterministic golden input (rust regenerates the input bit-for-bit).
+* ``manifest.json``              — index of everything above.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+BATCHES = (1, 8)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def flops_estimate(spec, batch: int) -> int:
+    """Dense-layer MAC*2 estimate used by DESIGN.md's roofline discussion."""
+    if isinstance(spec, M.EncoderSpec):
+        d, f, s, L = spec.d_model, spec.d_ff, spec.seq, spec.layers
+        per_tok = L * (4 * d * d + 2 * d * f) + d * spec.n_classes
+        attn = L * 2 * s * s * d  # scores + context per layer
+        return 2 * batch * (s * per_tok + attn)
+    if isinstance(spec, M.MlpSpec):
+        h = spec.d_hidden
+        per = spec.d_in * h + spec.blocks * 2 * h * h + h * spec.n_classes
+        return 2 * batch * per
+    raise TypeError(spec)
+
+
+def build_one(spec, batch: int, outdir: str, *, use_pallas: bool = True,
+              goldens: bool = True) -> dict:
+    name = f"{spec.name}.b{batch}"
+    flat = M.init_params(spec)
+    n_params = int(flat.shape[0])
+
+    def fwd(params, x):
+        return (M.forward(params, x, spec, use_pallas=use_pallas),)
+
+    in_shape = spec.input_shape(batch)
+    lowered = jax.jit(fwd).lower(
+        jax.ShapeDtypeStruct((n_params,), jnp.float32),
+        jax.ShapeDtypeStruct(in_shape, jnp.float32),
+    )
+    hlo_rel = f"{name}.hlo.txt"
+    with open(os.path.join(outdir, hlo_rel), "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    weights_rel = f"{spec.name}.weights.bin"
+    wpath = os.path.join(outdir, weights_rel)
+    if not os.path.exists(wpath):
+        import numpy as np
+
+        np.asarray(flat, dtype="<f4").tofile(wpath)
+
+    entry = {
+        "name": name,
+        "model": spec.name,
+        "family": spec.family,
+        "batch": batch,
+        "hlo": hlo_rel,
+        "weights": weights_rel,
+        "param_count": n_params,
+        "input_shape": list(in_shape),
+        "output_shape": [batch, spec.n_classes],
+        "flops_per_batch": flops_estimate(spec, batch),
+    }
+
+    if goldens:
+        x = M.golden_input(spec, batch)
+        y = jax.jit(fwd)(flat, x)[0]
+        gdir = os.path.join(outdir, "goldens")
+        os.makedirs(gdir, exist_ok=True)
+        grel = os.path.join("goldens", f"{name}.json")
+        with open(os.path.join(outdir, grel), "w") as f:
+            json.dump(
+                {
+                    "artifact": name,
+                    "input": "golden_input",  # regenerated in rust
+                    "output": [float(v) for v in y.reshape(-1)],
+                },
+                f,
+            )
+        entry["golden"] = grel
+    return entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--models", nargs="*", default=sorted(M.ZOO.keys()))
+    ap.add_argument("--batches", nargs="*", type=int, default=list(BATCHES))
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="lower the pure-jnp reference instead of the "
+                         "Pallas kernels (ablation artifact)")
+    ap.add_argument("--no-goldens", action="store_true")
+    args = ap.parse_args()
+
+    outdir = args.out
+    os.makedirs(outdir, exist_ok=True)
+    entries = []
+    for mname in args.models:
+        spec = M.ZOO[mname]
+        for b in args.batches:
+            print(f"[aot] lowering {mname} batch={b} ...", flush=True)
+            entries.append(
+                build_one(
+                    spec, b, outdir,
+                    use_pallas=not args.no_pallas,
+                    goldens=not args.no_goldens,
+                )
+            )
+    manifest = {
+        "version": 1,
+        "pallas": not args.no_pallas,
+        "artifacts": entries,
+    }
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] wrote {len(entries)} artifacts to {outdir}")
+
+
+if __name__ == "__main__":
+    main()

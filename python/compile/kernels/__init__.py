@@ -1,0 +1,19 @@
+"""Layer-1 Pallas kernels for MIG-Serving's served models.
+
+Kernels are authored for the TPU mental model (VMEM tiles, MXU-shaped
+128x128 matmul blocks, BlockSpec HBM<->VMEM schedules) but are lowered
+with ``interpret=True`` on this CPU-only image: real-TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute.  Correctness is
+checked against the pure-jnp oracle in :mod:`ref` by pytest/hypothesis.
+"""
+
+from .matmul import matmul_bias_act, TILE_M, TILE_N, TILE_K
+from .attention import fused_attention
+
+__all__ = [
+    "matmul_bias_act",
+    "fused_attention",
+    "TILE_M",
+    "TILE_N",
+    "TILE_K",
+]

@@ -1,0 +1,78 @@
+"""Fused scaled-dot-product attention Pallas kernel (Layer 1).
+
+softmax(Q K^T / sqrt(d) [+mask]) V computed in one kernel per
+(batch * head) program, so the [S, S] score matrix never round-trips to
+HBM — the fusion that FlashAttention performs with shared-memory tiles on
+GPUs is expressed here as a VMEM-resident block (DESIGN.md "Hardware
+adaptation": VMEM is the scratchpad analogue of SRAM/shared memory).
+
+Served-model geometry: S (sequence) <= 128 and head dim <= 128, so one
+head's Q/K/V tiles plus the score matrix fit comfortably in VMEM:
+3 * S * D + S * S f32 words = (3*128*128 + 128*128) * 4 B = 256 KiB.
+For longer sequences the kernel would add an inner k-tile loop with the
+online-softmax rescaling trick; the served models do not need it, and the
+oracle in ref.py documents the contract either way.
+
+Numerics: row-max-subtracted softmax in f32, matching ref.py bit-for-bit
+under interpret mode.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float, causal: bool):
+    q = q_ref[0].astype(jnp.float32)  # [S, D]
+    k = k_ref[0].astype(jnp.float32)  # [S, D]
+    v = v_ref[0].astype(jnp.float32)  # [S, D]
+
+    # MXU: scores = Q K^T, scaled.
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # [S, S]
+
+    if causal:
+        seq = s.shape[0]
+        row = jax.lax.broadcasted_iota(jnp.int32, (seq, seq), 0)
+        col = jax.lax.broadcasted_iota(jnp.int32, (seq, seq), 1)
+        s = jnp.where(col <= row, s, -jnp.inf)
+
+    # Numerically stable softmax, all VMEM-resident.
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+
+    o_ref[0] = jnp.dot(p, v, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("causal",))
+def fused_attention(q, k, v, causal: bool = False):
+    """Fused attention over ``[B, H, S, D]`` tensors.
+
+    One grid program per (batch, head); Q/K/V head-slices stream
+    HBM->VMEM via the BlockSpecs, the [S, S] score block stays in VMEM.
+    """
+    b, h, s, d = q.shape
+    if k.shape != (b, h, s, d) or v.shape != (b, h, s, d):
+        raise ValueError(f"q/k/v shape mismatch: {q.shape} {k.shape} {v.shape}")
+    scale = 1.0 / math.sqrt(d)
+
+    bh = b * h
+    qf = q.reshape(bh, s, d).astype(jnp.float32)
+    kf = k.reshape(bh, s, d).astype(jnp.float32)
+    vf = v.reshape(bh, s, d).astype(jnp.float32)
+
+    spec = pl.BlockSpec((1, s, d), lambda i: (i, 0, 0))
+    out = pl.pallas_call(
+        functools.partial(_attn_kernel, scale=scale, causal=causal),
+        grid=(bh,),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), jnp.float32),
+        interpret=True,
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, d).astype(q.dtype)

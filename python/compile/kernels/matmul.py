@@ -1,0 +1,131 @@
+"""Tiled matmul + bias + activation Pallas kernel (Layer 1).
+
+This is the inference hot-spot of every model MIG-Serving serves: all
+dense layers (QKV projections, FFN, classifier heads) lower through this
+kernel.
+
+TPU mapping (see DESIGN.md "Hardware adaptation"):
+
+* the grid iterates over (M/TILE_M, N/TILE_N, K/TILE_K); each (i, j)
+  program owns one MXU-shaped output tile that stays resident in VMEM
+  across the sequential innermost k axis (the out BlockSpec's index map
+  ignores k, so Pallas keeps the tile live and the kernel accumulates
+  into it — the classic "accumulate in the revisited output tile"
+  schedule);
+* the ``x`` and ``w`` BlockSpecs express the HBM->VMEM slab schedule the
+  paper's CUDA stack wrote with threadblocks: Pallas pipelines the next
+  K-slab while the MXU consumes the current one (double buffering);
+* tiles are 128x128 — the MXU systolic-array shape — and accumulation is
+  f32 (``preferred_element_type``), mirroring tensor-core f32
+  accumulation.
+
+VMEM budget per program: x-slab + w-slab + out tile =
+3 * 128 * 128 * 4 B = 192 KiB (384 KiB with double-buffered inputs),
+far below a TPU core's ~16 MiB VMEM.
+
+On this image the kernel must run with ``interpret=True`` (CPU PJRT
+cannot execute Mosaic custom-calls); structure, not interpret-mode
+wallclock, is the performance signal.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-shaped tiles.
+TILE_M = 128
+TILE_N = 128
+TILE_K = 128
+
+_ACTIVATIONS = ("none", "relu", "gelu", "tanh")
+
+
+def _apply_act(y, act: str):
+    if act == "none":
+        return y
+    if act == "relu":
+        return jnp.maximum(y, 0.0)
+    if act == "gelu":
+        # tanh-approximated GELU, matching ref.py.
+        c = 0.7978845608028654  # sqrt(2/pi)
+        return 0.5 * y * (1.0 + jnp.tanh(c * (y + 0.044715 * y * y * y)))
+    if act == "tanh":
+        return jnp.tanh(y)
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def _matmul_kernel(x_ref, w_ref, b_ref, o_ref, *, act: str, n_k: int):
+    """One (i, j, k) grid step: o[i,j] += x[i,k] @ w[k,j]; epilogue at k end.
+
+    The output tile is revisited across the sequential k axis; it lives in
+    VMEM for the whole k loop, so accumulating into ``o_ref`` is free of
+    HBM round-trips.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        o_ref[...] = _apply_act(o_ref[...] + b_ref[...], act)
+
+
+def _pad2(a, rows, cols):
+    pr, pc = rows - a.shape[0], cols - a.shape[1]
+    if pr == 0 and pc == 0:
+        return a
+    return jnp.pad(a, ((0, pr), (0, pc)))
+
+
+@functools.partial(jax.jit, static_argnames=("act",))
+def matmul_bias_act(x, w, b, act: str = "none"):
+    """``act(x @ w + b)`` via the tiled Pallas kernel.
+
+    ``x``: [M, K]; ``w``: [K, N]; ``b``: [N].  Arbitrary M/K/N are
+    supported by padding up to tile multiples and slicing the result —
+    the served models use tile-aligned dims so the pad is a no-op on the
+    hot path.
+    """
+    if act not in _ACTIVATIONS:
+        raise ValueError(f"unknown activation {act!r}")
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch {k} vs {k2}")
+    if b.shape != (n,):
+        raise ValueError(f"bias shape {b.shape} != ({n},)")
+
+    mp = -(-m // TILE_M) * TILE_M
+    kp = -(-k // TILE_K) * TILE_K
+    np_ = -(-n // TILE_N) * TILE_N
+
+    xt = _pad2(x.astype(jnp.float32), mp, kp)
+    wt = _pad2(w.astype(jnp.float32), kp, np_)
+    bt = jnp.pad(b.astype(jnp.float32), (0, np_ - n)).reshape(1, np_)
+
+    n_k = kp // TILE_K
+    grid = (mp // TILE_M, np_ // TILE_N, n_k)
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, act=act, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_M, TILE_K), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((TILE_K, TILE_N), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, TILE_N), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((TILE_M, TILE_N), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xt, wt, bt)
+    return out[:m, :n].astype(x.dtype)

@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for the Layer-1 Pallas kernels.
+
+Every kernel in this package has a reference implementation here written
+with nothing but ``jax.numpy`` ops.  pytest (python/tests/) asserts
+allclose between kernel and oracle over hypothesis-swept shapes; the same
+oracles also generate the golden tensors the Rust runtime tests check
+against (python/compile/aot.py --goldens).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def gelu(y):
+    """tanh-approximated GELU — must match matmul.py's epilogue exactly."""
+    c = 0.7978845608028654  # sqrt(2/pi)
+    return 0.5 * y * (1.0 + jnp.tanh(c * (y + 0.044715 * y * y * y)))
+
+
+def matmul_bias_act(x, w, b, act: str = "none"):
+    """Oracle for kernels.matmul.matmul_bias_act."""
+    y = jnp.dot(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ) + b.astype(jnp.float32)
+    if act == "none":
+        pass
+    elif act == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif act == "gelu":
+        y = gelu(y)
+    elif act == "tanh":
+        y = jnp.tanh(y)
+    else:
+        raise ValueError(f"unknown activation {act!r}")
+    return y.astype(x.dtype)
+
+
+def fused_attention(q, k, v, causal: bool = False):
+    """Oracle for kernels.attention.fused_attention."""
+    b, h, s, d = q.shape
+    scale = 1.0 / math.sqrt(d)
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", qf, kf) * scale
+    if causal:
+        row = jax.lax.broadcasted_iota(jnp.int32, (s, s), 0)
+        col = jax.lax.broadcasted_iota(jnp.int32, (s, s), 1)
+        scores = jnp.where((col <= row)[None, None], scores, -jnp.inf)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vf)
+    return out.astype(q.dtype)
+
+
+def layer_norm(x, gamma, beta, eps: float = 1e-5):
+    """LayerNorm oracle (the models use plain-jnp LN; kept here so model
+    goldens have a single source of truth)."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) / jnp.sqrt(var + eps)
+    return (y * gamma + beta).astype(x.dtype)

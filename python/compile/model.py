@@ -1,0 +1,284 @@
+"""Layer-2 JAX model definitions for the models MIG-Serving serves.
+
+The paper's real-world workloads serve five models: roberta-large,
+bert-base-uncased, albert-large-v2, resnet101 and resnet50 (§8).  We
+reproduce them as two architecture families sized to this CPU testbed
+(DESIGN.md §1 "Substitutions"):
+
+* **encoder** (the BERT family) — a pre-LN transformer encoder
+  classifier.  Attention goes through the fused Pallas attention kernel;
+  every dense layer goes through the tiled Pallas matmul kernel.
+* **mlp** (the ResNet family) — a residual MLP classifier; all dense
+  layers through the Pallas matmul kernel.
+
+Weights are passed as ONE flat f32 vector (parameter 0) and unpacked with
+static slices, so each AOT artifact has exactly two parameters —
+``(params_flat, x)`` — and the Rust runtime feeds a single weights.bin
+literal plus the batch.  Weight *values* are deterministic from the model
+name, so python and rust agree on goldens without shipping checkpoints.
+
+This module is build-time only; it is never imported on the request path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul_bias_act, fused_attention
+from .kernels import ref as kref
+
+
+# --------------------------------------------------------------------------
+# model zoo
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class EncoderSpec:
+    """Transformer-encoder classifier geometry."""
+
+    name: str
+    layers: int
+    d_model: int
+    heads: int
+    seq: int
+    d_ff: int
+    n_classes: int
+
+    @property
+    def family(self) -> str:
+        return "encoder"
+
+    def input_shape(self, batch: int) -> Tuple[int, ...]:
+        return (batch, self.seq, self.d_model)
+
+
+@dataclasses.dataclass(frozen=True)
+class MlpSpec:
+    """Residual-MLP classifier geometry."""
+
+    name: str
+    blocks: int
+    d_in: int
+    d_hidden: int
+    n_classes: int
+
+    @property
+    def family(self) -> str:
+        return "mlp"
+
+    def input_shape(self, batch: int) -> Tuple[int, ...]:
+        return (batch, self.d_in)
+
+
+# Scaled-down stand-ins for the paper's five real-world models.  Relative
+# depth/width ordering matches the real models (roberta-large >
+# albert-large-v2 > bert-base; resnet101 > resnet50).
+ZOO: Dict[str, object] = {
+    "bert-base-uncased": EncoderSpec(
+        "bert-base-uncased", layers=2, d_model=128, heads=4, seq=64,
+        d_ff=256, n_classes=16,
+    ),
+    "roberta-large": EncoderSpec(
+        "roberta-large", layers=4, d_model=256, heads=8, seq=64,
+        d_ff=512, n_classes=16,
+    ),
+    "albert-large-v2": EncoderSpec(
+        "albert-large-v2", layers=3, d_model=256, heads=4, seq=64,
+        d_ff=512, n_classes=16,
+    ),
+    "resnet50": MlpSpec(
+        "resnet50", blocks=4, d_in=1024, d_hidden=512, n_classes=16,
+    ),
+    "resnet101": MlpSpec(
+        "resnet101", blocks=8, d_in=1024, d_hidden=512, n_classes=16,
+    ),
+}
+
+
+# --------------------------------------------------------------------------
+# flat parameter packing
+# --------------------------------------------------------------------------
+
+
+def _param_shapes(spec) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list defining the flat parameter layout."""
+    out: List[Tuple[str, Tuple[int, ...]]] = []
+    if isinstance(spec, EncoderSpec):
+        d, f = spec.d_model, spec.d_ff
+        for i in range(spec.layers):
+            p = f"layer{i}."
+            out += [
+                (p + "ln1.gamma", (d,)), (p + "ln1.beta", (d,)),
+                (p + "wq", (d, d)), (p + "bq", (d,)),
+                (p + "wk", (d, d)), (p + "bk", (d,)),
+                (p + "wv", (d, d)), (p + "bv", (d,)),
+                (p + "wo", (d, d)), (p + "bo", (d,)),
+                (p + "ln2.gamma", (d,)), (p + "ln2.beta", (d,)),
+                (p + "w1", (d, f)), (p + "b1", (f,)),
+                (p + "w2", (f, d)), (p + "b2", (d,)),
+            ]
+        out += [
+            ("final_ln.gamma", (d,)), ("final_ln.beta", (d,)),
+            ("head.w", (d, spec.n_classes)), ("head.b", (spec.n_classes,)),
+        ]
+    elif isinstance(spec, MlpSpec):
+        out.append(("stem.w", (spec.d_in, spec.d_hidden)))
+        out.append(("stem.b", (spec.d_hidden,)))
+        for i in range(spec.blocks):
+            p = f"block{i}."
+            h = spec.d_hidden
+            out += [
+                (p + "w1", (h, h)), (p + "b1", (h,)),
+                (p + "w2", (h, h)), (p + "b2", (h,)),
+            ]
+        out += [
+            ("head.w", (spec.d_hidden, spec.n_classes)),
+            ("head.b", (spec.n_classes,)),
+        ]
+    else:
+        raise TypeError(f"unknown spec {spec!r}")
+    return out
+
+
+def param_count(spec) -> int:
+    return sum(math.prod(s) for _, s in _param_shapes(spec))
+
+
+def _unpack(flat, spec) -> Dict[str, jnp.ndarray]:
+    """Static-slice the flat vector into named tensors."""
+    params: Dict[str, jnp.ndarray] = {}
+    off = 0
+    for name, shape in _param_shapes(spec):
+        n = math.prod(shape)
+        params[name] = jax.lax.slice(flat, (off,), (off + n,)).reshape(shape)
+        off += n
+    return params
+
+
+def init_params(spec, seed: int = 0) -> jnp.ndarray:
+    """Deterministic flat parameter vector for ``spec``.
+
+    Scaled-normal init; LayerNorm gammas start at 1.  Deterministic from
+    (model name, seed) so goldens are reproducible across runs.
+    """
+    key = jax.random.PRNGKey(
+        (seed * 1_000_003 + sum(spec.name.encode())) & 0x7FFFFFFF
+    )
+    chunks = []
+    for name, shape in _param_shapes(spec):
+        key, sub = jax.random.split(key)
+        n = math.prod(shape)
+        if name.endswith("gamma"):
+            chunks.append(jnp.ones(n, jnp.float32))
+        elif name.endswith(("beta", ".b", "bq", "bk", "bv", "bo", "b1", "b2")):
+            chunks.append(jnp.zeros(n, jnp.float32))
+        else:
+            fan_in = shape[0] if len(shape) > 1 else n
+            std = 1.0 / math.sqrt(fan_in)
+            chunks.append(jax.random.normal(sub, (n,), jnp.float32) * std)
+    return jnp.concatenate(chunks)
+
+
+# --------------------------------------------------------------------------
+# forward passes
+# --------------------------------------------------------------------------
+
+
+def _dense(x2d, w, b, act, *, use_pallas: bool):
+    fn = matmul_bias_act if use_pallas else kref.matmul_bias_act
+    return fn(x2d, w, b, act)
+
+
+def encoder_forward(flat, x, spec: EncoderSpec, *, use_pallas: bool = True):
+    """Pre-LN transformer encoder -> mean-pool -> classifier logits.
+
+    ``x``: [B, S, D] embedded inputs; returns [B, n_classes].
+    """
+    p = _unpack(flat, spec)
+    b, s, d = x.shape
+    h = spec.heads
+    dh = d // h
+    attn = fused_attention if use_pallas else kref.fused_attention
+
+    y = x.astype(jnp.float32)
+    for i in range(spec.layers):
+        pre = f"layer{i}."
+        # --- attention sublayer
+        ln = kref.layer_norm(y, p[pre + "ln1.gamma"], p[pre + "ln1.beta"])
+        flat2d = ln.reshape(b * s, d)
+        q = _dense(flat2d, p[pre + "wq"], p[pre + "bq"], "none",
+                   use_pallas=use_pallas)
+        k = _dense(flat2d, p[pre + "wk"], p[pre + "bk"], "none",
+                   use_pallas=use_pallas)
+        v = _dense(flat2d, p[pre + "wv"], p[pre + "bv"], "none",
+                   use_pallas=use_pallas)
+        # [B, S, D] -> [B, H, S, Dh]
+        def heads_(t):
+            return t.reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+        o = attn(heads_(q), heads_(k), heads_(v))
+        o = o.transpose(0, 2, 1, 3).reshape(b * s, d)
+        o = _dense(o, p[pre + "wo"], p[pre + "bo"], "none",
+                   use_pallas=use_pallas)
+        y = y + o.reshape(b, s, d)
+        # --- FFN sublayer
+        ln = kref.layer_norm(y, p[pre + "ln2.gamma"], p[pre + "ln2.beta"])
+        f1 = _dense(ln.reshape(b * s, d), p[pre + "w1"], p[pre + "b1"],
+                    "gelu", use_pallas=use_pallas)
+        f2 = _dense(f1, p[pre + "w2"], p[pre + "b2"], "none",
+                    use_pallas=use_pallas)
+        y = y + f2.reshape(b, s, d)
+
+    y = kref.layer_norm(y, p["final_ln.gamma"], p["final_ln.beta"])
+    pooled = jnp.mean(y, axis=1)  # [B, D]
+    return _dense(pooled, p["head.w"], p["head.b"], "none",
+                  use_pallas=use_pallas)
+
+
+def mlp_forward(flat, x, spec: MlpSpec, *, use_pallas: bool = True):
+    """Residual MLP classifier.  ``x``: [B, d_in]; returns [B, n_classes]."""
+    p = _unpack(flat, spec)
+    y = _dense(x.astype(jnp.float32), p["stem.w"], p["stem.b"], "gelu",
+               use_pallas=use_pallas)
+    for i in range(spec.blocks):
+        pre = f"block{i}."
+        z = _dense(y, p[pre + "w1"], p[pre + "b1"], "gelu",
+                   use_pallas=use_pallas)
+        z = _dense(z, p[pre + "w2"], p[pre + "b2"], "none",
+                   use_pallas=use_pallas)
+        y = y + z
+    return _dense(y, p["head.w"], p["head.b"], "none", use_pallas=use_pallas)
+
+
+def forward(flat, x, spec, *, use_pallas: bool = True):
+    """Dispatch on model family."""
+    if isinstance(spec, EncoderSpec):
+        return encoder_forward(flat, x, spec, use_pallas=use_pallas)
+    if isinstance(spec, MlpSpec):
+        return mlp_forward(flat, x, spec, use_pallas=use_pallas)
+    raise TypeError(f"unknown spec {spec!r}")
+
+
+# --------------------------------------------------------------------------
+# deterministic cross-language test input
+# --------------------------------------------------------------------------
+
+
+def golden_input(spec, batch: int) -> jnp.ndarray:
+    """Deterministic input both python and rust can regenerate exactly.
+
+    x[i] = frac(i * 2654435761 / 2^32) - 0.5 over the flattened tensor —
+    pure integer arithmetic then one f32 divide, so the two languages
+    agree bit-for-bit (rust: util::goldens::golden_input).
+    """
+    shape = spec.input_shape(batch)
+    n = math.prod(shape)
+    idx = jnp.arange(n, dtype=jnp.uint32)
+    mixed = (idx * jnp.uint32(2654435761)) & jnp.uint32(0xFFFFFFFF)
+    vals = mixed.astype(jnp.float32) / jnp.float32(4294967296.0) - 0.5
+    return vals.reshape(shape)

@@ -1,0 +1,62 @@
+"""AOT lowering pipeline: HLO text emission, manifest integrity."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model as M
+
+
+def test_to_hlo_text_smoke():
+    def fn(x, y):
+        return (jnp.matmul(x, y) + 2.0,)
+
+    spec = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    text = aot.to_hlo_text(jax.jit(fn).lower(spec, spec))
+    assert "ENTRY" in text
+    assert "f32[2,2]" in text
+
+
+def test_flops_estimate_monotone_in_batch():
+    for spec in M.ZOO.values():
+        assert aot.flops_estimate(spec, 8) == 8 * aot.flops_estimate(spec, 1)
+
+
+def test_flops_estimate_orders_models():
+    # Deeper/wider stand-ins must cost more, matching the real models'
+    # relative ordering the profiles assume.
+    f = lambda n: aot.flops_estimate(M.ZOO[n], 1)
+    assert f("roberta-large") > f("albert-large-v2") > f("bert-base-uncased")
+    assert f("resnet101") > f("resnet50")
+
+
+def test_build_one_writes_artifacts(tmp_path):
+    # Smallest model, batch 1, reference path (fast to lower).
+    spec = M.ZOO["bert-base-uncased"]
+    entry = aot.build_one(spec, 1, str(tmp_path), use_pallas=False)
+    hlo = tmp_path / entry["hlo"]
+    assert hlo.exists() and "ENTRY" in hlo.read_text()[:4096]
+    weights = tmp_path / entry["weights"]
+    assert weights.stat().st_size == 4 * entry["param_count"]
+    golden = json.loads((tmp_path / entry["golden"]).read_text())
+    assert len(golden["output"]) == spec.n_classes
+    assert entry["input_shape"] == [1, spec.seq, spec.d_model]
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "..", "..",
+                                    "artifacts", "manifest.json")),
+    reason="run `make artifacts` first",
+)
+def test_checked_in_manifest_consistent():
+    root = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    with open(os.path.join(root, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["artifacts"], "manifest is empty"
+    for e in man["artifacts"]:
+        assert os.path.exists(os.path.join(root, e["hlo"])), e["name"]
+        w = os.path.join(root, e["weights"])
+        assert os.path.getsize(w) == 4 * e["param_count"], e["name"]

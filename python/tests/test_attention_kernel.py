@@ -1,0 +1,75 @@
+"""Fused attention Pallas kernel vs pure-jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fused_attention
+from compile.kernels import ref
+
+
+def _qkv(seed, b, h, s, d):
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(kq, (b, h, s, d), jnp.float32)
+    k = jax.random.normal(kk, (b, h, s, d), jnp.float32)
+    v = jax.random.normal(kv, (b, h, s, d), jnp.float32)
+    return q, k, v
+
+
+@pytest.mark.parametrize("causal", [False, True])
+@pytest.mark.parametrize("b,h,s,d", [(1, 1, 8, 16), (2, 4, 64, 32), (1, 8, 64, 32)])
+def test_matches_oracle(b, h, s, d, causal):
+    q, k, v = _qkv(0, b, h, s, d)
+    got = fused_attention(q, k, v, causal=causal)
+    want = ref.fused_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_softmax_rows_average_values():
+    # With identical K rows the attention weights are uniform, so the
+    # output is the mean of V along the sequence.
+    b, h, s, d = 1, 2, 16, 8
+    q, _, v = _qkv(1, b, h, s, d)
+    k = jnp.ones((b, h, s, d), jnp.float32)
+    got = fused_attention(q, k, v)
+    want = jnp.broadcast_to(jnp.mean(v, axis=2, keepdims=True), v.shape)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_causal_first_position_sees_only_itself():
+    b, h, s, d = 1, 1, 12, 8
+    q, k, v = _qkv(2, b, h, s, d)
+    got = fused_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(got[:, :, 0], v[:, :, 0], rtol=1e-5, atol=1e-5)
+
+
+def test_large_logits_stable():
+    # Row-max subtraction must keep softmax finite for large score scales.
+    b, h, s, d = 1, 1, 16, 16
+    q, k, v = _qkv(3, b, h, s, d)
+    got = fused_attention(q * 100.0, k * 100.0, v)
+    assert bool(jnp.all(jnp.isfinite(got)))
+
+
+def test_shape_mismatch_rejected():
+    q, k, v = _qkv(4, 1, 2, 8, 8)
+    with pytest.raises(ValueError):
+        fused_attention(q, k[:, :1], v)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    h=st.integers(1, 4),
+    s=st.sampled_from([4, 16, 33, 64]),
+    d=st.sampled_from([8, 16, 32]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_sweep(b, h, s, d, causal, seed):
+    q, k, v = _qkv(seed, b, h, s, d)
+    got = fused_attention(q, k, v, causal=causal)
+    want = ref.fused_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)

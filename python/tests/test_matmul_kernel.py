@@ -1,0 +1,100 @@
+"""Pallas tiled matmul kernel vs pure-jnp oracle (the CORE L1 signal)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul_bias_act, TILE_M, TILE_N, TILE_K
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+@pytest.mark.parametrize("act", ["none", "relu", "gelu", "tanh"])
+def test_tile_aligned_exact_shapes(act):
+    x, w = _rand(0, 128, 256), _rand(1, 256, 128)
+    b = _rand(2, 128)
+    got = matmul_bias_act(x, w, b, act)
+    want = ref.matmul_bias_act(x, w, b, act)
+    # K = 2 tiles: the kernel accumulates per-tile partial sums, the
+    # oracle does one dot — identical math, different summation order.
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (1, 1, 1),          # degenerate
+        (1, 128, 16),       # classifier-head shape
+        (64, 128, 128),     # single-tile with M padding
+        (129, 257, 130),    # all dims straddle a tile boundary
+        (300, 100, 5),      # tall-skinny
+        (8, 1024, 512),     # mlp stem shape
+    ],
+)
+def test_padded_shapes(m, k, n):
+    x, w, b = _rand(3, m, k), _rand(4, k, n), _rand(5, n)
+    got = matmul_bias_act(x, w, b, "none")
+    want = ref.matmul_bias_act(x, w, b, "none")
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_multi_k_tile_accumulation():
+    # K = 3 tiles: exercises the zero-init + accumulate + epilogue path.
+    x, w, b = _rand(6, 128, 3 * TILE_K), _rand(7, 3 * TILE_K, 128), _rand(8, 128)
+    got = matmul_bias_act(x, w, b, "gelu")
+    want = ref.matmul_bias_act(x, w, b, "gelu")
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_zero_inputs_give_bias():
+    x = jnp.zeros((4, 64), jnp.float32)
+    w = jnp.zeros((64, 32), jnp.float32)
+    b = jnp.arange(32, dtype=jnp.float32)
+    got = matmul_bias_act(x, w, b, "none")
+    np.testing.assert_allclose(got, jnp.broadcast_to(b, (4, 32)), atol=1e-7)
+
+
+def test_relu_clamps_negative():
+    x = -jnp.ones((8, 8), jnp.float32)
+    w = jnp.eye(8, dtype=jnp.float32)
+    b = jnp.zeros(8, jnp.float32)
+    got = matmul_bias_act(x, w, b, "relu")
+    assert float(jnp.max(jnp.abs(got))) == 0.0
+
+
+def test_unknown_activation_rejected():
+    x, w, b = _rand(9, 8, 8), _rand(10, 8, 8), _rand(11, 8)
+    with pytest.raises(ValueError):
+        matmul_bias_act(x, w, b, "swish")
+
+
+def test_shape_mismatch_rejected():
+    x, w, b = _rand(12, 8, 9), _rand(13, 8, 8), _rand(14, 8)
+    with pytest.raises(ValueError):
+        matmul_bias_act(x, w, b)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 200),
+    k=st.integers(1, 200),
+    n=st.integers(1, 200),
+    act=st.sampled_from(["none", "relu", "gelu", "tanh"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_sweep(m, k, n, act, seed):
+    """Kernel == oracle over arbitrary shapes and activations."""
+    kx, kw, kb = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(kx, (m, k), jnp.float32)
+    w = jax.random.normal(kw, (k, n), jnp.float32)
+    b = jax.random.normal(kb, (n,), jnp.float32)
+    got = matmul_bias_act(x, w, b, act)
+    want = ref.matmul_bias_act(x, w, b, act)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)

@@ -1,0 +1,73 @@
+"""L2 model forward passes: Pallas path vs pure-jnp reference path."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+@pytest.mark.parametrize("name", sorted(M.ZOO.keys()))
+def test_pallas_matches_reference(name):
+    spec = M.ZOO[name]
+    flat = M.init_params(spec)
+    x = M.golden_input(spec, 2)
+    got = M.forward(flat, x, spec, use_pallas=True)
+    want = M.forward(flat, x, spec, use_pallas=False)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("name", sorted(M.ZOO.keys()))
+def test_param_layout_consistent(name):
+    spec = M.ZOO[name]
+    shapes = M._param_shapes(spec)
+    total = sum(math.prod(s) for _, s in shapes)
+    assert total == M.param_count(spec)
+    flat = M.init_params(spec)
+    assert flat.shape == (total,)
+    # names unique
+    names = [n for n, _ in shapes]
+    assert len(names) == len(set(names))
+
+
+def test_init_deterministic():
+    spec = M.ZOO["resnet50"]
+    a = M.init_params(spec)
+    b = M.init_params(spec)
+    np.testing.assert_array_equal(a, b)
+    # different models -> different params
+    c = M.init_params(M.ZOO["resnet101"])
+    assert c.shape != a.shape or not np.allclose(np.asarray(a), np.asarray(c)[: a.shape[0]])
+
+
+def test_golden_input_reference_values():
+    """Pin the exact golden-input recurrence so rust and python can never
+    drift silently (mirrors rust test util::goldens::tests)."""
+    spec = M.ZOO["resnet50"]
+    x = np.asarray(M.golden_input(spec, 1)).reshape(-1)
+    for i in [0, 1, 2, 1023]:
+        mixed = (i * 2654435761) & 0xFFFFFFFF
+        want = np.float32(mixed) / np.float32(4294967296.0) - np.float32(0.5)
+        assert x[i] == pytest.approx(want, abs=0), (i, x[i], want)
+
+
+def test_batch_independence():
+    """Each row of a batched forward equals the single-row forward."""
+    spec = M.ZOO["bert-base-uncased"]
+    flat = M.init_params(spec)
+    x = M.golden_input(spec, 4)
+    full = M.forward(flat, x, spec, use_pallas=False)
+    for i in range(4):
+        row = M.forward(flat, x[i : i + 1], spec, use_pallas=False)
+        np.testing.assert_allclose(full[i : i + 1], row, rtol=1e-4, atol=1e-5)
+
+
+def test_output_finite_all_models():
+    for name, spec in sorted(M.ZOO.items()):
+        flat = M.init_params(spec)
+        y = M.forward(flat, M.golden_input(spec, 1), spec, use_pallas=False)
+        assert bool(jnp.all(jnp.isfinite(y))), name
+        assert y.shape == (1, spec.n_classes)

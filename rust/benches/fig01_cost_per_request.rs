@@ -1,0 +1,70 @@
+//! Fig 1: normalized cost per request for different DNN models (batch 8)
+//! on different GPUs — V100, T4, A100 used whole (A100-7/7), and A100
+//! split into seven 1/7 instances (A100-7×1/7).
+//!
+//! Paper's claim: **A100-7×1/7 is the most cost-efficient setup for all
+//! models.**
+
+use mig_serving::baselines::price::{cost_per_request, Gpu};
+use mig_serving::mig::InstanceSize;
+use mig_serving::perf::ProfileBank;
+use mig_serving::util::table::{f, Table};
+
+/// The eight models Fig 1 plots (the overlap of the PyTorch and TF
+/// hubs; bank names).
+const MODELS: [&str; 8] = [
+    "resnet50",
+    "vgg19-pt",
+    "densenet121",
+    "inception-v3-pt",
+    "bert-base-uncased",
+    "gpt2-pt",
+    "roberta-large",
+    "albert-large-v2",
+];
+
+fn main() {
+    mig_serving::bench::header(
+        "Figure 1",
+        "normalized cost per request by GPU type (batch 8)",
+    );
+    let bank = ProfileBank::synthetic();
+    let mut t = Table::new(&["model", "V100", "T4", "A100-7/7", "A100-7x1/7"]);
+    let mut a100_split_wins = 0;
+    for model in MODELS {
+        let p = bank.get(model).expect("bank model");
+        let thr_full = p
+            .throughput(InstanceSize::Seven, 8)
+            .expect("7/7 profiled");
+        let (v100_f, t4_f) = bank.gpu_factors(model).unwrap();
+        // Per-GPU throughput under each setup.
+        let thr_v100 = thr_full * v100_f;
+        let thr_t4 = thr_full * t4_f;
+        let thr_split = match p.throughput(InstanceSize::One, 8) {
+            Some(thr_1) => 7.0 * thr_1,
+            None => thr_full, // model too big for 1/7: no split benefit
+        };
+        let costs = [
+            cost_per_request(Gpu::V100, thr_v100),
+            cost_per_request(Gpu::T4, thr_t4),
+            cost_per_request(Gpu::A100, thr_full),
+            cost_per_request(Gpu::A100, thr_split),
+        ];
+        let max = costs.iter().cloned().fold(0.0f64, f64::max);
+        t.row(vec![
+            model.to_string(),
+            f(costs[0] / max, 3),
+            f(costs[1] / max, 3),
+            f(costs[2] / max, 3),
+            f(costs[3] / max, 3),
+        ]);
+        if costs[3] <= costs[0].min(costs[1]).min(costs[2]) + 1e-12 {
+            a100_split_wins += 1;
+        }
+    }
+    println!("{}", t.render());
+    println!(
+        "A100-7x1/7 is cheapest for {a100_split_wins}/{} models (paper: all models)",
+        MODELS.len()
+    );
+}

@@ -1,0 +1,87 @@
+//! Fig 3 + Fig 4: the §2.2 model study.
+//!
+//! * Fig 3a — per-instance-size throughput/p90 latency for the two
+//!   exemplars (densenet121 sub-linear, xlnet-large-cased
+//!   super-linear).
+//! * Fig 3b — per-GPU-partition throughput and throughput-weighted
+//!   latency across the 18 maximal partitions.
+//! * Fig 4  — sub/linear/super classification of all 49 study models by
+//!   batch size.
+
+use mig_serving::mig::partition::maximal_partitions;
+use mig_serving::mig::InstanceSize;
+use mig_serving::perf::bank::fig4_classification;
+use mig_serving::perf::ProfileBank;
+use mig_serving::util::table::{f, Table};
+
+fn main() {
+    let bank = ProfileBank::synthetic();
+
+    mig_serving::bench::header(
+        "Figure 3a",
+        "throughput/latency per instance size (batch 8)",
+    );
+    for model in ["densenet121", "xlnet-large-cased"] {
+        let p = bank.get(model).unwrap();
+        let mut t = Table::new(&["size", "thr req/s", "p90 ms", "thr/slice"]);
+        for s in InstanceSize::ALL {
+            if let Some(pt) = p.point(s, 8) {
+                t.row(vec![
+                    s.to_string(),
+                    f(pt.throughput, 1),
+                    f(pt.latency_p90_ms, 1),
+                    f(pt.throughput / s.slices() as f64, 1),
+                ]);
+            }
+        }
+        println!("{model}:\n{}", t.render());
+    }
+
+    mig_serving::bench::header(
+        "Figure 3b",
+        "throughput / weighted latency per GPU partition (batch 8), sorted",
+    );
+    for model in ["densenet121", "xlnet-large-cased"] {
+        let p = bank.get(model).unwrap();
+        let mut rows: Vec<(String, f64, f64)> = maximal_partitions()
+            .iter()
+            .filter_map(|part| {
+                let mut total = 0.0;
+                let mut weighted_lat = 0.0;
+                for pl in part.placements() {
+                    let pt = p.point(pl.size, 8)?;
+                    total += pt.throughput;
+                    weighted_lat += pt.latency_p90_ms * pt.throughput;
+                }
+                Some((part.label(), total, weighted_lat / total))
+            })
+            .collect();
+        rows.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        rows.dedup_by(|a, b| a.0 == b.0);
+        let mut t = Table::new(&["partition", "thr req/s", "weighted p90 ms"]);
+        for (label, thr, lat) in &rows {
+            t.row(vec![label.clone(), f(*thr, 1), f(*lat, 1)]);
+        }
+        println!("{model}:\n{}", t.render());
+        if let (Some(hi), Some(lo)) = (rows.last(), rows.first()) {
+            println!(
+                "  partition throughput spread: {:.1}x (paper: up to 4x for densenet121)\n",
+                hi.1 / lo.1
+            );
+        }
+    }
+
+    mig_serving::bench::header(
+        "Figure 4",
+        "model classification by batch size (49 study models)",
+    );
+    let mut t = Table::new(&["batch", "subL", "L", "supL"]);
+    for (b, sub, lin, sup) in fig4_classification(&bank) {
+        t.row(vec![b.to_string(), sub.to_string(), lin.to_string(), sup.to_string()]);
+    }
+    println!("{}", t.render());
+    println!(
+        "takeaway: non-linear models prevalent; larger batches shift toward \
+         linear/super-linear (paper Fig 4)"
+    );
+}

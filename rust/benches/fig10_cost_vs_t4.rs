@@ -1,0 +1,49 @@
+//! Fig 10: normalized dollar cost of satisfying each simulation
+//! workload's SLOs on A100-7/7, A100-7×1/7, T4, and MIG-Serving.
+//!
+//! Paper's claim: MIG-Serving is the most cost-efficient configuration
+//! for all workloads.
+
+use mig_serving::baselines::price::{cluster_cost, Gpu};
+use mig_serving::baselines::{a100_7x17_gpus, a100_whole_gpus, t4_gpus};
+use mig_serving::optimizer::{Greedy, OptimizerProcedure, ProblemCtx};
+use mig_serving::perf::ProfileBank;
+use mig_serving::util::table::{f, Table};
+use mig_serving::workload::{simulation_workload, SIMULATION_WORKLOADS};
+
+fn main() {
+    mig_serving::bench::header(
+        "Figure 10",
+        "normalized cost of satisfying SLOs (AWS 2021 prices; 1 hour)",
+    );
+    let bank = ProfileBank::synthetic();
+    let mut t = Table::new(&["workload", "A100-7/7", "A100-7x1/7", "T4", "MIG-Serving"]);
+    let mut wins = 0;
+    for name in SIMULATION_WORKLOADS {
+        let w = simulation_workload(&bank, name);
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let ours = Greedy::new().solve(&ctx).unwrap().num_gpus();
+        let costs = [
+            cluster_cost(Gpu::A100, a100_whole_gpus(&ctx), 1.0),
+            cluster_cost(Gpu::A100, a100_7x17_gpus(&ctx), 1.0),
+            cluster_cost(Gpu::T4, t4_gpus(&ctx), 1.0),
+            cluster_cost(Gpu::A100, ours, 1.0),
+        ];
+        let max = costs.iter().cloned().fold(0.0f64, f64::max);
+        t.row(vec![
+            name.to_string(),
+            f(costs[0] / max, 3),
+            f(costs[1] / max, 3),
+            f(costs[2] / max, 3),
+            f(costs[3] / max, 3),
+        ]);
+        if costs[3] <= costs[0].min(costs[1]).min(costs[2]) + 1e-12 {
+            wins += 1;
+        }
+    }
+    println!("{}", t.render());
+    println!(
+        "MIG-Serving cheapest on {wins}/{} workloads (paper: all workloads)",
+        SIMULATION_WORKLOADS.len()
+    );
+}

@@ -1,0 +1,46 @@
+//! Fig 11: GPUs saved by MIG-Serving relative to the A100-7×1/7
+//! baseline when MPS is combined with MIG (N = 1, 2, 4 processes per
+//! instance).
+//!
+//! Paper's shape: MPS raises the baseline's utilization, so the saving
+//! shrinks with N (≈10% at N = 4); deciding whether to pay MPS's tail
+//! latency / isolation costs is the user's call.
+
+use mig_serving::baselines::a100_7x17_gpus;
+use mig_serving::optimizer::{Greedy, OptimizerProcedure, ProblemCtx};
+use mig_serving::perf::ProfileBank;
+use mig_serving::util::table::{pct, Table};
+use mig_serving::workload::{simulation_workload, SIMULATION_WORKLOADS};
+
+fn main() {
+    mig_serving::bench::header(
+        "Figure 11",
+        "GPUs saved vs A100-7x1/7 under MPS (N processes per instance)",
+    );
+    let base_bank = ProfileBank::synthetic();
+    let mut t = Table::new(&["workload", "no MPS", "MPS N=2", "MPS N=4"]);
+    let mut avg_saving = [0.0f64; 3];
+    for name in SIMULATION_WORKLOADS {
+        let mut row = vec![name.to_string()];
+        for (i, n) in [1usize, 2, 4].into_iter().enumerate() {
+            let bank = base_bank.with_mps(n);
+            // The workload is defined against the no-MPS profiles; keep
+            // the SLOs fixed so the comparison is apples-to-apples.
+            let w = simulation_workload(&base_bank, name);
+            let ctx = ProblemCtx::new(&bank, &w).unwrap();
+            let baseline = a100_7x17_gpus(&ctx);
+            let ours = Greedy::new().solve(&ctx).unwrap().num_gpus();
+            let saving = 1.0 - ours as f64 / baseline as f64;
+            avg_saving[i] += saving / SIMULATION_WORKLOADS.len() as f64;
+            row.push(pct(saving, 1));
+        }
+        t.row(row);
+    }
+    println!("{}", t.render());
+    println!(
+        "average saving: none={} N2={} N4={} — shrinking with N, as in the paper",
+        pct(avg_saving[0], 1),
+        pct(avg_saving[1], 1),
+        pct(avg_saving[2], 1)
+    );
+}

@@ -1,0 +1,63 @@
+//! Fig 12: improvement of the slow algorithm (MCTS via GA crossovers)
+//! over the fast algorithm, per GA round, on the four simulation
+//! workloads. GPU counts normalized to the round-0 (greedy) deployment.
+//!
+//! Paper's shape: 1–3% saving over 10 rounds, monotone non-increasing.
+
+use mig_serving::optimizer::{
+    ConfigPool, GaConfig, GeneticAlgorithm, Greedy, MctsConfig, OptimizerProcedure,
+    ProblemCtx,
+};
+use mig_serving::perf::ProfileBank;
+use mig_serving::util::table::{f, Table};
+use mig_serving::workload::{simulation_workload, SIMULATION_WORKLOADS};
+
+fn main() {
+    mig_serving::bench::header(
+        "Figure 12",
+        "normalized GPUs of the best deployment after each GA round (round 0 = greedy)",
+    );
+    let bank = ProfileBank::synthetic();
+    let rounds: usize = std::env::var("MIG_SERVING_GA_ROUNDS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(3);
+    let mut header = vec!["workload".to_string()];
+    header.extend((0..=rounds).map(|r| format!("r{r}")));
+    let header_refs: Vec<&str> = header.iter().map(String::as_str).collect();
+    let mut t = Table::new(&header_refs);
+
+    for name in SIMULATION_WORKLOADS {
+        let w = simulation_workload(&bank, name);
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let pool = ConfigPool::enumerate(&ctx);
+        let seed = Greedy::new().solve(&ctx).unwrap();
+        let base = seed.num_gpus() as f64;
+        let ga = GeneticAlgorithm::new(GaConfig {
+            rounds,
+            patience: rounds, // let it run the full budget
+            mcts: MctsConfig { iterations: 40, ..Default::default() },
+            ..Default::default()
+        });
+        let (_, history) = ga.evolve(&ctx, &pool, seed);
+        let mut row = vec![name.to_string()];
+        for r in 0..=rounds {
+            let v = history
+                .best_gpus_per_round
+                .get(r)
+                .copied()
+                .unwrap_or(*history.best_gpus_per_round.last().unwrap());
+            row.push(f(v as f64 / base, 4));
+        }
+        t.row(row);
+        let final_gpus = *history.best_gpus_per_round.last().unwrap();
+        println!(
+            "{name}: {} -> {} GPUs ({:.1}% saved by the slow algorithm)",
+            base as usize,
+            final_gpus,
+            (1.0 - final_gpus as f64 / base) * 100.0
+        );
+    }
+    println!("{}", t.render());
+    println!("paper: MCTS improves greedy by 1-3% over 10 rounds");
+}

@@ -1,0 +1,66 @@
+//! Micro-benchmarks of the request path: artifact compile time, PJRT
+//! inference latency per artifact, and router+batcher overhead.
+//!
+//! The L3 target (DESIGN.md §6): routing/batching overhead must be
+//! negligible next to model service time.
+
+use std::time::{Duration, Instant};
+
+use mig_serving::runtime::Engine;
+use mig_serving::serving::batcher::Request;
+use mig_serving::serving::Router;
+use mig_serving::util::goldens::golden_input;
+use mig_serving::util::table::{f, Table};
+
+fn main() {
+    let Some(manifest) = mig_serving::bench::require_artifacts() else { return };
+    mig_serving::bench::header("micro/runtime", "compile + inference + routing overhead");
+
+    // --- compile times.
+    let mut engine = Engine::new().expect("pjrt client");
+    let mut t = Table::new(&["artifact", "compile ms", "exec mean ms", "exec min ms"]);
+    for a in &manifest.artifacts {
+        let t0 = Instant::now();
+        engine.load(a).expect("load");
+        let compile = t0.elapsed();
+        let input = golden_input(a.input_len());
+        // Warm + measure.
+        let _ = engine.execute(&a.name, &input).unwrap();
+        let mut times = Vec::new();
+        for _ in 0..5 {
+            let t1 = Instant::now();
+            let _ = engine.execute(&a.name, &input).unwrap();
+            times.push(t1.elapsed());
+        }
+        let mean: Duration = times.iter().sum::<Duration>() / times.len() as u32;
+        let min = times.iter().min().unwrap();
+        t.row(vec![
+            a.name.clone(),
+            f(compile.as_secs_f64() * 1000.0, 1),
+            f(mean.as_secs_f64() * 1000.0, 2),
+            f(min.as_secs_f64() * 1000.0, 2),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // --- router overhead: time to route 100k requests into sinks.
+    let mut router = Router::new(1, 1);
+    let mut rxs = Vec::new();
+    for wgt in [10.0, 20.0, 30.0, 40.0] {
+        let (tx, rx) = std::sync::mpsc::channel();
+        router.add_instance(0, tx, wgt);
+        rxs.push(rx);
+    }
+    let n = 100_000;
+    let t0 = Instant::now();
+    for _ in 0..n {
+        router
+            .route(Request { service: 0, submitted: Instant::now(), done: None })
+            .unwrap();
+    }
+    let per_req = t0.elapsed() / n;
+    println!(
+        "router: {per_req:?}/request over {n} requests \
+         (vs model service times of milliseconds+) — negligible"
+    );
+}

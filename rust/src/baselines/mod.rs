@@ -1,0 +1,18 @@
+//! Baselines and cost model (paper §2.3, §8.1).
+//!
+//! * [`price`] — the 2021 AWS on-demand prices the paper's cost
+//!   arithmetic uses (Fig 1, Fig 10).
+//! * [`static_partition`] — the three static baselines: **A100-7/7**
+//!   (MIG off, whole GPUs), **A100-7×1/7** (all GPUs split into seven
+//!   1/7 instances — the Identical Parallel Machine Scheduling
+//!   strawman), and **A100-MIX** ("4-2-1" on every GPU, one service per
+//!   GPU — heterogeneous but workload-oblivious).
+//! * [`t4`] — serving the same SLOs on T4 GPUs (Fig 10).
+
+pub mod price;
+pub mod static_partition;
+pub mod t4;
+
+pub use price::{Gpu, PricePerHour};
+pub use static_partition::{a100_mix_gpus, a100_whole_gpus, a100_7x17_gpus};
+pub use t4::t4_gpus;

@@ -1,0 +1,73 @@
+//! GPU pricing (2021 AWS on-demand, the paper's references [3–5]).
+
+/// GPU types the paper compares (Fig 1, Fig 10).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Gpu {
+    /// V100 (p3.2xlarge: 1 GPU).
+    V100,
+    /// T4 (g4dn.xlarge: 1 GPU).
+    T4,
+    /// A100 (p4d.24xlarge: 8 GPUs).
+    A100,
+}
+
+/// $/GPU/hour.
+#[derive(Debug, Clone, Copy)]
+pub struct PricePerHour(pub f64);
+
+impl Gpu {
+    /// 2021 on-demand price per *GPU* hour.
+    pub fn price(self) -> PricePerHour {
+        match self {
+            // p3.2xlarge: $3.06/hr, 1× V100.
+            Gpu::V100 => PricePerHour(3.06),
+            // g4dn.xlarge: $0.526/hr, 1× T4.
+            Gpu::T4 => PricePerHour(0.526),
+            // p4d.24xlarge: $32.7726/hr, 8× A100.
+            Gpu::A100 => PricePerHour(32.7726 / 8.0),
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Gpu::V100 => "V100",
+            Gpu::T4 => "T4",
+            Gpu::A100 => "A100",
+        }
+    }
+}
+
+/// Cost in dollars of `gpus` GPUs of a type for `hours`.
+pub fn cluster_cost(gpu: Gpu, gpus: usize, hours: f64) -> f64 {
+    gpu.price().0 * gpus as f64 * hours
+}
+
+/// Dollars per request at a sustained `throughput` (req/s) on one GPU.
+pub fn cost_per_request(gpu: Gpu, throughput: f64) -> f64 {
+    assert!(throughput > 0.0);
+    gpu.price().0 / (throughput * 3600.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a100_is_per_gpu_price() {
+        assert!((Gpu::A100.price().0 - 4.0965750).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cost_per_request_scales_inverse_with_throughput() {
+        let slow = cost_per_request(Gpu::A100, 100.0);
+        let fast = cost_per_request(Gpu::A100, 200.0);
+        assert!((slow / fast - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cluster_cost_linear() {
+        let one = cluster_cost(Gpu::T4, 1, 1.0);
+        let many = cluster_cost(Gpu::T4, 10, 2.0);
+        assert!((many / one - 20.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,164 @@
+//! Static-partition baselines (§2.3, §8.1).
+//!
+//! All three ignore MIG's reconfigurability; they differ in the fixed
+//! partition and in whether GPUs are shared between services:
+//!
+//! * **A100-7/7** — MIG disabled; every service gets dedicated whole
+//!   GPUs.
+//! * **A100-7×1/7** — every GPU split into seven 1/7 instances;
+//!   instances are identical units shared across services (Identical
+//!   Parallel Machine Scheduling). Models too large for a 1/7 instance
+//!   fall back to dedicated whole GPUs (the only way the strawman can
+//!   serve them at all; noted in DESIGN.md).
+//! * **A100-MIX** — every GPU is "4-2-1" and **one service runs per
+//!   GPU** (the paper's heterogeneous-but-workload-oblivious baseline).
+
+use crate::mig::InstanceSize;
+use crate::optimizer::ProblemCtx;
+
+/// A100-7/7: GPUs used with MIG off.
+pub fn a100_whole_gpus(ctx: &ProblemCtx) -> usize {
+    (0..ctx.workload.len())
+        .map(|sid| {
+            let thr = ctx
+                .effective(sid, InstanceSize::Seven)
+                .map(|(_, t)| t)
+                .expect("7/7 always fits a servable model");
+            (ctx.workload.services[sid].slo.throughput / thr).ceil() as usize
+        })
+        .sum()
+}
+
+/// A100-7×1/7: total 1/7 instances across services, 7 per GPU; plus
+/// whole-GPU fallback for models that cannot run on 1/7 under their
+/// latency SLO.
+pub fn a100_7x17_gpus(ctx: &ProblemCtx) -> usize {
+    let mut small_instances = 0usize;
+    let mut fallback_gpus = 0usize;
+    for sid in 0..ctx.workload.len() {
+        let req = ctx.workload.services[sid].slo.throughput;
+        match ctx.effective(sid, InstanceSize::One) {
+            Some((_, thr)) => {
+                small_instances += (req / thr).ceil() as usize;
+            }
+            None => {
+                let thr = ctx
+                    .effective(sid, InstanceSize::Seven)
+                    .map(|(_, t)| t)
+                    .expect("servable");
+                fallback_gpus += (req / thr).ceil() as usize;
+            }
+        }
+    }
+    small_instances.div_ceil(7) + fallback_gpus
+}
+
+/// A100-MIX: every GPU partitioned "4-2-1", one service per GPU.
+pub fn a100_mix_gpus(ctx: &ProblemCtx) -> usize {
+    (0..ctx.workload.len())
+        .map(|sid| {
+            let per_gpu: f64 = [InstanceSize::Four, InstanceSize::Two, InstanceSize::One]
+                .iter()
+                .filter_map(|&s| ctx.effective(sid, s).map(|(_, t)| t))
+                .sum();
+            let req = ctx.workload.services[sid].slo.throughput;
+            if per_gpu > 0.0 {
+                (req / per_gpu).ceil() as usize
+            } else {
+                // Model fits no instance of the mix (min_size > 4):
+                // dedicated whole GPUs.
+                let thr = ctx
+                    .effective(sid, InstanceSize::Seven)
+                    .map(|(_, t)| t)
+                    .expect("servable");
+                (req / thr).ceil() as usize
+            }
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer::{Greedy, OptimizerProcedure};
+    use crate::perf::ProfileBank;
+    use crate::spec::{Slo, Workload};
+    use crate::workload::simulation_workload;
+
+    fn ctx_for<'a>(
+        bank: &'a ProfileBank,
+        w: &'a Workload,
+    ) -> ProblemCtx<'a> {
+        ProblemCtx::new(bank, w).unwrap()
+    }
+
+    #[test]
+    fn baselines_cover_requirements() {
+        // Sanity: every baseline's GPU count actually provides enough
+        // throughput by its own bookkeeping (spot-check A100-7/7).
+        let bank = ProfileBank::synthetic();
+        let w = Workload::new(
+            "b",
+            vec![
+                ("densenet121".to_string(), Slo::new(2000.0, 100.0)),
+                ("resnet50".to_string(), Slo::new(500.0, 100.0)),
+            ],
+        );
+        let ctx = ctx_for(&bank, &w);
+        let whole = a100_whole_gpus(&ctx);
+        for sid in 0..w.len() {
+            let thr = ctx.effective(sid, InstanceSize::Seven).unwrap().1;
+            let need = (w.services[sid].slo.throughput / thr).ceil() as usize;
+            assert!(whole >= need);
+        }
+    }
+
+    #[test]
+    fn mig_serving_beats_all_baselines_on_simulation_workloads() {
+        // The paper's headline (Fig 9): MIG-Serving (even just the fast
+        // algorithm) uses no more GPUs than every static baseline.
+        let bank = ProfileBank::synthetic();
+        for name in ["normal-1", "lognormal-1"] {
+            let w = simulation_workload(&bank, name);
+            let ctx = ctx_for(&bank, &w);
+            let greedy = Greedy::new().solve(&ctx).unwrap().num_gpus();
+            let whole = a100_whole_gpus(&ctx);
+            let small = a100_7x17_gpus(&ctx);
+            let mix = a100_mix_gpus(&ctx);
+            assert!(greedy <= whole, "{name}: greedy {greedy} vs 7/7 {whole}");
+            assert!(greedy <= small, "{name}: greedy {greedy} vs 7x1/7 {small}");
+            assert!(greedy <= mix, "{name}: greedy {greedy} vs MIX {mix}");
+        }
+    }
+
+    #[test]
+    fn sublinear_models_prefer_small_instances() {
+        // For a sub-linear model, the 7×1/7 baseline should beat the
+        // whole-GPU baseline (that is Fig 1's message).
+        let bank = ProfileBank::synthetic();
+        let w = Workload::new(
+            "sub",
+            vec![("densenet121".to_string(), Slo::new(5000.0, 200.0))],
+        );
+        let ctx = ctx_for(&bank, &w);
+        assert!(a100_7x17_gpus(&ctx) <= a100_whole_gpus(&ctx));
+    }
+
+    #[test]
+    fn min_size_models_fall_back() {
+        // A model with min_size > 1 must still be servable by the
+        // 7×1/7 baseline via whole-GPU fallback.
+        let bank = ProfileBank::synthetic();
+        let big = bank
+            .study_models()
+            .into_iter()
+            .find(|p| p.min_size > InstanceSize::One)
+            .expect("bank has large models");
+        let w = Workload::new(
+            "big",
+            vec![(big.name.clone(), Slo::new(100.0, 400.0))],
+        );
+        let ctx = ctx_for(&bank, &w);
+        assert!(a100_7x17_gpus(&ctx) >= 1);
+    }
+}

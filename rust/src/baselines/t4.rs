@@ -1,0 +1,49 @@
+//! T4 baseline (Fig 10): how many T4 GPUs satisfy the same SLO
+//! throughputs. T4 has no MIG; each GPU serves one service at the
+//! model's T4 throughput (derived from the profile bank's per-GPU-type
+//! factors).
+
+use crate::mig::InstanceSize;
+use crate::optimizer::ProblemCtx;
+
+/// Number of T4 GPUs needed for the workload.
+pub fn t4_gpus(ctx: &ProblemCtx) -> usize {
+    (0..ctx.workload.len())
+        .map(|sid| {
+            let model = &ctx.workload.services[sid].model;
+            let a100_full = ctx
+                .effective(sid, InstanceSize::Seven)
+                .map(|(_, t)| t)
+                .expect("servable");
+            let (_, t4_factor) =
+                ctx.bank.gpu_factors(model).expect("bank factor");
+            let thr = a100_full * t4_factor;
+            (ctx.workload.services[sid].slo.throughput / thr).ceil() as usize
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::price::{cluster_cost, Gpu};
+    use crate::baselines::static_partition::a100_whole_gpus;
+    use crate::perf::ProfileBank;
+    use crate::workload::simulation_workload;
+
+    #[test]
+    fn t4_needs_many_more_gpus_but_each_is_cheap() {
+        let bank = ProfileBank::synthetic();
+        let w = simulation_workload(&bank, "normal-1");
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let t4 = t4_gpus(&ctx);
+        let a100 = a100_whole_gpus(&ctx);
+        assert!(t4 > a100, "t4 {t4} should exceed a100 {a100}");
+        // Fig 10's point: on cost, MIG-enabled A100 wins; T4 beats
+        // A100-used-whole for many workloads. At minimum the costs are
+        // all positive and comparable.
+        let t4_cost = cluster_cost(Gpu::T4, t4, 1.0);
+        let a100_cost = cluster_cost(Gpu::A100, a100, 1.0);
+        assert!(t4_cost > 0.0 && a100_cost > 0.0);
+    }
+}

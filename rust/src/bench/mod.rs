@@ -1,0 +1,104 @@
+//! In-tree bench harness (criterion is not in the offline vendor set).
+//!
+//! Each `rust/benches/*.rs` target is a `harness = false` binary that
+//! uses [`BenchCtx`] to time algorithm runs and print paper-style tables
+//! (`util::table`). Figures are regenerated as labelled rows/series so
+//! EXPERIMENTS.md can quote them directly.
+
+use std::time::{Duration, Instant};
+
+/// Timing helper with warmup + repeated measurement.
+pub struct BenchCtx {
+    pub warmup: usize,
+    pub iters: usize,
+}
+
+/// One measurement series.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub samples: Vec<Duration>,
+}
+
+impl Measurement {
+    pub fn mean(&self) -> Duration {
+        let total: Duration = self.samples.iter().sum();
+        total / self.samples.len().max(1) as u32
+    }
+    pub fn min(&self) -> Duration {
+        self.samples.iter().min().copied().unwrap_or_default()
+    }
+    pub fn max(&self) -> Duration {
+        self.samples.iter().max().copied().unwrap_or_default()
+    }
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} mean {:>10.3?}  min {:>10.3?}  max {:>10.3?}  (n={})",
+            self.name,
+            self.mean(),
+            self.min(),
+            self.max(),
+            self.samples.len()
+        )
+    }
+}
+
+impl Default for BenchCtx {
+    fn default() -> Self {
+        BenchCtx { warmup: 1, iters: 5 }
+    }
+}
+
+impl BenchCtx {
+    pub fn new(warmup: usize, iters: usize) -> BenchCtx {
+        BenchCtx { warmup, iters }
+    }
+
+    /// Time `f` (called once per iteration).
+    pub fn time<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Measurement {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let samples = (0..self.iters)
+            .map(|_| {
+                let t0 = Instant::now();
+                std::hint::black_box(f());
+                t0.elapsed()
+            })
+            .collect();
+        Measurement { name: name.to_string(), samples }
+    }
+}
+
+/// Standard bench header so every figure's output is self-describing.
+pub fn header(figure: &str, description: &str) {
+    println!("==========================================================");
+    println!("{figure}: {description}");
+    println!("==========================================================");
+}
+
+/// Check artifacts exist; benches that need them bail politely.
+pub fn require_artifacts() -> Option<crate::runtime::Manifest> {
+    let root = crate::runtime::Manifest::default_root();
+    if root.join("manifest.json").exists() {
+        Some(crate::runtime::Manifest::load(root).expect("manifest parses"))
+    } else {
+        println!("SKIP: artifacts/ missing — run `make artifacts` first");
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_collects_samples() {
+        let b = BenchCtx::new(0, 3);
+        let m = b.time("noop", || 1 + 1);
+        assert_eq!(m.samples.len(), 3);
+        assert!(m.report().contains("noop"));
+        assert!(m.min() <= m.mean());
+        assert!(m.mean() <= m.max() + Duration::from_nanos(1));
+    }
+}

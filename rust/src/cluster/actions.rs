@@ -1,0 +1,229 @@
+//! Controller actions and their k8s-calibrated latency model (paper §6,
+//! Fig 13c).
+
+use crate::mig::Placement;
+use crate::spec::ServiceId;
+use crate::util::rng::Rng;
+
+use super::state::Pod;
+
+/// One controller action (paper §4: "instance creation, deletion,
+/// migration, and GPU repartition", implemented as k8s wrappers in §7).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Action {
+    /// Change a GPU's MIG layout over pod-free instances.
+    Repartition { gpu: usize, remove: Vec<Placement>, add: Vec<Placement> },
+    /// Boot a serving pod on an existing free instance (the dominant
+    /// cost: k8s pod bootstrap, §8.2).
+    CreatePod { gpu: usize, placement: Placement, pod: Pod },
+    /// Tear down a pod. Carries the service so the scheduler can order
+    /// it after the creations that replace its capacity (§6
+    /// transparency).
+    DeletePod { gpu: usize, placement: Placement, service: ServiceId },
+    /// Move a pod between instances of the same size (same or different
+    /// machine). Executed as create-on-target → delete-on-source (§7).
+    MigratePod {
+        src_gpu: usize,
+        src: Placement,
+        dst_gpu: usize,
+        dst: Placement,
+        pod: Pod,
+    },
+}
+
+/// Action categories for stats/latency (Fig 13b/13c).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ActionKind {
+    Creation,
+    Deletion,
+    LocalMigration,
+    RemoteMigration,
+    Partition,
+}
+
+impl ActionKind {
+    pub const ALL: [ActionKind; 5] = [
+        ActionKind::Creation,
+        ActionKind::Deletion,
+        ActionKind::LocalMigration,
+        ActionKind::RemoteMigration,
+        ActionKind::Partition,
+    ];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            ActionKind::Creation => "creation",
+            ActionKind::Deletion => "deletion",
+            ActionKind::LocalMigration => "migration (local)",
+            ActionKind::RemoteMigration => "migration (remote)",
+            ActionKind::Partition => "GPU partition",
+        }
+    }
+}
+
+impl Action {
+    /// Classify for stats; migrations need the machine map.
+    pub fn kind(&self, same_machine: impl Fn(usize, usize) -> bool) -> ActionKind {
+        match self {
+            Action::Repartition { .. } => ActionKind::Partition,
+            Action::CreatePod { .. } => ActionKind::Creation,
+            Action::DeletePod { .. } => ActionKind::Deletion,
+            Action::MigratePod { src_gpu, dst_gpu, .. } => {
+                if same_machine(*src_gpu, *dst_gpu) {
+                    ActionKind::LocalMigration
+                } else {
+                    ActionKind::RemoteMigration
+                }
+            }
+        }
+    }
+
+    /// GPUs this action touches (for conflict analysis, §6
+    /// "actions can run in parallel if the affected GPUs are separate").
+    pub fn gpus(&self) -> Vec<usize> {
+        match self {
+            Action::Repartition { gpu, .. }
+            | Action::CreatePod { gpu, .. }
+            | Action::DeletePod { gpu, .. } => vec![*gpu],
+            Action::MigratePod { src_gpu, dst_gpu, .. } => {
+                if src_gpu == dst_gpu {
+                    vec![*src_gpu]
+                } else {
+                    vec![*src_gpu, *dst_gpu]
+                }
+            }
+        }
+    }
+
+    /// The service whose capacity this action changes, if any.
+    pub fn service(&self) -> Option<ServiceId> {
+        match self {
+            Action::CreatePod { pod, .. } | Action::MigratePod { pod, .. } => {
+                Some(pod.service)
+            }
+            Action::DeletePod { service, .. } => Some(*service),
+            _ => None,
+        }
+    }
+}
+
+/// Latency distributions per action kind, seconds. Defaults are centred
+/// on the paper's synchronous measurements (Fig 13c): pod bootstrap
+/// dominates; deletions and MIG repartitions are cheap; remote
+/// migrations pay an extra model-transfer cost.
+#[derive(Debug, Clone)]
+pub struct LatencyModel {
+    /// (mean_s, jitter_fraction) per kind.
+    pub creation: (f64, f64),
+    pub deletion: (f64, f64),
+    pub local_migration: (f64, f64),
+    pub remote_migration: (f64, f64),
+    pub partition: (f64, f64),
+}
+
+impl Default for LatencyModel {
+    fn default() -> Self {
+        LatencyModel {
+            creation: (32.0, 0.20),
+            deletion: (4.0, 0.25),
+            local_migration: (38.0, 0.20),
+            remote_migration: (55.0, 0.25),
+            partition: (7.0, 0.30),
+        }
+    }
+}
+
+impl LatencyModel {
+    /// Sample a duration for `kind` (truncated-normal jitter; never
+    /// below 20% of the mean).
+    pub fn sample(&self, kind: ActionKind, rng: &mut Rng) -> f64 {
+        let (mean, jit) = match kind {
+            ActionKind::Creation => self.creation,
+            ActionKind::Deletion => self.deletion,
+            ActionKind::LocalMigration => self.local_migration,
+            ActionKind::RemoteMigration => self.remote_migration,
+            ActionKind::Partition => self.partition,
+        };
+        (rng.normal_ms(mean, mean * jit)).max(mean * 0.2)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mig::InstanceSize::*;
+
+    fn pod() -> Pod {
+        Pod { service: 0, batch: 8, throughput: 10.0 }
+    }
+
+    #[test]
+    fn kind_classification() {
+        let same = |a: usize, b: usize| a / 8 == b / 8;
+        let mig_local = Action::MigratePod {
+            src_gpu: 0,
+            src: Placement::new(One, 0),
+            dst_gpu: 3,
+            dst: Placement::new(One, 1),
+            pod: pod(),
+        };
+        assert_eq!(mig_local.kind(same), ActionKind::LocalMigration);
+        let mig_remote = Action::MigratePod {
+            src_gpu: 0,
+            src: Placement::new(One, 0),
+            dst_gpu: 9,
+            dst: Placement::new(One, 1),
+            pod: pod(),
+        };
+        assert_eq!(mig_remote.kind(same), ActionKind::RemoteMigration);
+        assert_eq!(
+            Action::Repartition { gpu: 1, remove: vec![], add: vec![] }.kind(same),
+            ActionKind::Partition
+        );
+    }
+
+    #[test]
+    fn gpus_touched() {
+        let a = Action::MigratePod {
+            src_gpu: 2,
+            src: Placement::new(One, 0),
+            dst_gpu: 5,
+            dst: Placement::new(One, 0),
+            pod: pod(),
+        };
+        assert_eq!(a.gpus(), vec![2, 5]);
+        let b = Action::CreatePod { gpu: 4, placement: Placement::new(One, 0), pod: pod() };
+        assert_eq!(b.gpus(), vec![4]);
+    }
+
+    #[test]
+    fn latency_ordering_matches_paper() {
+        // creation >> deletion; remote migration > local migration;
+        // partition cheap (Fig 13c).
+        let m = LatencyModel::default();
+        let mut rng = Rng::new(1);
+        let avg = |kind: ActionKind, rng: &mut Rng| -> f64 {
+            (0..200).map(|_| m.sample(kind, rng)).sum::<f64>() / 200.0
+        };
+        let c = avg(ActionKind::Creation, &mut rng);
+        let d = avg(ActionKind::Deletion, &mut rng);
+        let lm = avg(ActionKind::LocalMigration, &mut rng);
+        let rm = avg(ActionKind::RemoteMigration, &mut rng);
+        let p = avg(ActionKind::Partition, &mut rng);
+        assert!(c > 5.0 * d, "creation {c} vs deletion {d}");
+        assert!(rm > lm, "remote {rm} vs local {lm}");
+        assert!(p < c, "partition {p} vs creation {c}");
+        assert!(lm >= c, "migration includes a creation: {lm} vs {c}");
+    }
+
+    #[test]
+    fn samples_positive() {
+        let m = LatencyModel::default();
+        let mut rng = Rng::new(2);
+        for kind in ActionKind::ALL {
+            for _ in 0..100 {
+                assert!(m.sample(kind, &mut rng) > 0.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,23 @@
+//! The simulated GPU cluster substrate (paper §7: Kubernetes + 24 A100s).
+//!
+//! With no physical A100s/Kubernetes available, this module implements
+//! the cluster the controller drives (DESIGN.md §1):
+//!
+//! * [`state`] — machines × GPUs, per-GPU MIG partitions, running pods;
+//!   every mutation is validated against the MIG rule engine, so cluster
+//!   states are legal by construction;
+//! * [`actions`] — the controller's four action types (instance
+//!   creation, deletion, migration, GPU repartition) with k8s-calibrated
+//!   latency distributions (paper Fig 13c);
+//! * [`sim`] — the action executor: applies transition plans stage by
+//!   stage (parallel within a stage, per §6 "actions can run in parallel
+//!   if the affected GPUs are separate"), accumulating simulated
+//!   wall-clock and the per-component time split of Fig 13a.
+
+pub mod actions;
+pub mod sim;
+pub mod state;
+
+pub use actions::{Action, ActionKind, LatencyModel};
+pub use sim::{ExecReport, Executor};
+pub use state::{ClusterState, GpuSim, Pod};

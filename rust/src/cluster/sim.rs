@@ -1,0 +1,325 @@
+//! Transition-plan executor over the simulated cluster.
+//!
+//! Applies a plan's stages in order. Within a stage all actions touch
+//! disjoint GPUs (validated) and run concurrently: the stage costs the
+//! *maximum* of its action durations (paper §6, "controller analyzes the
+//! dependencies between actions and executes the non-conflicting ones
+//! simultaneously"). Per-kind time and counts feed Fig 13a/13b.
+
+use std::collections::HashMap;
+
+use crate::util::rng::Rng;
+
+use super::actions::{Action, ActionKind, LatencyModel};
+use super::state::{ClusterState, ClusterError};
+
+/// Execution report: simulated wall-clock plus the paper's breakdowns.
+#[derive(Debug, Clone, Default)]
+pub struct ExecReport {
+    /// Simulated end-to-end wall-clock, seconds (Fig 13a).
+    pub wallclock_s: f64,
+    /// Total busy seconds per action kind (the k8s/partition split).
+    pub busy_s: HashMap<ActionKind, f64>,
+    /// Action counts per kind (Fig 13b).
+    pub counts: HashMap<ActionKind, usize>,
+    /// Number of stages executed.
+    pub stages: usize,
+    /// Minimum live throughput observed per service across every stage
+    /// boundary (the controller-transparency evidence, §6).
+    pub min_service_throughput: Vec<f64>,
+}
+
+impl ExecReport {
+    pub fn count(&self, kind: ActionKind) -> usize {
+        self.counts.get(&kind).copied().unwrap_or(0)
+    }
+    pub fn busy(&self, kind: ActionKind) -> f64 {
+        self.busy_s.get(&kind).copied().unwrap_or(0.0)
+    }
+    /// "k8s time": pod lifecycle work (creation/deletion/migration).
+    pub fn k8s_time(&self) -> f64 {
+        self.busy(ActionKind::Creation)
+            + self.busy(ActionKind::Deletion)
+            + self.busy(ActionKind::LocalMigration)
+            + self.busy(ActionKind::RemoteMigration)
+    }
+    pub fn partition_time(&self) -> f64 {
+        self.busy(ActionKind::Partition)
+    }
+}
+
+/// The plan executor.
+pub struct Executor {
+    pub latency: LatencyModel,
+    pub rng: Rng,
+}
+
+impl Executor {
+    pub fn new(seed: u64) -> Executor {
+        Executor { latency: LatencyModel::default(), rng: Rng::new(seed) }
+    }
+
+    /// Apply one action to the cluster (no timing).
+    pub fn apply(state: &mut ClusterState, action: &Action) -> Result<(), ClusterError> {
+        match action {
+            Action::Repartition { gpu, remove, add } => {
+                state.repartition(*gpu, remove, add)
+            }
+            Action::CreatePod { gpu, placement, pod } => {
+                state.create_pod(*gpu, *placement, *pod)
+            }
+            Action::DeletePod { gpu, placement, .. } => {
+                state.delete_pod(*gpu, *placement).map(|_| ())
+            }
+            Action::MigratePod { src_gpu, src, dst_gpu, dst, pod } => {
+                // Create-on-target first, then delete-on-source (§7):
+                // capacity never dips during the move.
+                state.create_pod(*dst_gpu, *dst, *pod)?;
+                state.delete_pod(*src_gpu, *src).map(|_| ())
+            }
+        }
+    }
+
+    /// Execute `stages` against `state`, tracking time and the
+    /// transparency invariant over `n_services`.
+    pub fn execute(
+        &mut self,
+        state: &mut ClusterState,
+        stages: &[Vec<Action>],
+        n_services: usize,
+    ) -> Result<ExecReport, ClusterError> {
+        let mut report = ExecReport {
+            min_service_throughput: vec![f64::INFINITY; n_services],
+            ..Default::default()
+        };
+        // Record the starting point too.
+        Self::note_throughput(state, n_services, &mut report);
+        for stage in stages {
+            // Disjointness check (the §6 parallelism precondition).
+            let mut seen = std::collections::HashSet::new();
+            for a in stage {
+                for g in a.gpus() {
+                    assert!(
+                        seen.insert(g),
+                        "stage has conflicting actions on gpu {g}"
+                    );
+                }
+            }
+            let mut stage_len = 0.0f64;
+            for a in stage {
+                let kind =
+                    a.kind(|x, y| state.machine_of(x) == state.machine_of(y));
+                let dur = self.latency.sample(kind, &mut self.rng);
+                Self::apply(state, a)?;
+                *report.busy_s.entry(kind).or_insert(0.0) += dur;
+                *report.counts.entry(kind).or_insert(0) += 1;
+                stage_len = stage_len.max(dur);
+            }
+            report.wallclock_s += stage_len;
+            report.stages += 1;
+            Self::note_throughput(state, n_services, &mut report);
+        }
+        Ok(report)
+    }
+
+    /// Event-driven execution: every action starts as soon as (a) all
+    /// its GPUs are free and (b) for a `DeletePod`, the creations that
+    /// replace its capacity have finished — no global stage barriers.
+    /// This models the paper's §6 execution ("all these actions are
+    /// asynchronous and issued in parallel; MIG-SERVING only has to
+    /// wait when the actions have dependencies") and is the production
+    /// path; [`Executor::execute`] (staged barriers) is kept for the
+    /// before/after comparison in EXPERIMENTS.md §Perf.
+    pub fn execute_async(
+        &mut self,
+        state: &mut ClusterState,
+        actions: &[Action],
+        n_services: usize,
+    ) -> Result<ExecReport, ClusterError> {
+        let mut report = ExecReport {
+            min_service_throughput: vec![f64::INFINITY; n_services],
+            ..Default::default()
+        };
+        Self::note_throughput(state, n_services, &mut report);
+
+        let mut gpu_free: HashMap<usize, f64> = HashMap::new();
+        let mut create_done: HashMap<usize, f64> = HashMap::new();
+        // (end_time, seq, action index) — applied in completion order.
+        let mut schedule: Vec<(f64, usize)> = Vec::with_capacity(actions.len());
+        for (i, a) in actions.iter().enumerate() {
+            let kind = a.kind(|x, y| state.machine_of(x) == state.machine_of(y));
+            let dur = self.latency.sample(kind, &mut self.rng);
+            let mut start = a
+                .gpus()
+                .iter()
+                .map(|g| gpu_free.get(g).copied().unwrap_or(0.0))
+                .fold(0.0f64, f64::max);
+            if let Action::DeletePod { service, .. } = a {
+                start = start.max(create_done.get(service).copied().unwrap_or(0.0));
+            }
+            let end = start + dur;
+            for g in a.gpus() {
+                gpu_free.insert(g, end);
+            }
+            if let Action::CreatePod { pod, .. } = a {
+                let e = create_done.entry(pod.service).or_insert(0.0);
+                *e = e.max(end);
+            }
+            *report.busy_s.entry(kind).or_insert(0.0) += dur;
+            *report.counts.entry(kind).or_insert(0) += 1;
+            schedule.push((end, i));
+        }
+        // Apply in completion order (stable on ties = sequential order;
+        // per-GPU chains keep strictly increasing end times, so state
+        // preconditions hold).
+        schedule.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        for &(end, i) in &schedule {
+            Self::apply(state, &actions[i])?;
+            Self::note_throughput(state, n_services, &mut report);
+            report.wallclock_s = report.wallclock_s.max(end);
+        }
+        report.stages = schedule.len();
+        Ok(report)
+    }
+
+    fn note_throughput(state: &ClusterState, n: usize, report: &mut ExecReport) {
+        let thr = state.service_throughputs(n);
+        for (m, t) in report.min_service_throughput.iter_mut().zip(thr) {
+            *m = m.min(t);
+        }
+    }
+
+    /// Measure one action kind in isolation, `runs` times (Fig 13c).
+    pub fn measure_action(&mut self, kind: ActionKind, runs: usize) -> Vec<f64> {
+        (0..runs).map(|_| self.latency.sample(kind, &mut self.rng)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::state::Pod;
+    use crate::mig::{InstanceSize::*, Placement};
+
+    fn pod(svc: usize, thr: f64) -> Pod {
+        Pod { service: svc, batch: 8, throughput: thr }
+    }
+
+    #[test]
+    fn executes_stage_sequence() {
+        let mut state = ClusterState::new(1, 2);
+        let mut ex = Executor::new(1);
+        let stages = vec![
+            vec![Action::Repartition {
+                gpu: 0,
+                remove: vec![],
+                add: vec![Placement::new(Two, 0)],
+            }],
+            vec![Action::CreatePod {
+                gpu: 0,
+                placement: Placement::new(Two, 0),
+                pod: pod(0, 50.0),
+            }],
+        ];
+        let report = ex.execute(&mut state, &stages, 1).unwrap();
+        assert_eq!(report.stages, 2);
+        assert_eq!(report.count(ActionKind::Partition), 1);
+        assert_eq!(report.count(ActionKind::Creation), 1);
+        assert!(report.wallclock_s > 0.0);
+        assert_eq!(state.service_throughputs(1), vec![50.0]);
+    }
+
+    #[test]
+    fn parallel_stage_costs_max_not_sum() {
+        let mut state = ClusterState::new(1, 4);
+        let mut ex = Executor::new(2);
+        // Four repartitions on distinct GPUs in ONE stage...
+        let stage: Vec<Action> = (0..4)
+            .map(|g| Action::Repartition {
+                gpu: g,
+                remove: vec![],
+                add: vec![Placement::new(Seven, 0)],
+            })
+            .collect();
+        let par = ex.execute(&mut state.clone(), &[stage.clone()], 1).unwrap();
+        // ...vs the same four serially.
+        let serial_stages: Vec<Vec<Action>> =
+            stage.into_iter().map(|a| vec![a]).collect();
+        let mut ex2 = Executor::new(2);
+        let ser = ex2.execute(&mut state, &serial_stages, 1).unwrap();
+        assert!(
+            par.wallclock_s < ser.wallclock_s,
+            "parallel {} !< serial {}",
+            par.wallclock_s,
+            ser.wallclock_s
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "conflicting actions")]
+    fn conflicting_stage_detected() {
+        let mut state = ClusterState::new(1, 1);
+        let mut ex = Executor::new(3);
+        let stage = vec![
+            Action::Repartition {
+                gpu: 0,
+                remove: vec![],
+                add: vec![Placement::new(One, 0)],
+            },
+            Action::Repartition {
+                gpu: 0,
+                remove: vec![],
+                add: vec![Placement::new(One, 1)],
+            },
+        ];
+        let _ = ex.execute(&mut state, &[stage], 1);
+    }
+
+    #[test]
+    fn migration_never_dips_throughput() {
+        let mut state = ClusterState::new(2, 1);
+        let mut ex = Executor::new(4);
+        let src = Placement::new(Two, 0);
+        let dst = Placement::new(Two, 0);
+        // Set up: pod on gpu 0; free 2/7 slot on gpu 1.
+        let setup = vec![
+            vec![Action::Repartition { gpu: 0, remove: vec![], add: vec![src] }],
+            vec![Action::Repartition { gpu: 1, remove: vec![], add: vec![dst] }],
+            vec![Action::CreatePod { gpu: 0, placement: src, pod: pod(0, 80.0) }],
+        ];
+        ex.execute(&mut state, &setup, 1).unwrap();
+        let mig = vec![vec![Action::MigratePod {
+            src_gpu: 0,
+            src,
+            dst_gpu: 1,
+            dst,
+            pod: pod(0, 80.0),
+        }]];
+        let report = ex.execute(&mut state, &mig, 1).unwrap();
+        // Throughput at every stage boundary stayed at 80.
+        assert_eq!(report.min_service_throughput, vec![80.0]);
+        assert_eq!(state.pods_of_service(0).len(), 1);
+        assert_eq!(state.pods_of_service(0)[0].0, 1); // now on gpu 1
+        assert_eq!(report.count(ActionKind::RemoteMigration), 1);
+    }
+
+    #[test]
+    fn invalid_action_is_an_error_not_a_panic() {
+        let mut state = ClusterState::new(1, 1);
+        let mut ex = Executor::new(5);
+        let bad = vec![vec![Action::CreatePod {
+            gpu: 0,
+            placement: Placement::new(One, 0),
+            pod: pod(0, 1.0),
+        }]];
+        assert!(ex.execute(&mut state, &bad, 1).is_err());
+    }
+
+    #[test]
+    fn measure_action_runs() {
+        let mut ex = Executor::new(6);
+        let xs = ex.measure_action(ActionKind::Creation, 10);
+        assert_eq!(xs.len(), 10);
+        assert!(xs.iter().all(|&x| x > 0.0));
+    }
+}

@@ -1,0 +1,344 @@
+//! Cluster state: machines, GPUs, partitions, running pods.
+
+use crate::mig::{rules, Partition, Placement};
+use crate::spec::ServiceId;
+use std::collections::BTreeMap;
+
+/// A model-serving pod bound to one GPU instance.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Pod {
+    pub service: ServiceId,
+    pub batch: usize,
+    /// Profiled throughput of this instance, req/s.
+    pub throughput: f64,
+}
+
+/// One simulated GPU: its MIG partition plus the pods occupying
+/// (a subset of) its instances.
+#[derive(Debug, Clone, Default)]
+pub struct GpuSim {
+    partition_placements: Vec<Placement>,
+    pods: BTreeMap<Placement, Pod>,
+}
+
+impl GpuSim {
+    pub fn partition(&self) -> Partition {
+        Partition::new(self.partition_placements.clone())
+    }
+
+    pub fn pods(&self) -> &BTreeMap<Placement, Pod> {
+        &self.pods
+    }
+
+    /// Placements in the partition without a pod.
+    pub fn free_instances(&self) -> Vec<Placement> {
+        self.partition_placements
+            .iter()
+            .filter(|p| !self.pods.contains_key(p))
+            .copied()
+            .collect()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.partition_placements.is_empty()
+    }
+
+    /// Fully occupied = every instance has a pod and nothing more fits.
+    pub fn is_fully_occupied(&self) -> bool {
+        !self.partition_placements.is_empty()
+            && self.free_instances().is_empty()
+            && self.partition().is_maximal()
+    }
+}
+
+/// Errors from invalid cluster mutations.
+#[derive(Debug, thiserror::Error)]
+pub enum ClusterError {
+    #[error("gpu {0} out of range")]
+    NoSuchGpu(usize),
+    #[error("gpu {gpu}: illegal repartition: {reason}")]
+    IllegalRepartition { gpu: usize, reason: String },
+    #[error("gpu {gpu}: instance {placement:?} not in partition")]
+    NoSuchInstance { gpu: usize, placement: Placement },
+    #[error("gpu {gpu}: instance {placement:?} already runs a pod")]
+    InstanceBusy { gpu: usize, placement: Placement },
+    #[error("gpu {gpu}: instance {placement:?} has no pod")]
+    NoPod { gpu: usize, placement: Placement },
+    #[error("gpu {gpu}: cannot repartition {placement:?}: pod running")]
+    PodInTheWay { gpu: usize, placement: Placement },
+}
+
+/// The whole cluster: `machines × gpus_per_machine` GPUs, flat-indexed.
+#[derive(Debug, Clone)]
+pub struct ClusterState {
+    pub machines: usize,
+    pub gpus_per_machine: usize,
+    gpus: Vec<GpuSim>,
+}
+
+impl ClusterState {
+    /// Empty cluster (the paper's testbed: 3 machines × 8 A100s).
+    pub fn new(machines: usize, gpus_per_machine: usize) -> ClusterState {
+        ClusterState {
+            machines,
+            gpus_per_machine,
+            gpus: vec![GpuSim::default(); machines * gpus_per_machine],
+        }
+    }
+
+    pub fn num_gpus(&self) -> usize {
+        self.gpus.len()
+    }
+
+    pub fn gpu(&self, i: usize) -> &GpuSim {
+        &self.gpus[i]
+    }
+
+    /// Machine index of a GPU (locality for migrations, §6).
+    pub fn machine_of(&self, gpu: usize) -> usize {
+        gpu / self.gpus_per_machine
+    }
+
+    pub fn same_machine(&self, a: usize, b: usize) -> bool {
+        self.machine_of(a) == self.machine_of(b)
+    }
+
+    /// Change GPU `gpu`'s partition: remove free instances `remove`, add
+    /// instances `add`. Validated with the MIG rule engine; instances
+    /// being removed must not host pods (partial reconfiguration leaves
+    /// running instances untouched, §3.3).
+    pub fn repartition(
+        &mut self,
+        gpu: usize,
+        remove: &[Placement],
+        add: &[Placement],
+    ) -> Result<(), ClusterError> {
+        let g = self.gpus.get_mut(gpu).ok_or(ClusterError::NoSuchGpu(gpu))?;
+        for r in remove {
+            if g.pods.contains_key(r) {
+                return Err(ClusterError::PodInTheWay { gpu, placement: *r });
+            }
+        }
+        let current = g.partition();
+        let next = rules::reconfigure(&current, remove, add).map_err(|e| {
+            ClusterError::IllegalRepartition { gpu, reason: e.to_string() }
+        })?;
+        g.partition_placements = next.placements().to_vec();
+        Ok(())
+    }
+
+    /// Launch a pod on an existing free instance.
+    pub fn create_pod(
+        &mut self,
+        gpu: usize,
+        placement: Placement,
+        pod: Pod,
+    ) -> Result<(), ClusterError> {
+        let g = self.gpus.get_mut(gpu).ok_or(ClusterError::NoSuchGpu(gpu))?;
+        if !g.partition_placements.contains(&placement) {
+            return Err(ClusterError::NoSuchInstance { gpu, placement });
+        }
+        if g.pods.contains_key(&placement) {
+            return Err(ClusterError::InstanceBusy { gpu, placement });
+        }
+        g.pods.insert(placement, pod);
+        Ok(())
+    }
+
+    /// Tear down a pod (the instance slot remains in the partition).
+    pub fn delete_pod(
+        &mut self,
+        gpu: usize,
+        placement: Placement,
+    ) -> Result<Pod, ClusterError> {
+        let g = self.gpus.get_mut(gpu).ok_or(ClusterError::NoSuchGpu(gpu))?;
+        g.pods.remove(&placement).ok_or(ClusterError::NoPod { gpu, placement })
+    }
+
+    /// Live aggregate throughput per service over `n_services`.
+    pub fn service_throughputs(&self, n_services: usize) -> Vec<f64> {
+        let mut thr = vec![0.0; n_services];
+        for g in &self.gpus {
+            for pod in g.pods.values() {
+                thr[pod.service] += pod.throughput;
+            }
+        }
+        thr
+    }
+
+    /// GPUs with at least one instance or pod.
+    pub fn used_gpus(&self) -> Vec<usize> {
+        (0..self.gpus.len()).filter(|&i| !self.gpus[i].is_empty()).collect()
+    }
+
+    /// All (gpu, placement, pod) triples for a service.
+    pub fn pods_of_service(&self, service: ServiceId) -> Vec<(usize, Placement, Pod)> {
+        let mut out = Vec::new();
+        for (gi, g) in self.gpus.iter().enumerate() {
+            for (pl, pod) in &g.pods {
+                if pod.service == service {
+                    out.push((gi, *pl, *pod));
+                }
+            }
+        }
+        out
+    }
+
+    /// Find a GPU and placement where `size` can be allocated with **no
+    /// repartitioning of occupied space**: first try free instances of
+    /// exactly that size, then GPUs whose partition can allocate it.
+    /// Preference order: partially used GPUs first (tight packing),
+    /// completely empty GPUs last.
+    pub fn find_slot(
+        &self,
+        size: crate::mig::InstanceSize,
+    ) -> Option<(usize, Placement, bool)> {
+        // (gpu, placement, needs_partition_change)
+        let mut empty_fallback: Option<(usize, Placement, bool)> = None;
+        for (gi, g) in self.gpus.iter().enumerate() {
+            // Existing free instance of the right size?
+            if let Some(pl) =
+                g.free_instances().into_iter().find(|p| p.size == size)
+            {
+                return Some((gi, pl, false));
+            }
+        }
+        for (gi, g) in self.gpus.iter().enumerate() {
+            if let Some(start) = g.partition().can_allocate(size) {
+                let pl = Placement::new(size, start);
+                if g.is_empty() {
+                    if empty_fallback.is_none() {
+                        empty_fallback = Some((gi, pl, true));
+                    }
+                } else {
+                    return Some((gi, pl, true));
+                }
+            }
+        }
+        empty_fallback
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mig::InstanceSize::*;
+
+    fn pod(svc: ServiceId) -> Pod {
+        Pod { service: svc, batch: 8, throughput: 100.0 }
+    }
+
+    #[test]
+    fn new_cluster_is_empty() {
+        let c = ClusterState::new(3, 8);
+        assert_eq!(c.num_gpus(), 24);
+        assert!(c.used_gpus().is_empty());
+        assert_eq!(c.service_throughputs(2), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn machine_locality() {
+        let c = ClusterState::new(3, 8);
+        assert_eq!(c.machine_of(0), 0);
+        assert_eq!(c.machine_of(7), 0);
+        assert_eq!(c.machine_of(8), 1);
+        assert!(c.same_machine(0, 7));
+        assert!(!c.same_machine(7, 8));
+    }
+
+    #[test]
+    fn repartition_then_create_then_delete() {
+        let mut c = ClusterState::new(1, 1);
+        c.repartition(0, &[], &[Placement::new(Four, 0), Placement::new(Two, 4)])
+            .unwrap();
+        assert_eq!(c.gpu(0).partition().label(), "4-2");
+        c.create_pod(0, Placement::new(Four, 0), pod(0)).unwrap();
+        assert_eq!(c.service_throughputs(1), vec![100.0]);
+        // Deleting frees the slot but keeps the partition.
+        c.delete_pod(0, Placement::new(Four, 0)).unwrap();
+        assert_eq!(c.gpu(0).partition().label(), "4-2");
+        assert_eq!(c.gpu(0).free_instances().len(), 2);
+    }
+
+    #[test]
+    fn repartition_blocked_by_running_pod() {
+        let mut c = ClusterState::new(1, 1);
+        let pl = Placement::new(Two, 0);
+        c.repartition(0, &[], &[pl]).unwrap();
+        c.create_pod(0, pl, pod(0)).unwrap();
+        let err = c.repartition(0, &[pl], &[Placement::new(One, 0)]).unwrap_err();
+        assert!(matches!(err, ClusterError::PodInTheWay { .. }));
+        // Other slots can still be reconfigured (partial reconfig).
+        c.repartition(0, &[], &[Placement::new(Two, 2)]).unwrap();
+        assert_eq!(c.gpu(0).partition().label(), "2-2");
+    }
+
+    #[test]
+    fn illegal_partition_rejected() {
+        let mut c = ClusterState::new(1, 1);
+        c.repartition(0, &[], &[Placement::new(Four, 0)]).unwrap();
+        let err = c
+            .repartition(0, &[], &[Placement::new(Three, 4)])
+            .unwrap_err();
+        assert!(matches!(err, ClusterError::IllegalRepartition { .. }));
+    }
+
+    #[test]
+    fn create_requires_existing_free_instance() {
+        let mut c = ClusterState::new(1, 1);
+        let pl = Placement::new(One, 0);
+        assert!(matches!(
+            c.create_pod(0, pl, pod(0)),
+            Err(ClusterError::NoSuchInstance { .. })
+        ));
+        c.repartition(0, &[], &[pl]).unwrap();
+        c.create_pod(0, pl, pod(0)).unwrap();
+        assert!(matches!(
+            c.create_pod(0, pl, pod(1)),
+            Err(ClusterError::InstanceBusy { .. })
+        ));
+    }
+
+    #[test]
+    fn find_slot_prefers_existing_free_instance() {
+        let mut c = ClusterState::new(1, 3);
+        // GPU 0: 2/7 slot free; GPU 1: empty; GPU 2: occupied 2/7.
+        c.repartition(0, &[], &[Placement::new(Two, 0)]).unwrap();
+        c.repartition(2, &[], &[Placement::new(Two, 0)]).unwrap();
+        c.create_pod(2, Placement::new(Two, 0), pod(0)).unwrap();
+        let (gpu, pl, needs) = c.find_slot(Two).unwrap();
+        assert_eq!((gpu, needs), (0, false));
+        assert_eq!(pl.size, Two);
+    }
+
+    #[test]
+    fn find_slot_uses_empty_gpu_last() {
+        let mut c = ClusterState::new(1, 2);
+        // GPU 0 partially used (one 1/7 pod), GPU 1 empty.
+        c.repartition(0, &[], &[Placement::new(One, 0)]).unwrap();
+        c.create_pod(0, Placement::new(One, 0), pod(0)).unwrap();
+        let (gpu, _, needs) = c.find_slot(Two).unwrap();
+        assert_eq!(gpu, 0, "prefer packing onto used GPU");
+        assert!(needs);
+    }
+
+    #[test]
+    fn fully_occupied_detection() {
+        let mut c = ClusterState::new(1, 1);
+        c.repartition(0, &[], &[Placement::new(Seven, 0)]).unwrap();
+        assert!(!c.gpu(0).is_fully_occupied());
+        c.create_pod(0, Placement::new(Seven, 0), pod(0)).unwrap();
+        assert!(c.gpu(0).is_fully_occupied());
+    }
+
+    #[test]
+    fn throughput_tracks_pods() {
+        let mut c = ClusterState::new(1, 2);
+        c.repartition(0, &[], &[Placement::new(Three, 0), Placement::new(Three, 4)])
+            .unwrap();
+        c.create_pod(0, Placement::new(Three, 0), pod(0)).unwrap();
+        c.create_pod(0, Placement::new(Three, 4), pod(1)).unwrap();
+        assert_eq!(c.service_throughputs(2), vec![100.0, 100.0]);
+        assert_eq!(c.pods_of_service(0).len(), 1);
+    }
+}

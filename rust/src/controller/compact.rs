@@ -1,0 +1,500 @@
+//! Compact phase (§6): defragment the cluster into exactly the new
+//! deployment's GPU configurations.
+//!
+//! After exchange, every service has the right instance *sizes* but they
+//! are scattered. Compact assigns each target GPU configuration to the
+//! physical GPU with the largest overlap (instances already in place
+//! stay put), migrates the rest in from donor GPUs (locality-aware:
+//! same-machine donors preferred), and repartitions as needed. Each
+//! migration is create-before-delete, so service capacity never dips.
+
+use std::collections::BTreeMap;
+
+use crate::cluster::{Action, ClusterState, Executor, Pod};
+use crate::mig::{InstanceSize, Partition, Placement};
+use crate::optimizer::Deployment;
+use crate::spec::ServiceId;
+
+use super::exchange::allocate_slot;
+
+/// (size, service) multiset signature of a target GPU config.
+fn config_signature(cfg: &crate::optimizer::GpuConfig) -> BTreeMap<(InstanceSize, ServiceId), usize> {
+    let mut m = BTreeMap::new();
+    for a in &cfg.assigns {
+        *m.entry((a.placement.size, a.service)).or_insert(0) += 1;
+    }
+    m
+}
+
+/// (size, service) multiset currently live on a GPU.
+fn gpu_signature(state: &ClusterState, gpu: usize) -> BTreeMap<(InstanceSize, ServiceId), usize> {
+    let mut m = BTreeMap::new();
+    for (pl, pod) in state.gpu(gpu).pods() {
+        *m.entry((pl.size, pod.service)).or_insert(0) += 1;
+    }
+    m
+}
+
+/// Overlap between a config signature and a GPU signature, weighted by
+/// compute slices (moving a 4/7 is worth more than a 1/7).
+fn overlap(
+    cfg: &BTreeMap<(InstanceSize, ServiceId), usize>,
+    gpu: &BTreeMap<(InstanceSize, ServiceId), usize>,
+) -> usize {
+    cfg.iter()
+        .map(|(k, &want)| {
+            let have = gpu.get(k).copied().unwrap_or(0);
+            want.min(have) * k.0.slices() as usize
+        })
+        .sum()
+}
+
+/// Find a donor pod of (service, size) on a GPU not in `forbidden`,
+/// preferring same-machine donors relative to `near_gpu` (§6 locality).
+fn find_donor(
+    state: &ClusterState,
+    service: ServiceId,
+    size: InstanceSize,
+    forbidden: &[usize],
+    near_gpu: usize,
+) -> Option<(usize, Placement, Pod)> {
+    let mut best: Option<(usize, Placement, Pod)> = None;
+    for (g, pl, pod) in state.pods_of_service(service) {
+        if pl.size != size || forbidden.contains(&g) {
+            continue;
+        }
+        let local = state.same_machine(g, near_gpu);
+        match &best {
+            None => best = Some((g, pl, pod)),
+            Some((bg, _, _)) => {
+                if local && !state.same_machine(*bg, near_gpu) {
+                    best = Some((g, pl, pod));
+                }
+            }
+        }
+    }
+    best
+}
+
+/// Greedy max-overlap matching of target configs to physical GPUs.
+pub fn assign_configs(
+    state: &ClusterState,
+    target: &Deployment,
+) -> anyhow::Result<Vec<(usize, usize)>> {
+    let cfg_sigs: Vec<_> = target.gpus.iter().map(config_signature).collect();
+    let mut unassigned_cfgs: Vec<usize> = (0..target.gpus.len()).collect();
+    let mut available_gpus: Vec<usize> = (0..state.num_gpus()).collect();
+    let mut assignment: Vec<(usize, usize)> = Vec::new(); // (cfg, gpu)
+    while !unassigned_cfgs.is_empty() {
+        let mut best: Option<(usize, usize, usize)> = None; // (overlap, cfg, gpu)
+        for &ci in &unassigned_cfgs {
+            for &gi in &available_gpus {
+                let ov = overlap(&cfg_sigs[ci], &gpu_signature(state, gi));
+                // Tie-break: prefer currently-used GPUs for nonzero
+                // overlap, empty GPUs for zero overlap (fresh builds).
+                let better = match best {
+                    None => true,
+                    Some((bov, _, _)) => ov > bov,
+                };
+                if better {
+                    best = Some((ov, ci, gi));
+                }
+            }
+        }
+        let (_, ci, gi) = best.ok_or_else(|| anyhow::anyhow!("ran out of GPUs"))?;
+        assignment.push((ci, gi));
+        unassigned_cfgs.retain(|&c| c != ci);
+        available_gpus.retain(|&g| g != gi);
+    }
+    Ok(assignment)
+}
+
+/// Target-placement hints for the exchange phase: per GPU, the
+/// (size, service) instances its assigned target config still needs.
+/// Exchange creations that land directly on their target GPU never have
+/// to migrate during compaction (EXPERIMENTS.md §Perf).
+pub fn target_hints(
+    state: &ClusterState,
+    target: &Deployment,
+) -> anyhow::Result<Vec<BTreeMap<(InstanceSize, ServiceId), usize>>> {
+    let assignment = assign_configs(state, target)?;
+    let mut hints = vec![BTreeMap::new(); state.num_gpus()];
+    for &(ci, gi) in &assignment {
+        let mut need = config_signature(&target.gpus[ci]);
+        // Subtract what already lives there.
+        for (k, have) in gpu_signature(state, gi) {
+            if let Some(w) = need.get_mut(&k) {
+                *w = w.saturating_sub(have);
+            }
+        }
+        need.retain(|_, v| *v > 0);
+        hints[gi] = need;
+    }
+    Ok(hints)
+}
+
+/// Run the compact phase: realize `target` on exactly
+/// `target.num_gpus()` physical GPUs. Appends applied actions.
+/// `fixed_assignment`, when given, reuses the config→GPU matching the
+/// exchange phase placed its creations against (keeps both phases
+/// agreeing on where instances belong).
+pub fn compact_phase_with(
+    state: &mut ClusterState,
+    target: &Deployment,
+    fixed_assignment: Option<Vec<(usize, usize)>>,
+    actions: &mut Vec<Action>,
+) -> anyhow::Result<Vec<usize>> {
+    // ---- 1. assign configs to GPUs by descending overlap.
+    let cfg_sigs: Vec<_> = target.gpus.iter().map(config_signature).collect();
+    let mut assignment = match fixed_assignment {
+        Some(a) => a,
+        None => assign_configs(state, target)?,
+    };
+    // Process best-overlap first (cheapest GPUs finalized early).
+    assignment.sort_by_key(|&(ci, gi)| {
+        std::cmp::Reverse(overlap(&cfg_sigs[ci], &gpu_signature(state, gi)))
+    });
+
+    let mut processed: Vec<usize> = Vec::new();
+    for &(ci, gi) in &assignment {
+        realize_config(state, target, ci, gi, &processed, actions)?;
+        processed.push(gi);
+    }
+
+    // ---- 3. cleanup: clear partitions of GPUs that hold no pods.
+    for gi in 0..state.num_gpus() {
+        if processed.contains(&gi) {
+            continue;
+        }
+        let g = state.gpu(gi);
+        anyhow::ensure!(
+            g.pods().is_empty(),
+            "compact leftover: gpu {gi} still hosts {} pods",
+            g.pods().len()
+        );
+        let free = g.free_instances();
+        if !free.is_empty() {
+            let act = Action::Repartition { gpu: gi, remove: free, add: vec![] };
+            Executor::apply(state, &act)?;
+            actions.push(act);
+        }
+    }
+    Ok(processed)
+}
+
+/// [`compact_phase_with`] with a fresh assignment.
+pub fn compact_phase(
+    state: &mut ClusterState,
+    target: &Deployment,
+    actions: &mut Vec<Action>,
+) -> anyhow::Result<Vec<usize>> {
+    compact_phase_with(state, target, None, actions)
+}
+
+/// Make physical GPU `gi` realize target config `ci`.
+fn realize_config(
+    state: &mut ClusterState,
+    target: &Deployment,
+    ci: usize,
+    gi: usize,
+    processed: &[usize],
+    actions: &mut Vec<Action>,
+) -> anyhow::Result<()> {
+    let cfg = &target.gpus[ci];
+
+    // Match config entries against pods already on the GPU.
+    let mut pods_here: Vec<(Placement, Pod)> =
+        state.gpu(gi).pods().iter().map(|(p, q)| (*p, *q)).collect();
+    let mut kept: Vec<Placement> = Vec::new();
+    let mut missing: Vec<(InstanceSize, ServiceId, usize, f64)> = Vec::new();
+    for a in &cfg.assigns {
+        if let Some(ix) = pods_here.iter().position(|(pl, pod)| {
+            pl.size == a.placement.size && pod.service == a.service
+        }) {
+            kept.push(pods_here.remove(ix).0);
+        } else {
+            missing.push((a.placement.size, a.service, a.batch, a.throughput));
+        }
+    }
+    let surplus: Vec<(Placement, Pod)> = pods_here; // unmatched pods
+
+    // Try to complete the layout around the kept pods.
+    let kept_partition = Partition::try_new(kept.clone())
+        .map_err(|e| anyhow::anyhow!("kept pods form illegal partition: {e}"))?;
+    let completion =
+        kept_partition.complete_with(&missing.iter().map(|m| m.0).collect::<Vec<_>>());
+
+    let (kept, missing_placed): (Vec<Placement>, Vec<Placement>) = match completion {
+        Some(added) => (kept, added),
+        None => {
+            // No in-place completion: rebuild the GPU from scratch. All
+            // current pods become surplus (they migrate out and may
+            // return as donors).
+            let part = cfg.partition();
+            let placements = part.placements().to_vec();
+            // Everything currently here must leave.
+            let all_pods: Vec<(Placement, Pod)> =
+                state.gpu(gi).pods().iter().map(|(p, q)| (*p, *q)).collect();
+            for (pl, pod) in all_pods {
+                migrate_out(state, gi, pl, pod, processed, actions)?;
+            }
+            let missing_all: Vec<Placement> = placements;
+            // Rebuild missing list = all config entries.
+            let missing2: Vec<(InstanceSize, ServiceId, usize, f64)> = cfg
+                .assigns
+                .iter()
+                .map(|a| (a.placement.size, a.service, a.batch, a.throughput))
+                .collect();
+            return finalize_layout(
+                state, gi, vec![], missing_all, missing2, processed, actions,
+            );
+        }
+    };
+
+    // Move surplus pods out first (their slots may conflict with the
+    // completion placements).
+    for (pl, pod) in surplus {
+        migrate_out(state, gi, pl, pod, processed, actions)?;
+    }
+    finalize_layout(state, gi, kept, missing_placed, missing, processed, actions)
+}
+
+/// Repartition `gi` to `kept ∪ missing_placed` and migrate the missing
+/// entries in from donors.
+fn finalize_layout(
+    state: &mut ClusterState,
+    gi: usize,
+    kept: Vec<Placement>,
+    missing_placed: Vec<Placement>,
+    missing: Vec<(InstanceSize, ServiceId, usize, f64)>,
+    processed: &[usize],
+    actions: &mut Vec<Action>,
+) -> anyhow::Result<()> {
+    // Current placements minus kept = to remove.
+    let current = state.gpu(gi).partition().placements().to_vec();
+    let remove: Vec<Placement> =
+        current.into_iter().filter(|p| !kept.contains(p)).collect();
+    let add: Vec<Placement> = missing_placed
+        .iter()
+        .filter(|p| !kept.contains(p))
+        .copied()
+        .collect();
+    if !remove.is_empty() || !add.is_empty() {
+        let act = Action::Repartition { gpu: gi, remove, add };
+        Executor::apply(state, &act)?;
+        actions.push(act);
+    }
+    // Pair each missing entry with a placement of its size.
+    let mut open = missing_placed;
+    let mut forbidden = processed.to_vec();
+    forbidden.push(gi);
+    for (size, svc, batch, thr) in missing {
+        let ix = open
+            .iter()
+            .position(|p| p.size == size)
+            .ok_or_else(|| anyhow::anyhow!("layout lost a {size:?} slot"))?;
+        let dst = open.remove(ix);
+        let (dg, dpl, pod) = find_donor(state, svc, size, &forbidden, gi)
+            .ok_or_else(|| {
+                anyhow::anyhow!("no donor for service {svc} on {size:?}")
+            })?;
+        debug_assert!((pod.throughput - thr).abs() < 1e6); // same profile family
+        let act = Action::MigratePod {
+            src_gpu: dg,
+            src: dpl,
+            dst_gpu: gi,
+            dst,
+            pod: Pod { service: svc, batch, throughput: thr },
+        };
+        Executor::apply(state, &act)?;
+        actions.push(act);
+        // Free the donor's now-empty slot.
+        let rep = Action::Repartition { gpu: dg, remove: vec![dpl], add: vec![] };
+        Executor::apply(state, &rep)?;
+        actions.push(rep);
+    }
+    Ok(())
+}
+
+/// Migrate a pod off `gi` to scratch space anywhere else.
+fn migrate_out(
+    state: &mut ClusterState,
+    gi: usize,
+    pl: Placement,
+    pod: Pod,
+    processed: &[usize],
+    actions: &mut Vec<Action>,
+) -> anyhow::Result<()> {
+    let mut forbidden = processed.to_vec();
+    forbidden.push(gi);
+    let (dst_gpu, dst) = allocate_slot(state, pl.size, &forbidden, actions)?;
+    let act = Action::MigratePod { src_gpu: gi, src: pl, dst_gpu, dst, pod };
+    Executor::apply(state, &act)?;
+    actions.push(act);
+    let rep = Action::Repartition { gpu: gi, remove: vec![pl], add: vec![] };
+    Executor::apply(state, &rep)?;
+    actions.push(rep);
+    Ok(())
+}
+
+/// Does `state` realize `target` exactly (a bijection between used GPUs
+/// and target configs with equal (size, service) multisets)?
+pub fn realizes(state: &ClusterState, target: &Deployment) -> bool {
+    let mut cfg_sigs: Vec<_> = target.gpus.iter().map(config_signature).collect();
+    let mut used = 0;
+    for gi in 0..state.num_gpus() {
+        let sig = gpu_signature(state, gi);
+        if sig.is_empty() {
+            continue;
+        }
+        used += 1;
+        match cfg_sigs.iter().position(|c| *c == sig) {
+            Some(ix) => {
+                cfg_sigs.remove(ix);
+            }
+            None => return false,
+        }
+    }
+    used == target.gpus.len() && cfg_sigs.is_empty()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mig::InstanceSize::*;
+    use crate::optimizer::{GpuConfig, InstanceAssign};
+
+    fn assign(size: InstanceSize, start: u8, svc: ServiceId, thr: f64) -> InstanceAssign {
+        InstanceAssign {
+            placement: Placement::new(size, start),
+            service: svc,
+            batch: 8,
+            throughput: thr,
+        }
+    }
+
+    fn seeded(pods: &[(usize, InstanceSize, u8, ServiceId, f64)], gpus: usize) -> ClusterState {
+        let mut c = ClusterState::new(1, gpus);
+        for &(gpu, size, start, svc, thr) in pods {
+            let pl = Placement::new(size, start);
+            c.repartition(gpu, &[], &[pl]).unwrap();
+            c.create_pod(gpu, pl, Pod { service: svc, batch: 8, throughput: thr })
+                .unwrap();
+        }
+        c
+    }
+
+    #[test]
+    fn consolidates_fragmented_instances() {
+        // Two 1/7s of svc 0 on separate GPUs + a 2/7 of svc 1; target
+        // packs them all on one GPU.
+        let mut state = seeded(
+            &[
+                (0, One, 0, 0, 10.0),
+                (1, One, 0, 0, 10.0),
+                (2, Two, 0, 1, 20.0),
+            ],
+            4,
+        );
+        let target = Deployment {
+            gpus: vec![GpuConfig {
+                assigns: vec![
+                    assign(Two, 0, 1, 20.0),
+                    assign(One, 2, 0, 10.0),
+                    assign(One, 3, 0, 10.0),
+                ],
+            }],
+        };
+        let mut actions = Vec::new();
+        let processed = compact_phase(&mut state, &target, &mut actions).unwrap();
+        assert_eq!(processed.len(), 1);
+        assert!(realizes(&state, &target), "end state mismatch");
+        // Throughput preserved throughout (replay).
+        let mut replay = seeded(
+            &[
+                (0, One, 0, 0, 10.0),
+                (1, One, 0, 0, 10.0),
+                (2, Two, 0, 1, 20.0),
+            ],
+            4,
+        );
+        let mut min0 = f64::INFINITY;
+        let mut min1 = f64::INFINITY;
+        for a in &actions {
+            Executor::apply(&mut replay, a).unwrap();
+            let t = replay.service_throughputs(2);
+            min0 = min0.min(t[0]);
+            min1 = min1.min(t[1]);
+        }
+        assert!(min0 >= 20.0 - 1e-9, "svc0 dipped: {min0}");
+        assert!(min1 >= 20.0 - 1e-9, "svc1 dipped: {min1}");
+    }
+
+    #[test]
+    fn keeps_matching_pods_in_place() {
+        // GPU 0 already matches the target exactly: zero migrations.
+        let mut state = seeded(&[(0, Three, 0, 0, 30.0), (0, Three, 4, 1, 30.0)], 2);
+        let target = Deployment {
+            gpus: vec![GpuConfig {
+                assigns: vec![assign(Three, 0, 0, 30.0), assign(Three, 4, 1, 30.0)],
+            }],
+        };
+        let mut actions = Vec::new();
+        compact_phase(&mut state, &target, &mut actions).unwrap();
+        let migrations = actions
+            .iter()
+            .filter(|a| matches!(a, Action::MigratePod { .. }))
+            .count();
+        assert_eq!(migrations, 0, "actions: {actions:?}");
+        assert!(realizes(&state, &target));
+    }
+
+    #[test]
+    fn rebuild_when_layout_conflicts() {
+        // GPU 0 has a 7/7 for svc 0 but the target wants it split; the
+        // donor 1/7s live on GPU 1. The 7/7 cannot coexist with any
+        // other placement, so a full rebuild happens.
+        let mut state = seeded(
+            &[
+                (0, Seven, 0, 1, 70.0),
+                (1, One, 0, 0, 10.0),
+                (1, One, 1, 0, 10.0),
+            ],
+            4,
+        );
+        let target = Deployment {
+            gpus: vec![
+                GpuConfig { assigns: vec![assign(Seven, 0, 1, 70.0)] },
+                GpuConfig {
+                    assigns: vec![assign(One, 0, 0, 10.0), assign(One, 1, 0, 10.0)],
+                },
+            ],
+        };
+        let mut actions = Vec::new();
+        compact_phase(&mut state, &target, &mut actions).unwrap();
+        assert!(realizes(&state, &target));
+    }
+
+    #[test]
+    fn realizes_rejects_wrong_state() {
+        let state = seeded(&[(0, One, 0, 0, 10.0)], 2);
+        let target = Deployment {
+            gpus: vec![GpuConfig { assigns: vec![assign(Two, 0, 0, 20.0)] }],
+        };
+        assert!(!realizes(&state, &target));
+    }
+
+    #[test]
+    fn empty_target_clears_cluster_partitions() {
+        // No pods, stale partitions get cleaned.
+        let mut state = ClusterState::new(1, 2);
+        state
+            .repartition(0, &[], &[Placement::new(Two, 0)])
+            .unwrap();
+        let target = Deployment { gpus: vec![] };
+        let mut actions = Vec::new();
+        compact_phase(&mut state, &target, &mut actions).unwrap();
+        assert!(state.gpu(0).is_empty());
+        assert!(realizes(&state, &target));
+    }
+}

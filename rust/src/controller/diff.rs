@@ -1,0 +1,190 @@
+//! Instance-delta computation between the running state and a target
+//! deployment (§6 Exchange phase: "controller calculates the instance
+//! differences between the old and the new deployments for each
+//! service", Δᵢ).
+
+use std::collections::BTreeMap;
+
+use crate::cluster::ClusterState;
+use crate::mig::InstanceSize;
+use crate::optimizer::Deployment;
+use crate::spec::ServiceId;
+
+/// Per-service instance counts keyed by size.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct InstanceCounts {
+    pub by_size: BTreeMap<InstanceSize, usize>,
+}
+
+impl InstanceCounts {
+    pub fn add(&mut self, size: InstanceSize) {
+        *self.by_size.entry(size).or_insert(0) += 1;
+    }
+
+    pub fn count(&self, size: InstanceSize) -> usize {
+        self.by_size.get(&size).copied().unwrap_or(0)
+    }
+
+    pub fn total(&self) -> usize {
+        self.by_size.values().sum()
+    }
+}
+
+/// One service's delta: instances to create and instances to drop.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ServiceDelta {
+    pub service: ServiceId,
+    /// Sizes needed by the new deployment but not currently running.
+    pub plus: Vec<InstanceSize>,
+    /// Currently running sizes the new deployment does not need.
+    pub minus: Vec<InstanceSize>,
+}
+
+impl ServiceDelta {
+    pub fn is_empty(&self) -> bool {
+        self.plus.is_empty() && self.minus.is_empty()
+    }
+}
+
+/// Instance counts per service currently live on the cluster.
+pub fn cluster_counts(cluster: &ClusterState, n_services: usize) -> Vec<InstanceCounts> {
+    let mut counts = vec![InstanceCounts::default(); n_services];
+    for gi in 0..cluster.num_gpus() {
+        for (pl, pod) in cluster.gpu(gi).pods() {
+            if pod.service < n_services {
+                counts[pod.service].add(pl.size);
+            }
+        }
+    }
+    counts
+}
+
+/// Instance counts per service required by a deployment.
+pub fn deployment_counts(dep: &Deployment, n_services: usize) -> Vec<InstanceCounts> {
+    let mut counts = vec![InstanceCounts::default(); n_services];
+    for g in &dep.gpus {
+        for a in &g.assigns {
+            counts[a.service].add(a.placement.size);
+        }
+    }
+    counts
+}
+
+/// Compute Δᵢ for every service: what to create (+) and drop (−),
+/// sorted large-to-small (the exchange pairing walks big instances
+/// first).
+pub fn service_deltas(
+    cluster: &ClusterState,
+    target: &Deployment,
+    n_services: usize,
+) -> Vec<ServiceDelta> {
+    let have = cluster_counts(cluster, n_services);
+    let want = deployment_counts(target, n_services);
+    (0..n_services)
+        .map(|sid| {
+            let mut delta = ServiceDelta { service: sid, ..Default::default() };
+            for size in InstanceSize::ALL {
+                let h = have[sid].count(size);
+                let w = want[sid].count(size);
+                if w > h {
+                    delta.plus.extend(std::iter::repeat(size).take(w - h));
+                } else if h > w {
+                    delta.minus.extend(std::iter::repeat(size).take(h - w));
+                }
+            }
+            delta.plus.sort_by(|a, b| b.cmp(a));
+            delta.minus.sort_by(|a, b| b.cmp(a));
+            delta
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Pod;
+    use crate::mig::{InstanceSize::*, Placement};
+    use crate::optimizer::{Deployment, GpuConfig, InstanceAssign};
+
+    fn assign(size: InstanceSize, start: u8, svc: ServiceId) -> InstanceAssign {
+        InstanceAssign {
+            placement: Placement::new(size, start),
+            service: svc,
+            batch: 8,
+            throughput: 10.0 * size.slices() as f64,
+        }
+    }
+
+    fn cluster_with(pods: &[(usize, InstanceSize, u8, ServiceId)]) -> ClusterState {
+        let mut c = ClusterState::new(1, 8);
+        for &(gpu, size, start, svc) in pods {
+            let pl = Placement::new(size, start);
+            c.repartition(gpu, &[], &[pl]).unwrap();
+            c.create_pod(gpu, pl, Pod { service: svc, batch: 8, throughput: 1.0 })
+                .unwrap();
+        }
+        c
+    }
+
+    #[test]
+    fn delta_matches_paper_example() {
+        // Paper example: Δᵢ = [+4/7, −2/7].
+        let cluster = cluster_with(&[(0, Two, 0, 0)]);
+        let target = Deployment {
+            gpus: vec![GpuConfig { assigns: vec![assign(Four, 0, 0)] }],
+        };
+        let deltas = service_deltas(&cluster, &target, 1);
+        assert_eq!(deltas[0].plus, vec![Four]);
+        assert_eq!(deltas[0].minus, vec![Two]);
+    }
+
+    #[test]
+    fn no_delta_when_sizes_match() {
+        // Same multiset, different physical placement: no exchange work.
+        let cluster = cluster_with(&[(0, Two, 0, 0), (1, One, 3, 0)]);
+        let target = Deployment {
+            gpus: vec![GpuConfig {
+                assigns: vec![assign(Two, 0, 0), assign(One, 2, 0)],
+            }],
+        };
+        let deltas = service_deltas(&cluster, &target, 1);
+        assert!(deltas[0].is_empty());
+    }
+
+    #[test]
+    fn multi_service_deltas_independent() {
+        let cluster = cluster_with(&[(0, Seven, 0, 0), (1, One, 0, 1)]);
+        let target = Deployment {
+            gpus: vec![
+                GpuConfig { assigns: vec![assign(Seven, 0, 0)] },
+                GpuConfig {
+                    assigns: vec![assign(Three, 0, 1), assign(Three, 4, 1)],
+                },
+            ],
+        };
+        let deltas = service_deltas(&cluster, &target, 2);
+        assert!(deltas[0].is_empty());
+        assert_eq!(deltas[1].plus, vec![Three, Three]);
+        assert_eq!(deltas[1].minus, vec![One]);
+    }
+
+    #[test]
+    fn removed_service_all_minus() {
+        let cluster = cluster_with(&[(0, Two, 0, 0), (0, Two, 2, 0)]);
+        let target = Deployment { gpus: vec![] };
+        let deltas = service_deltas(&cluster, &target, 1);
+        assert!(deltas[0].plus.is_empty());
+        assert_eq!(deltas[0].minus, vec![Two, Two]);
+    }
+
+    #[test]
+    fn counts_helpers() {
+        let mut c = InstanceCounts::default();
+        c.add(One);
+        c.add(One);
+        c.add(Seven);
+        assert_eq!(c.count(One), 2);
+        assert_eq!(c.count(Two), 0);
+        assert_eq!(c.total(), 3);
+    }
+}

@@ -1,0 +1,396 @@
+//! Exchange phase (§6): give every service the instance sizes the new
+//! deployment wants, without ever dropping below the required
+//! throughput.
+//!
+//! For each service the controller pairs every *new* instance with some
+//! *unneeded* instances whose combined throughput does not exceed the
+//! new instance's ("pairing an unneeded instance which has larger
+//! throughputs is not allowed"), executes each pair create-first /
+//! delete-second (extra GPUs as scratch), and deletes the remaining
+//! unneeded instances only after all pairs are done.
+
+use std::collections::BTreeMap;
+
+use crate::cluster::{Action, ClusterState, Executor, Pod};
+use crate::mig::{InstanceSize, Placement};
+use crate::optimizer::Deployment;
+use crate::spec::ServiceId;
+
+use super::diff::ServiceDelta;
+
+/// Per-GPU (size, service) needs from the pre-computed target
+/// assignment (see `compact::target_hints`).
+pub type TargetHints = Vec<std::collections::BTreeMap<(InstanceSize, ServiceId), usize>>;
+
+/// Look up the (batch, throughput) the target deployment uses for a
+/// (service, size) instance.
+fn target_pod_params(
+    target: &Deployment,
+) -> BTreeMap<(ServiceId, InstanceSize), (usize, f64)> {
+    let mut m = BTreeMap::new();
+    for g in &target.gpus {
+        for a in &g.assigns {
+            m.insert((a.service, a.placement.size), (a.batch, a.throughput));
+        }
+    }
+    m
+}
+
+/// Allocate a slot for `size` anywhere on the cluster, emitting (and
+/// applying) a repartition if the hosting GPU's layout must grow.
+/// `forbidden` GPUs are skipped (used by compact for processed GPUs).
+pub(crate) fn allocate_slot(
+    state: &mut ClusterState,
+    size: InstanceSize,
+    forbidden: &[usize],
+    actions: &mut Vec<Action>,
+) -> anyhow::Result<(usize, Placement)> {
+    // Candidate ranking: (1) an existing free instance of the right
+    // size beats repartitioning; (2) partially-used GPUs beat empty
+    // ones (§6 compactness); (3) among equals, the *least-loaded* GPU
+    // wins — spreading consecutive allocations across GPUs keeps the
+    // per-GPU action chains short so the asynchronous executor can
+    // overlap them (EXPERIMENTS.md §Perf).
+    let mut choice: Option<(usize, Placement, bool)> = None;
+    let mut best_key = (usize::MAX, usize::MAX, usize::MAX);
+    for gi in 0..state.num_gpus() {
+        if forbidden.contains(&gi) {
+            continue;
+        }
+        let g = state.gpu(gi);
+        let load = g.partition().len();
+        if let Some(pl) = g.free_instances().into_iter().find(|p| p.size == size) {
+            let key = (0usize, 0usize, load);
+            if key < best_key {
+                best_key = key;
+                choice = Some((gi, pl, false));
+            }
+        } else if let Some(start) = g.partition().can_allocate(size) {
+            let pl = Placement::new(size, start);
+            let empty = usize::from(g.is_empty());
+            let key = (1usize, empty, load);
+            if key < best_key {
+                best_key = key;
+                choice = Some((gi, pl, true));
+            }
+        }
+    }
+    let (gpu, pl, needs_repartition) = choice.ok_or_else(|| {
+        anyhow::anyhow!("no GPU can allocate a {size:?} instance (cluster full)")
+    })?;
+    if needs_repartition {
+        let act = Action::Repartition { gpu, remove: vec![], add: vec![pl] };
+        Executor::apply(state, &act)?;
+        actions.push(act);
+    }
+    Ok((gpu, pl))
+}
+
+/// Try to allocate `size` for `service` on a GPU whose assigned target
+/// config still needs such an instance.
+fn hinted_slot(
+    state: &mut ClusterState,
+    hints: &mut TargetHints,
+    size: InstanceSize,
+    service: ServiceId,
+    actions: &mut Vec<Action>,
+) -> Option<(usize, Placement)> {
+    for gi in 0..state.num_gpus() {
+        let need = hints[gi].get(&(size, service)).copied().unwrap_or(0);
+        if need == 0 {
+            continue;
+        }
+        let g = state.gpu(gi);
+        let (pl, needs_rep) = match g
+            .free_instances()
+            .into_iter()
+            .find(|p| p.size == size)
+        {
+            Some(pl) => (pl, false),
+            None => match g.partition().can_allocate(size) {
+                Some(start) => (Placement::new(size, start), true),
+                None => continue,
+            },
+        };
+        if needs_rep {
+            let act = Action::Repartition { gpu: gi, remove: vec![], add: vec![pl] };
+            if Executor::apply(state, &act).is_err() {
+                continue;
+            }
+            actions.push(act);
+        }
+        *hints[gi].get_mut(&(size, service)).unwrap() -= 1;
+        return Some((gi, pl));
+    }
+    None
+}
+
+/// Emit (and apply) `DeletePod` + a repartition that returns the slot to
+/// free space.
+fn delete_instance(
+    state: &mut ClusterState,
+    gpu: usize,
+    placement: Placement,
+    service: crate::spec::ServiceId,
+    actions: &mut Vec<Action>,
+) -> anyhow::Result<()> {
+    let del = Action::DeletePod { gpu, placement, service };
+    Executor::apply(state, &del)?;
+    actions.push(del);
+    let rep = Action::Repartition { gpu, remove: vec![placement], add: vec![] };
+    Executor::apply(state, &rep)?;
+    actions.push(rep);
+    Ok(())
+}
+
+/// Run the exchange phase on `state`, appending the applied actions.
+/// `hints` (optional) steers each created instance toward the GPU its
+/// target config was assigned to, so the compact phase finds it already
+/// in place.
+pub fn exchange_phase(
+    state: &mut ClusterState,
+    deltas: &[ServiceDelta],
+    target: &Deployment,
+    mut hints: Option<TargetHints>,
+    actions: &mut Vec<Action>,
+) -> anyhow::Result<()> {
+    let params = target_pod_params(target);
+    // Deferred deletions: unneeded instances that paired with nothing.
+    let mut leftovers: Vec<(usize, Placement, crate::spec::ServiceId)> = Vec::new();
+
+    for delta in deltas {
+        if delta.is_empty() {
+            continue;
+        }
+        let sid = delta.service;
+
+        // Concrete unneeded pods: pick one live pod per `minus` size.
+        let mut unneeded: Vec<(usize, Placement, Pod)> = Vec::new();
+        {
+            let mut available = state.pods_of_service(sid);
+            for &size in &delta.minus {
+                let idx = available
+                    .iter()
+                    .position(|(_, pl, _)| pl.size == size)
+                    .ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "service {sid}: minus {size:?} but no such pod live"
+                        )
+                    })?;
+                unneeded.push(available.swap_remove(idx));
+            }
+        }
+        // Large throughput first on both sides.
+        unneeded.sort_by(|a, b| b.2.throughput.partial_cmp(&a.2.throughput).unwrap());
+        let mut plus: Vec<(InstanceSize, usize, f64)> = delta
+            .plus
+            .iter()
+            .map(|&size| {
+                let (batch, thr) = params.get(&(sid, size)).copied().ok_or_else(
+                    || anyhow::anyhow!("service {sid}: target lacks {size:?} params"),
+                )?;
+                Ok((size, batch, thr))
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        plus.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
+
+        // Pair each new instance with unneeded ones under the throughput
+        // rule, largest-first.
+        for (size, batch, thr) in plus {
+            let mut paired: Vec<(usize, Placement, Pod)> = Vec::new();
+            let mut budget = thr;
+            let mut i = 0;
+            while i < unneeded.len() {
+                if unneeded[i].2.throughput <= budget + 1e-9 {
+                    budget -= unneeded[i].2.throughput;
+                    paired.push(unneeded.swap_remove(i));
+                    // keep scanning from same index after swap_remove
+                } else {
+                    i += 1;
+                }
+            }
+            // Create the new instance first — on its target GPU when
+            // the hint is realizable right now, else anywhere.
+            let hinted = hints.as_mut().and_then(|h| {
+                hinted_slot(state, h, size, sid, actions)
+            });
+            let (gpu, pl) = match hinted {
+                Some(x) => x,
+                None => allocate_slot(state, size, &[], actions)?,
+            };
+            let create = Action::CreatePod {
+                gpu,
+                placement: pl,
+                pod: Pod { service: sid, batch, throughput: thr },
+            };
+            Executor::apply(state, &create)?;
+            actions.push(create);
+            // ...then retire what it replaces.
+            for (g, p, _) in paired {
+                delete_instance(state, g, p, sid, actions)?;
+            }
+        }
+        // Whatever is left pairs with nothing (service shrinking):
+        // deleted after all pairs (paper: "After finishing all pairs,
+        // controller deletes instances in the unneeded list").
+        leftovers.extend(
+            unneeded.into_iter().map(|(g, p, pod)| (g, p, pod.service)),
+        );
+    }
+
+    for (gpu, placement, service) in leftovers {
+        delete_instance(state, gpu, placement, service, actions)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::controller::diff::service_deltas;
+    use crate::mig::InstanceSize::*;
+    use crate::optimizer::{GpuConfig, InstanceAssign};
+
+    fn assign(size: InstanceSize, start: u8, svc: ServiceId, thr: f64) -> InstanceAssign {
+        InstanceAssign {
+            placement: Placement::new(size, start),
+            service: svc,
+            batch: 8,
+            throughput: thr,
+        }
+    }
+
+    fn seeded_cluster(pods: &[(usize, InstanceSize, u8, ServiceId, f64)]) -> ClusterState {
+        let mut c = ClusterState::new(1, 8);
+        for &(gpu, size, start, svc, thr) in pods {
+            let pl = Placement::new(size, start);
+            c.repartition(gpu, &[], &[pl]).unwrap();
+            c.create_pod(gpu, pl, Pod { service: svc, batch: 8, throughput: thr })
+                .unwrap();
+        }
+        c
+    }
+
+    #[test]
+    fn upgrade_2_to_4_never_dips() {
+        // Service 0 has a 2/7 (thr 30); new deployment wants a 4/7
+        // (thr 70). The create must precede the delete.
+        let mut state = seeded_cluster(&[(0, Two, 0, 0, 30.0)]);
+        let target = Deployment {
+            gpus: vec![GpuConfig { assigns: vec![assign(Four, 0, 0, 70.0)] }],
+        };
+        let deltas = service_deltas(&state, &target, 1);
+        let mut actions = Vec::new();
+        exchange_phase(&mut state, &deltas, &target, None, &mut actions).unwrap();
+
+        // Replay on a fresh copy, tracking the invariant.
+        let mut replay = seeded_cluster(&[(0, Two, 0, 0, 30.0)]);
+        let mut min_thr = f64::INFINITY;
+        for a in &actions {
+            Executor::apply(&mut replay, a).unwrap();
+            min_thr = min_thr.min(replay.service_throughputs(1)[0]);
+        }
+        assert!(min_thr >= 30.0, "throughput dipped to {min_thr}");
+        // End state: exactly one 4/7 pod.
+        let pods = replay.pods_of_service(0);
+        assert_eq!(pods.len(), 1);
+        assert_eq!(pods[0].1.size, Four);
+        // Create precedes delete.
+        let create_idx = actions
+            .iter()
+            .position(|a| matches!(a, Action::CreatePod { .. }))
+            .unwrap();
+        let delete_idx = actions
+            .iter()
+            .position(|a| matches!(a, Action::DeletePod { .. }))
+            .unwrap();
+        assert!(create_idx < delete_idx);
+    }
+
+    #[test]
+    fn shrink_deletes_leftovers_only_after_pairs() {
+        // Service shrinks from three 1/7 to one 1/7: two deletions, no
+        // creations.
+        let mut state = seeded_cluster(&[
+            (0, One, 0, 0, 10.0),
+            (0, One, 1, 0, 10.0),
+            (1, One, 0, 0, 10.0),
+        ]);
+        let target = Deployment {
+            gpus: vec![GpuConfig { assigns: vec![assign(One, 0, 0, 10.0)] }],
+        };
+        let deltas = service_deltas(&state, &target, 1);
+        let mut actions = Vec::new();
+        exchange_phase(&mut state, &deltas, &target, None, &mut actions).unwrap();
+        let creates = actions.iter().filter(|a| matches!(a, Action::CreatePod { .. })).count();
+        let deletes = actions.iter().filter(|a| matches!(a, Action::DeletePod { .. })).count();
+        assert_eq!((creates, deletes), (0, 2));
+        assert_eq!(state.pods_of_service(0).len(), 1);
+    }
+
+    #[test]
+    fn pairing_respects_throughput_rule() {
+        // Unneeded 7/7 (thr 100) may NOT pair with a new 1/7 (thr 20):
+        // the 7/7 must survive until the end (leftover deletion), so
+        // min throughput ≥ min(old=100, new=20) = 20... but pairing it
+        // would have dropped us to 20-100 < 20 mid-flight. Verify the
+        // pod set never loses the big instance before the small one is
+        // up.
+        let mut state = seeded_cluster(&[(0, Seven, 0, 0, 100.0)]);
+        let target = Deployment {
+            gpus: vec![GpuConfig { assigns: vec![assign(One, 0, 0, 20.0)] }],
+        };
+        let deltas = service_deltas(&state, &target, 1);
+        let mut actions = Vec::new();
+        exchange_phase(&mut state, &deltas, &target, None, &mut actions).unwrap();
+        let mut replay = seeded_cluster(&[(0, Seven, 0, 0, 100.0)]);
+        let mut min_thr: f64 = f64::INFINITY;
+        for a in &actions {
+            Executor::apply(&mut replay, a).unwrap();
+            min_thr = min_thr.min(replay.service_throughputs(1)[0]);
+        }
+        assert!(min_thr >= 20.0, "dipped below new requirement: {min_thr}");
+        assert_eq!(replay.pods_of_service(0).len(), 1);
+        assert_eq!(replay.pods_of_service(0)[0].1.size, One);
+    }
+
+    #[test]
+    fn multi_service_exchange() {
+        let mut state = seeded_cluster(&[
+            (0, Two, 0, 0, 30.0),
+            (1, Three, 0, 1, 50.0),
+        ]);
+        let target = Deployment {
+            gpus: vec![
+                GpuConfig { assigns: vec![assign(Three, 0, 0, 55.0)] },
+                GpuConfig { assigns: vec![assign(Three, 4, 1, 50.0)] },
+            ],
+        };
+        let deltas = service_deltas(&state, &target, 2);
+        let mut actions = Vec::new();
+        exchange_phase(&mut state, &deltas, &target, None, &mut actions).unwrap();
+        // Service 1's 3/7 is unchanged; service 0 upgraded to 3/7.
+        let p0 = state.pods_of_service(0);
+        assert_eq!(p0.len(), 1);
+        assert_eq!(p0[0].1.size, Three);
+        assert_eq!(state.pods_of_service(1).len(), 1);
+    }
+
+    #[test]
+    fn fails_gracefully_when_cluster_full() {
+        // One-GPU cluster fully occupied by another service: no scratch
+        // space for the create-before-delete exchange.
+        let mut state = ClusterState::new(1, 1);
+        let pl = Placement::new(Seven, 0);
+        state.repartition(0, &[], &[pl]).unwrap();
+        state
+            .create_pod(0, pl, Pod { service: 1, batch: 8, throughput: 10.0 })
+            .unwrap();
+        let target = Deployment {
+            gpus: vec![GpuConfig { assigns: vec![assign(Four, 0, 0, 70.0)] }],
+        };
+        let deltas = service_deltas(&state, &target, 2);
+        let mut actions = Vec::new();
+        assert!(exchange_phase(&mut state, &deltas, &target, None, &mut actions).is_err());
+    }
+}

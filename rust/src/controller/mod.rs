@@ -1,0 +1,31 @@
+//! The controller (paper §6): plan and execute *deployment transitions*
+//! without interrupting user experience.
+//!
+//! Given the cluster's current state (realizing the old deployment) and
+//! a new deployment from the optimizer, the controller runs
+//! **exchange-and-compact**:
+//!
+//! * [`diff`] — per-service instance deltas (Δᵢ, e.g. `[+4/7, −2/7]`);
+//! * [`exchange`] — give every service its new instance sizes: pair new
+//!   instances with unneeded ones (new throughput ≥ unneeded
+//!   throughput), create-before-delete, extra GPUs as scratch space;
+//! * [`compact`] — defragment: assign the new deployment's GPU configs
+//!   to physical GPUs maximizing overlap with what's already there, then
+//!   migrate/repartition the rest (locality-aware: local migrations
+//!   preferred, §6 Optimizations);
+//! * [`plan`] — dependency analysis turning the action sequence into
+//!   stages of GPU-disjoint actions that run in parallel (§6).
+//!
+//! The transparency guarantee: at every stage boundary, each service's
+//! live throughput ≥ min(old requirement, new requirement) — verified by
+//! the executor's report and asserted in tests.
+
+pub mod compact;
+pub mod diff;
+pub mod exchange;
+pub mod plan;
+pub mod transition;
+
+pub use diff::{service_deltas, InstanceCounts};
+pub use plan::{parallelize, TransitionPlan};
+pub use transition::{Controller, TransitionOutcome};

@@ -1,0 +1,165 @@
+//! Dependency analysis and parallel scheduling of transition actions
+//! (§6 Optimizations: "actions can run in parallel if the affected GPUs
+//! are separate. Controller analyzes the dependencies between actions
+//! and executes the non-conflicting ones simultaneously").
+//!
+//! The action list produced by exchange/compact is correct when executed
+//! sequentially. [`parallelize`] derives the dependency DAG — action B
+//! depends on the most recent earlier action touching any of B's GPUs —
+//! and emits topological levels. Within a level all actions touch
+//! disjoint GPUs by construction, so the executor runs them
+//! concurrently.
+
+use crate::cluster::Action;
+
+/// A staged transition plan.
+#[derive(Debug, Clone)]
+pub struct TransitionPlan {
+    /// The original (sequential) action order.
+    pub actions: Vec<Action>,
+    /// Parallel stages: every stage's actions touch disjoint GPUs and
+    /// all dependencies point to earlier stages.
+    pub stages: Vec<Vec<Action>>,
+}
+
+impl TransitionPlan {
+    pub fn num_actions(&self) -> usize {
+        self.actions.len()
+    }
+    pub fn num_stages(&self) -> usize {
+        self.stages.len()
+    }
+    /// Parallelism achieved: actions / stages (1.0 = fully serial).
+    pub fn parallelism(&self) -> f64 {
+        if self.stages.is_empty() {
+            return 1.0;
+        }
+        self.actions.len() as f64 / self.stages.len() as f64
+    }
+}
+
+/// Schedule a sequential action list into parallel stages.
+///
+/// Dependency edges:
+/// * **resource**: an action depends on the latest earlier action
+///   touching any of its GPUs (same-GPU operations keep their order);
+/// * **transparency**: a `DeletePod` depends on every earlier
+///   `CreatePod` of the *same service* — the sequential plan only
+///   deletes capacity after its replacement exists, and reordering a
+///   cross-GPU delete before its paired create would dip the service's
+///   live throughput (§6's guarantee).
+pub fn parallelize(actions: Vec<Action>) -> TransitionPlan {
+    let mut last_level_for_gpu: std::collections::HashMap<usize, usize> =
+        std::collections::HashMap::new();
+    // Highest level of any create per service so far.
+    let mut create_level_for_service: std::collections::HashMap<usize, usize> =
+        std::collections::HashMap::new();
+    let mut levels: Vec<usize> = Vec::with_capacity(actions.len());
+    for a in &actions {
+        let gpu_lvl = a
+            .gpus()
+            .iter()
+            .filter_map(|g| last_level_for_gpu.get(g).copied())
+            .max()
+            .map(|l| l + 1)
+            .unwrap_or(0);
+        let safety_lvl = match a {
+            Action::DeletePod { service, .. } => create_level_for_service
+                .get(service)
+                .map(|l| l + 1)
+                .unwrap_or(0),
+            _ => 0,
+        };
+        let lvl = gpu_lvl.max(safety_lvl);
+        for g in a.gpus() {
+            last_level_for_gpu.insert(g, lvl);
+        }
+        if let Action::CreatePod { pod, .. } = a {
+            let e = create_level_for_service.entry(pod.service).or_insert(0);
+            *e = (*e).max(lvl);
+        }
+        levels.push(lvl);
+    }
+    let n_stages = levels.iter().copied().max().map(|m| m + 1).unwrap_or(0);
+    let mut stages: Vec<Vec<Action>> = vec![Vec::new(); n_stages];
+    for (a, lvl) in actions.iter().zip(&levels) {
+        stages[*lvl].push(a.clone());
+    }
+    TransitionPlan { actions, stages }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Pod;
+    use crate::mig::{InstanceSize::*, Placement};
+
+    fn rep(gpu: usize) -> Action {
+        Action::Repartition { gpu, remove: vec![], add: vec![Placement::new(One, 0)] }
+    }
+
+    fn create(gpu: usize) -> Action {
+        Action::CreatePod {
+            gpu,
+            placement: Placement::new(One, 0),
+            pod: Pod { service: 0, batch: 1, throughput: 1.0 },
+        }
+    }
+
+    #[test]
+    fn disjoint_actions_share_a_stage() {
+        let plan = parallelize(vec![rep(0), rep(1), rep(2)]);
+        assert_eq!(plan.num_stages(), 1);
+        assert_eq!(plan.stages[0].len(), 3);
+        assert!((plan.parallelism() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn same_gpu_actions_serialize() {
+        let plan = parallelize(vec![rep(0), create(0), rep(1)]);
+        assert_eq!(plan.num_stages(), 2);
+        // rep(0) and rep(1) in stage 0, create(0) in stage 1.
+        assert_eq!(plan.stages[0].len(), 2);
+        assert_eq!(plan.stages[1].len(), 1);
+    }
+
+    #[test]
+    fn migration_blocks_both_gpus() {
+        let mig = Action::MigratePod {
+            src_gpu: 0,
+            src: Placement::new(One, 0),
+            dst_gpu: 1,
+            dst: Placement::new(One, 0),
+            pod: Pod { service: 0, batch: 1, throughput: 1.0 },
+        };
+        let plan = parallelize(vec![rep(0), rep(1), mig, rep(2)]);
+        // Stage 0: rep0, rep1, rep2; stage 1: migration.
+        assert_eq!(plan.num_stages(), 2);
+        assert_eq!(plan.stages[0].len(), 3);
+        assert!(matches!(plan.stages[1][0], Action::MigratePod { .. }));
+    }
+
+    #[test]
+    fn stage_order_preserves_sequential_semantics() {
+        // Executing the staged plan must be equivalent to the original
+        // order for same-GPU chains: later actions land in later stages.
+        let actions = vec![rep(0), create(0), rep(1), create(1)];
+        let plan = parallelize(actions);
+        assert_eq!(plan.num_stages(), 2);
+        for s in &plan.stages {
+            let mut gpus = std::collections::HashSet::new();
+            for a in s {
+                for g in a.gpus() {
+                    assert!(gpus.insert(g), "stage reuses a GPU");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_plan() {
+        let plan = parallelize(vec![]);
+        assert_eq!(plan.num_stages(), 0);
+        assert_eq!(plan.parallelism(), 1.0);
+    }
+}

@@ -1,0 +1,203 @@
+//! The controller: end-to-end deployment transitions (§6).
+
+use std::time::Instant;
+
+use crate::cluster::{ClusterState, ExecReport, Executor};
+use crate::optimizer::Deployment;
+
+use super::compact::realizes;
+use super::diff::service_deltas;
+use super::exchange::exchange_phase;
+use super::plan::{parallelize, TransitionPlan};
+
+/// Everything a transition produced: the plan, the executor's report,
+/// and the planning (algorithm) time — the Fig 13a decomposition is
+/// `report.k8s_time()` / `report.partition_time()` / `algorithm_s`.
+#[derive(Debug)]
+pub struct TransitionOutcome {
+    pub plan: TransitionPlan,
+    pub report: ExecReport,
+    /// Wall-clock spent planning (the exchange-and-compact algorithm).
+    pub algorithm_s: f64,
+}
+
+/// The deployment-transition controller.
+pub struct Controller {
+    /// Number of services in the (shared) service-id space.
+    pub n_services: usize,
+}
+
+impl Controller {
+    pub fn new(n_services: usize) -> Controller {
+        Controller { n_services }
+    }
+
+    /// Plan a transition from the cluster's current state to `target`.
+    /// Pure planning: works on a scratch copy, does not touch `cluster`.
+    pub fn plan(
+        &self,
+        cluster: &ClusterState,
+        target: &Deployment,
+    ) -> anyhow::Result<(TransitionPlan, f64)> {
+        let t0 = Instant::now();
+        let mut scratch = cluster.clone();
+        let mut actions = Vec::new();
+        let deltas = service_deltas(&scratch, target, self.n_services);
+        let hints = super::compact::target_hints(&scratch, target).ok();
+        exchange_phase(&mut scratch, &deltas, target, hints, &mut actions)?;
+        // Compact re-derives its matching from the post-exchange state:
+        // it adapts to whatever the hinted placements achieved (keeping
+        // the pre-exchange assignment measured *worse*, §Perf log).
+        super::compact::compact_phase_with(&mut scratch, target, None, &mut actions)?;
+        anyhow::ensure!(
+            realizes(&scratch, target),
+            "planned end-state does not realize the target deployment"
+        );
+        let algorithm_s = t0.elapsed().as_secs_f64();
+        Ok((parallelize(actions), algorithm_s))
+    }
+
+    /// Plan and execute a transition on `cluster` through `executor`
+    /// (event-driven asynchronous execution, §6 Optimizations).
+    pub fn transition(
+        &self,
+        cluster: &mut ClusterState,
+        target: &Deployment,
+        executor: &mut Executor,
+    ) -> anyhow::Result<TransitionOutcome> {
+        let (plan, algorithm_s) = self.plan(cluster, target)?;
+        let report = executor.execute_async(cluster, &plan.actions, self.n_services)?;
+        anyhow::ensure!(
+            realizes(cluster, target),
+            "executed end-state does not realize the target deployment"
+        );
+        Ok(TransitionOutcome { plan, report, algorithm_s })
+    }
+
+    /// Like [`Controller::transition`] but with the staged barrier
+    /// executor — the unoptimized scheduler kept for EXPERIMENTS.md
+    /// §Perf comparisons.
+    pub fn transition_staged(
+        &self,
+        cluster: &mut ClusterState,
+        target: &Deployment,
+        executor: &mut Executor,
+    ) -> anyhow::Result<TransitionOutcome> {
+        let (plan, algorithm_s) = self.plan(cluster, target)?;
+        let report = executor.execute(cluster, &plan.stages, self.n_services)?;
+        anyhow::ensure!(
+            realizes(cluster, target),
+            "executed end-state does not realize the target deployment"
+        );
+        Ok(TransitionOutcome { plan, report, algorithm_s })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer::{Greedy, OptimizerProcedure, ProblemCtx};
+    use crate::perf::ProfileBank;
+    use crate::spec::{Slo, Workload};
+
+    /// Deploy-from-empty, then transition between two SLO levels —
+    /// the §8.2 day2night/night2day experiment in miniature.
+    #[test]
+    fn full_day_night_cycle() {
+        let bank = ProfileBank::synthetic();
+        let models = bank.realworld_models();
+        let day = Workload::new(
+            "day",
+            models.iter().map(|m| (m.clone(), Slo::new(120.0, 400.0))).collect(),
+        );
+        let night = Workload::new(
+            "night",
+            models.iter().map(|m| (m.clone(), Slo::new(35.0, 400.0))).collect(),
+        );
+        let day_ctx = ProblemCtx::new(&bank, &day).unwrap();
+        let night_ctx = ProblemCtx::new(&bank, &night).unwrap();
+        let day_dep = Greedy::new().solve(&day_ctx).unwrap();
+        let night_dep = Greedy::new().solve(&night_ctx).unwrap();
+        assert!(day_dep.num_gpus() > night_dep.num_gpus());
+
+        let mut cluster = ClusterState::new(3, 8);
+        let controller = Controller::new(day.len());
+        let mut executor = Executor::new(42);
+
+        // Empty -> day.
+        let o1 = controller
+            .transition(&mut cluster, &day_dep, &mut executor)
+            .expect("deploy day");
+        assert!(o1.plan.num_actions() > 0);
+
+        // Day -> night: min(old, new) = night requirement must hold.
+        let o2 = controller
+            .transition(&mut cluster, &night_dep, &mut executor)
+            .expect("day2night");
+        let night_req: Vec<f64> =
+            night.services.iter().map(|s| s.slo.throughput).collect();
+        for (i, req) in night_req.iter().enumerate() {
+            assert!(
+                o2.report.min_service_throughput[i] >= req - 1e-6,
+                "svc {i}: min thr {} < night req {req}",
+                o2.report.min_service_throughput[i]
+            );
+        }
+        assert_eq!(cluster.used_gpus().len(), night_dep.num_gpus());
+
+        // Night -> day: more creations than deletions (Fig 13b shape).
+        let o3 = controller
+            .transition(&mut cluster, &day_dep, &mut executor)
+            .expect("night2day");
+        use crate::cluster::ActionKind::*;
+        assert!(
+            o3.report.count(Creation) >= o3.report.count(Deletion),
+            "night2day should create more than it deletes: {:?}",
+            o3.report.counts
+        );
+        for (i, s) in day.services.iter().enumerate() {
+            let min_req = s.slo.throughput.min(night_req[i]);
+            assert!(o3.report.min_service_throughput[i] >= min_req - 1e-6);
+        }
+        assert_eq!(cluster.used_gpus().len(), day_dep.num_gpus());
+    }
+
+    #[test]
+    fn transition_to_same_deployment_is_cheap() {
+        let bank = ProfileBank::synthetic();
+        let w = Workload::new(
+            "same",
+            vec![("resnet50".to_string(), Slo::new(80.0, 300.0))],
+        );
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let dep = Greedy::new().solve(&ctx).unwrap();
+        let mut cluster = ClusterState::new(1, 8);
+        let controller = Controller::new(1);
+        let mut ex = Executor::new(7);
+        controller.transition(&mut cluster, &dep, &mut ex).unwrap();
+        // Idempotent transition: no instance churn (migrations allowed
+        // to be zero; creations/deletions must be zero).
+        let o = controller.transition(&mut cluster, &dep, &mut ex).unwrap();
+        use crate::cluster::ActionKind::*;
+        assert_eq!(o.report.count(Creation), 0, "{:?}", o.report.counts);
+        assert_eq!(o.report.count(Deletion), 0);
+        assert_eq!(o.report.count(LocalMigration), 0);
+        assert_eq!(o.report.count(RemoteMigration), 0);
+    }
+
+    #[test]
+    fn plan_does_not_mutate_cluster() {
+        let bank = ProfileBank::synthetic();
+        let w = Workload::new(
+            "pure",
+            vec![("bert-base-uncased".to_string(), Slo::new(100.0, 300.0))],
+        );
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let dep = Greedy::new().solve(&ctx).unwrap();
+        let cluster = ClusterState::new(1, 8);
+        let controller = Controller::new(1);
+        let (plan, _) = controller.plan(&cluster, &dep).unwrap();
+        assert!(plan.num_actions() > 0);
+        assert!(cluster.used_gpus().is_empty(), "plan() must be pure");
+    }
+}

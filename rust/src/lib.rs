@@ -1,0 +1,44 @@
+//! # MIG-Serving
+//!
+//! A production-shaped reproduction of *“Serving DNN Models with
+//! Multi-Instance GPUs: A Case of the Reconfigurable Machine Scheduling
+//! Problem”* (Tan et al., 2021) as a three-layer Rust + JAX + Pallas
+//! stack:
+//!
+//! * **Layer 3 (this crate)** — the paper's contribution: the MIG
+//!   partition-rule engine ([`mig`]), the optimizer pipeline (heuristic
+//!   greedy + customized MCTS + tailored GA, [`optimizer`]), the
+//!   controller with the exchange-and-compact transition algorithm
+//!   ([`controller`]), a simulated A100/Kubernetes cluster substrate
+//!   ([`cluster`]), and a real serving runtime ([`serving`], [`runtime`])
+//!   that executes AOT-compiled model artifacts through PJRT.
+//! * **Layer 2 (python/compile/model.py)** — JAX forward passes of the
+//!   served models, lowered once to HLO text by `make artifacts`.
+//! * **Layer 1 (python/compile/kernels/)** — Pallas kernels (tiled
+//!   matmul, fused attention) inside those forward passes.
+//!
+//! Python never runs on the request path; the binary is self-contained
+//! once `artifacts/` is built.
+//!
+//! See `DESIGN.md` for the full system inventory and the per-experiment
+//! index mapping every paper figure to a bench target.
+
+pub mod util;
+
+pub mod mig;
+pub mod perf;
+pub mod spec;
+
+pub mod optimizer;
+pub mod controller;
+pub mod cluster;
+
+pub mod runtime;
+pub mod serving;
+
+pub mod workload;
+pub mod baselines;
+
+pub mod bench;
+
+pub use spec::{ServiceId, ServiceSpec, Slo, Workload};

@@ -1,0 +1,293 @@
+//! `mig-serving` — the launcher.
+//!
+//! Subcommands (see `--help`):
+//!
+//! * `optimize`   — run the optimizer on a workload, print the deployment;
+//! * `transition` — plan + simulate a deployment transition;
+//! * `serve`      — deploy on the PJRT runtime and drive load;
+//! * `study`      — the §2.2 model study (Fig 3/Fig 4 tables);
+//! * `lower-bound`— the rule-free GPU lower bound for a workload;
+//! * `partitions` — dump the 18 legal A100 partitions.
+
+use mig_serving::baselines;
+use mig_serving::cluster::{ClusterState, Executor};
+use mig_serving::controller::Controller;
+use mig_serving::optimizer::{
+    self, lower_bound_gpus, Greedy, OptimizerProcedure, ProblemCtx, TwoPhase,
+    TwoPhaseConfig,
+};
+use mig_serving::perf::{bank::fig4_classification, ProfileBank};
+use mig_serving::serving::{ExecServer, LoadGen, ServingCluster};
+use mig_serving::spec::Workload;
+use mig_serving::util::cli::{App, Command};
+use mig_serving::util::json;
+use mig_serving::util::table::{f as fmt_f, Table};
+use mig_serving::workload;
+
+fn app() -> App {
+    App {
+        name: "mig-serving",
+        about: "serving DNN models with Multi-Instance GPUs (MIG-Serving reproduction)",
+        commands: vec![
+            Command::new("optimize", "run the optimizer on a workload")
+                .opt("workload", "normal-1", "normal-1|normal-2|lognormal-1|lognormal-2|daytime|night or a JSON file")
+                .opt("algorithm", "greedy", "greedy|two-phase")
+                .opt("ga-rounds", "10", "GA rounds for two-phase")
+                .opt("out", "", "write the deployment as JSON to this path")
+                .flag("verbose", "print per-GPU configurations"),
+            Command::new("transition", "plan + simulate a deployment transition")
+                .opt("from", "daytime", "current workload")
+                .opt("to", "night", "target workload")
+                .opt("machines", "3", "cluster machines")
+                .opt("gpus-per-machine", "8", "GPUs per machine")
+                .opt("seed", "42", "latency-model seed"),
+            Command::new("serve", "deploy on the PJRT runtime and measure throughput")
+                .opt("workload", "night", "daytime|night (scaled real-world)")
+                .opt("scale", "1.0", "workload scale multiplier")
+                .opt("seconds", "3", "measurement window")
+                .opt("concurrency", "8", "closed-loop clients per service"),
+            Command::new("study", "the §2.2 model study (Fig 3/Fig 4)"),
+            Command::new("lower-bound", "rule-free GPU lower bound")
+                .opt("workload", "normal-1", "workload name"),
+            Command::new("partitions", "dump the 18 maximal legal A100 partitions"),
+        ],
+    }
+}
+
+fn load_workload(bank: &ProfileBank, name: &str) -> anyhow::Result<Workload> {
+    match name {
+        "daytime" => Ok(workload::daytime(bank)),
+        "night" => Ok(workload::night(bank)),
+        n if workload::SIMULATION_WORKLOADS.contains(&n) => {
+            Ok(workload::simulation_workload(bank, n))
+        }
+        path => {
+            let v = json::parse_file(std::path::Path::new(path))?;
+            Workload::from_json(&v)
+        }
+    }
+}
+
+fn cmd_optimize(args: &mig_serving::util::cli::Args) -> anyhow::Result<()> {
+    let bank = ProfileBank::synthetic();
+    let w = load_workload(&bank, args.get("workload").unwrap())?;
+    let ctx = ProblemCtx::new(&bank, &w)?;
+    let t0 = std::time::Instant::now();
+    let dep = match args.get("algorithm").unwrap() {
+        "greedy" => Greedy::new().solve(&ctx)?,
+        "two-phase" => {
+            let mut cfg = TwoPhaseConfig::default();
+            cfg.ga.rounds = args.get_usize("ga-rounds").unwrap_or(10);
+            TwoPhase::new(cfg).optimize(&ctx)?.best
+        }
+        other => anyhow::bail!("unknown algorithm {other:?}"),
+    };
+    let elapsed = t0.elapsed();
+    println!(
+        "workload={} services={} algorithm={} gpus={} lower_bound={} elapsed={elapsed:.2?}",
+        w.name,
+        w.len(),
+        args.get("algorithm").unwrap(),
+        dep.num_gpus(),
+        lower_bound_gpus(&ctx),
+    );
+    if args.flag("verbose") {
+        for (i, g) in dep.gpus.iter().enumerate() {
+            println!("  gpu {i:>4}: {}", g.label());
+        }
+    }
+    let out = args.get("out").unwrap();
+    if !out.is_empty() {
+        let v = deployment_json(&dep);
+        std::fs::write(out, v.to_pretty())?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn deployment_json(dep: &optimizer::Deployment) -> json::Value {
+    json::Value::Arr(
+        dep.gpus
+            .iter()
+            .map(|g| {
+                json::Value::Arr(
+                    g.assigns
+                        .iter()
+                        .map(|a| {
+                            json::Value::obj(vec![
+                                ("size", json::Value::from(a.placement.size.slices() as usize)),
+                                ("start", json::Value::from(a.placement.start as usize)),
+                                ("service", json::Value::from(a.service)),
+                                ("batch", json::Value::from(a.batch)),
+                                ("throughput", json::Value::from(a.throughput)),
+                            ])
+                        })
+                        .collect(),
+                )
+            })
+            .collect(),
+    )
+}
+
+fn cmd_transition(args: &mig_serving::util::cli::Args) -> anyhow::Result<()> {
+    let bank = ProfileBank::synthetic();
+    let from = load_workload(&bank, args.get("from").unwrap())?;
+    let to = load_workload(&bank, args.get("to").unwrap())?;
+    anyhow::ensure!(from.len() == to.len(), "workloads must share the service space");
+    let from_ctx = ProblemCtx::new(&bank, &from)?;
+    let to_ctx = ProblemCtx::new(&bank, &to)?;
+    let from_dep = Greedy::new().solve(&from_ctx)?;
+    let to_dep = Greedy::new().solve(&to_ctx)?;
+
+    let machines = args.get_usize("machines").unwrap_or(3);
+    let gpm = args.get_usize("gpus-per-machine").unwrap_or(8);
+    let mut cluster = ClusterState::new(machines, gpm);
+    let controller = Controller::new(from.len());
+    let mut executor = Executor::new(args.get_u64("seed").unwrap_or(42));
+
+    // Bring up `from`, then transition to `to`.
+    controller.transition(&mut cluster, &from_dep, &mut executor)?;
+    let outcome = controller.transition(&mut cluster, &to_dep, &mut executor)?;
+    println!(
+        "{} -> {}: {} actions in {} stages, simulated wall-clock {:.1}s \
+         (k8s {:.1}s busy, partition {:.1}s busy, algorithm {:.3}s)",
+        from.name,
+        to.name,
+        outcome.plan.num_actions(),
+        outcome.plan.num_stages(),
+        outcome.report.wallclock_s,
+        outcome.report.k8s_time(),
+        outcome.report.partition_time(),
+        outcome.algorithm_s,
+    );
+    let mut t = Table::new(&["action", "count"]);
+    for kind in mig_serving::cluster::ActionKind::ALL {
+        t.row(vec![kind.label().into(), outcome.report.count(kind).to_string()]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_serve(args: &mig_serving::util::cli::Args) -> anyhow::Result<()> {
+    let Some(manifest) = mig_serving::bench::require_artifacts() else {
+        return Ok(());
+    };
+    let bank = ProfileBank::synthetic();
+    let scale = args.get_f64("scale").unwrap_or(1.0);
+    let night = args.get("workload").unwrap() == "night";
+    let w = workload::scaled_realworld(
+        &bank,
+        if night { "night" } else { "daytime" },
+        1250.0 * scale,
+        night,
+    );
+    let ctx = ProblemCtx::new(&bank, &w)?;
+    let dep = Greedy::new().solve(&ctx)?;
+    println!("deploying {} instances on {} GPUs ...",
+        dep.gpus.iter().map(|g| g.assigns.len()).sum::<usize>(), dep.num_gpus());
+    let (exec, _guard) = ExecServer::spawn(manifest.clone())?;
+    let cluster = ServingCluster::deploy(&dep, &w, &manifest, exec, 7)?;
+    let services: Vec<usize> = (0..w.len()).collect();
+    let secs = args.get_u64("seconds").unwrap_or(3);
+    let conc = args.get_usize("concurrency").unwrap_or(8);
+    let reports = LoadGen::saturate(
+        &cluster,
+        &services,
+        conc,
+        std::time::Duration::from_secs(secs),
+    );
+    let mut t = Table::new(&["service", "required", "achieved", "satisfaction", "p90 ms"]);
+    for r in &reports {
+        let req = w.services[r.service].slo.throughput;
+        t.row(vec![
+            w.services[r.service].model.clone(),
+            fmt_f(req, 1),
+            fmt_f(r.achieved_throughput, 1),
+            mig_serving::util::table::pct(r.achieved_throughput / req, 1),
+            fmt_f(r.p90_ms, 0),
+        ]);
+    }
+    println!("{}", t.render());
+    cluster.shutdown();
+    Ok(())
+}
+
+fn cmd_study() -> anyhow::Result<()> {
+    let bank = ProfileBank::synthetic();
+    // Fig 3a analogue: the two exemplars across instance sizes.
+    for model in ["densenet121", "xlnet-large-cased"] {
+        let p = bank.get(model).unwrap();
+        let mut t = Table::new(&["size", "thr b8 (req/s)", "p90 b8 (ms)"]);
+        for s in mig_serving::mig::InstanceSize::ALL {
+            if let Some(pt) = p.point(s, 8) {
+                t.row(vec![
+                    s.to_string(),
+                    fmt_f(pt.throughput, 1),
+                    fmt_f(pt.latency_p90_ms, 1),
+                ]);
+            }
+        }
+        println!("{model}:\n{}", t.render());
+    }
+    // Fig 4: classification by batch size.
+    let mut t = Table::new(&["batch", "subL", "L", "supL"]);
+    for (b, sub, lin, sup) in fig4_classification(&bank) {
+        t.row(vec![b.to_string(), sub.to_string(), lin.to_string(), sup.to_string()]);
+    }
+    println!("model classification (49 study models):\n{}", t.render());
+    Ok(())
+}
+
+fn cmd_lower_bound(args: &mig_serving::util::cli::Args) -> anyhow::Result<()> {
+    let bank = ProfileBank::synthetic();
+    let w = load_workload(&bank, args.get("workload").unwrap())?;
+    let ctx = ProblemCtx::new(&bank, &w)?;
+    println!("{}: lower bound = {} GPUs", w.name, lower_bound_gpus(&ctx));
+    Ok(())
+}
+
+fn cmd_partitions() {
+    let mut t = Table::new(&["#", "partition", "placements"]);
+    for (i, p) in mig_serving::mig::partition::maximal_partitions().iter().enumerate() {
+        t.row(vec![
+            (i + 1).to_string(),
+            p.label(),
+            p.placements()
+                .iter()
+                .map(|pl| format!("{}@{}", pl.size.slices(), pl.start))
+                .collect::<Vec<_>>()
+                .join(" "),
+        ]);
+    }
+    println!("{}", t.render());
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let app = app();
+    let (cmd, args) = match app.parse(&argv) {
+        Ok(x) => x,
+        Err(usage) => {
+            eprintln!("{usage}");
+            std::process::exit(2);
+        }
+    };
+    let result = match cmd.name {
+        "optimize" => cmd_optimize(&args),
+        "transition" => cmd_transition(&args),
+        "serve" => cmd_serve(&args),
+        "study" => cmd_study(),
+        "lower-bound" => cmd_lower_bound(&args),
+        "partitions" => {
+            cmd_partitions();
+            Ok(())
+        }
+        _ => unreachable!(),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+    // Suppress unused-import pedantry for baselines (used by benches).
+    let _ = baselines::Gpu::A100;
+}

@@ -1,0 +1,32 @@
+//! The MIG partition-rule engine (paper §2.1, §3.3).
+//!
+//! Models NVIDIA A100 Multi-Instance GPU exactly as the scheduling
+//! problem sees it:
+//!
+//! * 7 compute slices exposed through **8 memory slots** — the extra
+//!   memory slot is why a 3/7 instance's placement footprint is 4 slots
+//!   and why two 3/7 instances fill the GPU with one compute slice
+//!   wasted (the paper's "3/7 + 3/7 is possible");
+//! * instance profiles 1/7, 2/7, 3/7, 4/7, 7/7 with NVIDIA's fixed
+//!   placement starts (`nvidia-smi mig -lgipp`);
+//! * the hard-coded **"no 4/7 + 3/7"** exclusion (§2.1);
+//! * [`rules::rule_reconf`] — the reconfiguration legality predicate of
+//!   the abstract RMS problem instantiated for MIG (§3.3).
+//!
+//! The derived set of *maximal* partitions has exactly **18 members**,
+//! matching the count the paper quotes from the MIG user guide; this is
+//! asserted by a test.
+
+pub mod partition;
+pub mod rules;
+pub mod size;
+
+pub use partition::{Partition, Placement};
+pub use rules::rule_reconf;
+pub use size::InstanceSize;
+
+/// Number of memory slots on an A100 (one more than compute slices).
+pub const MEM_SLOTS: u8 = 8;
+
+/// Number of compute slices on an A100.
+pub const COMPUTE_SLICES: u8 = 7;

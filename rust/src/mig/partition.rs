@@ -1,0 +1,503 @@
+//! GPU partitions: placed instance sets and their legality.
+
+use super::size::InstanceSize;
+use super::MEM_SLOTS;
+use std::fmt;
+
+/// A placed instance: profile + memory-slot start.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Placement {
+    pub size: InstanceSize,
+    pub start: u8,
+}
+
+impl Placement {
+    pub fn new(size: InstanceSize, start: u8) -> Placement {
+        Placement { size, start }
+    }
+
+    /// Memory-slot interval `[start, end)`.
+    pub fn mem_range(&self) -> (u8, u8) {
+        (self.start, self.start + self.size.mem_slots())
+    }
+
+    pub fn overlaps(&self, other: &Placement) -> bool {
+        let (a0, a1) = self.mem_range();
+        let (b0, b1) = other.mem_range();
+        a0 < b1 && b0 < a1
+    }
+
+    /// Is this a geometrically valid placement (profile-allowed start)?
+    pub fn valid(&self) -> bool {
+        self.size.starts().contains(&self.start)
+            && self.start + self.size.mem_slots() <= MEM_SLOTS
+    }
+}
+
+/// A partition of one GPU: a canonical (sorted) set of placements.
+///
+/// `Partition` values constructed through [`Partition::new`] are always
+/// *legal* per the A100 rules; use [`Partition::try_new`] to test
+/// arbitrary placement sets.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Partition {
+    placements: Vec<Placement>,
+}
+
+/// Why a placement set is not a legal A100 partition.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum Illegal {
+    #[error("placement {0:?} has an invalid start for its profile")]
+    BadStart(Placement),
+    #[error("placements {0:?} and {1:?} overlap in memory slots")]
+    Overlap(Placement, Placement),
+    #[error("a 4/7 and a 3/7 instance cannot coexist (hard-coded A100 rule)")]
+    FourPlusThree,
+    #[error("duplicate placement {0:?}")]
+    Duplicate(Placement),
+}
+
+impl Partition {
+    /// The empty partition (a fully repartitionable GPU).
+    pub fn empty() -> Partition {
+        Partition { placements: Vec::new() }
+    }
+
+    /// Construct, panicking on illegal input (for statically known sets).
+    pub fn new(mut placements: Vec<Placement>) -> Partition {
+        placements.sort();
+        let p = Partition { placements };
+        if let Err(e) = p.check() {
+            panic!("illegal partition {p}: {e}");
+        }
+        p
+    }
+
+    /// Construct, validating.
+    pub fn try_new(mut placements: Vec<Placement>) -> Result<Partition, Illegal> {
+        placements.sort();
+        let p = Partition { placements };
+        p.check()?;
+        Ok(p)
+    }
+
+    fn check(&self) -> Result<(), Illegal> {
+        let ps = &self.placements;
+        for (i, a) in ps.iter().enumerate() {
+            if !a.valid() {
+                return Err(Illegal::BadStart(*a));
+            }
+            for b in &ps[i + 1..] {
+                if a == b {
+                    return Err(Illegal::Duplicate(*a));
+                }
+                if a.overlaps(b) {
+                    return Err(Illegal::Overlap(*a, *b));
+                }
+            }
+        }
+        // Hard-coded A100 rule: no 4/7 + 3/7 on the same GPU (§2.1).
+        let has4 = ps.iter().any(|p| p.size == InstanceSize::Four);
+        let has3 = ps.iter().any(|p| p.size == InstanceSize::Three);
+        if has4 && has3 {
+            return Err(Illegal::FourPlusThree);
+        }
+        Ok(())
+    }
+
+    pub fn placements(&self) -> &[Placement] {
+        &self.placements
+    }
+
+    pub fn len(&self) -> usize {
+        self.placements.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.placements.is_empty()
+    }
+
+    /// Instance-size multiset, descending (e.g. `[4,2,1]` slices).
+    pub fn sizes(&self) -> Vec<InstanceSize> {
+        let mut v: Vec<InstanceSize> = self.placements.iter().map(|p| p.size).collect();
+        v.sort_by(|a, b| b.cmp(a));
+        v
+    }
+
+    /// Total compute slices used.
+    pub fn used_slices(&self) -> u8 {
+        self.placements.iter().map(|p| p.size.slices()).sum()
+    }
+
+    /// Can `size` be allocated into this partition without moving
+    /// anything? Returns the first legal start if so.
+    ///
+    /// This is exactly the paper's point that "n free slices" does NOT
+    /// imply an n/7 instance fits (§2.1).
+    pub fn can_allocate(&self, size: InstanceSize) -> Option<u8> {
+        // Hard rule first.
+        if size == InstanceSize::Three
+            && self.placements.iter().any(|p| p.size == InstanceSize::Four)
+        {
+            return None;
+        }
+        if size == InstanceSize::Four
+            && self.placements.iter().any(|p| p.size == InstanceSize::Three)
+        {
+            return None;
+        }
+        size.starts().iter().copied().find(|&st| {
+            let cand = Placement::new(size, st);
+            self.placements.iter().all(|p| !p.overlaps(&cand))
+        })
+    }
+
+    /// Allocate `size` at the first legal start, returning the new
+    /// partition and the placement.
+    pub fn allocate(&self, size: InstanceSize) -> Option<(Partition, Placement)> {
+        let st = self.can_allocate(size)?;
+        let pl = Placement::new(size, st);
+        let mut ps = self.placements.clone();
+        ps.push(pl);
+        Some((Partition::new(ps), pl))
+    }
+
+    /// Remove a placement (must exist).
+    pub fn remove(&self, pl: Placement) -> Option<Partition> {
+        let idx = self.placements.iter().position(|p| *p == pl)?;
+        let mut ps = self.placements.clone();
+        ps.remove(idx);
+        Some(Partition { placements: ps })
+    }
+
+    /// Is no further instance allocatable?
+    pub fn is_maximal(&self) -> bool {
+        InstanceSize::ALL.iter().all(|&s| self.can_allocate(s).is_none())
+    }
+
+    /// Build a partition realizing `sizes`, searching over placement
+    /// starts (a greedy first-fit is incomplete: `[3,2,2]` needs the 3/7
+    /// at start 4, not 0). Returns None if the multiset is not
+    /// realizable.
+    pub fn from_sizes(sizes: &[InstanceSize]) -> Option<Partition> {
+        Partition::empty().complete_with(sizes).map(|added| {
+            Partition::new(added)
+        })
+    }
+
+    /// Find placements for `sizes` that extend this partition legally
+    /// (existing placements stay fixed). Returns the *added* placements,
+    /// or None if no legal completion exists. Used by the controller's
+    /// compact phase to keep matching pods in place while rebuilding the
+    /// rest of a GPU.
+    pub fn complete_with(&self, sizes: &[InstanceSize]) -> Option<Vec<Placement>> {
+        let mut sorted = sizes.to_vec();
+        sorted.sort_by(|a, b| b.cmp(a));
+        // Hard rule is multiset-level: reject 4/7 + 3/7 up front.
+        let all_sizes: Vec<InstanceSize> = self
+            .placements
+            .iter()
+            .map(|p| p.size)
+            .chain(sorted.iter().copied())
+            .collect();
+        if all_sizes.contains(&InstanceSize::Four) && all_sizes.contains(&InstanceSize::Three)
+        {
+            return None;
+        }
+        fn dfs(
+            sizes: &[InstanceSize],
+            fixed: &[Placement],
+            placed: &mut Vec<Placement>,
+        ) -> bool {
+            let Some(&size) = sizes.first() else { return true };
+            for &st in size.starts() {
+                let cand = Placement::new(size, st);
+                if fixed.iter().chain(placed.iter()).all(|p| !p.overlaps(&cand)) {
+                    placed.push(cand);
+                    if dfs(&sizes[1..], fixed, placed) {
+                        return true;
+                    }
+                    placed.pop();
+                }
+            }
+            false
+        }
+        let mut placed = Vec::with_capacity(sorted.len());
+        dfs(&sorted, &self.placements, &mut placed).then_some(placed)
+    }
+
+    /// Paper-style label, e.g. `"4-2-1"`, `"7"`, `""` (empty).
+    pub fn label(&self) -> String {
+        self.sizes()
+            .iter()
+            .map(|s| s.slices().to_string())
+            .collect::<Vec<_>>()
+            .join("-")
+    }
+}
+
+impl fmt::Display for Partition {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.is_empty() {
+            write!(f, "(empty)")
+        } else {
+            write!(f, "{}", self.label())
+        }
+    }
+}
+
+/// Enumerate every legal partition (including non-maximal and empty).
+///
+/// Used by the optimizer's configuration enumerator and by property
+/// tests. The set is small (couple hundred placement-level states).
+pub fn all_legal_partitions() -> Vec<Partition> {
+    // All geometrically valid placements.
+    let mut all: Vec<Placement> = Vec::new();
+    for s in InstanceSize::ALL {
+        for &st in s.starts() {
+            all.push(Placement::new(s, st));
+        }
+    }
+    let mut out: Vec<Partition> = Vec::new();
+    // DFS over placements in canonical order; prune on conflicts.
+    fn dfs(
+        all: &[Placement],
+        from: usize,
+        cur: &mut Vec<Placement>,
+        out: &mut Vec<Partition>,
+    ) {
+        out.push(Partition { placements: cur.clone() });
+        for i in from..all.len() {
+            let cand = all[i];
+            let conflict = cur.iter().any(|p| p.overlaps(&cand))
+                || (cand.size == InstanceSize::Three
+                    && cur.iter().any(|p| p.size == InstanceSize::Four))
+                || (cand.size == InstanceSize::Four
+                    && cur.iter().any(|p| p.size == InstanceSize::Three));
+            if conflict {
+                continue;
+            }
+            cur.push(cand);
+            cur.sort();
+            dfs(all, i + 1, cur, out);
+            // restore: remove cand
+            let pos = cur.iter().position(|p| *p == cand).unwrap();
+            cur.remove(pos);
+        }
+    }
+    let mut cur = Vec::new();
+    dfs(&all, 0, &mut cur, &mut out);
+    out.sort();
+    out.dedup();
+    out
+}
+
+/// The *maximal* legal partitions. The paper (§2.1) counts **18** of
+/// these on A100; a test pins that count.
+pub fn maximal_partitions() -> Vec<Partition> {
+    all_legal_partitions().into_iter().filter(|p| p.is_maximal()).collect()
+}
+
+/// Distinct size multisets over all legal partitions (what the optimizer
+/// enumerates configurations from).
+pub fn legal_size_multisets() -> Vec<Vec<InstanceSize>> {
+    let mut v: Vec<Vec<InstanceSize>> =
+        all_legal_partitions().iter().map(|p| p.sizes()).collect();
+    v.sort();
+    v.dedup();
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use InstanceSize::*;
+
+    fn part(sizes: &[InstanceSize]) -> Partition {
+        Partition::from_sizes(sizes).expect("realizable")
+    }
+
+    #[test]
+    fn paper_example_4_2_1_is_legal() {
+        let p = part(&[Four, Two, One]);
+        assert_eq!(p.label(), "4-2-1");
+        assert_eq!(p.used_slices(), 7);
+    }
+
+    #[test]
+    fn no_4_plus_3_hard_rule() {
+        // Geometrically 4g@0 + 3g@4 would fit, but the rule forbids it.
+        assert!(Partition::from_sizes(&[Four, Three]).is_none());
+        let p = part(&[Four]);
+        assert!(p.can_allocate(Three).is_none());
+        let q = part(&[Three]);
+        assert!(q.can_allocate(Four).is_none());
+    }
+
+    #[test]
+    fn three_plus_three_is_legal_and_full() {
+        let p = part(&[Three, Three]);
+        assert_eq!(p.label(), "3-3");
+        // Two 3/7s exhaust all memory slots: nothing else fits (§2.1:
+        // "for a GPU with two running 3/7 instances, allocating a 1/7
+        // instance is prohibited").
+        assert!(p.can_allocate(One).is_none());
+        assert!(p.is_maximal());
+    }
+
+    #[test]
+    fn seven_is_exclusive() {
+        let p = part(&[Seven]);
+        assert!(p.is_maximal());
+        for s in InstanceSize::ALL {
+            assert!(p.can_allocate(s).is_none());
+        }
+    }
+
+    #[test]
+    fn free_slices_do_not_imply_allocatable() {
+        // 3/7@0 + 2/7@4 + 1/7@6: 6 compute slices used, 1 "free", but
+        // memory slots 0-3,4-5,6 leave only slot 7 which has no 1g start.
+        let p = Partition::new(vec![
+            Placement::new(Three, 0),
+            Placement::new(Two, 4),
+            Placement::new(One, 6),
+        ]);
+        assert_eq!(p.used_slices(), 6);
+        assert!(p.can_allocate(One).is_none());
+        assert!(p.is_maximal());
+    }
+
+    #[test]
+    fn exactly_18_maximal_partitions() {
+        let maximal = maximal_partitions();
+        assert_eq!(maximal.len(), 18, "paper §2.1: 18 legal combinations");
+        // Spot-check membership by label.
+        let labels: Vec<String> = maximal.iter().map(|p| p.label()).collect();
+        for want in ["7", "4-2-1", "4-1-1-1", "2-2-2-1", "1-1-1-1-1-1-1", "3-3", "3-2-1", "3-1-1-1"] {
+            assert!(labels.contains(&want.to_string()), "missing {want}: {labels:?}");
+        }
+        assert!(!labels.contains(&"4-3".to_string()));
+    }
+
+    #[test]
+    fn seven_ones_is_legal() {
+        let p = part(&[One, One, One, One, One, One, One]);
+        assert_eq!(p.len(), 7);
+        assert!(p.is_maximal());
+    }
+
+    #[test]
+    fn overlap_rejected() {
+        let r = Partition::try_new(vec![
+            Placement::new(Two, 0),
+            Placement::new(One, 1),
+        ]);
+        assert!(matches!(r, Err(Illegal::Overlap(_, _))));
+    }
+
+    #[test]
+    fn bad_start_rejected() {
+        let r = Partition::try_new(vec![Placement::new(Two, 1)]);
+        assert!(matches!(r, Err(Illegal::BadStart(_))));
+        let r = Partition::try_new(vec![Placement::new(Three, 2)]);
+        assert!(matches!(r, Err(Illegal::BadStart(_))));
+    }
+
+    #[test]
+    fn duplicate_rejected() {
+        let r = Partition::try_new(vec![
+            Placement::new(One, 3),
+            Placement::new(One, 3),
+        ]);
+        assert!(matches!(r, Err(Illegal::Duplicate(_))));
+    }
+
+    #[test]
+    fn remove_then_reallocate_roundtrip() {
+        let p = part(&[Four, Two, One]);
+        let pl = *p
+            .placements()
+            .iter()
+            .find(|pl| pl.size == Two)
+            .unwrap();
+        let q = p.remove(pl).unwrap();
+        assert_eq!(q.len(), 2);
+        let (r, _) = q.allocate(Two).unwrap();
+        assert_eq!(r.sizes(), p.sizes());
+    }
+
+    #[test]
+    fn all_legal_partitions_are_legal_and_dedup() {
+        let all = all_legal_partitions();
+        assert!(all.len() > 50, "expected a rich state space, got {}", all.len());
+        for p in &all {
+            assert!(p.check().is_ok(), "{p}");
+        }
+        let mut seen = std::collections::HashSet::new();
+        for p in &all {
+            assert!(seen.insert(p.clone()), "duplicate {p}");
+        }
+        // Empty partition included.
+        assert!(all.iter().any(|p| p.is_empty()));
+    }
+
+    #[test]
+    fn size_multisets_exclude_4_3() {
+        for ms in legal_size_multisets() {
+            let has4 = ms.contains(&Four);
+            let has3 = ms.contains(&Three);
+            assert!(!(has4 && has3), "{ms:?}");
+            let total: u8 = ms.iter().map(|s| s.slices()).sum();
+            assert!(total <= 7, "{ms:?}");
+        }
+    }
+
+    #[test]
+    fn complete_with_respects_fixed_placements() {
+        // Fixed 2/7@2 (a kept pod); complete with [3]: only 3@4 works.
+        let p = Partition::new(vec![Placement::new(Two, 2)]);
+        let added = p.complete_with(&[Three]).expect("completable");
+        assert_eq!(added, vec![Placement::new(Three, 4)]);
+        // Completing with [4] is impossible (4 only starts at 0, overlaps
+        // memory of the fixed 2/7@2).
+        assert!(p.complete_with(&[InstanceSize::Four]).is_none());
+        // Empty completion trivially succeeds.
+        assert_eq!(p.complete_with(&[]), Some(vec![]));
+    }
+
+    #[test]
+    fn complete_with_enforces_4_3_rule_against_fixed() {
+        let p = Partition::new(vec![Placement::new(Four, 0)]);
+        assert!(p.complete_with(&[Three]).is_none());
+        assert!(p.complete_with(&[Two, One]).is_some());
+    }
+
+    #[test]
+    fn from_sizes_backtracks() {
+        // [3,2,2] is only realizable as 2@0, 2@2, 3@4 — greedy
+        // first-fit placing 3@0 would fail.
+        let p = Partition::from_sizes(&[Three, Two, Two]).expect("realizable");
+        assert_eq!(p.label(), "3-2-2");
+        let three = p.placements().iter().find(|pl| pl.size == Three).unwrap();
+        assert_eq!(three.start, 4);
+    }
+
+    #[test]
+    fn from_sizes_respects_geometry() {
+        // 2-2-2-1 must be realizable (2@0, 2@2, 2@4, 1@6).
+        assert!(Partition::from_sizes(&[Two, Two, Two, One]).is_some());
+        // Four 2/7s are not (only 3 starts).
+        assert!(Partition::from_sizes(&[Two, Two, Two, Two]).is_none());
+        // Three 3/7s are not.
+        assert!(Partition::from_sizes(&[Three, Three, Three]).is_none());
+        // Two 7/7s are not.
+        assert!(Partition::from_sizes(&[Seven, Seven]).is_none());
+    }
+
+    #[test]
+    fn label_sorted_descending() {
+        let p = part(&[One, Four, Two]);
+        assert_eq!(p.label(), "4-2-1");
+    }
+}

@@ -1,0 +1,171 @@
+//! The RMS reconfiguration-legality predicate instantiated for MIG
+//! (paper §3.3).
+//!
+//! ```text
+//! rule_reconf(mset, mset', M_k) ≜
+//!     ∀ m ∈ mset ∪ mset', m is in the same GPU_i
+//!   ∧ M_k|GPU_i ∈ legal A100 partitions
+//!   ∧ M_k|GPU_i \ mset ∪ mset' ∈ legal A100 partitions
+//! ```
+//!
+//! Here the per-GPU restriction `M_k|GPU_i` is a [`Partition`]; callers
+//! at the cluster layer are responsible for the same-GPU check (they
+//! invoke this once per GPU), so this module validates the partition
+//! transition itself.
+
+use super::partition::{Illegal, Partition, Placement};
+
+/// Errors from an attempted reconfiguration.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum ReconfError {
+    #[error("placement {0:?} to remove is not in the current partition")]
+    NotPresent(Placement),
+    #[error("resulting partition is illegal: {0}")]
+    IllegalResult(#[from] Illegal),
+}
+
+/// Apply `remove` then `add` to `current`, validating legality of the
+/// result. Instances not mentioned in `remove` are untouched — this is
+/// MIG's *partial reconfiguration* (§1, §3.2): the reconfigured resource
+/// amount is variable, unlike RMT-style fixed reconfigurable units.
+pub fn reconfigure(
+    current: &Partition,
+    remove: &[Placement],
+    add: &[Placement],
+) -> Result<Partition, ReconfError> {
+    let mut work = current.clone();
+    for &pl in remove {
+        work = work.remove(pl).ok_or(ReconfError::NotPresent(pl))?;
+    }
+    let mut placements = work.placements().to_vec();
+    placements.extend_from_slice(add);
+    Ok(Partition::try_new(placements)?)
+}
+
+/// The boolean predicate form used in the paper's formalism.
+pub fn rule_reconf(current: &Partition, remove: &[Placement], add: &[Placement]) -> bool {
+    reconfigure(current, remove, add).is_ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mig::size::InstanceSize::*;
+
+    #[test]
+    fn merge_two_ones_into_a_two() {
+        // Paper §1: "two of the 7 instances can merge to a 2/7 instance".
+        let p = Partition::from_sizes(&[One, One, One, One, One, One, One]).unwrap();
+        let a = p.placements()[0];
+        let b = p.placements()[1];
+        assert_eq!((a.start, b.start), (0, 1));
+        let next =
+            reconfigure(&p, &[a, b], &[Placement::new(Two, 0)]).expect("merge legal");
+        assert_eq!(next.label(), "2-1-1-1-1-1");
+    }
+
+    #[test]
+    fn partial_reconfig_leaves_others_untouched() {
+        let p = Partition::from_sizes(&[Four, Two, One]).unwrap();
+        let two = *p.placements().iter().find(|pl| pl.size == Two).unwrap();
+        let one = *p.placements().iter().find(|pl| pl.size == One).unwrap();
+        // Swap the 2/7+1/7 for a 3/7 — must keep the 4/7 running... but
+        // the hard rule forbids 4/7+3/7!
+        assert!(!rule_reconf(&p, &[two, one], &[Placement::new(Three, 4)]));
+        // Splitting the 2/7 into two 1/7s is fine and does not touch the
+        // 4/7 or the existing 1/7.
+        let next = reconfigure(
+            &p,
+            &[two],
+            &[Placement::new(One, two.start), Placement::new(One, two.start + 1)],
+        )
+        .expect("split legal");
+        assert_eq!(next.label(), "4-1-1-1");
+        assert!(next.placements().iter().any(|pl| pl.size == Four));
+    }
+
+    #[test]
+    fn removing_missing_instance_rejected() {
+        let p = Partition::from_sizes(&[Seven]).unwrap();
+        let err = reconfigure(&p, &[Placement::new(One, 0)], &[]).unwrap_err();
+        assert!(matches!(err, ReconfError::NotPresent(_)));
+    }
+
+    #[test]
+    fn adding_overlapping_rejected() {
+        let p = Partition::from_sizes(&[Two]).unwrap(); // 2g@0
+        assert!(!rule_reconf(&p, &[], &[Placement::new(One, 1)]));
+        assert!(rule_reconf(&p, &[], &[Placement::new(One, 2)]));
+    }
+
+    #[test]
+    fn full_repartition_via_empty() {
+        let p = Partition::from_sizes(&[Seven]).unwrap();
+        let seven = p.placements()[0];
+        let next = reconfigure(
+            &p,
+            &[seven],
+            &[Placement::new(Three, 0), Placement::new(Three, 4)],
+        )
+        .expect("7 -> 3+3");
+        assert_eq!(next.label(), "3-3");
+    }
+
+    #[test]
+    fn noop_reconfig_is_legal() {
+        let p = Partition::from_sizes(&[Four, Two, One]).unwrap();
+        assert!(rule_reconf(&p, &[], &[]));
+        assert_eq!(reconfigure(&p, &[], &[]).unwrap(), p);
+    }
+
+    #[test]
+    fn property_reconfigure_preserves_legality() {
+        // Randomized: any accepted reconfiguration yields a legal
+        // partition; any rejected one leaves state unchanged.
+        use crate::mig::partition::all_legal_partitions;
+        use crate::util::prop;
+
+        let all = all_legal_partitions();
+        let placements: Vec<Placement> = {
+            let mut v = Vec::new();
+            for s in crate::mig::InstanceSize::ALL {
+                for &st in s.starts() {
+                    v.push(Placement::new(s, st));
+                }
+            }
+            v
+        };
+        prop::check(
+            "reconfigure-legality",
+            300,
+            0xA100,
+            |g| {
+                let part = all[g.rng.below(all.len())].clone();
+                let n_rm = g.size(0, part.len());
+                let rm: Vec<Placement> = g
+                    .rng
+                    .sample_indices(part.len().max(1), n_rm.min(part.len()))
+                    .into_iter()
+                    .map(|i| part.placements()[i])
+                    .collect();
+                let n_add = g.size(0, 3);
+                let add: Vec<Placement> = (0..n_add)
+                    .map(|_| *g.rng.choose(&placements))
+                    .collect();
+                (part, rm, add)
+            },
+            |(part, rm, add)| {
+                match reconfigure(part, rm, add) {
+                    Ok(next) => {
+                        // Result must be a legal Partition: re-validate
+                        // through try_new.
+                        Partition::try_new(next.placements().to_vec())
+                            .map(|_| ())
+                            .map_err(|e| format!("illegal result: {e}"))
+                    }
+                    Err(_) => Ok(()), // rejection is fine
+                }
+            },
+        );
+    }
+}

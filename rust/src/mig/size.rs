@@ -1,0 +1,125 @@
+//! GPU instance sizes (profiles) and their placement geometry.
+
+use std::fmt;
+
+/// An A100 GPU-instance profile, named by its compute-slice share.
+///
+/// The paper calls these "1/7 instance", "2/7 instance", etc. 5/7 and
+/// 6/7 do not exist (§2.1: "resources can only be grouped into specific
+/// sized instances").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum InstanceSize {
+    /// 1g.5gb — 1 compute slice, 1 memory slot.
+    One,
+    /// 2g.10gb — 2 compute slices, 2 memory slots.
+    Two,
+    /// 3g.20gb — 3 compute slices, **4 memory slots** (half the GPU's
+    /// memory; the footprint that makes 3/7+3/7 exactly fill the GPU).
+    Three,
+    /// 4g.20gb — 4 compute slices, 4 memory slots.
+    Four,
+    /// 7g.40gb — the whole GPU.
+    Seven,
+}
+
+impl InstanceSize {
+    /// All sizes, ascending.
+    pub const ALL: [InstanceSize; 5] = [
+        InstanceSize::One,
+        InstanceSize::Two,
+        InstanceSize::Three,
+        InstanceSize::Four,
+        InstanceSize::Seven,
+    ];
+
+    /// Compute slices (the "n" in "n/7 instance").
+    pub fn slices(self) -> u8 {
+        match self {
+            InstanceSize::One => 1,
+            InstanceSize::Two => 2,
+            InstanceSize::Three => 3,
+            InstanceSize::Four => 4,
+            InstanceSize::Seven => 7,
+        }
+    }
+
+    /// Memory-slot footprint (placement width).
+    pub fn mem_slots(self) -> u8 {
+        match self {
+            InstanceSize::One => 1,
+            InstanceSize::Two => 2,
+            InstanceSize::Three => 4,
+            InstanceSize::Four => 4,
+            InstanceSize::Seven => 8,
+        }
+    }
+
+    /// Legal placement starts (memory-slot index), per
+    /// `nvidia-smi mig -lgipp` on A100.
+    pub fn starts(self) -> &'static [u8] {
+        match self {
+            InstanceSize::One => &[0, 1, 2, 3, 4, 5, 6],
+            InstanceSize::Two => &[0, 2, 4],
+            InstanceSize::Three => &[0, 4],
+            InstanceSize::Four => &[0],
+            InstanceSize::Seven => &[0],
+        }
+    }
+
+    /// Parse from the slice count (1, 2, 3, 4, 7).
+    pub fn from_slices(n: u8) -> Option<InstanceSize> {
+        match n {
+            1 => Some(InstanceSize::One),
+            2 => Some(InstanceSize::Two),
+            3 => Some(InstanceSize::Three),
+            4 => Some(InstanceSize::Four),
+            7 => Some(InstanceSize::Seven),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for InstanceSize {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}/7", self.slices())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slices_and_mem_slots() {
+        assert_eq!(InstanceSize::One.slices(), 1);
+        assert_eq!(InstanceSize::Three.slices(), 3);
+        assert_eq!(InstanceSize::Three.mem_slots(), 4); // the key asymmetry
+        assert_eq!(InstanceSize::Four.mem_slots(), 4);
+        assert_eq!(InstanceSize::Seven.mem_slots(), 8);
+    }
+
+    #[test]
+    fn no_5_or_6_profiles() {
+        assert!(InstanceSize::from_slices(5).is_none());
+        assert!(InstanceSize::from_slices(6).is_none());
+        assert!(InstanceSize::from_slices(0).is_none());
+        for s in InstanceSize::ALL {
+            assert_eq!(InstanceSize::from_slices(s.slices()), Some(s));
+        }
+    }
+
+    #[test]
+    fn placement_starts_within_bounds() {
+        for s in InstanceSize::ALL {
+            for &st in s.starts() {
+                assert!(st + s.mem_slots() <= super::super::MEM_SLOTS, "{s} @ {st}");
+            }
+        }
+    }
+
+    #[test]
+    fn display() {
+        assert_eq!(InstanceSize::Three.to_string(), "3/7");
+        assert_eq!(InstanceSize::Seven.to_string(), "7/7");
+    }
+}

@@ -1,0 +1,150 @@
+//! Completion rates (§5.1): per-service progress toward its SLO
+//! throughput. `1.0` = fully satisfied. Utilities (a GPU configuration's
+//! contribution) use the same vector type.
+
+/// A per-service completion/utility vector.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompletionRates {
+    v: Vec<f64>,
+}
+
+/// Satisfaction tolerance: completion ≥ 1 − EPS counts as satisfied
+/// (floating-point accumulation guard; deployments still overshoot).
+pub const EPS: f64 = 1e-9;
+
+impl CompletionRates {
+    pub fn zeros(n: usize) -> CompletionRates {
+        CompletionRates { v: vec![0.0; n] }
+    }
+
+    pub fn from_vec(v: Vec<f64>) -> CompletionRates {
+        CompletionRates { v }
+    }
+
+    pub fn len(&self) -> usize {
+        self.v.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.v.is_empty()
+    }
+
+    pub fn get(&self, i: usize) -> f64 {
+        self.v[i]
+    }
+
+    pub fn set(&mut self, i: usize, x: f64) {
+        self.v[i] = x;
+    }
+
+    pub fn as_slice(&self) -> &[f64] {
+        &self.v
+    }
+
+    /// Elementwise add (utility accumulation).
+    pub fn add(&mut self, other: &CompletionRates) {
+        assert_eq!(self.v.len(), other.v.len());
+        for (a, b) in self.v.iter_mut().zip(&other.v) {
+            *a += b;
+        }
+    }
+
+    /// Elementwise subtract, clamped at 0 (erasing a GPU's utility
+    /// during GA crossover can't take a rate negative).
+    pub fn sub_clamped(&mut self, other: &CompletionRates) {
+        assert_eq!(self.v.len(), other.v.len());
+        for (a, b) in self.v.iter_mut().zip(&other.v) {
+            *a = (*a - b).max(0.0);
+        }
+    }
+
+    /// All services at ≥ 100%?
+    pub fn all_satisfied(&self) -> bool {
+        self.v.iter().all(|&x| x >= 1.0 - EPS)
+    }
+
+    /// Ids of services still below 100%.
+    pub fn unsatisfied(&self) -> Vec<usize> {
+        self.v
+            .iter()
+            .enumerate()
+            .filter(|(_, &x)| x < 1.0 - EPS)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Remaining requirement per service: `max(0, 1 − c_i)` — the
+    /// "service requirements" complementary vector of §5.3.
+    pub fn remaining(&self) -> Vec<f64> {
+        self.v.iter().map(|&x| (1.0 - x).max(0.0)).collect()
+    }
+
+    /// Total remaining requirement (L1 norm of `remaining`).
+    pub fn total_remaining(&self) -> f64 {
+        self.v.iter().map(|&x| (1.0 - x).max(0.0)).sum()
+    }
+
+    /// Bitmask of unsatisfied services (used as the MCTS memoization
+    /// signature for n ≤ 64; larger workloads hash the id list).
+    pub fn unsatisfied_signature(&self) -> u64 {
+        let mut sig = 0u64;
+        for (i, &x) in self.v.iter().enumerate() {
+            if x < 1.0 - EPS {
+                sig ^= 1u64 << (i % 64);
+                // Mix position for n > 64 to reduce collisions.
+                sig = sig.rotate_left(1) ^ (i as u64).wrapping_mul(0x9E37_79B9);
+            }
+        }
+        sig
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_unsatisfied() {
+        let c = CompletionRates::zeros(3);
+        assert!(!c.all_satisfied());
+        assert_eq!(c.unsatisfied(), vec![0, 1, 2]);
+        assert_eq!(c.total_remaining(), 3.0);
+    }
+
+    #[test]
+    fn add_and_satisfy() {
+        let mut c = CompletionRates::zeros(2);
+        c.add(&CompletionRates::from_vec(vec![0.6, 1.2]));
+        assert_eq!(c.unsatisfied(), vec![0]);
+        c.add(&CompletionRates::from_vec(vec![0.4, 0.0]));
+        assert!(c.all_satisfied());
+    }
+
+    #[test]
+    fn sub_clamped_floors_at_zero() {
+        let mut c = CompletionRates::from_vec(vec![0.5, 1.5]);
+        c.sub_clamped(&CompletionRates::from_vec(vec![1.0, 0.5]));
+        assert_eq!(c.as_slice(), &[0.0, 1.0]);
+    }
+
+    #[test]
+    fn remaining_complement() {
+        let c = CompletionRates::from_vec(vec![0.25, 1.5, 1.0]);
+        assert_eq!(c.remaining(), vec![0.75, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn signature_distinguishes_sets() {
+        let a = CompletionRates::from_vec(vec![0.0, 1.0, 0.0]);
+        let b = CompletionRates::from_vec(vec![1.0, 0.0, 0.0]);
+        let c = CompletionRates::from_vec(vec![0.0, 1.0, 0.0]);
+        assert_ne!(a.unsatisfied_signature(), b.unsatisfied_signature());
+        assert_eq!(a.unsatisfied_signature(), c.unsatisfied_signature());
+    }
+
+    #[test]
+    fn epsilon_tolerance() {
+        let c = CompletionRates::from_vec(vec![1.0 - 1e-12]);
+        assert!(c.all_satisfied());
+    }
+}

@@ -1,0 +1,342 @@
+//! The tailored Genetic Algorithm (§5.2).
+//!
+//! * **Chromosome** = a deployment; **genes** = GPU configurations.
+//! * **Crossover** = randomly erase some GPU configurations (dropping
+//!   the completion rates below 100%), then refill by running the *slow
+//!   algorithm* (MCTS) against the residual completion rates. This mixes
+//!   fast- and slow-algorithm solutions and keeps the slow algorithm's
+//!   problem size small — both insights from the paper.
+//! * **Mutation** = swap the services of two same-size instances running
+//!   different services; same-size instances are interchangeable for
+//!   inference (no affinity), so the deployment's completion rates are
+//!   unchanged while the *mix* of services per GPU diversifies, feeding
+//!   better crossovers.
+//! * **Elitism**: originals stay in each round's comparison, so the best
+//!   deployment only improves over time.
+//! * **Stop**: round limit, or no improvement in the last 10 rounds.
+
+use super::comp_rates::CompletionRates;
+use super::gpu_config::{ConfigPool, GpuConfig, ProblemCtx};
+use super::mcts::{Mcts, MctsConfig};
+use super::Deployment;
+use crate::util::rng::Rng;
+
+/// GA tuning knobs.
+#[derive(Debug, Clone)]
+pub struct GaConfig {
+    /// Maximum GA rounds (the paper runs 10 in §8.1).
+    pub rounds: usize,
+    /// Rounds without improvement before stopping (paper: 10).
+    pub patience: usize,
+    /// Survivors selected per round.
+    pub population: usize,
+    /// Crossover offspring per survivor per round.
+    pub crossovers_per_parent: usize,
+    /// Fraction of GPU configs a crossover erases.
+    pub erase_fraction: f64,
+    /// Cap on erased GPUs per crossover — keeps the slow algorithm's
+    /// subproblem small ("the problem size of crossovers is much
+    /// smaller than the original one", §5.2).
+    pub erase_max: usize,
+    /// Instance-pair swaps per mutation.
+    pub mutation_swaps: usize,
+    /// MCTS settings for the slow algorithm inside crossovers.
+    pub mcts: MctsConfig,
+    pub seed: u64,
+}
+
+impl Default for GaConfig {
+    fn default() -> Self {
+        GaConfig {
+            rounds: 10,
+            patience: 10,
+            population: 4,
+            crossovers_per_parent: 2,
+            erase_fraction: 0.25,
+            erase_max: 8,
+            mutation_swaps: 3,
+            mcts: MctsConfig { iterations: 60, ..Default::default() },
+            seed: 0x6A,
+        }
+    }
+}
+
+/// Total over-provisioning of a deployment (sum of completion beyond
+/// 100% per service) — the GA's fitness tie-breaker.
+fn excess(ctx: &ProblemCtx, dep: &Deployment) -> f64 {
+    dep.completion(ctx)
+        .as_slice()
+        .iter()
+        .map(|&c| (c - 1.0).max(0.0))
+        .sum()
+}
+
+/// Per-round record for Fig 12 (GPUs of the best deployment after each
+/// round, starting with round 0 = the seed).
+#[derive(Debug, Clone)]
+pub struct GaHistory {
+    pub best_gpus_per_round: Vec<usize>,
+}
+
+/// The GA engine. Holds the shared config pool so repeated crossovers
+/// don't re-enumerate.
+pub struct GeneticAlgorithm {
+    pub cfg: GaConfig,
+}
+
+impl GeneticAlgorithm {
+    pub fn new(cfg: GaConfig) -> GeneticAlgorithm {
+        GeneticAlgorithm { cfg }
+    }
+
+    /// Evolve from a seed deployment; returns (best deployment, history).
+    pub fn evolve(
+        &self,
+        ctx: &ProblemCtx,
+        pool: &ConfigPool,
+        seed_deployment: Deployment,
+    ) -> (Deployment, GaHistory) {
+        let mut rng = Rng::new(self.cfg.seed);
+        let mcts = Mcts::new(self.cfg.mcts.clone());
+        debug_assert!(seed_deployment.is_valid(ctx));
+
+        let mut population: Vec<Deployment> = vec![seed_deployment];
+        let mut best = population[0].clone();
+        let mut history = GaHistory { best_gpus_per_round: vec![best.num_gpus()] };
+        let mut stale_rounds = 0usize;
+
+        for _round in 0..self.cfg.rounds {
+            let mut offspring: Vec<Deployment> = Vec::new();
+            for parent in &population {
+                for _ in 0..self.cfg.crossovers_per_parent {
+                    // Mutate a copy first (diversify service mixes),
+                    // then cross over.
+                    let mut child = parent.clone();
+                    self.mutate(ctx, &mut child, &mut rng);
+                    if let Some(crossed) = self.crossover(ctx, pool, &child, &mcts, &mut rng)
+                    {
+                        debug_assert!(crossed.is_valid(ctx));
+                        offspring.push(crossed);
+                    }
+                }
+            }
+            // Elitism: originals compete with offspring. Fitness is
+            // (GPUs, total overshoot): among equal-GPU deployments the
+            // tighter one survives, so lateral moves accumulate into
+            // savings in later rounds.
+            population.extend(offspring);
+            population.sort_by(|a, b| {
+                a.num_gpus().cmp(&b.num_gpus()).then(
+                    excess(ctx, a).partial_cmp(&excess(ctx, b)).unwrap(),
+                )
+            });
+            population.dedup_by(|a, b| a == b);
+            population.truncate(self.cfg.population);
+
+            if population[0].num_gpus() < best.num_gpus() {
+                best = population[0].clone();
+                stale_rounds = 0;
+            } else {
+                stale_rounds += 1;
+            }
+            history.best_gpus_per_round.push(best.num_gpus());
+            if stale_rounds >= self.cfg.patience {
+                break;
+            }
+        }
+        (best, history)
+    }
+
+    /// Crossover: erase a random subset of GPU configs, refill with the
+    /// slow algorithm against the residual completion rates.
+    fn crossover(
+        &self,
+        ctx: &ProblemCtx,
+        pool: &ConfigPool,
+        parent: &Deployment,
+        mcts: &Mcts,
+        rng: &mut Rng,
+    ) -> Option<Deployment> {
+        let n = parent.num_gpus();
+        if n == 0 {
+            return None;
+        }
+        let n_erase = ((n as f64 * self.cfg.erase_fraction).round() as usize)
+            .clamp(1, self.cfg.erase_max.min(n));
+        let erased: std::collections::HashSet<usize> =
+            rng.sample_indices(n, n_erase).into_iter().collect();
+        let kept: Vec<GpuConfig> = parent
+            .gpus
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| !erased.contains(i))
+            .map(|(_, g)| g.clone())
+            .collect();
+        let mut comp = CompletionRates::zeros(ctx.workload.len());
+        for g in &kept {
+            comp.add(&g.utility(ctx));
+        }
+        // Cap each completion at its own value (no-op) — refill covers
+        // the gap. The slow algorithm's problem is the erased residual,
+        // which is much smaller than the original (paper insight #2).
+        let refill = mcts.search(ctx, pool, &comp, rng);
+        let mut gpus = kept;
+        gpus.extend(refill);
+        let dep = Deployment { gpus };
+        dep.is_valid(ctx).then_some(dep)
+    }
+
+    /// Mutation: swap services between randomly chosen same-size
+    /// instance pairs running different services. Throughput totals are
+    /// preserved exactly (same size ⇒ same profiled throughput numbers
+    /// apply to the swapped services), so validity is maintained; swaps
+    /// where either service cannot run on the other instance (min-size /
+    /// latency infeasibility) are skipped.
+    fn mutate(&self, ctx: &ProblemCtx, dep: &mut Deployment, rng: &mut Rng) {
+        // Collect (gpu, slot) of all assignments grouped by size.
+        let mut by_size: std::collections::BTreeMap<u8, Vec<(usize, usize)>> =
+            Default::default();
+        for (gi, g) in dep.gpus.iter().enumerate() {
+            for (ai, a) in g.assigns.iter().enumerate() {
+                by_size.entry(a.placement.size.slices()).or_default().push((gi, ai));
+            }
+        }
+        for _ in 0..self.cfg.mutation_swaps {
+            // Pick a size class with at least two instances.
+            let classes: Vec<&Vec<(usize, usize)>> =
+                by_size.values().filter(|v| v.len() >= 2).collect();
+            if classes.is_empty() {
+                return;
+            }
+            let class = classes[rng.below(classes.len())];
+            let i = rng.below(class.len());
+            let j = rng.below(class.len());
+            if i == j {
+                continue;
+            }
+            let (g1, a1) = class[i];
+            let (g2, a2) = class[j];
+            let s1 = dep.gpus[g1].assigns[a1].service;
+            let s2 = dep.gpus[g2].assigns[a2].service;
+            if s1 == s2 {
+                continue;
+            }
+            let size = dep.gpus[g1].assigns[a1].placement.size;
+            debug_assert_eq!(size, dep.gpus[g2].assigns[a2].placement.size);
+            // Both services must be feasible on the swapped instances
+            // (same size, so one check covers both).
+            let (Some((b2, t2)), Some((b1, t1))) =
+                (ctx.effective(s2, size), ctx.effective(s1, size))
+            else {
+                continue;
+            };
+            let x = &mut dep.gpus[g1].assigns[a1];
+            x.service = s2;
+            x.batch = b2;
+            x.throughput = t2;
+            let y = &mut dep.gpus[g2].assigns[a2];
+            y.service = s1;
+            y.batch = b1;
+            y.throughput = t1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer::{Greedy, OptimizerProcedure};
+    use crate::perf::ProfileBank;
+    use crate::spec::{Slo, Workload};
+
+    fn fixture(n: usize, thr: f64) -> (ProfileBank, Workload) {
+        let bank = ProfileBank::synthetic();
+        let models = bank.simulation_models();
+        let services = (0..n)
+            .map(|i| (models[i % models.len()].clone(), Slo::new(thr, 150.0)))
+            .collect();
+        (bank, Workload::new("ga-test", services))
+    }
+
+    #[test]
+    fn evolve_keeps_validity_and_never_regresses() {
+        let (bank, w) = fixture(6, 700.0);
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let pool = ConfigPool::enumerate(&ctx);
+        let seed = Greedy::new().solve(&ctx).unwrap();
+        let seed_gpus = seed.num_gpus();
+        let ga = GeneticAlgorithm::new(GaConfig {
+            rounds: 3,
+            mcts: MctsConfig { iterations: 25, ..Default::default() },
+            ..Default::default()
+        });
+        let (best, history) = ga.evolve(&ctx, &pool, seed);
+        assert!(best.is_valid(&ctx));
+        assert!(best.num_gpus() <= seed_gpus);
+        // Monotone history (elitism).
+        for wpair in history.best_gpus_per_round.windows(2) {
+            assert!(wpair[1] <= wpair[0], "{:?}", history.best_gpus_per_round);
+        }
+        assert_eq!(history.best_gpus_per_round[0], seed_gpus);
+    }
+
+    #[test]
+    fn mutation_preserves_completion() {
+        let (bank, w) = fixture(5, 500.0);
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let mut dep = Greedy::new().solve(&ctx).unwrap();
+        let before = dep.completion(&ctx);
+        let ga = GeneticAlgorithm::new(GaConfig::default());
+        let mut rng = Rng::new(11);
+        for _ in 0..20 {
+            ga.mutate(&ctx, &mut dep, &mut rng);
+        }
+        let after = dep.completion(&ctx);
+        for i in 0..w.len() {
+            assert!(
+                (before.get(i) - after.get(i)).abs() < 1e-9,
+                "service {i}: {} -> {}",
+                before.get(i),
+                after.get(i)
+            );
+        }
+        // GPUs still legal.
+        for g in &dep.gpus {
+            let _ = g.partition();
+        }
+    }
+
+    #[test]
+    fn crossover_produces_valid_child() {
+        let (bank, w) = fixture(4, 600.0);
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let pool = ConfigPool::enumerate(&ctx);
+        let parent = Greedy::new().solve(&ctx).unwrap();
+        let ga = GeneticAlgorithm::new(GaConfig {
+            mcts: MctsConfig { iterations: 20, ..Default::default() },
+            ..Default::default()
+        });
+        let mcts = Mcts::new(ga.cfg.mcts.clone());
+        let mut rng = Rng::new(5);
+        for _ in 0..5 {
+            if let Some(child) = ga.crossover(&ctx, &pool, &parent, &mcts, &mut rng) {
+                assert!(child.is_valid(&ctx));
+            }
+        }
+    }
+
+    #[test]
+    fn history_len_bounded_by_rounds() {
+        let (bank, w) = fixture(3, 400.0);
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let pool = ConfigPool::enumerate(&ctx);
+        let seed = Greedy::new().solve(&ctx).unwrap();
+        let ga = GeneticAlgorithm::new(GaConfig {
+            rounds: 4,
+            mcts: MctsConfig { iterations: 10, ..Default::default() },
+            ..Default::default()
+        });
+        let (_, h) = ga.evolve(&ctx, &pool, seed);
+        assert!(h.best_gpus_per_round.len() <= 5); // seed + <=4 rounds
+    }
+}

@@ -1,0 +1,518 @@
+//! GPU configurations and their utilities (§5.1), plus the
+//! configuration enumerator used by the fast algorithm and MCTS.
+
+use crate::mig::{partition::legal_size_multisets, InstanceSize, Partition};
+use crate::perf::ProfileBank;
+use crate::spec::{ServiceId, Workload};
+
+use super::comp_rates::CompletionRates;
+
+/// One instance within a GPU configuration: a placed instance running a
+/// service at the paper's batch choice (§7: largest batch under the
+/// latency SLO).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct InstanceAssign {
+    pub placement: crate::mig::Placement,
+    pub service: ServiceId,
+    /// Batch size chosen for this instance.
+    pub batch: usize,
+    /// Profiled throughput at that batch, req/s.
+    pub throughput: f64,
+}
+
+/// A single GPU's configuration: a legal partition with every instance
+/// assigned to a service.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuConfig {
+    pub assigns: Vec<InstanceAssign>,
+}
+
+impl GpuConfig {
+    /// The underlying partition.
+    pub fn partition(&self) -> Partition {
+        Partition::new(self.assigns.iter().map(|a| a.placement).collect())
+    }
+
+    /// Paper-style label like `"4:svc0 2:svc1 1:svc1"`.
+    pub fn label(&self) -> String {
+        let mut parts: Vec<String> = self
+            .assigns
+            .iter()
+            .map(|a| format!("{}:svc{}", a.placement.size.slices(), a.service))
+            .collect();
+        parts.sort();
+        parts.reverse();
+        parts.join(" ")
+    }
+
+    /// Utility vector (§5.1): per service, this GPU's throughput share
+    /// of the SLO requirement.
+    pub fn utility(&self, ctx: &ProblemCtx) -> CompletionRates {
+        let mut u = CompletionRates::zeros(ctx.workload.len());
+        for a in &self.assigns {
+            let req = ctx.workload.services[a.service].slo.throughput;
+            u.set(a.service, u.get(a.service) + a.throughput / req);
+        }
+        u
+    }
+
+    /// Distinct services running on this GPU.
+    pub fn services(&self) -> Vec<ServiceId> {
+        let mut v: Vec<ServiceId> = self.assigns.iter().map(|a| a.service).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}
+
+/// Immutable problem context shared by all optimizer procedures:
+/// workload + profile bank + the precomputed effective-throughput table.
+pub struct ProblemCtx<'a> {
+    pub bank: &'a ProfileBank,
+    pub workload: &'a Workload,
+    /// `eff[sid][size_idx]` = Some((batch, throughput)) if the model
+    /// fits on that size under its latency SLO.
+    eff: Vec<[Option<(usize, f64)>; 5]>,
+}
+
+impl<'a> ProblemCtx<'a> {
+    pub fn new(bank: &'a ProfileBank, workload: &'a Workload) -> anyhow::Result<ProblemCtx<'a>> {
+        super::validate_workload(bank, workload)?;
+        let mut eff = Vec::with_capacity(workload.len());
+        for s in &workload.services {
+            let prof = bank.get(&s.model).expect("validated");
+            let mut row: [Option<(usize, f64)>; 5] = [None; 5];
+            for (i, &size) in InstanceSize::ALL.iter().enumerate() {
+                row[i] = prof
+                    .best_batch(size, s.slo.latency_ms)
+                    .map(|(b, p)| (b, p.throughput));
+            }
+            eff.push(row);
+        }
+        Ok(ProblemCtx { bank, workload, eff })
+    }
+
+    #[inline]
+    fn size_idx(size: InstanceSize) -> usize {
+        InstanceSize::ALL.iter().position(|&s| s == size).unwrap()
+    }
+
+    /// (batch, throughput) for `service` on `size`, or None if the model
+    /// does not fit / cannot meet its latency SLO there.
+    #[inline]
+    pub fn effective(&self, service: ServiceId, size: InstanceSize) -> Option<(usize, f64)> {
+        self.eff[service][Self::size_idx(size)]
+    }
+
+    /// Utility of one instance of `size` running `service`.
+    #[inline]
+    pub fn instance_utility(&self, service: ServiceId, size: InstanceSize) -> Option<f64> {
+        self.effective(service, size)
+            .map(|(_, thr)| thr / self.workload.services[service].slo.throughput)
+    }
+
+    /// Build an [`InstanceAssign`] for a placement (must be feasible).
+    pub fn assign(
+        &self,
+        placement: crate::mig::Placement,
+        service: ServiceId,
+    ) -> Option<InstanceAssign> {
+        let (batch, throughput) = self.effective(service, placement.size)?;
+        Some(InstanceAssign { placement, service, batch, throughput })
+    }
+
+    /// Materialize a GPU config from a (size, service) multiset.
+    /// Returns None if the sizes are not realizable as a legal partition
+    /// or some service is infeasible on its size.
+    pub fn config_from_pairs(
+        &self,
+        pairs: &[(InstanceSize, ServiceId)],
+    ) -> Option<GpuConfig> {
+        let mut sorted = pairs.to_vec();
+        // Deterministic: big instances first, then by service id.
+        sorted.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+        let sizes: Vec<InstanceSize> = sorted.iter().map(|(s, _)| *s).collect();
+        let part = Partition::from_sizes(&sizes)?;
+        // from_sizes places descending; zip placements (desc) to pairs.
+        let mut placements = part.placements().to_vec();
+        placements.sort_by(|a, b| b.size.cmp(&a.size).then(a.start.cmp(&b.start)));
+        let mut assigns = Vec::with_capacity(sorted.len());
+        for (pl, (sz, svc)) in placements.iter().zip(&sorted) {
+            debug_assert_eq!(pl.size, *sz);
+            assigns.push(self.assign(*pl, *svc)?);
+        }
+        Some(GpuConfig { assigns })
+    }
+}
+
+/// A pre-enumerated configuration with its sparse utility, used by the
+/// fast algorithm and MCTS so scoring is O(#services-in-config).
+#[derive(Debug, Clone)]
+pub struct PooledConfig {
+    pub pairs: Vec<(InstanceSize, ServiceId)>,
+    /// (service, utility) — at most `max_mix` entries.
+    pub sparse_util: Vec<(ServiceId, f64)>,
+}
+
+impl PooledConfig {
+    /// Heuristic score against the current remaining-requirement vector
+    /// (§5.3): `Σ (1 − c_i) · u_i`, with the utility of already
+    /// satisfied services clipped so over-provisioning scores 0.
+    #[inline]
+    pub fn score(&self, remaining: &[f64]) -> f64 {
+        self.sparse_util
+            .iter()
+            .map(|&(sid, u)| remaining[sid] * u)
+            .sum()
+    }
+
+    /// Clipped score: utility beyond the remaining requirement does not
+    /// count (avoids favoring huge overshoot near the end).
+    #[inline]
+    pub fn score_clipped(&self, remaining: &[f64]) -> f64 {
+        self.sparse_util
+            .iter()
+            .map(|&(sid, u)| remaining[sid] * u.min(remaining[sid]))
+            .sum()
+    }
+}
+
+/// The enumerated configuration pool (§5.1 "the utility space for all
+/// possible GPU configurations is enormous"; the fast algorithm works
+/// over configs mixing at most two services, App. A.1).
+pub struct ConfigPool {
+    pub configs: Vec<PooledConfig>,
+    /// configs touching each service (for MCTS's per-service cut).
+    by_service: Vec<Vec<u32>>,
+}
+
+impl ConfigPool {
+    /// Enumerate all configs over legal size multisets mixing at most
+    /// two services.
+    pub fn enumerate(ctx: &ProblemCtx) -> ConfigPool {
+        let n = ctx.workload.len();
+        let multisets: Vec<Vec<InstanceSize>> = legal_size_multisets()
+            .into_iter()
+            .filter(|m| !m.is_empty())
+            .collect();
+        let mut configs: Vec<PooledConfig> = Vec::new();
+
+        // Feasibility matrix: service x size.
+        let fits = |sid: ServiceId, size: InstanceSize| ctx.effective(sid, size).is_some();
+
+        for ms in &multisets {
+            // Distinct sizes with counts, descending.
+            let mut counts: Vec<(InstanceSize, usize)> = Vec::new();
+            for &s in ms {
+                match counts.iter_mut().find(|(cs, _)| *cs == s) {
+                    Some((_, c)) => *c += 1,
+                    None => counts.push((s, 1)),
+                }
+            }
+            // Single-service configs.
+            for a in 0..n {
+                if ms.iter().all(|&s| fits(a, s)) {
+                    let pairs: Vec<(InstanceSize, ServiceId)> =
+                        ms.iter().map(|&s| (s, a)).collect();
+                    push_config(ctx, &mut configs, pairs);
+                }
+            }
+            // Two-service splits: for each unordered pair, distribute the
+            // count of every distinct size between a and b.
+            for a in 0..n {
+                for b in (a + 1)..n {
+                    // Enumerate per-size splits via mixed-radix counter.
+                    let radix: Vec<usize> = counts.iter().map(|(_, c)| c + 1).collect();
+                    let mut digit = vec![0usize; counts.len()];
+                    'outer: loop {
+                        // digits = instances of each size going to `a`.
+                        let a_total: usize = digit.iter().sum();
+                        let b_total: usize =
+                            counts.iter().map(|(_, c)| *c).sum::<usize>() - a_total;
+                        if a_total > 0 && b_total > 0 {
+                            let mut ok = true;
+                            let mut pairs = Vec::with_capacity(ms.len());
+                            for (di, &(size, c)) in counts.iter().enumerate() {
+                                let ka = digit[di];
+                                if ka > 0 && !fits(a, size) {
+                                    ok = false;
+                                    break;
+                                }
+                                if c - ka > 0 && !fits(b, size) {
+                                    ok = false;
+                                    break;
+                                }
+                                for _ in 0..ka {
+                                    pairs.push((size, a));
+                                }
+                                for _ in 0..(c - ka) {
+                                    pairs.push((size, b));
+                                }
+                            }
+                            if ok {
+                                push_config(ctx, &mut configs, pairs);
+                            }
+                        }
+                        // Increment mixed-radix counter.
+                        for i in 0..digit.len() {
+                            digit[i] += 1;
+                            if digit[i] < radix[i] {
+                                continue 'outer;
+                            }
+                            digit[i] = 0;
+                        }
+                        break;
+                    }
+                }
+            }
+        }
+
+        let mut by_service = vec![Vec::new(); n];
+        for (i, c) in configs.iter().enumerate() {
+            for &(sid, _) in &c.sparse_util {
+                by_service[sid].push(i as u32);
+            }
+        }
+        ConfigPool { configs, by_service }
+    }
+
+    pub fn len(&self) -> usize {
+        self.configs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.configs.is_empty()
+    }
+
+    /// Config indices whose utility touches `service`.
+    pub fn touching(&self, service: ServiceId) -> &[u32] {
+        &self.by_service[service]
+    }
+
+    /// Best config by clipped heuristic score, or None if every config
+    /// scores 0 (i.e. everything satisfied).
+    pub fn best_by_score(&self, remaining: &[f64]) -> Option<usize> {
+        let mut best = None;
+        let mut best_score = 0.0;
+        for (i, c) in self.configs.iter().enumerate() {
+            let s = c.score_clipped(remaining);
+            if s > best_score {
+                best_score = s;
+                best = Some(i);
+            }
+        }
+        best
+    }
+
+    /// Materialize pool entry `i` as a [`GpuConfig`].
+    pub fn materialize(&self, ctx: &ProblemCtx, i: usize) -> GpuConfig {
+        ctx.config_from_pairs(&self.configs[i].pairs)
+            .expect("pooled configs are feasible by construction")
+    }
+}
+
+fn push_config(
+    ctx: &ProblemCtx,
+    configs: &mut Vec<PooledConfig>,
+    pairs: Vec<(InstanceSize, ServiceId)>,
+) {
+    let mut sparse: Vec<(ServiceId, f64)> = Vec::with_capacity(2);
+    for &(size, sid) in &pairs {
+        let u = match ctx.instance_utility(sid, size) {
+            Some(u) => u,
+            None => return, // infeasible pair; skip whole config
+        };
+        match sparse.iter_mut().find(|(s, _)| *s == sid) {
+            Some((_, acc)) => *acc += u,
+            None => sparse.push((sid, u)),
+        }
+    }
+    configs.push(PooledConfig { pairs, sparse_util: sparse });
+}
+
+/// Endgame packing (App. A.1 lines 18–22): when services are almost
+/// satisfied, build ONE GPU config mixing arbitrarily many services by
+/// filling instances greedily with the best marginal (service, size).
+pub fn pack_residual(ctx: &ProblemCtx, completion: &CompletionRates) -> Option<GpuConfig> {
+    let mut remaining = completion.remaining();
+    if remaining.iter().all(|&r| r <= 0.0) {
+        return None;
+    }
+    let mut partition = Partition::empty();
+    let mut pairs: Vec<(InstanceSize, ServiceId)> = Vec::new();
+    loop {
+        // Best (service, size) allocatable now, by clipped marginal score.
+        let mut best: Option<(f64, InstanceSize, ServiceId)> = None;
+        for &size in &InstanceSize::ALL {
+            if partition.can_allocate(size).is_none() {
+                continue;
+            }
+            for sid in 0..ctx.workload.len() {
+                if remaining[sid] <= 0.0 {
+                    continue;
+                }
+                if let Some(u) = ctx.instance_utility(sid, size) {
+                    // Marginal value clipped at the remaining need, per
+                    // slice used (prefer small instances that cover the
+                    // residual tightly).
+                    let value = (u.min(remaining[sid]) * remaining[sid])
+                        / size.slices() as f64;
+                    if best.map(|(b, _, _)| value > b).unwrap_or(true) {
+                        best = Some((value, size, sid));
+                    }
+                }
+            }
+        }
+        let Some((_, size, sid)) = best else { break };
+        let (next, _) = partition.allocate(size).expect("checked allocatable");
+        partition = next;
+        pairs.push((size, sid));
+        let u = ctx.instance_utility(sid, size).unwrap();
+        remaining[sid] = (remaining[sid] - u).max(0.0);
+        if remaining.iter().all(|&r| r <= 0.0) {
+            break;
+        }
+    }
+    if pairs.is_empty() {
+        None
+    } else {
+        ctx.config_from_pairs(&pairs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perf::ProfileBank;
+    use crate::spec::{Slo, Workload};
+
+    fn setup() -> (ProfileBank, Workload) {
+        let bank = ProfileBank::synthetic();
+        let w = Workload::new(
+            "t",
+            vec![
+                ("densenet121".to_string(), Slo::new(2000.0, 100.0)),
+                ("xlnet-large-cased".to_string(), Slo::new(100.0, 400.0)),
+                ("resnet50".to_string(), Slo::new(300.0, 150.0)),
+            ],
+        );
+        (bank, w)
+    }
+
+    #[test]
+    fn ctx_effective_respects_latency() {
+        let (bank, w) = setup();
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        for sid in 0..w.len() {
+            for &size in &InstanceSize::ALL {
+                if let Some((batch, thr)) = ctx.effective(sid, size) {
+                    let prof = bank.get(&w.services[sid].model).unwrap();
+                    let lat = prof.latency(size, batch).unwrap();
+                    assert!(lat <= w.services[sid].slo.latency_ms);
+                    assert!(thr > 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn config_from_pairs_materializes_legal_partition() {
+        let (bank, w) = setup();
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let cfg = ctx
+            .config_from_pairs(&[
+                (InstanceSize::Four, 0),
+                (InstanceSize::Two, 1),
+                (InstanceSize::One, 0),
+            ])
+            .unwrap();
+        assert_eq!(cfg.assigns.len(), 3);
+        let part = cfg.partition(); // panics if illegal
+        assert_eq!(part.label(), "4-2-1");
+        assert_eq!(cfg.services(), vec![0, 1]);
+    }
+
+    #[test]
+    fn config_from_pairs_rejects_4_plus_3() {
+        let (bank, w) = setup();
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        assert!(ctx
+            .config_from_pairs(&[(InstanceSize::Four, 0), (InstanceSize::Three, 1)])
+            .is_none());
+    }
+
+    #[test]
+    fn utility_sums_instance_contributions() {
+        let (bank, w) = setup();
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let cfg = ctx
+            .config_from_pairs(&[(InstanceSize::One, 0), (InstanceSize::One, 0)])
+            .unwrap();
+        let u = cfg.utility(&ctx);
+        let single = ctx.instance_utility(0, InstanceSize::One).unwrap();
+        assert!((u.get(0) - 2.0 * single).abs() < 1e-12);
+        assert_eq!(u.get(1), 0.0);
+    }
+
+    #[test]
+    fn pool_enumerates_singles_and_pairs() {
+        let (bank, w) = setup();
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let pool = ConfigPool::enumerate(&ctx);
+        assert!(pool.len() > 100, "got {}", pool.len());
+        // Every config mixes at most two services and is feasible.
+        for c in &pool.configs {
+            assert!(c.sparse_util.len() <= 2);
+            let total: u8 = c.pairs.iter().map(|(s, _)| s.slices()).sum();
+            assert!(total <= 7);
+        }
+        // by_service covers every service.
+        for sid in 0..w.len() {
+            assert!(!pool.touching(sid).is_empty(), "service {sid}");
+        }
+    }
+
+    #[test]
+    fn pool_materialize_consistent_with_sparse_util() {
+        let (bank, w) = setup();
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let pool = ConfigPool::enumerate(&ctx);
+        for i in (0..pool.len()).step_by(17) {
+            let cfg = pool.materialize(&ctx, i);
+            let dense = cfg.utility(&ctx);
+            for &(sid, u) in &pool.configs[i].sparse_util {
+                assert!((dense.get(sid) - u).abs() < 1e-9, "config {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn score_zero_when_all_satisfied() {
+        let (bank, w) = setup();
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let pool = ConfigPool::enumerate(&ctx);
+        let remaining = vec![0.0; w.len()];
+        assert!(pool.best_by_score(&remaining).is_none());
+    }
+
+    #[test]
+    fn pack_residual_covers_small_remainder() {
+        let (bank, w) = setup();
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        // Almost done: tiny residuals on all three services.
+        let comp = CompletionRates::from_vec(vec![0.98, 0.95, 0.97]);
+        let cfg = pack_residual(&ctx, &comp).expect("some config");
+        assert!(cfg.services().len() >= 2, "should mix services: {}", cfg.label());
+        let mut after = comp.clone();
+        after.add(&cfg.utility(&ctx));
+        assert!(after.all_satisfied(), "residual covered: {:?}", after);
+    }
+
+    #[test]
+    fn pack_residual_none_when_satisfied() {
+        let (bank, w) = setup();
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let comp = CompletionRates::from_vec(vec![1.0, 1.2, 1.0]);
+        assert!(pack_residual(&ctx, &comp).is_none());
+    }
+}

@@ -1,0 +1,201 @@
+//! The fast algorithm: heuristic greedy (§5.3, Appendix A.1).
+//!
+//! Ranks the enumerated ≤2-service GPU configurations by heuristic score
+//! against the current completion rates, repeatedly takes the best one,
+//! and — once services are almost satisfied — switches to configs that
+//! mix more services per GPU (App. A.1 lines 18–22, realized by
+//! [`super::gpu_config::pack_residual`]).
+//!
+//! Complexity is O(n²·m) as the paper states: the pool is O(n²) configs
+//! (service pairs × a constant number of size multisets/splits), scored
+//! once per emitted GPU (m GPUs).
+
+use super::comp_rates::CompletionRates;
+use super::gpu_config::{pack_residual, ConfigPool, GpuConfig, ProblemCtx};
+use super::OptimizerProcedure;
+
+/// Safety cap on emitted GPUs (guards against pathological inputs).
+const MAX_GPUS: usize = 100_000;
+
+/// The heuristic greedy optimizer procedure.
+pub struct Greedy {
+    /// Reuse a pre-enumerated pool across calls (the GA calls the
+    /// procedures many times on the same problem).
+    pool: Option<ConfigPool>,
+}
+
+impl Greedy {
+    pub fn new() -> Greedy {
+        Greedy { pool: None }
+    }
+
+    /// Pre-seed with an existing pool (shared with MCTS).
+    pub fn with_pool(pool: ConfigPool) -> Greedy {
+        Greedy { pool: Some(pool) }
+    }
+
+    fn pool(&mut self, ctx: &ProblemCtx) -> &ConfigPool {
+        if self.pool.is_none() {
+            self.pool = Some(ConfigPool::enumerate(ctx));
+        }
+        self.pool.as_ref().unwrap()
+    }
+}
+
+impl Default for Greedy {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl OptimizerProcedure for Greedy {
+    fn name(&self) -> &str {
+        "greedy"
+    }
+
+    fn run(
+        &mut self,
+        ctx: &ProblemCtx,
+        completion: &CompletionRates,
+    ) -> anyhow::Result<Vec<GpuConfig>> {
+        let pool = {
+            // Borrow dance: enumerate once, then use immutably.
+            self.pool(ctx);
+            self.pool.as_ref().unwrap()
+        };
+        let mut comp = completion.clone();
+        let mut out: Vec<GpuConfig> = Vec::new();
+
+        while !comp.all_satisfied() {
+            if out.len() >= MAX_GPUS {
+                anyhow::bail!("greedy exceeded {MAX_GPUS} GPUs; unsatisfiable SLOs?");
+            }
+            let remaining = comp.remaining();
+
+            // Endgame (App. A.1 lines 18–22): if a single multi-service
+            // GPU can finish the job, prefer it over pool configs.
+            if let Some(cfg) = pack_residual(ctx, &comp) {
+                let mut after = comp.clone();
+                after.add(&cfg.utility(ctx));
+                if after.all_satisfied() {
+                    out.push(cfg);
+                    break;
+                }
+            }
+
+            let best = pool
+                .best_by_score(&remaining)
+                .ok_or_else(|| anyhow::anyhow!("no config scores > 0 but SLOs unmet"))?;
+            let cfg = pool.materialize(ctx, best);
+            comp.add(&cfg.utility(ctx));
+            out.push(cfg);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer::Deployment;
+    use crate::perf::ProfileBank;
+    use crate::spec::{Slo, Workload};
+
+    fn fixture(n_services: usize, thr: f64) -> (ProfileBank, Workload) {
+        let bank = ProfileBank::synthetic();
+        let models = bank.simulation_models();
+        let services = (0..n_services)
+            .map(|i| (models[i % models.len()].clone(), Slo::new(thr, 150.0)))
+            .collect();
+        (bank, Workload::new("greedy-test", services))
+    }
+
+    #[test]
+    fn solves_single_service() {
+        let (bank, w) = fixture(1, 500.0);
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let dep = Greedy::new().solve(&ctx).unwrap();
+        assert!(dep.is_valid(&ctx));
+        assert!(dep.num_gpus() >= 1);
+    }
+
+    #[test]
+    fn solves_multi_service_validly() {
+        let (bank, w) = fixture(8, 800.0);
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let dep = Greedy::new().solve(&ctx).unwrap();
+        assert!(dep.is_valid(&ctx), "completion: {:?}", dep.completion(&ctx));
+        // Each GPU config must be a legal partition (materialize checks).
+        for g in &dep.gpus {
+            let _ = g.partition();
+        }
+    }
+
+    #[test]
+    fn resumes_from_partial_completion() {
+        let (bank, w) = fixture(4, 600.0);
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let mut greedy = Greedy::new();
+        let full = greedy.solve(&ctx).unwrap();
+        // Half-done: take the first half of the full deployment.
+        let half: Vec<GpuConfig> = full.gpus[..full.num_gpus() / 2].to_vec();
+        let mut comp = CompletionRates::zeros(w.len());
+        for g in &half {
+            comp.add(&g.utility(&ctx));
+        }
+        let rest = greedy.run(&ctx, &comp).unwrap();
+        let dep = Deployment { gpus: half.into_iter().chain(rest).collect() };
+        assert!(dep.is_valid(&ctx));
+    }
+
+    #[test]
+    fn noop_when_already_satisfied() {
+        let (bank, w) = fixture(2, 100.0);
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let done = CompletionRates::from_vec(vec![1.0, 1.1]);
+        let configs = Greedy::new().run(&ctx, &done).unwrap();
+        assert!(configs.is_empty());
+    }
+
+    #[test]
+    fn beats_naive_whole_gpu_allocation() {
+        // Greedy with heterogeneous partitions should use no more GPUs
+        // than "every service gets dedicated 7/7 GPUs" (A100-7/7-style).
+        let (bank, w) = fixture(6, 700.0);
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let dep = Greedy::new().solve(&ctx).unwrap();
+        let naive: usize = w
+            .services
+            .iter()
+            .map(|s| {
+                let thr = ctx
+                    .effective(s.id, crate::mig::InstanceSize::Seven)
+                    .map(|(_, t)| t)
+                    .unwrap_or(1.0);
+                (s.slo.throughput / thr).ceil() as usize
+            })
+            .sum();
+        assert!(
+            dep.num_gpus() <= naive,
+            "greedy {} > naive {naive}",
+            dep.num_gpus()
+        );
+    }
+
+    #[test]
+    fn respects_latency_via_batches() {
+        // All emitted assignments carry batches whose profiled latency
+        // fits the SLO.
+        let (bank, w) = fixture(5, 400.0);
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let dep = Greedy::new().solve(&ctx).unwrap();
+        for g in &dep.gpus {
+            for a in &g.assigns {
+                let svc = &w.services[a.service];
+                let prof = bank.get(&svc.model).unwrap();
+                let lat = prof.latency(a.placement.size, a.batch).unwrap();
+                assert!(lat <= svc.slo.latency_ms + 1e-9);
+            }
+        }
+    }
+}

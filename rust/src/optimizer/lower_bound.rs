@@ -1,0 +1,110 @@
+//! The rule-free GPU lower bound (§8.1):
+//!
+//! "we calculate an approximate optimality — a lower bound of GPU usage
+//! by *ignoring* MIG's hardware constraints ... assume that any
+//! combination of instances is possible, and the minimal number of GPUs
+//! can be calculated by always using the most cost-efficient instance."
+
+use super::gpu_config::ProblemCtx;
+use crate::mig::InstanceSize;
+
+/// Fractional compute slices needed by one service when it always runs
+/// on its most slice-efficient instance size (under its latency SLO).
+pub fn slices_needed(ctx: &ProblemCtx, service: usize) -> Option<f64> {
+    let slo = ctx.workload.services[service].slo;
+    let best_per_slice = InstanceSize::ALL
+        .iter()
+        .filter_map(|&s| {
+            ctx.effective(service, s)
+                .map(|(_, thr)| thr / s.slices() as f64)
+        })
+        .fold(None, |acc: Option<f64>, x| {
+            Some(acc.map(|a| a.max(x)).unwrap_or(x))
+        })?;
+    Some(slo.throughput / best_per_slice)
+}
+
+/// The lower bound on GPUs for the whole workload.
+pub fn lower_bound_gpus(ctx: &ProblemCtx) -> usize {
+    let total: f64 = (0..ctx.workload.len())
+        .map(|s| slices_needed(ctx, s).expect("workload validated"))
+        .sum();
+    (total / 7.0).ceil() as usize
+}
+
+/// Lower bound on *additional* GPUs given current remaining needs
+/// (used as the branch-and-bound admissible heuristic in
+/// [`super::exact`]).
+pub fn lower_bound_remaining(ctx: &ProblemCtx, remaining: &[f64]) -> usize {
+    let total: f64 = (0..ctx.workload.len())
+        .map(|s| {
+            if remaining[s] <= 0.0 {
+                0.0
+            } else {
+                slices_needed(ctx, s).expect("validated") * remaining[s]
+            }
+        })
+        .sum();
+    (total / 7.0).ceil() as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer::{Greedy, OptimizerProcedure};
+    use crate::perf::ProfileBank;
+    use crate::spec::{Slo, Workload};
+
+    fn fixture() -> (ProfileBank, Workload) {
+        let bank = ProfileBank::synthetic();
+        let models = bank.simulation_models();
+        let services = (0..6)
+            .map(|i| (models[i].clone(), Slo::new(900.0, 150.0)))
+            .collect();
+        (bank, Workload::new("lb", services))
+    }
+
+    #[test]
+    fn lower_bound_is_a_true_bound() {
+        let (bank, w) = fixture();
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let lb = lower_bound_gpus(&ctx);
+        let dep = Greedy::new().solve(&ctx).unwrap();
+        assert!(lb >= 1);
+        assert!(
+            dep.num_gpus() >= lb,
+            "greedy {} below lower bound {lb}",
+            dep.num_gpus()
+        );
+    }
+
+    #[test]
+    fn remaining_bound_shrinks_with_progress() {
+        let (bank, w) = fixture();
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let all = vec![1.0; w.len()];
+        let half = vec![0.5; w.len()];
+        let none = vec![0.0; w.len()];
+        assert_eq!(lower_bound_remaining(&ctx, &all), lower_bound_gpus(&ctx));
+        assert!(lower_bound_remaining(&ctx, &half) <= lower_bound_remaining(&ctx, &all));
+        assert_eq!(lower_bound_remaining(&ctx, &none), 0);
+    }
+
+    #[test]
+    fn slices_scale_with_throughput() {
+        let bank = ProfileBank::synthetic();
+        let w1 = Workload::new(
+            "a",
+            vec![("resnet50".to_string(), Slo::new(100.0, 150.0))],
+        );
+        let w2 = Workload::new(
+            "b",
+            vec![("resnet50".to_string(), Slo::new(200.0, 150.0))],
+        );
+        let c1 = ProblemCtx::new(&bank, &w1).unwrap();
+        let c2 = ProblemCtx::new(&bank, &w2).unwrap();
+        let s1 = slices_needed(&c1, 0).unwrap();
+        let s2 = slices_needed(&c2, 0).unwrap();
+        assert!((s2 / s1 - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,127 @@
+//! The optimizer (paper §5): find a *deployment* — GPU partitions plus
+//! service assignments — that satisfies every SLO with as few GPUs as
+//! possible.
+//!
+//! Components, mirroring the paper's pipeline (Fig 6):
+//!
+//! * [`comp_rates`] — completion-rate vectors (§5.1);
+//! * [`gpu_config`] — GPU configurations, utilities, and the
+//!   configuration enumerator (§5.1);
+//! * [`score`] — the heuristic score (§5.3);
+//! * [`greedy`] — the **fast algorithm** (Appendix A.1);
+//! * [`mcts`] — the **slow algorithm**, customized MCTS (Appendix A.2);
+//! * [`ga`] — the tailored Genetic Algorithm connecting them (§5.2);
+//! * [`two_phase`] — the end-to-end two-phase pipeline (§5.2);
+//! * [`lower_bound`] — the rule-free GPU lower bound (§8.1);
+//! * [`exact`] — in-tree branch-and-bound for small instances (the
+//!   paper's Z3/MIP comparison stand-in; used by tests).
+
+pub mod comp_rates;
+pub mod exact;
+pub mod ga;
+pub mod gpu_config;
+pub mod greedy;
+pub mod lower_bound;
+pub mod mcts;
+pub mod score;
+pub mod two_phase;
+
+pub use comp_rates::CompletionRates;
+pub use ga::{GaConfig, GeneticAlgorithm};
+pub use gpu_config::{ConfigPool, GpuConfig, InstanceAssign, ProblemCtx};
+pub use greedy::Greedy;
+pub use lower_bound::lower_bound_gpus;
+pub use mcts::{Mcts, MctsConfig};
+pub use two_phase::{TwoPhase, TwoPhaseConfig};
+
+use crate::spec::Workload;
+
+/// A deployment: one [`GpuConfig`] per GPU in use (§4).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Deployment {
+    pub gpus: Vec<GpuConfig>,
+}
+
+impl Deployment {
+    pub fn empty() -> Deployment {
+        Deployment { gpus: Vec::new() }
+    }
+
+    /// Number of GPUs used — the paper's objective.
+    pub fn num_gpus(&self) -> usize {
+        self.gpus.len()
+    }
+
+    /// Aggregate completion rates of this deployment under `ctx`.
+    pub fn completion(&self, ctx: &ProblemCtx) -> CompletionRates {
+        let mut c = CompletionRates::zeros(ctx.workload.len());
+        for g in &self.gpus {
+            c.add(&g.utility(ctx));
+        }
+        c
+    }
+
+    /// Is every SLO satisfied? (completion ≥ 100% per service; latency
+    /// feasibility is enforced at construction time by [`ProblemCtx`]).
+    pub fn is_valid(&self, ctx: &ProblemCtx) -> bool {
+        self.completion(ctx).all_satisfied()
+    }
+
+    /// Total throughput delivered per service, req/s.
+    pub fn throughput_per_service(&self, ctx: &ProblemCtx) -> Vec<f64> {
+        let c = self.completion(ctx);
+        (0..ctx.workload.len())
+            .map(|i| c.get(i) * ctx.workload.services[i].slo.throughput)
+            .collect()
+    }
+}
+
+/// An *optimizer procedure* (§5.1): given the problem context and
+/// current completion rates, produce GPU configurations whose summed
+/// utility closes the remaining gap to all-100%.
+///
+/// Both the fast and the slow algorithm implement this trait, and the
+/// GA's crossover invokes the slow one against partial completion
+/// rates — "MIG-Serving can easily switch to other algorithms by
+/// implementing them under the same abstract class" (§7).
+pub trait OptimizerProcedure {
+    fn name(&self) -> &str;
+
+    /// Produce configs so that `completion + Σ utility ≥ 1` per service.
+    fn run(
+        &mut self,
+        ctx: &ProblemCtx,
+        completion: &CompletionRates,
+    ) -> anyhow::Result<Vec<GpuConfig>>;
+
+    /// Convenience: solve from scratch into a deployment.
+    fn solve(&mut self, ctx: &ProblemCtx) -> anyhow::Result<Deployment> {
+        let zero = CompletionRates::zeros(ctx.workload.len());
+        Ok(Deployment { gpus: self.run(ctx, &zero)? })
+    }
+}
+
+/// Check a workload is servable at all (every model exists in the bank
+/// and has at least one latency-feasible instance size).
+pub fn validate_workload(
+    bank: &crate::perf::ProfileBank,
+    workload: &Workload,
+) -> anyhow::Result<()> {
+    for s in &workload.services {
+        let prof = bank
+            .get(&s.model)
+            .ok_or_else(|| anyhow::anyhow!("service {}: unknown model {}", s.id, s.model))?;
+        let feasible = crate::mig::InstanceSize::ALL
+            .iter()
+            .any(|&sz| prof.effective_throughput(sz, s.slo.latency_ms).is_some());
+        if !feasible {
+            anyhow::bail!(
+                "service {} ({}): no instance size meets the {}ms latency SLO",
+                s.id,
+                s.model,
+                s.slo.latency_ms
+            );
+        }
+    }
+    Ok(())
+}

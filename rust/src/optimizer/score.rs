@@ -1,0 +1,112 @@
+//! The heuristic score (§5.3):
+//!
+//! ```text
+//! score(config) = Σ_i (1 − c_i) · u_i
+//! ```
+//!
+//! balancing a configuration's raw throughput against the current
+//! per-service need — "if all services that config_a contributes to are
+//! fully satisfied, then the throughputs don't count and config_a's
+//! score is 0."
+//!
+//! The scoring kernels live on [`super::gpu_config::PooledConfig`] (the
+//! hot path works on sparse utilities); this module holds the dense
+//! reference implementation and the score-equivalence tests.
+
+use super::comp_rates::CompletionRates;
+use super::gpu_config::{GpuConfig, ProblemCtx};
+
+/// Dense reference scoring of a materialized config.
+pub fn score_config(ctx: &ProblemCtx, cfg: &GpuConfig, completion: &CompletionRates) -> f64 {
+    let u = cfg.utility(ctx);
+    completion
+        .remaining()
+        .iter()
+        .zip(u.as_slice())
+        .map(|(r, ui)| r * ui)
+        .sum()
+}
+
+/// Dense clipped scoring (utility beyond remaining need counts only up
+/// to the need) — the variant the greedy uses near saturation.
+pub fn score_config_clipped(
+    ctx: &ProblemCtx,
+    cfg: &GpuConfig,
+    completion: &CompletionRates,
+) -> f64 {
+    let u = cfg.utility(ctx);
+    completion
+        .remaining()
+        .iter()
+        .zip(u.as_slice())
+        .map(|(r, ui)| r * ui.min(*r))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer::gpu_config::ConfigPool;
+    use crate::perf::ProfileBank;
+    use crate::spec::{Slo, Workload};
+
+    fn ctx_fixture() -> (ProfileBank, Workload) {
+        let bank = ProfileBank::synthetic();
+        let w = Workload::new(
+            "t",
+            vec![
+                ("densenet121".to_string(), Slo::new(1500.0, 120.0)),
+                ("resnet50".to_string(), Slo::new(400.0, 150.0)),
+            ],
+        );
+        (bank, w)
+    }
+
+    #[test]
+    fn sparse_and_dense_scores_agree() {
+        let (bank, w) = ctx_fixture();
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let pool = ConfigPool::enumerate(&ctx);
+        let comp = CompletionRates::from_vec(vec![0.3, 0.8]);
+        let remaining = comp.remaining();
+        for i in (0..pool.len()).step_by(13) {
+            let sparse = pool.configs[i].score(&remaining);
+            let dense = score_config(&ctx, &pool.materialize(&ctx, i), &comp);
+            assert!((sparse - dense).abs() < 1e-9, "config {i}");
+            let sparse_c = pool.configs[i].score_clipped(&remaining);
+            let dense_c =
+                score_config_clipped(&ctx, &pool.materialize(&ctx, i), &comp);
+            assert!((sparse_c - dense_c).abs() < 1e-9, "config {i} clipped");
+        }
+    }
+
+    #[test]
+    fn satisfied_services_score_zero() {
+        // Paper: "if all services that config_a contributes to are fully
+        // satisfied ... config_a's score is 0".
+        let (bank, w) = ctx_fixture();
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let cfg = ctx
+            .config_from_pairs(&[(crate::mig::InstanceSize::Seven, 0)])
+            .unwrap();
+        let comp = CompletionRates::from_vec(vec![1.0, 0.0]);
+        assert_eq!(score_config(&ctx, &cfg, &comp), 0.0);
+        let comp2 = CompletionRates::from_vec(vec![0.5, 0.0]);
+        assert!(score_config(&ctx, &cfg, &comp2) > 0.0);
+    }
+
+    #[test]
+    fn lower_completion_scores_higher() {
+        // Configs serving needier services score higher, all else equal.
+        let (bank, w) = ctx_fixture();
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let cfg = ctx
+            .config_from_pairs(&[(crate::mig::InstanceSize::Two, 0)])
+            .unwrap();
+        let needy = CompletionRates::from_vec(vec![0.1, 0.0]);
+        let nearly = CompletionRates::from_vec(vec![0.9, 0.0]);
+        assert!(
+            score_config(&ctx, &cfg, &needy) > score_config(&ctx, &cfg, &nearly)
+        );
+    }
+}

@@ -1,0 +1,120 @@
+//! The end-to-end two-phase pipeline (§5.2, Fig 6).
+//!
+//! Phase 1 runs the **fast algorithm** (heuristic greedy) to get a valid
+//! deployment quickly — "in case of urgent changes". Phase 2 improves it
+//! with the tailored GA whose crossovers invoke the **slow algorithm**
+//! (MCTS); it is on-demand and budgeted ("people can decide how much
+//! time and how many computational resources they are willing to
+//! devote").
+
+use super::comp_rates::CompletionRates;
+use super::ga::{GaConfig, GaHistory, GeneticAlgorithm};
+use super::gpu_config::{ConfigPool, GpuConfig, ProblemCtx};
+use super::greedy::Greedy;
+use super::{Deployment, OptimizerProcedure};
+
+/// Two-phase pipeline configuration.
+#[derive(Debug, Clone, Default)]
+pub struct TwoPhaseConfig {
+    pub ga: GaConfig,
+}
+
+/// Outcome of a two-phase run, including what each phase produced
+/// (Fig 12 plots `history`).
+#[derive(Debug, Clone)]
+pub struct TwoPhaseOutcome {
+    pub fast: Deployment,
+    pub best: Deployment,
+    pub history: GaHistory,
+}
+
+pub struct TwoPhase {
+    pub cfg: TwoPhaseConfig,
+}
+
+impl TwoPhase {
+    pub fn new(cfg: TwoPhaseConfig) -> TwoPhase {
+        TwoPhase { cfg }
+    }
+
+    /// Run both phases, returning the full outcome.
+    pub fn optimize(&self, ctx: &ProblemCtx) -> anyhow::Result<TwoPhaseOutcome> {
+        let pool = ConfigPool::enumerate(ctx);
+        // Phase 1: fast algorithm.
+        let mut greedy = Greedy::new();
+        let fast = greedy.solve(ctx)?;
+        anyhow::ensure!(fast.is_valid(ctx), "fast algorithm produced invalid deployment");
+        // Phase 2: GA over the fast seed.
+        let ga = GeneticAlgorithm::new(self.cfg.ga.clone());
+        let (best, history) = ga.evolve(ctx, &pool, fast.clone());
+        Ok(TwoPhaseOutcome { fast, best, history })
+    }
+}
+
+impl OptimizerProcedure for TwoPhase {
+    fn name(&self) -> &str {
+        "two-phase"
+    }
+
+    fn run(
+        &mut self,
+        ctx: &ProblemCtx,
+        completion: &CompletionRates,
+    ) -> anyhow::Result<Vec<GpuConfig>> {
+        if completion.all_satisfied() {
+            return Ok(Vec::new());
+        }
+        // The pipeline optimizes whole deployments; for residual calls
+        // (e.g. nested in other procedures) fall back to the fast path.
+        if completion.as_slice().iter().any(|&c| c > 0.0) {
+            return Greedy::new().run(ctx, completion);
+        }
+        Ok(self.optimize(ctx)?.best.gpus)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer::mcts::MctsConfig;
+    use crate::perf::ProfileBank;
+    use crate::spec::{Slo, Workload};
+
+    fn fixture(n: usize, thr: f64) -> (ProfileBank, Workload) {
+        let bank = ProfileBank::synthetic();
+        let models = bank.simulation_models();
+        let services = (0..n)
+            .map(|i| (models[i % models.len()].clone(), Slo::new(thr, 150.0)))
+            .collect();
+        (bank, Workload::new("tp-test", services))
+    }
+
+    fn small_cfg() -> TwoPhaseConfig {
+        TwoPhaseConfig {
+            ga: GaConfig {
+                rounds: 3,
+                mcts: MctsConfig { iterations: 25, ..Default::default() },
+                ..Default::default()
+            },
+        }
+    }
+
+    #[test]
+    fn two_phase_improves_or_matches_fast() {
+        let (bank, w) = fixture(8, 800.0);
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let out = TwoPhase::new(small_cfg()).optimize(&ctx).unwrap();
+        assert!(out.fast.is_valid(&ctx));
+        assert!(out.best.is_valid(&ctx));
+        assert!(out.best.num_gpus() <= out.fast.num_gpus());
+        assert!(out.best.num_gpus() >= super::super::lower_bound_gpus(&ctx));
+    }
+
+    #[test]
+    fn procedure_interface() {
+        let (bank, w) = fixture(3, 400.0);
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let dep = TwoPhase::new(small_cfg()).solve(&ctx).unwrap();
+        assert!(dep.is_valid(&ctx));
+    }
+}

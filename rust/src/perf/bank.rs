@@ -1,0 +1,428 @@
+//! The profile bank: 49 study models (§2.2, Appendix B) + the five
+//! real-world served models (§8), synthesized deterministically.
+//!
+//! Calibration targets (see DESIGN.md §1 for the substitution argument):
+//!
+//! * throughput `thr(s, b) = T0 · s^α(b) · b^β` with α(b) = α₁ +
+//!   slope·log₂(b) — sub-linear models dominate at batch 1 and the mix
+//!   shifts linear/super-linear as batch grows (Fig 4);
+//! * p90 latency `lat(s, b) = 1000·b / thr(s, b) · 1.25` (service time
+//!   plus a 25% queueing margin), reproducing Obs. 3's small-vs-large
+//!   instance latency trade-offs;
+//! * `densenet121` is pinned sub-linear and `xlnet-large-cased`
+//!   super-linear — the paper's two exemplars (Fig 3);
+//! * per-GPU-type scale factors (V100, T4) for the Fig 1 / Fig 10 cost
+//!   arithmetic.
+
+use super::profile::{ModelProfile, PerfPoint, BATCHES};
+use crate::mig::InstanceSize;
+use crate::util::rng::Rng;
+use std::collections::BTreeMap;
+
+/// The 24 PyTorch Hub study models (paper Appendix B).
+pub const PYTORCH_MODELS: [&str; 24] = [
+    "densenet121", "xlnet-large-cased", "resnet18", "resnet34", "resnet50-pt",
+    "resnet101-pt", "resnet152", "vgg11", "vgg16", "vgg19-pt", "inception-v3-pt",
+    "squeezenet1-1", "mobilenet-v2", "shufflenet-v2", "wide-resnet50",
+    "alexnet", "googlenet", "mnasnet1-0", "efficientnet-b0", "bert-base-pt",
+    "gpt2-pt", "roberta-base-pt", "distilbert-base", "albert-base-pt",
+];
+
+/// The 25 TensorFlow Hub study models (paper Appendix B).
+pub const TF_MODELS: [&str; 25] = [
+    "resnet50-tf", "resnet101-tf", "resnet152-tf", "vgg16-tf", "vgg19-tf",
+    "densenet121-tf", "densenet169", "densenet201", "inception-v3-tf",
+    "inception-resnet-v2", "mobilenet-v1", "mobilenet-v2-tf", "nasnet-mobile",
+    "nasnet-large", "xception", "efficientnet-b1", "efficientnet-b3",
+    "bert-base-tf", "bert-large-tf", "gpt2-tf", "roberta-large-tf",
+    "albert-large-tf", "albert-xlarge", "electra-base", "t5-small",
+];
+
+/// The five real-world served models (§8); names match `artifacts/`.
+pub const REALWORLD_MODELS: [&str; 5] = [
+    "roberta-large",
+    "bert-base-uncased",
+    "albert-large-v2",
+    "resnet101",
+    "resnet50",
+];
+
+/// A set of model profiles plus per-GPU-type derating factors.
+#[derive(Debug, Clone)]
+pub struct ProfileBank {
+    profiles: BTreeMap<String, ModelProfile>,
+    /// (v100_factor, t4_factor): throughput on that GPU relative to the
+    /// model's A100-7/7 throughput (for Fig 1 / Fig 10).
+    gpu_scale: BTreeMap<String, (f64, f64)>,
+}
+
+/// Per-model synthesis parameters (kept so tests can assert structure).
+#[derive(Debug, Clone, Copy)]
+struct GenParams {
+    t0: f64,
+    alpha1: f64,
+    slope: f64,
+    beta: f64,
+    min_size: InstanceSize,
+}
+
+fn gen_params(name: &str, rng: &mut Rng) -> GenParams {
+    // Pinned exemplars first (Fig 3).
+    match name {
+        "densenet121" => {
+            return GenParams {
+                t0: 240.0,
+                alpha1: 0.62,
+                slope: 0.03,
+                beta: 0.45,
+                min_size: InstanceSize::One,
+            }
+        }
+        "xlnet-large-cased" => {
+            return GenParams {
+                t0: 14.0,
+                alpha1: 1.20,
+                slope: 0.02,
+                beta: 0.55,
+                min_size: InstanceSize::One,
+            }
+        }
+        // Real-world five: shaped after the paper's App. B plots, scaled
+        // one order of magnitude down so the CPU serving testbed can
+        // realize them (the optimizer only sees ratios).
+        "bert-base-uncased" => {
+            return GenParams { t0: 30.0, alpha1: 0.85, slope: 0.03, beta: 0.50, min_size: InstanceSize::One }
+        }
+        "roberta-large" => {
+            return GenParams { t0: 6.0, alpha1: 0.90, slope: 0.02, beta: 0.55, min_size: InstanceSize::One }
+        }
+        "albert-large-v2" => {
+            return GenParams { t0: 8.0, alpha1: 0.88, slope: 0.02, beta: 0.50, min_size: InstanceSize::One }
+        }
+        "resnet50" => {
+            return GenParams { t0: 40.0, alpha1: 0.75, slope: 0.05, beta: 0.45, min_size: InstanceSize::One }
+        }
+        "resnet101" => {
+            return GenParams { t0: 25.0, alpha1: 0.80, slope: 0.05, beta: 0.45, min_size: InstanceSize::One }
+        }
+        // Remaining Fig 1 models (INT8/TensorRT in the paper scales all
+        // of them sub-linearly at batch 8, which is what makes
+        // A100-7x1/7 the cheapest setup for every bar in the figure).
+        "gpt2-pt" => {
+            return GenParams { t0: 18.0, alpha1: 0.84, slope: 0.04, beta: 0.50, min_size: InstanceSize::One }
+        }
+        "vgg19-pt" => {
+            return GenParams { t0: 90.0, alpha1: 0.80, slope: 0.03, beta: 0.45, min_size: InstanceSize::One }
+        }
+        "inception-v3-pt" => {
+            return GenParams { t0: 130.0, alpha1: 0.82, slope: 0.04, beta: 0.45, min_size: InstanceSize::One }
+        }
+        _ => {}
+    }
+    // Class mix at batch 1 (Fig 4: sub-linear dominates small batches).
+    let roll = rng.f64();
+    let (lo, hi) = if roll < 0.62 {
+        (0.25, 0.82) // sub-linear (many strongly so, App. B)
+    } else if roll < 0.82 {
+        (0.965, 1.030) // linear
+    } else {
+        (1.05, 1.27) // super-linear
+    };
+    let alpha1 = rng.f64_range(lo, hi);
+    let min_size = {
+        let r = rng.f64();
+        if r < 0.80 {
+            InstanceSize::One
+        } else if r < 0.92 {
+            InstanceSize::Two
+        } else {
+            InstanceSize::Three
+        }
+    };
+    GenParams {
+        // INT8/TensorRT-era throughputs: fast enough that the 100 ms
+        // latency SLO leaves batch headroom even on 1/7 instances (the
+        // regime in which MIG's savings reach the paper's 40%).
+        t0: rng.f64_range(60.0, 420.0),
+        alpha1,
+        slope: rng.f64_range(0.0, 0.022),
+        beta: rng.f64_range(0.25, 0.75),
+        min_size,
+    }
+}
+
+fn synth_profile(name: &str, p: GenParams) -> ModelProfile {
+    let mut m = ModelProfile::new(name, p.min_size);
+    for s in InstanceSize::ALL {
+        if s < p.min_size {
+            continue;
+        }
+        for &b in &BATCHES {
+            let alpha = p.alpha1 + p.slope * (b as f64).log2();
+            let thr = p.t0 * (s.slices() as f64).powf(alpha) * (b as f64).powf(p.beta);
+            let lat = 1000.0 * b as f64 / thr * 1.25;
+            m.insert(s, b, PerfPoint { throughput: thr, latency_p90_ms: lat });
+        }
+    }
+    m
+}
+
+impl ProfileBank {
+    /// Deterministic synthetic bank: 49 study models + 5 real-world.
+    pub fn synthetic() -> ProfileBank {
+        let mut profiles = BTreeMap::new();
+        let mut gpu_scale = BTreeMap::new();
+        let all_names: Vec<&str> = PYTORCH_MODELS
+            .iter()
+            .chain(TF_MODELS.iter())
+            .chain(REALWORLD_MODELS.iter())
+            .copied()
+            .collect();
+        for name in all_names {
+            // Per-model stream keyed by the name bytes: stable no matter
+            // the iteration order.
+            let seed = name.bytes().fold(0xCBF2_9CE4_8422_2325u64, |h, b| {
+                (h ^ b as u64).wrapping_mul(0x1000_0000_01B3)
+            });
+            let mut rng = Rng::new(seed);
+            let params = gen_params(name, &mut rng);
+            profiles.insert(name.to_string(), synth_profile(name, params));
+            // Older GPUs: V100 ≈ 35–55% of A100-7/7, T4 ≈ 9.5–13%
+            // (T4's price/perf sits between V100 and split A100, Fig 1).
+            let v100 = rng.f64_range(0.35, 0.55);
+            let t4 = rng.f64_range(0.095, 0.130);
+            gpu_scale.insert(name.to_string(), (v100, t4));
+        }
+        ProfileBank { profiles, gpu_scale }
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ModelProfile> {
+        self.profiles.get(name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.profiles.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// The 49 study models (Fig 4 population).
+    pub fn study_models(&self) -> Vec<&ModelProfile> {
+        PYTORCH_MODELS
+            .iter()
+            .chain(TF_MODELS.iter())
+            .map(|n| self.profiles.get(*n).expect("study model present"))
+            .collect()
+    }
+
+    /// The 24 models used by the simulation workloads (§8: "we generate
+    /// four workloads for 24 DNN models") — the PyTorch study set.
+    pub fn simulation_models(&self) -> Vec<String> {
+        PYTORCH_MODELS.iter().map(|s| s.to_string()).collect()
+    }
+
+    /// The five real-world served models (§8).
+    pub fn realworld_models(&self) -> Vec<String> {
+        REALWORLD_MODELS.iter().map(|s| s.to_string()).collect()
+    }
+
+    /// V100/T4 throughput factors relative to A100-7/7 (Fig 1, Fig 10).
+    pub fn gpu_factors(&self, name: &str) -> Option<(f64, f64)> {
+        self.gpu_scale.get(name).copied()
+    }
+
+    /// Derive an MPS-enabled bank: up to `n` processes of the same model
+    /// share each instance (§8.1 "Combining MIG and MPS").
+    ///
+    /// Model: N concurrent serving processes overlap N batches, so a
+    /// configuration whose throughput is *latency-capped* (small batch
+    /// forced by the SLO — exactly the 1/7-instance cases that hurt the
+    /// A100-7×1/7 baseline) multiplies its throughput by up to N, but
+    /// never beyond the instance's hardware capability (≈ its best
+    /// large-batch throughput ×1.1). p90 latency inflates 15% per extra
+    /// process — the paper's "tail latency stability" cost of MPS.
+    pub fn with_mps(&self, n: usize) -> ProfileBank {
+        assert!(n >= 1, "MPS process count must be >= 1");
+        if n == 1 {
+            return self.clone();
+        }
+        let mut out = self.clone();
+        for (_, prof) in out.profiles.iter_mut() {
+            let mut upgraded = ModelProfile::new(prof.name.clone(), prof.min_size);
+            for s in prof.sizes() {
+                // Hardware capability of this instance size: the best
+                // throughput across batches, with 10% MPS-overlap bonus.
+                let cap = BATCHES
+                    .iter()
+                    .filter_map(|&b| prof.throughput(s, b))
+                    .fold(0.0f64, f64::max)
+                    * 1.1;
+                for &b in &BATCHES {
+                    if let Some(p) = prof.point(s, b) {
+                        let thr = (p.throughput * n as f64).min(cap);
+                        upgraded.insert(
+                            s,
+                            b,
+                            PerfPoint {
+                                throughput: thr,
+                                latency_p90_ms: p.latency_p90_ms
+                                    * (1.0 + 0.15 * (n as f64 - 1.0)),
+                            },
+                        );
+                    }
+                }
+            }
+            *prof = upgraded;
+        }
+        out
+    }
+}
+
+/// Fig 4 rows: class counts per batch size over the study models.
+pub fn fig4_classification(bank: &ProfileBank) -> Vec<(usize, usize, usize, usize)> {
+    BATCHES
+        .iter()
+        .map(|&b| {
+            let (sub, lin, sup) =
+                super::classify::class_counts(&bank.study_models(), b);
+            (b, sub, lin, sup)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perf::classify::{classify, ScalingClass};
+
+    #[test]
+    fn bank_has_54_models() {
+        let bank = ProfileBank::synthetic();
+        assert_eq!(bank.names().len(), 49 + 5);
+        assert_eq!(bank.study_models().len(), 49);
+        assert_eq!(bank.simulation_models().len(), 24);
+        assert_eq!(bank.realworld_models().len(), 5);
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = ProfileBank::synthetic();
+        let b = ProfileBank::synthetic();
+        for name in a.names() {
+            let pa = a.get(name).unwrap();
+            let pb = b.get(name).unwrap();
+            assert_eq!(
+                pa.throughput(pa.min_size, 8),
+                pb.throughput(pb.min_size, 8),
+                "{name}"
+            );
+        }
+    }
+
+    #[test]
+    fn exemplars_match_paper_classes() {
+        let bank = ProfileBank::synthetic();
+        let dense = bank.get("densenet121").unwrap();
+        let xlnet = bank.get("xlnet-large-cased").unwrap();
+        assert_eq!(classify(dense, 8), Some(ScalingClass::SubLinear));
+        assert_eq!(classify(xlnet, 8), Some(ScalingClass::SuperLinear));
+        // Obs. 3: densenet prefers small instances (higher per-unit
+        // throughput on 1/7), xlnet prefers large.
+        let d1 = dense.throughput(InstanceSize::One, 8).unwrap();
+        let d7 = dense.throughput(InstanceSize::Seven, 8).unwrap() / 7.0;
+        assert!(d1 > d7);
+        let x1 = xlnet.throughput(InstanceSize::One, 8).unwrap();
+        let x7 = xlnet.throughput(InstanceSize::Seven, 8).unwrap() / 7.0;
+        assert!(x7 > x1);
+    }
+
+    #[test]
+    fn fig4_shift_toward_linear_with_batch() {
+        // Larger batches -> fewer sub-linear models (the paper's main
+        // Fig 4 takeaway).
+        let bank = ProfileBank::synthetic();
+        let rows = fig4_classification(&bank);
+        let sub_at_1 = rows[0].1;
+        let sub_at_32 = rows[3].1;
+        assert!(
+            sub_at_1 > sub_at_32,
+            "sub-linear count should shrink: b1={sub_at_1} b32={sub_at_32}"
+        );
+        // Non-linear models are "prevalent" at batch 1 (paper).
+        let (b, sub, lin, sup) = rows[0];
+        assert_eq!(b, 1);
+        assert!(sub + sup > lin, "non-linear should dominate at batch 1");
+        assert_eq!(sub + lin + sup, 49);
+    }
+
+    #[test]
+    fn latency_increases_with_batch() {
+        let bank = ProfileBank::synthetic();
+        for name in ["bert-base-uncased", "densenet121", "resnet50"] {
+            let p = bank.get(name).unwrap();
+            let l1 = p.latency(InstanceSize::One, 1).unwrap();
+            let l32 = p.latency(InstanceSize::One, 32).unwrap();
+            assert!(l32 > l1, "{name}: {l1} !< {l32}");
+        }
+    }
+
+    #[test]
+    fn gpu_factors_present_and_ordered() {
+        let bank = ProfileBank::synthetic();
+        for name in bank.names() {
+            let (v100, t4) = bank.gpu_factors(name).unwrap();
+            assert!(t4 < v100 && v100 < 1.0, "{name}: v100={v100} t4={t4}");
+        }
+    }
+
+    #[test]
+    fn mps_increases_throughput_and_latency() {
+        let bank = ProfileBank::synthetic();
+        let mps4 = bank.with_mps(4);
+        let base = bank.get("densenet121").unwrap();
+        let up = mps4.get("densenet121").unwrap();
+        for s in base.sizes() {
+            let t0 = base.throughput(s, 8).unwrap();
+            let t4_ = up.throughput(s, 8).unwrap();
+            assert!(t4_ >= t0, "{s:?}");
+            let l0 = base.latency(s, 8).unwrap();
+            let l4 = up.latency(s, 8).unwrap();
+            assert!(l4 > l0);
+        }
+        // Gains are capped by the hardware capability: no point exceeds
+        // 1.1x the best batch throughput of its size.
+        for s in base.sizes() {
+            let cap = [1usize, 8, 16, 32]
+                .iter()
+                .filter_map(|&b| base.throughput(s, b))
+                .fold(0.0f64, f64::max)
+                * 1.1;
+            for b in [1usize, 8, 16, 32] {
+                if let Some(t) = up.throughput(s, b) {
+                    assert!(t <= cap + 1e-9, "{s:?} b{b}: {t} > cap {cap}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mps_identity_at_one() {
+        let bank = ProfileBank::synthetic();
+        let same = bank.with_mps(1);
+        let a = bank.get("resnet50").unwrap();
+        let b = same.get("resnet50").unwrap();
+        assert_eq!(a.throughput(InstanceSize::One, 8), b.throughput(InstanceSize::One, 8));
+    }
+
+    #[test]
+    fn min_sizes_respected() {
+        let bank = ProfileBank::synthetic();
+        let mut bigger_than_one = 0;
+        for p in bank.study_models() {
+            if p.min_size > InstanceSize::One {
+                bigger_than_one += 1;
+                assert!(p.throughput(InstanceSize::One, 1).is_none());
+            }
+        }
+        // §2.2: "sometimes 2/7 or 3/7 if M is large" — some but not most.
+        assert!(bigger_than_one >= 2 && bigger_than_one <= 20, "{bigger_than_one}");
+    }
+}

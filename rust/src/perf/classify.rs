@@ -1,0 +1,143 @@
+//! The paper's model classification rule (§2.2).
+//!
+//! For model M: take the per-unit-throughput of the smallest instance
+//! that can run M, then the ratio of the 7/7 instance's throughput to
+//! that per-unit number. Ratio in [6.5, 7.5] → linear; < 6.5 →
+//! sub-linear; otherwise super-linear.
+
+use super::profile::ModelProfile;
+
+/// Throughput-scaling class (paper Fig 4: "subL" / "L" / "supL").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ScalingClass {
+    SubLinear,
+    Linear,
+    SuperLinear,
+}
+
+impl ScalingClass {
+    pub fn label(self) -> &'static str {
+        match self {
+            ScalingClass::SubLinear => "subL",
+            ScalingClass::Linear => "L",
+            ScalingClass::SuperLinear => "supL",
+        }
+    }
+}
+
+/// Classify `profile` at `batch` per the paper's rule. Returns None when
+/// the profile lacks the needed points.
+pub fn classify(profile: &ModelProfile, batch: usize) -> Option<ScalingClass> {
+    let small = profile.min_size;
+    let small_thr = profile.throughput(small, batch)?;
+    let per_unit = small_thr / small.slices() as f64;
+    let full_thr = profile.throughput(crate::mig::InstanceSize::Seven, batch)?;
+    let ratio = full_thr / per_unit;
+    Some(if ratio < 6.5 {
+        ScalingClass::SubLinear
+    } else if ratio <= 7.5 {
+        ScalingClass::Linear
+    } else {
+        ScalingClass::SuperLinear
+    })
+}
+
+/// Per-class counts over a set of profiles at one batch size (one bar
+/// cluster of Fig 4).
+pub fn class_counts(
+    profiles: &[&ModelProfile],
+    batch: usize,
+) -> (usize, usize, usize) {
+    let mut sub = 0;
+    let mut lin = 0;
+    let mut sup = 0;
+    for p in profiles {
+        match classify(p, batch) {
+            Some(ScalingClass::SubLinear) => sub += 1,
+            Some(ScalingClass::Linear) => lin += 1,
+            Some(ScalingClass::SuperLinear) => sup += 1,
+            None => {}
+        }
+    }
+    (sub, lin, sup)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mig::InstanceSize::{self, *};
+    use crate::perf::profile::{PerfPoint, BATCHES};
+
+    fn profile_with_alpha(alpha: f64, min: InstanceSize) -> ModelProfile {
+        let mut m = ModelProfile::new("t", min);
+        for s in InstanceSize::ALL {
+            if s < min {
+                continue;
+            }
+            for &b in &BATCHES {
+                let thr = 100.0 * (s.slices() as f64).powf(alpha);
+                m.insert(s, b, PerfPoint { throughput: thr, latency_p90_ms: 10.0 });
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn alpha_one_is_linear() {
+        let m = profile_with_alpha(1.0, One);
+        assert_eq!(classify(&m, 8), Some(ScalingClass::Linear));
+    }
+
+    #[test]
+    fn low_alpha_is_sublinear() {
+        // ratio = 7^0.7 ≈ 3.9 < 6.5
+        let m = profile_with_alpha(0.7, One);
+        assert_eq!(classify(&m, 1), Some(ScalingClass::SubLinear));
+    }
+
+    #[test]
+    fn high_alpha_is_superlinear() {
+        // ratio = 7^1.2 ≈ 10.3 > 7.5
+        let m = profile_with_alpha(1.2, One);
+        assert_eq!(classify(&m, 1), Some(ScalingClass::SuperLinear));
+    }
+
+    #[test]
+    fn boundary_ratios() {
+        // ratio exactly 6.5 / 7.5 are linear (inclusive band).
+        for target in [6.5f64, 7.5] {
+            let alpha = target.ln() / 7f64.ln();
+            let m = profile_with_alpha(alpha, One);
+            assert_eq!(classify(&m, 1), Some(ScalingClass::Linear), "ratio={target}");
+        }
+    }
+
+    #[test]
+    fn min_size_three_uses_per_unit_of_three() {
+        // thr(3)=300, per-unit=100; thr(7)=700 -> ratio 7 -> linear,
+        // even though thr(7)/thr(3) is only 2.33.
+        let mut m = ModelProfile::new("big", Three);
+        m.insert(Three, 1, PerfPoint { throughput: 300.0, latency_p90_ms: 10.0 });
+        m.insert(Seven, 1, PerfPoint { throughput: 700.0, latency_p90_ms: 10.0 });
+        assert_eq!(classify(&m, 1), Some(ScalingClass::Linear));
+    }
+
+    #[test]
+    fn missing_points_yield_none() {
+        let m = ModelProfile::new("empty", One);
+        assert_eq!(classify(&m, 1), None);
+    }
+
+    #[test]
+    fn counts_sum() {
+        let profiles = vec![
+            profile_with_alpha(0.7, One),
+            profile_with_alpha(1.0, One),
+            profile_with_alpha(1.2, One),
+            profile_with_alpha(0.6, One),
+        ];
+        let refs: Vec<&ModelProfile> = profiles.iter().collect();
+        let (sub, lin, sup) = class_counts(&refs, 1);
+        assert_eq!((sub, lin, sup), (2, 1, 1));
+    }
+}

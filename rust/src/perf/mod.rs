@@ -1,0 +1,26 @@
+//! Model performance profiles (paper §2.2, Appendix B).
+//!
+//! The optimizer consumes `(service, instance size) → (throughput, p90
+//! latency)` tables. The paper measured 49 hub models on real MIG
+//! instances; with no A100 available, [`bank`] synthesizes a 49-model
+//! profile bank whose *structure* is calibrated to the paper's study:
+//!
+//! * throughput scaling `thr(s) ∝ s^α` with model- and batch-dependent
+//!   α covering sub-linear, linear, and super-linear classes (Obs. 1);
+//! * class shares shifting toward linear/super-linear as batch size
+//!   grows (Fig 4);
+//! * per-partition throughput/latency divergence of up to several ×
+//!   for the same total resources (Obs. 2);
+//! * hand-shaped profiles for the five real-world models served in §8
+//!   (these names match the AOT artifacts in `artifacts/`).
+//!
+//! [`classify`] implements the paper's sub/linear/super classification
+//! rule verbatim.
+
+pub mod bank;
+pub mod classify;
+pub mod profile;
+
+pub use bank::ProfileBank;
+pub use classify::{classify, ScalingClass};
+pub use profile::{ModelProfile, PerfPoint, BATCHES};

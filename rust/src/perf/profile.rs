@@ -1,0 +1,170 @@
+//! A single model's measured/synthesized serving profile.
+
+use crate::mig::InstanceSize;
+use std::collections::BTreeMap;
+
+/// Batch sizes profiled, matching the paper's study (Fig 4, App. B).
+pub const BATCHES: [usize; 4] = [1, 8, 16, 32];
+
+/// One (instance size, batch) measurement.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PerfPoint {
+    /// Sustained throughput, requests/second.
+    pub throughput: f64,
+    /// 90%-tile request latency, milliseconds.
+    pub latency_p90_ms: f64,
+}
+
+/// Serving performance of one model across instance sizes and batches.
+#[derive(Debug, Clone)]
+pub struct ModelProfile {
+    pub name: String,
+    /// Smallest instance the model fits on (§2.2: "usually 1/7 ... but
+    /// sometimes 2/7 or 3/7 if M is large").
+    pub min_size: InstanceSize,
+    points: BTreeMap<(InstanceSize, usize), PerfPoint>,
+}
+
+impl ModelProfile {
+    pub fn new(name: impl Into<String>, min_size: InstanceSize) -> ModelProfile {
+        ModelProfile { name: name.into(), min_size, points: BTreeMap::new() }
+    }
+
+    pub fn insert(&mut self, size: InstanceSize, batch: usize, p: PerfPoint) {
+        assert!(
+            size >= self.min_size,
+            "{}: point below min_size {:?}",
+            self.name,
+            self.min_size
+        );
+        self.points.insert((size, batch), p);
+    }
+
+    /// Does the model run on this instance size at all?
+    pub fn fits(&self, size: InstanceSize) -> bool {
+        size >= self.min_size
+    }
+
+    pub fn point(&self, size: InstanceSize, batch: usize) -> Option<PerfPoint> {
+        self.points.get(&(size, batch)).copied()
+    }
+
+    pub fn throughput(&self, size: InstanceSize, batch: usize) -> Option<f64> {
+        self.point(size, batch).map(|p| p.throughput)
+    }
+
+    pub fn latency(&self, size: InstanceSize, batch: usize) -> Option<f64> {
+        self.point(size, batch).map(|p| p.latency_p90_ms)
+    }
+
+    /// The paper's batch policy (§7): choose the **largest batch size
+    /// whose p90 latency satisfies the SLO**; returns (batch, point).
+    /// None if no batch meets the latency bound on this instance size.
+    pub fn best_batch(
+        &self,
+        size: InstanceSize,
+        latency_slo_ms: f64,
+    ) -> Option<(usize, PerfPoint)> {
+        if !self.fits(size) {
+            return None;
+        }
+        BATCHES
+            .iter()
+            .rev()
+            .filter_map(|&b| self.point(size, b).map(|p| (b, p)))
+            .find(|(_, p)| p.latency_p90_ms <= latency_slo_ms)
+    }
+
+    /// Effective serving throughput on `size` under a latency SLO
+    /// (throughput at the paper's batch choice), or None if infeasible.
+    pub fn effective_throughput(
+        &self,
+        size: InstanceSize,
+        latency_slo_ms: f64,
+    ) -> Option<f64> {
+        self.best_batch(size, latency_slo_ms).map(|(_, p)| p.throughput)
+    }
+
+    /// All sizes with at least one profiled point.
+    pub fn sizes(&self) -> Vec<InstanceSize> {
+        let mut v: Vec<InstanceSize> =
+            self.points.keys().map(|(s, _)| *s).collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use InstanceSize::*;
+
+    fn sample() -> ModelProfile {
+        let mut m = ModelProfile::new("m", One);
+        // thr grows with batch; latency grows with batch.
+        for (size, base) in [(One, 50.0), (Two, 90.0), (Seven, 280.0)] {
+            for &b in &BATCHES {
+                m.insert(
+                    size,
+                    b,
+                    PerfPoint {
+                        throughput: base * (b as f64).powf(0.5),
+                        latency_p90_ms: 1000.0 * b as f64
+                            / (base * (b as f64).powf(0.5)),
+                    },
+                );
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn best_batch_is_largest_under_slo() {
+        let m = sample();
+        // On 1/7: latency(b) = 1000*b/(50*sqrt(b)) = 20*sqrt(b) ms.
+        // b=32 -> 113ms, b=16 -> 80ms, so SLO 100ms picks b=16.
+        let (b, p) = m.best_batch(One, 100.0).unwrap();
+        assert_eq!(b, 16);
+        assert!(p.latency_p90_ms <= 100.0);
+        // Very tight SLO: only batch 1 (20ms).
+        assert_eq!(m.best_batch(One, 25.0).unwrap().0, 1);
+        // Impossible SLO.
+        assert!(m.best_batch(One, 5.0).is_none());
+    }
+
+    #[test]
+    fn effective_throughput_monotone_in_slo() {
+        let m = sample();
+        let loose = m.effective_throughput(One, 1000.0).unwrap();
+        let tight = m.effective_throughput(One, 25.0).unwrap();
+        assert!(loose > tight);
+    }
+
+    #[test]
+    fn min_size_gates_fit() {
+        let mut m = ModelProfile::new("big", Three);
+        for &b in &BATCHES {
+            m.insert(Three, b, PerfPoint { throughput: 10.0, latency_p90_ms: 50.0 });
+            m.insert(Seven, b, PerfPoint { throughput: 30.0, latency_p90_ms: 30.0 });
+        }
+        assert!(!m.fits(One));
+        assert!(!m.fits(Two));
+        assert!(m.fits(Three));
+        assert!(m.best_batch(Two, 1000.0).is_none());
+        assert!(m.best_batch(Three, 1000.0).is_some());
+    }
+
+    #[test]
+    #[should_panic(expected = "below min_size")]
+    fn insert_below_min_size_panics() {
+        let mut m = ModelProfile::new("big", Two);
+        m.insert(One, 1, PerfPoint { throughput: 1.0, latency_p90_ms: 1.0 });
+    }
+
+    #[test]
+    fn sizes_reported() {
+        let m = sample();
+        assert_eq!(m.sizes(), vec![One, Two, Seven]);
+    }
+}

@@ -1,0 +1,217 @@
+//! The PJRT execution engine.
+//!
+//! Owns the PJRT CPU client, compiled executables, and resident weight
+//! literals. NOT `Send` (PJRT handles are raw pointers); the serving
+//! layer owns one engine inside a dedicated executor thread
+//! ([`crate::serving::exec_server`]) and talks to it over channels —
+//! the same shape as a real deployment where each GPU instance is its
+//! own serving process.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use super::registry::{ArtifactMeta, Manifest};
+
+struct LoadedArtifact {
+    meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+    weights: xla::Literal,
+}
+
+/// Compile-and-execute engine over a set of artifacts.
+pub struct Engine {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    loaded: HashMap<String, LoadedArtifact>,
+}
+
+/// Timing of one inference call.
+#[derive(Debug, Clone, Copy)]
+pub struct ExecTiming {
+    pub total: std::time::Duration,
+}
+
+impl Engine {
+    /// Create the PJRT CPU client with nothing loaded.
+    pub fn new() -> anyhow::Result<Engine> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine { client, loaded: HashMap::new() })
+    }
+
+    /// Load + compile one artifact (idempotent).
+    pub fn load(&mut self, meta: &ArtifactMeta) -> anyhow::Result<()> {
+        if self.loaded.contains_key(&meta.name) {
+            return Ok(());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            meta.hlo_path
+                .to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        // Weights: raw little-endian f32.
+        let bytes = std::fs::read(&meta.weights_path)?;
+        anyhow::ensure!(
+            bytes.len() == 4 * meta.param_count,
+            "{}: weights size {} != 4*{}",
+            meta.name,
+            bytes.len(),
+            meta.param_count
+        );
+        let floats: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let weights = xla::Literal::vec1(&floats);
+        self.loaded.insert(
+            meta.name.clone(),
+            LoadedArtifact { meta: meta.clone(), exe, weights },
+        );
+        Ok(())
+    }
+
+    /// Load every artifact in a manifest.
+    pub fn load_all(&mut self, manifest: &Manifest) -> anyhow::Result<()> {
+        for a in &manifest.artifacts {
+            self.load(a)?;
+        }
+        Ok(())
+    }
+
+    pub fn is_loaded(&self, name: &str) -> bool {
+        self.loaded.contains_key(name)
+    }
+
+    pub fn loaded_names(&self) -> Vec<&str> {
+        self.loaded.keys().map(String::as_str).collect()
+    }
+
+    /// Run inference: `input` is the flattened `input_shape` tensor.
+    /// Returns the flattened logits.
+    pub fn execute(&self, name: &str, input: &[f32]) -> anyhow::Result<Vec<f32>> {
+        let (out, _) = self.execute_timed(name, input)?;
+        Ok(out)
+    }
+
+    /// Run inference and report wall-clock.
+    pub fn execute_timed(
+        &self,
+        name: &str,
+        input: &[f32],
+    ) -> anyhow::Result<(Vec<f32>, ExecTiming)> {
+        let la = self
+            .loaded
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact {name:?} not loaded"))?;
+        anyhow::ensure!(
+            input.len() == la.meta.input_len(),
+            "{name}: input len {} != {}",
+            input.len(),
+            la.meta.input_len()
+        );
+        let t0 = Instant::now();
+        let dims: Vec<i64> = la.meta.input_shape.iter().map(|&d| d as i64).collect();
+        let x = xla::Literal::vec1(input).reshape(&dims)?;
+        let result = la.exe.execute::<xla::Literal>(&[la.weights.clone(), x])?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        let values = out.to_vec::<f32>()?;
+        anyhow::ensure!(
+            values.len() == la.meta.output_len(),
+            "{name}: output len {} != {}",
+            values.len(),
+            la.meta.output_len()
+        );
+        Ok((values, ExecTiming { total: t0.elapsed() }))
+    }
+
+    /// Check an artifact against its python-side golden: run the
+    /// deterministic golden input and compare logits. Returns the max
+    /// absolute error.
+    pub fn verify_golden(&self, name: &str) -> anyhow::Result<f64> {
+        let la = self
+            .loaded
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact {name:?} not loaded"))?;
+        let gpath = la
+            .meta
+            .golden_path
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("{name}: no golden recorded"))?;
+        let gv = crate::util::json::parse_file(gpath)?;
+        let expect: Vec<f64> = gv
+            .get("output")
+            .and_then(|o| o.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("golden missing output"))?
+            .iter()
+            .filter_map(|v| v.as_f64())
+            .collect();
+        let input = crate::util::goldens::golden_input(la.meta.input_len());
+        let got = self.execute(name, &input)?;
+        anyhow::ensure!(got.len() == expect.len(), "golden arity mismatch");
+        let max_err = got
+            .iter()
+            .zip(&expect)
+            .map(|(a, b)| (*a as f64 - b).abs())
+            .fold(0.0f64, f64::max);
+        Ok(max_err)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Option<Manifest> {
+        let root = Manifest::default_root();
+        if root.join("manifest.json").exists() {
+            Some(Manifest::load(root).unwrap())
+        } else {
+            eprintln!("skipping: run `make artifacts` first");
+            None
+        }
+    }
+
+    /// The CORE cross-language numerics check: rust PJRT execution of
+    /// the Pallas-lowered artifacts reproduces the python goldens.
+    #[test]
+    fn goldens_match_for_all_artifacts() {
+        let Some(m) = manifest() else { return };
+        let mut eng = Engine::new().unwrap();
+        for a in &m.artifacts {
+            eng.load(a).unwrap();
+            let err = eng.verify_golden(&a.name).unwrap();
+            assert!(err < 2e-3, "{}: max abs err {err}", a.name);
+        }
+    }
+
+    #[test]
+    fn execute_shape_checked() {
+        let Some(m) = manifest() else { return };
+        let mut eng = Engine::new().unwrap();
+        let a = m.for_model("resnet50", 1).unwrap();
+        eng.load(a).unwrap();
+        assert!(eng.execute(&a.name, &[0.0; 3]).is_err());
+        let out = eng.execute(&a.name, &vec![0.1; a.input_len()]).unwrap();
+        assert_eq!(out.len(), a.output_len());
+        assert!(out.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn unknown_artifact_is_err() {
+        let eng = Engine::new().unwrap();
+        assert!(eng.execute("nope.b1", &[]).is_err());
+    }
+
+    #[test]
+    fn load_idempotent() {
+        let Some(m) = manifest() else { return };
+        let mut eng = Engine::new().unwrap();
+        let a = m.for_model("resnet50", 1).unwrap();
+        eng.load(a).unwrap();
+        eng.load(a).unwrap();
+        assert_eq!(eng.loaded_names().len(), 1);
+    }
+}

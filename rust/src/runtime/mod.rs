@@ -1,0 +1,21 @@
+//! The PJRT model runtime: load AOT artifacts, compile, execute.
+//!
+//! `make artifacts` (the only time Python runs) lowers every
+//! (model, batch) pair to HLO **text** plus a raw weights file;
+//! [`registry`] indexes them from `artifacts/manifest.json` and
+//! [`engine`] loads them through the `xla` crate's PJRT CPU client:
+//!
+//! ```text
+//! HloModuleProto::from_text_file → XlaComputation → client.compile
+//!     → executable.execute(&[weights, input])
+//! ```
+//!
+//! HLO *text* (not a serialized proto) is the interchange format: jax ≥
+//! 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects;
+//! the text parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod engine;
+pub mod registry;
+
+pub use engine::Engine;
+pub use registry::{ArtifactMeta, Manifest};

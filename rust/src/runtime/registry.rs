@@ -1,0 +1,176 @@
+//! Artifact manifest parsing (`artifacts/manifest.json`).
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{parse_file, Value};
+
+/// One AOT-compiled (model, batch) artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    /// `"<model>.b<batch>"`.
+    pub name: String,
+    pub model: String,
+    pub family: String,
+    pub batch: usize,
+    pub hlo_path: PathBuf,
+    pub weights_path: PathBuf,
+    pub golden_path: Option<PathBuf>,
+    pub param_count: usize,
+    pub input_shape: Vec<usize>,
+    pub output_shape: Vec<usize>,
+    pub flops_per_batch: u64,
+}
+
+impl ArtifactMeta {
+    pub fn input_len(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+    pub fn output_len(&self) -> usize {
+        self.output_shape.iter().product()
+    }
+}
+
+/// The parsed artifact index.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub artifacts: Vec<ArtifactMeta>,
+    /// Whether artifacts were lowered through the Pallas kernels.
+    pub pallas: bool,
+}
+
+impl Manifest {
+    /// Load `<root>/manifest.json`.
+    pub fn load(root: impl AsRef<Path>) -> anyhow::Result<Manifest> {
+        let root = root.as_ref().to_path_buf();
+        let v = parse_file(&root.join("manifest.json"))?;
+        let pallas = v.get("pallas").and_then(Value::as_bool).unwrap_or(true);
+        let arr = v
+            .get("artifacts")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("manifest: missing artifacts"))?;
+        let mut artifacts = Vec::with_capacity(arr.len());
+        for e in arr {
+            let get_str = |k: &str| -> anyhow::Result<String> {
+                e.get(k)
+                    .and_then(Value::as_str)
+                    .map(str::to_string)
+                    .ok_or_else(|| anyhow::anyhow!("artifact missing {k}"))
+            };
+            let get_usize = |k: &str| -> anyhow::Result<usize> {
+                e.get(k)
+                    .and_then(Value::as_usize)
+                    .ok_or_else(|| anyhow::anyhow!("artifact missing {k}"))
+            };
+            let shape = |k: &str| -> anyhow::Result<Vec<usize>> {
+                Ok(e.get(k)
+                    .and_then(Value::as_arr)
+                    .ok_or_else(|| anyhow::anyhow!("artifact missing {k}"))?
+                    .iter()
+                    .filter_map(Value::as_usize)
+                    .collect())
+            };
+            artifacts.push(ArtifactMeta {
+                name: get_str("name")?,
+                model: get_str("model")?,
+                family: get_str("family")?,
+                batch: get_usize("batch")?,
+                hlo_path: root.join(get_str("hlo")?),
+                weights_path: root.join(get_str("weights")?),
+                golden_path: e
+                    .get("golden")
+                    .and_then(Value::as_str)
+                    .map(|g| root.join(g)),
+                param_count: get_usize("param_count")?,
+                input_shape: shape("input_shape")?,
+                output_shape: shape("output_shape")?,
+                flops_per_batch: e
+                    .get("flops_per_batch")
+                    .and_then(Value::as_u64)
+                    .unwrap_or(0),
+            });
+        }
+        Ok(Manifest { root, artifacts, pallas })
+    }
+
+    /// Default artifacts directory: `$MIG_SERVING_ARTIFACTS` or
+    /// `./artifacts` (relative to the workspace root when run by cargo).
+    pub fn default_root() -> PathBuf {
+        std::env::var("MIG_SERVING_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| {
+                let manifest_dir = env!("CARGO_MANIFEST_DIR");
+                Path::new(manifest_dir).join("artifacts")
+            })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Artifact for (model, batch).
+    pub fn for_model(&self, model: &str, batch: usize) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| a.model == model && a.batch == batch)
+    }
+
+    /// Batch sizes available for a model, ascending.
+    pub fn batches_for(&self, model: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.model == model)
+            .map(|a| a.batch)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn models(&self) -> Vec<&str> {
+        let mut v: Vec<&str> =
+            self.artifacts.iter().map(|a| a.model.as_str()).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        Manifest::default_root().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_checked_in_manifest() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(Manifest::default_root()).unwrap();
+        assert!(m.pallas, "default artifacts are the Pallas lowering");
+        assert_eq!(m.models().len(), 5);
+        for a in &m.artifacts {
+            assert!(a.hlo_path.exists(), "{:?}", a.hlo_path);
+            assert!(a.weights_path.exists(), "{:?}", a.weights_path);
+            assert_eq!(
+                std::fs::metadata(&a.weights_path).unwrap().len(),
+                4 * a.param_count as u64
+            );
+            assert!(a.input_len() > 0 && a.output_len() > 0);
+        }
+        // (model, batch) lookup.
+        let b = m.for_model("bert-base-uncased", 8).unwrap();
+        assert_eq!(b.batch, 8);
+        assert_eq!(b.input_shape[0], 8);
+        assert_eq!(m.batches_for("resnet50"), vec![1, 8]);
+    }
+
+    #[test]
+    fn missing_manifest_is_err() {
+        assert!(Manifest::load("/nonexistent/path").is_err());
+    }
+}

@@ -1,0 +1,104 @@
+//! Per-instance dynamic batching (paper §7: "MIG-SERVING always chooses
+//! the largest batch sizes possible, as far as the inference latency is
+//! smaller than what required by SLOs").
+//!
+//! The batcher drains whatever is queued up to the instance's
+//! configured batch size: it never waits to fill a batch (waiting would
+//! trade SLO latency for throughput the profile already accounts for).
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use crate::spec::ServiceId;
+
+/// One in-flight request.
+#[derive(Debug)]
+pub struct Request {
+    pub service: ServiceId,
+    pub submitted: Instant,
+    /// Closed-loop clients block on this; open-loop leaves it None.
+    pub done: Option<mpsc::SyncSender<()>>,
+}
+
+/// Messages into an instance server.
+#[derive(Debug)]
+pub enum Msg {
+    Req(Request),
+    Stop,
+}
+
+/// Collect a batch: block (with timeout) for the first request, then
+/// drain up to `max_batch - 1` more without waiting.
+/// Returns None on Stop or channel close; re-queues nothing.
+pub fn collect_batch(
+    rx: &mpsc::Receiver<Msg>,
+    max_batch: usize,
+    first_timeout: Duration,
+) -> Option<Vec<Request>> {
+    let first = loop {
+        match rx.recv_timeout(first_timeout) {
+            Ok(Msg::Req(r)) => break r,
+            Ok(Msg::Stop) => return None,
+            Err(mpsc::RecvTimeoutError::Timeout) => continue,
+            Err(mpsc::RecvTimeoutError::Disconnected) => return None,
+        }
+    };
+    let mut batch = vec![first];
+    while batch.len() < max_batch {
+        match rx.try_recv() {
+            Ok(Msg::Req(r)) => batch.push(r),
+            Ok(Msg::Stop) => {
+                // Serve what we have; the caller sees Stop next round.
+                // (Stop is idempotent: re-send it to ourselves.)
+                return Some(batch);
+            }
+            Err(_) => break,
+        }
+    }
+    Some(batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req() -> Msg {
+        Msg::Req(Request { service: 0, submitted: Instant::now(), done: None })
+    }
+
+    #[test]
+    fn drains_up_to_max_batch() {
+        let (tx, rx) = mpsc::channel();
+        for _ in 0..10 {
+            tx.send(req()).unwrap();
+        }
+        let b = collect_batch(&rx, 8, Duration::from_millis(50)).unwrap();
+        assert_eq!(b.len(), 8);
+        let b2 = collect_batch(&rx, 8, Duration::from_millis(50)).unwrap();
+        assert_eq!(b2.len(), 2);
+    }
+
+    #[test]
+    fn single_request_does_not_wait_for_more() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(req()).unwrap();
+        let t0 = Instant::now();
+        let b = collect_batch(&rx, 8, Duration::from_secs(5)).unwrap();
+        assert_eq!(b.len(), 1);
+        assert!(t0.elapsed() < Duration::from_millis(100), "batcher waited");
+    }
+
+    #[test]
+    fn stop_terminates() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(Msg::Stop).unwrap();
+        assert!(collect_batch(&rx, 8, Duration::from_millis(10)).is_none());
+    }
+
+    #[test]
+    fn disconnect_terminates() {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        drop(tx);
+        assert!(collect_batch(&rx, 8, Duration::from_millis(10)).is_none());
+    }
+}

@@ -1,0 +1,139 @@
+//! The PJRT executor thread.
+//!
+//! [`crate::runtime::Engine`] is not `Send` (raw PJRT pointers), so one
+//! dedicated thread owns it and serves inference requests over a
+//! channel — the in-process analogue of each instance being its own
+//! serving process in the paper's k8s deployment.
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use crate::runtime::Manifest;
+
+enum Request {
+    Exec {
+        artifact: String,
+        input: Vec<f32>,
+        reply: mpsc::Sender<anyhow::Result<Vec<f32>>>,
+    },
+    Stop,
+}
+
+/// Cloneable handle to the executor thread.
+#[derive(Clone)]
+pub struct ExecServer {
+    tx: mpsc::Sender<Request>,
+}
+
+/// Owns the thread; dropping stops the executor.
+pub struct ExecServerGuard {
+    tx: mpsc::Sender<Request>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl ExecServer {
+    /// Spawn the executor thread, loading every artifact in `manifest`.
+    /// Returns (handle, guard); clone the handle freely.
+    pub fn spawn(manifest: Manifest) -> anyhow::Result<(ExecServer, ExecServerGuard)> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("pjrt-exec".into())
+            .spawn(move || {
+                // Engine is built in-thread (it is not Send).
+                let mut engine = match crate::runtime::Engine::new() {
+                    Ok(e) => e,
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                if let Err(e) = engine.load_all(&manifest) {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+                let _ = ready_tx.send(Ok(()));
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::Exec { artifact, input, reply } => {
+                            let _ = reply.send(engine.execute(&artifact, &input));
+                        }
+                        Request::Stop => break,
+                    }
+                }
+            })?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("exec thread died during load"))??;
+        Ok((
+            ExecServer { tx: tx.clone() },
+            ExecServerGuard { tx, join: Some(join) },
+        ))
+    }
+
+    /// Synchronous inference round-trip.
+    pub fn exec(&self, artifact: &str, input: Vec<f32>) -> anyhow::Result<Vec<f32>> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(Request::Exec {
+                artifact: artifact.to_string(),
+                input,
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow::anyhow!("exec server stopped"))?;
+        reply_rx.recv().map_err(|_| anyhow::anyhow!("exec server dropped reply"))?
+    }
+}
+
+impl Drop for ExecServerGuard {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Stop);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Option<Manifest> {
+        let root = Manifest::default_root();
+        if root.join("manifest.json").exists() {
+            Some(Manifest::load(root).unwrap())
+        } else {
+            eprintln!("skipping: run `make artifacts` first");
+            None
+        }
+    }
+
+    #[test]
+    fn concurrent_clients_share_the_engine() {
+        let Some(m) = manifest() else { return };
+        let a = m.for_model("resnet50", 1).unwrap().clone();
+        let (server, _guard) = ExecServer::spawn(m).unwrap();
+        let mut joins = Vec::new();
+        for t in 0..4 {
+            let s = server.clone();
+            let name = a.name.clone();
+            let n = a.input_len();
+            joins.push(std::thread::spawn(move || {
+                let input = vec![0.01 * (t + 1) as f32; n];
+                let out = s.exec(&name, input).unwrap();
+                assert_eq!(out.len(), 16);
+                assert!(out.iter().all(|v| v.is_finite()));
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn bad_artifact_name_propagates_error() {
+        let Some(m) = manifest() else { return };
+        let (server, _guard) = ExecServer::spawn(m).unwrap();
+        assert!(server.exec("missing.b1", vec![]).is_err());
+    }
+}

@@ -1,0 +1,200 @@
+//! Load generation (paper §8.3): "multiple inference clients
+//! continuously issue requests ... clients gradually increase the number
+//! of requests per second until the throughput reaches its maximum".
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use crate::spec::ServiceId;
+
+use super::batcher::Request;
+use super::router::Router;
+use super::service::ServingCluster;
+
+/// Result of driving one service.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    pub service: ServiceId,
+    /// Requests completed per second over the measurement window.
+    pub achieved_throughput: f64,
+    pub completed: u64,
+    pub errors: u64,
+    pub p50_ms: f64,
+    pub p90_ms: f64,
+    pub duration: Duration,
+}
+
+/// Load generator over a deployed [`ServingCluster`].
+pub struct LoadGen;
+
+impl LoadGen {
+    /// Closed-loop saturation: `concurrency` workers per service, each
+    /// issuing a request and waiting for its completion, for
+    /// `duration`. With enough workers this measures the deployment's
+    /// *maximum* throughput (the paper's methodology).
+    pub fn saturate(
+        cluster: &ServingCluster,
+        services: &[ServiceId],
+        concurrency: usize,
+        duration: Duration,
+    ) -> Vec<LoadReport> {
+        let stop = Arc::new(AtomicBool::new(false));
+        let t0 = Instant::now();
+        // Reset-free accounting: remember starting counters.
+        let base: Vec<(u64, u64)> = services
+            .iter()
+            .map(|&s| (cluster.metrics[s].completed(), cluster.metrics[s].errors()))
+            .collect();
+
+        std::thread::scope(|scope| {
+            for &svc in services {
+                for _ in 0..concurrency {
+                    let stop2 = stop.clone();
+                    let router: &Router = &cluster.router;
+                    scope.spawn(move || {
+                        while !stop2.load(Ordering::Relaxed) {
+                            let (done_tx, done_rx) = mpsc::sync_channel(1);
+                            let ok = router
+                                .route(Request {
+                                    service: svc,
+                                    submitted: Instant::now(),
+                                    done: Some(done_tx),
+                                })
+                                .is_ok();
+                            if !ok {
+                                break;
+                            }
+                            // Wait for completion (bounded so shutdown
+                            // can't hang us).
+                            let _ = done_rx.recv_timeout(Duration::from_secs(60));
+                        }
+                    });
+                }
+            }
+            std::thread::sleep(duration);
+            stop.store(true, Ordering::Relaxed);
+        });
+        let elapsed = t0.elapsed();
+
+        services
+            .iter()
+            .zip(base)
+            .map(|(&svc, (c0, e0))| {
+                let m = &cluster.metrics[svc];
+                let completed = m.completed() - c0;
+                LoadReport {
+                    service: svc,
+                    achieved_throughput: completed as f64 / elapsed.as_secs_f64(),
+                    completed,
+                    errors: m.errors() - e0,
+                    p50_ms: m.latency_percentile(50.0),
+                    p90_ms: m.latency_percentile(90.0),
+                    duration: elapsed,
+                }
+            })
+            .collect()
+    }
+
+    /// Concurrent open-loop arrival for many services at once: service
+    /// `i` receives requests at `rates[i]` req/s for `duration`.
+    /// Completion is tracked through metrics; the report's
+    /// `achieved_throughput` is completions/duration (≈ the offered rate
+    /// when the deployment keeps up — the Fig 14 satisfaction measure).
+    pub fn open_loop_all(
+        cluster: &ServingCluster,
+        rates: &[f64],
+        duration: Duration,
+    ) -> Vec<LoadReport> {
+        let t0 = Instant::now();
+        let base: Vec<(u64, u64)> = (0..rates.len())
+            .map(|s| (cluster.metrics[s].completed(), cluster.metrics[s].errors()))
+            .collect();
+        std::thread::scope(|scope| {
+            for (svc, &rate) in rates.iter().enumerate() {
+                if rate <= 0.0 {
+                    continue;
+                }
+                let router: &Router = &cluster.router;
+                scope.spawn(move || {
+                    let interval = Duration::from_secs_f64(1.0 / rate);
+                    let start = Instant::now();
+                    let mut next = start;
+                    while start.elapsed() < duration {
+                        let now = Instant::now();
+                        if now < next {
+                            std::thread::sleep(next - now);
+                        }
+                        let _ = router.route(Request {
+                            service: svc,
+                            submitted: Instant::now(),
+                            done: None,
+                        });
+                        next += interval;
+                    }
+                });
+            }
+        });
+        // Drain window: let in-flight batches finish.
+        std::thread::sleep(Duration::from_millis(500));
+        let elapsed = t0.elapsed();
+        (0..rates.len())
+            .zip(base)
+            .map(|(svc, (c0, e0))| {
+                let m = &cluster.metrics[svc];
+                let completed = m.completed() - c0;
+                LoadReport {
+                    service: svc,
+                    achieved_throughput: completed as f64 / duration.as_secs_f64(),
+                    completed,
+                    errors: m.errors() - e0,
+                    p50_ms: m.latency_percentile(50.0),
+                    p90_ms: m.latency_percentile(90.0),
+                    duration: elapsed,
+                }
+            })
+            .collect()
+    }
+
+    /// Open-loop arrival at a fixed rate (req/s) for `duration`
+    /// (fire-and-forget; completions tracked by metrics).
+    pub fn open_loop(
+        cluster: &ServingCluster,
+        service: ServiceId,
+        rate: f64,
+        duration: Duration,
+    ) -> LoadReport {
+        assert!(rate > 0.0);
+        let t0 = Instant::now();
+        let c0 = cluster.metrics[service].completed();
+        let e0 = cluster.metrics[service].errors();
+        let interval = Duration::from_secs_f64(1.0 / rate);
+        let mut next = t0;
+        while t0.elapsed() < duration {
+            let now = Instant::now();
+            if now < next {
+                std::thread::sleep(next - now);
+            }
+            let _ = cluster.router.route(Request {
+                service,
+                submitted: Instant::now(),
+                done: None,
+            });
+            next += interval;
+        }
+        // Drain window: let in-flight work finish.
+        std::thread::sleep(Duration::from_millis(300));
+        let elapsed = t0.elapsed();
+        let m = &cluster.metrics[service];
+        let completed = m.completed() - c0;
+        LoadReport {
+            service,
+            achieved_throughput: completed as f64 / duration.as_secs_f64(),
+            completed,
+            errors: m.errors() - e0,
+            p50_ms: m.latency_percentile(50.0),
+            p90_ms: m.latency_percentile(90.0),
+            duration: elapsed,
+        }
+    }
+}

@@ -1,0 +1,99 @@
+//! Serving metrics: per-service counters and latency histograms,
+//! shared between instance servers and the load generator.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::stats::Histogram;
+
+/// Metrics for one service.
+#[derive(Debug)]
+pub struct ServiceMetrics {
+    completed: AtomicU64,
+    errors: AtomicU64,
+    /// Latency histogram, milliseconds (1 ms buckets up to 60 s).
+    latency: Mutex<Histogram>,
+}
+
+impl ServiceMetrics {
+    pub fn new() -> ServiceMetrics {
+        ServiceMetrics {
+            completed: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            latency: Mutex::new(Histogram::new(1.0, 60_000)),
+        }
+    }
+
+    pub fn record_completion(&self, latency: Duration) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.latency
+            .lock()
+            .unwrap()
+            .record(latency.as_secs_f64() * 1000.0);
+    }
+
+    pub fn record_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.completed.load(Ordering::Relaxed)
+    }
+
+    pub fn errors(&self) -> u64 {
+        self.errors.load(Ordering::Relaxed)
+    }
+
+    /// p-th latency percentile in ms (0 if nothing recorded).
+    pub fn latency_percentile(&self, p: f64) -> f64 {
+        self.latency.lock().unwrap().percentile(p)
+    }
+
+    pub fn latency_mean(&self) -> f64 {
+        self.latency.lock().unwrap().mean()
+    }
+}
+
+impl Default for ServiceMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_reports() {
+        let m = ServiceMetrics::new();
+        for i in 1..=100 {
+            m.record_completion(Duration::from_millis(i));
+        }
+        m.record_error();
+        assert_eq!(m.completed(), 100);
+        assert_eq!(m.errors(), 1);
+        let p90 = m.latency_percentile(90.0);
+        assert!((85.0..=95.0).contains(&p90), "p90={p90}");
+        assert!((m.latency_mean() - 50.5).abs() < 1.5);
+    }
+
+    #[test]
+    fn thread_safe() {
+        let m = std::sync::Arc::new(ServiceMetrics::new());
+        let mut joins = Vec::new();
+        for _ in 0..4 {
+            let mm = m.clone();
+            joins.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    mm.record_completion(Duration::from_millis(10));
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        assert_eq!(m.completed(), 4000);
+    }
+}

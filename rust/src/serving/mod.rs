@@ -1,0 +1,32 @@
+//! The serving runtime (request path; paper §8.3).
+//!
+//! Python never runs here. A deployment's instances become serving
+//! threads; requests flow:
+//!
+//! ```text
+//! loadgen → router (weighted by instance throughput)
+//!         → per-instance batcher (largest batch under the latency SLO)
+//!         → instance server (paces at the instance's profiled service
+//!           time; real inference via the PJRT exec server)
+//!         → completion (latency histogram)
+//! ```
+//!
+//! The *pacing model* stands in for MIG hardware: an instance of size
+//! s/7 completes a batch in `batch / profiled_throughput` seconds (its
+//! profile-calibrated service time) while the actual tensor computation
+//! runs on the shared PJRT CPU engine — so the numbers served are real
+//! model outputs and the throughput/latency envelope is the profile's
+//! (DESIGN.md §1).
+
+pub mod batcher;
+pub mod exec_server;
+pub mod loadgen;
+pub mod metrics;
+pub mod router;
+pub mod service;
+
+pub use exec_server::ExecServer;
+pub use loadgen::{LoadGen, LoadReport};
+pub use metrics::ServiceMetrics;
+pub use router::Router;
+pub use service::{InstanceHandle, ServingCluster};

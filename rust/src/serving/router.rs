@@ -1,0 +1,101 @@
+//! The request router: load-balances each service's requests across its
+//! instances, weighted by profiled instance throughput (§7: "MIG-SERVING
+//! relies on load balancing systems to dispatch user requests
+//! accordingly" — this is that system).
+
+use std::sync::mpsc;
+use std::sync::Mutex;
+
+use crate::spec::ServiceId;
+use crate::util::rng::Rng;
+
+use super::batcher::{Msg, Request};
+
+/// Routing table: per-service weighted instance queues.
+pub struct Router {
+    per_service: Vec<Vec<(mpsc::Sender<Msg>, f64)>>,
+    rng: Mutex<Rng>,
+}
+
+impl Router {
+    pub fn new(n_services: usize, seed: u64) -> Router {
+        Router {
+            per_service: (0..n_services).map(|_| Vec::new()).collect(),
+            rng: Mutex::new(Rng::new(seed)),
+        }
+    }
+
+    /// Register an instance queue for a service with its weight
+    /// (profiled throughput).
+    pub fn add_instance(&mut self, service: ServiceId, tx: mpsc::Sender<Msg>, weight: f64) {
+        assert!(weight > 0.0);
+        self.per_service[service].push((tx, weight));
+    }
+
+    pub fn instances_of(&self, service: ServiceId) -> usize {
+        self.per_service[service].len()
+    }
+
+    /// Dispatch a request to one of its service's instances
+    /// (throughput-weighted random choice).
+    pub fn route(&self, req: Request) -> anyhow::Result<()> {
+        let pool = &self.per_service[req.service];
+        anyhow::ensure!(
+            !pool.is_empty(),
+            "service {} has no instances",
+            req.service
+        );
+        let weights: Vec<f64> = pool.iter().map(|(_, w)| *w).collect();
+        let ix = self.rng.lock().unwrap().weighted(&weights);
+        pool[ix]
+            .0
+            .send(Msg::Req(req))
+            .map_err(|_| anyhow::anyhow!("instance queue closed"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    fn req(service: ServiceId) -> Request {
+        Request { service, submitted: Instant::now(), done: None }
+    }
+
+    #[test]
+    fn routes_proportionally_to_weight() {
+        let mut router = Router::new(1, 7);
+        let (tx_a, rx_a) = mpsc::channel();
+        let (tx_b, rx_b) = mpsc::channel();
+        router.add_instance(0, tx_a, 30.0);
+        router.add_instance(0, tx_b, 10.0);
+        for _ in 0..4000 {
+            router.route(req(0)).unwrap();
+        }
+        let a = rx_a.try_iter().count();
+        let b = rx_b.try_iter().count();
+        assert_eq!(a + b, 4000);
+        let frac = a as f64 / 4000.0;
+        assert!((0.70..0.80).contains(&frac), "weighted split off: {frac}");
+    }
+
+    #[test]
+    fn unknown_instances_error() {
+        let router = Router::new(2, 1);
+        assert!(router.route(req(1)).is_err());
+    }
+
+    #[test]
+    fn services_isolated() {
+        let mut router = Router::new(2, 3);
+        let (tx0, rx0) = mpsc::channel();
+        let (tx1, rx1) = mpsc::channel();
+        router.add_instance(0, tx0, 1.0);
+        router.add_instance(1, tx1, 1.0);
+        router.route(req(0)).unwrap();
+        router.route(req(1)).unwrap();
+        assert_eq!(rx0.try_iter().count(), 1);
+        assert_eq!(rx1.try_iter().count(), 1);
+    }
+}

@@ -1,0 +1,234 @@
+//! Instance servers and deployment bring-up.
+//!
+//! Each GPU instance of a deployment becomes one serving thread that
+//! (1) drains its batch queue, (2) runs real inference through the
+//! shared PJRT exec server, (3) paces completion at the instance's
+//! profile-calibrated service time (`n / throughput` — the MIG-size
+//! stand-in, DESIGN.md §1), and (4) records completions.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use crate::optimizer::Deployment;
+use crate::runtime::Manifest;
+use crate::spec::Workload;
+use crate::util::goldens::golden_input;
+
+use super::batcher::{collect_batch, Msg};
+use super::exec_server::ExecServer;
+use super::metrics::ServiceMetrics;
+use super::router::Router;
+
+/// Handle to a spawned instance thread.
+pub struct InstanceHandle {
+    pub service: usize,
+    pub tx: mpsc::Sender<Msg>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+/// A fully deployed serving cluster: router + instance threads +
+/// per-service metrics.
+pub struct ServingCluster {
+    pub router: Router,
+    pub metrics: Vec<Arc<ServiceMetrics>>,
+    instances: Vec<InstanceHandle>,
+    stop: Arc<AtomicBool>,
+}
+
+impl ServingCluster {
+    /// Bring up every instance of `deployment`.
+    ///
+    /// Per instance: artifact = (model, largest available artifact batch
+    /// ≤ its configured batch); pacing throughput = its profiled
+    /// throughput from the deployment.
+    pub fn deploy(
+        deployment: &Deployment,
+        workload: &Workload,
+        manifest: &Manifest,
+        exec: ExecServer,
+        seed: u64,
+    ) -> anyhow::Result<ServingCluster> {
+        let n = workload.len();
+        let mut router = Router::new(n, seed);
+        let metrics: Vec<Arc<ServiceMetrics>> =
+            (0..n).map(|_| Arc::new(ServiceMetrics::new())).collect();
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut instances = Vec::new();
+
+        for g in &deployment.gpus {
+            for a in &g.assigns {
+                let svc = &workload.services[a.service];
+                // Largest artifact batch not exceeding the configured
+                // batch (artifacts ship b1/b8; configs may say 16/32).
+                let batches = manifest.batches_for(&svc.model);
+                anyhow::ensure!(
+                    !batches.is_empty(),
+                    "no artifacts for model {}",
+                    svc.model
+                );
+                // All artifacts usable by this instance (batch sizes up
+                // to its configured batch; always at least the smallest).
+                let mut metas: Vec<crate::runtime::ArtifactMeta> = batches
+                    .iter()
+                    .copied()
+                    .filter(|&b| b <= a.batch.max(batches[0]))
+                    .map(|b| manifest.for_model(&svc.model, b).expect("listed").clone())
+                    .collect();
+                metas.sort_by_key(|m| m.batch);
+                let (tx, rx) = mpsc::channel::<Msg>();
+                router.add_instance(a.service, tx.clone(), a.throughput);
+                let m = metrics[a.service].clone();
+                let exec2 = exec.clone();
+                let stop2 = stop.clone();
+                let throughput = a.throughput;
+                // Collected batches are capped at the largest artifact
+                // batch so one exec covers the whole collected batch.
+                let max_batch = metas.last().unwrap().batch.max(1);
+                let service = a.service;
+                let join = std::thread::Builder::new()
+                    .name(format!("inst-{}-{}", svc.model, a.placement.size.slices()))
+                    .spawn(move || {
+                        instance_loop(
+                            rx, metas, exec2, m, stop2, throughput, max_batch, service,
+                        );
+                    })?;
+                instances.push(InstanceHandle { service, tx, join: Some(join) });
+            }
+        }
+        Ok(ServingCluster { router, metrics, instances, stop })
+    }
+
+    pub fn num_instances(&self) -> usize {
+        self.instances.len()
+    }
+
+    /// Stop all instance threads and wait for them.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        for inst in &self.instances {
+            let _ = inst.tx.send(Msg::Stop);
+        }
+        for inst in &mut self.instances {
+            if let Some(j) = inst.join.take() {
+                let _ = j.join();
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn instance_loop(
+    rx: mpsc::Receiver<Msg>,
+    metas: Vec<crate::runtime::ArtifactMeta>,
+    exec: ExecServer,
+    metrics: Arc<ServiceMetrics>,
+    stop: Arc<AtomicBool>,
+    throughput: f64,
+    max_batch: usize,
+    _service: usize,
+) {
+    // Deterministic inputs per artifact batch size, reused for every
+    // inference (request payloads are synthetic; the *computation* is
+    // real).
+    let inputs: Vec<Vec<f32>> =
+        metas.iter().map(|m| golden_input(m.input_len())).collect();
+    while !stop.load(Ordering::SeqCst) {
+        let Some(batch) = collect_batch(&rx, max_batch, Duration::from_millis(50))
+        else {
+            break;
+        };
+        let t0 = Instant::now();
+        // Smallest artifact whose batch covers the collected requests —
+        // a 1-request batch must not pay a batch-8 execution.
+        let ix = metas
+            .iter()
+            .position(|m| m.batch >= batch.len())
+            .unwrap_or(metas.len() - 1);
+        // Real inference through PJRT (one artifact-batch worth; the
+        // pace below accounts for the whole collected batch).
+        let result = exec.exec(&metas[ix].name, inputs[ix].clone());
+        // Pace: profile-calibrated service time for `batch.len()`
+        // requests on this instance size.
+        let service_time = Duration::from_secs_f64(batch.len() as f64 / throughput);
+        if let Some(remaining) = service_time.checked_sub(t0.elapsed()) {
+            std::thread::sleep(remaining);
+        }
+        match result {
+            Ok(_) => {
+                let now = Instant::now();
+                for req in batch {
+                    metrics.record_completion(now - req.submitted);
+                    if let Some(done) = req.done {
+                        let _ = done.try_send(());
+                    }
+                }
+            }
+            Err(_) => {
+                for req in batch {
+                    metrics.record_error();
+                    if let Some(done) = req.done {
+                        let _ = done.try_send(());
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer::{Greedy, OptimizerProcedure, ProblemCtx};
+    use crate::perf::ProfileBank;
+    use crate::spec::Slo;
+    use crate::serving::batcher::Request;
+
+    fn manifest() -> Option<Manifest> {
+        let root = Manifest::default_root();
+        root.join("manifest.json")
+            .exists()
+            .then(|| Manifest::load(root).unwrap())
+    }
+
+    #[test]
+    fn deploy_serve_shutdown() {
+        let Some(m) = manifest() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let bank = ProfileBank::synthetic();
+        let w = Workload::new(
+            "serve-test",
+            vec![
+                ("resnet50".to_string(), Slo::new(40.0, 400.0)),
+                ("bert-base-uncased".to_string(), Slo::new(30.0, 400.0)),
+            ],
+        );
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let dep = Greedy::new().solve(&ctx).unwrap();
+        let (exec, _guard) = ExecServer::spawn(m).unwrap();
+        let cluster = ServingCluster::deploy(&dep, &w, &manifest().unwrap(), exec, 1)
+            .unwrap();
+        assert!(cluster.num_instances() > 0);
+
+        // Fire a few closed-loop requests at each service.
+        for svc in 0..w.len() {
+            let (done_tx, done_rx) = mpsc::sync_channel(1);
+            cluster
+                .router
+                .route(Request {
+                    service: svc,
+                    submitted: Instant::now(),
+                    done: Some(done_tx),
+                })
+                .unwrap();
+            done_rx
+                .recv_timeout(Duration::from_secs(30))
+                .expect("request completed");
+            assert_eq!(cluster.metrics[svc].completed(), 1, "svc {svc}");
+            assert_eq!(cluster.metrics[svc].errors(), 0);
+        }
+        cluster.shutdown();
+    }
+}

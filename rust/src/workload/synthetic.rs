@@ -1,0 +1,105 @@
+//! The four simulation workloads (§8.1): 24 models, SLO throughputs
+//! from normal/lognormal distributions, 100 ms latency SLO,
+//! "representing a median-sized GPU cluster" (hundreds of GPUs).
+
+use crate::perf::ProfileBank;
+use crate::spec::{Slo, Workload};
+use crate::util::rng::Rng;
+
+/// The paper's four workload names.
+pub const SIMULATION_WORKLOADS: [&str; 4] =
+    ["normal-1", "normal-2", "lognormal-1", "lognormal-2"];
+
+/// Latency SLO used by all simulation workloads (§8: "100ms, an
+/// acceptable waiting time under most scenarios").
+pub const LATENCY_SLO_MS: f64 = 100.0;
+
+/// Generate one of the named simulation workloads. The throughput scale
+/// is calibrated against each model's own 7/7 capability so the whole
+/// workload lands in the hundreds-of-GPUs regime.
+pub fn simulation_workload(bank: &ProfileBank, name: &str) -> Workload {
+    let (dist, seed): (fn(&mut Rng) -> f64, u64) = match name {
+        // Multipliers: how many "full GPUs worth" of demand per service.
+        "normal-1" => (|r| r.normal_ms(10.0, 4.0).max(0.5), 0xA1),
+        "normal-2" => (|r| r.normal_ms(16.0, 6.0).max(0.5), 0xA2),
+        "lognormal-1" => (|r| r.lognormal(2.0, 0.6), 0xB1),
+        "lognormal-2" => (|r| r.lognormal(2.4, 0.8), 0xB2),
+        other => panic!("unknown simulation workload {other:?}"),
+    };
+    let mut rng = Rng::new(seed);
+    let services = bank
+        .simulation_models()
+        .into_iter()
+        .map(|model| {
+            let prof = bank.get(&model).expect("bank model");
+            // Demand in units of the model's 7/7 effective throughput
+            // under the latency SLO (falls back to its best size if 7/7
+            // cannot meet the latency bound — rare).
+            let unit = prof
+                .effective_throughput(crate::mig::InstanceSize::Seven, LATENCY_SLO_MS)
+                .or_else(|| {
+                    crate::mig::InstanceSize::ALL
+                        .iter()
+                        .rev()
+                        .find_map(|&s| prof.effective_throughput(s, LATENCY_SLO_MS))
+                })
+                .expect("every bank model serves under 100ms at some size");
+            let thr = unit * dist(&mut rng);
+            (model, Slo::new(thr, LATENCY_SLO_MS))
+        })
+        .collect();
+    Workload::new(name, services)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer::{lower_bound_gpus, ProblemCtx};
+
+    #[test]
+    fn four_workloads_generate() {
+        let bank = ProfileBank::synthetic();
+        for name in SIMULATION_WORKLOADS {
+            let w = simulation_workload(&bank, name);
+            assert_eq!(w.len(), 24, "{name}");
+            assert_eq!(w.name, name);
+            for s in &w.services {
+                assert!(s.slo.throughput > 0.0);
+                assert_eq!(s.slo.latency_ms, LATENCY_SLO_MS);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let bank = ProfileBank::synthetic();
+        let a = simulation_workload(&bank, "normal-1");
+        let b = simulation_workload(&bank, "normal-1");
+        assert_eq!(a, b);
+        let c = simulation_workload(&bank, "normal-2");
+        assert_ne!(a.services[0].slo.throughput, c.services[0].slo.throughput);
+    }
+
+    #[test]
+    fn sized_for_hundreds_of_gpus() {
+        // The paper's simulation workloads "use several hundreds of
+        // GPUs"; check via the cheap lower bound.
+        let bank = ProfileBank::synthetic();
+        for name in SIMULATION_WORKLOADS {
+            let w = simulation_workload(&bank, name);
+            let ctx = ProblemCtx::new(&bank, &w).unwrap();
+            let lb = lower_bound_gpus(&ctx);
+            assert!(
+                (80..2000).contains(&lb),
+                "{name}: lower bound {lb} not in the hundreds regime"
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown simulation workload")]
+    fn unknown_name_panics() {
+        let bank = ProfileBank::synthetic();
+        simulation_workload(&bank, "uniform-3");
+    }
+}

@@ -1,0 +1,258 @@
+//! Integration tests: optimizer → controller → cluster, end to end,
+//! plus cross-cutting property tests over random workloads.
+
+use mig_serving::cluster::{ClusterState, Executor};
+use mig_serving::controller::Controller;
+use mig_serving::mig::InstanceSize;
+use mig_serving::optimizer::{
+    lower_bound_gpus, Deployment, GaConfig, Greedy, Mcts, MctsConfig,
+    OptimizerProcedure, ProblemCtx, TwoPhase, TwoPhaseConfig,
+};
+use mig_serving::perf::ProfileBank;
+use mig_serving::spec::{Slo, Workload};
+use mig_serving::util::prop;
+use mig_serving::util::rng::Rng;
+use mig_serving::workload::{daytime, night, simulation_workload};
+
+/// Random workload over the bank's simulation models.
+fn random_workload(rng: &mut Rng, bank: &ProfileBank, max_services: usize) -> Workload {
+    let models = bank.simulation_models();
+    let n = rng.range(1, max_services + 1);
+    let services = (0..n)
+        .map(|i| {
+            let model = models[rng.below(models.len())].clone();
+            let prof = bank.get(&model).unwrap();
+            let unit = InstanceSize::ALL
+                .iter()
+                .rev()
+                .find_map(|&s| prof.effective_throughput(s, 150.0))
+                .unwrap();
+            let thr = unit * rng.f64_range(0.3, 6.0);
+            let _ = i;
+            (model, Slo::new(thr, 150.0))
+        })
+        .collect();
+    Workload::new("random", services)
+}
+
+/// PROPERTY: every optimizer procedure returns a valid deployment whose
+/// GPU count is at least the rule-free lower bound, with only legal
+/// partitions.
+#[test]
+fn property_optimizers_valid_and_bounded() {
+    let bank = ProfileBank::synthetic();
+    prop::check(
+        "optimizer-validity",
+        12,
+        0xFEED,
+        |g| {
+            let mut rng = g.rng.fork();
+            random_workload(&mut rng, &bank, 1 + g.size(1, 7))
+        },
+        |w| {
+            let ctx = ProblemCtx::new(&bank, w).map_err(|e| e.to_string())?;
+            let lb = lower_bound_gpus(&ctx);
+            for (name, dep) in [
+                ("greedy", Greedy::new().solve(&ctx).map_err(|e| e.to_string())?),
+                (
+                    "mcts",
+                    Mcts::new(MctsConfig { iterations: 25, ..Default::default() })
+                        .solve(&ctx)
+                        .map_err(|e| e.to_string())?,
+                ),
+            ] {
+                if !dep.is_valid(&ctx) {
+                    return Err(format!("{name}: invalid deployment"));
+                }
+                if dep.num_gpus() < lb {
+                    return Err(format!(
+                        "{name}: {} GPUs below lower bound {lb}",
+                        dep.num_gpus()
+                    ));
+                }
+                for gpu in &dep.gpus {
+                    // partition() panics if illegal; total slices <= 7.
+                    let part = gpu.partition();
+                    if part.used_slices() > 7 {
+                        return Err("overfull GPU".to_string());
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// PROPERTY: transitions between random deployments preserve the
+/// min(old, new) throughput bound for every service and end in a state
+/// realizing the target.
+#[test]
+fn property_transitions_transparent() {
+    let bank = ProfileBank::synthetic();
+    prop::check(
+        "transition-transparency",
+        8,
+        0xBEEF,
+        |g| {
+            let mut rng = g.rng.fork();
+            let models = bank.realworld_models();
+            let mk = |rng: &mut Rng| -> Workload {
+                Workload::new(
+                    "t",
+                    models
+                        .iter()
+                        .map(|m| {
+                            (m.clone(), Slo::new(rng.f64_range(20.0, 400.0), 600.0))
+                        })
+                        .collect(),
+                )
+            };
+            (mk(&mut rng), mk(&mut rng))
+        },
+        |(from, to)| {
+            let fctx = ProblemCtx::new(&bank, from).map_err(|e| e.to_string())?;
+            let tctx = ProblemCtx::new(&bank, to).map_err(|e| e.to_string())?;
+            let fdep = Greedy::new().solve(&fctx).map_err(|e| e.to_string())?;
+            let tdep = Greedy::new().solve(&tctx).map_err(|e| e.to_string())?;
+            let mut cluster = ClusterState::new(3, 8);
+            if fdep.num_gpus() > 20 || tdep.num_gpus() > 20 {
+                return Ok(()); // out of testbed range; skip case
+            }
+            let controller = Controller::new(from.len());
+            let mut ex = Executor::new(7);
+            controller
+                .transition(&mut cluster, &fdep, &mut ex)
+                .map_err(|e| format!("bring-up: {e}"))?;
+            let outcome = controller
+                .transition(&mut cluster, &tdep, &mut ex)
+                .map_err(|e| format!("transition: {e}"))?;
+            for i in 0..from.len() {
+                let bound =
+                    from.services[i].slo.throughput.min(to.services[i].slo.throughput);
+                let seen = outcome.report.min_service_throughput[i];
+                if seen < bound - 1e-6 {
+                    return Err(format!(
+                        "service {i} dipped to {seen} < min(old,new) {bound}"
+                    ));
+                }
+            }
+            if cluster.used_gpus().len() != tdep.num_gpus() {
+                return Err("wrong final GPU count".to_string());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Two-phase never does worse than its own fast phase, across the
+/// simulation workloads (subset for test time).
+#[test]
+fn two_phase_no_worse_than_greedy() {
+    let bank = ProfileBank::synthetic();
+    let w = simulation_workload(&bank, "normal-1");
+    let ctx = ProblemCtx::new(&bank, &w).unwrap();
+    let out = TwoPhase::new(TwoPhaseConfig {
+        ga: GaConfig {
+            rounds: 2,
+            mcts: MctsConfig { iterations: 20, ..Default::default() },
+            ..Default::default()
+        },
+    })
+    .optimize(&ctx)
+    .unwrap();
+    assert!(out.best.num_gpus() <= out.fast.num_gpus());
+    assert!(out.best.is_valid(&ctx));
+}
+
+/// The §8.2 experiment shape: day ≈ 16 GPUs, night ≈ 5, and a valid
+/// round-trip through the controller.
+#[test]
+fn day_night_round_trip() {
+    let bank = ProfileBank::synthetic();
+    let day = daytime(&bank);
+    let night_w = night(&bank);
+    let dctx = ProblemCtx::new(&bank, &day).unwrap();
+    let nctx = ProblemCtx::new(&bank, &night_w).unwrap();
+    let ddep = Greedy::new().solve(&dctx).unwrap();
+    let ndep = Greedy::new().solve(&nctx).unwrap();
+
+    let mut cluster = ClusterState::new(3, 8);
+    let controller = Controller::new(day.len());
+    let mut ex = Executor::new(99);
+    controller.transition(&mut cluster, &ddep, &mut ex).unwrap();
+    let day_used = cluster.used_gpus().len();
+    controller.transition(&mut cluster, &ndep, &mut ex).unwrap();
+    let night_used = cluster.used_gpus().len();
+    controller.transition(&mut cluster, &ddep, &mut ex).unwrap();
+    assert_eq!(cluster.used_gpus().len(), day_used);
+    assert!(night_used < day_used);
+}
+
+/// Deployment serialization survives a JSON round trip at the workload
+/// level (the CLI's config format).
+#[test]
+fn workload_json_cli_roundtrip() {
+    let bank = ProfileBank::synthetic();
+    let w = simulation_workload(&bank, "lognormal-1");
+    let v = w.to_json();
+    let parsed = mig_serving::util::json::parse(&v.to_pretty()).unwrap();
+    let back = Workload::from_json(&parsed).unwrap();
+    assert_eq!(back, w);
+}
+
+/// Baselines order sanely on all four simulation workloads: MIG-Serving
+/// <= MIX and <= 7/7; everything >= lower bound.
+#[test]
+fn baseline_ordering_all_workloads() {
+    use mig_serving::baselines::{a100_7x17_gpus, a100_mix_gpus, a100_whole_gpus};
+    let bank = ProfileBank::synthetic();
+    for name in mig_serving::workload::SIMULATION_WORKLOADS {
+        let w = simulation_workload(&bank, name);
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let lb = lower_bound_gpus(&ctx);
+        let ours = Greedy::new().solve(&ctx).unwrap().num_gpus();
+        let whole = a100_whole_gpus(&ctx);
+        let split = a100_7x17_gpus(&ctx);
+        let mix = a100_mix_gpus(&ctx);
+        assert!(ours >= lb, "{name}");
+        assert!(ours <= whole, "{name}: {ours} vs whole {whole}");
+        assert!(ours <= mix, "{name}: {ours} vs mix {mix}");
+        assert!(ours <= split, "{name}: {ours} vs split {split}");
+    }
+}
+
+/// Failure injection: a workload whose latency SLO is unserviceable is
+/// rejected up front, not mid-solve.
+#[test]
+fn infeasible_latency_rejected_early() {
+    let bank = ProfileBank::synthetic();
+    let w = Workload::new(
+        "impossible",
+        vec![("roberta-large".to_string(), Slo::new(10.0, 0.001))],
+    );
+    assert!(ProblemCtx::new(&bank, &w).is_err());
+}
+
+/// Unknown model names are rejected.
+#[test]
+fn unknown_model_rejected() {
+    let bank = ProfileBank::synthetic();
+    let w = Workload::new(
+        "unknown",
+        vec![("not-a-model".to_string(), Slo::new(10.0, 100.0))],
+    );
+    assert!(ProblemCtx::new(&bank, &w).is_err());
+}
+
+/// An empty deployment is valid only for an empty workload; for a real
+/// workload it must be invalid.
+#[test]
+fn empty_deployment_invalid() {
+    let bank = ProfileBank::synthetic();
+    let w = Workload::new(
+        "one",
+        vec![("resnet50".to_string(), Slo::new(10.0, 100.0))],
+    );
+    let ctx = ProblemCtx::new(&bank, &w).unwrap();
+    assert!(!Deployment::empty().is_valid(&ctx));
+}

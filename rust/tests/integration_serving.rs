@@ -1,0 +1,101 @@
+//! Integration tests across the runtime + serving layers: artifacts →
+//! PJRT → router/batcher → metrics. Skipped politely when `make
+//! artifacts` has not run.
+
+use std::time::Duration;
+
+use mig_serving::optimizer::{Greedy, OptimizerProcedure, ProblemCtx};
+use mig_serving::perf::ProfileBank;
+use mig_serving::runtime::Manifest;
+use mig_serving::serving::{ExecServer, LoadGen, ServingCluster};
+use mig_serving::spec::{Slo, Workload};
+use mig_serving::workload::scaled_realworld;
+
+fn manifest() -> Option<Manifest> {
+    let root = Manifest::default_root();
+    if root.join("manifest.json").exists() {
+        Some(Manifest::load(root).unwrap())
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+/// End-to-end: optimizer deployment served on PJRT meets most of its
+/// (scaled-down) SLO under open-loop load at the required rate.
+#[test]
+fn serve_night_workload_meets_slo() {
+    let Some(m) = manifest() else { return };
+    let bank = ProfileBank::synthetic();
+    let w = scaled_realworld(&bank, "night-it", 6.0, true);
+    let ctx = ProblemCtx::new(&bank, &w).unwrap();
+    let dep = Greedy::new().solve(&ctx).unwrap();
+    let (exec, _guard) = ExecServer::spawn(m.clone()).unwrap();
+    let cluster = ServingCluster::deploy(&dep, &w, &m, exec, 3).unwrap();
+    let rates: Vec<f64> = w.services.iter().map(|s| s.slo.throughput).collect();
+    let reports = LoadGen::open_loop_all(&cluster, &rates, Duration::from_secs(3));
+    let mut total_req = 0.0;
+    let mut total_got = 0.0;
+    for r in &reports {
+        total_req += rates[r.service];
+        total_got += r.achieved_throughput;
+        assert_eq!(r.errors, 0, "service {} saw errors", r.service);
+    }
+    let satisfaction = total_got / total_req;
+    assert!(
+        satisfaction > 0.80,
+        "aggregate satisfaction {satisfaction:.2} too low"
+    );
+    cluster.shutdown();
+}
+
+/// Saturation exceeds the SLO requirement (capacity headroom exists).
+#[test]
+fn saturation_reaches_capacity() {
+    let Some(m) = manifest() else { return };
+    let bank = ProfileBank::synthetic();
+    let w = Workload::new(
+        "sat",
+        vec![("bert-base-uncased".to_string(), Slo::new(20.0, 500.0))],
+    );
+    let ctx = ProblemCtx::new(&bank, &w).unwrap();
+    let dep = Greedy::new().solve(&ctx).unwrap();
+    let (exec, _guard) = ExecServer::spawn(m.clone()).unwrap();
+    let cluster = ServingCluster::deploy(&dep, &w, &m, exec, 5).unwrap();
+    let reports = LoadGen::saturate(&cluster, &[0], 8, Duration::from_secs(3));
+    // Saturated throughput should be at least the SLO (the deployment
+    // was sized for it) — instance granularity usually overshoots.
+    assert!(
+        reports[0].achieved_throughput >= 20.0 * 0.9,
+        "saturated at {:.1} req/s < SLO 20",
+        reports[0].achieved_throughput
+    );
+    cluster.shutdown();
+}
+
+/// The batch policy respects artifact availability: every model in the
+/// real-world set has b1+b8 artifacts, and serving picks the smallest
+/// adequate one (verified indirectly: single requests complete fast).
+#[test]
+fn single_request_latency_uses_small_batch() {
+    let Some(m) = manifest() else { return };
+    let bank = ProfileBank::synthetic();
+    let w = Workload::new(
+        "lat",
+        vec![("bert-base-uncased".to_string(), Slo::new(30.0, 500.0))],
+    );
+    let ctx = ProblemCtx::new(&bank, &w).unwrap();
+    let dep = Greedy::new().solve(&ctx).unwrap();
+    let (exec, _guard) = ExecServer::spawn(m.clone()).unwrap();
+    let cluster = ServingCluster::deploy(&dep, &w, &m, exec, 11).unwrap();
+    // One request at a time: latency ≈ pace(1)/thr + b1 exec, far under
+    // the batch-8 service time.
+    let reports = LoadGen::open_loop_all(&cluster, &[2.0], Duration::from_secs(2));
+    assert!(reports[0].completed >= 2);
+    assert!(
+        reports[0].p90_ms < 1000.0,
+        "p90 {}ms too high for single-request load",
+        reports[0].p90_ms
+    );
+    cluster.shutdown();
+}
