@@ -7,7 +7,9 @@
 //! ```
 
 use mig_serving::baselines::{a100_7x17_gpus, a100_mix_gpus, a100_whole_gpus};
-use mig_serving::optimizer::{lower_bound_gpus, Greedy, OptimizerProcedure, ProblemCtx};
+use mig_serving::optimizer::{
+    lower_bound_gpus, OptimizerPipeline, PipelineBudget, ProblemCtx,
+};
 use mig_serving::perf::ProfileBank;
 use mig_serving::spec::{Slo, Workload};
 use mig_serving::util::table::Table;
@@ -32,7 +34,8 @@ fn main() -> anyhow::Result<()> {
             .collect();
         let w = Workload::new(format!("x{mult}"), services);
         let ctx = ProblemCtx::new(&bank, &w)?;
-        let ours = Greedy::new().solve(&ctx)?.num_gpus();
+        let pipeline = OptimizerPipeline::with_budget(&ctx, PipelineBudget::fast_only());
+        let ours = pipeline.fast()?.num_gpus();
         table.row(vec![
             format!("{mult}"),
             ours.to_string(),

@@ -8,7 +8,7 @@
 
 use mig_serving::cluster::{ActionKind, ClusterState, Executor};
 use mig_serving::controller::Controller;
-use mig_serving::optimizer::{Greedy, OptimizerProcedure, ProblemCtx};
+use mig_serving::optimizer::{OptimizerPipeline, PipelineBudget, ProblemCtx};
 use mig_serving::perf::ProfileBank;
 use mig_serving::util::table::Table;
 use mig_serving::workload::{daytime, night};
@@ -18,10 +18,15 @@ fn main() -> anyhow::Result<()> {
     let day = daytime(&bank);
     let night_w = night(&bank);
 
+    // One pipeline (shared config pool + score engine) per workload;
+    // the controller replans through it on every shift change.
     let day_ctx = ProblemCtx::new(&bank, &day)?;
     let night_ctx = ProblemCtx::new(&bank, &night_w)?;
-    let day_dep = Greedy::new().solve(&day_ctx)?;
-    let night_dep = Greedy::new().solve(&night_ctx)?;
+    let day_pipe = OptimizerPipeline::with_budget(&day_ctx, PipelineBudget::fast_only());
+    let night_pipe =
+        OptimizerPipeline::with_budget(&night_ctx, PipelineBudget::fast_only());
+    let day_dep = day_pipe.fast()?;
+    let night_dep = night_pipe.fast()?;
     println!(
         "daytime deployment: {} GPUs; night deployment: {} GPUs",
         day_dep.num_gpus(),
@@ -33,15 +38,20 @@ fn main() -> anyhow::Result<()> {
     let controller = Controller::new(day.len());
     let mut executor = Executor::new(2026);
 
-    // Initial bring-up.
-    controller.transition(&mut cluster, &day_dep, &mut executor)?;
+    // Initial bring-up through the replan path.
+    controller.replan(&mut cluster, &day_pipe, &mut executor)?;
     println!("\ninitial daytime bring-up done ({} GPUs in use)", cluster.used_gpus().len());
 
-    for (label, target_dep, old_w, new_w) in [
-        ("day2night", &night_dep, &day, &night_w),
-        ("night2day", &day_dep, &night_w, &day),
+    for (label, pipeline, old_w, new_w) in [
+        ("day2night", &night_pipe, &day, &night_w),
+        ("night2day", &day_pipe, &night_w, &day),
     ] {
-        let outcome = controller.transition(&mut cluster, target_dep, &mut executor)?;
+        let (outcome, replanned) =
+            controller.replan(&mut cluster, pipeline, &mut executor)?;
+        assert_eq!(
+            replanned.num_gpus(),
+            if label == "day2night" { night_dep.num_gpus() } else { day_dep.num_gpus() }
+        );
         println!(
             "\n=== {label}: {} actions, {} stages (parallelism {:.1}x), \
              simulated wall-clock {:.0}s",

@@ -6,7 +6,7 @@
 //! ```
 
 use mig_serving::optimizer::{
-    lower_bound_gpus, Greedy, OptimizerProcedure, ProblemCtx,
+    lower_bound_gpus, OptimizerPipeline, PipelineBudget, ProblemCtx,
 };
 use mig_serving::perf::ProfileBank;
 use mig_serving::spec::{Slo, Workload};
@@ -33,8 +33,12 @@ fn main() -> anyhow::Result<()> {
     //    throughput per instance size under its latency SLO (§5.1).
     let ctx = ProblemCtx::new(&bank, &workload)?;
 
-    // 4. The fast algorithm (heuristic greedy, §5.3 / App. A.1).
-    let deployment = Greedy::new().solve(&ctx)?;
+    // 4. The optimizer pipeline: one shared config pool + score engine
+    //    per problem; a fast-only budget runs the heuristic greedy
+    //    (§5.3 / App. A.1). Raise `ga_rounds` for the full two-phase
+    //    pipeline.
+    let pipeline = OptimizerPipeline::with_budget(&ctx, PipelineBudget::fast_only());
+    let deployment = pipeline.fast()?;
 
     println!("deployment for {:?}:", workload.name);
     for (i, gpu) in deployment.gpus.iter().enumerate() {

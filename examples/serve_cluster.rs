@@ -15,7 +15,7 @@
 
 use std::time::Duration;
 
-use mig_serving::optimizer::{Greedy, OptimizerProcedure, ProblemCtx};
+use mig_serving::optimizer::{OptimizerPipeline, PipelineBudget, ProblemCtx};
 use mig_serving::perf::ProfileBank;
 use mig_serving::runtime::Manifest;
 use mig_serving::serving::{ExecServer, LoadGen, ServingCluster};
@@ -41,7 +41,8 @@ fn main() -> anyhow::Result<()> {
     let bank = ProfileBank::synthetic();
     let w = scaled_realworld(&bank, "night-e2e", 14.0, true);
     let ctx = ProblemCtx::new(&bank, &w)?;
-    let dep = Greedy::new().solve(&ctx)?;
+    let pipeline = OptimizerPipeline::with_budget(&ctx, PipelineBudget::fast_only());
+    let dep = pipeline.fast()?;
     println!(
         "optimizer: {} GPUs, {} instances for {} services",
         dep.num_gpus(),

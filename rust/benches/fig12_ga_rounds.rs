@@ -2,12 +2,13 @@
 //! over the fast algorithm, per GA round, on the four simulation
 //! workloads. GPU counts normalized to the round-0 (greedy) deployment.
 //!
+//! Runs through the unified [`OptimizerPipeline`] facade: one shared
+//! config pool + score engine per workload, GA rounds bounded by an
+//! explicit [`PipelineBudget`].
+//!
 //! Paper's shape: 1–3% saving over 10 rounds, monotone non-increasing.
 
-use mig_serving::optimizer::{
-    ConfigPool, GaConfig, GeneticAlgorithm, Greedy, MctsConfig, OptimizerProcedure,
-    ProblemCtx,
-};
+use mig_serving::optimizer::{OptimizerPipeline, PipelineBudget, ProblemCtx};
 use mig_serving::perf::ProfileBank;
 use mig_serving::util::table::{f, Table};
 use mig_serving::workload::{simulation_workload, SIMULATION_WORKLOADS};
@@ -30,16 +31,17 @@ fn main() {
     for name in SIMULATION_WORKLOADS {
         let w = simulation_workload(&bank, name);
         let ctx = ProblemCtx::new(&bank, &w).unwrap();
-        let pool = ConfigPool::enumerate(&ctx);
-        let seed = Greedy::new().solve(&ctx).unwrap();
-        let base = seed.num_gpus() as f64;
-        let ga = GeneticAlgorithm::new(GaConfig {
-            rounds,
-            patience: rounds, // let it run the full budget
-            mcts: MctsConfig { iterations: 40, ..Default::default() },
+        let budget = PipelineBudget {
+            ga_rounds: rounds,
+            ga_patience: rounds, // let it run the full budget
+            mcts_iterations: 40,
             ..Default::default()
-        });
-        let (_, history) = ga.evolve(&ctx, &pool, seed);
+        };
+        let outcome = OptimizerPipeline::with_budget(&ctx, budget)
+            .optimize()
+            .unwrap();
+        let base = outcome.fast.num_gpus() as f64;
+        let history = outcome.history;
         let mut row = vec![name.to_string()];
         for r in 0..=rounds {
             let v = history
@@ -52,10 +54,11 @@ fn main() {
         t.row(row);
         let final_gpus = *history.best_gpus_per_round.last().unwrap();
         println!(
-            "{name}: {} -> {} GPUs ({:.1}% saved by the slow algorithm)",
+            "{name}: {} -> {} GPUs ({:.1}% saved by the slow algorithm) in {:.2?}",
             base as usize,
             final_gpus,
-            (1.0 - final_gpus as f64 / base) * 100.0
+            (1.0 - final_gpus as f64 / base) * 100.0,
+            outcome.elapsed,
         );
     }
     println!("{}", t.render());

@@ -3,82 +3,118 @@
 //! two-phase pipeline in hours — on this scaled testbed everything is
 //! proportionally faster).
 //!
-//! Also checks the O(n²·m) scaling of the fast algorithm and the
-//! speedup of the memoized MCTS estimation over a naive rollout.
+//! Sections:
+//! 1. pool enumeration + greedy scaling in n (services);
+//! 2. **full pool-rescan greedy vs the incremental [`ScoreEngine`]** at
+//!    16/64/256 services (the lazy-greedy/CELF refactor's headline
+//!    numbers; outputs are asserted identical before timing);
+//! 3. the Fig 9-shaped full workload;
+//! 4. MCTS search budget and the memoized-rollout warm/cold gap
+//!    (App. A.2's "2-3 orders of magnitude" claim is about reusing
+//!    candidate pools).
 
 use mig_serving::bench::BenchCtx;
 use mig_serving::optimizer::{
-    CompletionRates, ConfigPool, Greedy, Mcts, MctsConfig, OptimizerProcedure,
-    ProblemCtx,
+    greedy, CompletionRates, ConfigPool, Mcts, MctsConfig, OptimizerPipeline,
+    PipelineBudget, ProblemCtx, ScoreEngine,
 };
 use mig_serving::perf::ProfileBank;
-use mig_serving::spec::{Slo, Workload};
 use mig_serving::util::rng::Rng;
-use mig_serving::workload::simulation_workload;
-
-fn subset_workload(bank: &ProfileBank, n: usize, mult: f64) -> Workload {
-    let models = bank.simulation_models();
-    Workload::new(
-        format!("micro-{n}"),
-        (0..n)
-            .map(|i| {
-                let prof = bank.get(&models[i % models.len()]).unwrap();
-                let unit = prof
-                    .effective_throughput(mig_serving::mig::InstanceSize::Seven, 100.0)
-                    .unwrap_or(100.0);
-                (models[i % models.len()].clone(), Slo::new(unit * mult, 100.0))
-            })
-            .collect(),
-    )
-}
+use mig_serving::workload::{micro_workload, simulation_workload};
 
 fn main() {
     mig_serving::bench::header("micro/optimizer", "pipeline stage timings + scaling");
     let bank = ProfileBank::synthetic();
     let bench = BenchCtx::new(1, 3);
 
-    // --- pool enumeration and greedy scaling in n (services).
+    // --- 1. pool enumeration and greedy scaling in n (services).
     for n in [6, 12, 24] {
-        let w = subset_workload(&bank, n, 8.0);
+        let w = micro_workload(&bank, n, 8.0);
         let ctx = ProblemCtx::new(&bank, &w).unwrap();
         let m = bench.time(&format!("ConfigPool::enumerate n={n}"), || {
             ConfigPool::enumerate(&ctx).len()
         });
         println!("{}", m.report());
-        let pool_len = ConfigPool::enumerate(&ctx).len();
+        let pipeline = OptimizerPipeline::with_budget(&ctx, PipelineBudget::fast_only());
+        let pool_len = pipeline.pool().len();
         let m = bench.time(&format!("greedy solve n={n} (pool {pool_len})"), || {
-            Greedy::new().solve(&ctx).unwrap().num_gpus()
+            pipeline.fast().unwrap().num_gpus()
         });
         println!("{}", m.report());
     }
 
-    // --- full-size workload (the Fig 9 shape).
+    // --- 2. SATELLITE: full pool-rescan vs incremental engine.
+    //
+    // Same pool, same outputs (asserted), only the per-GPU scoring
+    // differs: O(pool) rescans vs inverted-index dirtying + lazy heap.
+    // The SLO multiplier shrinks as n grows so the emitted-GPU count
+    // stays comparable and the pool size is the variable under test.
+    println!();
+    println!("full-rescan greedy vs incremental ScoreEngine (§ lazy greedy / CELF):");
+    for (n, mult) in [(16usize, 4.0), (64, 1.0), (256, 0.25)] {
+        let w = micro_workload(&bank, n, mult);
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let pool = ConfigPool::enumerate(&ctx);
+        let zero = CompletionRates::zeros(w.len());
+
+        // Outputs must be byte-identical before the timings mean much.
+        let reference = greedy::full_scan(&ctx, &pool, &zero).unwrap();
+        let mut engine = ScoreEngine::new(&pool, &zero);
+        let incremental = greedy::run_with_engine(&ctx, &mut engine).unwrap();
+        assert_eq!(
+            reference.iter().map(|c| c.label()).collect::<Vec<_>>(),
+            incremental.iter().map(|c| c.label()).collect::<Vec<_>>(),
+            "engine diverged from reference at n={n}"
+        );
+
+        let heavy = n >= 256;
+        let bc = BenchCtx::new(usize::from(!heavy), if heavy { 1 } else { 3 });
+        let scan = bc.time(
+            &format!("full-rescan greedy n={n} (pool {}, {} GPUs)", pool.len(), reference.len()),
+            || greedy::full_scan(&ctx, &pool, &zero).unwrap().len(),
+        );
+        println!("{}", scan.report());
+        let eng = bc.time(&format!("engine greedy      n={n}"), || {
+            let mut engine = ScoreEngine::new(&pool, &zero);
+            greedy::run_with_engine(&ctx, &mut engine).unwrap().len()
+        });
+        println!("{}", eng.report());
+        println!(
+            "  -> speedup {:.1}x (scan {:?} / engine {:?})",
+            scan.mean().as_secs_f64() / eng.mean().as_secs_f64().max(1e-12),
+            scan.mean(),
+            eng.mean()
+        );
+    }
+    println!();
+
+    // --- 3. full-size workload (the Fig 9 shape).
     let w = simulation_workload(&bank, "normal-1");
     let ctx = ProblemCtx::new(&bank, &w).unwrap();
+    let pipeline = OptimizerPipeline::with_budget(&ctx, PipelineBudget::fast_only());
     let m = bench.time("greedy solve normal-1 (24 services, ~hundreds GPUs)", || {
-        Greedy::new().solve(&ctx).unwrap().num_gpus()
+        pipeline.fast().unwrap().num_gpus()
     });
     println!("{}", m.report());
 
-    // --- MCTS search budget.
-    let pool = ConfigPool::enumerate(&ctx);
+    // --- 4. MCTS search budget.
+    let engine = pipeline.engine();
     let mcts = Mcts::new(MctsConfig { iterations: 40, ..Default::default() });
     let zero = CompletionRates::zeros(w.len());
     let m = bench.time("mcts search (40 iterations) normal-1", || {
-        mcts.search(&ctx, &pool, &zero, &mut Rng::new(1)).len()
+        mcts.search(&ctx, &engine, &zero, &mut Rng::new(1)).len()
     });
     println!("{}", m.report());
 
     // --- memoized vs cold estimation (App. A.2's "2-3 orders of
     //     magnitude" claim is about reusing candidate pools; measure the
     //     warm/cold rollout gap).
-    let mut cache = std::collections::HashMap::new();
     let mut rng = Rng::new(2);
     let t0 = std::time::Instant::now();
-    let _ = mcts_rollout(&mcts, &ctx, &pool, &zero, &mut cache, &mut rng);
+    let _ = mcts_rollout(&mcts, &ctx, &engine, &zero, &mut rng);
     let cold = t0.elapsed();
     let t1 = std::time::Instant::now();
-    let _ = mcts_rollout(&mcts, &ctx, &pool, &zero, &mut cache, &mut rng);
+    let _ = mcts_rollout(&mcts, &ctx, &engine, &zero, &mut rng);
     let warm = t1.elapsed();
     println!(
         "rollout cold {cold:?} vs warm {warm:?} ({:.0}x speedup from memoization)",
@@ -91,12 +127,11 @@ fn main() {
 fn mcts_rollout(
     mcts: &Mcts,
     ctx: &ProblemCtx,
-    pool: &ConfigPool,
+    engine: &ScoreEngine,
     zero: &CompletionRates,
-    _cache: &mut std::collections::HashMap<u64, Vec<u32>>,
     rng: &mut Rng,
 ) -> usize {
     // search() seeds with exactly one rollout when iterations = 0.
     let m = Mcts::new(MctsConfig { iterations: 0, ..mcts.cfg.clone() });
-    m.search(ctx, pool, zero, rng).len()
+    m.search(ctx, engine, zero, rng).len()
 }

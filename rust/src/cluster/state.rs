@@ -52,21 +52,40 @@ impl GpuSim {
 }
 
 /// Errors from invalid cluster mutations.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ClusterError {
-    #[error("gpu {0} out of range")]
     NoSuchGpu(usize),
-    #[error("gpu {gpu}: illegal repartition: {reason}")]
     IllegalRepartition { gpu: usize, reason: String },
-    #[error("gpu {gpu}: instance {placement:?} not in partition")]
     NoSuchInstance { gpu: usize, placement: Placement },
-    #[error("gpu {gpu}: instance {placement:?} already runs a pod")]
     InstanceBusy { gpu: usize, placement: Placement },
-    #[error("gpu {gpu}: instance {placement:?} has no pod")]
     NoPod { gpu: usize, placement: Placement },
-    #[error("gpu {gpu}: cannot repartition {placement:?}: pod running")]
     PodInTheWay { gpu: usize, placement: Placement },
 }
+
+impl std::fmt::Display for ClusterError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClusterError::NoSuchGpu(gpu) => write!(f, "gpu {gpu} out of range"),
+            ClusterError::IllegalRepartition { gpu, reason } => {
+                write!(f, "gpu {gpu}: illegal repartition: {reason}")
+            }
+            ClusterError::NoSuchInstance { gpu, placement } => {
+                write!(f, "gpu {gpu}: instance {placement:?} not in partition")
+            }
+            ClusterError::InstanceBusy { gpu, placement } => {
+                write!(f, "gpu {gpu}: instance {placement:?} already runs a pod")
+            }
+            ClusterError::NoPod { gpu, placement } => {
+                write!(f, "gpu {gpu}: instance {placement:?} has no pod")
+            }
+            ClusterError::PodInTheWay { gpu, placement } => {
+                write!(f, "gpu {gpu}: cannot repartition {placement:?}: pod running")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ClusterError {}
 
 /// The whole cluster: `machines × gpus_per_machine` GPUs, flat-indexed.
 #[derive(Debug, Clone)]

@@ -27,5 +27,5 @@ pub mod plan;
 pub mod transition;
 
 pub use diff::{service_deltas, InstanceCounts};
-pub use plan::{parallelize, TransitionPlan};
+pub use plan::{parallelize, replan, TransitionPlan};
 pub use transition::{Controller, TransitionOutcome};

@@ -10,7 +10,8 @@
 //! disjoint GPUs by construction, so the executor runs them
 //! concurrently.
 
-use crate::cluster::Action;
+use crate::cluster::{Action, ClusterState};
+use crate::optimizer::{Deployment, OptimizerPipeline};
 
 /// A staged transition plan.
 #[derive(Debug, Clone)]
@@ -88,6 +89,28 @@ pub fn parallelize(actions: Vec<Action>) -> TransitionPlan {
     TransitionPlan { actions, stages }
 }
 
+/// The replan path: run the shared [`OptimizerPipeline`] under its
+/// budget to produce a target deployment for the *current* workload,
+/// then plan the transition from the cluster's live state to it. Pure
+/// planning — the cluster is not touched; execute the returned plan
+/// through [`crate::cluster::Executor`] (or use
+/// [`super::transition::Controller::replan`], which does both).
+///
+/// Returns the staged plan, the target deployment, and the total
+/// algorithm seconds (optimizer + exchange-and-compact) — the Fig 13a
+/// "algorithm" slice of a reconfiguration.
+pub fn replan(
+    cluster: &ClusterState,
+    controller: &super::transition::Controller,
+    pipeline: &OptimizerPipeline<'_>,
+) -> anyhow::Result<(TransitionPlan, Deployment, f64)> {
+    let t0 = std::time::Instant::now();
+    let target = pipeline.plan_deployment()?;
+    let optimize_s = t0.elapsed().as_secs_f64();
+    let (plan, plan_s) = controller.plan(cluster, &target)?;
+    Ok((plan, target, optimize_s + plan_s))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -161,5 +184,30 @@ mod tests {
         let plan = parallelize(vec![]);
         assert_eq!(plan.num_stages(), 0);
         assert_eq!(plan.parallelism(), 1.0);
+    }
+
+    #[test]
+    fn replan_is_pure_and_realizable() {
+        use crate::optimizer::{OptimizerPipeline, PipelineBudget, ProblemCtx};
+        use crate::perf::ProfileBank;
+        use crate::spec::{Slo, Workload};
+
+        let bank = ProfileBank::synthetic();
+        let w = Workload::new(
+            "replan",
+            vec![("resnet50".to_string(), Slo::new(120.0, 300.0))],
+        );
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let pipeline =
+            OptimizerPipeline::with_budget(&ctx, PipelineBudget::fast_only());
+        let cluster = ClusterState::new(1, 8);
+        let controller = crate::controller::Controller::new(w.len());
+        let (plan, target, algorithm_s) =
+            replan(&cluster, &controller, &pipeline).unwrap();
+        assert!(plan.num_actions() > 0);
+        assert!(target.num_gpus() >= 1);
+        assert!(algorithm_s >= 0.0);
+        // Pure planning: the cluster was not mutated.
+        assert!(cluster.used_gpus().is_empty());
     }
 }

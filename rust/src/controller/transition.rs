@@ -74,6 +74,26 @@ impl Controller {
         Ok(TransitionOutcome { plan, report, algorithm_s })
     }
 
+    /// Replan-and-transition: derive the target deployment from the
+    /// shared [`crate::optimizer::OptimizerPipeline`] (under its
+    /// time/iteration budget) and transition the cluster to it. This is
+    /// the unified path workload changes go through: one pipeline per
+    /// problem context, no hand-wired Greedy/MCTS/GA at call sites.
+    /// Returns the outcome plus the planned target deployment.
+    pub fn replan(
+        &self,
+        cluster: &mut ClusterState,
+        pipeline: &crate::optimizer::OptimizerPipeline<'_>,
+        executor: &mut Executor,
+    ) -> anyhow::Result<(TransitionOutcome, Deployment)> {
+        let t0 = Instant::now();
+        let target = pipeline.plan_deployment()?;
+        let optimize_s = t0.elapsed().as_secs_f64();
+        let mut outcome = self.transition(cluster, &target, executor)?;
+        outcome.algorithm_s += optimize_s;
+        Ok((outcome, target))
+    }
+
     /// Like [`Controller::transition`] but with the staged barrier
     /// executor — the unoptimized scheduler kept for EXPERIMENTS.md
     /// §Perf comparisons.

@@ -13,8 +13,7 @@ use mig_serving::baselines;
 use mig_serving::cluster::{ClusterState, Executor};
 use mig_serving::controller::Controller;
 use mig_serving::optimizer::{
-    self, lower_bound_gpus, Greedy, OptimizerProcedure, ProblemCtx, TwoPhase,
-    TwoPhaseConfig,
+    self, lower_bound_gpus, OptimizerPipeline, PipelineBudget, ProblemCtx,
 };
 use mig_serving::perf::{bank::fig4_classification, ProfileBank};
 use mig_serving::serving::{ExecServer, LoadGen, ServingCluster};
@@ -33,6 +32,8 @@ fn app() -> App {
                 .opt("workload", "normal-1", "normal-1|normal-2|lognormal-1|lognormal-2|daytime|night or a JSON file")
                 .opt("algorithm", "greedy", "greedy|two-phase")
                 .opt("ga-rounds", "10", "GA rounds for two-phase")
+                .opt("mcts-iters", "60", "MCTS iterations per GA crossover (two-phase)")
+                .opt("time-budget-s", "0", "wall-clock budget for phase 2, seconds (0 = unlimited)")
                 .opt("out", "", "write the deployment as JSON to this path")
                 .flag("verbose", "print per-GPU configurations"),
             Command::new("transition", "plan + simulate a deployment transition")
@@ -72,16 +73,23 @@ fn cmd_optimize(args: &mig_serving::util::cli::Args) -> anyhow::Result<()> {
     let bank = ProfileBank::synthetic();
     let w = load_workload(&bank, args.get("workload").unwrap())?;
     let ctx = ProblemCtx::new(&bank, &w)?;
-    let t0 = std::time::Instant::now();
-    let dep = match args.get("algorithm").unwrap() {
-        "greedy" => Greedy::new().solve(&ctx)?,
+    let budget = match args.get("algorithm").unwrap() {
+        "greedy" => PipelineBudget::fast_only(),
         "two-phase" => {
-            let mut cfg = TwoPhaseConfig::default();
-            cfg.ga.rounds = args.get_usize("ga-rounds").unwrap_or(10);
-            TwoPhase::new(cfg).optimize(&ctx)?.best
+            let time_s = args.get_f64("time-budget-s").unwrap_or(0.0);
+            PipelineBudget {
+                ga_rounds: args.get_usize("ga-rounds").unwrap_or(10),
+                mcts_iterations: args.get_usize("mcts-iters").unwrap_or(60),
+                time_budget: (time_s > 0.0)
+                    .then(|| std::time::Duration::from_secs_f64(time_s)),
+                ..Default::default()
+            }
         }
         other => anyhow::bail!("unknown algorithm {other:?}"),
     };
+    let t0 = std::time::Instant::now();
+    let pipeline = OptimizerPipeline::with_budget(&ctx, budget);
+    let dep = pipeline.plan_deployment()?;
     let elapsed = t0.elapsed();
     println!(
         "workload={} services={} algorithm={} gpus={} lower_bound={} elapsed={elapsed:.2?}",
@@ -136,8 +144,8 @@ fn cmd_transition(args: &mig_serving::util::cli::Args) -> anyhow::Result<()> {
     anyhow::ensure!(from.len() == to.len(), "workloads must share the service space");
     let from_ctx = ProblemCtx::new(&bank, &from)?;
     let to_ctx = ProblemCtx::new(&bank, &to)?;
-    let from_dep = Greedy::new().solve(&from_ctx)?;
-    let to_dep = Greedy::new().solve(&to_ctx)?;
+    let from_pipeline = OptimizerPipeline::with_budget(&from_ctx, PipelineBudget::fast_only());
+    let to_pipeline = OptimizerPipeline::with_budget(&to_ctx, PipelineBudget::fast_only());
 
     let machines = args.get_usize("machines").unwrap_or(3);
     let gpm = args.get_usize("gpus-per-machine").unwrap_or(8);
@@ -145,9 +153,11 @@ fn cmd_transition(args: &mig_serving::util::cli::Args) -> anyhow::Result<()> {
     let controller = Controller::new(from.len());
     let mut executor = Executor::new(args.get_u64("seed").unwrap_or(42));
 
-    // Bring up `from`, then transition to `to`.
-    controller.transition(&mut cluster, &from_dep, &mut executor)?;
-    let outcome = controller.transition(&mut cluster, &to_dep, &mut executor)?;
+    // Bring up `from`, then replan-and-transition to `to` — both go
+    // through the unified pipeline + controller replan path.
+    controller.replan(&mut cluster, &from_pipeline, &mut executor)?;
+    let (outcome, _to_dep) =
+        controller.replan(&mut cluster, &to_pipeline, &mut executor)?;
     println!(
         "{} -> {}: {} actions in {} stages, simulated wall-clock {:.1}s \
          (k8s {:.1}s busy, partition {:.1}s busy, algorithm {:.3}s)",
@@ -182,7 +192,7 @@ fn cmd_serve(args: &mig_serving::util::cli::Args) -> anyhow::Result<()> {
         night,
     );
     let ctx = ProblemCtx::new(&bank, &w)?;
-    let dep = Greedy::new().solve(&ctx)?;
+    let dep = OptimizerPipeline::with_budget(&ctx, PipelineBudget::fast_only()).fast()?;
     println!("deploying {} instances on {} GPUs ...",
         dep.gpus.iter().map(|g| g.assigns.len()).sum::<usize>(), dep.num_gpus());
     let (exec, _guard) = ExecServer::spawn(manifest.clone())?;

@@ -45,17 +45,32 @@ pub struct Partition {
 }
 
 /// Why a placement set is not a legal A100 partition.
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Illegal {
-    #[error("placement {0:?} has an invalid start for its profile")]
     BadStart(Placement),
-    #[error("placements {0:?} and {1:?} overlap in memory slots")]
     Overlap(Placement, Placement),
-    #[error("a 4/7 and a 3/7 instance cannot coexist (hard-coded A100 rule)")]
     FourPlusThree,
-    #[error("duplicate placement {0:?}")]
     Duplicate(Placement),
 }
+
+impl std::fmt::Display for Illegal {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Illegal::BadStart(p) => {
+                write!(f, "placement {p:?} has an invalid start for its profile")
+            }
+            Illegal::Overlap(a, b) => {
+                write!(f, "placements {a:?} and {b:?} overlap in memory slots")
+            }
+            Illegal::FourPlusThree => {
+                write!(f, "a 4/7 and a 3/7 instance cannot coexist (hard-coded A100 rule)")
+            }
+            Illegal::Duplicate(p) => write!(f, "duplicate placement {p:?}"),
+        }
+    }
+}
+
+impl std::error::Error for Illegal {}
 
 impl Partition {
     /// The empty partition (a fully repartitionable GPU).

@@ -16,12 +16,38 @@
 use super::partition::{Illegal, Partition, Placement};
 
 /// Errors from an attempted reconfiguration.
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum ReconfError {
-    #[error("placement {0:?} to remove is not in the current partition")]
     NotPresent(Placement),
-    #[error("resulting partition is illegal: {0}")]
-    IllegalResult(#[from] Illegal),
+    IllegalResult(Illegal),
+}
+
+impl std::fmt::Display for ReconfError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ReconfError::NotPresent(p) => {
+                write!(f, "placement {p:?} to remove is not in the current partition")
+            }
+            ReconfError::IllegalResult(e) => {
+                write!(f, "resulting partition is illegal: {e}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ReconfError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ReconfError::IllegalResult(e) => Some(e),
+            ReconfError::NotPresent(_) => None,
+        }
+    }
+}
+
+impl From<Illegal> for ReconfError {
+    fn from(e: Illegal) -> ReconfError {
+        ReconfError::IllegalResult(e)
+    }
 }
 
 /// Apply `remove` then `add` to `current`, validating legality of the

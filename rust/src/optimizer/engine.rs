@@ -1,0 +1,425 @@
+//! The incremental sparse score engine.
+//!
+//! Every optimizer procedure ranks the enumerated GPU configurations by
+//! the §5.3 heuristic score against a completion-rate state. The seed
+//! implementation rescanned the whole [`ConfigPool`] for every emitted
+//! GPU — O(P) per step, O(P·m) per solve. This engine makes the scan
+//! incremental, the lazy-greedy / CELF pattern from submodular
+//! maximization:
+//!
+//! * an **inverted index** (service → configs touching it, hosted by
+//!   [`ConfigPool::touching`]) tells which scores a commit can change:
+//!   committing a config only moves the remaining requirement of the
+//!   services it serves, so only configs sharing one of those services
+//!   need rescoring;
+//! * a **lazy max-heap** of sparse clipped scores defers that rescoring
+//!   until a dirty config actually reaches the top. Because completion
+//!   rates only grow during a greedy descent, clipped scores are
+//!   monotonically non-increasing, so a *clean* entry at the top of the
+//!   heap is the true argmax — the CELF certificate.
+//!
+//! The dense kernels in [`super::score`] stay as the property-tested
+//! reference; [`ScoreEngine::peek_best`] is tested to agree with
+//! [`ConfigPool::best_by_score`] (same winner, same score, same
+//! tie-breaks) over randomized completion-rate sequences, and the
+//! engine-driven greedy is byte-identical to the kept full-rescan
+//! reference ([`super::greedy::full_scan`]).
+//!
+//! The engine also hosts the *stateless* pool queries that MCTS uses
+//! against arbitrary node states ([`ScoreEngine::top_k_touching`] for
+//! expansion, [`ScoreEngine::top_candidates`] for the memoized rollout
+//! pools), so every procedure shares one pool + index per
+//! [`ProblemCtx`].
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::spec::ServiceId;
+
+use super::comp_rates::CompletionRates;
+use super::gpu_config::{ConfigPool, GpuConfig, ProblemCtx};
+
+/// A heap entry: the score of config `idx` at the time it was pushed.
+/// Ordered max-score first; ties broken toward the *lowest* index so the
+/// lazy heap picks the same winner as a first-strictly-greater linear
+/// scan ([`ConfigPool::best_by_score`]).
+#[derive(Debug, Clone, Copy)]
+struct Entry {
+    score: f64,
+    idx: u32,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.score == other.score && self.idx == other.idx
+    }
+}
+
+impl Eq for Entry {}
+
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Scores are finite by construction (never NaN).
+        self.score
+            .partial_cmp(&other.score)
+            .unwrap()
+            .then_with(|| other.idx.cmp(&self.idx))
+    }
+}
+
+/// Incremental scorer over one [`ConfigPool`] and one completion state.
+///
+/// Invariants:
+/// * [`ScoreEngine::commit`]/[`ScoreEngine::commit_config`] must only
+///   *add* utility (completion rates never decrease), which keeps
+///   clipped scores monotone and the lazy heap sound — this holds for
+///   every greedy-style descent. Use [`ScoreEngine::reset`] to jump to
+///   an arbitrary state.
+/// * For every clean config with positive cached score there is exactly
+///   one heap entry carrying that score; stale snapshots are dropped
+///   when popped.
+pub struct ScoreEngine<'p> {
+    pool: &'p ConfigPool,
+    comp: CompletionRates,
+    remaining: Vec<f64>,
+    /// Last computed clipped score per config (valid when not dirty).
+    cached: Vec<f64>,
+    /// Config may be stale: a service it touches changed since `cached`
+    /// was computed.
+    dirty: Vec<bool>,
+    heap: BinaryHeap<Entry>,
+}
+
+impl<'p> ScoreEngine<'p> {
+    /// Build the engine at `completion`, scoring every config once.
+    pub fn new(pool: &'p ConfigPool, completion: &CompletionRates) -> ScoreEngine<'p> {
+        let mut engine = ScoreEngine {
+            pool,
+            comp: completion.clone(),
+            remaining: completion.remaining(),
+            cached: vec![0.0; pool.len()],
+            dirty: vec![false; pool.len()],
+            heap: BinaryHeap::with_capacity(pool.len()),
+        };
+        engine.rebuild();
+        engine
+    }
+
+    /// Jump to an arbitrary completion state (full rescore).
+    pub fn reset(&mut self, completion: &CompletionRates) {
+        self.comp = completion.clone();
+        self.remaining = completion.remaining();
+        self.rebuild();
+    }
+
+    fn rebuild(&mut self) {
+        self.heap.clear();
+        for (i, cfg) in self.pool.configs.iter().enumerate() {
+            let s = cfg.score_clipped(&self.remaining);
+            self.cached[i] = s;
+            self.dirty[i] = false;
+            if s > 0.0 {
+                self.heap.push(Entry { score: s, idx: i as u32 });
+            }
+        }
+    }
+
+    /// The shared pool (and inverted index) this engine scores over.
+    pub fn pool(&self) -> &'p ConfigPool {
+        self.pool
+    }
+
+    /// Current completion state.
+    pub fn completion(&self) -> &CompletionRates {
+        &self.comp
+    }
+
+    /// Current remaining-requirement vector (`max(0, 1 − c_i)`).
+    pub fn remaining(&self) -> &[f64] {
+        &self.remaining
+    }
+
+    pub fn all_satisfied(&self) -> bool {
+        self.comp.all_satisfied()
+    }
+
+    /// The config with the maximum clipped score > 0 at the current
+    /// state, with its score — or `None` when everything is satisfied.
+    /// Identical winner and tie-breaking to a full
+    /// [`ConfigPool::best_by_score`] scan, amortized far cheaper.
+    pub fn peek_best(&mut self) -> Option<(usize, f64)> {
+        while let Some(&top) = self.heap.peek() {
+            let i = top.idx as usize;
+            if self.dirty[i] {
+                // Refresh lazily: recompute, then reinsert if still
+                // positive. Monotone decrease means the fresh score
+                // belongs at or below the old position.
+                self.heap.pop();
+                let s = self.pool.configs[i].score_clipped(&self.remaining);
+                self.cached[i] = s;
+                self.dirty[i] = false;
+                if s > 0.0 {
+                    self.heap.push(Entry { score: s, idx: top.idx });
+                }
+                continue;
+            }
+            if top.score != self.cached[i] {
+                // Stale snapshot from before an earlier refresh.
+                self.heap.pop();
+                continue;
+            }
+            return Some((i, top.score));
+        }
+        None
+    }
+
+    /// Commit pool config `idx`: materialize it, add its (dense) utility
+    /// to the completion state, and mark every config sharing a touched
+    /// service dirty. Returns the materialized config.
+    ///
+    /// The completion update deliberately goes through the *dense*
+    /// [`GpuConfig::utility`] accumulation so engine-driven greedy is
+    /// bit-identical to the full-rescan reference.
+    pub fn commit(&mut self, ctx: &ProblemCtx, idx: usize) -> GpuConfig {
+        let cfg = self.pool.materialize(ctx, idx);
+        self.commit_config(ctx, &cfg);
+        cfg
+    }
+
+    /// Commit an already-materialized config (e.g. an endgame pack).
+    pub fn commit_config(&mut self, ctx: &ProblemCtx, cfg: &GpuConfig) {
+        self.comp.add(&cfg.utility(ctx));
+        let old = std::mem::replace(&mut self.remaining, self.comp.remaining());
+        for sid in cfg.services() {
+            // A service already at 0 remaining stays at 0: no score can
+            // change through it, so skip the index walk.
+            if old[sid] != self.remaining[sid] {
+                for &ci in self.pool.touching(sid) {
+                    self.dirty[ci as usize] = true;
+                }
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Stateless queries against arbitrary completion states (MCTS works
+    // on tree nodes, not on this engine's own state).
+    // ------------------------------------------------------------------
+
+    /// MCTS expansion query (App. A.2, first fix): configs touching any
+    /// of `services`, scored against `remaining`, deduplicated in
+    /// first-seen order, top-`k` by clipped score (stable sort, so ties
+    /// keep index-walk order — identical to the seed implementation).
+    pub fn top_k_touching(
+        &self,
+        services: &[ServiceId],
+        remaining: &[f64],
+        k: usize,
+    ) -> Vec<u32> {
+        let mut seen = std::collections::HashSet::new();
+        let mut scored: Vec<(f64, u32)> = Vec::new();
+        for &sid in services {
+            for &ci in self.pool.touching(sid) {
+                if seen.insert(ci) {
+                    let s = self.pool.configs[ci as usize].score_clipped(remaining);
+                    if s > 0.0 {
+                        scored.push((s, ci));
+                    }
+                }
+            }
+        }
+        scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        scored.truncate(k);
+        scored.into_iter().map(|(_, i)| i).collect()
+    }
+
+    /// Rollout candidate-pool query (App. A.2, second fix): the global
+    /// top-`n` configs by clipped score against `remaining`.
+    pub fn top_candidates(&self, remaining: &[f64], n: usize) -> Vec<u32> {
+        let mut scored: Vec<(f64, u32)> = self
+            .pool
+            .configs
+            .iter()
+            .enumerate()
+            .filter_map(|(i, c)| {
+                let s = c.score_clipped(remaining);
+                (s > 0.0).then_some((s, i as u32))
+            })
+            .collect();
+        scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        scored.truncate(n);
+        scored.into_iter().map(|(_, i)| i).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer::score::score_config_clipped;
+    use crate::perf::ProfileBank;
+    use crate::spec::{Slo, Workload};
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn fixture(n: usize, thr: f64) -> (ProfileBank, Workload) {
+        let bank = ProfileBank::synthetic();
+        let models = bank.simulation_models();
+        let services = (0..n)
+            .map(|i| (models[i % models.len()].clone(), Slo::new(thr, 150.0)))
+            .collect();
+        (bank, Workload::new("engine-test", services))
+    }
+
+    #[test]
+    fn peek_matches_full_scan_at_zero() {
+        let (bank, w) = fixture(5, 700.0);
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let pool = ConfigPool::enumerate(&ctx);
+        let zero = CompletionRates::zeros(w.len());
+        let mut engine = ScoreEngine::new(&pool, &zero);
+        let (idx, score) = engine.peek_best().expect("unsatisfied workload scores");
+        let best = pool.best_by_score(&zero.remaining()).unwrap();
+        assert_eq!(idx, best);
+        let dense = score_config_clipped(&ctx, &pool.materialize(&ctx, idx), &zero);
+        assert!((score - dense).abs() < 1e-12);
+    }
+
+    #[test]
+    fn peek_none_when_satisfied() {
+        let (bank, w) = fixture(3, 400.0);
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let pool = ConfigPool::enumerate(&ctx);
+        let done = CompletionRates::from_vec(vec![1.0; w.len()]);
+        let mut engine = ScoreEngine::new(&pool, &done);
+        assert!(engine.peek_best().is_none());
+        assert!(engine.all_satisfied());
+    }
+
+    #[test]
+    fn commit_tracks_dense_completion() {
+        let (bank, w) = fixture(4, 600.0);
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let pool = ConfigPool::enumerate(&ctx);
+        let zero = CompletionRates::zeros(w.len());
+        let mut engine = ScoreEngine::new(&pool, &zero);
+        let mut shadow = zero.clone();
+        for _ in 0..6 {
+            let Some((idx, _)) = engine.peek_best() else { break };
+            let cfg = engine.commit(&ctx, idx);
+            shadow.add(&cfg.utility(&ctx));
+            assert_eq!(engine.completion(), &shadow);
+            assert_eq!(engine.remaining(), shadow.remaining().as_slice());
+        }
+    }
+
+    /// SATELLITE PROPERTY: over randomized workloads, starting rates and
+    /// commit sequences, the lazy heap's winner and score agree with the
+    /// dense full-scan references at every step.
+    #[test]
+    fn property_incremental_matches_dense_references() {
+        let bank = ProfileBank::synthetic();
+        let models = bank.simulation_models();
+        prop::check(
+            "engine-vs-dense",
+            12,
+            0xE27,
+            |g| {
+                let n = 2 + g.size(0, 4);
+                let mut rng = g.rng.fork();
+                let services: Vec<(String, Slo)> = (0..n)
+                    .map(|_| {
+                        (
+                            models[rng.below(models.len())].clone(),
+                            Slo::new(rng.f64_range(100.0, 900.0), 150.0),
+                        )
+                    })
+                    .collect();
+                let start: Vec<f64> =
+                    (0..n).map(|_| rng.f64_range(0.0, 1.2)).collect();
+                let steps = 1 + g.size(0, 7);
+                (services, start, steps, rng.next_u64())
+            },
+            |(services, start, steps, seed)| {
+                let w = Workload::new("prop", services.clone());
+                let ctx = ProblemCtx::new(&bank, &w).map_err(|e| e.to_string())?;
+                let pool = ConfigPool::enumerate(&ctx);
+                let comp = CompletionRates::from_vec(start.clone());
+                let mut engine = ScoreEngine::new(&pool, &comp);
+                let mut rng = Rng::new(*seed);
+                for step in 0..*steps {
+                    let remaining = engine.remaining().to_vec();
+                    let dense_best = pool.best_by_score(&remaining);
+                    let lazy_best = engine.peek_best();
+                    match (dense_best, lazy_best) {
+                        (None, None) => {}
+                        (Some(d), Some((e, s))) => {
+                            if d != e {
+                                return Err(format!(
+                                    "step {step}: dense argmax {d} != lazy {e}"
+                                ));
+                            }
+                            let dense_s = score_config_clipped(
+                                &ctx,
+                                &pool.materialize(&ctx, d),
+                                engine.completion(),
+                            );
+                            if (s - dense_s).abs() > 1e-9 {
+                                return Err(format!(
+                                    "step {step}: lazy score {s} != dense {dense_s}"
+                                ));
+                            }
+                        }
+                        (d, l) => {
+                            return Err(format!(
+                                "step {step}: dense {d:?} vs lazy {l:?}"
+                            ));
+                        }
+                    }
+                    // Advance with a random commit (greedy-style growth).
+                    engine.commit(&ctx, rng.below(pool.len()));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn stateless_queries_match_seed_logic() {
+        let (bank, w) = fixture(6, 800.0);
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let pool = ConfigPool::enumerate(&ctx);
+        let comp = CompletionRates::from_vec(vec![0.2, 0.9, 0.0, 0.5, 1.0, 0.3]);
+        let engine = ScoreEngine::new(&pool, &comp);
+        let remaining = comp.remaining();
+
+        // top_candidates: sorted non-increasing, all positive, global max
+        // first (== best_by_score's pick).
+        let cands = engine.top_candidates(&remaining, 16);
+        assert!(!cands.is_empty());
+        let scores: Vec<f64> = cands
+            .iter()
+            .map(|&i| pool.configs[i as usize].score_clipped(&remaining))
+            .collect();
+        assert!(scores.windows(2).all(|p| p[0] >= p[1]), "{scores:?}");
+        assert!(scores.iter().all(|&s| s > 0.0));
+        assert_eq!(cands[0] as usize, pool.best_by_score(&remaining).unwrap());
+
+        // top_k_touching: every result touches a requested service.
+        let picked = vec![0usize, 3];
+        let top = engine.top_k_touching(&picked, &remaining, 10);
+        assert!(top.len() <= 10);
+        for &ci in &top {
+            let touches = pool.configs[ci as usize]
+                .sparse_util
+                .iter()
+                .any(|&(sid, _)| picked.contains(&sid));
+            assert!(touches, "config {ci} does not touch picked services");
+        }
+    }
+}

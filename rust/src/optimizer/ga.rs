@@ -5,7 +5,9 @@
 //!   the completion rates below 100%), then refill by running the *slow
 //!   algorithm* (MCTS) against the residual completion rates. This mixes
 //!   fast- and slow-algorithm solutions and keeps the slow algorithm's
-//!   problem size small — both insights from the paper.
+//!   problem size small — both insights from the paper. The refill
+//!   reuses the parent's [`ScoreEngine`] (one shared pool + inverted
+//!   index per problem) instead of re-enumerating configurations.
 //! * **Mutation** = swap the services of two same-size instances running
 //!   different services; same-size instances are interchangeable for
 //!   inference (no affinity), so the deployment's completion rates are
@@ -13,10 +15,14 @@
 //!   better crossovers.
 //! * **Elitism**: originals stay in each round's comparison, so the best
 //!   deployment only improves over time.
-//! * **Stop**: round limit, or no improvement in the last 10 rounds.
+//! * **Stop**: round limit, no improvement in the last 10 rounds, or an
+//!   optional wall-clock budget ([`GaConfig::time_budget`]).
+
+use std::time::{Duration, Instant};
 
 use super::comp_rates::CompletionRates;
-use super::gpu_config::{ConfigPool, GpuConfig, ProblemCtx};
+use super::engine::ScoreEngine;
+use super::gpu_config::{GpuConfig, ProblemCtx};
 use super::mcts::{Mcts, MctsConfig};
 use super::Deployment;
 use crate::util::rng::Rng;
@@ -42,6 +48,9 @@ pub struct GaConfig {
     pub mutation_swaps: usize,
     /// MCTS settings for the slow algorithm inside crossovers.
     pub mcts: MctsConfig,
+    /// Optional wall-clock budget: no new round starts past it ("people
+    /// can decide how much time ... they are willing to devote", §5.2).
+    pub time_budget: Option<Duration>,
     pub seed: u64,
 }
 
@@ -56,6 +65,7 @@ impl Default for GaConfig {
             erase_max: 8,
             mutation_swaps: 3,
             mcts: MctsConfig { iterations: 60, ..Default::default() },
+            time_budget: None,
             seed: 0x6A,
         }
     }
@@ -78,8 +88,8 @@ pub struct GaHistory {
     pub best_gpus_per_round: Vec<usize>,
 }
 
-/// The GA engine. Holds the shared config pool so repeated crossovers
-/// don't re-enumerate.
+/// The GA engine. Works over a shared [`ScoreEngine`] so repeated
+/// crossovers never re-enumerate the configuration pool.
 pub struct GeneticAlgorithm {
     pub cfg: GaConfig,
 }
@@ -93,19 +103,23 @@ impl GeneticAlgorithm {
     pub fn evolve(
         &self,
         ctx: &ProblemCtx,
-        pool: &ConfigPool,
+        engine: &ScoreEngine,
         seed_deployment: Deployment,
     ) -> (Deployment, GaHistory) {
         let mut rng = Rng::new(self.cfg.seed);
         let mcts = Mcts::new(self.cfg.mcts.clone());
         debug_assert!(seed_deployment.is_valid(ctx));
 
+        let t0 = Instant::now();
         let mut population: Vec<Deployment> = vec![seed_deployment];
         let mut best = population[0].clone();
         let mut history = GaHistory { best_gpus_per_round: vec![best.num_gpus()] };
         let mut stale_rounds = 0usize;
 
         for _round in 0..self.cfg.rounds {
+            if self.cfg.time_budget.is_some_and(|b| t0.elapsed() >= b) {
+                break;
+            }
             let mut offspring: Vec<Deployment> = Vec::new();
             for parent in &population {
                 for _ in 0..self.cfg.crossovers_per_parent {
@@ -113,7 +127,8 @@ impl GeneticAlgorithm {
                     // then cross over.
                     let mut child = parent.clone();
                     self.mutate(ctx, &mut child, &mut rng);
-                    if let Some(crossed) = self.crossover(ctx, pool, &child, &mcts, &mut rng)
+                    if let Some(crossed) =
+                        self.crossover(ctx, engine, &child, &mcts, &mut rng)
                     {
                         debug_assert!(crossed.is_valid(ctx));
                         offspring.push(crossed);
@@ -152,7 +167,7 @@ impl GeneticAlgorithm {
     fn crossover(
         &self,
         ctx: &ProblemCtx,
-        pool: &ConfigPool,
+        engine: &ScoreEngine,
         parent: &Deployment,
         mcts: &Mcts,
         rng: &mut Rng,
@@ -179,7 +194,7 @@ impl GeneticAlgorithm {
         // Cap each completion at its own value (no-op) — refill covers
         // the gap. The slow algorithm's problem is the erased residual,
         // which is much smaller than the original (paper insight #2).
-        let refill = mcts.search(ctx, pool, &comp, rng);
+        let refill = mcts.search(ctx, engine, &comp, rng);
         let mut gpus = kept;
         gpus.extend(refill);
         let dep = Deployment { gpus };
@@ -245,6 +260,7 @@ impl GeneticAlgorithm {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::optimizer::gpu_config::ConfigPool;
     use crate::optimizer::{Greedy, OptimizerProcedure};
     use crate::perf::ProfileBank;
     use crate::spec::{Slo, Workload};
@@ -258,11 +274,16 @@ mod tests {
         (bank, Workload::new("ga-test", services))
     }
 
+    fn engine_for(pool: &ConfigPool, n: usize) -> ScoreEngine<'_> {
+        ScoreEngine::new(pool, &CompletionRates::zeros(n))
+    }
+
     #[test]
     fn evolve_keeps_validity_and_never_regresses() {
         let (bank, w) = fixture(6, 700.0);
         let ctx = ProblemCtx::new(&bank, &w).unwrap();
         let pool = ConfigPool::enumerate(&ctx);
+        let engine = engine_for(&pool, w.len());
         let seed = Greedy::new().solve(&ctx).unwrap();
         let seed_gpus = seed.num_gpus();
         let ga = GeneticAlgorithm::new(GaConfig {
@@ -270,7 +291,7 @@ mod tests {
             mcts: MctsConfig { iterations: 25, ..Default::default() },
             ..Default::default()
         });
-        let (best, history) = ga.evolve(&ctx, &pool, seed);
+        let (best, history) = ga.evolve(&ctx, &engine, seed);
         assert!(best.is_valid(&ctx));
         assert!(best.num_gpus() <= seed_gpus);
         // Monotone history (elitism).
@@ -311,6 +332,7 @@ mod tests {
         let (bank, w) = fixture(4, 600.0);
         let ctx = ProblemCtx::new(&bank, &w).unwrap();
         let pool = ConfigPool::enumerate(&ctx);
+        let engine = engine_for(&pool, w.len());
         let parent = Greedy::new().solve(&ctx).unwrap();
         let ga = GeneticAlgorithm::new(GaConfig {
             mcts: MctsConfig { iterations: 20, ..Default::default() },
@@ -319,7 +341,7 @@ mod tests {
         let mcts = Mcts::new(ga.cfg.mcts.clone());
         let mut rng = Rng::new(5);
         for _ in 0..5 {
-            if let Some(child) = ga.crossover(&ctx, &pool, &parent, &mcts, &mut rng) {
+            if let Some(child) = ga.crossover(&ctx, &engine, &parent, &mcts, &mut rng) {
                 assert!(child.is_valid(&ctx));
             }
         }
@@ -330,13 +352,56 @@ mod tests {
         let (bank, w) = fixture(3, 400.0);
         let ctx = ProblemCtx::new(&bank, &w).unwrap();
         let pool = ConfigPool::enumerate(&ctx);
+        let engine = engine_for(&pool, w.len());
         let seed = Greedy::new().solve(&ctx).unwrap();
         let ga = GeneticAlgorithm::new(GaConfig {
             rounds: 4,
             mcts: MctsConfig { iterations: 10, ..Default::default() },
             ..Default::default()
         });
-        let (_, h) = ga.evolve(&ctx, &pool, seed);
+        let (_, h) = ga.evolve(&ctx, &engine, seed);
         assert!(h.best_gpus_per_round.len() <= 5); // seed + <=4 rounds
+    }
+
+    #[test]
+    fn zero_time_budget_skips_all_rounds() {
+        let (bank, w) = fixture(3, 400.0);
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let pool = ConfigPool::enumerate(&ctx);
+        let engine = engine_for(&pool, w.len());
+        let seed = Greedy::new().solve(&ctx).unwrap();
+        let seed_gpus = seed.num_gpus();
+        let ga = GeneticAlgorithm::new(GaConfig {
+            rounds: 5,
+            time_budget: Some(Duration::ZERO),
+            mcts: MctsConfig { iterations: 10, ..Default::default() },
+            ..Default::default()
+        });
+        let (best, h) = ga.evolve(&ctx, &engine, seed);
+        assert_eq!(best.num_gpus(), seed_gpus);
+        assert_eq!(h.best_gpus_per_round, vec![seed_gpus]);
+    }
+
+    /// SATELLITE DETERMINISM: same seed, same engine ⇒ identical
+    /// evolved deployments (the refactored GA is replayable).
+    #[test]
+    fn evolve_deterministic_given_seed() {
+        let (bank, w) = fixture(5, 650.0);
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let pool = ConfigPool::enumerate(&ctx);
+        let engine = engine_for(&pool, w.len());
+        let seed = Greedy::new().solve(&ctx).unwrap();
+        let ga = GeneticAlgorithm::new(GaConfig {
+            rounds: 2,
+            mcts: MctsConfig { iterations: 15, ..Default::default() },
+            ..Default::default()
+        });
+        let (a, ha) = ga.evolve(&ctx, &engine, seed.clone());
+        let (b, hb) = ga.evolve(&ctx, &engine, seed);
+        let labels = |d: &Deployment| {
+            d.gpus.iter().map(|c| c.label()).collect::<Vec<_>>()
+        };
+        assert_eq!(labels(&a), labels(&b));
+        assert_eq!(ha.best_gpus_per_round, hb.best_gpus_per_round);
     }
 }

@@ -6,16 +6,88 @@
 //! mix more services per GPU (App. A.1 lines 18–22, realized by
 //! [`super::gpu_config::pack_residual`]).
 //!
-//! Complexity is O(n²·m) as the paper states: the pool is O(n²) configs
-//! (service pairs × a constant number of size multisets/splits), scored
-//! once per emitted GPU (m GPUs).
+//! The seed implementation rescanned the whole pool per emitted GPU —
+//! O(n²·m) as the paper states. The production path now drives a
+//! [`ScoreEngine`] instead ([`run_with_engine`]): committing a GPU only
+//! dirties the configs sharing a touched service (inverted index) and
+//! rescoring happens lazily at the heap top, so each step costs roughly
+//! the committed config's neighborhood instead of the whole pool. The
+//! full-rescan loop is kept verbatim as [`full_scan`]: it is the
+//! byte-identical equivalence reference (see the determinism tests) and
+//! the baseline the `micro_optimizer` bench compares against.
 
 use super::comp_rates::CompletionRates;
+use super::engine::ScoreEngine;
 use super::gpu_config::{pack_residual, ConfigPool, GpuConfig, ProblemCtx};
 use super::OptimizerProcedure;
 
 /// Safety cap on emitted GPUs (guards against pathological inputs).
 const MAX_GPUS: usize = 100_000;
+
+/// Engine-driven greedy core: emit configs from the engine's current
+/// completion state until every SLO is satisfied. The engine is left at
+/// the final (saturated) state.
+pub fn run_with_engine(
+    ctx: &ProblemCtx,
+    engine: &mut ScoreEngine,
+) -> anyhow::Result<Vec<GpuConfig>> {
+    let mut out: Vec<GpuConfig> = Vec::new();
+    while !engine.all_satisfied() {
+        if out.len() >= MAX_GPUS {
+            anyhow::bail!("greedy exceeded {MAX_GPUS} GPUs; unsatisfiable SLOs?");
+        }
+        // Endgame (App. A.1 lines 18–22): if a single multi-service GPU
+        // can finish the job, prefer it over pool configs.
+        if let Some(cfg) = pack_residual(ctx, engine.completion()) {
+            let mut after = engine.completion().clone();
+            after.add(&cfg.utility(ctx));
+            if after.all_satisfied() {
+                engine.commit_config(ctx, &cfg);
+                out.push(cfg);
+                break;
+            }
+        }
+        let Some((best, _score)) = engine.peek_best() else {
+            anyhow::bail!("no config scores > 0 but SLOs unmet");
+        };
+        out.push(engine.commit(ctx, best));
+    }
+    Ok(out)
+}
+
+/// The seed O(pool) full-rescan greedy, kept as the equivalence
+/// reference for [`run_with_engine`] and as the bench baseline. Do not
+/// "optimize" this: its value is being the simple, obviously-correct
+/// loop the incremental engine must match byte for byte.
+pub fn full_scan(
+    ctx: &ProblemCtx,
+    pool: &ConfigPool,
+    completion: &CompletionRates,
+) -> anyhow::Result<Vec<GpuConfig>> {
+    let mut comp = completion.clone();
+    let mut out: Vec<GpuConfig> = Vec::new();
+    while !comp.all_satisfied() {
+        if out.len() >= MAX_GPUS {
+            anyhow::bail!("greedy exceeded {MAX_GPUS} GPUs; unsatisfiable SLOs?");
+        }
+        let remaining = comp.remaining();
+        if let Some(cfg) = pack_residual(ctx, &comp) {
+            let mut after = comp.clone();
+            after.add(&cfg.utility(ctx));
+            if after.all_satisfied() {
+                out.push(cfg);
+                break;
+            }
+        }
+        let best = pool
+            .best_by_score(&remaining)
+            .ok_or_else(|| anyhow::anyhow!("no config scores > 0 but SLOs unmet"))?;
+        let cfg = pool.materialize(ctx, best);
+        comp.add(&cfg.utility(ctx));
+        out.push(cfg);
+    }
+    Ok(out)
+}
 
 /// The heuristic greedy optimizer procedure.
 pub struct Greedy {
@@ -32,13 +104,6 @@ impl Greedy {
     /// Pre-seed with an existing pool (shared with MCTS).
     pub fn with_pool(pool: ConfigPool) -> Greedy {
         Greedy { pool: Some(pool) }
-    }
-
-    fn pool(&mut self, ctx: &ProblemCtx) -> &ConfigPool {
-        if self.pool.is_none() {
-            self.pool = Some(ConfigPool::enumerate(ctx));
-        }
-        self.pool.as_ref().unwrap()
     }
 }
 
@@ -58,39 +123,12 @@ impl OptimizerProcedure for Greedy {
         ctx: &ProblemCtx,
         completion: &CompletionRates,
     ) -> anyhow::Result<Vec<GpuConfig>> {
-        let pool = {
-            // Borrow dance: enumerate once, then use immutably.
-            self.pool(ctx);
-            self.pool.as_ref().unwrap()
-        };
-        let mut comp = completion.clone();
-        let mut out: Vec<GpuConfig> = Vec::new();
-
-        while !comp.all_satisfied() {
-            if out.len() >= MAX_GPUS {
-                anyhow::bail!("greedy exceeded {MAX_GPUS} GPUs; unsatisfiable SLOs?");
-            }
-            let remaining = comp.remaining();
-
-            // Endgame (App. A.1 lines 18–22): if a single multi-service
-            // GPU can finish the job, prefer it over pool configs.
-            if let Some(cfg) = pack_residual(ctx, &comp) {
-                let mut after = comp.clone();
-                after.add(&cfg.utility(ctx));
-                if after.all_satisfied() {
-                    out.push(cfg);
-                    break;
-                }
-            }
-
-            let best = pool
-                .best_by_score(&remaining)
-                .ok_or_else(|| anyhow::anyhow!("no config scores > 0 but SLOs unmet"))?;
-            let cfg = pool.materialize(ctx, best);
-            comp.add(&cfg.utility(ctx));
-            out.push(cfg);
+        if self.pool.is_none() {
+            self.pool = Some(ConfigPool::enumerate(ctx));
         }
-        Ok(out)
+        let pool = self.pool.as_ref().unwrap();
+        let mut engine = ScoreEngine::new(pool, completion);
+        run_with_engine(ctx, &mut engine)
     }
 }
 
@@ -196,6 +234,35 @@ mod tests {
                 let lat = prof.latency(a.placement.size, a.batch).unwrap();
                 assert!(lat <= svc.slo.latency_ms + 1e-9);
             }
+        }
+    }
+
+    /// SATELLITE DETERMINISM: the engine-driven greedy emits exactly the
+    /// seed implementation's deployment — same configs, same order —
+    /// from scratch and from partial completion states.
+    #[test]
+    fn engine_greedy_identical_to_full_scan_reference() {
+        for (n, thr) in [(1, 500.0), (4, 600.0), (8, 800.0), (12, 450.0)] {
+            let (bank, w) = fixture(n, thr);
+            let ctx = ProblemCtx::new(&bank, &w).unwrap();
+            let pool = ConfigPool::enumerate(&ctx);
+            let zero = CompletionRates::zeros(w.len());
+            let reference = full_scan(&ctx, &pool, &zero).unwrap();
+            let fast = Greedy::new().run(&ctx, &zero).unwrap();
+            let labels =
+                |v: &[GpuConfig]| v.iter().map(|c| c.label()).collect::<Vec<_>>();
+            assert_eq!(labels(&fast), labels(&reference), "n={n}");
+
+            // Resume mid-way: both paths agree on residual solves too.
+            let mut comp = CompletionRates::zeros(w.len());
+            for g in &reference[..reference.len() / 2] {
+                comp.add(&g.utility(&ctx));
+            }
+            let ref_rest = full_scan(&ctx, &pool, &comp).unwrap();
+            let fast_rest = Greedy::with_pool(ConfigPool::enumerate(&ctx))
+                .run(&ctx, &comp)
+                .unwrap();
+            assert_eq!(labels(&fast_rest), labels(&ref_rest), "n={n} residual");
         }
     }
 }

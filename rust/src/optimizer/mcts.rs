@@ -10,17 +10,21 @@
 //!
 //! 1. **Too many children** — each expansion samples 5 unsatisfied
 //!    services, scores only the configurations touching them, and keeps
-//!    the top-K (K = 10 by default).
+//!    the top-K (K = 10 by default). The per-service cut and scoring is
+//!    a [`ScoreEngine::top_k_touching`] query over the shared inverted
+//!    index.
 //! 2. **Slow/inaccurate estimation** — rollouts draw from a *memoized*
 //!    pool of good candidate configurations keyed by the node's
-//!    unsatisfied-service signature, with randomization for diversity
-//!    ("two to three orders of magnitude faster than the classic
-//!    estimation"). A rollout also *is* a concrete completion of the
-//!    deployment, so the best rollout ever seen is the returned answer.
+//!    unsatisfied-service signature ([`ScoreEngine::top_candidates`]
+//!    fills the pool), with randomization for diversity ("two to three
+//!    orders of magnitude faster than the classic estimation"). A
+//!    rollout also *is* a concrete completion of the deployment, so the
+//!    best rollout ever seen is the returned answer.
 
 use std::collections::HashMap;
 
 use super::comp_rates::CompletionRates;
+use super::engine::ScoreEngine;
 use super::gpu_config::{pack_residual, ConfigPool, GpuConfig, ProblemCtx};
 use super::OptimizerProcedure;
 use crate::util::rng::Rng;
@@ -83,18 +87,20 @@ impl Mcts {
         Mcts { cfg }
     }
 
-    /// Run the search over a borrowed pool (shared with greedy/GA) and
-    /// return the best complete solution found.
+    /// Run the search through a shared [`ScoreEngine`] (pool + inverted
+    /// index, shared with greedy/GA) and return the best complete
+    /// solution found.
     pub fn search(
         &self,
         ctx: &ProblemCtx,
-        pool: &ConfigPool,
+        engine: &ScoreEngine,
         completion: &CompletionRates,
         rng: &mut Rng,
     ) -> Vec<GpuConfig> {
         if completion.all_satisfied() {
             return Vec::new();
         }
+        let pool = engine.pool();
         let mut nodes: Vec<Node> = vec![Node {
             comp: completion.clone(),
             depth: 0,
@@ -108,7 +114,7 @@ impl Mcts {
         // Seed with one rollout from the root so there is always a
         // complete incumbent.
         let mut best_solution: Vec<Step> =
-            self.rollout(ctx, pool, completion, &mut rollout_cache, rng);
+            self.rollout(ctx, engine, completion, &mut rollout_cache, rng);
         let mut best_len = best_solution.len();
 
         for _ in 0..self.cfg.iterations {
@@ -152,7 +158,7 @@ impl Mcts {
 
             // ---------------- expansion
             if !nodes[cur].expanded && !nodes[cur].comp.all_satisfied() {
-                let children = self.expand(ctx, pool, &nodes[cur].comp, rng);
+                let children = self.expand(engine, &nodes[cur].comp, rng);
                 let depth = nodes[cur].depth;
                 let mut links = Vec::with_capacity(children.len());
                 for cfg_idx in children {
@@ -184,7 +190,7 @@ impl Mcts {
 
             // ---------------- rollout (memoized + randomized)
             let tail =
-                self.rollout(ctx, pool, &nodes[cur].comp, &mut rollout_cache, rng);
+                self.rollout(ctx, engine, &nodes[cur].comp, &mut rollout_cache, rng);
             let total = nodes[cur].depth + tail.len();
 
             // Track the incumbent complete solution.
@@ -213,11 +219,11 @@ impl Mcts {
     }
 
     /// Expansion: sample unsatisfied services, score configs touching
-    /// them, keep top-K (Appendix A.2, first fix).
+    /// them, keep top-K (Appendix A.2, first fix) — an inverted-index
+    /// query on the shared engine.
     fn expand(
         &self,
-        _ctx: &ProblemCtx,
-        pool: &ConfigPool,
+        engine: &ScoreEngine,
         comp: &CompletionRates,
         rng: &mut Rng,
     ) -> Vec<u32> {
@@ -232,21 +238,7 @@ impl Mcts {
             .map(|i| unsat[i])
             .collect();
         let remaining = comp.remaining();
-        let mut seen = std::collections::HashSet::new();
-        let mut scored: Vec<(f64, u32)> = Vec::new();
-        for &sid in &picked {
-            for &ci in pool.touching(sid) {
-                if seen.insert(ci) {
-                    let s = pool.configs[ci as usize].score_clipped(&remaining);
-                    if s > 0.0 {
-                        scored.push((s, ci));
-                    }
-                }
-            }
-        }
-        scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
-        scored.truncate(self.cfg.top_k);
-        scored.into_iter().map(|(_, i)| i).collect()
+        engine.top_k_touching(&picked, &remaining, self.cfg.top_k)
     }
 
     /// Memoized randomized playout: complete the deployment from `comp`,
@@ -256,11 +248,12 @@ impl Mcts {
     fn rollout(
         &self,
         ctx: &ProblemCtx,
-        pool: &ConfigPool,
+        engine: &ScoreEngine,
         comp: &CompletionRates,
         cache: &mut HashMap<u64, Vec<u32>>,
         rng: &mut Rng,
     ) -> Vec<Step> {
+        let pool = engine.pool();
         let mut comp = comp.clone();
         let mut out: Vec<Step> = Vec::new();
         // Far more than any sane deployment; break glass on bugs.
@@ -278,20 +271,9 @@ impl Mcts {
             }
             let remaining = comp.remaining();
             let sig = comp.unsatisfied_signature();
-            let cands = cache.entry(sig).or_insert_with(|| {
-                let mut scored: Vec<(f64, u32)> = pool
-                    .configs
-                    .iter()
-                    .enumerate()
-                    .filter_map(|(i, c)| {
-                        let s = c.score_clipped(&remaining);
-                        (s > 0.0).then_some((s, i as u32))
-                    })
-                    .collect();
-                scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
-                scored.truncate(self.cfg.rollout_pool);
-                scored.into_iter().map(|(_, i)| i).collect()
-            });
+            let cands = cache
+                .entry(sig)
+                .or_insert_with(|| engine.top_candidates(&remaining, self.cfg.rollout_pool));
 
             // ε-greedy pick from the cached candidates: mostly take the
             // best-scoring one (so a rollout is never much worse than
@@ -350,8 +332,9 @@ impl OptimizerProcedure for Mcts {
         completion: &CompletionRates,
     ) -> anyhow::Result<Vec<GpuConfig>> {
         let pool = ConfigPool::enumerate(ctx);
+        let engine = ScoreEngine::new(&pool, completion);
         let mut rng = Rng::new(self.cfg.seed);
-        Ok(self.search(ctx, &pool, completion, &mut rng))
+        Ok(self.search(ctx, &engine, completion, &mut rng))
     }
 }
 
@@ -406,10 +389,11 @@ mod tests {
         let (bank, w) = fixture(4, 500.0);
         let ctx = ProblemCtx::new(&bank, &w).unwrap();
         let pool = ConfigPool::enumerate(&ctx);
-        let mcts = Mcts::new(MctsConfig { iterations: 40, ..Default::default() });
         let zero = CompletionRates::zeros(w.len());
-        let a = mcts.search(&ctx, &pool, &zero, &mut Rng::new(7));
-        let b = mcts.search(&ctx, &pool, &zero, &mut Rng::new(7));
+        let engine = ScoreEngine::new(&pool, &zero);
+        let mcts = Mcts::new(MctsConfig { iterations: 40, ..Default::default() });
+        let a = mcts.search(&ctx, &engine, &zero, &mut Rng::new(7));
+        let b = mcts.search(&ctx, &engine, &zero, &mut Rng::new(7));
         let labels = |v: &Vec<crate::optimizer::GpuConfig>| {
             v.iter().map(|c| c.label()).collect::<Vec<_>>()
         };
@@ -433,13 +417,15 @@ mod tests {
         let (bank, w) = fixture(6, 800.0);
         let ctx = ProblemCtx::new(&bank, &w).unwrap();
         let pool = ConfigPool::enumerate(&ctx);
+        let zero = CompletionRates::zeros(w.len());
+        let engine = ScoreEngine::new(&pool, &zero);
         let mcts = Mcts::new(MctsConfig { iterations: 30, ..Default::default() });
         let mut cache = HashMap::new();
         let mut rng = Rng::new(3);
-        let zero = CompletionRates::zeros(w.len());
         let mut total_steps = 0;
         for _ in 0..10 {
-            total_steps += mcts.rollout(&ctx, &pool, &zero, &mut cache, &mut rng).len();
+            total_steps +=
+                mcts.rollout(&ctx, &engine, &zero, &mut cache, &mut rng).len();
         }
         assert!(
             cache.len() < total_steps,

@@ -7,31 +7,41 @@
 //! * [`comp_rates`] — completion-rate vectors (§5.1);
 //! * [`gpu_config`] — GPU configurations, utilities, and the
 //!   configuration enumerator (§5.1);
-//! * [`score`] — the heuristic score (§5.3);
-//! * [`greedy`] — the **fast algorithm** (Appendix A.1);
+//! * [`score`] — the heuristic score (§5.3), kept as the dense
+//!   property-tested reference;
+//! * [`engine`] — the incremental sparse score engine (inverted index +
+//!   lazy max-heap) every procedure shares;
+//! * [`greedy`] — the **fast algorithm** (Appendix A.1), engine-driven;
 //! * [`mcts`] — the **slow algorithm**, customized MCTS (Appendix A.2);
 //! * [`ga`] — the tailored Genetic Algorithm connecting them (§5.2);
 //! * [`two_phase`] — the end-to-end two-phase pipeline (§5.2);
+//! * [`pipeline`] — the [`OptimizerPipeline`] facade with explicit
+//!   time/iteration budgets that callers (CLI, controller replan,
+//!   examples, benches) consume;
 //! * [`lower_bound`] — the rule-free GPU lower bound (§8.1);
 //! * [`exact`] — in-tree branch-and-bound for small instances (the
 //!   paper's Z3/MIP comparison stand-in; used by tests).
 
 pub mod comp_rates;
+pub mod engine;
 pub mod exact;
 pub mod ga;
 pub mod gpu_config;
 pub mod greedy;
 pub mod lower_bound;
 pub mod mcts;
+pub mod pipeline;
 pub mod score;
 pub mod two_phase;
 
 pub use comp_rates::CompletionRates;
+pub use engine::ScoreEngine;
 pub use ga::{GaConfig, GeneticAlgorithm};
 pub use gpu_config::{ConfigPool, GpuConfig, InstanceAssign, ProblemCtx};
 pub use greedy::Greedy;
 pub use lower_bound::lower_bound_gpus;
 pub use mcts::{Mcts, MctsConfig};
+pub use pipeline::{OptimizerPipeline, PipelineBudget, PipelineOutcome};
 pub use two_phase::{TwoPhase, TwoPhaseConfig};
 
 use crate::spec::Workload;

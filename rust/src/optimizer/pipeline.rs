@@ -1,0 +1,253 @@
+//! The unified optimizer pipeline facade.
+//!
+//! Every consumer of the optimizer — the CLI launcher, the controller's
+//! replan path, the examples, and the figure benches — used to hand-wire
+//! Greedy/MCTS/GA, each enumerating its own [`ConfigPool`]. The
+//! [`OptimizerPipeline`] owns that shared state (one pool + inverted
+//! index per [`ProblemCtx`]) and exposes the paper's two-phase pipeline
+//! (§5.2, Fig 6) behind explicit time/iteration budgets
+//! ([`PipelineBudget`]): phase 1 is the engine-driven fast algorithm,
+//! phase 2 the tailored GA whose crossovers run the slow algorithm
+//! through the same [`ScoreEngine`].
+
+use std::time::{Duration, Instant};
+
+use super::comp_rates::CompletionRates;
+use super::engine::ScoreEngine;
+use super::ga::{GaConfig, GaHistory, GeneticAlgorithm};
+use super::gpu_config::{ConfigPool, GpuConfig, ProblemCtx};
+use super::greedy::run_with_engine;
+use super::mcts::MctsConfig;
+use super::Deployment;
+
+/// Explicit budgets for a pipeline run ("people can decide how much
+/// time and how many computational resources they are willing to
+/// devote", §5.2).
+#[derive(Debug, Clone)]
+pub struct PipelineBudget {
+    /// GA rounds for phase 2; `0` means fast-algorithm only.
+    pub ga_rounds: usize,
+    /// GA rounds without improvement before stopping early.
+    pub ga_patience: usize,
+    /// MCTS iterations per GA crossover.
+    pub mcts_iterations: usize,
+    /// Optional wall-clock budget for phase 2; no new GA round starts
+    /// past it. `None` = bounded by rounds/patience only.
+    pub time_budget: Option<Duration>,
+    /// Seed for the GA's (and nested MCTS's) randomness.
+    pub seed: u64,
+}
+
+impl Default for PipelineBudget {
+    fn default() -> Self {
+        PipelineBudget {
+            ga_rounds: 10,
+            ga_patience: 10,
+            mcts_iterations: 60,
+            time_budget: None,
+            seed: 0x6A,
+        }
+    }
+}
+
+impl PipelineBudget {
+    /// Phase-1-only budget: the fast algorithm, no GA.
+    pub fn fast_only() -> PipelineBudget {
+        PipelineBudget { ga_rounds: 0, ..Default::default() }
+    }
+
+    /// The [`GaConfig`] realizing this budget (other GA knobs default).
+    pub fn ga_config(&self) -> GaConfig {
+        GaConfig {
+            rounds: self.ga_rounds,
+            patience: self.ga_patience,
+            mcts: MctsConfig { iterations: self.mcts_iterations, ..Default::default() },
+            time_budget: self.time_budget,
+            seed: self.seed,
+            ..Default::default()
+        }
+    }
+}
+
+/// What a budgeted pipeline run produced (Fig 12 plots `history`).
+#[derive(Debug, Clone)]
+pub struct PipelineOutcome {
+    /// Phase 1: the fast algorithm's deployment.
+    pub fast: Deployment,
+    /// The best deployment after phase 2 (== `fast` when `ga_rounds` is
+    /// 0 or the GA finds no improvement).
+    pub best: Deployment,
+    /// Best GPU count per GA round, round 0 = the fast seed.
+    pub history: GaHistory,
+    /// Wall-clock spent in the whole pipeline run.
+    pub elapsed: Duration,
+}
+
+/// The shared-state optimizer facade: one enumerated pool per problem,
+/// solved under explicit budgets.
+pub struct OptimizerPipeline<'a> {
+    ctx: &'a ProblemCtx<'a>,
+    pool: ConfigPool,
+    pub budget: PipelineBudget,
+}
+
+impl<'a> OptimizerPipeline<'a> {
+    /// Build with the default budget, enumerating the pool once.
+    pub fn new(ctx: &'a ProblemCtx<'a>) -> OptimizerPipeline<'a> {
+        Self::with_budget(ctx, PipelineBudget::default())
+    }
+
+    /// Build with an explicit budget, enumerating the pool once.
+    pub fn with_budget(
+        ctx: &'a ProblemCtx<'a>,
+        budget: PipelineBudget,
+    ) -> OptimizerPipeline<'a> {
+        OptimizerPipeline { ctx, pool: ConfigPool::enumerate(ctx), budget }
+    }
+
+    pub fn ctx(&self) -> &'a ProblemCtx<'a> {
+        self.ctx
+    }
+
+    /// The shared configuration pool (enumerated once at construction).
+    pub fn pool(&self) -> &ConfigPool {
+        &self.pool
+    }
+
+    /// A fresh [`ScoreEngine`] over the shared pool at `completion`.
+    pub fn engine_at(&self, completion: &CompletionRates) -> ScoreEngine<'_> {
+        ScoreEngine::new(&self.pool, completion)
+    }
+
+    /// A fresh engine at the all-zero completion state.
+    pub fn engine(&self) -> ScoreEngine<'_> {
+        self.engine_at(&CompletionRates::zeros(self.ctx.workload.len()))
+    }
+
+    /// Phase 1 only: the fast algorithm from scratch.
+    pub fn fast(&self) -> anyhow::Result<Deployment> {
+        Ok(Deployment {
+            gpus: self.fast_from(&CompletionRates::zeros(self.ctx.workload.len()))?,
+        })
+    }
+
+    /// Phase 1 from a partial completion state (residual solves — e.g.
+    /// scaling an already-running deployment up to new rates).
+    pub fn fast_from(
+        &self,
+        completion: &CompletionRates,
+    ) -> anyhow::Result<Vec<GpuConfig>> {
+        let mut engine = self.engine_at(completion);
+        run_with_engine(self.ctx, &mut engine)
+    }
+
+    /// The full two-phase pipeline under this pipeline's budget.
+    pub fn optimize(&self) -> anyhow::Result<PipelineOutcome> {
+        let t0 = Instant::now();
+        let mut engine = self.engine();
+        let fast = Deployment { gpus: run_with_engine(self.ctx, &mut engine)? };
+        anyhow::ensure!(
+            fast.is_valid(self.ctx),
+            "fast algorithm produced invalid deployment"
+        );
+        let (best, history) = if self.budget.ga_rounds == 0 {
+            let history =
+                GaHistory { best_gpus_per_round: vec![fast.num_gpus()] };
+            (fast.clone(), history)
+        } else {
+            let ga = GeneticAlgorithm::new(self.budget.ga_config());
+            ga.evolve(self.ctx, &engine, fast.clone())
+        };
+        Ok(PipelineOutcome { fast, best, history, elapsed: t0.elapsed() })
+    }
+
+    /// The deployment this budget asks for: fast-only when `ga_rounds`
+    /// is 0, otherwise the full two-phase result. This is the entry
+    /// point replanning paths consume (controller, CLI, examples).
+    pub fn plan_deployment(&self) -> anyhow::Result<Deployment> {
+        if self.budget.ga_rounds == 0 {
+            self.fast()
+        } else {
+            Ok(self.optimize()?.best)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer::{lower_bound_gpus, Greedy, OptimizerProcedure};
+    use crate::perf::ProfileBank;
+    use crate::spec::{Slo, Workload};
+
+    fn fixture(n: usize, thr: f64) -> (ProfileBank, Workload) {
+        let bank = ProfileBank::synthetic();
+        let models = bank.simulation_models();
+        let services = (0..n)
+            .map(|i| (models[i % models.len()].clone(), Slo::new(thr, 150.0)))
+            .collect();
+        (bank, Workload::new("pipeline-test", services))
+    }
+
+    #[test]
+    fn fast_matches_standalone_greedy() {
+        let (bank, w) = fixture(6, 700.0);
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let pipeline = OptimizerPipeline::with_budget(&ctx, PipelineBudget::fast_only());
+        let fast = pipeline.fast().unwrap();
+        let standalone = Greedy::new().solve(&ctx).unwrap();
+        assert_eq!(
+            fast.gpus.iter().map(|c| c.label()).collect::<Vec<_>>(),
+            standalone.gpus.iter().map(|c| c.label()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn optimize_respects_budget_shape() {
+        let (bank, w) = fixture(5, 600.0);
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let budget = PipelineBudget {
+            ga_rounds: 2,
+            ga_patience: 2,
+            mcts_iterations: 15,
+            ..Default::default()
+        };
+        let pipeline = OptimizerPipeline::with_budget(&ctx, budget);
+        let out = pipeline.optimize().unwrap();
+        assert!(out.fast.is_valid(&ctx));
+        assert!(out.best.is_valid(&ctx));
+        assert!(out.best.num_gpus() <= out.fast.num_gpus());
+        assert!(out.best.num_gpus() >= lower_bound_gpus(&ctx));
+        // history: seed + at most 2 rounds.
+        assert!(out.history.best_gpus_per_round.len() <= 3);
+        assert_eq!(out.history.best_gpus_per_round[0], out.fast.num_gpus());
+    }
+
+    #[test]
+    fn zero_rounds_is_fast_only() {
+        let (bank, w) = fixture(4, 500.0);
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let pipeline = OptimizerPipeline::with_budget(&ctx, PipelineBudget::fast_only());
+        let out = pipeline.optimize().unwrap();
+        assert_eq!(out.fast.num_gpus(), out.best.num_gpus());
+        assert_eq!(out.history.best_gpus_per_round, vec![out.fast.num_gpus()]);
+        let planned = pipeline.plan_deployment().unwrap();
+        assert_eq!(planned.num_gpus(), out.best.num_gpus());
+    }
+
+    #[test]
+    fn fast_from_resumes_partial_states() {
+        let (bank, w) = fixture(4, 600.0);
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let pipeline = OptimizerPipeline::with_budget(&ctx, PipelineBudget::fast_only());
+        let full = pipeline.fast().unwrap();
+        let half: Vec<_> = full.gpus[..full.num_gpus() / 2].to_vec();
+        let mut comp = CompletionRates::zeros(w.len());
+        for g in &half {
+            comp.add(&g.utility(&ctx));
+        }
+        let rest = pipeline.fast_from(&comp).unwrap();
+        let dep = Deployment { gpus: half.into_iter().chain(rest).collect() };
+        assert!(dep.is_valid(&ctx));
+    }
+}

@@ -6,11 +6,19 @@
 //! (MCTS); it is on-demand and budgeted ("people can decide how much
 //! time and how many computational resources they are willing to
 //! devote").
+//!
+//! Both phases share a single [`ConfigPool`] + [`ScoreEngine`] per
+//! problem: the pool is enumerated exactly once, phase 1 drives the
+//! engine's incremental heap, and phase 2's crossover refills reuse the
+//! same engine for their MCTS queries. Higher-level callers should
+//! prefer [`super::pipeline::OptimizerPipeline`], which adds explicit
+//! budgets and owns the shared state across repeated solves.
 
 use super::comp_rates::CompletionRates;
+use super::engine::ScoreEngine;
 use super::ga::{GaConfig, GaHistory, GeneticAlgorithm};
 use super::gpu_config::{ConfigPool, GpuConfig, ProblemCtx};
-use super::greedy::Greedy;
+use super::greedy::run_with_engine;
 use super::{Deployment, OptimizerProcedure};
 
 /// Two-phase pipeline configuration.
@@ -37,16 +45,28 @@ impl TwoPhase {
         TwoPhase { cfg }
     }
 
-    /// Run both phases, returning the full outcome.
+    /// Run both phases, returning the full outcome. Enumerates one pool
+    /// and hands it to [`TwoPhase::optimize_with_pool`].
     pub fn optimize(&self, ctx: &ProblemCtx) -> anyhow::Result<TwoPhaseOutcome> {
         let pool = ConfigPool::enumerate(ctx);
-        // Phase 1: fast algorithm.
-        let mut greedy = Greedy::new();
-        let fast = greedy.solve(ctx)?;
+        self.optimize_with_pool(ctx, &pool)
+    }
+
+    /// Run both phases over a shared, pre-enumerated pool.
+    pub fn optimize_with_pool(
+        &self,
+        ctx: &ProblemCtx,
+        pool: &ConfigPool,
+    ) -> anyhow::Result<TwoPhaseOutcome> {
+        let zero = CompletionRates::zeros(ctx.workload.len());
+        let mut engine = ScoreEngine::new(pool, &zero);
+        // Phase 1: fast algorithm over the shared engine.
+        let fast = Deployment { gpus: run_with_engine(ctx, &mut engine)? };
         anyhow::ensure!(fast.is_valid(ctx), "fast algorithm produced invalid deployment");
-        // Phase 2: GA over the fast seed.
+        // Phase 2: GA over the fast seed; crossovers query the same
+        // engine (pool + inverted index), never re-enumerating.
         let ga = GeneticAlgorithm::new(self.cfg.ga.clone());
-        let (best, history) = ga.evolve(ctx, &pool, fast.clone());
+        let (best, history) = ga.evolve(ctx, &engine, fast.clone());
         Ok(TwoPhaseOutcome { fast, best, history })
     }
 }
@@ -65,9 +85,12 @@ impl OptimizerProcedure for TwoPhase {
             return Ok(Vec::new());
         }
         // The pipeline optimizes whole deployments; for residual calls
-        // (e.g. nested in other procedures) fall back to the fast path.
+        // (e.g. nested in other procedures) fall back to the fast path
+        // over one freshly enumerated pool.
         if completion.as_slice().iter().any(|&c| c > 0.0) {
-            return Greedy::new().run(ctx, completion);
+            let pool = ConfigPool::enumerate(ctx);
+            let mut engine = ScoreEngine::new(&pool, completion);
+            return run_with_engine(ctx, &mut engine);
         }
         Ok(self.optimize(ctx)?.best.gpus)
     }
@@ -116,5 +139,20 @@ mod tests {
         let ctx = ProblemCtx::new(&bank, &w).unwrap();
         let dep = TwoPhase::new(small_cfg()).solve(&ctx).unwrap();
         assert!(dep.is_valid(&ctx));
+    }
+
+    /// The fast phase through the shared engine matches a standalone
+    /// greedy solve exactly (same pool order, same tie-breaks).
+    #[test]
+    fn fast_phase_matches_standalone_greedy() {
+        use crate::optimizer::Greedy;
+        let (bank, w) = fixture(6, 700.0);
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let out = TwoPhase::new(small_cfg()).optimize(&ctx).unwrap();
+        let standalone = Greedy::new().solve(&ctx).unwrap();
+        let labels = |d: &Deployment| {
+            d.gpus.iter().map(|c| c.label()).collect::<Vec<_>>()
+        };
+        assert_eq!(labels(&out.fast), labels(&standalone));
     }
 }

@@ -194,12 +194,19 @@ fn write_escaped(out: &mut String, s: &str) {
 }
 
 /// Parse error with byte offset.
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
-#[error("json parse error at byte {offset}: {msg}")]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ParseError {
     pub offset: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.offset, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 struct Parser<'a> {
     bytes: &'a [u8],

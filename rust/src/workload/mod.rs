@@ -11,4 +11,4 @@ pub mod realworld;
 pub mod synthetic;
 
 pub use realworld::{daytime, night, scaled_realworld};
-pub use synthetic::{simulation_workload, SIMULATION_WORKLOADS};
+pub use synthetic::{micro_workload, simulation_workload, SIMULATION_WORKLOADS};

@@ -51,6 +51,26 @@ pub fn simulation_workload(bank: &ProfileBank, name: &str) -> Workload {
     Workload::new(name, services)
 }
 
+/// The `micro_optimizer` bench fixture, shared with the equivalence
+/// tests so both pin the exact same workloads: `n` services cycling
+/// through the simulation models, each demanding `mult` times its own
+/// 7/7 effective throughput (100 ms latency SLO).
+pub fn micro_workload(bank: &ProfileBank, n: usize, mult: f64) -> Workload {
+    let models = bank.simulation_models();
+    Workload::new(
+        format!("micro-{n}"),
+        (0..n)
+            .map(|i| {
+                let prof = bank.get(&models[i % models.len()]).unwrap();
+                let unit = prof
+                    .effective_throughput(crate::mig::InstanceSize::Seven, LATENCY_SLO_MS)
+                    .unwrap_or(100.0);
+                (models[i % models.len()].clone(), Slo::new(unit * mult, LATENCY_SLO_MS))
+            })
+            .collect(),
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,0 +1,130 @@
+//! Equivalence + determinism guarantees for the incremental score
+//! engine refactor: the engine-driven optimizers must reproduce the
+//! seed (full pool-rescan) implementations byte for byte under fixed
+//! seeds, on the same fixtures the `micro_optimizer` bench uses.
+
+use mig_serving::optimizer::{
+    greedy, CompletionRates, ConfigPool, GaConfig, GeneticAlgorithm, Greedy,
+    MctsConfig, OptimizerPipeline, OptimizerProcedure, PipelineBudget, ProblemCtx,
+    ScoreEngine,
+};
+use mig_serving::perf::ProfileBank;
+// The exact same fixture builder the `micro_optimizer` bench uses.
+use mig_serving::workload::micro_workload;
+
+fn labels(gpus: &[mig_serving::optimizer::GpuConfig]) -> Vec<String> {
+    gpus.iter().map(|c| c.label()).collect()
+}
+
+/// ACCEPTANCE: on the micro_optimizer fixtures, engine-driven greedy
+/// emits the seed implementation's deployment — same GPU count, same
+/// configs, same order.
+#[test]
+fn greedy_matches_seed_on_micro_fixtures() {
+    let bank = ProfileBank::synthetic();
+    for n in [6usize, 12, 24] {
+        let w = micro_workload(&bank, n, 8.0);
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let pool = ConfigPool::enumerate(&ctx);
+        let zero = CompletionRates::zeros(w.len());
+
+        let seed_impl = greedy::full_scan(&ctx, &pool, &zero).unwrap();
+        let refactored = Greedy::new().solve(&ctx).unwrap();
+
+        assert_eq!(
+            refactored.num_gpus(),
+            seed_impl.len(),
+            "n={n}: GPU count diverged"
+        );
+        assert_eq!(
+            labels(&refactored.gpus),
+            labels(&seed_impl),
+            "n={n}: deployment diverged"
+        );
+        assert!(refactored.is_valid(&ctx));
+    }
+}
+
+/// ACCEPTANCE: the pipeline's two-phase path seeds from the same fast
+/// deployment and, with fixed seeds, is exactly reproducible.
+#[test]
+fn two_phase_deterministic_and_seeded_from_greedy() {
+    let bank = ProfileBank::synthetic();
+    let w = micro_workload(&bank, 12, 8.0);
+    let ctx = ProblemCtx::new(&bank, &w).unwrap();
+    let budget = PipelineBudget {
+        ga_rounds: 2,
+        ga_patience: 2,
+        mcts_iterations: 15,
+        ..Default::default()
+    };
+
+    let a = OptimizerPipeline::with_budget(&ctx, budget.clone()).optimize().unwrap();
+    let b = OptimizerPipeline::with_budget(&ctx, budget).optimize().unwrap();
+
+    // Phase 1 equals the seed greedy implementation.
+    let pool = ConfigPool::enumerate(&ctx);
+    let zero = CompletionRates::zeros(w.len());
+    let seed_impl = greedy::full_scan(&ctx, &pool, &zero).unwrap();
+    assert_eq!(labels(&a.fast.gpus), labels(&seed_impl));
+
+    // Phase 2 is replayable: identical outputs across runs.
+    assert_eq!(labels(&a.best.gpus), labels(&b.best.gpus));
+    assert_eq!(
+        a.history.best_gpus_per_round,
+        b.history.best_gpus_per_round
+    );
+    assert!(a.best.num_gpus() <= a.fast.num_gpus());
+    assert!(a.best.is_valid(&ctx));
+}
+
+/// The GA over a shared engine is deterministic under a fixed seed and
+/// never regresses below its greedy seed (elitism).
+#[test]
+fn ga_deterministic_over_shared_engine() {
+    let bank = ProfileBank::synthetic();
+    let w = micro_workload(&bank, 6, 8.0);
+    let ctx = ProblemCtx::new(&bank, &w).unwrap();
+    let pool = ConfigPool::enumerate(&ctx);
+    let engine = ScoreEngine::new(&pool, &CompletionRates::zeros(w.len()));
+    let seed_dep = Greedy::new().solve(&ctx).unwrap();
+    let ga = GeneticAlgorithm::new(GaConfig {
+        rounds: 2,
+        mcts: MctsConfig { iterations: 15, ..Default::default() },
+        ..Default::default()
+    });
+    let (a, ha) = ga.evolve(&ctx, &engine, seed_dep.clone());
+    let (b, hb) = ga.evolve(&ctx, &engine, seed_dep.clone());
+    assert_eq!(labels(&a.gpus), labels(&b.gpus));
+    assert_eq!(ha.best_gpus_per_round, hb.best_gpus_per_round);
+    assert!(a.num_gpus() <= seed_dep.num_gpus());
+}
+
+/// Residual (partial-completion) solves agree between the seed full
+/// scan and the engine path — the controller's scale-up case.
+#[test]
+fn residual_solves_match_seed() {
+    let bank = ProfileBank::synthetic();
+    let w = micro_workload(&bank, 12, 8.0);
+    let ctx = ProblemCtx::new(&bank, &w).unwrap();
+    let pool = ConfigPool::enumerate(&ctx);
+    let zero = CompletionRates::zeros(w.len());
+    let full = greedy::full_scan(&ctx, &pool, &zero).unwrap();
+
+    // Start from several prefixes of the full deployment.
+    for frac in [4usize, 2] {
+        let keep = full.len() / frac;
+        let mut comp = CompletionRates::zeros(w.len());
+        for g in &full[..keep] {
+            comp.add(&g.utility(&ctx));
+        }
+        let reference = greedy::full_scan(&ctx, &pool, &comp).unwrap();
+        let pipeline = OptimizerPipeline::with_budget(&ctx, PipelineBudget::fast_only());
+        let engine_path = pipeline.fast_from(&comp).unwrap();
+        assert_eq!(
+            labels(&engine_path),
+            labels(&reference),
+            "prefix 1/{frac} diverged"
+        );
+    }
+}
