@@ -47,5 +47,31 @@ fn main() -> anyhow::Result<()> {
     }
     println!("{}", table.render());
     println!("MIG-Serving tracks the lower bound; static baselines overpay.");
+
+    // When the plan matters (committing budget), refine the 1.0x plan
+    // with the parallel two-phase pipeline — the GA fans out across all
+    // cores and its output is identical at any worker count.
+    let services = base
+        .iter()
+        .map(|(m, thr, lat)| (m.clone(), Slo::new(*thr, *lat)))
+        .collect();
+    let w = Workload::new("x1-refined", services);
+    let ctx = ProblemCtx::new(&bank, &w)?;
+    let pipeline = OptimizerPipeline::with_budget(
+        &ctx,
+        PipelineBudget {
+            ga_rounds: 3,
+            mcts_iterations: 20,
+            parallelism: None,
+            ..Default::default()
+        },
+    );
+    let refined = pipeline.optimize()?;
+    println!(
+        "refined 1.0x plan: fast {} GPUs -> two-phase {} GPUs ({:.2?})",
+        refined.fast.num_gpus(),
+        refined.best.num_gpus(),
+        refined.elapsed
+    );
     Ok(())
 }

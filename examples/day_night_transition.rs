@@ -19,14 +19,22 @@ fn main() -> anyhow::Result<()> {
     let night_w = night(&bank);
 
     // One pipeline (shared config pool + score engine) per workload;
-    // the controller replans through it on every shift change.
+    // the controller replans through it on every shift change. A small
+    // two-phase budget exercises the parallel GA on the replan path —
+    // `parallelism: None` uses every core, and the planned deployment
+    // is identical at any worker count (so the assertions below hold).
+    let budget = || PipelineBudget {
+        ga_rounds: 2,
+        mcts_iterations: 15,
+        parallelism: None,
+        ..Default::default()
+    };
     let day_ctx = ProblemCtx::new(&bank, &day)?;
     let night_ctx = ProblemCtx::new(&bank, &night_w)?;
-    let day_pipe = OptimizerPipeline::with_budget(&day_ctx, PipelineBudget::fast_only());
-    let night_pipe =
-        OptimizerPipeline::with_budget(&night_ctx, PipelineBudget::fast_only());
-    let day_dep = day_pipe.fast()?;
-    let night_dep = night_pipe.fast()?;
+    let day_pipe = OptimizerPipeline::with_budget(&day_ctx, budget());
+    let night_pipe = OptimizerPipeline::with_budget(&night_ctx, budget());
+    let day_dep = day_pipe.plan_deployment()?;
+    let night_dep = night_pipe.plan_deployment()?;
     println!(
         "daytime deployment: {} GPUs; night deployment: {} GPUs",
         day_dep.num_gpus(),

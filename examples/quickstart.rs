@@ -35,10 +35,28 @@ fn main() -> anyhow::Result<()> {
 
     // 4. The optimizer pipeline: one shared config pool + score engine
     //    per problem; a fast-only budget runs the heuristic greedy
-    //    (§5.3 / App. A.1). Raise `ga_rounds` for the full two-phase
-    //    pipeline.
+    //    (§5.3 / App. A.1).
     let pipeline = OptimizerPipeline::with_budget(&ctx, PipelineBudget::fast_only());
     let deployment = pipeline.fast()?;
+
+    // 4b. The full two-phase pipeline refines the fast deployment with
+    //     the GA/MCTS slow algorithm (§5.2). `parallelism: None` fans
+    //     the GA's offspring across every core — the result is
+    //     bit-identical at any worker count, only faster.
+    let mut refined_pipeline = pipeline;
+    refined_pipeline.budget = PipelineBudget {
+        ga_rounds: 3,
+        mcts_iterations: 20,
+        parallelism: None,
+        ..Default::default()
+    };
+    let refined = refined_pipeline.optimize()?;
+    println!(
+        "fast: {} GPUs; two-phase refined: {} GPUs (in {:.2?})",
+        deployment.num_gpus(),
+        refined.best.num_gpus(),
+        refined.elapsed
+    );
 
     println!("deployment for {:?}:", workload.name);
     for (i, gpu) in deployment.gpus.iter().enumerate() {

@@ -41,8 +41,11 @@ fn main() -> anyhow::Result<()> {
     let bank = ProfileBank::synthetic();
     let w = scaled_realworld(&bank, "night-e2e", 14.0, true);
     let ctx = ProblemCtx::new(&bank, &w)?;
+    // Fast-only: this demo is runtime-bound, not optimizer-bound. Use
+    // a two-phase budget with `parallelism: None` to refine on all
+    // cores when the optimizer is the bottleneck.
     let pipeline = OptimizerPipeline::with_budget(&ctx, PipelineBudget::fast_only());
-    let dep = pipeline.fast()?;
+    let dep = pipeline.plan_deployment()?;
     println!(
         "optimizer: {} GPUs, {} instances for {} services",
         dep.num_gpus(),

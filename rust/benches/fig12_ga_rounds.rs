@@ -35,6 +35,10 @@ fn main() {
             ga_rounds: rounds,
             ga_patience: rounds, // let it run the full budget
             mcts_iterations: 40,
+            // All cores: the GA fans offspring slots across workers;
+            // the per-slot RNG streams keep the rows identical to a
+            // serial run, only faster.
+            parallelism: None,
             ..Default::default()
         };
         let outcome = OptimizerPipeline::with_budget(&ctx, budget)

@@ -3,123 +3,253 @@
 //! two-phase pipeline in hours — on this scaled testbed everything is
 //! proportionally faster).
 //!
-//! Sections:
+//! Sections (select with `--sections 1,2,...`; `--quick` shrinks
+//! iteration counts and caps sizes for CI smoke runs; `--json <path>`
+//! writes the machine-readable record CI uploads as
+//! `BENCH_micro_optimizer.json`):
+//!
 //! 1. pool enumeration + greedy scaling in n (services);
 //! 2. **full pool-rescan greedy vs the incremental [`ScoreEngine`]** at
 //!    16/64/256 services (the lazy-greedy/CELF refactor's headline
 //!    numbers; outputs are asserted identical before timing);
-//! 3. the Fig 9-shaped full workload;
-//! 4. MCTS search budget and the memoized-rollout warm/cold gap
+//! 3. **serial vs parallel two-phase solve** at 16/64/256 services —
+//!    the id-backed GA fans its offspring slots across cores; outputs
+//!    (best deployment labels + GPU count) are asserted identical at
+//!    any `parallelism` before timing;
+//! 4. the Fig 9-shaped full workload;
+//! 5. MCTS search budget and the memoized-rollout warm/cold gap
 //!    (App. A.2's "2-3 orders of magnitude" claim is about reusing
 //!    candidate pools).
 
-use mig_serving::bench::BenchCtx;
+use mig_serving::bench::{BenchArgs, BenchCtx, JsonReport};
 use mig_serving::optimizer::{
     greedy, CompletionRates, ConfigPool, Mcts, MctsConfig, OptimizerPipeline,
     PipelineBudget, ProblemCtx, ScoreEngine,
 };
 use mig_serving::perf::ProfileBank;
+use mig_serving::util::json::Value;
 use mig_serving::util::rng::Rng;
 use mig_serving::workload::{micro_workload, simulation_workload};
 
+fn labels(gpus: &[mig_serving::optimizer::GpuConfig]) -> Vec<String> {
+    gpus.iter().map(|c| c.label()).collect()
+}
+
 fn main() {
+    let args = BenchArgs::parse();
     mig_serving::bench::header("micro/optimizer", "pipeline stage timings + scaling");
     let bank = ProfileBank::synthetic();
-    let bench = BenchCtx::new(1, 3);
+    let mut report = JsonReport::new("micro_optimizer", args.quick);
+    let quick = args.quick;
+    let bench = BenchCtx::new(usize::from(!quick), if quick { 1 } else { 3 });
 
     // --- 1. pool enumeration and greedy scaling in n (services).
-    for n in [6, 12, 24] {
-        let w = micro_workload(&bank, n, 8.0);
-        let ctx = ProblemCtx::new(&bank, &w).unwrap();
-        let m = bench.time(&format!("ConfigPool::enumerate n={n}"), || {
-            ConfigPool::enumerate(&ctx).len()
-        });
-        println!("{}", m.report());
-        let pipeline = OptimizerPipeline::with_budget(&ctx, PipelineBudget::fast_only());
-        let pool_len = pipeline.pool().len();
-        let m = bench.time(&format!("greedy solve n={n} (pool {pool_len})"), || {
-            pipeline.fast().unwrap().num_gpus()
-        });
-        println!("{}", m.report());
+    if args.section_enabled(1) {
+        let section = "1 pool enumeration + greedy scaling";
+        for n in [6usize, 12, 24] {
+            let w = micro_workload(&bank, n, 8.0);
+            let ctx = ProblemCtx::new(&bank, &w).unwrap();
+            let m = bench.time(&format!("ConfigPool::enumerate n={n}"), || {
+                ConfigPool::enumerate(&ctx).len()
+            });
+            println!("{}", m.report());
+            report.record_measurement(section, &m);
+            let pipeline =
+                OptimizerPipeline::with_budget(&ctx, PipelineBudget::fast_only());
+            let pool_len = pipeline.pool().len();
+            let gpus = pipeline.fast().unwrap().num_gpus();
+            let m = bench.time(&format!("greedy solve n={n} (pool {pool_len})"), || {
+                pipeline.fast().unwrap().num_gpus()
+            });
+            println!("{}", m.report());
+            report.record_measurement(section, &m);
+            report.record(section, &format!("greedy gpus n={n}"), Value::Num(gpus as f64));
+        }
+        println!();
     }
 
-    // --- 2. SATELLITE: full pool-rescan vs incremental engine.
+    // --- 2. full pool-rescan vs incremental engine.
     //
     // Same pool, same outputs (asserted), only the per-GPU scoring
     // differs: O(pool) rescans vs inverted-index dirtying + lazy heap.
     // The SLO multiplier shrinks as n grows so the emitted-GPU count
     // stays comparable and the pool size is the variable under test.
-    println!();
-    println!("full-rescan greedy vs incremental ScoreEngine (§ lazy greedy / CELF):");
-    for (n, mult) in [(16usize, 4.0), (64, 1.0), (256, 0.25)] {
-        let w = micro_workload(&bank, n, mult);
-        let ctx = ProblemCtx::new(&bank, &w).unwrap();
-        let pool = ConfigPool::enumerate(&ctx);
-        let zero = CompletionRates::zeros(w.len());
+    if args.section_enabled(2) {
+        let section = "2 full-rescan vs ScoreEngine";
+        println!("full-rescan greedy vs incremental ScoreEngine (§ lazy greedy / CELF):");
+        let sizes: &[(usize, f64)] = if quick {
+            &[(16, 4.0), (64, 1.0)]
+        } else {
+            &[(16, 4.0), (64, 1.0), (256, 0.25)]
+        };
+        for &(n, mult) in sizes {
+            let w = micro_workload(&bank, n, mult);
+            let ctx = ProblemCtx::new(&bank, &w).unwrap();
+            let pool = ConfigPool::enumerate(&ctx);
+            let zero = CompletionRates::zeros(w.len());
 
-        // Outputs must be byte-identical before the timings mean much.
-        let reference = greedy::full_scan(&ctx, &pool, &zero).unwrap();
-        let mut engine = ScoreEngine::new(&pool, &zero);
-        let incremental = greedy::run_with_engine(&ctx, &mut engine).unwrap();
-        assert_eq!(
-            reference.iter().map(|c| c.label()).collect::<Vec<_>>(),
-            incremental.iter().map(|c| c.label()).collect::<Vec<_>>(),
-            "engine diverged from reference at n={n}"
-        );
-
-        let heavy = n >= 256;
-        let bc = BenchCtx::new(usize::from(!heavy), if heavy { 1 } else { 3 });
-        let scan = bc.time(
-            &format!("full-rescan greedy n={n} (pool {}, {} GPUs)", pool.len(), reference.len()),
-            || greedy::full_scan(&ctx, &pool, &zero).unwrap().len(),
-        );
-        println!("{}", scan.report());
-        let eng = bc.time(&format!("engine greedy      n={n}"), || {
+            // Outputs must be byte-identical before the timings mean much.
+            let reference = greedy::full_scan(&ctx, &pool, &zero).unwrap();
             let mut engine = ScoreEngine::new(&pool, &zero);
-            greedy::run_with_engine(&ctx, &mut engine).unwrap().len()
-        });
-        println!("{}", eng.report());
-        println!(
-            "  -> speedup {:.1}x (scan {:?} / engine {:?})",
-            scan.mean().as_secs_f64() / eng.mean().as_secs_f64().max(1e-12),
-            scan.mean(),
-            eng.mean()
-        );
+            let incremental = greedy::run_with_engine(&ctx, &mut engine).unwrap();
+            assert_eq!(
+                labels(&reference),
+                labels(&incremental),
+                "engine diverged from reference at n={n}"
+            );
+
+            let heavy = quick || n >= 256;
+            let bc = BenchCtx::new(usize::from(!heavy), if heavy { 1 } else { 3 });
+            let scan = bc.time(
+                &format!(
+                    "full-rescan greedy n={n} (pool {}, {} GPUs)",
+                    pool.len(),
+                    reference.len()
+                ),
+                || greedy::full_scan(&ctx, &pool, &zero).unwrap().len(),
+            );
+            println!("{}", scan.report());
+            let eng = bc.time(&format!("engine greedy      n={n}"), || {
+                let mut engine = ScoreEngine::new(&pool, &zero);
+                greedy::run_with_engine(&ctx, &mut engine).unwrap().len()
+            });
+            println!("{}", eng.report());
+            println!(
+                "  -> speedup {:.1}x (scan {:?} / engine {:?})",
+                scan.mean().as_secs_f64() / eng.mean().as_secs_f64().max(1e-12),
+                scan.mean(),
+                eng.mean()
+            );
+            report.record_measurement(section, &scan);
+            report.record_measurement(section, &eng);
+            report.record(
+                section,
+                &format!("greedy gpus n={n}"),
+                Value::Num(reference.len() as f64),
+            );
+        }
+        println!();
     }
-    println!();
 
-    // --- 3. full-size workload (the Fig 9 shape).
-    let w = simulation_workload(&bank, "normal-1");
-    let ctx = ProblemCtx::new(&bank, &w).unwrap();
-    let pipeline = OptimizerPipeline::with_budget(&ctx, PipelineBudget::fast_only());
-    let m = bench.time("greedy solve normal-1 (24 services, ~hundreds GPUs)", || {
-        pipeline.fast().unwrap().num_gpus()
-    });
-    println!("{}", m.report());
+    // --- 3. serial vs parallel two-phase solve (the id-backed GA).
+    //
+    // One shared pool per size; only `parallelism` differs between the
+    // runs. The GA derives one RNG stream per offspring slot, so serial
+    // and parallel solves are bit-identical — asserted on best
+    // deployment labels and GPU count before any timing.
+    if args.section_enabled(3) {
+        let section = "3 two-phase serial vs parallel";
+        println!("serial vs parallel two-phase solve (id-backed GA offspring fan-out):");
+        let sizes: &[(usize, f64)] = if quick {
+            &[(16, 4.0), (64, 1.0)]
+        } else {
+            &[(16, 4.0), (64, 1.0), (256, 0.25)]
+        };
+        for &(n, mult) in sizes {
+            let w = micro_workload(&bank, n, mult);
+            let ctx = ProblemCtx::new(&bank, &w).unwrap();
+            let budget = |parallelism: Option<usize>| PipelineBudget {
+                ga_rounds: 2,
+                ga_patience: 2,
+                mcts_iterations: if n >= 256 { 4 } else { 12 },
+                parallelism,
+                ..Default::default()
+            };
+            let mut pipeline = OptimizerPipeline::with_budget(&ctx, budget(Some(1)));
+            let serial = pipeline.optimize().unwrap();
+            pipeline.budget = budget(None);
+            let parallel = pipeline.optimize().unwrap();
+            assert_eq!(
+                serial.best.num_gpus(),
+                parallel.best.num_gpus(),
+                "parallel GPU count diverged at n={n}"
+            );
+            assert_eq!(
+                labels(&serial.best.gpus),
+                labels(&parallel.best.gpus),
+                "parallel deployment diverged at n={n}"
+            );
 
-    // --- 4. MCTS search budget.
-    let engine = pipeline.engine();
-    let mcts = Mcts::new(MctsConfig { iterations: 40, ..Default::default() });
-    let zero = CompletionRates::zeros(w.len());
-    let m = bench.time("mcts search (40 iterations) normal-1", || {
-        mcts.search(&ctx, &engine, &zero, &mut Rng::new(1)).len()
-    });
-    println!("{}", m.report());
+            let heavy = quick || n >= 64;
+            let bc = BenchCtx::new(usize::from(!heavy), if heavy { 1 } else { 3 });
+            pipeline.budget = budget(Some(1));
+            let ser = bc.time(
+                &format!("two-phase serial   n={n} ({} GPUs)", serial.best.num_gpus()),
+                || pipeline.optimize().unwrap().best.num_gpus(),
+            );
+            println!("{}", ser.report());
+            pipeline.budget = budget(None);
+            let par = bc.time(&format!("two-phase parallel n={n}"), || {
+                pipeline.optimize().unwrap().best.num_gpus()
+            });
+            println!("{}", par.report());
+            println!(
+                "  -> speedup {:.1}x (serial {:?} / parallel {:?})",
+                ser.mean().as_secs_f64() / par.mean().as_secs_f64().max(1e-12),
+                ser.mean(),
+                par.mean()
+            );
+            report.record_measurement(section, &ser);
+            report.record_measurement(section, &par);
+            report.record(
+                section,
+                &format!("two-phase gpus n={n}"),
+                Value::Num(serial.best.num_gpus() as f64),
+            );
+        }
+        println!();
+    }
 
-    // --- memoized vs cold estimation (App. A.2's "2-3 orders of
-    //     magnitude" claim is about reusing candidate pools; measure the
-    //     warm/cold rollout gap).
-    let mut rng = Rng::new(2);
-    let t0 = std::time::Instant::now();
-    let _ = mcts_rollout(&mcts, &ctx, &engine, &zero, &mut rng);
-    let cold = t0.elapsed();
-    let t1 = std::time::Instant::now();
-    let _ = mcts_rollout(&mcts, &ctx, &engine, &zero, &mut rng);
-    let warm = t1.elapsed();
-    println!(
-        "rollout cold {cold:?} vs warm {warm:?} ({:.0}x speedup from memoization)",
-        cold.as_secs_f64() / warm.as_secs_f64().max(1e-9)
-    );
+    // --- 4. full-size workload (the Fig 9 shape).
+    if args.section_enabled(4) {
+        let section = "4 normal-1 greedy";
+        let w = simulation_workload(&bank, "normal-1");
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let pipeline = OptimizerPipeline::with_budget(&ctx, PipelineBudget::fast_only());
+        let m = bench.time("greedy solve normal-1 (24 services, ~hundreds GPUs)", || {
+            pipeline.fast().unwrap().num_gpus()
+        });
+        println!("{}", m.report());
+        report.record_measurement(section, &m);
+    }
+
+    // --- 5. MCTS search budget + memoized estimation.
+    if args.section_enabled(5) {
+        let section = "5 mcts";
+        let w = simulation_workload(&bank, "normal-1");
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let pipeline = OptimizerPipeline::with_budget(&ctx, PipelineBudget::fast_only());
+        let engine = pipeline.engine();
+        let mcts = Mcts::new(MctsConfig { iterations: 40, ..Default::default() });
+        let zero = CompletionRates::zeros(w.len());
+        let m = bench.time("mcts search (40 iterations) normal-1", || {
+            mcts.search(&ctx, &engine, &zero, &mut Rng::new(1)).len()
+        });
+        println!("{}", m.report());
+        report.record_measurement(section, &m);
+
+        // --- memoized vs cold estimation (App. A.2's "2-3 orders of
+        //     magnitude" claim is about reusing candidate pools; measure
+        //     the warm/cold rollout gap).
+        let mut rng = Rng::new(2);
+        let t0 = std::time::Instant::now();
+        let _ = mcts_rollout(&mcts, &ctx, &engine, &zero, &mut rng);
+        let cold = t0.elapsed();
+        let t1 = std::time::Instant::now();
+        let _ = mcts_rollout(&mcts, &ctx, &engine, &zero, &mut rng);
+        let warm = t1.elapsed();
+        println!(
+            "rollout cold {cold:?} vs warm {warm:?} ({:.0}x speedup from memoization)",
+            cold.as_secs_f64() / warm.as_secs_f64().max(1e-9)
+        );
+        report.record(section, "rollout cold ns", Value::Num(cold.as_nanos() as f64));
+        report.record(section, "rollout warm ns", Value::Num(warm.as_nanos() as f64));
+    }
+
+    if let Some(path) = &args.json {
+        report.write(path).expect("write bench json");
+        println!("wrote {}", path.display());
+    }
 }
 
 // The rollout itself is private; measure through search with a

@@ -4,8 +4,18 @@
 //! uses [`BenchCtx`] to time algorithm runs and print paper-style tables
 //! (`util::table`). Figures are regenerated as labelled rows/series so
 //! EXPERIMENTS.md can quote them directly.
+//!
+//! Benches that track a perf trajectory PR-over-PR also emit a
+//! machine-readable record: [`BenchArgs`] parses the shared
+//! `--json <path>` / `--sections <csv>` / `--quick` options and
+//! [`JsonReport`] collects `section → metric → value` entries written
+//! as one JSON document (CI uploads `BENCH_micro_optimizer.json` as an
+//! artifact).
 
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
+
+use crate::util::json::Value;
 
 /// Timing helper with warmup + repeated measurement.
 pub struct BenchCtx {
@@ -70,6 +80,115 @@ impl BenchCtx {
     }
 }
 
+/// Options shared by the harness-free bench binaries. Unknown
+/// arguments (e.g. the `--bench` flag cargo injects) are ignored.
+///
+/// * `--json <path>` — write a [`JsonReport`] to `path`;
+/// * `--sections <csv>` — run only these 1-based sections;
+/// * `--quick` — tiny iteration counts and capped problem sizes (the
+///   CI smoke configuration).
+#[derive(Debug, Clone, Default)]
+pub struct BenchArgs {
+    pub json: Option<PathBuf>,
+    pub sections: Option<Vec<usize>>,
+    pub quick: bool,
+}
+
+impl BenchArgs {
+    /// Parse from the process arguments.
+    pub fn parse() -> BenchArgs {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        BenchArgs::parse_from(&argv)
+    }
+
+    pub fn parse_from(argv: &[String]) -> BenchArgs {
+        let mut out = BenchArgs::default();
+        let mut i = 0;
+        while i < argv.len() {
+            match argv[i].as_str() {
+                "--json" => {
+                    i += 1;
+                    out.json = argv.get(i).map(PathBuf::from);
+                }
+                "--sections" => {
+                    i += 1;
+                    out.sections = argv.get(i).map(|s| {
+                        s.split(',').filter_map(|x| x.trim().parse().ok()).collect()
+                    });
+                }
+                "--quick" => out.quick = true,
+                _ => {}
+            }
+            i += 1;
+        }
+        out
+    }
+
+    /// Is 1-based `section` selected? (No `--sections` = all.)
+    pub fn section_enabled(&self, section: usize) -> bool {
+        self.sections.as_ref().map_or(true, |s| s.contains(&section))
+    }
+}
+
+/// Machine-readable bench sink: ordered `section → metric → value`
+/// entries, serialized with the in-tree JSON writer.
+pub struct JsonReport {
+    bench: String,
+    quick: bool,
+    sections: Vec<(String, Vec<(String, Value)>)>,
+}
+
+impl JsonReport {
+    pub fn new(bench: &str, quick: bool) -> JsonReport {
+        JsonReport { bench: bench.to_string(), quick, sections: Vec::new() }
+    }
+
+    /// Record one metric under `section` (sections/keys keep insertion
+    /// order).
+    pub fn record(&mut self, section: &str, key: &str, value: Value) {
+        let idx = match self.sections.iter().position(|(s, _)| s == section) {
+            Some(i) => i,
+            None => {
+                self.sections.push((section.to_string(), Vec::new()));
+                self.sections.len() - 1
+            }
+        };
+        self.sections[idx].1.push((key.to_string(), value));
+    }
+
+    /// Record a [`Measurement`]'s mean as `<name> ns/op`.
+    pub fn record_measurement(&mut self, section: &str, m: &Measurement) {
+        self.record(
+            section,
+            &format!("{} ns/op", m.name.trim()),
+            Value::Num(m.mean().as_nanos() as f64),
+        );
+    }
+
+    pub fn to_value(&self) -> Value {
+        Value::obj(vec![
+            ("bench", Value::Str(self.bench.clone())),
+            ("quick", Value::Bool(self.quick)),
+            (
+                "sections",
+                Value::Obj(
+                    self.sections
+                        .iter()
+                        .map(|(s, entries)| {
+                            (s.clone(), Value::Obj(entries.clone()))
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Write the report (pretty JSON + trailing newline).
+    pub fn write(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_value().to_pretty() + "\n")
+    }
+}
+
 /// Standard bench header so every figure's output is self-describing.
 pub fn header(figure: &str, description: &str) {
     println!("==========================================================");
@@ -91,6 +210,42 @@ pub fn require_artifacts() -> Option<crate::runtime::Manifest> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn bench_args_parse_and_ignore_unknown() {
+        let argv: Vec<String> =
+            ["--bench", "--quick", "--sections", "1,3", "--json", "out.json"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        let a = BenchArgs::parse_from(&argv);
+        assert!(a.quick);
+        assert_eq!(a.sections, Some(vec![1, 3]));
+        assert!(a.section_enabled(1));
+        assert!(!a.section_enabled(2));
+        assert_eq!(a.json.as_deref(), Some(Path::new("out.json")));
+        let none = BenchArgs::parse_from(&[]);
+        assert!(none.section_enabled(7));
+        assert!(none.json.is_none());
+    }
+
+    #[test]
+    fn json_report_shape() {
+        let mut r = JsonReport::new("micro_test", true);
+        r.record("s1", "gpus", Value::Num(42.0));
+        let m = Measurement {
+            name: "solve  ".to_string(),
+            samples: vec![Duration::from_nanos(100)],
+        };
+        r.record_measurement("s1", &m);
+        let v = r.to_value();
+        assert_eq!(v.get_path("bench").and_then(|x| x.as_str()), Some("micro_test"));
+        assert_eq!(v.get_path("sections.s1.gpus").and_then(|x| x.as_f64()), Some(42.0));
+        assert_eq!(
+            v.get_path("sections.s1.solve ns/op").and_then(|x| x.as_f64()),
+            Some(100.0)
+        );
+    }
 
     #[test]
     fn timing_collects_samples() {

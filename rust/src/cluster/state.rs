@@ -39,6 +39,17 @@ impl GpuSim {
             .collect()
     }
 
+    /// First pod-free placement of exactly `size`, without allocating
+    /// the full free list — the slot probe every exchange/compact
+    /// allocation runs per GPU. Same pick as
+    /// `free_instances().into_iter().find(|p| p.size == size)`.
+    pub fn free_instance_of(&self, size: crate::mig::InstanceSize) -> Option<Placement> {
+        self.partition_placements
+            .iter()
+            .find(|p| p.size == size && !self.pods.contains_key(p))
+            .copied()
+    }
+
     pub fn is_empty(&self) -> bool {
         self.partition_placements.is_empty()
     }
@@ -216,9 +227,7 @@ impl ClusterState {
         let mut empty_fallback: Option<(usize, Placement, bool)> = None;
         for (gi, g) in self.gpus.iter().enumerate() {
             // Existing free instance of the right size?
-            if let Some(pl) =
-                g.free_instances().into_iter().find(|p| p.size == size)
-            {
+            if let Some(pl) = g.free_instance_of(size) {
                 return Some((gi, pl, false));
             }
         }

@@ -17,13 +17,11 @@ use crate::spec::ServiceId;
 
 use super::exchange::allocate_slot;
 
-/// (size, service) multiset signature of a target GPU config.
+/// (size, service) multiset signature of a target GPU config — the
+/// shared [`crate::optimizer::GpuConfig::size_service_counts`] multiset
+/// (also the canonical dedup key of interned deployments).
 fn config_signature(cfg: &crate::optimizer::GpuConfig) -> BTreeMap<(InstanceSize, ServiceId), usize> {
-    let mut m = BTreeMap::new();
-    for a in &cfg.assigns {
-        *m.entry((a.placement.size, a.service)).or_insert(0) += 1;
-    }
-    m
+    cfg.size_service_counts()
 }
 
 /// (size, service) multiset currently live on a GPU.

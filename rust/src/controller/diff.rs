@@ -83,6 +83,10 @@ pub fn service_deltas(
     (0..n_services)
         .map(|sid| {
             let mut delta = ServiceDelta { service: sid, ..Default::default() };
+            // Fast path: most services are untouched by a replan.
+            if have[sid] == want[sid] {
+                return delta;
+            }
             for size in InstanceSize::ALL {
                 let h = have[sid].count(size);
                 let w = want[sid].count(size);

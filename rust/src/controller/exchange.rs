@@ -59,7 +59,7 @@ pub(crate) fn allocate_slot(
         }
         let g = state.gpu(gi);
         let load = g.partition().len();
-        if let Some(pl) = g.free_instances().into_iter().find(|p| p.size == size) {
+        if let Some(pl) = g.free_instance_of(size) {
             let key = (0usize, 0usize, load);
             if key < best_key {
                 best_key = key;
@@ -101,11 +101,7 @@ fn hinted_slot(
             continue;
         }
         let g = state.gpu(gi);
-        let (pl, needs_rep) = match g
-            .free_instances()
-            .into_iter()
-            .find(|p| p.size == size)
-        {
+        let (pl, needs_rep) = match g.free_instance_of(size) {
             Some(pl) => (pl, false),
             None => match g.partition().can_allocate(size) {
                 Some(start) => (Placement::new(size, start), true),

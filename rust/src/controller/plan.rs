@@ -50,34 +50,38 @@ impl TransitionPlan {
 ///   cross-GPU delete before its paired create would dip the service's
 ///   live throughput (§6's guarantee).
 pub fn parallelize(actions: Vec<Action>) -> TransitionPlan {
-    let mut last_level_for_gpu: std::collections::HashMap<usize, usize> =
-        std::collections::HashMap::new();
+    // GPU and service ids are small dense integers, so level
+    // bookkeeping is vec-indexed rather than hashed — this runs on
+    // every controller replan.
+    let max_gpu = actions.iter().flat_map(|a| a.gpus()).max();
+    let max_svc = actions.iter().filter_map(|a| a.service()).max();
+    let mut last_level_for_gpu: Vec<Option<usize>> =
+        vec![None; max_gpu.map_or(0, |g| g + 1)];
     // Highest level of any create per service so far.
-    let mut create_level_for_service: std::collections::HashMap<usize, usize> =
-        std::collections::HashMap::new();
+    let mut create_level_for_service: Vec<Option<usize>> =
+        vec![None; max_svc.map_or(0, |s| s + 1)];
     let mut levels: Vec<usize> = Vec::with_capacity(actions.len());
     for a in &actions {
         let gpu_lvl = a
             .gpus()
             .iter()
-            .filter_map(|g| last_level_for_gpu.get(g).copied())
+            .filter_map(|&g| last_level_for_gpu[g])
             .max()
             .map(|l| l + 1)
             .unwrap_or(0);
         let safety_lvl = match a {
-            Action::DeletePod { service, .. } => create_level_for_service
-                .get(service)
-                .map(|l| l + 1)
-                .unwrap_or(0),
+            Action::DeletePod { service, .. } => {
+                create_level_for_service[*service].map(|l| l + 1).unwrap_or(0)
+            }
             _ => 0,
         };
         let lvl = gpu_lvl.max(safety_lvl);
         for g in a.gpus() {
-            last_level_for_gpu.insert(g, lvl);
+            last_level_for_gpu[g] = Some(lvl);
         }
         if let Action::CreatePod { pod, .. } = a {
-            let e = create_level_for_service.entry(pod.service).or_insert(0);
-            *e = (*e).max(lvl);
+            let e = &mut create_level_for_service[pod.service];
+            *e = Some(e.map_or(lvl, |old| old.max(lvl)));
         }
         levels.push(lvl);
     }

@@ -34,6 +34,7 @@ fn app() -> App {
                 .opt("ga-rounds", "10", "GA rounds for two-phase")
                 .opt("mcts-iters", "60", "MCTS iterations per GA crossover (two-phase)")
                 .opt("time-budget-s", "0", "wall-clock budget for phase 2, seconds (0 = unlimited)")
+                .opt("threads", "0", "worker threads for the two-phase solve (0 = all cores; output is identical at any value unless --time-budget-s cuts rounds short)")
                 .opt("out", "", "write the deployment as JSON to this path")
                 .flag("verbose", "print per-GPU configurations"),
             Command::new("transition", "plan + simulate a deployment transition")
@@ -77,11 +78,14 @@ fn cmd_optimize(args: &mig_serving::util::cli::Args) -> anyhow::Result<()> {
         "greedy" => PipelineBudget::fast_only(),
         "two-phase" => {
             let time_s = args.get_f64("time-budget-s").unwrap_or(0.0);
+            let threads = args.get_usize("threads").unwrap_or(0);
             PipelineBudget {
                 ga_rounds: args.get_usize("ga-rounds").unwrap_or(10),
                 mcts_iterations: args.get_usize("mcts-iters").unwrap_or(60),
                 time_budget: (time_s > 0.0)
                     .then(|| std::time::Duration::from_secs_f64(time_s)),
+                // 0 = all cores; solve output is thread-count-invariant.
+                parallelism: (threads > 0).then_some(threads),
                 ..Default::default()
             }
         }

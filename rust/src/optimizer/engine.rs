@@ -29,7 +29,9 @@
 //! against arbitrary node states ([`ScoreEngine::top_k_touching`] for
 //! expansion, [`ScoreEngine::top_candidates`] for the memoized rollout
 //! pools), so every procedure shares one pool + index per
-//! [`ProblemCtx`].
+//! [`ProblemCtx`]. The engine is plain data (`Sync`), so the parallel
+//! GA/MCTS stages share one `&ScoreEngine` across scoped worker
+//! threads for those stateless queries.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -240,21 +242,11 @@ impl<'p> ScoreEngine<'p> {
     }
 
     /// Rollout candidate-pool query (App. A.2, second fix): the global
-    /// top-`n` configs by clipped score against `remaining`.
+    /// top-`n` configs by clipped score against `remaining`. Delegates
+    /// to [`ConfigPool::top_by_score`] so MCTS rollout pools and the
+    /// branch-and-bound's candidate cut rank configs identically.
     pub fn top_candidates(&self, remaining: &[f64], n: usize) -> Vec<u32> {
-        let mut scored: Vec<(f64, u32)> = self
-            .pool
-            .configs
-            .iter()
-            .enumerate()
-            .filter_map(|(i, c)| {
-                let s = c.score_clipped(remaining);
-                (s > 0.0).then_some((s, i as u32))
-            })
-            .collect();
-        scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
-        scored.truncate(n);
-        scored.into_iter().map(|(_, i)| i).collect()
+        self.pool.top_by_score(remaining, n)
     }
 }
 
@@ -387,6 +379,16 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    /// The parallel solve shares `&ScoreEngine` across scoped threads;
+    /// this is a compile-time contract, pinned here so a future field
+    /// with interior mutability fails loudly.
+    #[test]
+    fn engine_is_sync_for_scoped_threads() {
+        fn assert_sync<T: Sync>() {}
+        assert_sync::<ScoreEngine<'static>>();
+        assert_sync::<ProblemCtx<'static>>();
     }
 
     #[test]

@@ -8,7 +8,7 @@
 
 use super::comp_rates::CompletionRates;
 use super::gpu_config::{ConfigPool, GpuConfig, ProblemCtx};
-use super::lower_bound::lower_bound_remaining;
+use super::lower_bound::SliceNeeds;
 use super::OptimizerProcedure;
 
 /// Result of an exact solve.
@@ -38,8 +38,9 @@ impl Exact {
         let mut incumbent = super::greedy::Greedy::with_pool_shared(&pool, ctx)?;
         self.nodes = 0;
         let comp = CompletionRates::zeros(ctx.workload.len());
+        let needs = SliceNeeds::new(ctx);
         let mut path: Vec<u32> = Vec::new();
-        let exhausted = !self.dfs(ctx, &pool, &comp, &mut path, &mut incumbent);
+        let exhausted = !self.dfs(&pool, &needs, &comp, &mut path, &mut incumbent);
         let configs = incumbent
             .iter()
             .map(|&i| pool.materialize(ctx, i as usize))
@@ -54,8 +55,8 @@ impl Exact {
     /// Returns false if the node budget ran out (search incomplete).
     fn dfs(
         &mut self,
-        ctx: &ProblemCtx,
         pool: &ConfigPool,
+        needs: &SliceNeeds,
         comp: &CompletionRates,
         path: &mut Vec<u32>,
         incumbent: &mut Vec<u32>,
@@ -72,33 +73,25 @@ impl Exact {
         }
         let remaining = comp.remaining();
         // Bound: depth + admissible heuristic >= incumbent -> prune.
-        let lb = lower_bound_remaining(ctx, &remaining);
+        // The per-service slice needs are precomputed once per solve.
+        let lb = needs.lower_bound_remaining(&remaining);
         if path.len() + lb >= incumbent.len() {
             return true;
         }
         // Branch over configs ordered by clipped score (best first);
         // cap the branching factor — with symmetric configs the top
-        // candidates dominate.
-        let mut scored: Vec<(f64, u32)> = pool
-            .configs
-            .iter()
-            .enumerate()
-            .filter_map(|(i, c)| {
-                let s = c.score_clipped(&remaining);
-                (s > 0.0).then_some((s, i as u32))
-            })
-            .collect();
-        scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
-        scored.truncate(12);
+        // candidates dominate. Same ranking query MCTS rollout pools
+        // use ([`ConfigPool::top_by_score`]).
+        let scored = pool.top_by_score(&remaining, 12);
         let mut complete = true;
-        for (_, idx) in scored {
+        for idx in scored {
             let mut next = comp.clone();
             let util = &pool.configs[idx as usize].sparse_util;
             for &(sid, u) in util {
                 next.set(sid, next.get(sid) + u);
             }
             path.push(idx);
-            if !self.dfs(ctx, pool, &next, path, incumbent) {
+            if !self.dfs(pool, needs, &next, path, incumbent) {
                 complete = false;
             }
             path.pop();
@@ -174,8 +167,9 @@ impl OptimizerProcedure for Exact {
             out
         };
         self.nodes = 0;
+        let needs = SliceNeeds::new(ctx);
         let mut path = Vec::new();
-        self.dfs(ctx, &pool, completion, &mut path, &mut incumbent);
+        self.dfs(&pool, &needs, completion, &mut path, &mut incumbent);
         Ok(incumbent
             .iter()
             .map(|&i| pool.materialize(ctx, i as usize))

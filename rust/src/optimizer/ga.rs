@@ -1,30 +1,50 @@
-//! The tailored Genetic Algorithm (§5.2).
+//! The tailored Genetic Algorithm (§5.2), over id-backed chromosomes.
 //!
-//! * **Chromosome** = a deployment; **genes** = GPU configurations.
-//! * **Crossover** = randomly erase some GPU configurations (dropping
-//!   the completion rates below 100%), then refill by running the *slow
-//!   algorithm* (MCTS) against the residual completion rates. This mixes
-//!   fast- and slow-algorithm solutions and keeps the slow algorithm's
-//!   problem size small — both insights from the paper. The refill
-//!   reuses the parent's [`ScoreEngine`] (one shared pool + inverted
-//!   index per problem) instead of re-enumerating configurations.
+//! * **Chromosome** = an [`InternedDeployment`]; **genes** = GPU
+//!   configurations as pool handles (or `Arc`'d off-pool configs), so
+//!   cloning a parent is a memcpy + refcount bumps — no `GpuConfig` is
+//!   deep-copied in the inner loop — and completion rates accumulate
+//!   sparsely, bit-identical to the dense reference path.
+//! * **Crossover** = randomly erase some genes (dropping the completion
+//!   rates below 100%), then refill by running the *slow algorithm*
+//!   (MCTS) against the residual completion rates. This mixes fast- and
+//!   slow-algorithm solutions and keeps the slow algorithm's problem
+//!   size small — both insights from the paper. The refill reuses the
+//!   parent's [`ScoreEngine`] (one shared pool + inverted index per
+//!   problem) and stays interned ([`Mcts::search_steps`]).
 //! * **Mutation** = swap the services of two same-size instances running
 //!   different services; same-size instances are interchangeable for
 //!   inference (no affinity), so the deployment's completion rates are
 //!   unchanged while the *mix* of services per GPU diversifies, feeding
-//!   better crossovers.
+//!   better crossovers. Only the touched genes are re-materialized.
+//! * **Selection**: fitness `(num_gpus, excess)` is computed **once per
+//!   individual** (the seed GA re-derived `excess` inside the sort
+//!   comparator on every comparison — O(pop²·n·m)), and the population
+//!   dedups on the canonical sorted-gene key, so identical deployments
+//!   reached via different mutation orders cannot crowd the population.
+//! * **Parallel offspring**: every `crossovers_per_parent × population`
+//!   slot of a round is an independent erase-then-refill job against
+//!   the shared read-only engine. Slots fan out across
+//!   [`GaConfig::parallelism`] scoped threads, each on its own RNG
+//!   stream derived from `(seed, round, slot)`, and results merge in
+//!   slot order — so the evolved deployment and [`GaHistory`] are
+//!   **bit-identical at any worker count**.
 //! * **Elitism**: originals stay in each round's comparison, so the best
 //!   deployment only improves over time.
 //! * **Stop**: round limit, no improvement in the last 10 rounds, or an
 //!   optional wall-clock budget ([`GaConfig::time_budget`]).
 
+use std::collections::HashSet;
 use std::time::{Duration, Instant};
 
 use super::comp_rates::CompletionRates;
 use super::engine::ScoreEngine;
-use super::gpu_config::{GpuConfig, ProblemCtx};
-use super::mcts::{Mcts, MctsConfig};
-use super::Deployment;
+use super::gpu_config::{ConfigPool, ProblemCtx};
+use super::interned::{Gene, GeneKey, InternedDeployment};
+use super::mcts::{Mcts, MctsConfig, RefillStep};
+use super::{par, Deployment};
+use crate::mig::InstanceSize;
+use crate::spec::ServiceId;
 use crate::util::rng::Rng;
 
 /// GA tuning knobs.
@@ -52,6 +72,14 @@ pub struct GaConfig {
     /// can decide how much time ... they are willing to devote", §5.2).
     pub time_budget: Option<Duration>,
     pub seed: u64,
+    /// Worker threads for the offspring fan-out: `Some(n)` pins, `None`
+    /// uses every core. Results are bit-identical at any value (one
+    /// derived RNG stream per offspring slot, slot-ordered merges) —
+    /// **except** under a wall-clock [`GaConfig::time_budget`], where
+    /// faster runs fit more rounds before the cutoff; pin the round
+    /// count (leave `time_budget` unset) when replayability across
+    /// machines/thread counts matters.
+    pub parallelism: Option<usize>,
 }
 
 impl Default for GaConfig {
@@ -67,18 +95,9 @@ impl Default for GaConfig {
             mcts: MctsConfig { iterations: 60, ..Default::default() },
             time_budget: None,
             seed: 0x6A,
+            parallelism: None,
         }
     }
-}
-
-/// Total over-provisioning of a deployment (sum of completion beyond
-/// 100% per service) — the GA's fitness tie-breaker.
-fn excess(ctx: &ProblemCtx, dep: &Deployment) -> f64 {
-    dep.completion(ctx)
-        .as_slice()
-        .iter()
-        .map(|&c| (c - 1.0).max(0.0))
-        .sum()
 }
 
 /// Per-round record for Fig 12 (GPUs of the best deployment after each
@@ -86,6 +105,27 @@ fn excess(ctx: &ProblemCtx, dep: &Deployment) -> f64 {
 #[derive(Debug, Clone)]
 pub struct GaHistory {
     pub best_gpus_per_round: Vec<usize>,
+}
+
+/// A population member with its fitness `(gpus, excess)` and canonical
+/// dedup key computed exactly once.
+struct Scored {
+    dep: InternedDeployment,
+    gpus: usize,
+    excess: f64,
+    key: Vec<GeneKey>,
+}
+
+/// One derived RNG stream per offspring slot (SplitMix64-style
+/// avalanche over `(base, round, slot)`): the GA's logical schedule is
+/// indexed by round and slot, never by worker or thread interleaving.
+fn slot_stream_seed(base: u64, round: u64, slot: u64) -> u64 {
+    let mut z = base
+        ^ round.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ slot.wrapping_mul(0xD1B5_4A32_D192_ED03);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
 }
 
 /// The GA engine. Works over a shared [`ScoreEngine`] so repeated
@@ -99,62 +139,115 @@ impl GeneticAlgorithm {
         GeneticAlgorithm { cfg }
     }
 
-    /// Evolve from a seed deployment; returns (best deployment, history).
+    fn score_individual(
+        ctx: &ProblemCtx,
+        pool: &ConfigPool,
+        dep: InternedDeployment,
+    ) -> Scored {
+        let completion = dep.completion(ctx, pool);
+        let excess = completion
+            .as_slice()
+            .iter()
+            .map(|&c| (c - 1.0).max(0.0))
+            .sum();
+        let key = dep.canonical_key(pool);
+        Scored { gpus: dep.num_gpus(), excess, key, dep }
+    }
+
+    /// Evolve from a dense seed deployment; returns (best deployment,
+    /// history). Thin wrapper over [`GeneticAlgorithm::evolve_interned`]
+    /// for callers holding the boundary representation.
     pub fn evolve(
         &self,
         ctx: &ProblemCtx,
         engine: &ScoreEngine,
         seed_deployment: Deployment,
     ) -> (Deployment, GaHistory) {
-        let mut rng = Rng::new(self.cfg.seed);
-        let mcts = Mcts::new(self.cfg.mcts.clone());
-        debug_assert!(seed_deployment.is_valid(ctx));
+        let seed = InternedDeployment::from_deployment(ctx, &seed_deployment);
+        let (best, history) = self.evolve_interned(ctx, engine, seed);
+        (best.materialize(ctx, engine.pool()), history)
+    }
+
+    /// Evolve an interned seed. The hot loop: clones are memcpys,
+    /// completion rates accumulate sparsely, offspring slots fan out
+    /// across [`GaConfig::parallelism`] workers deterministically.
+    pub fn evolve_interned(
+        &self,
+        ctx: &ProblemCtx,
+        engine: &ScoreEngine,
+        seed_deployment: InternedDeployment,
+    ) -> (InternedDeployment, GaHistory) {
+        let pool = engine.pool();
+        debug_assert!(seed_deployment.is_valid(ctx, pool));
+        // Nested MCTS refills run serial: the GA's own fan-out owns the
+        // cores (the MCTS logical schedule is worker-count-independent,
+        // so this changes nothing but thread counts).
+        let mcts = Mcts::new(MctsConfig {
+            parallelism: Some(1),
+            ..self.cfg.mcts.clone()
+        });
+        let workers = par::resolve_workers(self.cfg.parallelism);
 
         let t0 = Instant::now();
-        let mut population: Vec<Deployment> = vec![seed_deployment];
-        let mut best = population[0].clone();
-        let mut history = GaHistory { best_gpus_per_round: vec![best.num_gpus()] };
+        let mut population: Vec<Scored> =
+            vec![Self::score_individual(ctx, pool, seed_deployment)];
+        let mut best = population[0].dep.clone();
+        let mut best_gpus = population[0].gpus;
+        let mut history = GaHistory { best_gpus_per_round: vec![best_gpus] };
         let mut stale_rounds = 0usize;
 
-        for _round in 0..self.cfg.rounds {
+        for round in 0..self.cfg.rounds {
             if self.cfg.time_budget.is_some_and(|b| t0.elapsed() >= b) {
                 break;
             }
-            let mut offspring: Vec<Deployment> = Vec::new();
-            for parent in &population {
+            // One slot per (parent, crossover) pair; the slot index —
+            // not the worker — derives the RNG stream.
+            let mut slots: Vec<(usize, u64)> = Vec::new();
+            for parent in 0..population.len() {
                 for _ in 0..self.cfg.crossovers_per_parent {
-                    // Mutate a copy first (diversify service mixes),
-                    // then cross over.
-                    let mut child = parent.clone();
-                    self.mutate(ctx, &mut child, &mut rng);
-                    if let Some(crossed) =
-                        self.crossover(ctx, engine, &child, &mcts, &mut rng)
-                    {
-                        debug_assert!(crossed.is_valid(ctx));
-                        offspring.push(crossed);
-                    }
+                    let seed =
+                        slot_stream_seed(self.cfg.seed, round as u64, slots.len() as u64);
+                    slots.push((parent, seed));
                 }
             }
-            // Elitism: originals compete with offspring. Fitness is
-            // (GPUs, total overshoot): among equal-GPU deployments the
-            // tighter one survives, so lateral moves accumulate into
-            // savings in later rounds.
-            population.extend(offspring);
+            let population_ref = &population;
+            let offspring: Vec<Option<Scored>> =
+                par::run_indexed(slots, workers, |(parent, stream_seed)| {
+                    let mut rng = Rng::new(stream_seed);
+                    // Mutate a copy first (diversify service mixes),
+                    // then cross over. The copy is a memcpy.
+                    let mut child = population_ref[parent].dep.clone();
+                    self.mutate(ctx, pool, &mut child, &mut rng);
+                    self.crossover(ctx, engine, &child, &mcts, &mut rng)
+                        .map(|dep| Self::score_individual(ctx, pool, dep))
+                });
+            // Elitism: originals compete with offspring (merged in slot
+            // order — deterministic). Fitness is (GPUs, total
+            // overshoot), cached per individual: among equal-GPU
+            // deployments the tighter one survives, so lateral moves
+            // accumulate into savings in later rounds.
+            population.extend(offspring.into_iter().flatten());
             population.sort_by(|a, b| {
-                a.num_gpus().cmp(&b.num_gpus()).then(
-                    excess(ctx, a).partial_cmp(&excess(ctx, b)).unwrap(),
-                )
+                a.gpus
+                    .cmp(&b.gpus)
+                    .then(a.excess.partial_cmp(&b.excess).unwrap())
             });
-            population.dedup_by(|a, b| a == b);
+            // Canonical dedup: identical deployments reached via
+            // different mutation/refill orders share a key, adjacent or
+            // not.
+            let mut seen: HashSet<Vec<GeneKey>> =
+                HashSet::with_capacity(population.len());
+            population.retain(|s| seen.insert(s.key.clone()));
             population.truncate(self.cfg.population);
 
-            if population[0].num_gpus() < best.num_gpus() {
-                best = population[0].clone();
+            if population[0].gpus < best_gpus {
+                best = population[0].dep.clone();
+                best_gpus = population[0].gpus;
                 stale_rounds = 0;
             } else {
                 stale_rounds += 1;
             }
-            history.best_gpus_per_round.push(best.num_gpus());
+            history.best_gpus_per_round.push(best_gpus);
             if stale_rounds >= self.cfg.patience {
                 break;
             }
@@ -162,66 +255,80 @@ impl GeneticAlgorithm {
         (best, history)
     }
 
-    /// Crossover: erase a random subset of GPU configs, refill with the
-    /// slow algorithm against the residual completion rates.
+    /// Crossover: erase a random subset of genes, refill with the slow
+    /// algorithm against the residual completion rates. The refill
+    /// stays interned (pool steps keep their pool index).
     fn crossover(
         &self,
         ctx: &ProblemCtx,
         engine: &ScoreEngine,
-        parent: &Deployment,
+        parent: &InternedDeployment,
         mcts: &Mcts,
         rng: &mut Rng,
-    ) -> Option<Deployment> {
+    ) -> Option<InternedDeployment> {
         let n = parent.num_gpus();
         if n == 0 {
             return None;
         }
+        let pool = engine.pool();
         let n_erase = ((n as f64 * self.cfg.erase_fraction).round() as usize)
             .clamp(1, self.cfg.erase_max.min(n));
-        let erased: std::collections::HashSet<usize> =
+        let erased: HashSet<usize> =
             rng.sample_indices(n, n_erase).into_iter().collect();
-        let kept: Vec<GpuConfig> = parent
-            .gpus
+        let mut genes: Vec<Gene> = parent
+            .genes
             .iter()
             .enumerate()
             .filter(|(i, _)| !erased.contains(i))
             .map(|(_, g)| g.clone())
             .collect();
         let mut comp = CompletionRates::zeros(ctx.workload.len());
-        for g in &kept {
-            comp.add(&g.utility(ctx));
+        for g in &genes {
+            g.add_utility(pool, &mut comp);
         }
-        // Cap each completion at its own value (no-op) — refill covers
-        // the gap. The slow algorithm's problem is the erased residual,
-        // which is much smaller than the original (paper insight #2).
-        let refill = mcts.search(ctx, engine, &comp, rng);
-        let mut gpus = kept;
-        gpus.extend(refill);
-        let dep = Deployment { gpus };
-        dep.is_valid(ctx).then_some(dep)
+        // The slow algorithm's problem is the erased residual, which is
+        // much smaller than the original (paper insight #2).
+        let refill = mcts.search_steps(ctx, engine, &comp, rng);
+        genes.extend(refill.into_iter().map(|s| match s {
+            RefillStep::Pool(i) => Gene::Pool(i),
+            RefillStep::Packed(cfg) => Gene::custom(ctx, cfg),
+        }));
+        let dep = InternedDeployment { genes };
+        dep.is_valid(ctx, pool).then_some(dep)
     }
 
     /// Mutation: swap services between randomly chosen same-size
     /// instance pairs running different services. Throughput totals are
-    /// preserved exactly (same size ⇒ same profiled throughput numbers
-    /// apply to the swapped services), so validity is maintained; swaps
-    /// where either service cannot run on the other instance (min-size /
-    /// latency infeasibility) are skipped.
-    fn mutate(&self, ctx: &ProblemCtx, dep: &mut Deployment, rng: &mut Rng) {
-        // Collect (gpu, slot) of all assignments grouped by size.
+    /// preserved (same size ⇒ same profiled throughput numbers apply to
+    /// the swapped services), so validity is maintained; swaps where
+    /// either service cannot run on the other instance (min-size /
+    /// latency infeasibility) are skipped. Operates on (size, service)
+    /// pair lists and re-materializes **only the touched genes** as
+    /// custom genes.
+    fn mutate(
+        &self,
+        ctx: &ProblemCtx,
+        pool: &ConfigPool,
+        dep: &mut InternedDeployment,
+        rng: &mut Rng,
+    ) {
+        // Pair lists per gene, and (gene, slot) ids grouped by size.
+        let mut pairs: Vec<Vec<(InstanceSize, ServiceId)>> =
+            dep.genes.iter().map(|g| g.pairs(pool)).collect();
         let mut by_size: std::collections::BTreeMap<u8, Vec<(usize, usize)>> =
             Default::default();
-        for (gi, g) in dep.gpus.iter().enumerate() {
-            for (ai, a) in g.assigns.iter().enumerate() {
-                by_size.entry(a.placement.size.slices()).or_default().push((gi, ai));
+        for (gi, ps) in pairs.iter().enumerate() {
+            for (pi, p) in ps.iter().enumerate() {
+                by_size.entry(p.0.slices()).or_default().push((gi, pi));
             }
         }
+        let mut dirty = vec![false; dep.genes.len()];
         for _ in 0..self.cfg.mutation_swaps {
             // Pick a size class with at least two instances.
             let classes: Vec<&Vec<(usize, usize)>> =
                 by_size.values().filter(|v| v.len() >= 2).collect();
             if classes.is_empty() {
-                return;
+                break;
             }
             let class = classes[rng.below(classes.len())];
             let i = rng.below(class.len());
@@ -229,30 +336,41 @@ impl GeneticAlgorithm {
             if i == j {
                 continue;
             }
-            let (g1, a1) = class[i];
-            let (g2, a2) = class[j];
-            let s1 = dep.gpus[g1].assigns[a1].service;
-            let s2 = dep.gpus[g2].assigns[a2].service;
+            let (g1, p1) = class[i];
+            let (g2, p2) = class[j];
+            let s1 = pairs[g1][p1].1;
+            let s2 = pairs[g2][p2].1;
             if s1 == s2 {
                 continue;
             }
-            let size = dep.gpus[g1].assigns[a1].placement.size;
-            debug_assert_eq!(size, dep.gpus[g2].assigns[a2].placement.size);
+            let size = pairs[g1][p1].0;
+            debug_assert_eq!(size, pairs[g2][p2].0);
             // Both services must be feasible on the swapped instances
             // (same size, so one check covers both).
-            let (Some((b2, t2)), Some((b1, t1))) =
-                (ctx.effective(s2, size), ctx.effective(s1, size))
-            else {
+            if ctx.effective(s2, size).is_none() || ctx.effective(s1, size).is_none() {
                 continue;
-            };
-            let x = &mut dep.gpus[g1].assigns[a1];
-            x.service = s2;
-            x.batch = b2;
-            x.throughput = t2;
-            let y = &mut dep.gpus[g2].assigns[a2];
-            y.service = s1;
-            y.batch = b1;
-            y.throughput = t1;
+            }
+            pairs[g1][p1].1 = s2;
+            pairs[g2][p2].1 = s1;
+            dirty[g1] = true;
+            dirty[g2] = true;
+        }
+        // Re-materialize touched genes; sizes are unchanged so the
+        // partitions stay realizable. All-or-nothing on the (never
+        // observed) rebuild failure so swap pairs cannot be applied
+        // one-sided.
+        let mut rebuilt: Vec<(usize, Gene)> = Vec::new();
+        for (gi, d) in dirty.iter().enumerate() {
+            if !*d {
+                continue;
+            }
+            match ctx.config_from_pairs(&pairs[gi]) {
+                Some(cfg) => rebuilt.push((gi, Gene::custom(ctx, cfg))),
+                None => return,
+            }
+        }
+        for (gi, g) in rebuilt {
+            dep.genes[gi] = g;
         }
     }
 }
@@ -260,7 +378,6 @@ impl GeneticAlgorithm {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::optimizer::gpu_config::ConfigPool;
     use crate::optimizer::{Greedy, OptimizerProcedure};
     use crate::perf::ProfileBank;
     use crate::spec::{Slo, Workload};
@@ -305,14 +422,16 @@ mod tests {
     fn mutation_preserves_completion() {
         let (bank, w) = fixture(5, 500.0);
         let ctx = ProblemCtx::new(&bank, &w).unwrap();
-        let mut dep = Greedy::new().solve(&ctx).unwrap();
-        let before = dep.completion(&ctx);
+        let pool = ConfigPool::enumerate(&ctx);
+        let dense = Greedy::new().solve(&ctx).unwrap();
+        let mut dep = InternedDeployment::from_deployment(&ctx, &dense);
+        let before = dep.completion(&ctx, &pool);
         let ga = GeneticAlgorithm::new(GaConfig::default());
         let mut rng = Rng::new(11);
         for _ in 0..20 {
-            ga.mutate(&ctx, &mut dep, &mut rng);
+            ga.mutate(&ctx, &pool, &mut dep, &mut rng);
         }
-        let after = dep.completion(&ctx);
+        let after = dep.completion(&ctx, &pool);
         for i in 0..w.len() {
             assert!(
                 (before.get(i) - after.get(i)).abs() < 1e-9,
@@ -322,7 +441,7 @@ mod tests {
             );
         }
         // GPUs still legal.
-        for g in &dep.gpus {
+        for g in &dep.materialize(&ctx, &pool).gpus {
             let _ = g.partition();
         }
     }
@@ -333,7 +452,10 @@ mod tests {
         let ctx = ProblemCtx::new(&bank, &w).unwrap();
         let pool = ConfigPool::enumerate(&ctx);
         let engine = engine_for(&pool, w.len());
-        let parent = Greedy::new().solve(&ctx).unwrap();
+        let parent = InternedDeployment::from_deployment(
+            &ctx,
+            &Greedy::new().solve(&ctx).unwrap(),
+        );
         let ga = GeneticAlgorithm::new(GaConfig {
             mcts: MctsConfig { iterations: 20, ..Default::default() },
             ..Default::default()
@@ -342,7 +464,7 @@ mod tests {
         let mut rng = Rng::new(5);
         for _ in 0..5 {
             if let Some(child) = ga.crossover(&ctx, &engine, &parent, &mcts, &mut rng) {
-                assert!(child.is_valid(&ctx));
+                assert!(child.is_valid(&ctx, &pool));
             }
         }
     }
@@ -403,5 +525,56 @@ mod tests {
         };
         assert_eq!(labels(&a), labels(&b));
         assert_eq!(ha.best_gpus_per_round, hb.best_gpus_per_round);
+    }
+
+    /// TENTPOLE DETERMINISM: per-slot RNG streams + slot-ordered merges
+    /// make the evolved deployment and history bit-identical at any
+    /// worker count.
+    #[test]
+    fn evolve_identical_across_parallelism() {
+        let (bank, w) = fixture(6, 700.0);
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let pool = ConfigPool::enumerate(&ctx);
+        let engine = engine_for(&pool, w.len());
+        let seed = Greedy::new().solve(&ctx).unwrap();
+        let labels = |d: &Deployment| {
+            d.gpus.iter().map(|c| c.label()).collect::<Vec<_>>()
+        };
+        let run = |workers: usize| {
+            let ga = GeneticAlgorithm::new(GaConfig {
+                rounds: 2,
+                parallelism: Some(workers),
+                mcts: MctsConfig { iterations: 15, ..Default::default() },
+                ..Default::default()
+            });
+            ga.evolve(&ctx, &engine, seed.clone())
+        };
+        let (base, base_h) = run(1);
+        for workers in [2usize, 8] {
+            let (dep, h) = run(workers);
+            assert_eq!(labels(&dep), labels(&base), "workers={workers}");
+            assert_eq!(h.best_gpus_per_round, base_h.best_gpus_per_round);
+        }
+    }
+
+    /// The canonical dedup key catches duplicates the seed GA's
+    /// adjacent-only `dedup_by` missed: same configs, different gene
+    /// order.
+    #[test]
+    fn population_dedup_is_order_insensitive() {
+        let (bank, w) = fixture(4, 500.0);
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let pool = ConfigPool::enumerate(&ctx);
+        let dense = Greedy::new().solve(&ctx).unwrap();
+        let a = InternedDeployment::from_deployment(&ctx, &dense);
+        let mut genes = a.genes.clone();
+        genes.reverse();
+        let b = InternedDeployment { genes };
+        assert_eq!(a.canonical_key(&pool), b.canonical_key(&pool));
+        let sa = GeneticAlgorithm::score_individual(&ctx, &pool, a);
+        let sb = GeneticAlgorithm::score_individual(&ctx, &pool, b);
+        let mut seen: HashSet<Vec<GeneKey>> = HashSet::new();
+        assert!(seen.insert(sa.key.clone()));
+        assert!(!seen.insert(sb.key.clone()), "reordered duplicate slipped through");
     }
 }

@@ -56,6 +56,19 @@ impl GpuConfig {
         u
     }
 
+    /// The (size, service) multiset this config realizes — the
+    /// controller's exchange/compact signature and the canonical dedup
+    /// key of id-backed deployments.
+    pub fn size_service_counts(
+        &self,
+    ) -> std::collections::BTreeMap<(InstanceSize, ServiceId), usize> {
+        let mut m = std::collections::BTreeMap::new();
+        for a in &self.assigns {
+            *m.entry((a.placement.size, a.service)).or_insert(0) += 1;
+        }
+        m
+    }
+
     /// Distinct services running on this GPU.
     pub fn services(&self) -> Vec<ServiceId> {
         let mut v: Vec<ServiceId> = self.assigns.iter().map(|a| a.service).collect();
@@ -147,6 +160,16 @@ impl<'a> ProblemCtx<'a> {
 
 /// A pre-enumerated configuration with its sparse utility, used by the
 /// fast algorithm and MCTS so scoring is O(#services-in-config).
+///
+/// `pairs` are stored in the canonical materialization order (size
+/// descending, then service ascending — the exact order
+/// [`ProblemCtx::config_from_pairs`] lays instances out in), and
+/// `sparse_util` is accumulated in that order. This makes every entry of
+/// `sparse_util` **bit-identical** to the corresponding per-service
+/// total of the materialized config's dense [`GpuConfig::utility`],
+/// which is what lets id-backed deployments
+/// ([`super::interned::InternedDeployment`]) accumulate completion rates
+/// sparsely yet byte-identically to the dense reference path.
 #[derive(Debug, Clone)]
 pub struct PooledConfig {
     pub pairs: Vec<(InstanceSize, ServiceId)>,
@@ -289,6 +312,26 @@ impl ConfigPool {
         &self.by_service[service]
     }
 
+    /// The global top-`k` configs by clipped heuristic score against
+    /// `remaining` (positive scores only, ties kept in index order by
+    /// the stable sort). Shared by [`super::engine::ScoreEngine`]'s
+    /// rollout-pool query and the branch-and-bound's candidate cut so
+    /// both rank identically.
+    pub fn top_by_score(&self, remaining: &[f64], k: usize) -> Vec<u32> {
+        let mut scored: Vec<(f64, u32)> = self
+            .configs
+            .iter()
+            .enumerate()
+            .filter_map(|(i, c)| {
+                let s = c.score_clipped(remaining);
+                (s > 0.0).then_some((s, i as u32))
+            })
+            .collect();
+        scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        scored.truncate(k);
+        scored.into_iter().map(|(_, i)| i).collect()
+    }
+
     /// Best config by clipped heuristic score, or None if every config
     /// scores 0 (i.e. everything satisfied).
     pub fn best_by_score(&self, remaining: &[f64]) -> Option<usize> {
@@ -314,8 +357,12 @@ impl ConfigPool {
 fn push_config(
     ctx: &ProblemCtx,
     configs: &mut Vec<PooledConfig>,
-    pairs: Vec<(InstanceSize, ServiceId)>,
+    mut pairs: Vec<(InstanceSize, ServiceId)>,
 ) {
+    // Canonical materialization order (the same comparator
+    // `config_from_pairs` uses): the sparse utility folded in this order
+    // is bit-identical to the materialized config's dense utility.
+    pairs.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
     let mut sparse: Vec<(ServiceId, f64)> = Vec::with_capacity(2);
     for &(size, sid) in &pairs {
         let u = match ctx.instance_utility(sid, size) {

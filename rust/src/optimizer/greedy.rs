@@ -19,6 +19,7 @@
 use super::comp_rates::CompletionRates;
 use super::engine::ScoreEngine;
 use super::gpu_config::{pack_residual, ConfigPool, GpuConfig, ProblemCtx};
+use super::interned::Gene;
 use super::OptimizerProcedure;
 
 /// Safety cap on emitted GPUs (guards against pathological inputs).
@@ -31,7 +32,20 @@ pub fn run_with_engine(
     ctx: &ProblemCtx,
     engine: &mut ScoreEngine,
 ) -> anyhow::Result<Vec<GpuConfig>> {
+    Ok(run_with_engine_tracked(ctx, engine)?.0)
+}
+
+/// [`run_with_engine`] that additionally returns the emitted configs as
+/// id-backed [`Gene`]s (pool commits keep their pool index, the endgame
+/// pack becomes a custom gene) — how the pipeline seeds the GA without
+/// re-interning the fast deployment. One loop produces both views, so
+/// the dense output stays byte-identical to the seed reference.
+pub fn run_with_engine_tracked(
+    ctx: &ProblemCtx,
+    engine: &mut ScoreEngine,
+) -> anyhow::Result<(Vec<GpuConfig>, Vec<Gene>)> {
     let mut out: Vec<GpuConfig> = Vec::new();
+    let mut genes: Vec<Gene> = Vec::new();
     while !engine.all_satisfied() {
         if out.len() >= MAX_GPUS {
             anyhow::bail!("greedy exceeded {MAX_GPUS} GPUs; unsatisfiable SLOs?");
@@ -43,6 +57,7 @@ pub fn run_with_engine(
             after.add(&cfg.utility(ctx));
             if after.all_satisfied() {
                 engine.commit_config(ctx, &cfg);
+                genes.push(Gene::custom(ctx, cfg.clone()));
                 out.push(cfg);
                 break;
             }
@@ -50,9 +65,10 @@ pub fn run_with_engine(
         let Some((best, _score)) = engine.peek_best() else {
             anyhow::bail!("no config scores > 0 but SLOs unmet");
         };
+        genes.push(Gene::Pool(best as u32));
         out.push(engine.commit(ctx, best));
     }
-    Ok(out)
+    Ok((out, genes))
 }
 
 /// The seed O(pool) full-rescan greedy, kept as the equivalence
@@ -235,6 +251,29 @@ mod tests {
                 assert!(lat <= svc.slo.latency_ms + 1e-9);
             }
         }
+    }
+
+    /// The gene-tracked fast path materializes to exactly the configs
+    /// it emitted densely, and its sparse completion is bit-identical —
+    /// the contract that lets the pipeline seed the GA with pool ids.
+    #[test]
+    fn tracked_genes_materialize_to_emitted_configs() {
+        use crate::optimizer::interned::InternedDeployment;
+        let (bank, w) = fixture(6, 700.0);
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let pool = ConfigPool::enumerate(&ctx);
+        let zero = CompletionRates::zeros(w.len());
+        let mut engine = ScoreEngine::new(&pool, &zero);
+        let (cfgs, genes) = run_with_engine_tracked(&ctx, &mut engine).unwrap();
+        assert_eq!(cfgs.len(), genes.len());
+        let interned = InternedDeployment { genes };
+        let dep = interned.materialize(&ctx, &pool);
+        let labels = |v: &[GpuConfig]| v.iter().map(|c| c.label()).collect::<Vec<_>>();
+        assert_eq!(labels(&dep.gpus), labels(&cfgs));
+        assert_eq!(
+            interned.completion(&ctx, &pool).as_slice(),
+            dep.completion(&ctx).as_slice()
+        );
     }
 
     /// SATELLITE DETERMINISM: the engine-driven greedy emits exactly the

@@ -1,0 +1,329 @@
+//! Id-backed (interned) deployments — the GA/MCTS hot-loop
+//! representation.
+//!
+//! The dense [`Deployment`] (`Vec<GpuConfig>`) is the boundary type the
+//! controller, cluster, and serving layers consume, but it is a poor
+//! chromosome: cloning deep-copies every `InstanceAssign`, equality is
+//! order-sensitive, and `completion()` rebuilds a dense vector per GPU.
+//! An [`InternedDeployment`] instead stores one [`Gene`] per GPU:
+//!
+//! * [`Gene::Pool`] — a `u32` handle into the per-problem
+//!   [`ConfigPool`] (the common case: greedy commits and MCTS refills
+//!   both emit pool indices);
+//! * [`Gene::Custom`] — an `Arc` around an off-pool configuration (an
+//!   endgame [`super::gpu_config::pack_residual`] pack or a mutated
+//!   config) with its cached exact sparse utility.
+//!
+//! Consequences:
+//!
+//! * **clone is a memcpy** of the gene vector plus `Arc` refcount bumps
+//!   — no `GpuConfig` is ever deep-copied in the GA inner loop;
+//! * **`completion()` is O(nnz)**: it accumulates each gene's cached
+//!   sparse utility instead of building a dense `CompletionRates` per
+//!   GPU. Because pooled sparse utilities are folded in the canonical
+//!   materialization order (see [`super::gpu_config::PooledConfig`])
+//!   and custom genes cache the dense per-service totals, the result is
+//!   **bit-identical** to the dense
+//!   [`Deployment::completion`] of [`InternedDeployment::materialize`]
+//!   — the equivalence tests assert exact (not approximate) equality;
+//! * **dedup is canonical**: [`InternedDeployment::canonical_key`]
+//!   reduces every gene to its sorted (slices, service) multiset and
+//!   sorts the gene keys, so identical deployments reached via
+//!   different mutation orders compare equal (the population dedup the
+//!   seed GA missed for non-adjacent duplicates).
+
+use std::sync::Arc;
+
+use crate::spec::ServiceId;
+
+use super::comp_rates::CompletionRates;
+use super::gpu_config::{ConfigPool, GpuConfig, ProblemCtx};
+use super::Deployment;
+
+/// Handle into a [`ConfigPool`].
+pub type ConfigId = u32;
+
+/// The canonical (slices, service) multiset of one GPU configuration,
+/// sorted ascending — the order-insensitive dedup key of a gene.
+pub type GeneKey = Vec<(u8, ServiceId)>;
+
+/// An off-pool GPU configuration with its cached exact sparse utility.
+///
+/// `util` holds the nonzero per-service totals of `cfg.utility(ctx)` in
+/// service-id order; each value is the dense accumulation itself, so
+/// adding these entries to a completion vector is bit-identical to the
+/// dense `comp.add(&cfg.utility(ctx))`.
+#[derive(Debug)]
+pub struct CustomConfig {
+    pub cfg: GpuConfig,
+    /// Nonzero (service, utility) totals, service-id ascending.
+    pub util: Vec<(ServiceId, f64)>,
+    /// Sorted (slices, service) multiset — the canonical dedup key.
+    pub key: GeneKey,
+}
+
+impl CustomConfig {
+    pub fn new(ctx: &ProblemCtx, cfg: GpuConfig) -> CustomConfig {
+        let dense = cfg.utility(ctx);
+        let util = (0..dense.len())
+            .filter_map(|sid| {
+                let u = dense.get(sid);
+                (u != 0.0).then_some((sid, u))
+            })
+            .collect();
+        let mut key: GeneKey = cfg
+            .assigns
+            .iter()
+            .map(|a| (a.placement.size.slices(), a.service))
+            .collect();
+        key.sort_unstable();
+        CustomConfig { cfg, util, key }
+    }
+}
+
+/// One GPU of an interned deployment.
+#[derive(Debug, Clone)]
+pub enum Gene {
+    /// A pooled configuration, by index.
+    Pool(ConfigId),
+    /// An off-pool configuration (endgame pack / mutation product);
+    /// `Arc` so cloning a deployment never deep-copies it.
+    Custom(Arc<CustomConfig>),
+}
+
+impl Gene {
+    /// Wrap an arbitrary materialized config as a custom gene.
+    pub fn custom(ctx: &ProblemCtx, cfg: GpuConfig) -> Gene {
+        Gene::Custom(Arc::new(CustomConfig::new(ctx, cfg)))
+    }
+
+    /// The gene's (size, service) pair list in materialization order —
+    /// what mutation operates on.
+    pub fn pairs(
+        &self,
+        pool: &ConfigPool,
+    ) -> Vec<(crate::mig::InstanceSize, ServiceId)> {
+        match self {
+            Gene::Pool(id) => pool.configs[*id as usize].pairs.clone(),
+            Gene::Custom(c) => c
+                .cfg
+                .assigns
+                .iter()
+                .map(|a| (a.placement.size, a.service))
+                .collect(),
+        }
+    }
+
+    /// The canonical sorted (slices, service) multiset of this gene.
+    pub fn key(&self, pool: &ConfigPool) -> GeneKey {
+        match self {
+            Gene::Pool(id) => {
+                let mut k: GeneKey = pool.configs[*id as usize]
+                    .pairs
+                    .iter()
+                    .map(|&(size, sid)| (size.slices(), sid))
+                    .collect();
+                k.sort_unstable();
+                k
+            }
+            Gene::Custom(c) => c.key.clone(),
+        }
+    }
+
+    /// Add this gene's per-service utility totals to `comp` —
+    /// bit-identical to the dense `comp.add(&cfg.utility(ctx))` of the
+    /// materialized config.
+    pub fn add_utility(&self, pool: &ConfigPool, comp: &mut CompletionRates) {
+        match self {
+            Gene::Pool(id) => {
+                for &(sid, u) in &pool.configs[*id as usize].sparse_util {
+                    comp.set(sid, comp.get(sid) + u);
+                }
+            }
+            Gene::Custom(c) => {
+                for &(sid, u) in &c.util {
+                    comp.set(sid, comp.get(sid) + u);
+                }
+            }
+        }
+    }
+
+    /// Materialize to a dense [`GpuConfig`].
+    pub fn materialize(&self, ctx: &ProblemCtx, pool: &ConfigPool) -> GpuConfig {
+        match self {
+            Gene::Pool(id) => pool.materialize(ctx, *id as usize),
+            Gene::Custom(c) => c.cfg.clone(),
+        }
+    }
+}
+
+/// An id-backed deployment: one gene per GPU in use.
+#[derive(Debug, Clone, Default)]
+pub struct InternedDeployment {
+    pub genes: Vec<Gene>,
+}
+
+impl InternedDeployment {
+    pub fn empty() -> InternedDeployment {
+        InternedDeployment { genes: Vec::new() }
+    }
+
+    /// Number of GPUs used — the paper's objective.
+    pub fn num_gpus(&self) -> usize {
+        self.genes.len()
+    }
+
+    /// Intern a dense deployment (every GPU becomes a custom gene;
+    /// subsequent clones are still cheap).
+    pub fn from_deployment(ctx: &ProblemCtx, dep: &Deployment) -> InternedDeployment {
+        InternedDeployment {
+            genes: dep.gpus.iter().map(|g| Gene::custom(ctx, g.clone())).collect(),
+        }
+    }
+
+    /// Resolve to the dense boundary representation.
+    pub fn materialize(&self, ctx: &ProblemCtx, pool: &ConfigPool) -> Deployment {
+        Deployment {
+            gpus: self.genes.iter().map(|g| g.materialize(ctx, pool)).collect(),
+        }
+    }
+
+    /// Aggregate completion rates — O(nnz) sparse accumulation,
+    /// bit-identical to the dense [`Deployment::completion`] of
+    /// [`InternedDeployment::materialize`].
+    pub fn completion(&self, ctx: &ProblemCtx, pool: &ConfigPool) -> CompletionRates {
+        let mut c = CompletionRates::zeros(ctx.workload.len());
+        for g in &self.genes {
+            g.add_utility(pool, &mut c);
+        }
+        c
+    }
+
+    /// Is every SLO satisfied?
+    pub fn is_valid(&self, ctx: &ProblemCtx, pool: &ConfigPool) -> bool {
+        self.completion(ctx, pool).all_satisfied()
+    }
+
+    /// Total over-provisioning (sum of completion beyond 100% per
+    /// service) — the GA's fitness tie-breaker. Folds the dense
+    /// completion vector in service-id order, exactly like the dense
+    /// reference.
+    pub fn excess(&self, ctx: &ProblemCtx, pool: &ConfigPool) -> f64 {
+        self.completion(ctx, pool)
+            .as_slice()
+            .iter()
+            .map(|&c| (c - 1.0).max(0.0))
+            .sum()
+    }
+
+    /// Canonical order-insensitive key: every gene reduced to its
+    /// sorted (slices, service) multiset, gene keys sorted. Two
+    /// deployments with the same multiset of GPU configurations —
+    /// regardless of GPU order, pool-vs-custom backing, or physical
+    /// placement starts — share a key.
+    pub fn canonical_key(&self, pool: &ConfigPool) -> Vec<GeneKey> {
+        let mut keys: Vec<GeneKey> = self.genes.iter().map(|g| g.key(pool)).collect();
+        keys.sort_unstable();
+        keys
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perf::ProfileBank;
+    use crate::spec::{Slo, Workload};
+    use crate::util::rng::Rng;
+
+    fn fixture(n: usize, thr: f64) -> (ProfileBank, Workload) {
+        let bank = ProfileBank::synthetic();
+        let models = bank.simulation_models();
+        let services = (0..n)
+            .map(|i| (models[i % models.len()].clone(), Slo::new(thr, 150.0)))
+            .collect();
+        (bank, Workload::new("interned-test", services))
+    }
+
+    #[test]
+    fn pool_gene_completion_bit_identical_to_dense() {
+        let (bank, w) = fixture(5, 700.0);
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let pool = ConfigPool::enumerate(&ctx);
+        let mut rng = Rng::new(0xBEEF);
+        for _ in 0..25 {
+            let k = 1 + rng.below(10);
+            let genes: Vec<Gene> =
+                (0..k).map(|_| Gene::Pool(rng.below(pool.len()) as u32)).collect();
+            let interned = InternedDeployment { genes };
+            let dense = interned.materialize(&ctx, &pool);
+            assert_eq!(
+                interned.completion(&ctx, &pool).as_slice(),
+                dense.completion(&ctx).as_slice(),
+                "sparse completion must be bit-identical to dense"
+            );
+        }
+    }
+
+    #[test]
+    fn custom_gene_matches_dense_and_packs() {
+        let (bank, w) = fixture(3, 400.0);
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let pool = ConfigPool::enumerate(&ctx);
+        let comp = CompletionRates::from_vec(vec![0.9, 0.95, 0.85]);
+        let packed = super::super::gpu_config::pack_residual(&ctx, &comp).unwrap();
+        let interned = InternedDeployment {
+            genes: vec![Gene::Pool(0), Gene::custom(&ctx, packed)],
+        };
+        let dense = interned.materialize(&ctx, &pool);
+        assert_eq!(
+            interned.completion(&ctx, &pool).as_slice(),
+            dense.completion(&ctx).as_slice()
+        );
+    }
+
+    #[test]
+    fn canonical_key_order_insensitive() {
+        let (bank, w) = fixture(4, 500.0);
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let pool = ConfigPool::enumerate(&ctx);
+        let a = InternedDeployment {
+            genes: vec![Gene::Pool(3), Gene::Pool(9), Gene::Pool(3)],
+        };
+        let b = InternedDeployment {
+            genes: vec![Gene::Pool(9), Gene::Pool(3), Gene::Pool(3)],
+        };
+        assert_eq!(a.canonical_key(&pool), b.canonical_key(&pool));
+        let c = InternedDeployment { genes: vec![Gene::Pool(3), Gene::Pool(9)] };
+        assert_ne!(a.canonical_key(&pool), c.canonical_key(&pool));
+    }
+
+    #[test]
+    fn pool_and_custom_backing_share_keys() {
+        // The same configuration interned as Pool(id) or as a custom
+        // gene must dedup together.
+        let (bank, w) = fixture(3, 600.0);
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let pool = ConfigPool::enumerate(&ctx);
+        for id in (0..pool.len()).step_by(23) {
+            let as_pool = Gene::Pool(id as u32);
+            let as_custom = Gene::custom(&ctx, pool.materialize(&ctx, id));
+            assert_eq!(as_pool.key(&pool), as_custom.key(&pool), "config {id}");
+        }
+    }
+
+    #[test]
+    fn clone_shares_custom_configs() {
+        let (bank, w) = fixture(2, 300.0);
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let pool = ConfigPool::enumerate(&ctx);
+        let cfg = pool.materialize(&ctx, 0);
+        let dep = InternedDeployment { genes: vec![Gene::custom(&ctx, cfg)] };
+        let copy = dep.clone();
+        match (&dep.genes[0], &copy.genes[0]) {
+            (Gene::Custom(a), Gene::Custom(b)) => {
+                assert!(Arc::ptr_eq(a, b), "clone must share, not deep-copy");
+            }
+            _ => panic!("expected custom genes"),
+        }
+    }
+}

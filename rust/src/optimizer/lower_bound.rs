@@ -48,6 +48,37 @@ pub fn lower_bound_remaining(ctx: &ProblemCtx, remaining: &[f64]) -> usize {
     (total / 7.0).ceil() as usize
 }
 
+/// Precomputed per-service slice needs, for bound evaluation in hot
+/// search loops: the branch-and-bound calls the admissible heuristic at
+/// every node, and [`slices_needed`] re-scans every instance size per
+/// call. Values are the exact same `f64`s, folded in the same order, so
+/// [`SliceNeeds::lower_bound_remaining`] returns exactly what the
+/// recomputing [`lower_bound_remaining`] does.
+pub struct SliceNeeds {
+    per_service: Vec<f64>,
+}
+
+impl SliceNeeds {
+    pub fn new(ctx: &ProblemCtx) -> SliceNeeds {
+        SliceNeeds {
+            per_service: (0..ctx.workload.len())
+                .map(|s| slices_needed(ctx, s).expect("workload validated"))
+                .collect(),
+        }
+    }
+
+    /// [`lower_bound_remaining`] over the cached needs.
+    pub fn lower_bound_remaining(&self, remaining: &[f64]) -> usize {
+        let total: f64 = self
+            .per_service
+            .iter()
+            .zip(remaining)
+            .map(|(&need, &r)| if r <= 0.0 { 0.0 } else { need * r })
+            .sum();
+        (total / 7.0).ceil() as usize
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -88,6 +119,28 @@ mod tests {
         assert_eq!(lower_bound_remaining(&ctx, &all), lower_bound_gpus(&ctx));
         assert!(lower_bound_remaining(&ctx, &half) <= lower_bound_remaining(&ctx, &all));
         assert_eq!(lower_bound_remaining(&ctx, &none), 0);
+    }
+
+    #[test]
+    fn cached_needs_match_recomputation() {
+        let (bank, w) = fixture();
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let needs = SliceNeeds::new(&ctx);
+        let n = w.len();
+        let cases = [
+            vec![1.0; 6],
+            vec![0.5; 6],
+            vec![0.0; 6],
+            vec![0.9, 0.0, 0.3, 1.0, 0.0, 0.05],
+        ];
+        for rem in cases {
+            assert_eq!(rem.len(), n);
+            assert_eq!(
+                needs.lower_bound_remaining(&rem),
+                lower_bound_remaining(&ctx, &rem),
+                "{rem:?}"
+            );
+        }
     }
 
     #[test]

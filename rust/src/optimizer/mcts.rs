@@ -20,6 +20,16 @@
 //!    orders of magnitude faster than the classic estimation"). A
 //!    rollout also *is* a concrete completion of the deployment, so the
 //!    best rollout ever seen is the returned answer.
+//!
+//! Two performance additions on top of the paper's fixes:
+//!
+//! * results come back as interned [`RefillStep`]s
+//!   ([`Mcts::search_steps`]) — pool configurations stay pool indices,
+//!   so the id-backed GA never materializes refills;
+//! * the root's candidate children are evaluated as a **batch** of
+//!   independent rollouts (one derived RNG stream each, folds ordered
+//!   by candidate), fanned out across `MctsConfig::parallelism` scoped
+//!   threads with bit-identical results at any worker count.
 
 use std::collections::HashMap;
 
@@ -43,6 +53,14 @@ pub struct MctsConfig {
     /// Candidate-pool size for memoized rollouts.
     pub rollout_pool: usize,
     pub seed: u64,
+    /// Worker threads for the batched root-candidate evaluation:
+    /// `Some(n)` pins, `None` uses every core. The *logical schedule*
+    /// (one derived RNG stream per root candidate, results folded in
+    /// candidate order) never depends on this value, so search output
+    /// is bit-identical at any worker count. The GA pins this to 1 for
+    /// nested crossover refills (its own offspring fan-out already owns
+    /// the cores).
+    pub parallelism: Option<usize>,
 }
 
 impl Default for MctsConfig {
@@ -54,6 +72,7 @@ impl Default for MctsConfig {
             exploration: 0.7,
             rollout_pool: 24,
             seed: 0x5105,
+            parallelism: Some(1),
         }
     }
 }
@@ -70,9 +89,10 @@ struct Node {
 }
 
 /// One step of a (partial) solution: either a pooled two-service
-/// configuration or a bespoke multi-service endgame pack.
+/// configuration (by pool index — the id-backed GA keeps it interned)
+/// or a bespoke multi-service endgame pack.
 #[derive(Debug, Clone)]
-enum Step {
+pub enum RefillStep {
     Pool(u32),
     Packed(GpuConfig),
 }
@@ -89,7 +109,7 @@ impl Mcts {
 
     /// Run the search through a shared [`ScoreEngine`] (pool + inverted
     /// index, shared with greedy/GA) and return the best complete
-    /// solution found.
+    /// solution found, materialized.
     pub fn search(
         &self,
         ctx: &ProblemCtx,
@@ -97,6 +117,38 @@ impl Mcts {
         completion: &CompletionRates,
         rng: &mut Rng,
     ) -> Vec<GpuConfig> {
+        let pool = engine.pool();
+        self.search_steps(ctx, engine, completion, rng)
+            .into_iter()
+            .map(|s| match s {
+                RefillStep::Pool(i) => pool.materialize(ctx, i as usize),
+                RefillStep::Packed(c) => c,
+            })
+            .collect()
+    }
+
+    /// [`Mcts::search`] in interned form: pool steps keep their pool
+    /// index so the id-backed GA never materializes refills it does not
+    /// have to.
+    ///
+    /// Structure: one seed rollout for an incumbent, then the root is
+    /// expanded once and its candidates are evaluated as a **batch** —
+    /// one rollout per root child, each on its own RNG stream derived
+    /// from `rng` in candidate order, each against a snapshot of the
+    /// seed rollout's memo cache, results folded back in candidate
+    /// order. The batch is
+    /// embarrassingly parallel and fans out across
+    /// `MctsConfig::parallelism` scoped threads; because streams are
+    /// derived per candidate and folds are ordered, the search result
+    /// is bit-identical at any worker count. The remaining iteration
+    /// budget then runs the classic serial loop.
+    pub fn search_steps(
+        &self,
+        ctx: &ProblemCtx,
+        engine: &ScoreEngine,
+        completion: &CompletionRates,
+        rng: &mut Rng,
+    ) -> Vec<RefillStep> {
         if completion.all_satisfied() {
             return Vec::new();
         }
@@ -113,14 +165,89 @@ impl Mcts {
 
         // Seed with one rollout from the root so there is always a
         // complete incumbent.
-        let mut best_solution: Vec<Step> =
+        let mut best_solution: Vec<RefillStep> =
             self.rollout(ctx, engine, completion, &mut rollout_cache, rng);
         let mut best_len = best_solution.len();
 
-        for _ in 0..self.cfg.iterations {
+        // ---------------- batched root-candidate evaluation
+        let mut iterations = self.cfg.iterations;
+        if iterations > 0 {
+            let children = self.expand(engine, &nodes[0].comp, rng);
+            let mut links = Vec::with_capacity(children.len());
+            for cfg_idx in children {
+                let mut comp = nodes[0].comp.clone();
+                for &(sid, u) in &pool.configs[cfg_idx as usize].sparse_util {
+                    comp.set(sid, comp.get(sid) + u);
+                }
+                nodes.push(Node {
+                    comp,
+                    depth: 1,
+                    children: Vec::new(),
+                    expanded: false,
+                    visits: 0,
+                    best_total: f64::INFINITY,
+                });
+                links.push((cfg_idx, nodes.len() - 1));
+            }
+            nodes[0].children = links;
+            nodes[0].expanded = true;
+            // Each evaluated candidate spends one iteration of the
+            // budget; tiny budgets evaluate only the top candidates
+            // (expansion already ranked them best-first).
+            let k = nodes[0].children.len().min(iterations);
+            if k > 0 {
+                // One derived stream per candidate, drawn in order. Every
+                // candidate starts from the same snapshot of the seed
+                // rollout's memo cache (worker-count-independent), so the
+                // batch keeps the memoized-estimation reuse the serial
+                // loop had instead of re-deriving candidate pools.
+                let jobs: Vec<(CompletionRates, Rng, HashMap<u64, Vec<u32>>)> = {
+                    let children = &nodes[0].children[..k];
+                    let mut jobs = Vec::with_capacity(k);
+                    for &(_, child) in children.iter() {
+                        jobs.push((
+                            nodes[child].comp.clone(),
+                            rng.fork(),
+                            rollout_cache.clone(),
+                        ));
+                    }
+                    jobs
+                };
+                let workers = super::par::resolve_workers(self.cfg.parallelism);
+                let evals: Vec<(Vec<RefillStep>, HashMap<u64, Vec<u32>>)> =
+                    super::par::run_indexed(jobs, workers, |(comp, mut r, mut local)| {
+                        let tail = self.rollout(ctx, engine, &comp, &mut local, &mut r);
+                        (tail, local)
+                    });
+                for (i, (tail, local)) in evals.into_iter().enumerate() {
+                    let (cfg_idx, child) = nodes[0].children[i];
+                    let total = 1 + tail.len();
+                    nodes[child].visits += 1;
+                    nodes[child].best_total = total as f64;
+                    nodes[0].visits += 1;
+                    if (total as f64) < nodes[0].best_total {
+                        nodes[0].best_total = total as f64;
+                    }
+                    if total < best_len {
+                        let mut sol = vec![RefillStep::Pool(cfg_idx)];
+                        sol.extend(tail);
+                        best_len = total;
+                        best_solution = sol;
+                    }
+                    // First-insert-wins merge in candidate order keeps
+                    // the memo cache deterministic.
+                    for (sig, cands) in local {
+                        rollout_cache.entry(sig).or_insert(cands);
+                    }
+                }
+                iterations = iterations.saturating_sub(k);
+            }
+        }
+
+        for _ in 0..iterations {
             // ---------------- selection
             let mut path_nodes = vec![0usize];
-            let mut path_configs: Vec<Step> = Vec::new();
+            let mut path_configs: Vec<RefillStep> = Vec::new();
             let mut cur = 0usize;
             while nodes[cur].expanded && !nodes[cur].comp.all_satisfied() {
                 let parent_visits = nodes[cur].visits.max(1) as f64;
@@ -148,7 +275,7 @@ impl Mcts {
                 }
                 match best_child {
                     Some((cfg_idx, child)) => {
-                        path_configs.push(Step::Pool(cfg_idx));
+                        path_configs.push(RefillStep::Pool(cfg_idx));
                         path_nodes.push(child);
                         cur = child;
                     }
@@ -182,7 +309,7 @@ impl Mcts {
                 if let Some(&(cfg_idx, child)) =
                     nodes[cur].children.get(rng.below(nodes[cur].children.len().max(1)))
                 {
-                    path_configs.push(Step::Pool(cfg_idx));
+                    path_configs.push(RefillStep::Pool(cfg_idx));
                     path_nodes.push(child);
                     cur = child;
                 }
@@ -210,12 +337,6 @@ impl Mcts {
             }
         }
         best_solution
-            .into_iter()
-            .map(|s| match s {
-                Step::Pool(i) => pool.materialize(ctx, i as usize),
-                Step::Packed(c) => c,
-            })
-            .collect()
     }
 
     /// Expansion: sample unsatisfied services, score configs touching
@@ -252,10 +373,10 @@ impl Mcts {
         comp: &CompletionRates,
         cache: &mut HashMap<u64, Vec<u32>>,
         rng: &mut Rng,
-    ) -> Vec<Step> {
+    ) -> Vec<RefillStep> {
         let pool = engine.pool();
         let mut comp = comp.clone();
-        let mut out: Vec<Step> = Vec::new();
+        let mut out: Vec<RefillStep> = Vec::new();
         // Far more than any sane deployment; break glass on bugs.
         const MAX_STEPS: usize = 100_000;
         while !comp.all_satisfied() && out.len() < MAX_STEPS {
@@ -265,7 +386,7 @@ impl Mcts {
                 let mut after = comp.clone();
                 after.add(&cfg.utility(ctx));
                 if after.all_satisfied() {
-                    out.push(Step::Packed(cfg));
+                    out.push(RefillStep::Packed(cfg));
                     break;
                 }
             }
@@ -315,7 +436,7 @@ impl Mcts {
             for &(sid, u) in &pool.configs[ci as usize].sparse_util {
                 comp.set(sid, comp.get(sid) + u);
             }
-            out.push(Step::Pool(ci));
+            out.push(RefillStep::Pool(ci));
         }
         out
     }
@@ -398,6 +519,36 @@ mod tests {
             v.iter().map(|c| c.label()).collect::<Vec<_>>()
         };
         assert_eq!(labels(&a), labels(&b));
+    }
+
+    /// TENTPOLE DETERMINISM: the batched root-candidate evaluation uses
+    /// one derived RNG stream per candidate with ordered folds, so the
+    /// search result is bit-identical at any worker count.
+    #[test]
+    fn search_identical_across_worker_counts() {
+        let (bank, w) = fixture(5, 700.0);
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let pool = ConfigPool::enumerate(&ctx);
+        let zero = CompletionRates::zeros(w.len());
+        let engine = ScoreEngine::new(&pool, &zero);
+        let labels = |v: &Vec<crate::optimizer::GpuConfig>| {
+            v.iter().map(|c| c.label()).collect::<Vec<_>>()
+        };
+        let base = Mcts::new(MctsConfig {
+            iterations: 40,
+            parallelism: Some(1),
+            ..Default::default()
+        })
+        .search(&ctx, &engine, &zero, &mut Rng::new(9));
+        for workers in [2usize, 8] {
+            let m = Mcts::new(MctsConfig {
+                iterations: 40,
+                parallelism: Some(workers),
+                ..Default::default()
+            });
+            let got = m.search(&ctx, &engine, &zero, &mut Rng::new(9));
+            assert_eq!(labels(&got), labels(&base), "workers={workers}");
+        }
     }
 
     #[test]

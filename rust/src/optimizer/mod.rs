@@ -18,6 +18,13 @@
 //! * [`pipeline`] — the [`OptimizerPipeline`] facade with explicit
 //!   time/iteration budgets that callers (CLI, controller replan,
 //!   examples, benches) consume;
+//! * [`interned`] — id-backed deployments ([`InternedDeployment`]):
+//!   the GA/MCTS chromosome whose clone is a memcpy and whose
+//!   `completion()` is a sparse accumulation bit-identical to the dense
+//!   path;
+//! * `par` (crate-private) — deterministic scoped-thread fan-out shared
+//!   by the GA's offspring round and MCTS's root-candidate batch (the
+//!   `parallelism` knob on [`PipelineBudget`]/[`GaConfig`]);
 //! * [`lower_bound`] — the rule-free GPU lower bound (§8.1);
 //! * [`exact`] — in-tree branch-and-bound for small instances (the
 //!   paper's Z3/MIP comparison stand-in; used by tests).
@@ -28,8 +35,10 @@ pub mod exact;
 pub mod ga;
 pub mod gpu_config;
 pub mod greedy;
+pub mod interned;
 pub mod lower_bound;
 pub mod mcts;
+pub(crate) mod par;
 pub mod pipeline;
 pub mod score;
 pub mod two_phase;
@@ -39,14 +48,21 @@ pub use engine::ScoreEngine;
 pub use ga::{GaConfig, GeneticAlgorithm};
 pub use gpu_config::{ConfigPool, GpuConfig, InstanceAssign, ProblemCtx};
 pub use greedy::Greedy;
+pub use interned::{ConfigId, CustomConfig, Gene, InternedDeployment};
 pub use lower_bound::lower_bound_gpus;
-pub use mcts::{Mcts, MctsConfig};
+pub use mcts::{Mcts, MctsConfig, RefillStep};
 pub use pipeline::{OptimizerPipeline, PipelineBudget, PipelineOutcome};
 pub use two_phase::{TwoPhase, TwoPhaseConfig};
 
 use crate::spec::Workload;
 
 /// A deployment: one [`GpuConfig`] per GPU in use (§4).
+///
+/// This is the dense *boundary* representation the controller, cluster,
+/// and serving layers consume. The optimizer's hot loop (GA/MCTS)
+/// evolves the id-backed [`InternedDeployment`] instead — clone is a
+/// memcpy, `completion()` is sparse — and materializes back to this
+/// type at the phase boundary.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Deployment {
     pub gpus: Vec<GpuConfig>,

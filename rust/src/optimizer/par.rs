@@ -1,0 +1,105 @@
+//! Deterministic scoped-thread fan-out for the optimizer's
+//! embarrassingly parallel stages (GA offspring, MCTS root-candidate
+//! evaluations).
+//!
+//! No dependencies beyond `std::thread::scope` (the same primitive
+//! `serving::loadgen` uses). Determinism contract: `job` is a pure
+//! function of its input, every input carries its own derived RNG
+//! stream, and outputs are returned index-aligned with the inputs — so
+//! results are identical for any worker count, including the inline
+//! `workers == 1` path.
+
+/// Resolve a `parallelism` knob: `Some(n)` pins the worker count,
+/// `None` uses every available core.
+pub(crate) fn resolve_workers(parallelism: Option<usize>) -> usize {
+    match parallelism {
+        Some(n) => n.max(1),
+        None => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+    }
+}
+
+/// Run `job` over `inputs` on up to `workers` scoped threads, returning
+/// outputs index-aligned with the inputs. Workers pull the next pending
+/// index from a shared atomic counter (simple work stealing, so
+/// variable-cost jobs — e.g. GA refills of different erase sizes —
+/// balance instead of serializing behind one unlucky chunk); with
+/// `workers <= 1` everything runs inline on the caller's thread. Either
+/// way the output vector is byte-identical because output `i` is
+/// `job(inputs[i])` no matter which worker ran it.
+pub(crate) fn run_indexed<I, O, F>(inputs: Vec<I>, workers: usize, job: F) -> Vec<O>
+where
+    I: Send,
+    O: Send,
+    F: Fn(I) -> O + Sync,
+{
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Mutex;
+
+    let n = inputs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.clamp(1, n);
+    if workers == 1 {
+        return inputs.into_iter().map(job).collect();
+    }
+    // Per-slot mutexes are uncontended (each index is claimed by
+    // exactly one worker via the counter); they exist to hand owned
+    // inputs/outputs across threads safely.
+    let slots: Vec<Mutex<(Option<I>, Option<O>)>> =
+        inputs.into_iter().map(|i| Mutex::new((Some(i), None))).collect();
+    let next = AtomicUsize::new(0);
+    let job = &job;
+    let slots_ref = &slots;
+    let next_ref = &next;
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(move || loop {
+                let i = next_ref.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let input = slots_ref[i]
+                    .lock()
+                    .expect("slot lock")
+                    .0
+                    .take()
+                    .expect("input consumed once");
+                let output = job(input);
+                slots_ref[i].lock().expect("slot lock").1 = Some(output);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().expect("slot lock").1.expect("every job ran"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn outputs_index_aligned_any_worker_count() {
+        let inputs: Vec<usize> = (0..37).collect();
+        let expect: Vec<usize> = inputs.iter().map(|x| x * x).collect();
+        for workers in [1, 2, 3, 8, 64] {
+            let got = run_indexed(inputs.clone(), workers, |x| x * x);
+            assert_eq!(got, expect, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn empty_input_is_fine() {
+        let got: Vec<u32> = run_indexed(Vec::<u32>::new(), 4, |x| x);
+        assert!(got.is_empty());
+    }
+
+    #[test]
+    fn resolve_workers_pins_and_autodetects() {
+        assert_eq!(resolve_workers(Some(0)), 1);
+        assert_eq!(resolve_workers(Some(3)), 3);
+        assert!(resolve_workers(None) >= 1);
+    }
+}

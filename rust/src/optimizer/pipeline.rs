@@ -16,7 +16,8 @@ use super::comp_rates::CompletionRates;
 use super::engine::ScoreEngine;
 use super::ga::{GaConfig, GaHistory, GeneticAlgorithm};
 use super::gpu_config::{ConfigPool, GpuConfig, ProblemCtx};
-use super::greedy::run_with_engine;
+use super::greedy::{run_with_engine, run_with_engine_tracked};
+use super::interned::InternedDeployment;
 use super::mcts::MctsConfig;
 use super::Deployment;
 
@@ -36,6 +37,13 @@ pub struct PipelineBudget {
     pub time_budget: Option<Duration>,
     /// Seed for the GA's (and nested MCTS's) randomness.
     pub seed: u64,
+    /// Worker threads for phase 2's offspring fan-out: `Some(n)` pins,
+    /// `None` uses every core. Solve output is bit-identical at any
+    /// value (the GA derives one RNG stream per offspring slot), so
+    /// this knob only trades wall-clock for cores — **unless**
+    /// `time_budget` is set, in which case faster (more-parallel) runs
+    /// fit more GA rounds before the wall-clock cutoff.
+    pub parallelism: Option<usize>,
 }
 
 impl Default for PipelineBudget {
@@ -46,6 +54,7 @@ impl Default for PipelineBudget {
             mcts_iterations: 60,
             time_budget: None,
             seed: 0x6A,
+            parallelism: None,
         }
     }
 }
@@ -56,6 +65,12 @@ impl PipelineBudget {
         PipelineBudget { ga_rounds: 0, ..Default::default() }
     }
 
+    /// Pin the phase-2 worker count (builder-style).
+    pub fn with_parallelism(mut self, parallelism: Option<usize>) -> PipelineBudget {
+        self.parallelism = parallelism;
+        self
+    }
+
     /// The [`GaConfig`] realizing this budget (other GA knobs default).
     pub fn ga_config(&self) -> GaConfig {
         GaConfig {
@@ -64,6 +79,7 @@ impl PipelineBudget {
             mcts: MctsConfig { iterations: self.mcts_iterations, ..Default::default() },
             time_budget: self.time_budget,
             seed: self.seed,
+            parallelism: self.parallelism,
             ..Default::default()
         }
     }
@@ -141,11 +157,14 @@ impl<'a> OptimizerPipeline<'a> {
         run_with_engine(self.ctx, &mut engine)
     }
 
-    /// The full two-phase pipeline under this pipeline's budget.
+    /// The full two-phase pipeline under this pipeline's budget. Phase
+    /// 1 is tracked so phase 2's GA seed stays id-backed (pool commits
+    /// keep their pool index; clones in the GA inner loop are memcpys).
     pub fn optimize(&self) -> anyhow::Result<PipelineOutcome> {
         let t0 = Instant::now();
         let mut engine = self.engine();
-        let fast = Deployment { gpus: run_with_engine(self.ctx, &mut engine)? };
+        let (fast_cfgs, fast_genes) = run_with_engine_tracked(self.ctx, &mut engine)?;
+        let fast = Deployment { gpus: fast_cfgs };
         anyhow::ensure!(
             fast.is_valid(self.ctx),
             "fast algorithm produced invalid deployment"
@@ -156,7 +175,12 @@ impl<'a> OptimizerPipeline<'a> {
             (fast.clone(), history)
         } else {
             let ga = GeneticAlgorithm::new(self.budget.ga_config());
-            ga.evolve(self.ctx, &engine, fast.clone())
+            let (best_interned, history) = ga.evolve_interned(
+                self.ctx,
+                &engine,
+                InternedDeployment { genes: fast_genes },
+            );
+            (best_interned.materialize(self.ctx, &self.pool), history)
         };
         Ok(PipelineOutcome { fast, best, history, elapsed: t0.elapsed() })
     }

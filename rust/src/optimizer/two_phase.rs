@@ -18,7 +18,8 @@ use super::comp_rates::CompletionRates;
 use super::engine::ScoreEngine;
 use super::ga::{GaConfig, GaHistory, GeneticAlgorithm};
 use super::gpu_config::{ConfigPool, GpuConfig, ProblemCtx};
-use super::greedy::run_with_engine;
+use super::greedy::{run_with_engine, run_with_engine_tracked};
+use super::interned::InternedDeployment;
 use super::{Deployment, OptimizerProcedure};
 
 /// Two-phase pipeline configuration.
@@ -60,14 +61,18 @@ impl TwoPhase {
     ) -> anyhow::Result<TwoPhaseOutcome> {
         let zero = CompletionRates::zeros(ctx.workload.len());
         let mut engine = ScoreEngine::new(pool, &zero);
-        // Phase 1: fast algorithm over the shared engine.
-        let fast = Deployment { gpus: run_with_engine(ctx, &mut engine)? };
+        // Phase 1: fast algorithm over the shared engine, tracked so
+        // the GA seed stays id-backed (pool commits keep their index).
+        let (fast_cfgs, fast_genes) = run_with_engine_tracked(ctx, &mut engine)?;
+        let fast = Deployment { gpus: fast_cfgs };
         anyhow::ensure!(fast.is_valid(ctx), "fast algorithm produced invalid deployment");
-        // Phase 2: GA over the fast seed; crossovers query the same
-        // engine (pool + inverted index), never re-enumerating.
+        // Phase 2: GA over the interned fast seed; crossovers query the
+        // same engine (pool + inverted index), never re-enumerating,
+        // and fan out across GaConfig::parallelism workers.
         let ga = GeneticAlgorithm::new(self.cfg.ga.clone());
-        let (best, history) = ga.evolve(ctx, &engine, fast.clone());
-        Ok(TwoPhaseOutcome { fast, best, history })
+        let (best, history) =
+            ga.evolve_interned(ctx, &engine, InternedDeployment { genes: fast_genes });
+        Ok(TwoPhaseOutcome { fast, best: best.materialize(ctx, pool), history })
     }
 }
 

@@ -1,14 +1,20 @@
-//! Equivalence + determinism guarantees for the incremental score
-//! engine refactor: the engine-driven optimizers must reproduce the
-//! seed (full pool-rescan) implementations byte for byte under fixed
-//! seeds, on the same fixtures the `micro_optimizer` bench uses.
+//! Equivalence + determinism guarantees for the optimizer refactors:
+//!
+//! * the engine-driven optimizers must reproduce the seed (full
+//!   pool-rescan) implementations byte for byte under fixed seeds, on
+//!   the same fixtures the `micro_optimizer` bench uses;
+//! * the id-backed (interned) deployment representation must compute
+//!   completion/excess **bit-identically** to the dense reference path;
+//! * the parallel two-phase solve must be bit-identical at any
+//!   `parallelism` (per-slot RNG streams, slot-ordered merges).
 
 use mig_serving::optimizer::{
-    greedy, CompletionRates, ConfigPool, GaConfig, GeneticAlgorithm, Greedy,
-    MctsConfig, OptimizerPipeline, OptimizerProcedure, PipelineBudget, ProblemCtx,
-    ScoreEngine,
+    gpu_config::pack_residual, greedy, CompletionRates, ConfigPool, GaConfig, Gene,
+    GeneticAlgorithm, Greedy, InternedDeployment, MctsConfig, OptimizerPipeline,
+    OptimizerProcedure, PipelineBudget, ProblemCtx, ScoreEngine,
 };
 use mig_serving::perf::ProfileBank;
+use mig_serving::util::rng::Rng;
 // The exact same fixture builder the `micro_optimizer` bench uses.
 use mig_serving::workload::micro_workload;
 
@@ -98,6 +104,95 @@ fn ga_deterministic_over_shared_engine() {
     assert_eq!(labels(&a.gpus), labels(&b.gpus));
     assert_eq!(ha.best_gpus_per_round, hb.best_gpus_per_round);
     assert!(a.num_gpus() <= seed_dep.num_gpus());
+}
+
+/// ACCEPTANCE: same seed ⇒ byte-identical best deployment and
+/// `GaHistory` at `parallelism` 1, 2, and 8. The two-phase solve's
+/// logical schedule is indexed by (round, offspring slot), never by
+/// worker interleaving.
+#[test]
+fn two_phase_identical_across_parallelism() {
+    let bank = ProfileBank::synthetic();
+    let w = micro_workload(&bank, 12, 8.0);
+    let ctx = ProblemCtx::new(&bank, &w).unwrap();
+    let run = |workers: usize| {
+        let budget = PipelineBudget {
+            ga_rounds: 2,
+            ga_patience: 2,
+            mcts_iterations: 12,
+            parallelism: Some(workers),
+            ..Default::default()
+        };
+        OptimizerPipeline::with_budget(&ctx, budget).optimize().unwrap()
+    };
+    let base = run(1);
+    for workers in [2usize, 8] {
+        let got = run(workers);
+        assert_eq!(
+            labels(&got.best.gpus),
+            labels(&base.best.gpus),
+            "workers={workers}: best deployment diverged"
+        );
+        assert_eq!(
+            got.history.best_gpus_per_round, base.history.best_gpus_per_round,
+            "workers={workers}: GaHistory diverged"
+        );
+        assert_eq!(labels(&got.fast.gpus), labels(&base.fast.gpus));
+    }
+}
+
+/// ACCEPTANCE: the id-backed `completion()`/`excess()` match the dense
+/// seed-path computation on randomized deployments — **exactly**, not
+/// approximately. Pooled sparse utilities are folded in the canonical
+/// materialization order and custom genes cache dense totals, so the
+/// sparse accumulation reproduces the dense float operations bit for
+/// bit.
+#[test]
+fn interned_completion_and_excess_match_dense() {
+    let bank = ProfileBank::synthetic();
+    let dense_excess = |d: &mig_serving::optimizer::Deployment, ctx: &ProblemCtx| {
+        d.completion(ctx)
+            .as_slice()
+            .iter()
+            .map(|&c| (c - 1.0).max(0.0))
+            .sum::<f64>()
+    };
+    for n in [4usize, 9, 16] {
+        let w = micro_workload(&bank, n, 4.0);
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let pool = ConfigPool::enumerate(&ctx);
+        let mut rng = Rng::new(0xA11CE ^ n as u64);
+        for case in 0..30 {
+            let k = 1 + rng.below(12);
+            let mut genes: Vec<Gene> =
+                (0..k).map(|_| Gene::Pool(rng.below(pool.len()) as u32)).collect();
+            // Sprinkle an off-pool endgame pack in a third of the cases
+            // so the custom-gene path is exercised too.
+            if case % 3 == 0 {
+                let partial = CompletionRates::from_vec(
+                    (0..n).map(|_| rng.f64_range(0.85, 0.99)).collect(),
+                );
+                if let Some(packed) = pack_residual(&ctx, &partial) {
+                    genes.push(Gene::custom(&ctx, packed));
+                }
+            }
+            let interned = InternedDeployment { genes };
+            let dense = interned.materialize(&ctx, &pool);
+            let sparse_comp = interned.completion(&ctx, &pool);
+            let dense_comp = dense.completion(&ctx);
+            assert_eq!(
+                sparse_comp.as_slice(),
+                dense_comp.as_slice(),
+                "n={n} case={case}: sparse completion diverged from dense"
+            );
+            let se = interned.excess(&ctx, &pool);
+            let de = dense_excess(&dense, &ctx);
+            assert!(
+                se == de,
+                "n={n} case={case}: excess diverged: {se} vs {de}"
+            );
+        }
+    }
 }
 
 /// Residual (partial-completion) solves agree between the seed full
