@@ -91,7 +91,7 @@ fn main() -> anyhow::Result<()> {
             .enumerate()
         {
             let bound = o.slo.throughput.min(n.slo.throughput);
-            let seen = outcome.report.min_service_throughput[i];
+            let seen = outcome.report.min_throughput(i);
             let pass = seen >= bound - 1e-6;
             ok &= pass;
             println!(

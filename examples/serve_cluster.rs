@@ -69,7 +69,7 @@ fn main() -> anyhow::Result<()> {
     let reports = LoadGen::open_loop_all(&cluster, &rates, Duration::from_secs(5));
 
     let mut t = Table::new(&[
-        "service", "SLO req/s", "achieved", "satisfaction", "p50 ms", "p90 ms",
+        "service", "SLO req/s", "achieved", "satisfaction", "p50 ms", "p90 ms", "p99 ms",
     ]);
     let mut total_req = 0.0;
     let mut total_got = 0.0;
@@ -84,6 +84,7 @@ fn main() -> anyhow::Result<()> {
             pct(r.achieved_throughput / s.slo.throughput, 1),
             fmt(r.p50_ms, 0),
             fmt(r.p90_ms, 0),
+            fmt(r.p99_ms, 0),
         ]);
     }
     t.row(vec![
@@ -91,6 +92,7 @@ fn main() -> anyhow::Result<()> {
         fmt(total_req, 1),
         fmt(total_got, 1),
         pct(total_got / total_req, 1),
+        String::new(),
         String::new(),
         String::new(),
     ]);

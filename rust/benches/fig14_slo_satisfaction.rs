@@ -46,7 +46,9 @@ fn main() {
         let rates: Vec<f64> =
             w.services.iter().map(|s| s.slo.throughput).collect();
         let reports = LoadGen::open_loop_all(&cluster, &rates, Duration::from_secs(6));
-        let mut t = Table::new(&["service", "required", "achieved", "satisfaction", "p90 ms"]);
+        let mut t = Table::new(&[
+            "service", "required", "achieved", "satisfaction", "p90 ms", "p99 ms",
+        ]);
         let (mut tot_req, mut tot_got) = (0.0, 0.0);
         for r in &reports {
             let s = &w.services[r.service];
@@ -58,6 +60,7 @@ fn main() {
                 f(r.achieved_throughput, 1),
                 pct(r.achieved_throughput / s.slo.throughput, 1),
                 f(r.p90_ms, 0),
+                f(r.p99_ms, 0),
             ]);
         }
         t.row(vec![
@@ -65,6 +68,7 @@ fn main() {
             f(tot_req, 1),
             f(tot_got, 1),
             pct(tot_got / tot_req, 1),
+            String::new(),
             String::new(),
         ]);
         println!(

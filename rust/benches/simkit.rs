@@ -1,0 +1,104 @@
+//! simkit bench: day-scale closed-loop simulation throughput plus the
+//! control-loop vs. static-peak headline numbers per scenario.
+//!
+//! Section 0 asserts the determinism contract (identical `SimReport`
+//! at optimizer parallelism 1 and 2) **before** timing anything —
+//! mirroring `micro_optimizer`'s serial-vs-parallel gate. `--json`
+//! writes `BENCH_simkit.json` (CI uploads it as an artifact).
+
+use mig_serving::bench::{header, BenchArgs, BenchCtx, JsonReport};
+use mig_serving::optimizer::PipelineBudget;
+use mig_serving::perf::ProfileBank;
+use mig_serving::simkit::{scenario, SimConfig, Simulation, SCENARIOS};
+use mig_serving::util::json::Value;
+
+fn main() {
+    let args = BenchArgs::parse();
+    header(
+        "simkit",
+        "trace-driven closed-loop simulation: control loop vs static-peak baseline",
+    );
+    let bank = ProfileBank::synthetic();
+    let mut report = JsonReport::new("simkit", args.quick);
+    let tick_s = if args.quick { 600.0 } else { 120.0 };
+
+    // ---- Section 1: determinism gate (always runs; cheap).
+    if args.section_enabled(1) {
+        println!("\n[1] determinism: spike scenario, parallelism 1 vs 2");
+        let trace = scenario(&bank, "spike");
+        let run = |par: usize| {
+            let cfg = SimConfig {
+                tick_s: 600.0,
+                budget: PipelineBudget {
+                    ga_rounds: 1,
+                    mcts_iterations: 10,
+                    parallelism: Some(par),
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
+            Simulation::new(&bank, &trace, cfg).run().expect("sim runs")
+        };
+        let serial = run(1);
+        let parallel = run(2);
+        assert_eq!(
+            serial.to_json().to_pretty(),
+            parallel.to_json().to_pretty(),
+            "SimReport must be bit-identical at any parallelism"
+        );
+        println!(
+            "    OK: {} replans, {:.2} GPU-hours, attainment {:.2}%",
+            serial.replans,
+            serial.gpu_hours,
+            100.0 * serial.overall_attainment()
+        );
+        report.record("determinism", "replans", Value::from(serial.replans));
+        report.record("determinism", "identical", Value::Bool(true));
+    }
+
+    // ---- Sections 2..: one per scenario. Metrics come from the last
+    // timed run itself (no extra untimed simulation).
+    let scenarios: &[&str] = if args.quick { &["spike", "gpu-failure"] } else { &SCENARIOS };
+    let ctx = if args.quick { BenchCtx::new(0, 1) } else { BenchCtx::new(0, 3) };
+    for (i, name) in scenarios.iter().enumerate() {
+        let section = i + 2;
+        if !args.section_enabled(section) {
+            continue;
+        }
+        println!("\n[{section}] scenario {name} (tick {tick_s}s)");
+        let trace = scenario(&bank, name);
+        let cfg = SimConfig { tick_s, ..Default::default() };
+        let sim = Simulation::new(&bank, &trace, cfg);
+        let mut last = None;
+        let m = ctx.time(&format!("simulate {name} (control+baseline)"), || {
+            last = Some(sim.run_with_baseline().expect("scenario runs"));
+        });
+        let cmp = last.expect("at least one timed iteration");
+        println!("{}", cmp.table());
+        println!("{}", m.report());
+        report.record_measurement(name, &m);
+        report.record(name, "gpu_hours_control", Value::Num(cmp.control.gpu_hours));
+        report.record(name, "gpu_hours_baseline", Value::Num(cmp.baseline.gpu_hours));
+        report.record(
+            name,
+            "attainment_control",
+            Value::Num(cmp.control.overall_attainment()),
+        );
+        report.record(
+            name,
+            "attainment_baseline",
+            Value::Num(cmp.baseline.overall_attainment()),
+        );
+        report.record(name, "replans", Value::from(cmp.control.replans));
+        report.record(
+            name,
+            "transition_seconds",
+            Value::Num(cmp.control.transition_seconds()),
+        );
+    }
+
+    if let Some(path) = &args.json {
+        report.write(path).expect("write bench json");
+        println!("\nwrote {}", path.display());
+    }
+}

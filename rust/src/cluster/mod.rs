@@ -19,5 +19,5 @@ pub mod sim;
 pub mod state;
 
 pub use actions::{Action, ActionKind, LatencyModel};
-pub use sim::{ExecReport, Executor};
-pub use state::{ClusterState, GpuSim, Pod};
+pub use sim::{ActionSchedule, ExecReport, Executor};
+pub use state::{ClusterError, ClusterState, GpuSim, Pod};

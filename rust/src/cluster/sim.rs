@@ -6,8 +6,9 @@
 //! dependencies between actions and executes the non-conflicting ones
 //! simultaneously"). Per-kind time and counts feed Fig 13a/13b.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
+use crate::spec::ServiceId;
 use crate::util::rng::Rng;
 
 use super::actions::{Action, ActionKind, LatencyModel};
@@ -24,9 +25,12 @@ pub struct ExecReport {
     pub counts: HashMap<ActionKind, usize>,
     /// Number of stages executed.
     pub stages: usize,
-    /// Minimum live throughput observed per service across every stage
-    /// boundary (the controller-transparency evidence, §6).
-    pub min_service_throughput: Vec<f64>,
+    /// Minimum live throughput observed across every stage boundary,
+    /// keyed by [`ServiceId`] (the controller-transparency evidence,
+    /// §6). Keyed — not positional — so disruption accounting cannot
+    /// misalign when the service set changes mid-simulation (simkit
+    /// onboarding/offboarding, Fig 13 reporting).
+    pub min_service_throughput: BTreeMap<ServiceId, f64>,
 }
 
 impl ExecReport {
@@ -35,6 +39,17 @@ impl ExecReport {
     }
     pub fn busy(&self, kind: ActionKind) -> f64 {
         self.busy_s.get(&kind).copied().unwrap_or(0.0)
+    }
+    /// Minimum live throughput observed for `svc`. Panics if the
+    /// service was never tracked by this execution — an untracked
+    /// service is a caller bug (wrong `n_services`), not a service
+    /// that "never dipped", and the transparency assertions must not
+    /// pass vacuously on it.
+    pub fn min_throughput(&self, svc: ServiceId) -> f64 {
+        match self.min_service_throughput.get(&svc) {
+            Some(&v) => v,
+            None => panic!("service {svc} was not tracked by this execution"),
+        }
     }
     /// "k8s time": pod lifecycle work (creation/deletion/migration).
     pub fn k8s_time(&self) -> f64 {
@@ -46,6 +61,25 @@ impl ExecReport {
     pub fn partition_time(&self) -> f64 {
         self.busy(ActionKind::Partition)
     }
+}
+
+/// A scheduled asynchronous execution of an action list: per-action
+/// completion instants from the §6 dependency analysis, computed
+/// *before* anything is applied. [`Executor::execute_async`] consumes
+/// it immediately; the simkit replays it on a virtual clock, applying
+/// each action at its completion instant so mid-transition capacity is
+/// visible to the control loop.
+#[derive(Debug, Clone, Default)]
+pub struct ActionSchedule {
+    /// `(completion_s, action index)`, sorted by completion time
+    /// (stable on ties = original sequential order).
+    pub entries: Vec<(f64, usize)>,
+    /// Total busy seconds per action kind.
+    pub busy_s: HashMap<ActionKind, f64>,
+    /// Action counts per kind.
+    pub counts: HashMap<ActionKind, usize>,
+    /// Completion instant of the last action (the plan's duration).
+    pub wallclock_s: f64,
 }
 
 /// The plan executor.
@@ -89,7 +123,7 @@ impl Executor {
         n_services: usize,
     ) -> Result<ExecReport, ClusterError> {
         let mut report = ExecReport {
-            min_service_throughput: vec![f64::INFINITY; n_services],
+            min_service_throughput: Self::infinite_minima(n_services),
             ..Default::default()
         };
         // Record the starting point too.
@@ -136,16 +170,38 @@ impl Executor {
         actions: &[Action],
         n_services: usize,
     ) -> Result<ExecReport, ClusterError> {
+        let schedule = self.schedule_async(state, actions);
         let mut report = ExecReport {
-            min_service_throughput: vec![f64::INFINITY; n_services],
+            min_service_throughput: Self::infinite_minima(n_services),
+            busy_s: schedule.busy_s.clone(),
+            counts: schedule.counts.clone(),
             ..Default::default()
         };
         Self::note_throughput(state, n_services, &mut report);
+        for &(end, i) in &schedule.entries {
+            Self::apply(state, &actions[i])?;
+            Self::note_throughput(state, n_services, &mut report);
+            report.wallclock_s = report.wallclock_s.max(end);
+        }
+        report.stages = schedule.entries.len();
+        Ok(report)
+    }
 
+    /// Compute the asynchronous completion schedule of `actions` against
+    /// `state` **without applying anything**: every action starts as
+    /// soon as (a) all its GPUs are free and (b) for a `DeletePod`, the
+    /// creations that replace its capacity have finished. Entries come
+    /// back sorted by completion instant (stable on ties = sequential
+    /// order; per-GPU chains keep strictly increasing end times, so
+    /// applying in entry order preserves state preconditions).
+    pub fn schedule_async(
+        &mut self,
+        state: &ClusterState,
+        actions: &[Action],
+    ) -> ActionSchedule {
+        let mut out = ActionSchedule::default();
         let mut gpu_free: HashMap<usize, f64> = HashMap::new();
         let mut create_done: HashMap<usize, f64> = HashMap::new();
-        // (end_time, seq, action index) — applied in completion order.
-        let mut schedule: Vec<(f64, usize)> = Vec::with_capacity(actions.len());
         for (i, a) in actions.iter().enumerate() {
             let kind = a.kind(|x, y| state.machine_of(x) == state.machine_of(y));
             let dur = self.latency.sample(kind, &mut self.rng);
@@ -165,26 +221,27 @@ impl Executor {
                 let e = create_done.entry(pod.service).or_insert(0.0);
                 *e = e.max(end);
             }
-            *report.busy_s.entry(kind).or_insert(0.0) += dur;
-            *report.counts.entry(kind).or_insert(0) += 1;
-            schedule.push((end, i));
+            *out.busy_s.entry(kind).or_insert(0.0) += dur;
+            *out.counts.entry(kind).or_insert(0) += 1;
+            out.wallclock_s = out.wallclock_s.max(end);
+            out.entries.push((end, i));
         }
-        // Apply in completion order (stable on ties = sequential order;
-        // per-GPU chains keep strictly increasing end times, so state
-        // preconditions hold).
-        schedule.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
-        for &(end, i) in &schedule {
-            Self::apply(state, &actions[i])?;
-            Self::note_throughput(state, n_services, &mut report);
-            report.wallclock_s = report.wallclock_s.max(end);
-        }
-        report.stages = schedule.len();
-        Ok(report)
+        out.entries
+            .sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        out
+    }
+
+    fn infinite_minima(n: usize) -> BTreeMap<ServiceId, f64> {
+        (0..n).map(|s| (s, f64::INFINITY)).collect()
     }
 
     fn note_throughput(state: &ClusterState, n: usize, report: &mut ExecReport) {
         let thr = state.service_throughputs(n);
-        for (m, t) in report.min_service_throughput.iter_mut().zip(thr) {
+        for (svc, t) in thr.into_iter().enumerate() {
+            let m = report
+                .min_service_throughput
+                .entry(svc)
+                .or_insert(f64::INFINITY);
             *m = m.min(t);
         }
     }
@@ -297,7 +354,8 @@ mod tests {
         }]];
         let report = ex.execute(&mut state, &mig, 1).unwrap();
         // Throughput at every stage boundary stayed at 80.
-        assert_eq!(report.min_service_throughput, vec![80.0]);
+        assert_eq!(report.min_throughput(0), 80.0);
+        assert_eq!(report.min_service_throughput.len(), 1);
         assert_eq!(state.pods_of_service(0).len(), 1);
         assert_eq!(state.pods_of_service(0)[0].0, 1); // now on gpu 1
         assert_eq!(report.count(ActionKind::RemoteMigration), 1);
@@ -313,6 +371,51 @@ mod tests {
             pod: pod(0, 1.0),
         }]];
         assert!(ex.execute(&mut state, &bad, 1).is_err());
+    }
+
+    #[test]
+    fn schedule_matches_async_execution() {
+        // schedule_async + apply-in-entry-order must agree with
+        // execute_async on timing, counts, and the end state.
+        let mut state = ClusterState::new(1, 3);
+        let actions = vec![
+            Action::Repartition {
+                gpu: 0,
+                remove: vec![],
+                add: vec![Placement::new(Two, 0)],
+            },
+            Action::Repartition {
+                gpu: 1,
+                remove: vec![],
+                add: vec![Placement::new(Two, 0)],
+            },
+            Action::CreatePod {
+                gpu: 0,
+                placement: Placement::new(Two, 0),
+                pod: pod(0, 40.0),
+            },
+            Action::CreatePod {
+                gpu: 1,
+                placement: Placement::new(Two, 0),
+                pod: pod(0, 40.0),
+            },
+        ];
+        let mut ex_a = Executor::new(11);
+        let mut ex_b = Executor::new(11);
+        let mut state_a = state.clone();
+        let rep = ex_a.execute_async(&mut state_a, &actions, 1).unwrap();
+        let sched = ex_b.schedule_async(&state, &actions);
+        assert_eq!(sched.entries.len(), actions.len());
+        assert_eq!(sched.wallclock_s, rep.wallclock_s);
+        assert_eq!(sched.counts, rep.counts);
+        for &(_, i) in &sched.entries {
+            Executor::apply(&mut state, &actions[i]).unwrap();
+        }
+        assert_eq!(state.service_throughputs(1), state_a.service_throughputs(1));
+        // Completion times are sorted.
+        for w in sched.entries.windows(2) {
+            assert!(w[0].0 <= w[1].0);
+        }
     }
 
     #[test]

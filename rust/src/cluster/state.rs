@@ -2,7 +2,7 @@
 
 use crate::mig::{rules, Partition, Placement};
 use crate::spec::ServiceId;
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 /// A model-serving pod bound to one GPU instance.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -66,6 +66,7 @@ impl GpuSim {
 #[derive(Debug)]
 pub enum ClusterError {
     NoSuchGpu(usize),
+    GpuOffline(usize),
     IllegalRepartition { gpu: usize, reason: String },
     NoSuchInstance { gpu: usize, placement: Placement },
     InstanceBusy { gpu: usize, placement: Placement },
@@ -77,6 +78,7 @@ impl std::fmt::Display for ClusterError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             ClusterError::NoSuchGpu(gpu) => write!(f, "gpu {gpu} out of range"),
+            ClusterError::GpuOffline(gpu) => write!(f, "gpu {gpu} is offline (failed)"),
             ClusterError::IllegalRepartition { gpu, reason } => {
                 write!(f, "gpu {gpu}: illegal repartition: {reason}")
             }
@@ -104,6 +106,10 @@ pub struct ClusterState {
     pub machines: usize,
     pub gpus_per_machine: usize,
     gpus: Vec<GpuSim>,
+    /// Failed GPUs: hold nothing, reject mutations, and are skipped by
+    /// slot search and the controller's config assignment until
+    /// repaired ([`ClusterState::set_online`]).
+    offline: BTreeSet<usize>,
 }
 
 impl ClusterState {
@@ -113,6 +119,7 @@ impl ClusterState {
             machines,
             gpus_per_machine,
             gpus: vec![GpuSim::default(); machines * gpus_per_machine],
+            offline: BTreeSet::new(),
         }
     }
 
@@ -133,6 +140,37 @@ impl ClusterState {
         self.machine_of(a) == self.machine_of(b)
     }
 
+    /// Is `gpu` currently failed?
+    pub fn is_offline(&self, gpu: usize) -> bool {
+        self.offline.contains(&gpu)
+    }
+
+    /// Number of GPUs not currently failed.
+    pub fn online_gpus(&self) -> usize {
+        self.gpus.len() - self.offline.len()
+    }
+
+    /// Take a GPU offline (hardware failure): every pod running on it is
+    /// lost and its partition is cleared. Returns the killed pods so the
+    /// caller can account the capacity drop. Idempotent.
+    pub fn set_offline(&mut self, gpu: usize) -> Result<Vec<Pod>, ClusterError> {
+        let g = self.gpus.get_mut(gpu).ok_or(ClusterError::NoSuchGpu(gpu))?;
+        let killed: Vec<Pod> = g.pods.values().copied().collect();
+        g.pods.clear();
+        g.partition_placements.clear();
+        self.offline.insert(gpu);
+        Ok(killed)
+    }
+
+    /// Bring a failed GPU back (repaired, empty). Idempotent.
+    pub fn set_online(&mut self, gpu: usize) -> Result<(), ClusterError> {
+        if gpu >= self.gpus.len() {
+            return Err(ClusterError::NoSuchGpu(gpu));
+        }
+        self.offline.remove(&gpu);
+        Ok(())
+    }
+
     /// Change GPU `gpu`'s partition: remove free instances `remove`, add
     /// instances `add`. Validated with the MIG rule engine; instances
     /// being removed must not host pods (partial reconfiguration leaves
@@ -143,6 +181,9 @@ impl ClusterState {
         remove: &[Placement],
         add: &[Placement],
     ) -> Result<(), ClusterError> {
+        if self.offline.contains(&gpu) {
+            return Err(ClusterError::GpuOffline(gpu));
+        }
         let g = self.gpus.get_mut(gpu).ok_or(ClusterError::NoSuchGpu(gpu))?;
         for r in remove {
             if g.pods.contains_key(r) {
@@ -164,6 +205,9 @@ impl ClusterState {
         placement: Placement,
         pod: Pod,
     ) -> Result<(), ClusterError> {
+        if self.offline.contains(&gpu) {
+            return Err(ClusterError::GpuOffline(gpu));
+        }
         let g = self.gpus.get_mut(gpu).ok_or(ClusterError::NoSuchGpu(gpu))?;
         if !g.partition_placements.contains(&placement) {
             return Err(ClusterError::NoSuchInstance { gpu, placement });
@@ -226,12 +270,18 @@ impl ClusterState {
         // (gpu, placement, needs_partition_change)
         let mut empty_fallback: Option<(usize, Placement, bool)> = None;
         for (gi, g) in self.gpus.iter().enumerate() {
+            if self.offline.contains(&gi) {
+                continue;
+            }
             // Existing free instance of the right size?
             if let Some(pl) = g.free_instance_of(size) {
                 return Some((gi, pl, false));
             }
         }
         for (gi, g) in self.gpus.iter().enumerate() {
+            if self.offline.contains(&gi) {
+                continue;
+            }
             if let Some(start) = g.partition().can_allocate(size) {
                 let pl = Placement::new(size, start);
                 if g.is_empty() {
@@ -357,6 +407,44 @@ mod tests {
         assert!(!c.gpu(0).is_fully_occupied());
         c.create_pod(0, Placement::new(Seven, 0), pod(0)).unwrap();
         assert!(c.gpu(0).is_fully_occupied());
+    }
+
+    #[test]
+    fn offline_gpu_loses_pods_and_rejects_work() {
+        let mut c = ClusterState::new(1, 2);
+        let pl = Placement::new(Two, 0);
+        c.repartition(0, &[], &[pl]).unwrap();
+        c.create_pod(0, pl, pod(0)).unwrap();
+        let killed = c.set_offline(0).unwrap();
+        assert_eq!(killed.len(), 1);
+        assert!(c.is_offline(0));
+        assert_eq!(c.online_gpus(), 1);
+        assert_eq!(c.service_throughputs(1), vec![0.0]);
+        assert!(c.gpu(0).is_empty());
+        // Mutations on the failed GPU are rejected...
+        assert!(matches!(
+            c.repartition(0, &[], &[pl]),
+            Err(ClusterError::GpuOffline(0))
+        ));
+        assert!(matches!(
+            c.create_pod(0, pl, pod(0)),
+            Err(ClusterError::GpuOffline(0))
+        ));
+        // ...and slot search skips it (only GPU 1 remains).
+        let (gpu, _, _) = c.find_slot(Two).unwrap();
+        assert_eq!(gpu, 1);
+        // Repair restores it.
+        c.set_online(0).unwrap();
+        assert!(!c.is_offline(0));
+        c.repartition(0, &[], &[pl]).unwrap();
+    }
+
+    #[test]
+    fn offline_whole_cluster_has_no_slots() {
+        let mut c = ClusterState::new(1, 1);
+        c.set_offline(0).unwrap();
+        assert!(c.find_slot(One).is_none());
+        assert_eq!(c.online_gpus(), 0);
     }
 
     #[test]

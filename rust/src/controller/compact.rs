@@ -81,7 +81,9 @@ pub fn assign_configs(
 ) -> anyhow::Result<Vec<(usize, usize)>> {
     let cfg_sigs: Vec<_> = target.gpus.iter().map(config_signature).collect();
     let mut unassigned_cfgs: Vec<usize> = (0..target.gpus.len()).collect();
-    let mut available_gpus: Vec<usize> = (0..state.num_gpus()).collect();
+    // Failed GPUs cannot receive a target config until repaired.
+    let mut available_gpus: Vec<usize> =
+        (0..state.num_gpus()).filter(|&g| !state.is_offline(g)).collect();
     let mut assignment: Vec<(usize, usize)> = Vec::new(); // (cfg, gpu)
     while !unassigned_cfgs.is_empty() {
         let mut best: Option<(usize, usize, usize)> = None; // (overlap, cfg, gpu)

@@ -54,7 +54,7 @@ pub(crate) fn allocate_slot(
     let mut choice: Option<(usize, Placement, bool)> = None;
     let mut best_key = (usize::MAX, usize::MAX, usize::MAX);
     for gi in 0..state.num_gpus() {
-        if forbidden.contains(&gi) {
+        if forbidden.contains(&gi) || state.is_offline(gi) {
             continue;
         }
         let g = state.gpu(gi);
@@ -96,6 +96,9 @@ fn hinted_slot(
     actions: &mut Vec<Action>,
 ) -> Option<(usize, Placement)> {
     for gi in 0..state.num_gpus() {
+        if state.is_offline(gi) {
+            continue;
+        }
         let need = hints[gi].get(&(size, service)).copied().unwrap_or(0);
         if need == 0 {
             continue;

@@ -158,9 +158,9 @@ mod tests {
             night.services.iter().map(|s| s.slo.throughput).collect();
         for (i, req) in night_req.iter().enumerate() {
             assert!(
-                o2.report.min_service_throughput[i] >= req - 1e-6,
+                o2.report.min_throughput(i) >= req - 1e-6,
                 "svc {i}: min thr {} < night req {req}",
-                o2.report.min_service_throughput[i]
+                o2.report.min_throughput(i)
             );
         }
         assert_eq!(cluster.used_gpus().len(), night_dep.num_gpus());
@@ -177,7 +177,7 @@ mod tests {
         );
         for (i, s) in day.services.iter().enumerate() {
             let min_req = s.slo.throughput.min(night_req[i]);
-            assert!(o3.report.min_service_throughput[i] >= min_req - 1e-6);
+            assert!(o3.report.min_throughput(i) >= min_req - 1e-6);
         }
         assert_eq!(cluster.used_gpus().len(), day_dep.num_gpus());
     }
@@ -203,6 +203,39 @@ mod tests {
         assert_eq!(o.report.count(Deletion), 0);
         assert_eq!(o.report.count(LocalMigration), 0);
         assert_eq!(o.report.count(RemoteMigration), 0);
+    }
+
+    #[test]
+    fn replan_routes_around_failed_gpu() {
+        // Bring a deployment up, fail a hosting GPU (pods lost), then
+        // transition to the same target again: the controller must
+        // rebuild the lost capacity on healthy GPUs only.
+        let bank = ProfileBank::synthetic();
+        let w = Workload::new(
+            "failover",
+            vec![
+                ("resnet50".to_string(), Slo::new(150.0, 300.0)),
+                ("bert-base-uncased".to_string(), Slo::new(150.0, 300.0)),
+            ],
+        );
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let dep = Greedy::new().solve(&ctx).unwrap();
+        let mut cluster = ClusterState::new(2, 8);
+        let controller = Controller::new(w.len());
+        let mut ex = Executor::new(13);
+        controller.transition(&mut cluster, &dep, &mut ex).unwrap();
+        let used = cluster.used_gpus();
+        let victim = used[0];
+        cluster.set_offline(victim).unwrap();
+        controller.transition(&mut cluster, &dep, &mut ex).unwrap();
+        assert!(cluster.gpu(victim).is_empty(), "failed GPU must stay empty");
+        assert_eq!(cluster.used_gpus().len(), dep.num_gpus());
+        assert!(!cluster.used_gpus().contains(&victim));
+        // Full capacity restored.
+        let thr = cluster.service_throughputs(w.len());
+        for (i, s) in w.services.iter().enumerate() {
+            assert!(thr[i] >= s.slo.throughput - 1e-6, "svc {i}: {thr:?}");
+        }
     }
 
     #[test]

@@ -10,8 +10,10 @@
 //!   greedy + customized MCTS + tailored GA, [`optimizer`]), the
 //!   controller with the exchange-and-compact transition algorithm
 //!   ([`controller`]), a simulated A100/Kubernetes cluster substrate
-//!   ([`cluster`]), and a real serving runtime ([`serving`], [`runtime`])
-//!   that executes AOT-compiled model artifacts through PJRT.
+//!   ([`cluster`]), a trace-driven discrete-event simulation of the
+//!   full closed loop over simulated days ([`simkit`]), and a real
+//!   serving runtime ([`serving`], [`runtime`]) that executes
+//!   AOT-compiled model artifacts through PJRT.
 //! * **Layer 2 (python/compile/model.py)** — JAX forward passes of the
 //!   served models, lowered once to HLO text by `make artifacts`.
 //! * **Layer 1 (python/compile/kernels/)** — Pallas kernels (tiled
@@ -38,6 +40,8 @@ pub mod serving;
 
 pub mod workload;
 pub mod baselines;
+
+pub mod simkit;
 
 pub mod bench;
 

@@ -4,6 +4,9 @@
 //!
 //! * `optimize`   — run the optimizer on a workload, print the deployment;
 //! * `transition` — plan + simulate a deployment transition;
+//! * `simulate`   — trace-driven day-scale simulation of the online
+//!                  replan→transition control loop vs. a static-peak
+//!                  baseline (simkit);
 //! * `serve`      — deploy on the PJRT runtime and drive load;
 //! * `study`      — the §2.2 model study (Fig 3/Fig 4 tables);
 //! * `lower-bound`— the rule-free GPU lower bound for a workload;
@@ -43,6 +46,16 @@ fn app() -> App {
                 .opt("machines", "3", "cluster machines")
                 .opt("gpus-per-machine", "8", "GPUs per machine")
                 .opt("seed", "42", "latency-model seed"),
+            Command::new("simulate", "trace-driven cluster simulation with the online replan loop")
+                .opt("scenario", "diurnal", "diurnal|spike|gpu-failure|onboard")
+                .opt("policy", "threshold", "periodic|threshold|hysteresis")
+                .opt("tick", "60", "control-loop sampling interval, virtual seconds")
+                .opt("seed", "42", "simulation seed (reports are bit-replayable from it)")
+                .opt("ga-rounds", "0", "GA rounds per replan (0 = fast algorithm only)")
+                .opt("threads", "0", "worker threads for replans (0 = all cores; the report is identical at any value)")
+                .opt("json", "", "write the control-vs-baseline report JSON to this path")
+                .flag("quick", "coarse tick (300s) — the CI smoke configuration")
+                .flag("verbose", "print the full event log"),
             Command::new("serve", "deploy on the PJRT runtime and measure throughput")
                 .opt("workload", "night", "daytime|night (scaled real-world)")
                 .opt("scale", "1.0", "workload scale multiplier")
@@ -182,6 +195,74 @@ fn cmd_transition(args: &mig_serving::util::cli::Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_simulate(args: &mig_serving::util::cli::Args) -> anyhow::Result<()> {
+    use mig_serving::simkit::{scenario, ReplanPolicy, SimConfig, Simulation, SCENARIOS};
+
+    let bank = ProfileBank::synthetic();
+    let name = args.get("scenario").unwrap();
+    anyhow::ensure!(
+        SCENARIOS.contains(&name),
+        "unknown scenario {name:?} (expected one of {SCENARIOS:?})"
+    );
+    let trace = scenario(&bank, name);
+
+    // `--quick` IS `SimConfig::quick()` (the CI smoke configuration);
+    // otherwise `--tick` overrides the default cadence.
+    let mut cfg =
+        if args.flag("quick") { SimConfig::quick() } else { SimConfig::default() };
+    if !args.flag("quick") {
+        cfg.tick_s = args.get_f64("tick").unwrap_or(cfg.tick_s);
+    }
+    cfg.policy = match args.get("policy").unwrap() {
+        "periodic" => ReplanPolicy::Periodic { interval_s: 1800.0 },
+        "threshold" => ReplanPolicy::Threshold { scale_down_ratio: 0.7 },
+        "hysteresis" => ReplanPolicy::Hysteresis {
+            scale_down_ratio: 0.7,
+            hold_s: 2.0 * cfg.tick_s,
+        },
+        other => anyhow::bail!("unknown policy {other:?}"),
+    };
+    let threads = args.get_usize("threads").unwrap_or(0);
+    cfg.seed = args.get_u64("seed").unwrap_or(42);
+    cfg.budget = PipelineBudget {
+        ga_rounds: args.get_usize("ga-rounds").unwrap_or(0),
+        parallelism: (threads > 0).then_some(threads),
+        ..Default::default()
+    };
+    println!(
+        "scenario={} horizon={:.1}h tick={}s policy={} seed={}",
+        trace.name,
+        trace.horizon_s / 3600.0,
+        cfg.tick_s,
+        cfg.policy.label(),
+        cfg.seed
+    );
+    let sim = Simulation::new(&bank, &trace, cfg);
+    let cmp = sim.run_with_baseline()?;
+
+    println!("\ncontrol loop — per service:\n{}", cmp.control.summary_table());
+    println!("static-peak baseline — per service:\n{}", cmp.baseline.summary_table());
+    println!("comparison:\n{}", cmp.table());
+    println!(
+        "GPU-hours saved by the control loop: {:.1} ({} replans, {:.1}s in transitions)",
+        cmp.gpu_hours_saved(),
+        cmp.control.replans,
+        cmp.control.transition_seconds()
+    );
+    if args.flag("verbose") {
+        println!("\nevent log:");
+        for line in &cmp.control.event_log {
+            println!("  {line}");
+        }
+    }
+    let out = args.get("json").unwrap();
+    if !out.is_empty() {
+        std::fs::write(out, cmp.to_json().to_pretty() + "\n")?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
 fn cmd_serve(args: &mig_serving::util::cli::Args) -> anyhow::Result<()> {
     let Some(manifest) = mig_serving::bench::require_artifacts() else {
         return Ok(());
@@ -210,7 +291,9 @@ fn cmd_serve(args: &mig_serving::util::cli::Args) -> anyhow::Result<()> {
         conc,
         std::time::Duration::from_secs(secs),
     );
-    let mut t = Table::new(&["service", "required", "achieved", "satisfaction", "p90 ms"]);
+    let mut t = Table::new(&[
+        "service", "required", "achieved", "satisfaction", "p90 ms", "p99 ms",
+    ]);
     for r in &reports {
         let req = w.services[r.service].slo.throughput;
         t.row(vec![
@@ -219,6 +302,7 @@ fn cmd_serve(args: &mig_serving::util::cli::Args) -> anyhow::Result<()> {
             fmt_f(r.achieved_throughput, 1),
             mig_serving::util::table::pct(r.achieved_throughput / req, 1),
             fmt_f(r.p90_ms, 0),
+            fmt_f(r.p99_ms, 0),
         ]);
     }
     println!("{}", t.render());
@@ -289,6 +373,7 @@ fn main() {
     let result = match cmd.name {
         "optimize" => cmd_optimize(&args),
         "transition" => cmd_transition(&args),
+        "simulate" => cmd_simulate(&args),
         "serve" => cmd_serve(&args),
         "study" => cmd_study(),
         "lower-bound" => cmd_lower_bound(&args),

@@ -22,6 +22,10 @@ pub struct LoadReport {
     pub errors: u64,
     pub p50_ms: f64,
     pub p90_ms: f64,
+    /// Tail latency from the same `util::stats::Histogram` the p50/p90
+    /// figures come from (the SLO is p90, but the p99 tail is what
+    /// pages people).
+    pub p99_ms: f64,
     pub duration: Duration,
 }
 
@@ -90,6 +94,7 @@ impl LoadGen {
                     errors: m.errors() - e0,
                     p50_ms: m.latency_percentile(50.0),
                     p90_ms: m.latency_percentile(90.0),
+                    p99_ms: m.latency_percentile(99.0),
                     duration: elapsed,
                 }
             })
@@ -150,6 +155,7 @@ impl LoadGen {
                     errors: m.errors() - e0,
                     p50_ms: m.latency_percentile(50.0),
                     p90_ms: m.latency_percentile(90.0),
+                    p99_ms: m.latency_percentile(99.0),
                     duration: elapsed,
                 }
             })
@@ -194,6 +200,7 @@ impl LoadGen {
             errors: m.errors() - e0,
             p50_ms: m.latency_percentile(50.0),
             p90_ms: m.latency_percentile(90.0),
+            p99_ms: m.latency_percentile(99.0),
             duration: elapsed,
         }
     }

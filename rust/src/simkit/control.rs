@@ -1,0 +1,193 @@
+//! The online control loop: when to replan.
+//!
+//! Every control tick the loop compares live per-service capacity
+//! against traced demand and decides — under a configurable policy —
+//! whether to run the optimizer and transition the cluster. Decisions
+//! are pure functions of `(policy state, t, demand, capacity)`, so the
+//! loop is as deterministic as the trace feeding it.
+
+use super::trace::MIN_ACTIVE_RATE;
+
+/// Replan policies (§8's day/night switch, generalized).
+#[derive(Debug, Clone)]
+pub enum ReplanPolicy {
+    /// Replan once at bring-up, then never again — the static baseline.
+    Never,
+    /// Replan on a fixed schedule regardless of demand.
+    Periodic { interval_s: f64 },
+    /// Replan immediately on a capacity deficit, and scale down when
+    /// demand falls below `scale_down_ratio` of what was provisioned.
+    Threshold { scale_down_ratio: f64 },
+    /// Like `Threshold`, but the condition must persist for `hold_s`
+    /// seconds before acting — flash noise does not thrash the cluster.
+    Hysteresis { scale_down_ratio: f64, hold_s: f64 },
+}
+
+impl ReplanPolicy {
+    /// Short label for reports.
+    pub fn label(&self) -> &'static str {
+        match self {
+            ReplanPolicy::Never => "never",
+            ReplanPolicy::Periodic { .. } => "periodic",
+            ReplanPolicy::Threshold { .. } => "threshold",
+            ReplanPolicy::Hysteresis { .. } => "hysteresis",
+        }
+    }
+}
+
+/// The control loop's mutable state.
+#[derive(Debug, Clone)]
+pub struct ControlLoop {
+    pub policy: ReplanPolicy,
+    last_replan_s: Option<f64>,
+    breach_since: Option<f64>,
+    /// Demand levels (req/s per service) capacity was last planned for.
+    provisioned: Vec<f64>,
+}
+
+impl ControlLoop {
+    pub fn new(policy: ReplanPolicy, n_services: usize) -> ControlLoop {
+        ControlLoop {
+            policy,
+            last_replan_s: None,
+            breach_since: None,
+            provisioned: vec![0.0; n_services],
+        }
+    }
+
+    /// The demand levels the loop last provisioned for.
+    pub fn provisioned(&self) -> &[f64] {
+        &self.provisioned
+    }
+
+    /// Should we replan now? Returns the reason, or `None` to hold.
+    pub fn decide(&mut self, t_s: f64, demand: &[f64], capacity: &[f64]) -> Option<&'static str> {
+        // Initial bring-up happens under every policy.
+        if self.last_replan_s.is_none() {
+            return Some("bring-up");
+        }
+        match self.policy {
+            ReplanPolicy::Never => None,
+            ReplanPolicy::Periodic { interval_s } => {
+                (t_s - self.last_replan_s.unwrap() >= interval_s - 1e-9)
+                    .then_some("periodic")
+            }
+            ReplanPolicy::Threshold { scale_down_ratio } => {
+                self.condition(demand, capacity, scale_down_ratio)
+            }
+            ReplanPolicy::Hysteresis { scale_down_ratio, hold_s } => {
+                match self.condition(demand, capacity, scale_down_ratio) {
+                    Some(reason) => {
+                        let since = *self.breach_since.get_or_insert(t_s);
+                        (t_s - since >= hold_s - 1e-9).then_some(reason)
+                    }
+                    None => {
+                        self.breach_since = None;
+                        None
+                    }
+                }
+            }
+        }
+    }
+
+    /// Deficit / scale-down condition shared by Threshold and
+    /// Hysteresis.
+    fn condition(
+        &self,
+        demand: &[f64],
+        capacity: &[f64],
+        scale_down_ratio: f64,
+    ) -> Option<&'static str> {
+        let deficit = demand
+            .iter()
+            .zip(capacity)
+            .any(|(&d, &c)| d > MIN_ACTIVE_RATE && c + 1e-6 < d);
+        if deficit {
+            return Some("deficit");
+        }
+        let shrink = self
+            .provisioned
+            .iter()
+            .zip(demand)
+            .any(|(&p, &d)| p > MIN_ACTIVE_RATE && d < scale_down_ratio * p);
+        shrink.then_some("scale-down")
+    }
+
+    /// Record that a replan was issued at `t_s` for `provisioned`
+    /// demand levels (req/s per service, margin included).
+    pub fn note_replanned(&mut self, t_s: f64, provisioned: Vec<f64>) {
+        assert_eq!(provisioned.len(), self.provisioned.len());
+        self.last_replan_s = Some(t_s);
+        self.breach_since = None;
+        self.provisioned = provisioned;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_policy_brings_up_first() {
+        for policy in [
+            ReplanPolicy::Never,
+            ReplanPolicy::Periodic { interval_s: 100.0 },
+            ReplanPolicy::Threshold { scale_down_ratio: 0.7 },
+            ReplanPolicy::Hysteresis { scale_down_ratio: 0.7, hold_s: 60.0 },
+        ] {
+            let mut c = ControlLoop::new(policy, 1);
+            assert_eq!(c.decide(0.0, &[10.0], &[0.0]), Some("bring-up"));
+        }
+    }
+
+    #[test]
+    fn never_holds_after_bring_up() {
+        let mut c = ControlLoop::new(ReplanPolicy::Never, 1);
+        c.note_replanned(0.0, vec![10.0]);
+        assert_eq!(c.decide(100.0, &[99.0], &[0.0]), None);
+    }
+
+    #[test]
+    fn periodic_fires_on_schedule_only() {
+        let mut c = ControlLoop::new(ReplanPolicy::Periodic { interval_s: 100.0 }, 1);
+        c.note_replanned(0.0, vec![10.0]);
+        assert_eq!(c.decide(50.0, &[50.0], &[0.0]), None); // deficit ignored
+        assert_eq!(c.decide(100.0, &[10.0], &[20.0]), Some("periodic"));
+        c.note_replanned(100.0, vec![10.0]);
+        assert_eq!(c.decide(150.0, &[10.0], &[20.0]), None);
+    }
+
+    #[test]
+    fn threshold_reacts_to_deficit_and_shrink() {
+        let mut c = ControlLoop::new(ReplanPolicy::Threshold { scale_down_ratio: 0.7 }, 2);
+        c.note_replanned(0.0, vec![100.0, 100.0]);
+        // Healthy: capacity covers demand, demand near provisioned.
+        assert_eq!(c.decide(10.0, &[90.0, 95.0], &[100.0, 100.0]), None);
+        // Deficit on service 1.
+        assert_eq!(c.decide(20.0, &[90.0, 120.0], &[100.0, 100.0]), Some("deficit"));
+        // Demand collapsed on service 0 → scale down.
+        assert_eq!(c.decide(30.0, &[40.0, 95.0], &[100.0, 100.0]), Some("scale-down"));
+        // A service that was never provisioned does not trigger shrink.
+        c.note_replanned(40.0, vec![0.0, 100.0]);
+        assert_eq!(c.decide(50.0, &[0.0, 95.0], &[0.0, 100.0]), None);
+    }
+
+    #[test]
+    fn hysteresis_requires_persistence() {
+        let mut c = ControlLoop::new(
+            ReplanPolicy::Hysteresis { scale_down_ratio: 0.7, hold_s: 100.0 },
+            1,
+        );
+        c.note_replanned(0.0, vec![100.0]);
+        // Breach starts at t=10 but must hold 100 s.
+        assert_eq!(c.decide(10.0, &[150.0], &[100.0]), None);
+        assert_eq!(c.decide(60.0, &[150.0], &[100.0]), None);
+        assert_eq!(c.decide(110.0, &[150.0], &[100.0]), Some("deficit"));
+        // A recovery in between resets the clock.
+        c.note_replanned(110.0, vec![150.0]);
+        assert_eq!(c.decide(120.0, &[200.0], &[150.0]), None);
+        assert_eq!(c.decide(130.0, &[140.0], &[150.0]), None); // healthy again
+        assert_eq!(c.decide(140.0, &[200.0], &[150.0]), None); // clock restarted
+        assert_eq!(c.decide(250.0, &[200.0], &[150.0]), Some("deficit"));
+    }
+}

@@ -1,0 +1,144 @@
+//! The discrete-event kernel: a virtual clock plus a binary-heap event
+//! queue.
+//!
+//! Determinism contract: events pop ordered by `(time, insertion seq)`
+//! — ties break FIFO on insertion order, never on heap internals or
+//! float identity games — so a simulation driven purely by this queue
+//! and a seeded [`crate::util::rng::Rng`] replays bit-identically.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// What can happen in a simulation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    /// Control-loop sampling tick: observe demand vs. capacity, maybe
+    /// trigger a replan.
+    ControlTick,
+    /// Completion instant of action `idx` of transition `transition`:
+    /// the action is applied to the cluster *now*, so capacity is
+    /// degraded/restored exactly as the executor's schedule dictates.
+    ApplyAction { transition: usize, idx: usize },
+    /// Transition `transition` has fully completed.
+    TransitionDone { transition: usize },
+    /// Trace GPU event `idx` (failure or repair) fires.
+    Gpu { idx: usize },
+    /// End of the simulated horizon.
+    Horizon,
+}
+
+/// An event scheduled at a virtual instant.
+#[derive(Debug, Clone)]
+pub struct Scheduled {
+    /// Virtual time, seconds since simulation start.
+    pub at_s: f64,
+    /// Insertion sequence number (FIFO tie-break).
+    pub seq: u64,
+    pub event: Event,
+}
+
+impl PartialEq for Scheduled {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for Scheduled {}
+impl PartialOrd for Scheduled {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Scheduled {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed on purpose: `BinaryHeap` is a max-heap and we want
+        // the *earliest* (time, seq) at the top.
+        other
+            .at_s
+            .total_cmp(&self.at_s)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// The event queue: push at any future instant, pop in time order.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Scheduled>,
+    seq: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> EventQueue {
+        EventQueue::default()
+    }
+
+    /// Schedule `event` at virtual time `at_s`.
+    pub fn push(&mut self, at_s: f64, event: Event) {
+        assert!(at_s.is_finite(), "event scheduled at non-finite time");
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Scheduled { at_s, seq, event });
+    }
+
+    /// Pop the earliest event (FIFO among same-instant events).
+    pub fn pop(&mut self) -> Option<Scheduled> {
+        self.heap.pop()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(5.0, Event::Horizon);
+        q.push(1.0, Event::ControlTick);
+        q.push(3.0, Event::Gpu { idx: 0 });
+        let times: Vec<f64> = std::iter::from_fn(|| q.pop().map(|e| e.at_s)).collect();
+        assert_eq!(times, vec![1.0, 3.0, 5.0]);
+    }
+
+    #[test]
+    fn same_instant_is_fifo() {
+        let mut q = EventQueue::new();
+        for i in 0..10 {
+            q.push(7.0, Event::ApplyAction { transition: 0, idx: i });
+        }
+        let idxs: Vec<usize> = std::iter::from_fn(|| {
+            q.pop().map(|e| match e.event {
+                Event::ApplyAction { idx, .. } => idx,
+                _ => unreachable!(),
+            })
+        })
+        .collect();
+        assert_eq!(idxs, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn interleaved_push_pop() {
+        let mut q = EventQueue::new();
+        q.push(10.0, Event::Horizon);
+        q.push(2.0, Event::ControlTick);
+        assert_eq!(q.pop().unwrap().at_s, 2.0);
+        q.push(4.0, Event::ControlTick);
+        assert_eq!(q.pop().unwrap().at_s, 4.0);
+        assert_eq!(q.pop().unwrap().at_s, 10.0);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite")]
+    fn rejects_nan_time() {
+        let mut q = EventQueue::new();
+        q.push(f64::NAN, Event::Horizon);
+    }
+}

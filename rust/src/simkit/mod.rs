@@ -1,0 +1,44 @@
+//! `simkit` — trace-driven discrete-event cluster simulation with an
+//! online replan→transition control loop.
+//!
+//! PRs 1–2 made the optimizer fast, incremental, and parallel, but
+//! every entry point still solved a single static snapshot. The
+//! paper's headline scenario is *dynamic*: demand shifts (day→night,
+//! §7–§8, Fig 13–14) and MIG-serving reconfigures the running cluster
+//! while bounding disruption. This subsystem runs time forward:
+//!
+//! * [`event`] — the deterministic discrete-event kernel: virtual
+//!   clock + binary-heap event queue with FIFO tie-breaking;
+//! * [`trace`] — time-varying per-service demand (continuous diurnal
+//!   curves, steps, flash-crowd spikes) plus GPU failure/repair and
+//!   service onboarding/offboarding;
+//! * [`scenario`] — the named scenario library ([`SCENARIOS`]);
+//! * [`control`] — the online control loop: periodic / threshold /
+//!   hysteresis replan policies over demand vs. live capacity;
+//! * [`sim`] — the driver: replans through the shared
+//!   [`crate::optimizer::OptimizerPipeline`], plans transitions with
+//!   the §6 controller, and replays the executor's asynchronous action
+//!   schedule on the virtual clock so capacity is degraded
+//!   mid-transition exactly as the stages dictate;
+//! * [`report`] — [`SimReport`]: per-service SLO-attainment timeline,
+//!   unmet-demand integral, GPU-hours, replan counts/durations, and
+//!   the transition-time breakdown, plus the control-loop vs.
+//!   static-peak [`SimComparison`].
+//!
+//! Determinism: a fixed seed produces a byte-identical event log and
+//! `SimReport` at any optimizer `parallelism` (asserted in
+//! `tests/simkit_sim.rs`); see `DESIGN.md` §3.
+
+pub mod control;
+pub mod event;
+pub mod report;
+pub mod scenario;
+pub mod sim;
+pub mod trace;
+
+pub use control::{ControlLoop, ReplanPolicy};
+pub use event::{Event, EventQueue};
+pub use report::{ServiceTimeline, SimComparison, SimReport, TransitionRecord};
+pub use scenario::{scenario, SCENARIOS};
+pub use sim::{SimConfig, Simulation};
+pub use trace::{DemandShape, GpuEvent, GpuEventKind, ServiceTrace, Trace};

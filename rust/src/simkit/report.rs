@@ -1,0 +1,340 @@
+//! Simulation output: the [`SimReport`] and the control-loop vs.
+//! static-peak [`SimComparison`].
+//!
+//! Everything here is a pure function of the simulation's deterministic
+//! state, and the JSON serialization is byte-stable — the determinism
+//! tests compare whole serialized reports across thread counts.
+
+use std::collections::BTreeMap;
+
+use crate::spec::ServiceId;
+use crate::util::json::Value;
+use crate::util::table::{f as fmt_f, pct, Table};
+
+/// One service's sampled timeline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServiceTimeline {
+    pub service: ServiceId,
+    pub model: String,
+    /// `(t_s, demand req/s, live capacity req/s)` at every control tick.
+    pub samples: Vec<(f64, f64, f64)>,
+}
+
+/// One executed (or aborted) transition.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TransitionRecord {
+    /// When the replan was issued (virtual seconds).
+    pub start_s: f64,
+    /// Modeled algorithm latency + executor wall-clock (virtual s);
+    /// for aborted transitions, the elapsed time until the abort.
+    pub duration_s: f64,
+    pub actions: usize,
+    /// Why the control loop replanned ("bring-up", "deficit", ...).
+    pub reason: String,
+    /// Aborted mid-flight (GPU failure): remaining actions dropped.
+    pub aborted: bool,
+    /// Minimum live throughput per service while the transition ran —
+    /// keyed by [`ServiceId`] so mid-simulation service-set changes
+    /// cannot misalign the disruption accounting.
+    pub min_throughput: BTreeMap<ServiceId, f64>,
+}
+
+/// End-to-end metrics of one simulation run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimReport {
+    pub scenario: String,
+    pub policy: String,
+    pub horizon_s: f64,
+    pub seed: u64,
+    pub timelines: Vec<ServiceTimeline>,
+    /// Fraction of active sampled ticks where capacity met demand, per
+    /// service (1.0 for services never active).
+    pub slo_attainment: Vec<f64>,
+    /// ∫ max(0, demand − capacity) dt per service — missed requests.
+    pub unmet_demand_reqs: Vec<f64>,
+    /// ∫ demand dt per service — total offered requests.
+    pub total_demand_reqs: Vec<f64>,
+    /// ∫ (GPUs in use) dt / 3600 — the provisioning cost.
+    pub gpu_hours: f64,
+    /// Replans that produced a transition (or a no-op target).
+    pub replans: usize,
+    /// Replans the optimizer/controller failed (retried next tick).
+    pub failed_replans: usize,
+    pub transitions: Vec<TransitionRecord>,
+    /// Busy seconds per action kind across all transitions.
+    pub busy_s: BTreeMap<String, f64>,
+    /// Action counts per kind across all transitions.
+    pub action_counts: BTreeMap<String, usize>,
+    pub events_processed: usize,
+    /// Human-readable deterministic event log (one line per event of
+    /// note); byte-identical across thread counts for a fixed seed.
+    pub event_log: Vec<String>,
+}
+
+impl SimReport {
+    /// Demand-weighted SLO attainment over the whole run:
+    /// `1 − Σ unmet / Σ demand`.
+    pub fn overall_attainment(&self) -> f64 {
+        let total: f64 = self.total_demand_reqs.iter().sum();
+        if total <= 0.0 {
+            return 1.0;
+        }
+        let unmet: f64 = self.unmet_demand_reqs.iter().sum();
+        (1.0 - unmet / total).max(0.0)
+    }
+
+    /// Summed virtual time spent in transitions (reconfiguration cost).
+    pub fn transition_seconds(&self) -> f64 {
+        self.transitions.iter().map(|t| t.duration_s).sum()
+    }
+
+    pub fn to_json(&self) -> Value {
+        let timelines = Value::Arr(
+            self.timelines
+                .iter()
+                .map(|tl| {
+                    Value::obj(vec![
+                        ("service", Value::from(tl.service)),
+                        ("model", Value::from(tl.model.clone())),
+                        (
+                            "samples",
+                            Value::Arr(
+                                tl.samples
+                                    .iter()
+                                    .map(|&(t, d, c)| {
+                                        Value::Arr(vec![
+                                            Value::Num(t),
+                                            Value::Num(d),
+                                            Value::Num(c),
+                                        ])
+                                    })
+                                    .collect(),
+                            ),
+                        ),
+                    ])
+                })
+                .collect(),
+        );
+        let transitions = Value::Arr(
+            self.transitions
+                .iter()
+                .map(|t| {
+                    Value::obj(vec![
+                        ("start_s", Value::Num(t.start_s)),
+                        ("duration_s", Value::Num(t.duration_s)),
+                        ("actions", Value::from(t.actions)),
+                        ("reason", Value::from(t.reason.clone())),
+                        ("aborted", Value::Bool(t.aborted)),
+                        (
+                            "min_throughput",
+                            Value::Obj(
+                                t.min_throughput
+                                    .iter()
+                                    .map(|(&s, &v)| (s.to_string(), Value::Num(v)))
+                                    .collect(),
+                            ),
+                        ),
+                    ])
+                })
+                .collect(),
+        );
+        Value::obj(vec![
+            ("scenario", Value::from(self.scenario.clone())),
+            ("policy", Value::from(self.policy.clone())),
+            ("horizon_s", Value::Num(self.horizon_s)),
+            ("seed", Value::Num(self.seed as f64)),
+            ("overall_attainment", Value::Num(self.overall_attainment())),
+            (
+                "slo_attainment",
+                Value::Arr(self.slo_attainment.iter().map(|&x| Value::Num(x)).collect()),
+            ),
+            (
+                "unmet_demand_reqs",
+                Value::Arr(
+                    self.unmet_demand_reqs.iter().map(|&x| Value::Num(x)).collect(),
+                ),
+            ),
+            (
+                "total_demand_reqs",
+                Value::Arr(
+                    self.total_demand_reqs.iter().map(|&x| Value::Num(x)).collect(),
+                ),
+            ),
+            ("gpu_hours", Value::Num(self.gpu_hours)),
+            ("replans", Value::from(self.replans)),
+            ("failed_replans", Value::from(self.failed_replans)),
+            ("transition_seconds", Value::Num(self.transition_seconds())),
+            (
+                "busy_s",
+                Value::Obj(
+                    self.busy_s
+                        .iter()
+                        .map(|(k, &v)| (k.clone(), Value::Num(v)))
+                        .collect(),
+                ),
+            ),
+            (
+                "action_counts",
+                Value::Obj(
+                    self.action_counts
+                        .iter()
+                        .map(|(k, &v)| (k.clone(), Value::from(v)))
+                        .collect(),
+                ),
+            ),
+            ("events_processed", Value::from(self.events_processed)),
+            ("timelines", timelines),
+            ("transitions", transitions),
+            (
+                "event_log",
+                Value::Arr(
+                    self.event_log.iter().map(|l| Value::from(l.clone())).collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Per-service summary table.
+    pub fn summary_table(&self) -> String {
+        let mut t = Table::new(&[
+            "service",
+            "peak req/s",
+            "attainment",
+            "unmet reqs",
+            "offered reqs",
+        ]);
+        for (i, tl) in self.timelines.iter().enumerate() {
+            let peak = tl
+                .samples
+                .iter()
+                .map(|&(_, d, _)| d)
+                .fold(0.0f64, f64::max);
+            t.row(vec![
+                tl.model.clone(),
+                fmt_f(peak, 1),
+                pct(self.slo_attainment[i], 1),
+                fmt_f(self.unmet_demand_reqs[i], 0),
+                fmt_f(self.total_demand_reqs[i], 0),
+            ]);
+        }
+        t.render()
+    }
+}
+
+/// The control loop measured against a static-peak-provisioned baseline
+/// on the same trace — the paper's "A100 as-is" comparison extended
+/// from one instant to a whole day.
+#[derive(Debug, Clone)]
+pub struct SimComparison {
+    pub control: SimReport,
+    pub baseline: SimReport,
+}
+
+impl SimComparison {
+    /// GPU-hours the control loop saved vs. static peak provisioning.
+    pub fn gpu_hours_saved(&self) -> f64 {
+        self.baseline.gpu_hours - self.control.gpu_hours
+    }
+
+    pub fn table(&self) -> String {
+        let mut t = Table::new(&["metric", "control loop", "static peak"]);
+        t.row(vec![
+            "GPU-hours".into(),
+            fmt_f(self.control.gpu_hours, 1),
+            fmt_f(self.baseline.gpu_hours, 1),
+        ]);
+        t.row(vec![
+            "overall SLO attainment".into(),
+            pct(self.control.overall_attainment(), 2),
+            pct(self.baseline.overall_attainment(), 2),
+        ]);
+        t.row(vec![
+            "replans".into(),
+            self.control.replans.to_string(),
+            self.baseline.replans.to_string(),
+        ]);
+        t.row(vec![
+            "transition time (s)".into(),
+            fmt_f(self.control.transition_seconds(), 1),
+            fmt_f(self.baseline.transition_seconds(), 1),
+        ]);
+        t.render()
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("control", self.control.to_json()),
+            ("baseline", self.baseline.to_json()),
+            ("gpu_hours_saved", Value::Num(self.gpu_hours_saved())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_report() -> SimReport {
+        SimReport {
+            scenario: "t".into(),
+            policy: "threshold".into(),
+            horizon_s: 100.0,
+            seed: 1,
+            timelines: vec![ServiceTimeline {
+                service: 0,
+                model: "m".into(),
+                samples: vec![(0.0, 10.0, 12.0), (50.0, 10.0, 12.0)],
+            }],
+            slo_attainment: vec![1.0],
+            unmet_demand_reqs: vec![25.0],
+            total_demand_reqs: vec![1000.0],
+            gpu_hours: 2.0,
+            replans: 1,
+            failed_replans: 0,
+            transitions: vec![TransitionRecord {
+                start_s: 0.0,
+                duration_s: 40.0,
+                actions: 3,
+                reason: "bring-up".into(),
+                aborted: false,
+                min_throughput: BTreeMap::from([(0, 0.0)]),
+            }],
+            busy_s: BTreeMap::from([("creation".to_string(), 30.0)]),
+            action_counts: BTreeMap::from([("creation".to_string(), 3usize)]),
+            events_processed: 5,
+            event_log: vec!["t=0.0 bring-up".into()],
+        }
+    }
+
+    #[test]
+    fn attainment_is_demand_weighted() {
+        let r = tiny_report();
+        assert!((r.overall_attainment() - 0.975).abs() < 1e-12);
+        assert_eq!(r.transition_seconds(), 40.0);
+    }
+
+    #[test]
+    fn json_roundtrips_through_parser() {
+        let r = tiny_report();
+        let s = r.to_json().to_pretty();
+        let v = crate::util::json::parse(&s).unwrap();
+        assert_eq!(v.get_path("scenario").and_then(|x| x.as_str()), Some("t"));
+        assert_eq!(v.get_path("replans").and_then(|x| x.as_usize()), Some(1));
+        assert_eq!(
+            v.get_path("busy_s.creation").and_then(|x| x.as_f64()),
+            Some(30.0)
+        );
+    }
+
+    #[test]
+    fn comparison_table_and_savings() {
+        let control = tiny_report();
+        let mut baseline = tiny_report();
+        baseline.gpu_hours = 5.0;
+        let cmp = SimComparison { control, baseline };
+        assert_eq!(cmp.gpu_hours_saved(), 3.0);
+        let tbl = cmp.table();
+        assert!(tbl.contains("GPU-hours"));
+        assert!(tbl.contains("static peak"));
+    }
+}

@@ -1,0 +1,209 @@
+//! The scenario library: named, runnable traces over the real-world
+//! five-model mix, each exercising one axis of the reconfigurable
+//! scheduling problem.
+//!
+//! * `diurnal` — a full 24-hour day on the continuous per-service
+//!   demand curves (phase-shifted peaks, §7–§8 / Fig 13–14 regime);
+//! * `spike` — a flash crowd: one service triples for half an hour;
+//! * `gpu-failure` — two GPUs fail mid-run and are repaired later;
+//! * `onboard` — a service onboards mid-day and another offboards in
+//!   the evening (the service set changes while the cluster runs).
+//!
+//! All scenarios are sized to the paper's 24-GPU testbed: full peak
+//! lands around 16 GPUs, so every trace leaves scratch headroom for
+//! transitions.
+
+use crate::perf::ProfileBank;
+use crate::workload::{diurnal_curves, peak_mix, REALWORLD_LATENCY_MS, REALWORLD_SCALE};
+
+use super::trace::{DemandShape, GpuEvent, GpuEventKind, ServiceTrace, Trace};
+
+/// The named scenarios, in documentation order.
+pub const SCENARIOS: [&str; 4] = ["diurnal", "spike", "gpu-failure", "onboard"];
+
+/// Build a named scenario trace. Panics on unknown names (the CLI
+/// validates first).
+pub fn scenario(bank: &ProfileBank, name: &str) -> Trace {
+    match name {
+        "diurnal" => diurnal(bank),
+        "spike" => spike(bank),
+        "gpu-failure" => gpu_failure(bank),
+        "onboard" => onboard(bank),
+        other => panic!("unknown scenario {other:?} (expected one of {SCENARIOS:?})"),
+    }
+}
+
+/// A full day on the continuous diurnal curves — the default trace.
+fn diurnal(bank: &ProfileBank) -> Trace {
+    let services = diurnal_curves(bank, REALWORLD_SCALE)
+        .into_iter()
+        .map(|(model, curve)| {
+            ServiceTrace::always(&model, REALWORLD_LATENCY_MS, DemandShape::Diurnal(curve))
+        })
+        .collect();
+    Trace {
+        name: "diurnal".to_string(),
+        horizon_s: 24.0 * 3600.0,
+        services,
+        gpu_events: vec![],
+    }
+}
+
+/// Flash crowd: steady 40% load, then the second service (the highest
+/// -volume one) jumps to 1.2× its full peak for 30 minutes at hour 3.
+fn spike(bank: &ProfileBank) -> Trace {
+    let mix = peak_mix(bank, REALWORLD_SCALE);
+    let services = mix
+        .iter()
+        .enumerate()
+        .map(|(i, (model, peak))| {
+            let base = 0.4 * peak;
+            let shape = if i == 1 {
+                DemandShape::Spike {
+                    base,
+                    spike: 1.2 * peak,
+                    start_s: 3.0 * 3600.0,
+                    end_s: 3.5 * 3600.0,
+                }
+            } else {
+                DemandShape::Constant { rate: base }
+            };
+            ServiceTrace::always(model, REALWORLD_LATENCY_MS, shape)
+        })
+        .collect();
+    Trace {
+        name: "spike".to_string(),
+        horizon_s: 6.0 * 3600.0,
+        services,
+        gpu_events: vec![],
+    }
+}
+
+/// Steady 75% load; GPUs 2 and 5 fail at hour 2 (one minute apart) and
+/// are repaired at hour 5.
+fn gpu_failure(bank: &ProfileBank) -> Trace {
+    let services = peak_mix(bank, REALWORLD_SCALE)
+        .into_iter()
+        .map(|(model, peak)| {
+            ServiceTrace::always(
+                &model,
+                REALWORLD_LATENCY_MS,
+                DemandShape::Constant { rate: 0.75 * peak },
+            )
+        })
+        .collect();
+    Trace {
+        name: "gpu-failure".to_string(),
+        horizon_s: 8.0 * 3600.0,
+        services,
+        gpu_events: vec![
+            GpuEvent { at_s: 2.0 * 3600.0, gpu: 2, kind: GpuEventKind::Fail },
+            GpuEvent { at_s: 2.0 * 3600.0 + 60.0, gpu: 5, kind: GpuEventKind::Fail },
+            GpuEvent { at_s: 5.0 * 3600.0, gpu: 2, kind: GpuEventKind::Repair },
+            GpuEvent { at_s: 5.0 * 3600.0 + 60.0, gpu: 5, kind: GpuEventKind::Repair },
+        ],
+    }
+}
+
+/// Service churn: four services run at 60% from the start, the fifth
+/// (`resnet50`) onboards at hour 4, and the third (`albert-large-v2`)
+/// offboards at hour 9.
+fn onboard(bank: &ProfileBank) -> Trace {
+    let mix = peak_mix(bank, REALWORLD_SCALE);
+    let services = mix
+        .iter()
+        .enumerate()
+        .map(|(i, (model, peak))| {
+            let mut s = ServiceTrace::always(
+                model,
+                REALWORLD_LATENCY_MS,
+                DemandShape::Constant { rate: 0.6 * peak },
+            );
+            if i == 4 {
+                s.onboard_s = 4.0 * 3600.0; // resnet50 joins mid-day
+            }
+            if i == 2 {
+                s.offboard_s = Some(9.0 * 3600.0); // albert retires
+            }
+            s
+        })
+        .collect();
+    Trace {
+        name: "onboard".to_string(),
+        horizon_s: 12.0 * 3600.0,
+        services,
+        gpu_events: vec![],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simkit::trace::MIN_ACTIVE_RATE;
+
+    #[test]
+    fn all_scenarios_build() {
+        let bank = ProfileBank::synthetic();
+        for name in SCENARIOS {
+            let t = scenario(&bank, name);
+            assert_eq!(t.name, name);
+            assert_eq!(t.n_services(), 5, "{name}");
+            assert!(t.horizon_s > 0.0);
+            // Demand stays within the 24-GPU testbed's peak regime:
+            // no service ever exceeds 1.5× its real-world peak.
+            let peaks = t.peak_demand();
+            let mix = peak_mix(&bank, REALWORLD_SCALE);
+            for (p, (model, full)) in peaks.iter().zip(&mix) {
+                assert!(*p <= full * 1.5 + 1e-6, "{name}/{model}: {p} vs {full}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown scenario")]
+    fn unknown_scenario_panics() {
+        let bank = ProfileBank::synthetic();
+        scenario(&bank, "nope");
+    }
+
+    #[test]
+    fn spike_is_a_step_the_trace_sees() {
+        let bank = ProfileBank::synthetic();
+        let t = scenario(&bank, "spike");
+        let before = t.demand_at(3.0 * 3600.0 - 1.0);
+        let during = t.demand_at(3.0 * 3600.0 + 1.0);
+        assert!(during[1] > 2.0 * before[1], "spike must be a sharp step");
+        // Other services are unaffected.
+        for i in [0usize, 2, 3, 4] {
+            assert!((during[i] - before[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn gpu_failure_events_are_paired() {
+        let bank = ProfileBank::synthetic();
+        let t = scenario(&bank, "gpu-failure");
+        let fails = t
+            .gpu_events
+            .iter()
+            .filter(|e| e.kind == GpuEventKind::Fail)
+            .count();
+        let repairs = t.gpu_events.len() - fails;
+        assert_eq!(fails, repairs);
+        for e in &t.gpu_events {
+            assert!(e.at_s < t.horizon_s);
+        }
+    }
+
+    #[test]
+    fn onboard_gates_the_fifth_service() {
+        let bank = ProfileBank::synthetic();
+        let t = scenario(&bank, "onboard");
+        let early = t.demand_at(3600.0);
+        assert!(early[4] <= MIN_ACTIVE_RATE, "resnet50 absent early");
+        assert!(early[2] > 0.0);
+        let late = t.demand_at(10.0 * 3600.0);
+        assert!(late[4] > 0.0, "resnet50 active after onboarding");
+        assert!(late[2] <= MIN_ACTIVE_RATE, "albert gone after offboarding");
+    }
+}

@@ -1,0 +1,581 @@
+//! The simulation driver: runs the full closed loop — trace → control
+//! loop → optimizer replan → transition execution — over virtual
+//! hours/days, producing a [`SimReport`].
+//!
+//! Transitions are *not* applied atomically: the executor's
+//! asynchronous schedule ([`crate::cluster::Executor::schedule_async`])
+//! is replayed on the virtual clock, one `ApplyAction` event per
+//! completion instant, so capacity is degraded/restored mid-transition
+//! exactly as the §6 dependency analysis dictates and reconfiguration
+//! cost shows up in the end-to-end SLO/GPU-hour metrics.
+//!
+//! Determinism contract: one seeded RNG stream (executor latencies),
+//! the trace's closed-form demand, the FIFO event queue, and the
+//! optimizer's thread-count-invariant solve (DESIGN.md §2) make the
+//! whole [`SimReport`] — including the event log — byte-identical for
+//! a fixed seed at any `parallelism`. Wall-clock never enters the
+//! report: replan latency is *modeled* ([`SimConfig::replan_latency_s`])
+//! and optimizer budgets with a `time_budget` are rejected.
+
+use std::collections::BTreeMap;
+
+use crate::cluster::{Action, ActionKind, ClusterState, Executor};
+use crate::controller::Controller;
+use crate::optimizer::{Deployment, OptimizerPipeline, PipelineBudget, ProblemCtx};
+use crate::perf::ProfileBank;
+use crate::spec::ServiceId;
+
+use super::control::{ControlLoop, ReplanPolicy};
+use super::event::{Event, EventQueue};
+use super::report::{ServiceTimeline, SimComparison, SimReport, TransitionRecord};
+use super::trace::{GpuEventKind, Trace, MIN_ACTIVE_RATE};
+
+/// Simulation knobs.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Seed for the executor's action-latency sampling.
+    pub seed: u64,
+    /// Control-loop sampling interval, virtual seconds.
+    pub tick_s: f64,
+    /// Modeled optimizer+planning latency charged before a transition's
+    /// first action starts (virtual seconds — real wall-clock is
+    /// deliberately excluded to keep reports deterministic).
+    pub replan_latency_s: f64,
+    /// Headroom every replan provisions above the demand it plans for.
+    pub margin: f64,
+    pub policy: ReplanPolicy,
+    /// Optimizer budget per replan. `time_budget` must be `None`.
+    pub budget: PipelineBudget,
+    pub machines: usize,
+    pub gpus_per_machine: usize,
+    /// Provision for the horizon's *peak* demand instead of the
+    /// instantaneous demand — the static baseline's sizing rule.
+    pub peak_provision: bool,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            seed: 0x51,
+            tick_s: 60.0,
+            replan_latency_s: 5.0,
+            margin: 0.15,
+            policy: ReplanPolicy::Threshold { scale_down_ratio: 0.7 },
+            budget: PipelineBudget::fast_only(),
+            machines: 3,
+            gpus_per_machine: 8,
+            peak_provision: false,
+        }
+    }
+}
+
+impl SimConfig {
+    /// The CI-smoke configuration: coarse ticks, fast-only replans.
+    pub fn quick() -> SimConfig {
+        SimConfig { tick_s: 300.0, ..Default::default() }
+    }
+}
+
+/// A transition currently executing on the virtual clock.
+struct InFlight {
+    id: usize,
+    actions: Vec<Action>,
+    start_s: f64,
+    duration_s: f64,
+    reason: &'static str,
+    min_throughput: BTreeMap<ServiceId, f64>,
+}
+
+impl InFlight {
+    fn note_capacity(&mut self, cluster: &ClusterState, n: usize) {
+        for (i, v) in cluster.service_throughputs(n).into_iter().enumerate() {
+            let m = self.min_throughput.entry(i).or_insert(f64::INFINITY);
+            *m = m.min(v);
+        }
+    }
+
+    /// Close this transition into a record. For aborts, `end_s` is the
+    /// abort instant, so the recorded duration reflects the time the
+    /// cluster actually spent transitioning.
+    fn into_record(self, aborted: bool, end_s: Option<f64>) -> TransitionRecord {
+        TransitionRecord {
+            start_s: self.start_s,
+            duration_s: end_s.map_or(self.duration_s, |e| e - self.start_s),
+            actions: self.actions.len(),
+            reason: self.reason.to_string(),
+            aborted,
+            min_throughput: self.min_throughput,
+        }
+    }
+}
+
+/// A trace-driven simulation of the full closed loop.
+pub struct Simulation<'a> {
+    bank: &'a ProfileBank,
+    trace: &'a Trace,
+    pub cfg: SimConfig,
+}
+
+impl<'a> Simulation<'a> {
+    pub fn new(bank: &'a ProfileBank, trace: &'a Trace, cfg: SimConfig) -> Simulation<'a> {
+        Simulation { bank, trace, cfg }
+    }
+
+    /// Run the simulation to the horizon.
+    pub fn run(&self) -> anyhow::Result<SimReport> {
+        anyhow::ensure!(
+            self.cfg.budget.time_budget.is_none(),
+            "simkit needs a deterministic optimizer budget: set rounds, not time_budget"
+        );
+        let n = self.trace.n_services();
+        anyhow::ensure!(n > 0, "trace has no services");
+        anyhow::ensure!(self.cfg.tick_s > 0.0, "tick must be positive");
+
+        let mut cluster =
+            ClusterState::new(self.cfg.machines, self.cfg.gpus_per_machine);
+        let controller = Controller::new(n);
+        let mut executor = Executor::new(self.cfg.seed);
+        let mut control = ControlLoop::new(self.cfg.policy.clone(), n);
+        let mut queue = EventQueue::new();
+        queue.push(0.0, Event::ControlTick);
+        for (i, e) in self.trace.gpu_events.iter().enumerate() {
+            if e.at_s <= self.trace.horizon_s {
+                queue.push(e.at_s, Event::Gpu { idx: i });
+            }
+        }
+        queue.push(self.trace.horizon_s, Event::Horizon);
+
+        let mut timelines: Vec<ServiceTimeline> = self
+            .trace
+            .services
+            .iter()
+            .enumerate()
+            .map(|(i, s)| ServiceTimeline {
+                service: i,
+                model: s.model.clone(),
+                samples: Vec::new(),
+            })
+            .collect();
+        let mut unmet = vec![0.0f64; n];
+        let mut total = vec![0.0f64; n];
+        let mut met_ticks = vec![0usize; n];
+        let mut active_ticks = vec![0usize; n];
+        let mut gpu_seconds = 0.0f64;
+        let mut replans = 0usize;
+        let mut failed_replans = 0usize;
+        let mut transitions: Vec<TransitionRecord> = Vec::new();
+        let mut busy_s: BTreeMap<String, f64> = BTreeMap::new();
+        let mut action_counts: BTreeMap<String, usize> = BTreeMap::new();
+        let mut event_log: Vec<String> = Vec::new();
+        let mut events_processed = 0usize;
+        let mut inflight: Option<InFlight> = None;
+        let mut next_transition_id = 0usize;
+        let mut prev_t = 0.0f64;
+
+        while let Some(ev) = queue.pop() {
+            let t = ev.at_s;
+            events_processed += 1;
+            // Advance the integrals over [prev_t, t): capacity is
+            // piecewise-constant between events, demand is sampled at
+            // the left endpoint (events are dense enough — every tick
+            // and every action completion is a boundary).
+            let dt = t - prev_t;
+            // One capacity scan per event pop: the cluster has not
+            // mutated since the previous event, so the integral below
+            // and the tick branch share the same vector.
+            let capacity = cluster.service_throughputs(n);
+            if dt > 0.0 {
+                let demand = self.trace.demand_at(prev_t);
+                for i in 0..n {
+                    total[i] += demand[i] * dt;
+                    unmet[i] += (demand[i] - capacity[i]).max(0.0) * dt;
+                }
+                gpu_seconds += cluster.used_gpus().len() as f64 * dt;
+            }
+            prev_t = t;
+
+            match ev.event {
+                Event::Horizon => {
+                    event_log.push(format!("t={t:.1} horizon reached"));
+                    break;
+                }
+                Event::ControlTick => {
+                    let demand = self.trace.demand_at(t);
+                    for i in 0..n {
+                        timelines[i].samples.push((t, demand[i], capacity[i]));
+                        if demand[i] > MIN_ACTIVE_RATE {
+                            active_ticks[i] += 1;
+                            if capacity[i] + 1e-6 >= demand[i] {
+                                met_ticks[i] += 1;
+                            }
+                        }
+                    }
+                    if t + self.cfg.tick_s < self.trace.horizon_s - 1e-9 {
+                        queue.push(t + self.cfg.tick_s, Event::ControlTick);
+                    }
+                    if inflight.is_some() {
+                        continue; // one transition at a time
+                    }
+                    let Some(reason) = control.decide(t, &demand, &capacity) else {
+                        continue;
+                    };
+                    let provision_demand: Vec<f64> = if self.cfg.peak_provision {
+                        self.trace.peak_demand()
+                    } else {
+                        demand.clone()
+                    };
+                    match self.plan_transition(&cluster, &controller, &provision_demand, t)
+                    {
+                        Ok(actions) => {
+                            let provisioned: Vec<f64> = provision_demand
+                                .iter()
+                                .map(|&d| {
+                                    if d > MIN_ACTIVE_RATE {
+                                        d * (1.0 + self.cfg.margin)
+                                    } else {
+                                        0.0
+                                    }
+                                })
+                                .collect();
+                            control.note_replanned(t, provisioned);
+                            replans += 1;
+                            if actions.is_empty() {
+                                event_log.push(format!(
+                                    "t={t:.1} replan #{replans} ({reason}): target already realized"
+                                ));
+                                continue;
+                            }
+                            let schedule = executor.schedule_async(&cluster, &actions);
+                            for kind in ActionKind::ALL {
+                                if let Some(&v) = schedule.busy_s.get(&kind) {
+                                    *busy_s.entry(kind.label().to_string()).or_insert(0.0) += v;
+                                }
+                                if let Some(&c) = schedule.counts.get(&kind) {
+                                    *action_counts
+                                        .entry(kind.label().to_string())
+                                        .or_insert(0) += c;
+                                }
+                            }
+                            let id = next_transition_id;
+                            next_transition_id += 1;
+                            let t0 = t + self.cfg.replan_latency_s;
+                            for &(end, idx) in &schedule.entries {
+                                queue.push(t0 + end, Event::ApplyAction {
+                                    transition: id,
+                                    idx,
+                                });
+                            }
+                            queue.push(t0 + schedule.wallclock_s, Event::TransitionDone {
+                                transition: id,
+                            });
+                            let duration_s =
+                                self.cfg.replan_latency_s + schedule.wallclock_s;
+                            event_log.push(format!(
+                                "t={t:.1} replan #{replans} ({reason}): {} actions over {duration_s:.1}s",
+                                actions.len()
+                            ));
+                            let mut fl = InFlight {
+                                id,
+                                actions,
+                                start_s: t,
+                                duration_s,
+                                reason,
+                                min_throughput: BTreeMap::new(),
+                            };
+                            fl.note_capacity(&cluster, n);
+                            inflight = Some(fl);
+                        }
+                        Err(e) => {
+                            failed_replans += 1;
+                            event_log.push(format!(
+                                "t={t:.1} replan failed ({reason}): {e:#}"
+                            ));
+                        }
+                    }
+                }
+                Event::ApplyAction { transition, idx } => {
+                    // Stale ids (an already-finalized transition) are
+                    // skipped; an apply failure aborts *immediately* —
+                    // every prefix of the schedule is a valid state —
+                    // so the very next tick can replan from it.
+                    let matches =
+                        inflight.as_ref().is_some_and(|fl| fl.id == transition);
+                    if matches {
+                        let applied = {
+                            let fl = inflight.as_ref().unwrap();
+                            Executor::apply(&mut cluster, &fl.actions[idx])
+                        };
+                        match applied {
+                            Ok(()) => {
+                                inflight.as_mut().unwrap().note_capacity(&cluster, n)
+                            }
+                            Err(e) => {
+                                event_log.push(format!(
+                                    "t={t:.1} transition #{transition}: action failed ({e}); aborting"
+                                ));
+                                let fl = inflight.take().unwrap();
+                                transitions.push(fl.into_record(true, Some(t)));
+                            }
+                        }
+                    }
+                }
+                Event::TransitionDone { transition } => {
+                    if inflight.as_ref().is_some_and(|fl| fl.id == transition) {
+                        let fl = inflight.take().unwrap();
+                        event_log.push(format!("t={t:.1} transition #{transition} done"));
+                        transitions.push(fl.into_record(false, None));
+                    }
+                }
+                Event::Gpu { idx } => {
+                    let e = &self.trace.gpu_events[idx];
+                    match e.kind {
+                        GpuEventKind::Fail => {
+                            let killed = cluster.set_offline(e.gpu)?;
+                            // Abort any in-flight transition *now* (its
+                            // remaining events become stale ids), so
+                            // the next tick replans from the resulting
+                            // state instead of waiting out the
+                            // originally planned duration.
+                            if let Some(fl) = inflight.take() {
+                                event_log.push(format!(
+                                    "t={t:.1} transition #{} aborted by failure",
+                                    fl.id
+                                ));
+                                transitions.push(fl.into_record(true, Some(t)));
+                            }
+                            event_log.push(format!(
+                                "t={t:.1} gpu {} failed ({} pods lost)",
+                                e.gpu,
+                                killed.len()
+                            ));
+                        }
+                        GpuEventKind::Repair => {
+                            cluster.set_online(e.gpu)?;
+                            event_log.push(format!("t={t:.1} gpu {} repaired", e.gpu));
+                        }
+                    }
+                }
+            }
+        }
+        // A transition still in flight at the horizon is recorded as-is.
+        if let Some(fl) = inflight.take() {
+            transitions.push(fl.into_record(false, None));
+        }
+
+        let slo_attainment: Vec<f64> = (0..n)
+            .map(|i| {
+                if active_ticks[i] == 0 {
+                    1.0
+                } else {
+                    met_ticks[i] as f64 / active_ticks[i] as f64
+                }
+            })
+            .collect();
+        Ok(SimReport {
+            scenario: self.trace.name.clone(),
+            policy: format!(
+                "{}{}",
+                self.cfg.policy.label(),
+                if self.cfg.peak_provision { " (static-peak)" } else { "" }
+            ),
+            horizon_s: self.trace.horizon_s,
+            seed: self.cfg.seed,
+            timelines,
+            slo_attainment,
+            unmet_demand_reqs: unmet,
+            total_demand_reqs: total,
+            gpu_hours: gpu_seconds / 3600.0,
+            replans,
+            failed_replans,
+            transitions,
+            busy_s,
+            action_counts,
+            events_processed,
+            event_log,
+        })
+    }
+
+    /// Plan a transition toward the deployment serving `demand` (req/s
+    /// per trace service, margin applied inside): optimizer solve on
+    /// the active-service snapshot, service ids remapped back to trace
+    /// ids, then the §6 exchange-and-compact plan from the live state.
+    fn plan_transition(
+        &self,
+        cluster: &ClusterState,
+        controller: &Controller,
+        demand: &[f64],
+        t_s: f64,
+    ) -> anyhow::Result<Vec<Action>> {
+        let label = format!("{}@{t_s:.0}s", self.trace.name);
+        let (w, ids) = self.trace.snapshot_workload(&label, demand, self.cfg.margin);
+        if w.is_empty() {
+            // Every service offboarded: transition to the empty
+            // deployment (tear everything down).
+            let (plan, _) = controller.plan(cluster, &Deployment::empty())?;
+            return Ok(plan.actions);
+        }
+        let ctx = ProblemCtx::new(self.bank, &w)?;
+        let pipeline = OptimizerPipeline::with_budget(&ctx, self.cfg.budget.clone());
+        let mut target = pipeline.plan_deployment()?;
+        // Snapshot-local ids → stable trace ids.
+        for g in &mut target.gpus {
+            for a in &mut g.assigns {
+                a.service = ids[a.service];
+            }
+        }
+        let (plan, _algorithm_s) = controller.plan(cluster, &target)?;
+        Ok(plan.actions)
+    }
+
+    /// Run the control loop and the static-peak baseline on the same
+    /// trace (same seed/tick) and return both reports.
+    pub fn run_with_baseline(&self) -> anyhow::Result<SimComparison> {
+        let control = self.run()?;
+        let baseline_cfg = SimConfig {
+            policy: ReplanPolicy::Never,
+            peak_provision: true,
+            ..self.cfg.clone()
+        };
+        let baseline =
+            Simulation::new(self.bank, self.trace, baseline_cfg).run()?;
+        Ok(SimComparison { control, baseline })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simkit::trace::{DemandShape, ServiceTrace};
+
+    fn flat_trace(rate: f64, horizon_s: f64) -> Trace {
+        Trace {
+            name: "flat".to_string(),
+            horizon_s,
+            services: vec![
+                ServiceTrace::always(
+                    "resnet50",
+                    300.0,
+                    DemandShape::Constant { rate },
+                ),
+                ServiceTrace::always(
+                    "bert-base-uncased",
+                    300.0,
+                    DemandShape::Constant { rate: rate * 0.5 },
+                ),
+            ],
+            gpu_events: vec![],
+        }
+    }
+
+    #[test]
+    fn flat_demand_one_replan_then_steady() {
+        let bank = ProfileBank::synthetic();
+        let trace = flat_trace(120.0, 3600.0);
+        let cfg = SimConfig { tick_s: 300.0, ..Default::default() };
+        let report = Simulation::new(&bank, &trace, cfg).run().unwrap();
+        // Bring-up only: constant demand with headroom never re-triggers.
+        assert_eq!(report.replans, 1);
+        assert_eq!(report.failed_replans, 0);
+        assert_eq!(report.transitions.len(), 1);
+        assert_eq!(report.transitions[0].reason, "bring-up");
+        assert!(!report.transitions[0].aborted);
+        // After bring-up, every sampled tick meets demand.
+        for (i, a) in report.slo_attainment.iter().enumerate() {
+            assert!(*a > 0.8, "svc {i} attainment {a}");
+        }
+        assert!(report.gpu_hours > 0.0);
+        // Unmet demand only accrues during the bring-up window.
+        let bring_up_end = report.transitions[0].start_s
+            + report.transitions[0].duration_s;
+        for i in 0..trace.n_services() {
+            let worst = trace.services[i].demand_at(0.0) * bring_up_end;
+            assert!(
+                report.unmet_demand_reqs[i] <= worst + 1e-6,
+                "svc {i}: unmet {} > bring-up bound {worst}",
+                report.unmet_demand_reqs[i]
+            );
+        }
+    }
+
+    #[test]
+    fn same_seed_same_report() {
+        let bank = ProfileBank::synthetic();
+        let trace = flat_trace(90.0, 1800.0);
+        let cfg = SimConfig { tick_s: 300.0, ..Default::default() };
+        let a = Simulation::new(&bank, &trace, cfg.clone()).run().unwrap();
+        let b = Simulation::new(&bank, &trace, cfg).run().unwrap();
+        assert_eq!(a.event_log, b.event_log);
+        assert_eq!(a.to_json().to_pretty(), b.to_json().to_pretty());
+    }
+
+    #[test]
+    fn different_seed_different_latencies() {
+        let bank = ProfileBank::synthetic();
+        let trace = flat_trace(90.0, 1800.0);
+        let a = Simulation::new(
+            &bank,
+            &trace,
+            SimConfig { seed: 1, tick_s: 300.0, ..Default::default() },
+        )
+        .run()
+        .unwrap();
+        let b = Simulation::new(
+            &bank,
+            &trace,
+            SimConfig { seed: 2, tick_s: 300.0, ..Default::default() },
+        )
+        .run()
+        .unwrap();
+        // Same plan, different sampled action latencies.
+        assert_eq!(a.replans, b.replans);
+        assert_ne!(
+            a.transitions[0].duration_s, b.transitions[0].duration_s,
+            "latency sampling should depend on the seed"
+        );
+    }
+
+    #[test]
+    fn wall_clock_budget_rejected() {
+        let bank = ProfileBank::synthetic();
+        let trace = flat_trace(50.0, 600.0);
+        let cfg = SimConfig {
+            budget: PipelineBudget {
+                time_budget: Some(std::time::Duration::from_secs(1)),
+                ..PipelineBudget::fast_only()
+            },
+            ..Default::default()
+        };
+        assert!(Simulation::new(&bank, &trace, cfg).run().is_err());
+    }
+
+    #[test]
+    fn baseline_provisions_at_least_control_gpu_hours() {
+        let bank = ProfileBank::synthetic();
+        // Demand steps down hard halfway: the control loop sheds GPUs,
+        // the static-peak baseline cannot.
+        let trace = Trace {
+            name: "stepdown".to_string(),
+            horizon_s: 7200.0,
+            services: vec![ServiceTrace::always(
+                "resnet50",
+                300.0,
+                DemandShape::Step { before: 200.0, after: 40.0, at_s: 3600.0 },
+            )],
+            gpu_events: vec![],
+        };
+        let sim = Simulation::new(
+            &bank,
+            &trace,
+            SimConfig { tick_s: 300.0, ..Default::default() },
+        );
+        let cmp = sim.run_with_baseline().unwrap();
+        assert!(cmp.baseline.replans == 1);
+        assert!(cmp.control.replans >= 2, "step down must trigger a replan");
+        assert!(
+            cmp.control.gpu_hours < cmp.baseline.gpu_hours + 1e-9,
+            "control {} vs baseline {}",
+            cmp.control.gpu_hours,
+            cmp.baseline.gpu_hours
+        );
+    }
+}

@@ -1,0 +1,270 @@
+//! The trace layer: time-varying per-service demand plus discrete
+//! infrastructure events, driving the simulation forward over hours or
+//! days of virtual time.
+//!
+//! A [`Trace`] is pure data — demand is a closed-form function of
+//! virtual time, so any instant can be sampled without replaying
+//! history, and the same trace replays identically under every
+//! control-loop policy.
+
+use crate::spec::{ServiceId, Slo, Workload};
+use crate::workload::DiurnalCurve;
+
+/// Demand below this rate counts as "service not active" (keeps
+/// [`Slo::new`]'s positivity requirement out of snapshot workloads).
+pub const MIN_ACTIVE_RATE: f64 = 1e-9;
+
+/// The demand curve of one service.
+#[derive(Debug, Clone)]
+pub enum DemandShape {
+    /// Flat demand.
+    Constant { rate: f64 },
+    /// Continuous 24-hour cosine (the default real-world shape).
+    Diurnal(DiurnalCurve),
+    /// Flash crowd: `base` req/s outside `[start_s, end_s)`, `spike`
+    /// inside — a step the provisioner cannot see coming.
+    Spike { base: f64, spike: f64, start_s: f64, end_s: f64 },
+    /// A permanent step change at `at_s`.
+    Step { before: f64, after: f64, at_s: f64 },
+}
+
+impl DemandShape {
+    pub fn demand_at(&self, t_s: f64) -> f64 {
+        match self {
+            DemandShape::Constant { rate } => *rate,
+            DemandShape::Diurnal(curve) => curve.demand_at(t_s),
+            DemandShape::Spike { base, spike, start_s, end_s } => {
+                if t_s >= *start_s && t_s < *end_s {
+                    *spike
+                } else {
+                    *base
+                }
+            }
+            DemandShape::Step { before, after, at_s } => {
+                if t_s < *at_s {
+                    *before
+                } else {
+                    *after
+                }
+            }
+        }
+    }
+
+    /// The shape's maximum demand, closed-form — no sampling grid to
+    /// miss a short spike between samples.
+    pub fn peak(&self) -> f64 {
+        match self {
+            DemandShape::Constant { rate } => *rate,
+            DemandShape::Diurnal(curve) => curve.peak,
+            DemandShape::Spike { base, spike, .. } => base.max(*spike),
+            DemandShape::Step { before, after, .. } => before.max(*after),
+        }
+    }
+}
+
+/// One service's life in the trace: its demand shape gated by an
+/// onboarding window. Outside the window the service does not exist
+/// (zero demand, excluded from replan snapshots).
+#[derive(Debug, Clone)]
+pub struct ServiceTrace {
+    pub model: String,
+    pub latency_slo_ms: f64,
+    pub shape: DemandShape,
+    /// The service exists from this instant...
+    pub onboard_s: f64,
+    /// ...until this instant (`None` = the whole horizon).
+    pub offboard_s: Option<f64>,
+}
+
+impl ServiceTrace {
+    /// A service present for the whole horizon.
+    pub fn always(model: &str, latency_slo_ms: f64, shape: DemandShape) -> ServiceTrace {
+        ServiceTrace {
+            model: model.to_string(),
+            latency_slo_ms,
+            shape,
+            onboard_s: 0.0,
+            offboard_s: None,
+        }
+    }
+
+    pub fn demand_at(&self, t_s: f64) -> f64 {
+        if t_s < self.onboard_s {
+            return 0.0;
+        }
+        if let Some(off) = self.offboard_s {
+            if t_s >= off {
+                return 0.0;
+            }
+        }
+        self.shape.demand_at(t_s).max(0.0)
+    }
+
+    /// Peak demand over `[0, horizon_s)`, closed-form (zero when the
+    /// onboarding window never opens within the horizon; conservative
+    /// — the shape's global peak — when it does).
+    pub fn peak_demand(&self, horizon_s: f64) -> f64 {
+        let end = self.offboard_s.unwrap_or(horizon_s).min(horizon_s);
+        if self.onboard_s >= end {
+            return 0.0;
+        }
+        self.shape.peak().max(0.0)
+    }
+}
+
+/// GPU infrastructure events.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GpuEventKind {
+    /// The GPU fails: its pods are lost and it cannot host work.
+    Fail,
+    /// The GPU comes back (empty).
+    Repair,
+}
+
+#[derive(Debug, Clone)]
+pub struct GpuEvent {
+    pub at_s: f64,
+    pub gpu: usize,
+    pub kind: GpuEventKind,
+}
+
+/// A full scenario trace: per-service demand over `horizon_s` seconds
+/// plus scheduled GPU failures/repairs. Service ids are stable for the
+/// whole trace — index `i` of `services` IS [`ServiceId`] `i`
+/// everywhere (cluster pods, reports, timelines), even while services
+/// onboard/offboard.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub name: String,
+    pub horizon_s: f64,
+    pub services: Vec<ServiceTrace>,
+    pub gpu_events: Vec<GpuEvent>,
+}
+
+impl Trace {
+    pub fn n_services(&self) -> usize {
+        self.services.len()
+    }
+
+    /// Demand of every service at `t_s` (zero when not onboarded).
+    pub fn demand_at(&self, t_s: f64) -> Vec<f64> {
+        self.services.iter().map(|s| s.demand_at(t_s)).collect()
+    }
+
+    /// Peak demand per service over the horizon — closed-form, not
+    /// sampled, so a spike shorter than any sampling grid still sizes
+    /// the static-peak baseline correctly.
+    pub fn peak_demand(&self) -> Vec<f64> {
+        self.services.iter().map(|s| s.peak_demand(self.horizon_s)).collect()
+    }
+
+    /// Snapshot [`Workload`] for the given per-service demand levels
+    /// (req/s, indexed by trace [`ServiceId`]), each provisioned with
+    /// `margin` headroom. Inactive services (demand ≤
+    /// [`MIN_ACTIVE_RATE`]) are excluded; the returned map translates
+    /// the snapshot's local service ids back to trace [`ServiceId`]s.
+    pub fn snapshot_workload(
+        &self,
+        label: &str,
+        demand: &[f64],
+        margin: f64,
+    ) -> (Workload, Vec<ServiceId>) {
+        assert_eq!(demand.len(), self.services.len());
+        let mut ids = Vec::new();
+        let mut services = Vec::new();
+        for (i, (s, &d)) in self.services.iter().zip(demand).enumerate() {
+            if d > MIN_ACTIVE_RATE {
+                ids.push(i);
+                services.push((
+                    s.model.clone(),
+                    Slo::new(d * (1.0 + margin), s.latency_slo_ms),
+                ));
+            }
+        }
+        (Workload::new(label, services), ids)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_service_trace() -> Trace {
+        Trace {
+            name: "test".to_string(),
+            horizon_s: 1000.0,
+            services: vec![
+                ServiceTrace::always(
+                    "resnet50",
+                    300.0,
+                    DemandShape::Constant { rate: 50.0 },
+                ),
+                ServiceTrace {
+                    model: "bert-base-uncased".to_string(),
+                    latency_slo_ms: 300.0,
+                    shape: DemandShape::Spike {
+                        base: 10.0,
+                        spike: 40.0,
+                        start_s: 200.0,
+                        end_s: 400.0,
+                    },
+                    onboard_s: 100.0,
+                    offboard_s: Some(800.0),
+                },
+            ],
+            gpu_events: vec![],
+        }
+    }
+
+    #[test]
+    fn onboarding_gates_demand() {
+        let t = two_service_trace();
+        assert_eq!(t.demand_at(0.0), vec![50.0, 0.0]);
+        assert_eq!(t.demand_at(150.0), vec![50.0, 10.0]);
+        assert_eq!(t.demand_at(300.0), vec![50.0, 40.0]);
+        assert_eq!(t.demand_at(500.0), vec![50.0, 10.0]);
+        assert_eq!(t.demand_at(900.0), vec![50.0, 0.0]);
+    }
+
+    #[test]
+    fn peak_demand_sees_the_spike() {
+        let t = two_service_trace();
+        // Closed-form: the spike counts even though no sampling grid
+        // is involved, and a never-onboarded service peaks at zero.
+        assert_eq!(t.peak_demand(), vec![50.0, 40.0]);
+        let mut never = two_service_trace();
+        never.services[1].onboard_s = 2000.0; // beyond the horizon
+        assert_eq!(never.peak_demand(), vec![50.0, 0.0]);
+    }
+
+    #[test]
+    fn snapshot_excludes_inactive_and_maps_ids() {
+        let t = two_service_trace();
+        let demand = t.demand_at(0.0);
+        let (w, ids) = t.snapshot_workload("t0", &demand, 0.1);
+        assert_eq!(w.len(), 1);
+        assert_eq!(ids, vec![0]);
+        assert!((w.services[0].slo.throughput - 55.0).abs() < 1e-9);
+
+        let demand = t.demand_at(300.0);
+        let (w, ids) = t.snapshot_workload("t300", &demand, 0.0);
+        assert_eq!(w.len(), 2);
+        assert_eq!(ids, vec![0, 1]);
+        assert_eq!(w.services[1].model, "bert-base-uncased");
+        assert!((w.services[1].slo.throughput - 40.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn step_and_diurnal_shapes() {
+        let step = DemandShape::Step { before: 5.0, after: 9.0, at_s: 10.0 };
+        assert_eq!(step.demand_at(9.9), 5.0);
+        assert_eq!(step.demand_at(10.0), 9.0);
+        let d = DemandShape::Diurnal(DiurnalCurve {
+            peak: 100.0,
+            trough: 20.0,
+            peak_hour: 12.0,
+        });
+        assert!((d.demand_at(12.0 * 3600.0) - 100.0).abs() < 1e-9);
+        assert!((d.demand_at(0.0) - 20.0).abs() < 1e-9);
+    }
+}

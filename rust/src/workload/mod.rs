@@ -10,5 +10,8 @@
 pub mod realworld;
 pub mod synthetic;
 
-pub use realworld::{daytime, night, scaled_realworld};
+pub use realworld::{
+    daytime, diurnal_curves, night, peak_mix, scaled_realworld, DiurnalCurve,
+    REALWORLD_LATENCY_MS, REALWORLD_SCALE,
+};
 pub use synthetic::{micro_workload, simulation_workload, SIMULATION_WORKLOADS};

@@ -53,6 +53,75 @@ pub fn night(bank: &ProfileBank) -> Workload {
     scaled_realworld(bank, "night", 1250.0, true)
 }
 
+/// The scale [`daytime`]/[`night`] use (req/s units per mix weight).
+pub const REALWORLD_SCALE: f64 = 1250.0;
+
+/// Per-service peak hours (local time). Real diurnal traffic does not
+/// peak in unison — interactive NLP services peak around midday while
+/// the vision services trail into the afternoon — so each service gets
+/// its own phase.
+const PEAK_HOURS: [f64; 5] = [13.0, 14.5, 12.0, 15.5, 11.0];
+
+/// A continuous 24-hour diurnal demand curve for one service: a cosine
+/// oscillating between `trough` and `peak` req/s, peaking at
+/// `peak_hour`. This generalizes the two-point day/night split —
+/// `demand_at(peak_hour·3600)` equals the [`daytime`] throughput and
+/// the curve bottoms out exactly at the [`night`] throughput 12 h
+/// later — and is the default simkit trace shape.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DiurnalCurve {
+    /// Peak demand, req/s.
+    pub peak: f64,
+    /// Trough demand, req/s.
+    pub trough: f64,
+    /// Hour of day (0–24) at which demand peaks.
+    pub peak_hour: f64,
+}
+
+impl DiurnalCurve {
+    /// Demand at `t_s` seconds into the trace (wraps every 24 h).
+    pub fn demand_at(&self, t_s: f64) -> f64 {
+        let mid = 0.5 * (self.peak + self.trough);
+        let half = 0.5 * (self.peak - self.trough);
+        let phase =
+            2.0 * std::f64::consts::PI * (t_s / 3600.0 - self.peak_hour) / 24.0;
+        mid + half * phase.cos()
+    }
+}
+
+/// The five real-world services as `(model, curve)` pairs at `scale`
+/// (use [`REALWORLD_SCALE`] for the paper's 24-GPU testbed sizing).
+pub fn diurnal_curves(bank: &ProfileBank, scale: f64) -> Vec<(String, DiurnalCurve)> {
+    DAY_MIX
+        .iter()
+        .enumerate()
+        .map(|(i, (model, weight))| {
+            assert!(bank.get(model).is_some(), "model {model} missing from bank");
+            let peak = weight * scale;
+            (
+                model.to_string(),
+                DiurnalCurve {
+                    peak,
+                    trough: peak * NIGHT_FRACTION[i],
+                    peak_hour: PEAK_HOURS[i],
+                },
+            )
+        })
+        .collect()
+}
+
+/// The `(model, peak req/s)` pairs of the real-world mix at `scale` —
+/// the flat-demand building block of the simkit scenario library.
+pub fn peak_mix(bank: &ProfileBank, scale: f64) -> Vec<(String, f64)> {
+    DAY_MIX
+        .iter()
+        .map(|(model, weight)| {
+            assert!(bank.get(model).is_some(), "model {model} missing from bank");
+            (model.to_string(), weight * scale)
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -91,6 +160,67 @@ mod tests {
             "night should need ~5 GPUs, got {n_gpus}"
         );
         assert!(n_gpus * 2 < d_gpus, "day {d_gpus} / night {n_gpus}");
+    }
+
+    #[test]
+    fn diurnal_curve_interpolates_day_and_night() {
+        let bank = ProfileBank::synthetic();
+        let d = daytime(&bank);
+        let n = night(&bank);
+        let curves = diurnal_curves(&bank, REALWORLD_SCALE);
+        assert_eq!(curves.len(), 5);
+        for (i, (model, c)) in curves.iter().enumerate() {
+            assert_eq!(*model, d.services[i].model);
+            // Peak hour hits the daytime throughput exactly; 12 h later
+            // the curve bottoms out at the night throughput.
+            let at_peak = c.demand_at(c.peak_hour * 3600.0);
+            let at_trough = c.demand_at((c.peak_hour + 12.0) * 3600.0);
+            assert!((at_peak - d.services[i].slo.throughput).abs() < 1e-6, "{model}");
+            assert!((at_trough - n.services[i].slo.throughput).abs() < 1e-6, "{model}");
+            // Bounded between trough and peak everywhere.
+            for h in 0..24 {
+                let v = c.demand_at(h as f64 * 3600.0);
+                assert!(v >= c.trough - 1e-9 && v <= c.peak + 1e-9, "{model} h={h}");
+            }
+        }
+    }
+
+    #[test]
+    fn diurnal_curve_is_continuous_and_wraps() {
+        let bank = ProfileBank::synthetic();
+        let curves = diurnal_curves(&bank, REALWORLD_SCALE);
+        for (model, c) in &curves {
+            // A one-minute step never moves demand more than ~0.5% of
+            // the peak (continuity — no two-point cliff).
+            for k in 0..(24 * 60) {
+                let t = k as f64 * 60.0;
+                let dv = (c.demand_at(t + 60.0) - c.demand_at(t)).abs();
+                assert!(dv < 0.005 * c.peak, "{model}: jump {dv} at t={t}");
+            }
+            // 24-hour periodicity.
+            assert!((c.demand_at(0.0) - c.demand_at(86_400.0)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn curves_do_not_peak_in_unison() {
+        let bank = ProfileBank::synthetic();
+        let curves = diurnal_curves(&bank, 100.0);
+        let mut hours: Vec<f64> = curves.iter().map(|(_, c)| c.peak_hour).collect();
+        hours.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        hours.dedup_by(|a, b| (*a - *b).abs() < 1e-9);
+        assert!(hours.len() >= 3, "per-service phases should differ: {hours:?}");
+    }
+
+    #[test]
+    fn peak_mix_matches_day_mix() {
+        let bank = ProfileBank::synthetic();
+        let mix = peak_mix(&bank, REALWORLD_SCALE);
+        let d = daytime(&bank);
+        for ((model, rate), svc) in mix.iter().zip(&d.services) {
+            assert_eq!(*model, svc.model);
+            assert!((rate - svc.slo.throughput).abs() < 1e-9);
+        }
     }
 
     #[test]

@@ -129,7 +129,7 @@ fn property_transitions_transparent() {
             for i in 0..from.len() {
                 let bound =
                     from.services[i].slo.throughput.min(to.services[i].slo.throughput);
-                let seen = outcome.report.min_service_throughput[i];
+                let seen = outcome.report.min_throughput(i);
                 if seen < bound - 1e-6 {
                     return Err(format!(
                         "service {i} dipped to {seen} < min(old,new) {bound}"

@@ -70,6 +70,15 @@ fn saturation_reaches_capacity() {
         "saturated at {:.1} req/s < SLO 20",
         reports[0].achieved_throughput
     );
+    // Percentiles come from one histogram, so they must be ordered.
+    assert!(
+        reports[0].p50_ms <= reports[0].p90_ms
+            && reports[0].p90_ms <= reports[0].p99_ms,
+        "percentiles out of order: p50 {} p90 {} p99 {}",
+        reports[0].p50_ms,
+        reports[0].p90_ms,
+        reports[0].p99_ms
+    );
     cluster.shutdown();
 }
 

@@ -1,0 +1,214 @@
+//! simkit integration tests: the determinism contract (identical seed
+//! ⇒ byte-identical event log + report at any optimizer parallelism),
+//! a golden-trace regression for the diurnal scenario, and one
+//! behavioral test per library scenario.
+
+use mig_serving::optimizer::PipelineBudget;
+use mig_serving::perf::ProfileBank;
+use mig_serving::simkit::{scenario, SimConfig, Simulation, SCENARIOS};
+
+fn quick_cfg() -> SimConfig {
+    SimConfig { tick_s: 300.0, ..Default::default() }
+}
+
+/// DETERMINISM (asserted before any timing anywhere): the same seed
+/// must produce a byte-identical event log and `SimReport` whether the
+/// optimizer's replan solves run on 1, 2, or 8 worker threads. The GA
+/// path is exercised on purpose (`ga_rounds: 1`) — it is the parallel
+/// code; fast-only would make this trivially true.
+#[test]
+fn determinism_across_parallelism() {
+    let bank = ProfileBank::synthetic();
+    let trace = scenario(&bank, "spike");
+    let run = |par: usize| {
+        let cfg = SimConfig {
+            tick_s: 600.0,
+            budget: PipelineBudget {
+                ga_rounds: 1,
+                mcts_iterations: 10,
+                parallelism: Some(par),
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        Simulation::new(&bank, &trace, cfg).run().unwrap()
+    };
+    let p1 = run(1);
+    let p2 = run(2);
+    let p8 = run(8);
+    assert_eq!(p1.event_log, p2.event_log, "event log differs at parallelism 2");
+    assert_eq!(p1.event_log, p8.event_log, "event log differs at parallelism 8");
+    let j1 = p1.to_json().to_pretty();
+    assert_eq!(j1, p2.to_json().to_pretty(), "report differs at parallelism 2");
+    assert_eq!(j1, p8.to_json().to_pretty(), "report differs at parallelism 8");
+    assert!(p1.replans >= 2, "the spike must force a replan");
+}
+
+/// Golden-trace regression for the diurnal scenario: the trace replays
+/// byte-identically run-over-run, and its headline shape is pinned —
+/// sample cadence, replan regime, attainment, and the GPU-hour win
+/// over static peak provisioning.
+#[test]
+fn golden_diurnal_regression() {
+    let bank = ProfileBank::synthetic();
+    let trace = scenario(&bank, "diurnal");
+    let sim = Simulation::new(&bank, &trace, quick_cfg());
+    let cmp = sim.run_with_baseline().unwrap();
+    let again = Simulation::new(&bank, &trace, quick_cfg())
+        .run_with_baseline()
+        .unwrap();
+    // Byte-identical replay (the golden property).
+    assert_eq!(cmp.to_json().to_pretty(), again.to_json().to_pretty());
+
+    let control = &cmp.control;
+    // 24 h at 300 s ticks: samples at 0, 300, ..., 86100.
+    assert_eq!(control.timelines.len(), 5);
+    for tl in &control.timelines {
+        assert_eq!(tl.samples.len(), 288, "{}", tl.model);
+        assert_eq!(tl.samples[0].0, 0.0);
+        assert_eq!(tl.samples.last().unwrap().0, 86_100.0);
+    }
+    // A diurnal day replans repeatedly but does not thrash.
+    assert!(
+        (2..=80).contains(&control.replans),
+        "replans = {}",
+        control.replans
+    );
+    assert_eq!(control.failed_replans, 0, "{:#?}", control.event_log);
+    // Attainment: brief post-breach windows only.
+    assert!(
+        control.overall_attainment() > 0.9,
+        "overall attainment {}",
+        control.overall_attainment()
+    );
+    for (i, a) in control.slo_attainment.iter().enumerate() {
+        assert!(*a > 0.7, "svc {i} attainment {a}");
+    }
+    // The headline claim: the control loop consumes meaningfully fewer
+    // GPU-hours than static peak provisioning over a day...
+    assert!(
+        control.gpu_hours < 0.95 * cmp.baseline.gpu_hours,
+        "control {} vs baseline {}",
+        control.gpu_hours,
+        cmp.baseline.gpu_hours
+    );
+    // ...and the baseline (provisioned for peak, never reconfiguring)
+    // misses essentially nothing beyond its own bring-up window.
+    assert!(
+        cmp.baseline.overall_attainment() > 0.99,
+        "baseline attainment {}",
+        cmp.baseline.overall_attainment()
+    );
+    assert_eq!(cmp.baseline.replans, 1);
+    // Reconfiguration cost is visible: transitions take nonzero virtual
+    // time and the action breakdown is populated.
+    assert!(cmp.control.transition_seconds() > 0.0);
+    assert!(!cmp.control.busy_s.is_empty());
+}
+
+/// Every library scenario runs end to end under every policy's default
+/// and produces a sane report.
+#[test]
+fn scenario_library_runs_clean() {
+    let bank = ProfileBank::synthetic();
+    for name in SCENARIOS {
+        let trace = scenario(&bank, name);
+        let report = Simulation::new(&bank, &trace, quick_cfg()).run().unwrap();
+        assert_eq!(report.scenario, name);
+        assert!(report.replans >= 1, "{name}");
+        assert!(report.gpu_hours > 0.0, "{name}");
+        assert_eq!(report.timelines.len(), trace.n_services(), "{name}");
+        for (i, a) in report.slo_attainment.iter().enumerate() {
+            assert!((0.0..=1.0).contains(a), "{name} svc {i}: {a}");
+        }
+        for (u, t) in report.unmet_demand_reqs.iter().zip(&report.total_demand_reqs) {
+            assert!(*u >= 0.0 && u <= t, "{name}: unmet {u} vs total {t}");
+        }
+        assert!(!report.event_log.is_empty(), "{name}");
+    }
+}
+
+/// Flash crowd: the spike is invisible until it hits, so the spiking
+/// service must briefly miss demand, trigger a reactive replan, and
+/// recover; the flat services stay whole.
+#[test]
+fn spike_scenario_reacts_and_recovers() {
+    let bank = ProfileBank::synthetic();
+    let trace = scenario(&bank, "spike");
+    let report = Simulation::new(&bank, &trace, quick_cfg()).run().unwrap();
+    // bring-up + spike-up (deficit) + spike-down (scale-down), at least.
+    assert!(
+        (3..=8).contains(&report.replans),
+        "replans = {} ({:#?})",
+        report.replans,
+        report.event_log
+    );
+    let bert = report
+        .timelines
+        .iter()
+        .position(|tl| tl.model == "bert-base-uncased")
+        .unwrap();
+    assert!(report.unmet_demand_reqs[bert] > 0.0, "the spike must cost something");
+    assert!(report.slo_attainment[bert] < 1.0);
+    // ...but the loop recovers: the spiking service is still served for
+    // most of the run, and everyone else never misses a tick.
+    assert!(report.slo_attainment[bert] > 0.6);
+    for (i, a) in report.slo_attainment.iter().enumerate() {
+        if i != bert {
+            assert!(*a > 0.9, "flat svc {i} attainment {a}");
+        }
+    }
+}
+
+/// GPU failure: pods die with their GPU, capacity dips, the control
+/// loop rebuilds on healthy GPUs, and the repaired GPUs rejoin.
+#[test]
+fn gpu_failure_scenario_recovers() {
+    let bank = ProfileBank::synthetic();
+    let trace = scenario(&bank, "gpu-failure");
+    let report = Simulation::new(&bank, &trace, quick_cfg()).run().unwrap();
+    let log = report.event_log.join("\n");
+    assert!(log.contains("gpu 2 failed"), "{log}");
+    assert!(log.contains("gpu 5 failed"));
+    assert!(log.contains("gpu 2 repaired"));
+    // bring-up + at least one recovery replan.
+    assert!(report.replans >= 2, "replans = {report:?}");
+    // The dip is bounded: most sampled ticks still meet demand.
+    for (i, a) in report.slo_attainment.iter().enumerate() {
+        assert!(*a > 0.5, "svc {i} attainment {a}");
+    }
+    assert!(report.overall_attainment() > 0.8);
+}
+
+/// Service churn: the onboarding service has no capacity before its
+/// onboard instant and is served afterwards; the offboarded service's
+/// capacity is torn down.
+#[test]
+fn onboard_scenario_tracks_service_set() {
+    let bank = ProfileBank::synthetic();
+    let trace = scenario(&bank, "onboard");
+    let report = Simulation::new(&bank, &trace, quick_cfg()).run().unwrap();
+    let resnet = &report.timelines[4]; // onboards at 4 h
+    assert_eq!(resnet.model, "resnet50");
+    for &(t, d, c) in &resnet.samples {
+        if t < 4.0 * 3600.0 {
+            assert_eq!(d, 0.0, "no demand before onboarding (t={t})");
+            assert_eq!(c, 0.0, "no capacity before onboarding (t={t})");
+        }
+    }
+    // Served after onboarding settles (one replan + transition).
+    let served_after = resnet
+        .samples
+        .iter()
+        .filter(|&&(t, d, c)| t > 4.5 * 3600.0 && d > 0.0 && c + 1e-6 >= d)
+        .count();
+    assert!(served_after > 0, "onboarded service never served");
+
+    let albert = &report.timelines[2]; // offboards at 9 h
+    assert_eq!(albert.model, "albert-large-v2");
+    let last = albert.samples.last().unwrap();
+    assert_eq!(last.1, 0.0, "no demand after offboarding");
+    assert!(last.2 < 1e-6, "capacity torn down after offboarding: {}", last.2);
+    // Offboarding frees GPUs: the final tick uses fewer than the peak.
+    assert!(report.replans >= 3, "{:#?}", report.event_log);
+}
