@@ -3,15 +3,13 @@
 //!
 //! Paper's claims: MIG-Serving saves up to 40% of GPUs vs A100-7/7 and
 //! lands within <3% of the rule-free lower bound.
+//!
+//! The table itself is built by [`mig_serving::bench::figs::fig09_table`]
+//! — shared with `tests/golden_snapshots.rs`, which pins the rendered
+//! output on a fixed GA budget.
 
-use mig_serving::baselines::{a100_7x17_gpus, a100_mix_gpus, a100_whole_gpus};
-use mig_serving::optimizer::{
-    lower_bound_gpus, GaConfig, Greedy, MctsConfig, OptimizerProcedure, ProblemCtx,
-    TwoPhase, TwoPhaseConfig,
-};
+use mig_serving::bench::figs::fig09_table;
 use mig_serving::perf::ProfileBank;
-use mig_serving::util::table::{f, pct, Table};
-use mig_serving::workload::{simulation_workload, SIMULATION_WORKLOADS};
 
 fn main() {
     mig_serving::bench::header(
@@ -19,53 +17,7 @@ fn main() {
         "GPUs used per algorithm, normalized to A100-7/7 (absolute for MIG-Serving)",
     );
     let bank = ProfileBank::synthetic();
-    let mut t = Table::new(&[
-        "workload",
-        "A100-7/7",
-        "A100-7x1/7",
-        "A100-MIX",
-        "greedy",
-        "MIG-Serving",
-        "lower-bound",
-        "MIG-Serving abs",
-        "saved vs 7/7",
-        "gap to LB",
-    ]);
-    for name in SIMULATION_WORKLOADS {
-        let w = simulation_workload(&bank, name);
-        let ctx = ProblemCtx::new(&bank, &w).expect("servable");
-        let whole = a100_whole_gpus(&ctx);
-        let split = a100_7x17_gpus(&ctx);
-        let mix = a100_mix_gpus(&ctx);
-        let greedy = Greedy::new().solve(&ctx).unwrap().num_gpus();
-        // Two-phase with a bench-sized GA budget (the paper runs 10
-        // rounds over hours; EXPERIMENTS.md records a full run).
-        let two_phase = TwoPhase::new(TwoPhaseConfig {
-            ga: GaConfig {
-                rounds: bench_rounds(),
-                mcts: MctsConfig { iterations: 40, ..Default::default() },
-                ..Default::default()
-            },
-        })
-        .optimize(&ctx)
-        .unwrap()
-        .best
-        .num_gpus();
-        let lb = lower_bound_gpus(&ctx);
-        let n = whole as f64;
-        t.row(vec![
-            name.to_string(),
-            f(1.0, 2),
-            f(split as f64 / n, 2),
-            f(mix as f64 / n, 2),
-            f(greedy as f64 / n, 2),
-            f(two_phase as f64 / n, 2),
-            f(lb as f64 / n, 2),
-            two_phase.to_string(),
-            pct(1.0 - two_phase as f64 / n, 1),
-            pct(two_phase as f64 / lb as f64 - 1.0, 1),
-        ]);
-    }
+    let t = fig09_table(&bank, bench_rounds());
     println!("{}", t.render());
     println!(
         "paper: MIG-Serving saves up to 40% vs A100-7/7 and is <3% above the lower bound"

@@ -1,75 +1,36 @@
 //! Fig 13: deployment transitions between the two real-world workloads
 //! on the simulated 24-GPU testbed.
 //!
-//! * 13a — end-to-end transition runtime with the k8s / GPU-partition /
-//!   algorithm decomposition;
+//! * 13a — end-to-end transition runtime with the k8s / GPU-partition
+//!   decomposition (the algorithm slice is wall-clock and excluded from
+//!   the deterministic table);
 //! * 13b — action counts per transition;
 //! * 13c — per-action runtime (10 synchronous runs: avg, min, max).
+//!
+//! 13a/13b are built by [`mig_serving::bench::figs::fig13_tables`] —
+//! shared with `tests/golden_snapshots.rs`, which pins the rendered
+//! output for the fixed seed.
 
-use mig_serving::cluster::{ActionKind, ClusterState, Executor};
-use mig_serving::controller::Controller;
-use mig_serving::optimizer::{Greedy, OptimizerProcedure, ProblemCtx};
+use mig_serving::bench::figs::fig13_tables;
+use mig_serving::cluster::ActionKind;
 use mig_serving::perf::ProfileBank;
 use mig_serving::util::stats::Summary;
 use mig_serving::util::table::{f, Table};
-use mig_serving::workload::{daytime, night};
 
 fn main() {
     let bank = ProfileBank::synthetic();
-    let day = daytime(&bank);
-    let night_w = night(&bank);
-    let day_dep = Greedy::new()
-        .solve(&ProblemCtx::new(&bank, &day).unwrap())
-        .unwrap();
-    let night_dep = Greedy::new()
-        .solve(&ProblemCtx::new(&bank, &night_w).unwrap())
-        .unwrap();
+    let (tables, mut executor) = fig13_tables(&bank, 0xF13).expect("transitions");
     println!(
         "deployments: daytime {} GPUs, night {} GPUs (paper: 16 / 5)\n",
-        day_dep.num_gpus(),
-        night_dep.num_gpus()
+        tables.day_gpus, tables.night_gpus
     );
 
-    let mut cluster = ClusterState::new(3, 8);
-    let controller = Controller::new(day.len());
-    let mut executor = Executor::new(0xF13);
-    controller
-        .transition(&mut cluster, &day_dep, &mut executor)
-        .expect("bring-up");
-
     mig_serving::bench::header("Figure 13a/13b", "transition runtime and action counts");
-    let mut ta = Table::new(&[
-        "transition", "wall-clock s", "k8s busy s", "partition busy s", "algorithm s",
-        "actions", "stages",
-    ]);
-    let mut tb = Table::new(&[
-        "transition", "creation", "deletion", "migration (local)",
-        "migration (remote)", "GPU partition",
-    ]);
-    for (label, target) in [("day2night", &night_dep), ("night2day", &day_dep)] {
-        let o = controller
-            .transition(&mut cluster, target, &mut executor)
-            .expect(label);
-        ta.row(vec![
-            label.to_string(),
-            f(o.report.wallclock_s, 1),
-            f(o.report.k8s_time(), 1),
-            f(o.report.partition_time(), 1),
-            f(o.algorithm_s, 4),
-            o.plan.num_actions().to_string(),
-            o.plan.num_stages().to_string(),
-        ]);
-        tb.row(vec![
-            label.to_string(),
-            o.report.count(ActionKind::Creation).to_string(),
-            o.report.count(ActionKind::Deletion).to_string(),
-            o.report.count(ActionKind::LocalMigration).to_string(),
-            o.report.count(ActionKind::RemoteMigration).to_string(),
-            o.report.count(ActionKind::Partition).to_string(),
-        ]);
+    println!("{}", tables.runtime.render());
+    for (label, s) in &tables.algorithm_s {
+        println!("{label}: exchange-and-compact algorithm {s:.4}s (wall-clock)");
     }
-    println!("{}", ta.render());
-    println!("{}", tb.render());
+    println!("{}", tables.actions.render());
     println!("paper: k8s (pod bootstrap) dominates; transitions finish within half an hour\n");
 
     mig_serving::bench::header("Figure 13c", "synchronous action runtime (10 runs)");

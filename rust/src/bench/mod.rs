@@ -17,6 +17,8 @@ use std::time::{Duration, Instant};
 
 use crate::util::json::Value;
 
+pub mod figs;
+
 /// Timing helper with warmup + repeated measurement.
 pub struct BenchCtx {
     pub warmup: usize,

@@ -1,6 +1,7 @@
-//! Cluster state: machines, GPUs, partitions, running pods.
+//! Cluster state: machines, GPUs (possibly of mixed device kinds),
+//! partitions, running pods.
 
-use crate::mig::{rules, Partition, Placement};
+use crate::mig::{rules, DeviceKind, FleetSpec, Partition, Placement};
 use crate::spec::ServiceId;
 use std::collections::{BTreeMap, BTreeSet};
 
@@ -100,27 +101,55 @@ impl std::fmt::Display for ClusterError {
 
 impl std::error::Error for ClusterError {}
 
-/// The whole cluster: `machines × gpus_per_machine` GPUs, flat-indexed.
+/// The whole cluster: flat-indexed GPUs grouped `gpus_per_machine` to a
+/// machine, each GPU of a [`DeviceKind`] (homogeneous A100 by default).
 #[derive(Debug, Clone)]
 pub struct ClusterState {
     pub machines: usize,
     pub gpus_per_machine: usize,
     gpus: Vec<GpuSim>,
+    /// Device kind per GPU (parallel to `gpus`).
+    kinds: Vec<DeviceKind>,
     /// Failed GPUs: hold nothing, reject mutations, and are skipped by
     /// slot search and the controller's config assignment until
     /// repaired ([`ClusterState::set_online`]).
     offline: BTreeSet<usize>,
+    /// Partition layouts of failed GPUs, remembered at failure time so
+    /// repair restores the MIG config instead of resetting the GPU to
+    /// unpartitioned (pods stay lost either way).
+    saved_partitions: BTreeMap<usize, Vec<Placement>>,
 }
 
 impl ClusterState {
-    /// Empty cluster (the paper's testbed: 3 machines × 8 A100s).
+    /// Empty homogeneous A100 cluster (the paper's testbed: 3 machines
+    /// × 8 A100s).
     pub fn new(machines: usize, gpus_per_machine: usize) -> ClusterState {
-        ClusterState {
-            machines,
+        Self::with_kinds(
             gpus_per_machine,
-            gpus: vec![GpuSim::default(); machines * gpus_per_machine],
+            vec![DeviceKind::A100; machines * gpus_per_machine],
+        )
+    }
+
+    /// Empty cluster with an explicit per-GPU kind layout. The final
+    /// machine may be partially populated when `kinds.len()` is not a
+    /// multiple of `gpus_per_machine`.
+    pub fn with_kinds(gpus_per_machine: usize, kinds: Vec<DeviceKind>) -> ClusterState {
+        assert!(gpus_per_machine > 0, "gpus_per_machine must be positive");
+        assert!(!kinds.is_empty(), "cluster needs at least one GPU");
+        ClusterState {
+            machines: kinds.len().div_ceil(gpus_per_machine),
+            gpus_per_machine,
+            gpus: vec![GpuSim::default(); kinds.len()],
+            kinds,
             offline: BTreeSet::new(),
+            saved_partitions: BTreeMap::new(),
         }
+    }
+
+    /// Empty mixed-fleet cluster: one GPU per [`FleetSpec`] entry,
+    /// grouped kind-ascending.
+    pub fn from_fleet(fleet: &FleetSpec, gpus_per_machine: usize) -> ClusterState {
+        Self::with_kinds(gpus_per_machine, fleet.gpu_kinds())
     }
 
     pub fn num_gpus(&self) -> usize {
@@ -129,6 +158,37 @@ impl ClusterState {
 
     pub fn gpu(&self, i: usize) -> &GpuSim {
         &self.gpus[i]
+    }
+
+    /// Device kind of a GPU.
+    pub fn kind_of(&self, gpu: usize) -> DeviceKind {
+        self.kinds[gpu]
+    }
+
+    /// Distinct device kinds present, ascending.
+    pub fn fleet_kinds(&self) -> Vec<DeviceKind> {
+        let mut v = self.kinds.clone();
+        v.sort();
+        v.dedup();
+        v
+    }
+
+    /// GPU counts per kind (the fleet composition).
+    pub fn gpus_by_kind(&self) -> BTreeMap<DeviceKind, usize> {
+        let mut m = BTreeMap::new();
+        for &k in &self.kinds {
+            *m.entry(k).or_insert(0) += 1;
+        }
+        m
+    }
+
+    /// In-use (non-empty) GPU counts per kind.
+    pub fn used_gpus_by_kind(&self) -> BTreeMap<DeviceKind, usize> {
+        let mut m = BTreeMap::new();
+        for gi in self.used_gpus() {
+            *m.entry(self.kinds[gi]).or_insert(0) += 1;
+        }
+        m
     }
 
     /// Machine index of a GPU (locality for migrations, §6).
@@ -150,24 +210,36 @@ impl ClusterState {
         self.gpus.len() - self.offline.len()
     }
 
-    /// Take a GPU offline (hardware failure): every pod running on it is
-    /// lost and its partition is cleared. Returns the killed pods so the
-    /// caller can account the capacity drop. Idempotent.
+    /// Take a GPU offline (hardware failure): every pod running on it
+    /// is lost and its partition is cleared, but the layout is
+    /// remembered so repair can restore it. Returns the killed pods so
+    /// the caller can account the capacity drop. Idempotent.
     pub fn set_offline(&mut self, gpu: usize) -> Result<Vec<Pod>, ClusterError> {
         let g = self.gpus.get_mut(gpu).ok_or(ClusterError::NoSuchGpu(gpu))?;
         let killed: Vec<Pod> = g.pods.values().copied().collect();
         g.pods.clear();
-        g.partition_placements.clear();
-        self.offline.insert(gpu);
+        if self.offline.insert(gpu) {
+            // First failure: remember the MIG layout for repair.
+            self.saved_partitions
+                .insert(gpu, std::mem::take(&mut g.partition_placements));
+        } else {
+            g.partition_placements.clear();
+        }
         Ok(killed)
     }
 
-    /// Bring a failed GPU back (repaired, empty). Idempotent.
+    /// Bring a failed GPU back: repaired, podless, with its pre-failure
+    /// partition config restored (a repair does not reset the MIG
+    /// layout — it only loses the pods). Idempotent.
     pub fn set_online(&mut self, gpu: usize) -> Result<(), ClusterError> {
         if gpu >= self.gpus.len() {
             return Err(ClusterError::NoSuchGpu(gpu));
         }
-        self.offline.remove(&gpu);
+        if self.offline.remove(&gpu) {
+            if let Some(saved) = self.saved_partitions.remove(&gpu) {
+                self.gpus[gpu].partition_placements = saved;
+            }
+        }
         Ok(())
     }
 
@@ -184,6 +256,7 @@ impl ClusterState {
         if self.offline.contains(&gpu) {
             return Err(ClusterError::GpuOffline(gpu));
         }
+        let kind = *self.kinds.get(gpu).ok_or(ClusterError::NoSuchGpu(gpu))?;
         let g = self.gpus.get_mut(gpu).ok_or(ClusterError::NoSuchGpu(gpu))?;
         for r in remove {
             if g.pods.contains_key(r) {
@@ -191,7 +264,7 @@ impl ClusterState {
             }
         }
         let current = g.partition();
-        let next = rules::reconfigure(&current, remove, add).map_err(|e| {
+        let next = rules::reconfigure_on(kind, &current, remove, add).map_err(|e| {
             ClusterError::IllegalRepartition { gpu, reason: e.to_string() }
         })?;
         g.partition_placements = next.placements().to_vec();
@@ -260,7 +333,8 @@ impl ClusterState {
 
     /// Find a GPU and placement where `size` can be allocated with **no
     /// repartitioning of occupied space**: first try free instances of
-    /// exactly that size, then GPUs whose partition can allocate it.
+    /// exactly that size, then GPUs whose partition can allocate it
+    /// (each validated against that GPU's own device kind).
     /// Preference order: partially used GPUs first (tight packing),
     /// completely empty GPUs last.
     pub fn find_slot(
@@ -270,7 +344,7 @@ impl ClusterState {
         // (gpu, placement, needs_partition_change)
         let mut empty_fallback: Option<(usize, Placement, bool)> = None;
         for (gi, g) in self.gpus.iter().enumerate() {
-            if self.offline.contains(&gi) {
+            if self.offline.contains(&gi) || !self.kinds[gi].supports(size) {
                 continue;
             }
             // Existing free instance of the right size?
@@ -282,7 +356,7 @@ impl ClusterState {
             if self.offline.contains(&gi) {
                 continue;
             }
-            if let Some(start) = g.partition().can_allocate(size) {
+            if let Some(start) = g.partition().can_allocate_on(self.kinds[gi], size) {
                 let pl = Placement::new(size, start);
                 if g.is_empty() {
                     if empty_fallback.is_none() {
@@ -433,10 +507,36 @@ mod tests {
         // ...and slot search skips it (only GPU 1 remains).
         let (gpu, _, _) = c.find_slot(Two).unwrap();
         assert_eq!(gpu, 1);
-        // Repair restores it.
+        // Repair restores the GPU *and its pre-failure partition*
+        // (pods stay lost) — a repaired GPU does not come back
+        // unpartitioned.
         c.set_online(0).unwrap();
         assert!(!c.is_offline(0));
+        assert_eq!(c.gpu(0).partition().label(), "2");
+        assert!(c.gpu(0).pods().is_empty());
+        // The restored slot is immediately usable.
+        c.create_pod(0, pl, pod(0)).unwrap();
+    }
+
+    #[test]
+    fn repair_restore_is_idempotent_and_survives_double_failure() {
+        let mut c = ClusterState::new(1, 1);
+        let pl = Placement::new(Three, 0);
         c.repartition(0, &[], &[pl]).unwrap();
+        // Double offline must not overwrite the saved layout with the
+        // (already cleared) empty one.
+        c.set_offline(0).unwrap();
+        c.set_offline(0).unwrap();
+        c.set_online(0).unwrap();
+        assert_eq!(c.gpu(0).partition().label(), "3");
+        // Repeated repair is a no-op.
+        c.set_online(0).unwrap();
+        assert_eq!(c.gpu(0).partition().label(), "3");
+        // A fresh failure re-saves the current (possibly new) layout.
+        c.repartition(0, &[pl], &[Placement::new(Two, 0)]).unwrap();
+        c.set_offline(0).unwrap();
+        c.set_online(0).unwrap();
+        assert_eq!(c.gpu(0).partition().label(), "2");
     }
 
     #[test]
@@ -445,6 +545,41 @@ mod tests {
         c.set_offline(0).unwrap();
         assert!(c.find_slot(One).is_none());
         assert_eq!(c.online_gpus(), 0);
+    }
+
+    #[test]
+    fn mixed_fleet_layout_and_kind_rules() {
+        use crate::mig::{DeviceKind, FleetSpec};
+        let fleet = FleetSpec::parse("a100=2,a30=2").unwrap();
+        let mut c = ClusterState::from_fleet(&fleet, 2);
+        assert_eq!(c.num_gpus(), 4);
+        assert_eq!(c.kind_of(0), DeviceKind::A100);
+        assert_eq!(c.kind_of(1), DeviceKind::A100);
+        assert_eq!(c.kind_of(2), DeviceKind::A30);
+        assert_eq!(c.kind_of(3), DeviceKind::A30);
+        assert_eq!(c.fleet_kinds(), vec![DeviceKind::A100, DeviceKind::A30]);
+        assert_eq!(c.gpus_by_kind().get(&DeviceKind::A30), Some(&2));
+        // A 7/7 fits an A100 but is rejected on an A30.
+        c.repartition(0, &[], &[Placement::new(Seven, 0)]).unwrap();
+        assert!(matches!(
+            c.repartition(2, &[], &[Placement::new(Seven, 0)]),
+            Err(ClusterError::IllegalRepartition { .. })
+        ));
+        // A 4-slice instance is legal on both; One@4 only on the A100.
+        c.repartition(2, &[], &[Placement::new(Four, 0)]).unwrap();
+        assert!(matches!(
+            c.repartition(3, &[], &[Placement::new(One, 4)]),
+            Err(ClusterError::IllegalRepartition { .. })
+        ));
+        c.repartition(1, &[], &[Placement::new(One, 4)]).unwrap();
+        // find_slot only offers kind-compatible GPUs: everything is
+        // partially busy, a Three can only land on the A100s.
+        let (gpu, pl, _) = c.find_slot(Three).unwrap();
+        assert_eq!(c.kind_of(gpu), DeviceKind::A100);
+        assert_eq!(pl.size, Three);
+        // used-by-kind accounting.
+        c.create_pod(2, Placement::new(Four, 0), pod(0)).unwrap();
+        assert_eq!(c.used_gpus_by_kind().get(&DeviceKind::A30), Some(&1));
     }
 
     #[test]

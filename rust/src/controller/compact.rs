@@ -11,7 +11,7 @@
 use std::collections::BTreeMap;
 
 use crate::cluster::{Action, ClusterState, Executor, Pod};
-use crate::mig::{InstanceSize, Partition, Placement};
+use crate::mig::{DeviceKind, InstanceSize, Partition, Placement};
 use crate::optimizer::Deployment;
 use crate::spec::ServiceId;
 
@@ -47,18 +47,21 @@ fn overlap(
         .sum()
 }
 
-/// Find a donor pod of (service, size) on a GPU not in `forbidden`,
-/// preferring same-machine donors relative to `near_gpu` (§6 locality).
+/// Find a donor pod of (service, size) on a GPU of `kind` not in
+/// `forbidden`, preferring same-machine donors relative to `near_gpu`
+/// (§6 locality). The kind restriction matters: a pod's profiled
+/// throughput is tied to its device kind, so donors never cross kinds.
 fn find_donor(
     state: &ClusterState,
     service: ServiceId,
+    kind: DeviceKind,
     size: InstanceSize,
     forbidden: &[usize],
     near_gpu: usize,
 ) -> Option<(usize, Placement, Pod)> {
     let mut best: Option<(usize, Placement, Pod)> = None;
     for (g, pl, pod) in state.pods_of_service(service) {
-        if pl.size != size || forbidden.contains(&g) {
+        if pl.size != size || forbidden.contains(&g) || state.kind_of(g) != kind {
             continue;
         }
         let local = state.same_machine(g, near_gpu);
@@ -75,6 +78,7 @@ fn find_donor(
 }
 
 /// Greedy max-overlap matching of target configs to physical GPUs.
+/// A config can only land on a GPU of its own device kind.
 pub fn assign_configs(
     state: &ClusterState,
     target: &Deployment,
@@ -89,6 +93,9 @@ pub fn assign_configs(
         let mut best: Option<(usize, usize, usize)> = None; // (overlap, cfg, gpu)
         for &ci in &unassigned_cfgs {
             for &gi in &available_gpus {
+                if state.kind_of(gi) != target.gpus[ci].kind {
+                    continue;
+                }
                 let ov = overlap(&cfg_sigs[ci], &gpu_signature(state, gi));
                 // Tie-break: prefer currently-used GPUs for nonzero
                 // overlap, empty GPUs for zero overlap (fresh builds).
@@ -101,7 +108,9 @@ pub fn assign_configs(
                 }
             }
         }
-        let (_, ci, gi) = best.ok_or_else(|| anyhow::anyhow!("ran out of GPUs"))?;
+        let (_, ci, gi) = best.ok_or_else(|| {
+            anyhow::anyhow!("ran out of GPUs for the target's device kinds")
+        })?;
         assignment.push((ci, gi));
         unassigned_cfgs.retain(|&c| c != ci);
         available_gpus.retain(|&g| g != gi);
@@ -191,7 +200,8 @@ pub fn compact_phase(
     compact_phase_with(state, target, None, actions)
 }
 
-/// Make physical GPU `gi` realize target config `ci`.
+/// Make physical GPU `gi` realize target config `ci` (same kind by
+/// assignment).
 fn realize_config(
     state: &mut ClusterState,
     target: &Deployment,
@@ -201,6 +211,13 @@ fn realize_config(
     actions: &mut Vec<Action>,
 ) -> anyhow::Result<()> {
     let cfg = &target.gpus[ci];
+    let kind = cfg.kind;
+    anyhow::ensure!(
+        state.kind_of(gi) == kind,
+        "config of kind {} assigned to a {} GPU",
+        kind.name(),
+        state.kind_of(gi).name()
+    );
 
     // Match config entries against pods already on the GPU.
     let mut pods_here: Vec<(Placement, Pod)> =
@@ -219,10 +236,10 @@ fn realize_config(
     let surplus: Vec<(Placement, Pod)> = pods_here; // unmatched pods
 
     // Try to complete the layout around the kept pods.
-    let kept_partition = Partition::try_new(kept.clone())
+    let kept_partition = Partition::try_new_on(kind, kept.clone())
         .map_err(|e| anyhow::anyhow!("kept pods form illegal partition: {e}"))?;
-    let completion =
-        kept_partition.complete_with(&missing.iter().map(|m| m.0).collect::<Vec<_>>());
+    let completion = kept_partition
+        .complete_with_on(kind, &missing.iter().map(|m| m.0).collect::<Vec<_>>());
 
     let (kept, missing_placed): (Vec<Placement>, Vec<Placement>) = match completion {
         Some(added) => (kept, added),
@@ -260,7 +277,7 @@ fn realize_config(
 }
 
 /// Repartition `gi` to `kept ∪ missing_placed` and migrate the missing
-/// entries in from donors.
+/// entries in from same-kind donors.
 fn finalize_layout(
     state: &mut ClusterState,
     gi: usize,
@@ -270,6 +287,7 @@ fn finalize_layout(
     processed: &[usize],
     actions: &mut Vec<Action>,
 ) -> anyhow::Result<()> {
+    let kind = state.kind_of(gi);
     // Current placements minus kept = to remove.
     let current = state.gpu(gi).partition().placements().to_vec();
     let remove: Vec<Placement> =
@@ -294,11 +312,22 @@ fn finalize_layout(
             .position(|p| p.size == size)
             .ok_or_else(|| anyhow::anyhow!("layout lost a {size:?} slot"))?;
         let dst = open.remove(ix);
-        let (dg, dpl, pod) = find_donor(state, svc, size, &forbidden, gi)
+        let (dg, dpl, pod) = find_donor(state, svc, kind, size, &forbidden, gi)
             .ok_or_else(|| {
-                anyhow::anyhow!("no donor for service {svc} on {size:?}")
+                anyhow::anyhow!(
+                    "no donor for service {svc} on {}/{size:?}",
+                    kind.name()
+                )
             })?;
-        debug_assert!((pod.throughput - thr).abs() < 1e6); // same profile family
+        // Same (kind, size, service) ⇒ same profiled throughput; a
+        // mismatch means the kind-keyed donor search regressed. (The
+        // seed wrote `< 1e6` — a vacuous typo for 1e-6.)
+        debug_assert!(
+            (pod.throughput - thr).abs() <= 1e-6 * thr.abs().max(1.0),
+            "donor throughput {} != target {thr} for svc {svc} {}/{size:?}",
+            pod.throughput,
+            kind.name()
+        );
         let act = Action::MigratePod {
             src_gpu: dg,
             src: dpl,
@@ -316,7 +345,8 @@ fn finalize_layout(
     Ok(())
 }
 
-/// Migrate a pod off `gi` to scratch space anywhere else.
+/// Migrate a pod off `gi` to scratch space on another GPU of the same
+/// kind (the pod's throughput is only valid there).
 fn migrate_out(
     state: &mut ClusterState,
     gi: usize,
@@ -327,7 +357,8 @@ fn migrate_out(
 ) -> anyhow::Result<()> {
     let mut forbidden = processed.to_vec();
     forbidden.push(gi);
-    let (dst_gpu, dst) = allocate_slot(state, pl.size, &forbidden, actions)?;
+    let (dst_gpu, dst) =
+        allocate_slot(state, state.kind_of(gi), pl.size, &forbidden, actions)?;
     let act = Action::MigratePod { src_gpu: gi, src: pl, dst_gpu, dst, pod };
     Executor::apply(state, &act)?;
     actions.push(act);
@@ -338,9 +369,14 @@ fn migrate_out(
 }
 
 /// Does `state` realize `target` exactly (a bijection between used GPUs
-/// and target configs with equal (size, service) multisets)?
+/// and target configs with equal device kinds and (size, service)
+/// multisets)?
 pub fn realizes(state: &ClusterState, target: &Deployment) -> bool {
-    let mut cfg_sigs: Vec<_> = target.gpus.iter().map(config_signature).collect();
+    let mut cfg_sigs: Vec<_> = target
+        .gpus
+        .iter()
+        .map(|g| (g.kind, config_signature(g)))
+        .collect();
     let mut used = 0;
     for gi in 0..state.num_gpus() {
         let sig = gpu_signature(state, gi);
@@ -348,7 +384,8 @@ pub fn realizes(state: &ClusterState, target: &Deployment) -> bool {
             continue;
         }
         used += 1;
-        match cfg_sigs.iter().position(|c| *c == sig) {
+        let keyed = (state.kind_of(gi), sig);
+        match cfg_sigs.iter().position(|c| *c == keyed) {
             Some(ix) => {
                 cfg_sigs.remove(ix);
             }
@@ -397,13 +434,11 @@ mod tests {
             4,
         );
         let target = Deployment {
-            gpus: vec![GpuConfig {
-                assigns: vec![
-                    assign(Two, 0, 1, 20.0),
-                    assign(One, 2, 0, 10.0),
-                    assign(One, 3, 0, 10.0),
-                ],
-            }],
+            gpus: vec![GpuConfig::a100(vec![
+                assign(Two, 0, 1, 20.0),
+                assign(One, 2, 0, 10.0),
+                assign(One, 3, 0, 10.0),
+            ])],
         };
         let mut actions = Vec::new();
         let processed = compact_phase(&mut state, &target, &mut actions).unwrap();
@@ -435,9 +470,10 @@ mod tests {
         // GPU 0 already matches the target exactly: zero migrations.
         let mut state = seeded(&[(0, Three, 0, 0, 30.0), (0, Three, 4, 1, 30.0)], 2);
         let target = Deployment {
-            gpus: vec![GpuConfig {
-                assigns: vec![assign(Three, 0, 0, 30.0), assign(Three, 4, 1, 30.0)],
-            }],
+            gpus: vec![GpuConfig::a100(vec![
+                assign(Three, 0, 0, 30.0),
+                assign(Three, 4, 1, 30.0),
+            ])],
         };
         let mut actions = Vec::new();
         compact_phase(&mut state, &target, &mut actions).unwrap();
@@ -464,10 +500,8 @@ mod tests {
         );
         let target = Deployment {
             gpus: vec![
-                GpuConfig { assigns: vec![assign(Seven, 0, 1, 70.0)] },
-                GpuConfig {
-                    assigns: vec![assign(One, 0, 0, 10.0), assign(One, 1, 0, 10.0)],
-                },
+                GpuConfig::a100(vec![assign(Seven, 0, 1, 70.0)]),
+                GpuConfig::a100(vec![assign(One, 0, 0, 10.0), assign(One, 1, 0, 10.0)]),
             ],
         };
         let mut actions = Vec::new();
@@ -479,9 +513,60 @@ mod tests {
     fn realizes_rejects_wrong_state() {
         let state = seeded(&[(0, One, 0, 0, 10.0)], 2);
         let target = Deployment {
-            gpus: vec![GpuConfig { assigns: vec![assign(Two, 0, 0, 20.0)] }],
+            gpus: vec![GpuConfig::a100(vec![assign(Two, 0, 0, 20.0)])],
         };
         assert!(!realizes(&state, &target));
+    }
+
+    #[test]
+    fn mixed_kind_compact_assigns_matching_gpus() {
+        use crate::mig::FleetSpec;
+        let fleet = FleetSpec::parse("a100=2,a30=2").unwrap();
+        let mut state = ClusterState::from_fleet(&fleet, 2);
+        // A100 pod on gpu 1, A30 pods scattered on gpus 2 and 3.
+        for (g, size, start, svc) in
+            [(1usize, Four, 0u8, 0usize), (2, Two, 0, 1), (3, Two, 0, 0)]
+        {
+            let pl = Placement::new(size, start);
+            state.repartition(g, &[], &[pl]).unwrap();
+            state
+                .create_pod(g, pl, Pod { service: svc, batch: 8, throughput: 9.0 })
+                .unwrap();
+        }
+        // Target: the A100 keeps its 4-slice; the two A30 pods compact
+        // onto ONE A30 GPU.
+        let target = Deployment {
+            gpus: vec![
+                GpuConfig::a100(vec![assign(Four, 0, 0, 9.0)]),
+                GpuConfig {
+                    kind: DeviceKind::A30,
+                    assigns: vec![assign(Two, 0, 1, 9.0), assign(Two, 2, 0, 9.0)],
+                },
+            ],
+        };
+        let mut actions = Vec::new();
+        compact_phase(&mut state, &target, &mut actions).unwrap();
+        assert!(realizes(&state, &target), "mixed-kind end state mismatch");
+        // Every populated GPU hosts a config of its own kind.
+        for gi in 0..state.num_gpus() {
+            if state.gpu(gi).pods().is_empty() {
+                continue;
+            }
+            let has_four =
+                state.gpu(gi).pods().keys().any(|pl| pl.size == Four);
+            if has_four {
+                assert_eq!(state.kind_of(gi), DeviceKind::A100);
+            } else {
+                assert_eq!(state.kind_of(gi), DeviceKind::A30);
+            }
+        }
+        // A migration happened (the scattered A30 pods merged) and it
+        // stayed within the A30 segment.
+        for a in &actions {
+            if let Action::MigratePod { src_gpu, dst_gpu, .. } = a {
+                assert_eq!(state.kind_of(*src_gpu), state.kind_of(*dst_gpu));
+            }
+        }
     }
 
     #[test]

@@ -2,27 +2,32 @@
 //! deployment (§6 Exchange phase: "controller calculates the instance
 //! differences between the old and the new deployments for each
 //! service", Δᵢ).
+//!
+//! Instances are identified by **(device kind, size)** — a 4-slice
+//! instance on an A30 is not interchangeable with a 4-slice instance
+//! on an A100 (different geometry, different throughput), so deltas,
+//! pairings, and donor searches never cross kinds.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use crate::cluster::ClusterState;
-use crate::mig::InstanceSize;
+use crate::mig::{DeviceKind, InstanceSize};
 use crate::optimizer::Deployment;
 use crate::spec::ServiceId;
 
-/// Per-service instance counts keyed by size.
+/// Per-service instance counts keyed by (kind, size).
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct InstanceCounts {
-    pub by_size: BTreeMap<InstanceSize, usize>,
+    pub by_size: BTreeMap<(DeviceKind, InstanceSize), usize>,
 }
 
 impl InstanceCounts {
-    pub fn add(&mut self, size: InstanceSize) {
-        *self.by_size.entry(size).or_insert(0) += 1;
+    pub fn add(&mut self, kind: DeviceKind, size: InstanceSize) {
+        *self.by_size.entry((kind, size)).or_insert(0) += 1;
     }
 
-    pub fn count(&self, size: InstanceSize) -> usize {
-        self.by_size.get(&size).copied().unwrap_or(0)
+    pub fn count(&self, kind: DeviceKind, size: InstanceSize) -> usize {
+        self.by_size.get(&(kind, size)).copied().unwrap_or(0)
     }
 
     pub fn total(&self) -> usize {
@@ -30,14 +35,17 @@ impl InstanceCounts {
     }
 }
 
-/// One service's delta: instances to create and instances to drop.
+/// One service's delta: instances to create and instances to drop,
+/// each a (kind, size) pair.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct ServiceDelta {
     pub service: ServiceId,
-    /// Sizes needed by the new deployment but not currently running.
-    pub plus: Vec<InstanceSize>,
-    /// Currently running sizes the new deployment does not need.
-    pub minus: Vec<InstanceSize>,
+    /// (kind, size) instances needed by the new deployment but not
+    /// currently running.
+    pub plus: Vec<(DeviceKind, InstanceSize)>,
+    /// Currently running (kind, size) instances the new deployment
+    /// does not need.
+    pub minus: Vec<(DeviceKind, InstanceSize)>,
 }
 
 impl ServiceDelta {
@@ -50,9 +58,10 @@ impl ServiceDelta {
 pub fn cluster_counts(cluster: &ClusterState, n_services: usize) -> Vec<InstanceCounts> {
     let mut counts = vec![InstanceCounts::default(); n_services];
     for gi in 0..cluster.num_gpus() {
+        let kind = cluster.kind_of(gi);
         for (pl, pod) in cluster.gpu(gi).pods() {
             if pod.service < n_services {
-                counts[pod.service].add(pl.size);
+                counts[pod.service].add(kind, pl.size);
             }
         }
     }
@@ -64,15 +73,15 @@ pub fn deployment_counts(dep: &Deployment, n_services: usize) -> Vec<InstanceCou
     let mut counts = vec![InstanceCounts::default(); n_services];
     for g in &dep.gpus {
         for a in &g.assigns {
-            counts[a.service].add(a.placement.size);
+            counts[a.service].add(g.kind, a.placement.size);
         }
     }
     counts
 }
 
 /// Compute Δᵢ for every service: what to create (+) and drop (−),
-/// sorted large-to-small (the exchange pairing walks big instances
-/// first).
+/// sorted large-to-small by size (the exchange pairing walks big
+/// instances first), kind-ascending within a size.
 pub fn service_deltas(
     cluster: &ClusterState,
     target: &Deployment,
@@ -87,17 +96,23 @@ pub fn service_deltas(
             if have[sid] == want[sid] {
                 return delta;
             }
-            for size in InstanceSize::ALL {
-                let h = have[sid].count(size);
-                let w = want[sid].count(size);
+            let keys: BTreeSet<(DeviceKind, InstanceSize)> = have[sid]
+                .by_size
+                .keys()
+                .chain(want[sid].by_size.keys())
+                .copied()
+                .collect();
+            for (kind, size) in keys {
+                let h = have[sid].count(kind, size);
+                let w = want[sid].count(kind, size);
                 if w > h {
-                    delta.plus.extend(std::iter::repeat(size).take(w - h));
+                    delta.plus.extend(std::iter::repeat((kind, size)).take(w - h));
                 } else if h > w {
-                    delta.minus.extend(std::iter::repeat(size).take(h - w));
+                    delta.minus.extend(std::iter::repeat((kind, size)).take(h - w));
                 }
             }
-            delta.plus.sort_by(|a, b| b.cmp(a));
-            delta.minus.sort_by(|a, b| b.cmp(a));
+            delta.plus.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+            delta.minus.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
             delta
         })
         .collect()
@@ -109,6 +124,8 @@ mod tests {
     use crate::cluster::Pod;
     use crate::mig::{InstanceSize::*, Placement};
     use crate::optimizer::{Deployment, GpuConfig, InstanceAssign};
+
+    const A100: DeviceKind = DeviceKind::A100;
 
     fn assign(size: InstanceSize, start: u8, svc: ServiceId) -> InstanceAssign {
         InstanceAssign {
@@ -135,11 +152,11 @@ mod tests {
         // Paper example: Δᵢ = [+4/7, −2/7].
         let cluster = cluster_with(&[(0, Two, 0, 0)]);
         let target = Deployment {
-            gpus: vec![GpuConfig { assigns: vec![assign(Four, 0, 0)] }],
+            gpus: vec![GpuConfig::a100(vec![assign(Four, 0, 0)])],
         };
         let deltas = service_deltas(&cluster, &target, 1);
-        assert_eq!(deltas[0].plus, vec![Four]);
-        assert_eq!(deltas[0].minus, vec![Two]);
+        assert_eq!(deltas[0].plus, vec![(A100, Four)]);
+        assert_eq!(deltas[0].minus, vec![(A100, Two)]);
     }
 
     #[test]
@@ -147,9 +164,7 @@ mod tests {
         // Same multiset, different physical placement: no exchange work.
         let cluster = cluster_with(&[(0, Two, 0, 0), (1, One, 3, 0)]);
         let target = Deployment {
-            gpus: vec![GpuConfig {
-                assigns: vec![assign(Two, 0, 0), assign(One, 2, 0)],
-            }],
+            gpus: vec![GpuConfig::a100(vec![assign(Two, 0, 0), assign(One, 2, 0)])],
         };
         let deltas = service_deltas(&cluster, &target, 1);
         assert!(deltas[0].is_empty());
@@ -160,16 +175,14 @@ mod tests {
         let cluster = cluster_with(&[(0, Seven, 0, 0), (1, One, 0, 1)]);
         let target = Deployment {
             gpus: vec![
-                GpuConfig { assigns: vec![assign(Seven, 0, 0)] },
-                GpuConfig {
-                    assigns: vec![assign(Three, 0, 1), assign(Three, 4, 1)],
-                },
+                GpuConfig::a100(vec![assign(Seven, 0, 0)]),
+                GpuConfig::a100(vec![assign(Three, 0, 1), assign(Three, 4, 1)]),
             ],
         };
         let deltas = service_deltas(&cluster, &target, 2);
         assert!(deltas[0].is_empty());
-        assert_eq!(deltas[1].plus, vec![Three, Three]);
-        assert_eq!(deltas[1].minus, vec![One]);
+        assert_eq!(deltas[1].plus, vec![(A100, Three), (A100, Three)]);
+        assert_eq!(deltas[1].minus, vec![(A100, One)]);
     }
 
     #[test]
@@ -178,17 +191,39 @@ mod tests {
         let target = Deployment { gpus: vec![] };
         let deltas = service_deltas(&cluster, &target, 1);
         assert!(deltas[0].plus.is_empty());
-        assert_eq!(deltas[0].minus, vec![Two, Two]);
+        assert_eq!(deltas[0].minus, vec![(A100, Two), (A100, Two)]);
     }
 
     #[test]
     fn counts_helpers() {
         let mut c = InstanceCounts::default();
-        c.add(One);
-        c.add(One);
-        c.add(Seven);
-        assert_eq!(c.count(One), 2);
-        assert_eq!(c.count(Two), 0);
+        c.add(A100, One);
+        c.add(A100, One);
+        c.add(A100, Seven);
+        assert_eq!(c.count(A100, One), 2);
+        assert_eq!(c.count(A100, Two), 0);
+        assert_eq!(c.count(DeviceKind::A30, One), 0);
         assert_eq!(c.total(), 3);
+    }
+
+    #[test]
+    fn same_size_different_kind_is_a_real_delta() {
+        // One 4-slice pod on an A30; the target wants the 4-slice on an
+        // A100 — the multiset is NOT a match: the exchange must create
+        // on the A100 and retire the A30 instance.
+        use crate::mig::FleetSpec;
+        let fleet = FleetSpec::parse("a100=1,a30=1").unwrap();
+        let mut cluster = ClusterState::from_fleet(&fleet, 2);
+        let pl = Placement::new(Four, 0);
+        cluster.repartition(1, &[], &[pl]).unwrap();
+        cluster
+            .create_pod(1, pl, Pod { service: 0, batch: 8, throughput: 1.0 })
+            .unwrap();
+        let target = Deployment {
+            gpus: vec![GpuConfig::a100(vec![assign(Four, 0, 0)])],
+        };
+        let deltas = service_deltas(&cluster, &target, 1);
+        assert_eq!(deltas[0].plus, vec![(A100, Four)]);
+        assert_eq!(deltas[0].minus, vec![(DeviceKind::A30, Four)]);
     }
 }

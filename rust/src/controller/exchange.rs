@@ -12,35 +12,38 @@
 use std::collections::BTreeMap;
 
 use crate::cluster::{Action, ClusterState, Executor, Pod};
-use crate::mig::{InstanceSize, Placement};
+use crate::mig::{DeviceKind, InstanceSize, Placement};
 use crate::optimizer::Deployment;
 use crate::spec::ServiceId;
 
 use super::diff::ServiceDelta;
 
 /// Per-GPU (size, service) needs from the pre-computed target
-/// assignment (see `compact::target_hints`).
+/// assignment (see `compact::target_hints`). Kind is implicit: a GPU's
+/// hints come from a target config of its own kind.
 pub type TargetHints = Vec<std::collections::BTreeMap<(InstanceSize, ServiceId), usize>>;
 
 /// Look up the (batch, throughput) the target deployment uses for a
-/// (service, size) instance.
+/// (service, kind, size) instance.
 fn target_pod_params(
     target: &Deployment,
-) -> BTreeMap<(ServiceId, InstanceSize), (usize, f64)> {
+) -> BTreeMap<(ServiceId, DeviceKind, InstanceSize), (usize, f64)> {
     let mut m = BTreeMap::new();
     for g in &target.gpus {
         for a in &g.assigns {
-            m.insert((a.service, a.placement.size), (a.batch, a.throughput));
+            m.insert((a.service, g.kind, a.placement.size), (a.batch, a.throughput));
         }
     }
     m
 }
 
-/// Allocate a slot for `size` anywhere on the cluster, emitting (and
-/// applying) a repartition if the hosting GPU's layout must grow.
-/// `forbidden` GPUs are skipped (used by compact for processed GPUs).
+/// Allocate a slot for a (kind, size) instance anywhere on the cluster,
+/// emitting (and applying) a repartition if the hosting GPU's layout
+/// must grow. Only GPUs of `kind` qualify; `forbidden` GPUs are skipped
+/// (used by compact for processed GPUs).
 pub(crate) fn allocate_slot(
     state: &mut ClusterState,
+    kind: DeviceKind,
     size: InstanceSize,
     forbidden: &[usize],
     actions: &mut Vec<Action>,
@@ -54,7 +57,7 @@ pub(crate) fn allocate_slot(
     let mut choice: Option<(usize, Placement, bool)> = None;
     let mut best_key = (usize::MAX, usize::MAX, usize::MAX);
     for gi in 0..state.num_gpus() {
-        if forbidden.contains(&gi) || state.is_offline(gi) {
+        if forbidden.contains(&gi) || state.is_offline(gi) || state.kind_of(gi) != kind {
             continue;
         }
         let g = state.gpu(gi);
@@ -65,7 +68,7 @@ pub(crate) fn allocate_slot(
                 best_key = key;
                 choice = Some((gi, pl, false));
             }
-        } else if let Some(start) = g.partition().can_allocate(size) {
+        } else if let Some(start) = g.partition().can_allocate_on(kind, size) {
             let pl = Placement::new(size, start);
             let empty = usize::from(g.is_empty());
             let key = (1usize, empty, load);
@@ -76,7 +79,10 @@ pub(crate) fn allocate_slot(
         }
     }
     let (gpu, pl, needs_repartition) = choice.ok_or_else(|| {
-        anyhow::anyhow!("no GPU can allocate a {size:?} instance (cluster full)")
+        anyhow::anyhow!(
+            "no {} GPU can allocate a {size:?} instance (fleet segment full)",
+            kind.name()
+        )
     })?;
     if needs_repartition {
         let act = Action::Repartition { gpu, remove: vec![], add: vec![pl] };
@@ -86,17 +92,18 @@ pub(crate) fn allocate_slot(
     Ok((gpu, pl))
 }
 
-/// Try to allocate `size` for `service` on a GPU whose assigned target
-/// config still needs such an instance.
+/// Try to allocate a (kind, size) for `service` on a GPU whose assigned
+/// target config still needs such an instance.
 fn hinted_slot(
     state: &mut ClusterState,
     hints: &mut TargetHints,
+    kind: DeviceKind,
     size: InstanceSize,
     service: ServiceId,
     actions: &mut Vec<Action>,
 ) -> Option<(usize, Placement)> {
     for gi in 0..state.num_gpus() {
-        if state.is_offline(gi) {
+        if state.is_offline(gi) || state.kind_of(gi) != kind {
             continue;
         }
         let need = hints[gi].get(&(size, service)).copied().unwrap_or(0);
@@ -106,7 +113,7 @@ fn hinted_slot(
         let g = state.gpu(gi);
         let (pl, needs_rep) = match g.free_instance_of(size) {
             Some(pl) => (pl, false),
-            None => match g.partition().can_allocate(size) {
+            None => match g.partition().can_allocate_on(kind, size) {
                 Some(start) => (Placement::new(size, start), true),
                 None => continue,
             },
@@ -163,17 +170,21 @@ pub fn exchange_phase(
         }
         let sid = delta.service;
 
-        // Concrete unneeded pods: pick one live pod per `minus` size.
+        // Concrete unneeded pods: pick one live pod per `minus`
+        // (kind, size) — the pod's hosting GPU must match the kind.
         let mut unneeded: Vec<(usize, Placement, Pod)> = Vec::new();
         {
             let mut available = state.pods_of_service(sid);
-            for &size in &delta.minus {
+            for &(kind, size) in &delta.minus {
                 let idx = available
                     .iter()
-                    .position(|(_, pl, _)| pl.size == size)
+                    .position(|(g, pl, _)| {
+                        pl.size == size && state.kind_of(*g) == kind
+                    })
                     .ok_or_else(|| {
                         anyhow::anyhow!(
-                            "service {sid}: minus {size:?} but no such pod live"
+                            "service {sid}: minus {}/{size:?} but no such pod live",
+                            kind.name()
                         )
                     })?;
                 unneeded.push(available.swap_remove(idx));
@@ -181,21 +192,25 @@ pub fn exchange_phase(
         }
         // Large throughput first on both sides.
         unneeded.sort_by(|a, b| b.2.throughput.partial_cmp(&a.2.throughput).unwrap());
-        let mut plus: Vec<(InstanceSize, usize, f64)> = delta
+        let mut plus: Vec<(DeviceKind, InstanceSize, usize, f64)> = delta
             .plus
             .iter()
-            .map(|&size| {
-                let (batch, thr) = params.get(&(sid, size)).copied().ok_or_else(
-                    || anyhow::anyhow!("service {sid}: target lacks {size:?} params"),
-                )?;
-                Ok((size, batch, thr))
+            .map(|&(kind, size)| {
+                let (batch, thr) =
+                    params.get(&(sid, kind, size)).copied().ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "service {sid}: target lacks {}/{size:?} params",
+                            kind.name()
+                        )
+                    })?;
+                Ok((kind, size, batch, thr))
             })
             .collect::<anyhow::Result<Vec<_>>>()?;
-        plus.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
+        plus.sort_by(|a, b| b.3.partial_cmp(&a.3).unwrap());
 
         // Pair each new instance with unneeded ones under the throughput
         // rule, largest-first.
-        for (size, batch, thr) in plus {
+        for (kind, size, batch, thr) in plus {
             let mut paired: Vec<(usize, Placement, Pod)> = Vec::new();
             let mut budget = thr;
             let mut i = 0;
@@ -209,13 +224,14 @@ pub fn exchange_phase(
                 }
             }
             // Create the new instance first — on its target GPU when
-            // the hint is realizable right now, else anywhere.
+            // the hint is realizable right now, else anywhere of the
+            // right kind.
             let hinted = hints.as_mut().and_then(|h| {
-                hinted_slot(state, h, size, sid, actions)
+                hinted_slot(state, h, kind, size, sid, actions)
             });
             let (gpu, pl) = match hinted {
                 Some(x) => x,
-                None => allocate_slot(state, size, &[], actions)?,
+                None => allocate_slot(state, kind, size, &[], actions)?,
             };
             let create = Action::CreatePod {
                 gpu,
@@ -276,7 +292,7 @@ mod tests {
         // (thr 70). The create must precede the delete.
         let mut state = seeded_cluster(&[(0, Two, 0, 0, 30.0)]);
         let target = Deployment {
-            gpus: vec![GpuConfig { assigns: vec![assign(Four, 0, 0, 70.0)] }],
+            gpus: vec![GpuConfig::a100(vec![assign(Four, 0, 0, 70.0)])],
         };
         let deltas = service_deltas(&state, &target, 1);
         let mut actions = Vec::new();
@@ -316,7 +332,7 @@ mod tests {
             (1, One, 0, 0, 10.0),
         ]);
         let target = Deployment {
-            gpus: vec![GpuConfig { assigns: vec![assign(One, 0, 0, 10.0)] }],
+            gpus: vec![GpuConfig::a100(vec![assign(One, 0, 0, 10.0)])],
         };
         let deltas = service_deltas(&state, &target, 1);
         let mut actions = Vec::new();
@@ -337,7 +353,7 @@ mod tests {
         // up.
         let mut state = seeded_cluster(&[(0, Seven, 0, 0, 100.0)]);
         let target = Deployment {
-            gpus: vec![GpuConfig { assigns: vec![assign(One, 0, 0, 20.0)] }],
+            gpus: vec![GpuConfig::a100(vec![assign(One, 0, 0, 20.0)])],
         };
         let deltas = service_deltas(&state, &target, 1);
         let mut actions = Vec::new();
@@ -361,8 +377,8 @@ mod tests {
         ]);
         let target = Deployment {
             gpus: vec![
-                GpuConfig { assigns: vec![assign(Three, 0, 0, 55.0)] },
-                GpuConfig { assigns: vec![assign(Three, 4, 1, 50.0)] },
+                GpuConfig::a100(vec![assign(Three, 0, 0, 55.0)]),
+                GpuConfig::a100(vec![assign(Three, 4, 1, 50.0)]),
             ],
         };
         let deltas = service_deltas(&state, &target, 2);
@@ -386,7 +402,7 @@ mod tests {
             .create_pod(0, pl, Pod { service: 1, batch: 8, throughput: 10.0 })
             .unwrap();
         let target = Deployment {
-            gpus: vec![GpuConfig { assigns: vec![assign(Four, 0, 0, 70.0)] }],
+            gpus: vec![GpuConfig::a100(vec![assign(Four, 0, 0, 70.0)])],
         };
         let deltas = service_deltas(&state, &target, 2);
         let mut actions = Vec::new();

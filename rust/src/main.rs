@@ -10,7 +10,8 @@
 //! * `serve`      — deploy on the PJRT runtime and drive load;
 //! * `study`      — the §2.2 model study (Fig 3/Fig 4 tables);
 //! * `lower-bound`— the rule-free GPU lower bound for a workload;
-//! * `partitions` — dump the 18 legal A100 partitions.
+//! * `partitions` — dump a device kind's maximal legal partitions
+//!                  (18 on A100/H100).
 
 use mig_serving::baselines;
 use mig_serving::cluster::{ClusterState, Executor};
@@ -33,6 +34,7 @@ fn app() -> App {
         commands: vec![
             Command::new("optimize", "run the optimizer on a workload")
                 .opt("workload", "normal-1", "normal-1|normal-2|lognormal-1|lognormal-2|daytime|night or a JSON file")
+                .opt("kinds", "a100", "device kinds available to the optimizer (comma list: a100,a30,h100)")
                 .opt("algorithm", "greedy", "greedy|two-phase")
                 .opt("ga-rounds", "10", "GA rounds for two-phase")
                 .opt("mcts-iters", "60", "MCTS iterations per GA crossover (two-phase)")
@@ -47,7 +49,8 @@ fn app() -> App {
                 .opt("gpus-per-machine", "8", "GPUs per machine")
                 .opt("seed", "42", "latency-model seed"),
             Command::new("simulate", "trace-driven cluster simulation with the online replan loop")
-                .opt("scenario", "diurnal", "diurnal|spike|gpu-failure|onboard")
+                .opt("scenario", "diurnal", "diurnal|spike|gpu-failure|onboard|mixed-fleet")
+                .opt("fleet", "", "per-kind GPU counts, e.g. a100=16,a30=8 (default: the scenario's fleet, else homogeneous a100)")
                 .opt("policy", "threshold", "periodic|threshold|hysteresis")
                 .opt("tick", "60", "control-loop sampling interval, virtual seconds")
                 .opt("seed", "42", "simulation seed (reports are bit-replayable from it)")
@@ -64,7 +67,8 @@ fn app() -> App {
             Command::new("study", "the §2.2 model study (Fig 3/Fig 4)"),
             Command::new("lower-bound", "rule-free GPU lower bound")
                 .opt("workload", "normal-1", "workload name"),
-            Command::new("partitions", "dump the 18 maximal legal A100 partitions"),
+            Command::new("partitions", "dump the maximal legal partitions of a device kind")
+                .opt("kind", "a100", "device kind: a100|a30|h100"),
         ],
     }
 }
@@ -83,10 +87,27 @@ fn load_workload(bank: &ProfileBank, name: &str) -> anyhow::Result<Workload> {
     }
 }
 
+fn parse_kinds(spec: &str) -> anyhow::Result<Vec<mig_serving::mig::DeviceKind>> {
+    let mut kinds = Vec::new();
+    for part in spec.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        kinds.push(
+            mig_serving::mig::DeviceKind::from_name(part)
+                .ok_or_else(|| anyhow::anyhow!("unknown device kind {part:?}"))?,
+        );
+    }
+    anyhow::ensure!(!kinds.is_empty(), "empty device-kind list");
+    Ok(kinds)
+}
+
 fn cmd_optimize(args: &mig_serving::util::cli::Args) -> anyhow::Result<()> {
     let bank = ProfileBank::synthetic();
     let w = load_workload(&bank, args.get("workload").unwrap())?;
-    let ctx = ProblemCtx::new(&bank, &w)?;
+    let kinds = parse_kinds(args.get("kinds").unwrap())?;
+    let ctx = ProblemCtx::new_with_kinds(&bank, &w, &kinds)?;
     let budget = match args.get("algorithm").unwrap() {
         "greedy" => PipelineBudget::fast_only(),
         "two-phase" => {
@@ -135,20 +156,34 @@ fn deployment_json(dep: &optimizer::Deployment) -> json::Value {
         dep.gpus
             .iter()
             .map(|g| {
-                json::Value::Arr(
-                    g.assigns
-                        .iter()
-                        .map(|a| {
-                            json::Value::obj(vec![
-                                ("size", json::Value::from(a.placement.size.slices() as usize)),
-                                ("start", json::Value::from(a.placement.start as usize)),
-                                ("service", json::Value::from(a.service)),
-                                ("batch", json::Value::from(a.batch)),
-                                ("throughput", json::Value::from(a.throughput)),
-                            ])
-                        })
-                        .collect(),
-                )
+                json::Value::obj(vec![
+                    ("kind", json::Value::from(g.kind.name().to_string())),
+                    (
+                        "instances",
+                        json::Value::Arr(
+                            g.assigns
+                                .iter()
+                                .map(|a| {
+                                    json::Value::obj(vec![
+                                        (
+                                            "size",
+                                            json::Value::from(
+                                                a.placement.size.slices() as usize
+                                            ),
+                                        ),
+                                        (
+                                            "start",
+                                            json::Value::from(a.placement.start as usize),
+                                        ),
+                                        ("service", json::Value::from(a.service)),
+                                        ("batch", json::Value::from(a.batch)),
+                                        ("throughput", json::Value::from(a.throughput)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ])
             })
             .collect(),
     )
@@ -196,7 +231,9 @@ fn cmd_transition(args: &mig_serving::util::cli::Args) -> anyhow::Result<()> {
 }
 
 fn cmd_simulate(args: &mig_serving::util::cli::Args) -> anyhow::Result<()> {
-    use mig_serving::simkit::{scenario, ReplanPolicy, SimConfig, Simulation, SCENARIOS};
+    use mig_serving::simkit::{
+        scenario, scenario_fleet, ReplanPolicy, SimConfig, Simulation, SCENARIOS,
+    };
 
     let bank = ProfileBank::synthetic();
     let name = args.get("scenario").unwrap();
@@ -205,6 +242,12 @@ fn cmd_simulate(args: &mig_serving::util::cli::Args) -> anyhow::Result<()> {
         "unknown scenario {name:?} (expected one of {SCENARIOS:?})"
     );
     let trace = scenario(&bank, name);
+    let fleet_arg = args.get("fleet").unwrap();
+    let fleet = if fleet_arg.is_empty() {
+        scenario_fleet(name)
+    } else {
+        Some(mig_serving::mig::FleetSpec::parse(fleet_arg)?)
+    };
 
     // `--quick` IS `SimConfig::quick()` (the CI smoke configuration);
     // otherwise `--tick` overrides the default cadence.
@@ -224,18 +267,26 @@ fn cmd_simulate(args: &mig_serving::util::cli::Args) -> anyhow::Result<()> {
     };
     let threads = args.get_usize("threads").unwrap_or(0);
     cfg.seed = args.get_u64("seed").unwrap_or(42);
+    cfg.fleet = fleet;
     cfg.budget = PipelineBudget {
         ga_rounds: args.get_usize("ga-rounds").unwrap_or(0),
         parallelism: (threads > 0).then_some(threads),
         ..Default::default()
     };
     println!(
-        "scenario={} horizon={:.1}h tick={}s policy={} seed={}",
+        "scenario={} horizon={:.1}h tick={}s policy={} seed={} fleet={}",
         trace.name,
         trace.horizon_s / 3600.0,
         cfg.tick_s,
         cfg.policy.label(),
-        cfg.seed
+        cfg.seed,
+        cfg.fleet
+            .as_ref()
+            .map(|f| f.label())
+            .unwrap_or_else(|| format!(
+                "a100={}",
+                cfg.machines * cfg.gpus_per_machine
+            )),
     );
     let sim = Simulation::new(&bank, &trace, cfg);
     let cmp = sim.run_with_baseline()?;
@@ -249,6 +300,17 @@ fn cmd_simulate(args: &mig_serving::util::cli::Args) -> anyhow::Result<()> {
         cmp.control.replans,
         cmp.control.transition_seconds()
     );
+    let per_kind: Vec<String> = cmp
+        .control
+        .fleet
+        .iter()
+        .map(|(k, c)| {
+            let used =
+                cmp.control.used_gpus_by_kind.get(k).copied().unwrap_or(0);
+            format!("{k} {used}/{c} in use")
+        })
+        .collect();
+    println!("fleet at horizon: {}", per_kind.join(", "));
     if args.flag("verbose") {
         println!("\nevent log:");
         for line in &cmp.control.event_log {
@@ -344,9 +406,19 @@ fn cmd_lower_bound(args: &mig_serving::util::cli::Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_partitions() {
+fn cmd_partitions(args: &mig_serving::util::cli::Args) -> anyhow::Result<()> {
+    let kind_name = args.get("kind").unwrap();
+    let kind = mig_serving::mig::DeviceKind::from_name(kind_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown device kind {kind_name:?}"))?;
+    let maximal = mig_serving::mig::partition::maximal_partitions_on(kind);
+    println!(
+        "{}: {} compute slices, {} maximal legal partitions",
+        kind.name(),
+        kind.compute_slices(),
+        maximal.len()
+    );
     let mut t = Table::new(&["#", "partition", "placements"]);
-    for (i, p) in mig_serving::mig::partition::maximal_partitions().iter().enumerate() {
+    for (i, p) in maximal.iter().enumerate() {
         t.row(vec![
             (i + 1).to_string(),
             p.label(),
@@ -358,6 +430,7 @@ fn cmd_partitions() {
         ]);
     }
     println!("{}", t.render());
+    Ok(())
 }
 
 fn main() {
@@ -377,10 +450,7 @@ fn main() {
         "serve" => cmd_serve(&args),
         "study" => cmd_study(),
         "lower-bound" => cmd_lower_bound(&args),
-        "partitions" => {
-            cmd_partitions();
-            Ok(())
-        }
+        "partitions" => cmd_partitions(&args),
         _ => unreachable!(),
     };
     if let Err(e) = result {

@@ -1,0 +1,338 @@
+//! Device kinds: the geometry + performance model of every
+//! reconfigurable GPU type the scheduler knows about.
+//!
+//! The paper's RMS formulation is device-agnostic — a reconfigurable
+//! machine is any unit with an enumerable set of partition
+//! configurations (§3) — but the seed reproduction hard-coded the
+//! A100's 7-slice geometry everywhere. [`DeviceKind`] centralizes what
+//! varies per device type:
+//!
+//! * the compute-slice and memory-slot counts,
+//! * the valid instance-profile set and per-profile placement starts
+//!   (`nvidia-smi mig -lgipp` per device),
+//! * the hard profile-exclusion rules (A100/H100: no 4/7 + 3/7),
+//! * a per-slice performance scale relative to the A100 (the profile
+//!   bank stores A100 measurements; other kinds derate/uprate them).
+//!
+//! **Bit-identity contract:** every kind-parameterized `_on` API in
+//! [`super::partition`] / [`super::rules`] collapses to the seed A100
+//! code path for `DeviceKind::A100` — same tables, same iteration
+//! order, same floats — so pure-A100 fleets produce byte-identical
+//! optimizer plans, simkit event logs, and bench tables (DESIGN.md §4).
+
+use super::size::InstanceSize;
+
+/// A reconfigurable GPU device type.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum DeviceKind {
+    /// NVIDIA A100: 7 compute slices over 8 memory slots, profiles
+    /// 1/2/3/4/7, the paper's testbed device. The reference kind — all
+    /// profile-bank throughputs are measured on it.
+    #[default]
+    A100,
+    /// NVIDIA A30: 4 compute slices over 4 memory slots, profiles
+    /// 1g.6gb / 2g.12gb / 4g.24gb, no exclusion rules, roughly half an
+    /// A100's per-slice throughput.
+    A30,
+    /// NVIDIA H100: same 7-slice / 8-slot MIG geometry and exclusion
+    /// rule as the A100, but each slice is substantially faster.
+    H100,
+}
+
+impl DeviceKind {
+    /// Every kind, in canonical (enum) order.
+    pub const ALL: [DeviceKind; 3] = [DeviceKind::A100, DeviceKind::A30, DeviceKind::H100];
+
+    /// Short stable name used by CLI fleet specs, reports, and labels.
+    pub fn name(self) -> &'static str {
+        match self {
+            DeviceKind::A100 => "a100",
+            DeviceKind::A30 => "a30",
+            DeviceKind::H100 => "h100",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<DeviceKind> {
+        match name.trim().to_ascii_lowercase().as_str() {
+            "a100" => Some(DeviceKind::A100),
+            "a30" => Some(DeviceKind::A30),
+            "h100" => Some(DeviceKind::H100),
+            _ => None,
+        }
+    }
+
+    /// Small dense discriminant (canonical-key tag for interned genes).
+    pub fn index(self) -> u8 {
+        match self {
+            DeviceKind::A100 => 0,
+            DeviceKind::A30 => 1,
+            DeviceKind::H100 => 2,
+        }
+    }
+
+    /// Number of compute slices this device exposes.
+    pub fn compute_slices(self) -> u8 {
+        match self {
+            DeviceKind::A100 | DeviceKind::H100 => 7,
+            DeviceKind::A30 => 4,
+        }
+    }
+
+    /// Number of memory slots (placement coordinate space).
+    pub fn mem_slots(self) -> u8 {
+        match self {
+            DeviceKind::A100 | DeviceKind::H100 => 8,
+            DeviceKind::A30 => 4,
+        }
+    }
+
+    /// The valid instance profiles, ascending — for A100 this is
+    /// exactly [`InstanceSize::ALL`] (iteration-order contract: the
+    /// A100 enumerators must walk the same order the seed code did).
+    pub fn sizes(self) -> &'static [InstanceSize] {
+        match self {
+            DeviceKind::A100 | DeviceKind::H100 => &InstanceSize::ALL,
+            DeviceKind::A30 => {
+                &[InstanceSize::One, InstanceSize::Two, InstanceSize::Four]
+            }
+        }
+    }
+
+    /// Does this device expose the profile at all?
+    pub fn supports(self, size: InstanceSize) -> bool {
+        self.sizes().contains(&size)
+    }
+
+    /// Legal placement starts of `size` on this device (empty when the
+    /// profile does not exist). For A100 these are exactly
+    /// [`InstanceSize::starts`].
+    pub fn starts_of(self, size: InstanceSize) -> &'static [u8] {
+        match self {
+            DeviceKind::A100 | DeviceKind::H100 => size.starts(),
+            DeviceKind::A30 => match size {
+                InstanceSize::One => &[0, 1, 2, 3],
+                InstanceSize::Two => &[0, 2],
+                InstanceSize::Four => &[0],
+                _ => &[],
+            },
+        }
+    }
+
+    /// The profile that occupies the whole device.
+    pub fn full_size(self) -> InstanceSize {
+        match self {
+            DeviceKind::A100 | DeviceKind::H100 => InstanceSize::Seven,
+            DeviceKind::A30 => InstanceSize::Four,
+        }
+    }
+
+    /// Hard exclusion rule (§2.1): 4-slice and 3-slice instances cannot
+    /// coexist. Applies to the 7-slice geometries; the A30 has no
+    /// 3-slice profile, hence no rule.
+    pub fn forbids_four_plus_three(self) -> bool {
+        match self {
+            DeviceKind::A100 | DeviceKind::H100 => true,
+            DeviceKind::A30 => false,
+        }
+    }
+
+    /// Per-slice throughput scale relative to the A100 (the profile
+    /// bank's reference device). Latency scales inversely. Exactly 1.0
+    /// for the A100 so the reference path's floats are untouched.
+    pub fn perf_scale(self) -> f64 {
+        match self {
+            DeviceKind::A100 => 1.0,
+            DeviceKind::A30 => 0.55,
+            DeviceKind::H100 => 2.2,
+        }
+    }
+}
+
+impl std::fmt::Display for DeviceKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+/// A mixed fleet: GPU counts per device kind, canonically ordered.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FleetSpec {
+    /// (kind, count), kind-ascending, counts > 0, kinds distinct.
+    counts: Vec<(DeviceKind, usize)>,
+}
+
+impl FleetSpec {
+    /// A homogeneous fleet.
+    pub fn homogeneous(kind: DeviceKind, count: usize) -> FleetSpec {
+        assert!(count > 0, "fleet must have at least one GPU");
+        FleetSpec { counts: vec![(kind, count)] }
+    }
+
+    /// Parse a CLI-style spec: `"a100=16,a30=8"`. Duplicate kinds sum.
+    pub fn parse(spec: &str) -> anyhow::Result<FleetSpec> {
+        let mut counts: Vec<(DeviceKind, usize)> = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (name, n) = part.split_once('=').ok_or_else(|| {
+                anyhow::anyhow!("fleet entry {part:?}: expected <kind>=<count>")
+            })?;
+            let kind = DeviceKind::from_name(name)
+                .ok_or_else(|| anyhow::anyhow!("unknown device kind {name:?}"))?;
+            let n: usize = n
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("fleet entry {part:?}: bad count"))?;
+            anyhow::ensure!(n > 0, "fleet entry {part:?}: count must be positive");
+            match counts.iter_mut().find(|(k, _)| *k == kind) {
+                Some((_, c)) => *c += n,
+                None => counts.push((kind, n)),
+            }
+        }
+        anyhow::ensure!(!counts.is_empty(), "empty fleet spec {spec:?}");
+        counts.sort_by_key(|&(k, _)| k);
+        Ok(FleetSpec { counts })
+    }
+
+    /// (kind, count) pairs, kind-ascending.
+    pub fn counts(&self) -> &[(DeviceKind, usize)] {
+        &self.counts
+    }
+
+    /// Total GPUs across kinds.
+    pub fn total(&self) -> usize {
+        self.counts.iter().map(|&(_, c)| c).sum()
+    }
+
+    /// The distinct kinds, ascending.
+    pub fn kinds(&self) -> Vec<DeviceKind> {
+        self.counts.iter().map(|&(k, _)| k).collect()
+    }
+
+    /// Is this the seed configuration (only A100s)?
+    pub fn is_pure_a100(&self) -> bool {
+        self.kinds() == vec![DeviceKind::A100]
+    }
+
+    /// One kind per GPU, grouped kind-ascending — the flat layout
+    /// [`crate::cluster::ClusterState::from_fleet`] realizes.
+    pub fn gpu_kinds(&self) -> Vec<DeviceKind> {
+        let mut v = Vec::with_capacity(self.total());
+        for &(k, c) in &self.counts {
+            v.extend(std::iter::repeat(k).take(c));
+        }
+        v
+    }
+
+    /// CLI-roundtrippable rendering, e.g. `"a100=16,a30=8"`.
+    pub fn label(&self) -> String {
+        self.counts
+            .iter()
+            .map(|(k, c)| format!("{}={c}", k.name()))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a100_tables_match_seed_geometry() {
+        // The delegation contract: A100 answers must be exactly the
+        // seed constants/tables.
+        let k = DeviceKind::A100;
+        assert_eq!(k.compute_slices(), super::super::COMPUTE_SLICES);
+        assert_eq!(k.mem_slots(), super::super::MEM_SLOTS);
+        assert_eq!(k.sizes(), &InstanceSize::ALL);
+        for s in InstanceSize::ALL {
+            assert_eq!(k.starts_of(s), s.starts(), "{s}");
+            assert!(k.supports(s));
+        }
+        assert!(k.forbids_four_plus_three());
+        assert_eq!(k.perf_scale(), 1.0);
+        assert_eq!(k.full_size(), InstanceSize::Seven);
+    }
+
+    #[test]
+    fn every_start_fits_the_device() {
+        for kind in DeviceKind::ALL {
+            for &s in kind.sizes() {
+                assert!(!kind.starts_of(s).is_empty(), "{kind} {s}");
+                for &st in kind.starts_of(s) {
+                    assert!(
+                        st + s.mem_slots() <= kind.mem_slots(),
+                        "{kind}: {s} @ {st} exceeds {} slots",
+                        kind.mem_slots()
+                    );
+                }
+            }
+            // Unsupported sizes expose no starts.
+            for s in InstanceSize::ALL {
+                if !kind.supports(s) {
+                    assert!(kind.starts_of(s).is_empty(), "{kind} {s}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn a30_profile_set() {
+        let k = DeviceKind::A30;
+        assert_eq!(k.compute_slices(), 4);
+        assert_eq!(k.mem_slots(), 4);
+        assert!(k.supports(InstanceSize::One));
+        assert!(k.supports(InstanceSize::Two));
+        assert!(k.supports(InstanceSize::Four));
+        assert!(!k.supports(InstanceSize::Three));
+        assert!(!k.supports(InstanceSize::Seven));
+        assert!(!k.forbids_four_plus_three());
+        assert_eq!(k.full_size(), InstanceSize::Four);
+        assert!(k.perf_scale() < 1.0);
+    }
+
+    #[test]
+    fn h100_shares_a100_geometry_but_is_faster() {
+        let (a, h) = (DeviceKind::A100, DeviceKind::H100);
+        assert_eq!(a.sizes(), h.sizes());
+        for &s in a.sizes() {
+            assert_eq!(a.starts_of(s), h.starts_of(s));
+        }
+        assert!(h.perf_scale() > 1.0);
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for kind in DeviceKind::ALL {
+            assert_eq!(DeviceKind::from_name(kind.name()), Some(kind));
+            assert_eq!(DeviceKind::from_name(&kind.name().to_uppercase()), Some(kind));
+        }
+        assert_eq!(DeviceKind::from_name("t4"), None);
+        assert_eq!(DeviceKind::default(), DeviceKind::A100);
+    }
+
+    #[test]
+    fn fleet_spec_parses_and_orders() {
+        let f = FleetSpec::parse("a30=4, a100=8").unwrap();
+        assert_eq!(f.counts(), &[(DeviceKind::A100, 8), (DeviceKind::A30, 4)]);
+        assert_eq!(f.total(), 12);
+        assert_eq!(f.kinds(), vec![DeviceKind::A100, DeviceKind::A30]);
+        assert!(!f.is_pure_a100());
+        assert_eq!(f.label(), "a100=8,a30=4");
+        assert_eq!(f.gpu_kinds().len(), 12);
+        assert_eq!(f.gpu_kinds()[0], DeviceKind::A100);
+        assert_eq!(f.gpu_kinds()[11], DeviceKind::A30);
+
+        let dup = FleetSpec::parse("a100=3,a100=5").unwrap();
+        assert_eq!(dup.counts(), &[(DeviceKind::A100, 8)]);
+        assert!(dup.is_pure_a100());
+
+        assert!(FleetSpec::parse("").is_err());
+        assert!(FleetSpec::parse("a100").is_err());
+        assert!(FleetSpec::parse("a100=0").is_err());
+        assert!(FleetSpec::parse("p100=2").is_err());
+    }
+}

@@ -16,11 +16,20 @@
 //! The derived set of *maximal* partitions has exactly **18 members**,
 //! matching the count the paper quotes from the MIG user guide; this is
 //! asserted by a test.
+//!
+//! The module is **kind-parameterized** ([`device::DeviceKind`]): the
+//! A100 tables above are one instance of the general model, alongside
+//! the A30 (4 slices, no exclusion rule) and the H100 (A100 geometry,
+//! faster slices). Every kind-aware API has an `_on(kind, ...)` form;
+//! the original names delegate to `DeviceKind::A100` and are
+//! bit-identical to the seed implementation (DESIGN.md §4).
 
+pub mod device;
 pub mod partition;
 pub mod rules;
 pub mod size;
 
+pub use device::{DeviceKind, FleetSpec};
 pub use partition::{Partition, Placement};
 pub use rules::rule_reconf;
 pub use size::InstanceSize;

@@ -1,5 +1,11 @@
 //! GPU partitions: placed instance sets and their legality.
+//!
+//! Legality is **kind-parameterized**: every check/enumeration has an
+//! `_on(kind, ...)` form taking a [`DeviceKind`], and the original
+//! A100-named APIs delegate to `DeviceKind::A100` (bit-identical to the
+//! seed implementation — same tables, same iteration order).
 
+use super::device::DeviceKind;
 use super::size::InstanceSize;
 use super::MEM_SLOTS;
 use std::fmt;
@@ -31,6 +37,14 @@ impl Placement {
     pub fn valid(&self) -> bool {
         self.size.starts().contains(&self.start)
             && self.start + self.size.mem_slots() <= MEM_SLOTS
+    }
+
+    /// [`Placement::valid`] on a specific device kind (A100 delegates
+    /// to the seed tables; other kinds use their own start sets and
+    /// memory-slot counts).
+    pub fn valid_on(&self, kind: DeviceKind) -> bool {
+        kind.starts_of(self.size).contains(&self.start)
+            && self.start + self.size.mem_slots() <= kind.mem_slots()
     }
 }
 
@@ -79,27 +93,40 @@ impl Partition {
     }
 
     /// Construct, panicking on illegal input (for statically known sets).
-    pub fn new(mut placements: Vec<Placement>) -> Partition {
+    pub fn new(placements: Vec<Placement>) -> Partition {
+        Partition::new_on(DeviceKind::A100, placements)
+    }
+
+    /// Construct for a device kind, panicking on illegal input.
+    pub fn new_on(kind: DeviceKind, mut placements: Vec<Placement>) -> Partition {
         placements.sort();
         let p = Partition { placements };
-        if let Err(e) = p.check() {
-            panic!("illegal partition {p}: {e}");
+        if let Err(e) = p.check_on(kind) {
+            panic!("illegal {kind} partition {p}: {e}");
         }
         p
     }
 
-    /// Construct, validating.
-    pub fn try_new(mut placements: Vec<Placement>) -> Result<Partition, Illegal> {
+    /// Construct, validating against the A100 rules.
+    pub fn try_new(placements: Vec<Placement>) -> Result<Partition, Illegal> {
+        Partition::try_new_on(DeviceKind::A100, placements)
+    }
+
+    /// Construct, validating against a device kind's rules.
+    pub fn try_new_on(
+        kind: DeviceKind,
+        mut placements: Vec<Placement>,
+    ) -> Result<Partition, Illegal> {
         placements.sort();
         let p = Partition { placements };
-        p.check()?;
+        p.check_on(kind)?;
         Ok(p)
     }
 
-    fn check(&self) -> Result<(), Illegal> {
+    pub(crate) fn check_on(&self, kind: DeviceKind) -> Result<(), Illegal> {
         let ps = &self.placements;
         for (i, a) in ps.iter().enumerate() {
-            if !a.valid() {
+            if !a.valid_on(kind) {
                 return Err(Illegal::BadStart(*a));
             }
             for b in &ps[i + 1..] {
@@ -111,11 +138,15 @@ impl Partition {
                 }
             }
         }
-        // Hard-coded A100 rule: no 4/7 + 3/7 on the same GPU (§2.1).
-        let has4 = ps.iter().any(|p| p.size == InstanceSize::Four);
-        let has3 = ps.iter().any(|p| p.size == InstanceSize::Three);
-        if has4 && has3 {
-            return Err(Illegal::FourPlusThree);
+        // Hard profile-exclusion rule (§2.1): no 4-slice + 3-slice on
+        // the 7-slice geometries. Kinds without a 3-slice profile have
+        // no such rule.
+        if kind.forbids_four_plus_three() {
+            let has4 = ps.iter().any(|p| p.size == InstanceSize::Four);
+            let has3 = ps.iter().any(|p| p.size == InstanceSize::Three);
+            if has4 && has3 {
+                return Err(Illegal::FourPlusThree);
+            }
         }
         Ok(())
     }
@@ -150,18 +181,27 @@ impl Partition {
     /// This is exactly the paper's point that "n free slices" does NOT
     /// imply an n/7 instance fits (§2.1).
     pub fn can_allocate(&self, size: InstanceSize) -> Option<u8> {
+        self.can_allocate_on(DeviceKind::A100, size)
+    }
+
+    /// [`Partition::can_allocate`] under a device kind's profile set,
+    /// start tables, and exclusion rules.
+    pub fn can_allocate_on(&self, kind: DeviceKind, size: InstanceSize) -> Option<u8> {
         // Hard rule first.
-        if size == InstanceSize::Three
-            && self.placements.iter().any(|p| p.size == InstanceSize::Four)
-        {
-            return None;
+        if kind.forbids_four_plus_three() {
+            if size == InstanceSize::Three
+                && self.placements.iter().any(|p| p.size == InstanceSize::Four)
+            {
+                return None;
+            }
+            if size == InstanceSize::Four
+                && self.placements.iter().any(|p| p.size == InstanceSize::Three)
+            {
+                return None;
+            }
         }
-        if size == InstanceSize::Four
-            && self.placements.iter().any(|p| p.size == InstanceSize::Three)
-        {
-            return None;
-        }
-        size.starts().iter().copied().find(|&st| {
+        // Unsupported profiles have empty start tables.
+        kind.starts_of(size).iter().copied().find(|&st| {
             let cand = Placement::new(size, st);
             self.placements.iter().all(|p| !p.overlaps(&cand))
         })
@@ -170,11 +210,20 @@ impl Partition {
     /// Allocate `size` at the first legal start, returning the new
     /// partition and the placement.
     pub fn allocate(&self, size: InstanceSize) -> Option<(Partition, Placement)> {
-        let st = self.can_allocate(size)?;
+        self.allocate_on(DeviceKind::A100, size)
+    }
+
+    /// [`Partition::allocate`] under a device kind's rules.
+    pub fn allocate_on(
+        &self,
+        kind: DeviceKind,
+        size: InstanceSize,
+    ) -> Option<(Partition, Placement)> {
+        let st = self.can_allocate_on(kind, size)?;
         let pl = Placement::new(size, st);
         let mut ps = self.placements.clone();
         ps.push(pl);
-        Some((Partition::new(ps), pl))
+        Some((Partition::new_on(kind, ps), pl))
     }
 
     /// Remove a placement (must exist).
@@ -187,7 +236,12 @@ impl Partition {
 
     /// Is no further instance allocatable?
     pub fn is_maximal(&self) -> bool {
-        InstanceSize::ALL.iter().all(|&s| self.can_allocate(s).is_none())
+        self.is_maximal_on(DeviceKind::A100)
+    }
+
+    /// [`Partition::is_maximal`] under a device kind's profile set.
+    pub fn is_maximal_on(&self, kind: DeviceKind) -> bool {
+        kind.sizes().iter().all(|&s| self.can_allocate_on(kind, s).is_none())
     }
 
     /// Build a partition realizing `sizes`, searching over placement
@@ -195,8 +249,13 @@ impl Partition {
     /// at start 4, not 0). Returns None if the multiset is not
     /// realizable.
     pub fn from_sizes(sizes: &[InstanceSize]) -> Option<Partition> {
-        Partition::empty().complete_with(sizes).map(|added| {
-            Partition::new(added)
+        Partition::from_sizes_on(DeviceKind::A100, sizes)
+    }
+
+    /// [`Partition::from_sizes`] under a device kind's rules.
+    pub fn from_sizes_on(kind: DeviceKind, sizes: &[InstanceSize]) -> Option<Partition> {
+        Partition::empty().complete_with_on(kind, sizes).map(|added| {
+            Partition::new_on(kind, added)
         })
     }
 
@@ -206,30 +265,46 @@ impl Partition {
     /// compact phase to keep matching pods in place while rebuilding the
     /// rest of a GPU.
     pub fn complete_with(&self, sizes: &[InstanceSize]) -> Option<Vec<Placement>> {
-        let mut sorted = sizes.to_vec();
-        sorted.sort_by(|a, b| b.cmp(a));
-        // Hard rule is multiset-level: reject 4/7 + 3/7 up front.
-        let all_sizes: Vec<InstanceSize> = self
-            .placements
-            .iter()
-            .map(|p| p.size)
-            .chain(sorted.iter().copied())
-            .collect();
-        if all_sizes.contains(&InstanceSize::Four) && all_sizes.contains(&InstanceSize::Three)
-        {
+        self.complete_with_on(DeviceKind::A100, sizes)
+    }
+
+    /// [`Partition::complete_with`] under a device kind's rules.
+    pub fn complete_with_on(
+        &self,
+        kind: DeviceKind,
+        sizes: &[InstanceSize],
+    ) -> Option<Vec<Placement>> {
+        if sizes.iter().any(|&s| !kind.supports(s)) {
             return None;
         }
+        let mut sorted = sizes.to_vec();
+        sorted.sort_by(|a, b| b.cmp(a));
+        // Hard rule is multiset-level: reject 4 + 3 up front.
+        if kind.forbids_four_plus_three() {
+            let all_sizes: Vec<InstanceSize> = self
+                .placements
+                .iter()
+                .map(|p| p.size)
+                .chain(sorted.iter().copied())
+                .collect();
+            if all_sizes.contains(&InstanceSize::Four)
+                && all_sizes.contains(&InstanceSize::Three)
+            {
+                return None;
+            }
+        }
         fn dfs(
+            kind: DeviceKind,
             sizes: &[InstanceSize],
             fixed: &[Placement],
             placed: &mut Vec<Placement>,
         ) -> bool {
             let Some(&size) = sizes.first() else { return true };
-            for &st in size.starts() {
+            for &st in kind.starts_of(size) {
                 let cand = Placement::new(size, st);
                 if fixed.iter().chain(placed.iter()).all(|p| !p.overlaps(&cand)) {
                     placed.push(cand);
-                    if dfs(&sizes[1..], fixed, placed) {
+                    if dfs(kind, &sizes[1..], fixed, placed) {
                         return true;
                     }
                     placed.pop();
@@ -238,7 +313,7 @@ impl Partition {
             false
         }
         let mut placed = Vec::with_capacity(sorted.len());
-        dfs(&sorted, &self.placements, &mut placed).then_some(placed)
+        dfs(kind, &sorted, &self.placements, &mut placed).then_some(placed)
     }
 
     /// Paper-style label, e.g. `"4-2-1"`, `"7"`, `""` (empty).
@@ -266,16 +341,24 @@ impl fmt::Display for Partition {
 /// Used by the optimizer's configuration enumerator and by property
 /// tests. The set is small (couple hundred placement-level states).
 pub fn all_legal_partitions() -> Vec<Partition> {
+    all_legal_partitions_on(DeviceKind::A100)
+}
+
+/// [`all_legal_partitions`] for a device kind. For `A100` the walk
+/// order (sizes ascending, starts in table order) is exactly the seed
+/// enumerator's, so the sorted result is identical.
+pub fn all_legal_partitions_on(kind: DeviceKind) -> Vec<Partition> {
     // All geometrically valid placements.
     let mut all: Vec<Placement> = Vec::new();
-    for s in InstanceSize::ALL {
-        for &st in s.starts() {
+    for &s in kind.sizes() {
+        for &st in kind.starts_of(s) {
             all.push(Placement::new(s, st));
         }
     }
     let mut out: Vec<Partition> = Vec::new();
     // DFS over placements in canonical order; prune on conflicts.
     fn dfs(
+        kind: DeviceKind,
         all: &[Placement],
         from: usize,
         cur: &mut Vec<Placement>,
@@ -285,23 +368,24 @@ pub fn all_legal_partitions() -> Vec<Partition> {
         for i in from..all.len() {
             let cand = all[i];
             let conflict = cur.iter().any(|p| p.overlaps(&cand))
-                || (cand.size == InstanceSize::Three
-                    && cur.iter().any(|p| p.size == InstanceSize::Four))
-                || (cand.size == InstanceSize::Four
-                    && cur.iter().any(|p| p.size == InstanceSize::Three));
+                || (kind.forbids_four_plus_three()
+                    && ((cand.size == InstanceSize::Three
+                        && cur.iter().any(|p| p.size == InstanceSize::Four))
+                        || (cand.size == InstanceSize::Four
+                            && cur.iter().any(|p| p.size == InstanceSize::Three))));
             if conflict {
                 continue;
             }
             cur.push(cand);
             cur.sort();
-            dfs(all, i + 1, cur, out);
+            dfs(kind, all, i + 1, cur, out);
             // restore: remove cand
             let pos = cur.iter().position(|p| *p == cand).unwrap();
             cur.remove(pos);
         }
     }
     let mut cur = Vec::new();
-    dfs(&all, 0, &mut cur, &mut out);
+    dfs(kind, &all, 0, &mut cur, &mut out);
     out.sort();
     out.dedup();
     out
@@ -310,14 +394,27 @@ pub fn all_legal_partitions() -> Vec<Partition> {
 /// The *maximal* legal partitions. The paper (§2.1) counts **18** of
 /// these on A100; a test pins that count.
 pub fn maximal_partitions() -> Vec<Partition> {
-    all_legal_partitions().into_iter().filter(|p| p.is_maximal()).collect()
+    maximal_partitions_on(DeviceKind::A100)
+}
+
+/// [`maximal_partitions`] for a device kind.
+pub fn maximal_partitions_on(kind: DeviceKind) -> Vec<Partition> {
+    all_legal_partitions_on(kind)
+        .into_iter()
+        .filter(|p| p.is_maximal_on(kind))
+        .collect()
 }
 
 /// Distinct size multisets over all legal partitions (what the optimizer
 /// enumerates configurations from).
 pub fn legal_size_multisets() -> Vec<Vec<InstanceSize>> {
+    legal_size_multisets_on(DeviceKind::A100)
+}
+
+/// [`legal_size_multisets`] for a device kind.
+pub fn legal_size_multisets_on(kind: DeviceKind) -> Vec<Vec<InstanceSize>> {
     let mut v: Vec<Vec<InstanceSize>> =
-        all_legal_partitions().iter().map(|p| p.sizes()).collect();
+        all_legal_partitions_on(kind).iter().map(|p| p.sizes()).collect();
     v.sort();
     v.dedup();
     v
@@ -447,7 +544,7 @@ mod tests {
         let all = all_legal_partitions();
         assert!(all.len() > 50, "expected a rich state space, got {}", all.len());
         for p in &all {
-            assert!(p.check().is_ok(), "{p}");
+            assert!(p.check_on(DeviceKind::A100).is_ok(), "{p}");
         }
         let mut seen = std::collections::HashSet::new();
         for p in &all {
@@ -514,5 +611,61 @@ mod tests {
     fn label_sorted_descending() {
         let p = part(&[One, Four, Two]);
         assert_eq!(p.label(), "4-2-1");
+    }
+
+    #[test]
+    fn a100_on_variants_delegate_exactly() {
+        // The `_on(A100)` forms are the same functions as the seed
+        // A100 APIs — spot-check the whole enumeration plus per-call
+        // agreement on a busy partition.
+        assert_eq!(all_legal_partitions(), all_legal_partitions_on(DeviceKind::A100));
+        assert_eq!(legal_size_multisets(), legal_size_multisets_on(DeviceKind::A100));
+        assert_eq!(maximal_partitions(), maximal_partitions_on(DeviceKind::A100));
+        let p = part(&[Three, Two, One]);
+        for s in InstanceSize::ALL {
+            assert_eq!(p.can_allocate(s), p.can_allocate_on(DeviceKind::A100, s));
+        }
+        assert_eq!(p.is_maximal(), p.is_maximal_on(DeviceKind::A100));
+    }
+
+    #[test]
+    fn a30_partitions_respect_its_geometry() {
+        let kind = DeviceKind::A30;
+        let all = all_legal_partitions_on(kind);
+        assert!(all.iter().any(|p| p.is_empty()));
+        for p in &all {
+            assert!(p.used_slices() <= kind.compute_slices(), "{p}");
+            for pl in p.placements() {
+                assert!(pl.valid_on(kind), "{pl:?}");
+                assert!(pl.size != Seven && pl.size != Three, "{pl:?}");
+            }
+        }
+        // 2-2 fills the A30; 4 is exclusive; 1-1-1-1 is legal.
+        let two_two = Partition::from_sizes_on(kind, &[Two, Two]).unwrap();
+        assert!(two_two.is_maximal_on(kind));
+        let four = Partition::from_sizes_on(kind, &[Four]).unwrap();
+        assert!(four.is_maximal_on(kind));
+        assert!(Partition::from_sizes_on(kind, &[One, One, One, One]).is_some());
+        // A100-only shapes are rejected.
+        assert!(Partition::from_sizes_on(kind, &[Seven]).is_none());
+        assert!(Partition::from_sizes_on(kind, &[Three]).is_none());
+        assert!(Partition::from_sizes_on(kind, &[Four, One]).is_none());
+        // A 4-slice full instance + nothing else: can_allocate refuses
+        // everything.
+        for s in InstanceSize::ALL {
+            assert!(four.can_allocate_on(kind, s).is_none(), "{s}");
+        }
+        // One@4 is valid on A100 but off the end of an A30.
+        assert!(Placement::new(One, 4).valid());
+        assert!(!Placement::new(One, 4).valid_on(kind));
+    }
+
+    #[test]
+    fn h100_matches_a100_partition_space() {
+        assert_eq!(
+            all_legal_partitions_on(DeviceKind::H100),
+            all_legal_partitions()
+        );
+        assert_eq!(maximal_partitions_on(DeviceKind::H100).len(), 18);
     }
 }

@@ -13,6 +13,7 @@
 //! invoke this once per GPU), so this module validates the partition
 //! transition itself.
 
+use super::device::DeviceKind;
 use super::partition::{Illegal, Partition, Placement};
 
 /// Errors from an attempted reconfiguration.
@@ -59,18 +60,39 @@ pub fn reconfigure(
     remove: &[Placement],
     add: &[Placement],
 ) -> Result<Partition, ReconfError> {
+    reconfigure_on(DeviceKind::A100, current, remove, add)
+}
+
+/// [`reconfigure`] validated against a specific device kind's rules
+/// (the per-GPU kind of a heterogeneous cluster).
+pub fn reconfigure_on(
+    kind: DeviceKind,
+    current: &Partition,
+    remove: &[Placement],
+    add: &[Placement],
+) -> Result<Partition, ReconfError> {
     let mut work = current.clone();
     for &pl in remove {
         work = work.remove(pl).ok_or(ReconfError::NotPresent(pl))?;
     }
     let mut placements = work.placements().to_vec();
     placements.extend_from_slice(add);
-    Ok(Partition::try_new(placements)?)
+    Ok(Partition::try_new_on(kind, placements)?)
 }
 
 /// The boolean predicate form used in the paper's formalism.
 pub fn rule_reconf(current: &Partition, remove: &[Placement], add: &[Placement]) -> bool {
     reconfigure(current, remove, add).is_ok()
+}
+
+/// [`rule_reconf`] for a specific device kind.
+pub fn rule_reconf_on(
+    kind: DeviceKind,
+    current: &Partition,
+    remove: &[Placement],
+    add: &[Placement],
+) -> bool {
+    reconfigure_on(kind, current, remove, add).is_ok()
 }
 
 #[cfg(test)]

@@ -66,6 +66,18 @@ impl InstanceSize {
         }
     }
 
+    /// Legal placement starts on a specific device kind (empty when the
+    /// profile does not exist there). `starts_on(DeviceKind::A100)` is
+    /// exactly [`InstanceSize::starts`].
+    pub fn starts_on(self, kind: super::DeviceKind) -> &'static [u8] {
+        kind.starts_of(self)
+    }
+
+    /// Does the profile exist on `kind` at all?
+    pub fn exists_on(self, kind: super::DeviceKind) -> bool {
+        kind.supports(self)
+    }
+
     /// Parse from the slice count (1, 2, 3, 4, 7).
     pub fn from_slices(n: u8) -> Option<InstanceSize> {
         match n {
@@ -121,5 +133,16 @@ mod tests {
     fn display() {
         assert_eq!(InstanceSize::Three.to_string(), "3/7");
         assert_eq!(InstanceSize::Seven.to_string(), "7/7");
+    }
+
+    #[test]
+    fn kind_parameterized_starts_delegate() {
+        use super::super::DeviceKind;
+        for s in InstanceSize::ALL {
+            assert_eq!(s.starts_on(DeviceKind::A100), s.starts());
+            assert!(s.exists_on(DeviceKind::A100));
+        }
+        assert!(!InstanceSize::Seven.exists_on(DeviceKind::A30));
+        assert_eq!(InstanceSize::Two.starts_on(DeviceKind::A30), &[0u8, 2]);
     }
 }

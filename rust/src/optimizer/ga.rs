@@ -297,14 +297,16 @@ impl GeneticAlgorithm {
         dep.is_valid(ctx, pool).then_some(dep)
     }
 
-    /// Mutation: swap services between randomly chosen same-size
-    /// instance pairs running different services. Throughput totals are
-    /// preserved (same size ⇒ same profiled throughput numbers apply to
-    /// the swapped services), so validity is maintained; swaps where
-    /// either service cannot run on the other instance (min-size /
-    /// latency infeasibility) are skipped. Operates on (size, service)
-    /// pair lists and re-materializes **only the touched genes** as
-    /// custom genes.
+    /// Mutation: swap services between randomly chosen same-kind,
+    /// same-size instance pairs running different services. Throughput
+    /// totals are preserved (same (kind, size) ⇒ the same profiled
+    /// throughput numbers apply to the swapped services — instances of
+    /// equal slice count on *different* kinds are NOT interchangeable,
+    /// so swap classes are keyed by kind too), validity is maintained;
+    /// swaps where either service cannot run on the other instance
+    /// (min-size / latency infeasibility) are skipped. Operates on
+    /// (size, service) pair lists and re-materializes **only the
+    /// touched genes** as custom genes on their own kind.
     fn mutate(
         &self,
         ctx: &ProblemCtx,
@@ -312,21 +314,29 @@ impl GeneticAlgorithm {
         dep: &mut InternedDeployment,
         rng: &mut Rng,
     ) {
-        // Pair lists per gene, and (gene, slot) ids grouped by size.
+        // Pair lists per gene, and (gene, slot) ids grouped by
+        // (kind, size) class. For a pure-A100 fleet every kind tag is
+        // equal, so the classes — and hence the RNG draws — are exactly
+        // the seed single-kind grouping.
+        let kinds: Vec<crate::mig::DeviceKind> =
+            dep.genes.iter().map(|g| g.kind(pool)).collect();
         let mut pairs: Vec<Vec<(InstanceSize, ServiceId)>> =
             dep.genes.iter().map(|g| g.pairs(pool)).collect();
-        let mut by_size: std::collections::BTreeMap<u8, Vec<(usize, usize)>> =
+        let mut by_class: std::collections::BTreeMap<(u8, u8), Vec<(usize, usize)>> =
             Default::default();
         for (gi, ps) in pairs.iter().enumerate() {
             for (pi, p) in ps.iter().enumerate() {
-                by_size.entry(p.0.slices()).or_default().push((gi, pi));
+                by_class
+                    .entry((kinds[gi].index(), p.0.slices()))
+                    .or_default()
+                    .push((gi, pi));
             }
         }
         let mut dirty = vec![false; dep.genes.len()];
         for _ in 0..self.cfg.mutation_swaps {
-            // Pick a size class with at least two instances.
+            // Pick a (kind, size) class with at least two instances.
             let classes: Vec<&Vec<(usize, usize)>> =
-                by_size.values().filter(|v| v.len() >= 2).collect();
+                by_class.values().filter(|v| v.len() >= 2).collect();
             if classes.is_empty() {
                 break;
             }
@@ -344,10 +354,14 @@ impl GeneticAlgorithm {
                 continue;
             }
             let size = pairs[g1][p1].0;
+            let kind = kinds[g1];
             debug_assert_eq!(size, pairs[g2][p2].0);
+            debug_assert_eq!(kind, kinds[g2]);
             // Both services must be feasible on the swapped instances
-            // (same size, so one check covers both).
-            if ctx.effective(s2, size).is_none() || ctx.effective(s1, size).is_none() {
+            // (same kind and size, so one check covers both).
+            if ctx.effective_on(kind, s2, size).is_none()
+                || ctx.effective_on(kind, s1, size).is_none()
+            {
                 continue;
             }
             pairs[g1][p1].1 = s2;
@@ -355,16 +369,16 @@ impl GeneticAlgorithm {
             dirty[g1] = true;
             dirty[g2] = true;
         }
-        // Re-materialize touched genes; sizes are unchanged so the
-        // partitions stay realizable. All-or-nothing on the (never
-        // observed) rebuild failure so swap pairs cannot be applied
-        // one-sided.
+        // Re-materialize touched genes on their own kind; sizes are
+        // unchanged so the partitions stay realizable. All-or-nothing
+        // on the (never observed) rebuild failure so swap pairs cannot
+        // be applied one-sided.
         let mut rebuilt: Vec<(usize, Gene)> = Vec::new();
         for (gi, d) in dirty.iter().enumerate() {
             if !*d {
                 continue;
             }
-            match ctx.config_from_pairs(&pairs[gi]) {
+            match ctx.config_from_pairs_on(kinds[gi], &pairs[gi]) {
                 Some(cfg) => rebuilt.push((gi, Gene::custom(ctx, cfg))),
                 None => return,
             }

@@ -1,7 +1,7 @@
 //! GPU configurations and their utilities (§5.1), plus the
 //! configuration enumerator used by the fast algorithm and MCTS.
 
-use crate::mig::{partition::legal_size_multisets, InstanceSize, Partition};
+use crate::mig::{partition::legal_size_multisets_on, DeviceKind, InstanceSize, Partition};
 use crate::perf::ProfileBank;
 use crate::spec::{ServiceId, Workload};
 
@@ -20,20 +20,30 @@ pub struct InstanceAssign {
     pub throughput: f64,
 }
 
-/// A single GPU's configuration: a legal partition with every instance
-/// assigned to a service.
+/// A single GPU's configuration: a legal partition on one device kind
+/// with every instance assigned to a service.
 #[derive(Debug, Clone, PartialEq)]
 pub struct GpuConfig {
+    /// The device kind this configuration is laid out (and profiled)
+    /// for; the controller only assigns it to a GPU of the same kind.
+    pub kind: DeviceKind,
     pub assigns: Vec<InstanceAssign>,
 }
 
 impl GpuConfig {
-    /// The underlying partition.
-    pub fn partition(&self) -> Partition {
-        Partition::new(self.assigns.iter().map(|a| a.placement).collect())
+    /// An A100 configuration (the seed constructor shape).
+    pub fn a100(assigns: Vec<InstanceAssign>) -> GpuConfig {
+        GpuConfig { kind: DeviceKind::A100, assigns }
     }
 
-    /// Paper-style label like `"4:svc0 2:svc1 1:svc1"`.
+    /// The underlying partition (validated against this config's kind).
+    pub fn partition(&self) -> Partition {
+        Partition::new_on(self.kind, self.assigns.iter().map(|a| a.placement).collect())
+    }
+
+    /// Paper-style label like `"4:svc0 2:svc1 1:svc1"`; non-A100 kinds
+    /// are prefixed (`"a30|4:svc0"`) so pure-A100 labels — the golden
+    /// and determinism oracles — are byte-identical to the seed.
     pub fn label(&self) -> String {
         let mut parts: Vec<String> = self
             .assigns
@@ -42,7 +52,12 @@ impl GpuConfig {
             .collect();
         parts.sort();
         parts.reverse();
-        parts.join(" ")
+        let body = parts.join(" ");
+        if self.kind == DeviceKind::A100 {
+            body
+        } else {
+            format!("{}|{}", self.kind.name(), body)
+        }
     }
 
     /// Utility vector (§5.1): per service, this GPU's throughput share
@@ -79,30 +94,74 @@ impl GpuConfig {
 }
 
 /// Immutable problem context shared by all optimizer procedures:
-/// workload + profile bank + the precomputed effective-throughput table.
+/// workload + profile bank + the fleet's device kinds + the precomputed
+/// per-kind effective-throughput tables.
 pub struct ProblemCtx<'a> {
     pub bank: &'a ProfileBank,
     pub workload: &'a Workload,
-    /// `eff[sid][size_idx]` = Some((batch, throughput)) if the model
-    /// fits on that size under its latency SLO.
-    eff: Vec<[Option<(usize, f64)>; 5]>,
+    /// Distinct device kinds available to the optimizer, ascending.
+    kinds: Vec<DeviceKind>,
+    /// `eff[kind_idx][sid][size_idx]` = Some((batch, throughput)) if
+    /// the model fits on that (kind, size) under its latency SLO.
+    eff: Vec<Vec<[Option<(usize, f64)>; 5]>>,
 }
 
 impl<'a> ProblemCtx<'a> {
+    /// The seed constructor: a pure-A100 problem.
     pub fn new(bank: &'a ProfileBank, workload: &'a Workload) -> anyhow::Result<ProblemCtx<'a>> {
-        super::validate_workload(bank, workload)?;
-        let mut eff = Vec::with_capacity(workload.len());
-        for s in &workload.services {
-            let prof = bank.get(&s.model).expect("validated");
-            let mut row: [Option<(usize, f64)>; 5] = [None; 5];
-            for (i, &size) in InstanceSize::ALL.iter().enumerate() {
-                row[i] = prof
-                    .best_batch(size, s.slo.latency_ms)
-                    .map(|(b, p)| (b, p.throughput));
+        Self::new_with_kinds(bank, workload, &[DeviceKind::A100])
+    }
+
+    /// A problem over a heterogeneous fleet's device kinds. Kinds are
+    /// deduped and canonically ordered; every service must be feasible
+    /// on at least one (kind, size).
+    pub fn new_with_kinds(
+        bank: &'a ProfileBank,
+        workload: &'a Workload,
+        kinds: &[DeviceKind],
+    ) -> anyhow::Result<ProblemCtx<'a>> {
+        anyhow::ensure!(!kinds.is_empty(), "problem needs at least one device kind");
+        let mut kinds: Vec<DeviceKind> = kinds.to_vec();
+        kinds.sort();
+        kinds.dedup();
+        super::validate_workload_on(bank, workload, &kinds)?;
+        let mut eff = Vec::with_capacity(kinds.len());
+        for &kind in &kinds {
+            let scale = kind.perf_scale();
+            let mut per_service = Vec::with_capacity(workload.len());
+            for s in &workload.services {
+                let prof = bank.get(&s.model).expect("validated");
+                let mut row: [Option<(usize, f64)>; 5] = [None; 5];
+                for (i, &size) in InstanceSize::ALL.iter().enumerate() {
+                    if !kind.supports(size) {
+                        continue;
+                    }
+                    row[i] = prof
+                        .best_batch_scaled(size, s.slo.latency_ms, scale)
+                        .map(|(b, p)| (b, p.throughput));
+                }
+                per_service.push(row);
             }
-            eff.push(row);
+            eff.push(per_service);
         }
-        Ok(ProblemCtx { bank, workload, eff })
+        Ok(ProblemCtx { bank, workload, kinds, eff })
+    }
+
+    /// The fleet's distinct device kinds, ascending.
+    pub fn kinds(&self) -> &[DeviceKind] {
+        &self.kinds
+    }
+
+    /// The kind single-kind-era APIs resolve to: the largest device in
+    /// the fleet (most compute slices, first-in-order tie-break). For
+    /// every pure-A100 problem this is `A100`, so the legacy accessors
+    /// below are bit-identical to the seed implementation.
+    pub fn primary_kind(&self) -> DeviceKind {
+        *self
+            .kinds
+            .iter()
+            .max_by_key(|k| (k.compute_slices(), std::cmp::Reverse(k.index())))
+            .expect("kinds non-empty")
     }
 
     #[inline]
@@ -110,51 +169,103 @@ impl<'a> ProblemCtx<'a> {
         InstanceSize::ALL.iter().position(|&s| s == size).unwrap()
     }
 
-    /// (batch, throughput) for `service` on `size`, or None if the model
-    /// does not fit / cannot meet its latency SLO there.
     #[inline]
-    pub fn effective(&self, service: ServiceId, size: InstanceSize) -> Option<(usize, f64)> {
-        self.eff[service][Self::size_idx(size)]
+    fn kind_idx(&self, kind: DeviceKind) -> usize {
+        self.kinds
+            .iter()
+            .position(|&k| k == kind)
+            .unwrap_or_else(|| panic!("kind {kind} not in this problem's fleet"))
     }
 
-    /// Utility of one instance of `size` running `service`.
+    /// (batch, throughput) for `service` on `size` on the fleet's
+    /// [`ProblemCtx::primary_kind`], or None if infeasible there.
+    #[inline]
+    pub fn effective(&self, service: ServiceId, size: InstanceSize) -> Option<(usize, f64)> {
+        self.effective_on(self.primary_kind(), service, size)
+    }
+
+    /// (batch, throughput) for `service` on `size` of `kind`, or None
+    /// if the model does not fit / cannot meet its latency SLO there.
+    #[inline]
+    pub fn effective_on(
+        &self,
+        kind: DeviceKind,
+        service: ServiceId,
+        size: InstanceSize,
+    ) -> Option<(usize, f64)> {
+        self.eff[self.kind_idx(kind)][service][Self::size_idx(size)]
+    }
+
+    /// Utility of one instance of `size` running `service` on the
+    /// primary kind.
     #[inline]
     pub fn instance_utility(&self, service: ServiceId, size: InstanceSize) -> Option<f64> {
-        self.effective(service, size)
+        self.instance_utility_on(self.primary_kind(), service, size)
+    }
+
+    /// Utility of one instance of `size` of `kind` running `service`.
+    #[inline]
+    pub fn instance_utility_on(
+        &self,
+        kind: DeviceKind,
+        service: ServiceId,
+        size: InstanceSize,
+    ) -> Option<f64> {
+        self.effective_on(kind, service, size)
             .map(|(_, thr)| thr / self.workload.services[service].slo.throughput)
     }
 
-    /// Build an [`InstanceAssign`] for a placement (must be feasible).
+    /// Build an [`InstanceAssign`] for a placement on the primary kind
+    /// (must be feasible).
     pub fn assign(
         &self,
         placement: crate::mig::Placement,
         service: ServiceId,
     ) -> Option<InstanceAssign> {
-        let (batch, throughput) = self.effective(service, placement.size)?;
+        self.assign_on(self.primary_kind(), placement, service)
+    }
+
+    /// Build an [`InstanceAssign`] for a placement on `kind`.
+    pub fn assign_on(
+        &self,
+        kind: DeviceKind,
+        placement: crate::mig::Placement,
+        service: ServiceId,
+    ) -> Option<InstanceAssign> {
+        let (batch, throughput) = self.effective_on(kind, service, placement.size)?;
         Some(InstanceAssign { placement, service, batch, throughput })
     }
 
-    /// Materialize a GPU config from a (size, service) multiset.
-    /// Returns None if the sizes are not realizable as a legal partition
-    /// or some service is infeasible on its size.
+    /// Materialize a GPU config from a (size, service) multiset on the
+    /// primary kind. Returns None if the sizes are not realizable as a
+    /// legal partition or some service is infeasible on its size.
     pub fn config_from_pairs(
         &self,
+        pairs: &[(InstanceSize, ServiceId)],
+    ) -> Option<GpuConfig> {
+        self.config_from_pairs_on(self.primary_kind(), pairs)
+    }
+
+    /// [`ProblemCtx::config_from_pairs`] on an explicit device kind.
+    pub fn config_from_pairs_on(
+        &self,
+        kind: DeviceKind,
         pairs: &[(InstanceSize, ServiceId)],
     ) -> Option<GpuConfig> {
         let mut sorted = pairs.to_vec();
         // Deterministic: big instances first, then by service id.
         sorted.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
         let sizes: Vec<InstanceSize> = sorted.iter().map(|(s, _)| *s).collect();
-        let part = Partition::from_sizes(&sizes)?;
+        let part = Partition::from_sizes_on(kind, &sizes)?;
         // from_sizes places descending; zip placements (desc) to pairs.
         let mut placements = part.placements().to_vec();
         placements.sort_by(|a, b| b.size.cmp(&a.size).then(a.start.cmp(&b.start)));
         let mut assigns = Vec::with_capacity(sorted.len());
         for (pl, (sz, svc)) in placements.iter().zip(&sorted) {
             debug_assert_eq!(pl.size, *sz);
-            assigns.push(self.assign(*pl, *svc)?);
+            assigns.push(self.assign_on(kind, *pl, *svc)?);
         }
-        Some(GpuConfig { assigns })
+        Some(GpuConfig { kind, assigns })
     }
 }
 
@@ -172,6 +283,10 @@ impl<'a> ProblemCtx<'a> {
 /// sparsely yet byte-identically to the dense reference path.
 #[derive(Debug, Clone)]
 pub struct PooledConfig {
+    /// The device kind this config is enumerated for: a pool id is
+    /// effectively a (kind, multiset) pair — the pool concatenates one
+    /// id-contiguous segment per fleet kind.
+    pub kind: DeviceKind,
     pub pairs: Vec<(InstanceSize, ServiceId)>,
     /// (service, utility) — at most `max_mix` entries.
     pub sparse_util: Vec<(ServiceId, f64)>,
@@ -211,17 +326,37 @@ pub struct ConfigPool {
 
 impl ConfigPool {
     /// Enumerate all configs over legal size multisets mixing at most
-    /// two services.
+    /// two services, one id-contiguous segment per fleet kind (in the
+    /// problem's canonical kind order). For a pure-A100 problem the
+    /// result — configs, ids, and order — is exactly the seed
+    /// single-kind enumeration.
     pub fn enumerate(ctx: &ProblemCtx) -> ConfigPool {
         let n = ctx.workload.len();
-        let multisets: Vec<Vec<InstanceSize>> = legal_size_multisets()
+        let mut configs: Vec<PooledConfig> = Vec::new();
+        for &kind in ctx.kinds() {
+            Self::enumerate_kind(ctx, kind, &mut configs);
+        }
+        let mut by_service = vec![Vec::new(); n];
+        for (i, c) in configs.iter().enumerate() {
+            for &(sid, _) in &c.sparse_util {
+                by_service[sid].push(i as u32);
+            }
+        }
+        ConfigPool { configs, by_service }
+    }
+
+    /// One kind's segment of the enumeration (the seed loop,
+    /// kind-parameterized).
+    fn enumerate_kind(ctx: &ProblemCtx, kind: DeviceKind, configs: &mut Vec<PooledConfig>) {
+        let n = ctx.workload.len();
+        let multisets: Vec<Vec<InstanceSize>> = legal_size_multisets_on(kind)
             .into_iter()
             .filter(|m| !m.is_empty())
             .collect();
-        let mut configs: Vec<PooledConfig> = Vec::new();
 
-        // Feasibility matrix: service x size.
-        let fits = |sid: ServiceId, size: InstanceSize| ctx.effective(sid, size).is_some();
+        // Feasibility matrix: service x size on this kind.
+        let fits =
+            |sid: ServiceId, size: InstanceSize| ctx.effective_on(kind, sid, size).is_some();
 
         for ms in &multisets {
             // Distinct sizes with counts, descending.
@@ -237,7 +372,7 @@ impl ConfigPool {
                 if ms.iter().all(|&s| fits(a, s)) {
                     let pairs: Vec<(InstanceSize, ServiceId)> =
                         ms.iter().map(|&s| (s, a)).collect();
-                    push_config(ctx, &mut configs, pairs);
+                    push_config(ctx, kind, configs, pairs);
                 }
             }
             // Two-service splits: for each unordered pair, distribute the
@@ -273,7 +408,7 @@ impl ConfigPool {
                                 }
                             }
                             if ok {
-                                push_config(ctx, &mut configs, pairs);
+                                push_config(ctx, kind, configs, pairs);
                             }
                         }
                         // Increment mixed-radix counter.
@@ -289,14 +424,11 @@ impl ConfigPool {
                 }
             }
         }
+    }
 
-        let mut by_service = vec![Vec::new(); n];
-        for (i, c) in configs.iter().enumerate() {
-            for &(sid, _) in &c.sparse_util {
-                by_service[sid].push(i as u32);
-            }
-        }
-        ConfigPool { configs, by_service }
+    /// The device kind pool entry `id` is enumerated for.
+    pub fn kind_of(&self, id: u32) -> DeviceKind {
+        self.configs[id as usize].kind
     }
 
     pub fn len(&self) -> usize {
@@ -349,13 +481,14 @@ impl ConfigPool {
 
     /// Materialize pool entry `i` as a [`GpuConfig`].
     pub fn materialize(&self, ctx: &ProblemCtx, i: usize) -> GpuConfig {
-        ctx.config_from_pairs(&self.configs[i].pairs)
+        ctx.config_from_pairs_on(self.configs[i].kind, &self.configs[i].pairs)
             .expect("pooled configs are feasible by construction")
     }
 }
 
 fn push_config(
     ctx: &ProblemCtx,
+    kind: DeviceKind,
     configs: &mut Vec<PooledConfig>,
     mut pairs: Vec<(InstanceSize, ServiceId)>,
 ) {
@@ -365,7 +498,7 @@ fn push_config(
     pairs.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
     let mut sparse: Vec<(ServiceId, f64)> = Vec::with_capacity(2);
     for &(size, sid) in &pairs {
-        let u = match ctx.instance_utility(sid, size) {
+        let u = match ctx.instance_utility_on(kind, sid, size) {
             Some(u) => u,
             None => return, // infeasible pair; skip whole config
         };
@@ -374,13 +507,24 @@ fn push_config(
             None => sparse.push((sid, u)),
         }
     }
-    configs.push(PooledConfig { pairs, sparse_util: sparse });
+    configs.push(PooledConfig { kind, pairs, sparse_util: sparse });
 }
 
 /// Endgame packing (App. A.1 lines 18–22): when services are almost
 /// satisfied, build ONE GPU config mixing arbitrarily many services by
 /// filling instances greedily with the best marginal (service, size).
+/// Packs onto the fleet's [`ProblemCtx::primary_kind`] — for a
+/// pure-A100 fleet this is the seed behavior bit for bit.
 pub fn pack_residual(ctx: &ProblemCtx, completion: &CompletionRates) -> Option<GpuConfig> {
+    pack_residual_on(ctx, ctx.primary_kind(), completion)
+}
+
+/// [`pack_residual`] onto an explicit device kind.
+pub fn pack_residual_on(
+    ctx: &ProblemCtx,
+    kind: DeviceKind,
+    completion: &CompletionRates,
+) -> Option<GpuConfig> {
     let mut remaining = completion.remaining();
     if remaining.iter().all(|&r| r <= 0.0) {
         return None;
@@ -390,15 +534,15 @@ pub fn pack_residual(ctx: &ProblemCtx, completion: &CompletionRates) -> Option<G
     loop {
         // Best (service, size) allocatable now, by clipped marginal score.
         let mut best: Option<(f64, InstanceSize, ServiceId)> = None;
-        for &size in &InstanceSize::ALL {
-            if partition.can_allocate(size).is_none() {
+        for &size in kind.sizes() {
+            if partition.can_allocate_on(kind, size).is_none() {
                 continue;
             }
             for sid in 0..ctx.workload.len() {
                 if remaining[sid] <= 0.0 {
                     continue;
                 }
-                if let Some(u) = ctx.instance_utility(sid, size) {
+                if let Some(u) = ctx.instance_utility_on(kind, sid, size) {
                     // Marginal value clipped at the remaining need, per
                     // slice used (prefer small instances that cover the
                     // residual tightly).
@@ -411,10 +555,10 @@ pub fn pack_residual(ctx: &ProblemCtx, completion: &CompletionRates) -> Option<G
             }
         }
         let Some((_, size, sid)) = best else { break };
-        let (next, _) = partition.allocate(size).expect("checked allocatable");
+        let (next, _) = partition.allocate_on(kind, size).expect("checked allocatable");
         partition = next;
         pairs.push((size, sid));
-        let u = ctx.instance_utility(sid, size).unwrap();
+        let u = ctx.instance_utility_on(kind, sid, size).unwrap();
         remaining[sid] = (remaining[sid] - u).max(0.0);
         if remaining.iter().all(|&r| r <= 0.0) {
             break;
@@ -423,7 +567,7 @@ pub fn pack_residual(ctx: &ProblemCtx, completion: &CompletionRates) -> Option<G
     if pairs.is_empty() {
         None
     } else {
-        ctx.config_from_pairs(&pairs)
+        ctx.config_from_pairs_on(kind, &pairs)
     }
 }
 
@@ -561,5 +705,66 @@ mod tests {
         let ctx = ProblemCtx::new(&bank, &w).unwrap();
         let comp = CompletionRates::from_vec(vec![1.0, 1.2, 1.0]);
         assert!(pack_residual(&ctx, &comp).is_none());
+    }
+
+    /// TENTPOLE: a mixed fleet's pool is one id-contiguous segment per
+    /// kind, with the A100 segment identical — configs, ids, order, and
+    /// floats — to the pure-A100 enumeration (the bit-identity oracle).
+    #[test]
+    fn mixed_fleet_pool_segments_and_scaling() {
+        let (bank, w) = setup();
+        let a100_only = ProblemCtx::new(&bank, &w).unwrap();
+        let mixed =
+            ProblemCtx::new_with_kinds(&bank, &w, &[DeviceKind::A30, DeviceKind::A100])
+                .unwrap();
+        assert_eq!(mixed.kinds(), &[DeviceKind::A100, DeviceKind::A30]);
+        assert_eq!(mixed.primary_kind(), DeviceKind::A100);
+        let pure = ConfigPool::enumerate(&a100_only);
+        let pool = ConfigPool::enumerate(&mixed);
+        assert!(pool.len() > pure.len());
+        for i in 0..pure.len() {
+            assert_eq!(pool.configs[i].kind, DeviceKind::A100, "config {i}");
+            assert_eq!(pool.configs[i].pairs, pure.configs[i].pairs, "config {i}");
+            assert_eq!(
+                pool.configs[i].sparse_util, pure.configs[i].sparse_util,
+                "config {i}: utilities must be bit-identical"
+            );
+        }
+        for i in pure.len()..pool.len() {
+            assert_eq!(pool.configs[i].kind, DeviceKind::A30);
+            let total: u8 =
+                pool.configs[i].pairs.iter().map(|(s, _)| s.slices()).sum();
+            assert!(total <= DeviceKind::A30.compute_slices(), "config {i}");
+        }
+        // A30 utilities are derated vs the same (size, service) on A100.
+        let ua100 = mixed
+            .instance_utility_on(DeviceKind::A100, 0, InstanceSize::One)
+            .unwrap();
+        let ua30 = mixed
+            .instance_utility_on(DeviceKind::A30, 0, InstanceSize::One)
+            .unwrap();
+        assert!(ua30 < ua100, "a30 {ua30} !< a100 {ua100}");
+        // Materialization round-trips the kind and stays legal.
+        let last = pool.len() - 1;
+        let cfg = pool.materialize(&mixed, last);
+        assert_eq!(cfg.kind, DeviceKind::A30);
+        assert_eq!(pool.kind_of(last as u32), DeviceKind::A30);
+        let _ = cfg.partition();
+        assert!(cfg.label().starts_with("a30|"), "{}", cfg.label());
+    }
+
+    #[test]
+    fn pack_residual_on_a30_uses_its_geometry() {
+        let (bank, w) = setup();
+        let ctx =
+            ProblemCtx::new_with_kinds(&bank, &w, &[DeviceKind::A100, DeviceKind::A30])
+                .unwrap();
+        let comp = CompletionRates::from_vec(vec![0.98, 0.97, 0.96]);
+        let cfg = pack_residual_on(&ctx, DeviceKind::A30, &comp).expect("packs");
+        assert_eq!(cfg.kind, DeviceKind::A30);
+        assert!(cfg.partition().used_slices() <= 4);
+        // The default pack goes to the primary (A100) kind.
+        let primary = pack_residual(&ctx, &comp).expect("packs");
+        assert_eq!(primary.kind, DeviceKind::A100);
     }
 }

@@ -27,25 +27,31 @@
 //!   [`Deployment::completion`] of [`InternedDeployment::materialize`]
 //!   — the equivalence tests assert exact (not approximate) equality;
 //! * **dedup is canonical**: [`InternedDeployment::canonical_key`]
-//!   reduces every gene to its sorted (slices, service) multiset and
-//!   sorts the gene keys, so identical deployments reached via
-//!   different mutation orders compare equal (the population dedup the
-//!   seed GA missed for non-adjacent duplicates).
+//!   reduces every gene to its kind-tagged sorted (slices, service)
+//!   multiset and sorts the gene keys, so identical deployments
+//!   reached via different mutation orders compare equal (the
+//!   population dedup the seed GA missed for non-adjacent duplicates)
+//!   while equal slice counts on different device kinds stay distinct.
 
 use std::sync::Arc;
 
+use crate::mig::DeviceKind;
 use crate::spec::ServiceId;
 
 use super::comp_rates::CompletionRates;
 use super::gpu_config::{ConfigPool, GpuConfig, ProblemCtx};
 use super::Deployment;
 
-/// Handle into a [`ConfigPool`].
+/// Handle into a [`ConfigPool`]. Since the pool concatenates one
+/// segment per fleet kind, a `ConfigId` denotes a (kind, config) pair;
+/// [`ConfigPool::kind_of`] recovers the kind.
 pub type ConfigId = u32;
 
-/// The canonical (slices, service) multiset of one GPU configuration,
-/// sorted ascending — the order-insensitive dedup key of a gene.
-pub type GeneKey = Vec<(u8, ServiceId)>;
+/// The canonical dedup key of a gene: the device-kind tag plus the
+/// (slices, service) multiset sorted ascending. Two GPUs of different
+/// kinds never dedup together — same slice counts on an A30 and an
+/// A100 deliver different throughput.
+pub type GeneKey = (u8, Vec<(u8, ServiceId)>);
 
 /// An off-pool GPU configuration with its cached exact sparse utility.
 ///
@@ -58,7 +64,8 @@ pub struct CustomConfig {
     pub cfg: GpuConfig,
     /// Nonzero (service, utility) totals, service-id ascending.
     pub util: Vec<(ServiceId, f64)>,
-    /// Sorted (slices, service) multiset — the canonical dedup key.
+    /// Kind tag + sorted (slices, service) multiset — the canonical
+    /// dedup key.
     pub key: GeneKey,
 }
 
@@ -71,12 +78,13 @@ impl CustomConfig {
                 (u != 0.0).then_some((sid, u))
             })
             .collect();
-        let mut key: GeneKey = cfg
+        let mut pairs: Vec<(u8, ServiceId)> = cfg
             .assigns
             .iter()
             .map(|a| (a.placement.size.slices(), a.service))
             .collect();
-        key.sort_unstable();
+        pairs.sort_unstable();
+        let key = (cfg.kind.index(), pairs);
         CustomConfig { cfg, util, key }
     }
 }
@@ -114,17 +122,27 @@ impl Gene {
         }
     }
 
-    /// The canonical sorted (slices, service) multiset of this gene.
+    /// The device kind this gene's configuration is laid out for.
+    pub fn kind(&self, pool: &ConfigPool) -> DeviceKind {
+        match self {
+            Gene::Pool(id) => pool.kind_of(*id),
+            Gene::Custom(c) => c.cfg.kind,
+        }
+    }
+
+    /// The canonical kind-tagged sorted (slices, service) multiset of
+    /// this gene.
     pub fn key(&self, pool: &ConfigPool) -> GeneKey {
         match self {
             Gene::Pool(id) => {
-                let mut k: GeneKey = pool.configs[*id as usize]
+                let cfg = &pool.configs[*id as usize];
+                let mut pairs: Vec<(u8, ServiceId)> = cfg
                     .pairs
                     .iter()
                     .map(|&(size, sid)| (size.slices(), sid))
                     .collect();
-                k.sort_unstable();
-                k
+                pairs.sort_unstable();
+                (cfg.kind.index(), pairs)
             }
             Gene::Custom(c) => c.key.clone(),
         }

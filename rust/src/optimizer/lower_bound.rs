@@ -6,22 +6,34 @@
 //! can be calculated by always using the most cost-efficient instance."
 
 use super::gpu_config::ProblemCtx;
-use crate::mig::InstanceSize;
 
 /// Fractional compute slices needed by one service when it always runs
-/// on its most slice-efficient instance size (under its latency SLO).
+/// on its most slice-efficient (kind, instance size) of the fleet
+/// (under its latency SLO). For a pure-A100 problem the scan order and
+/// floats match the seed single-kind implementation exactly.
 pub fn slices_needed(ctx: &ProblemCtx, service: usize) -> Option<f64> {
     let slo = ctx.workload.services[service].slo;
-    let best_per_slice = InstanceSize::ALL
+    let mut best_per_slice: Option<f64> = None;
+    for &kind in ctx.kinds() {
+        for &s in kind.sizes() {
+            if let Some((_, thr)) = ctx.effective_on(kind, service, s) {
+                let x = thr / s.slices() as f64;
+                best_per_slice =
+                    Some(best_per_slice.map(|a| a.max(x)).unwrap_or(x));
+            }
+        }
+    }
+    Some(slo.throughput / best_per_slice?)
+}
+
+/// Slice capacity of the largest device in the fleet — the per-GPU
+/// denominator of the rule-free bound (7.0 for any A100/H100 fleet).
+fn gpu_slice_capacity(ctx: &ProblemCtx) -> f64 {
+    ctx.kinds()
         .iter()
-        .filter_map(|&s| {
-            ctx.effective(service, s)
-                .map(|(_, thr)| thr / s.slices() as f64)
-        })
-        .fold(None, |acc: Option<f64>, x| {
-            Some(acc.map(|a| a.max(x)).unwrap_or(x))
-        })?;
-    Some(slo.throughput / best_per_slice)
+        .map(|k| k.compute_slices())
+        .max()
+        .unwrap_or(7) as f64
 }
 
 /// The lower bound on GPUs for the whole workload.
@@ -29,7 +41,7 @@ pub fn lower_bound_gpus(ctx: &ProblemCtx) -> usize {
     let total: f64 = (0..ctx.workload.len())
         .map(|s| slices_needed(ctx, s).expect("workload validated"))
         .sum();
-    (total / 7.0).ceil() as usize
+    (total / gpu_slice_capacity(ctx)).ceil() as usize
 }
 
 /// Lower bound on *additional* GPUs given current remaining needs
@@ -45,7 +57,7 @@ pub fn lower_bound_remaining(ctx: &ProblemCtx, remaining: &[f64]) -> usize {
             }
         })
         .sum();
-    (total / 7.0).ceil() as usize
+    (total / gpu_slice_capacity(ctx)).ceil() as usize
 }
 
 /// Precomputed per-service slice needs, for bound evaluation in hot
@@ -56,6 +68,7 @@ pub fn lower_bound_remaining(ctx: &ProblemCtx, remaining: &[f64]) -> usize {
 /// recomputing [`lower_bound_remaining`] does.
 pub struct SliceNeeds {
     per_service: Vec<f64>,
+    capacity: f64,
 }
 
 impl SliceNeeds {
@@ -64,6 +77,7 @@ impl SliceNeeds {
             per_service: (0..ctx.workload.len())
                 .map(|s| slices_needed(ctx, s).expect("workload validated"))
                 .collect(),
+            capacity: gpu_slice_capacity(ctx),
         }
     }
 
@@ -75,7 +89,7 @@ impl SliceNeeds {
             .zip(remaining)
             .map(|(&need, &r)| if r <= 0.0 { 0.0 } else { need * r })
             .sum();
-        (total / 7.0).ceil() as usize
+        (total / self.capacity).ceil() as usize
     }
 }
 

@@ -127,24 +127,38 @@ pub trait OptimizerProcedure {
     }
 }
 
-/// Check a workload is servable at all (every model exists in the bank
-/// and has at least one latency-feasible instance size).
+/// Check a workload is servable at all on a pure-A100 fleet (every
+/// model exists in the bank and has at least one latency-feasible
+/// instance size).
 pub fn validate_workload(
     bank: &crate::perf::ProfileBank,
     workload: &Workload,
+) -> anyhow::Result<()> {
+    validate_workload_on(bank, workload, &[crate::mig::DeviceKind::A100])
+}
+
+/// [`validate_workload`] against a heterogeneous fleet: every service
+/// must be feasible on at least one (kind, size) of the fleet.
+pub fn validate_workload_on(
+    bank: &crate::perf::ProfileBank,
+    workload: &Workload,
+    kinds: &[crate::mig::DeviceKind],
 ) -> anyhow::Result<()> {
     for s in &workload.services {
         let prof = bank
             .get(&s.model)
             .ok_or_else(|| anyhow::anyhow!("service {}: unknown model {}", s.id, s.model))?;
-        let feasible = crate::mig::InstanceSize::ALL
-            .iter()
-            .any(|&sz| prof.effective_throughput(sz, s.slo.latency_ms).is_some());
+        let feasible = kinds.iter().any(|&kind| {
+            kind.sizes().iter().any(|&sz| {
+                prof.best_batch_scaled(sz, s.slo.latency_ms, kind.perf_scale()).is_some()
+            })
+        });
         if !feasible {
             anyhow::bail!(
-                "service {} ({}): no instance size meets the {}ms latency SLO",
+                "service {} ({}): no instance size on any of {:?} meets the {}ms latency SLO",
                 s.id,
                 s.model,
+                kinds.iter().map(|k| k.name()).collect::<Vec<_>>(),
                 s.slo.latency_ms
             );
         }

@@ -9,12 +9,22 @@
 //! results are identical for any worker count, including the inline
 //! `workers == 1` path.
 
-/// Resolve a `parallelism` knob: `Some(n)` pins the worker count,
-/// `None` uses every available core.
+/// Resolve a `parallelism` knob: `Some(n)` pins the worker count;
+/// `None` defers to the `MIG_SERVING_PARALLELISM` environment variable
+/// (the CI test matrix runs the whole suite at 1 and 8 workers through
+/// it) and finally to every available core. Solve outputs are
+/// bit-identical at any resolved value, so the env override is a
+/// scheduling knob, not a behavior knob.
 pub(crate) fn resolve_workers(parallelism: Option<usize>) -> usize {
     match parallelism {
         Some(n) => n.max(1),
-        None => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        None => std::env::var("MIG_SERVING_PARALLELISM")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            }),
     }
 }
 

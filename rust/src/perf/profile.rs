@@ -75,6 +75,40 @@ impl ModelProfile {
             .find(|(_, p)| p.latency_p90_ms <= latency_slo_ms)
     }
 
+    /// [`ModelProfile::best_batch`] for a device whose per-slice speed
+    /// is `scale`× the profiled (A100) reference: throughput multiplies
+    /// by `scale`, service latency divides by it, and the batch choice
+    /// re-evaluates against the scaled latencies. `scale == 1.0` is the
+    /// reference path itself (same floats, same batch pick).
+    pub fn best_batch_scaled(
+        &self,
+        size: InstanceSize,
+        latency_slo_ms: f64,
+        scale: f64,
+    ) -> Option<(usize, PerfPoint)> {
+        if scale == 1.0 {
+            return self.best_batch(size, latency_slo_ms);
+        }
+        if !self.fits(size) {
+            return None;
+        }
+        BATCHES
+            .iter()
+            .rev()
+            .filter_map(|&b| {
+                self.point(size, b).map(|p| {
+                    (
+                        b,
+                        PerfPoint {
+                            throughput: p.throughput * scale,
+                            latency_p90_ms: p.latency_p90_ms / scale,
+                        },
+                    )
+                })
+            })
+            .find(|(_, p)| p.latency_p90_ms <= latency_slo_ms)
+    }
+
     /// Effective serving throughput on `size` under a latency SLO
     /// (throughput at the paper's batch choice), or None if infeasible.
     pub fn effective_throughput(
@@ -166,5 +200,21 @@ mod tests {
     fn sizes_reported() {
         let m = sample();
         assert_eq!(m.sizes(), vec![One, Two, Seven]);
+    }
+
+    #[test]
+    fn scaled_batch_choice() {
+        let m = sample();
+        // scale 1.0 is literally the reference path.
+        assert_eq!(m.best_batch_scaled(One, 100.0, 1.0), m.best_batch(One, 100.0));
+        // A 2x-faster device halves latency: batch 32 (113ms on the
+        // reference) now fits a 100ms SLO at 56.5ms, with 2x throughput.
+        let (b, p) = m.best_batch_scaled(One, 100.0, 2.0).unwrap();
+        assert_eq!(b, 32);
+        let reference = m.point(One, 32).unwrap();
+        assert_eq!(p.throughput, reference.throughput * 2.0);
+        assert_eq!(p.latency_p90_ms, reference.latency_p90_ms / 2.0);
+        // A slower device can lose feasibility entirely.
+        assert!(m.best_batch_scaled(One, 25.0, 0.5).is_none());
     }
 }

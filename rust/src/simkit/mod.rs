@@ -39,6 +39,6 @@ pub mod trace;
 pub use control::{ControlLoop, ReplanPolicy};
 pub use event::{Event, EventQueue};
 pub use report::{ServiceTimeline, SimComparison, SimReport, TransitionRecord};
-pub use scenario::{scenario, SCENARIOS};
+pub use scenario::{scenario, scenario_fleet, SCENARIOS};
 pub use sim::{SimConfig, Simulation};
 pub use trace::{DemandShape, GpuEvent, GpuEventKind, ServiceTrace, Trace};

@@ -46,6 +46,10 @@ pub struct SimReport {
     pub policy: String,
     pub horizon_s: f64,
     pub seed: u64,
+    /// Fleet composition: GPU count per device kind name ("a100", ...).
+    pub fleet: BTreeMap<String, usize>,
+    /// GPUs in use per device kind at the horizon.
+    pub used_gpus_by_kind: BTreeMap<String, usize>,
     pub timelines: Vec<ServiceTimeline>,
     /// Fraction of active sampled ticks where capacity met demand, per
     /// service (1.0 for services never active).
@@ -143,6 +147,24 @@ impl SimReport {
             ("policy", Value::from(self.policy.clone())),
             ("horizon_s", Value::Num(self.horizon_s)),
             ("seed", Value::Num(self.seed as f64)),
+            (
+                "fleet",
+                Value::Obj(
+                    self.fleet
+                        .iter()
+                        .map(|(k, &v)| (k.clone(), Value::from(v)))
+                        .collect(),
+                ),
+            ),
+            (
+                "used_gpus_by_kind",
+                Value::Obj(
+                    self.used_gpus_by_kind
+                        .iter()
+                        .map(|(k, &v)| (k.clone(), Value::from(v)))
+                        .collect(),
+                ),
+            ),
             ("overall_attainment", Value::Num(self.overall_attainment())),
             (
                 "slo_attainment",
@@ -280,6 +302,8 @@ mod tests {
             policy: "threshold".into(),
             horizon_s: 100.0,
             seed: 1,
+            fleet: BTreeMap::from([("a100".to_string(), 24usize)]),
+            used_gpus_by_kind: BTreeMap::from([("a100".to_string(), 2usize)]),
             timelines: vec![ServiceTimeline {
                 service: 0,
                 model: "m".into(),
@@ -323,6 +347,11 @@ mod tests {
         assert_eq!(
             v.get_path("busy_s.creation").and_then(|x| x.as_f64()),
             Some(30.0)
+        );
+        assert_eq!(v.get_path("fleet.a100").and_then(|x| x.as_usize()), Some(24));
+        assert_eq!(
+            v.get_path("used_gpus_by_kind.a100").and_then(|x| x.as_usize()),
+            Some(2)
         );
     }
 

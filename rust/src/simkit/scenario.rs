@@ -13,13 +13,15 @@
 //! lands around 16 GPUs, so every trace leaves scratch headroom for
 //! transitions.
 
+use crate::mig::FleetSpec;
 use crate::perf::ProfileBank;
 use crate::workload::{diurnal_curves, peak_mix, REALWORLD_LATENCY_MS, REALWORLD_SCALE};
 
 use super::trace::{DemandShape, GpuEvent, GpuEventKind, ServiceTrace, Trace};
 
 /// The named scenarios, in documentation order.
-pub const SCENARIOS: [&str; 4] = ["diurnal", "spike", "gpu-failure", "onboard"];
+pub const SCENARIOS: [&str; 5] =
+    ["diurnal", "spike", "gpu-failure", "onboard", "mixed-fleet"];
 
 /// Build a named scenario trace. Panics on unknown names (the CLI
 /// validates first).
@@ -29,7 +31,17 @@ pub fn scenario(bank: &ProfileBank, name: &str) -> Trace {
         "spike" => spike(bank),
         "gpu-failure" => gpu_failure(bank),
         "onboard" => onboard(bank),
+        "mixed-fleet" => mixed_fleet(bank),
         other => panic!("unknown scenario {other:?} (expected one of {SCENARIOS:?})"),
+    }
+}
+
+/// The fleet a scenario is designed for; `None` means the homogeneous
+/// A100 default. The CLI uses this when `--fleet` is not given.
+pub fn scenario_fleet(name: &str) -> Option<FleetSpec> {
+    match name {
+        "mixed-fleet" => Some(FleetSpec::parse("a100=16,a30=8").expect("static spec")),
+        _ => None,
     }
 }
 
@@ -101,6 +113,35 @@ fn gpu_failure(bank: &ProfileBank) -> Trace {
             GpuEvent { at_s: 2.0 * 3600.0 + 60.0, gpu: 5, kind: GpuEventKind::Fail },
             GpuEvent { at_s: 5.0 * 3600.0, gpu: 2, kind: GpuEventKind::Repair },
             GpuEvent { at_s: 5.0 * 3600.0 + 60.0, gpu: 5, kind: GpuEventKind::Repair },
+        ],
+    }
+}
+
+/// Heterogeneous fleet under churn: steady 65% load on an a100=16,a30=8
+/// fleet ([`scenario_fleet`]); one GPU of *each kind* fails at hour 2
+/// (an A100 at index 2, an A30 at index 20 — one minute apart) and both
+/// are repaired at hour 5, so failure/repair is exercised one kind at a
+/// time while the replans solve over both kinds.
+fn mixed_fleet(bank: &ProfileBank) -> Trace {
+    let services = peak_mix(bank, REALWORLD_SCALE)
+        .into_iter()
+        .map(|(model, peak)| {
+            ServiceTrace::always(
+                &model,
+                REALWORLD_LATENCY_MS,
+                DemandShape::Constant { rate: 0.65 * peak },
+            )
+        })
+        .collect();
+    Trace {
+        name: "mixed-fleet".to_string(),
+        horizon_s: 8.0 * 3600.0,
+        services,
+        gpu_events: vec![
+            GpuEvent { at_s: 2.0 * 3600.0, gpu: 2, kind: GpuEventKind::Fail },
+            GpuEvent { at_s: 2.0 * 3600.0 + 60.0, gpu: 20, kind: GpuEventKind::Fail },
+            GpuEvent { at_s: 5.0 * 3600.0, gpu: 2, kind: GpuEventKind::Repair },
+            GpuEvent { at_s: 5.0 * 3600.0 + 60.0, gpu: 20, kind: GpuEventKind::Repair },
         ],
     }
 }

@@ -21,6 +21,7 @@ use std::collections::BTreeMap;
 
 use crate::cluster::{Action, ActionKind, ClusterState, Executor};
 use crate::controller::Controller;
+use crate::mig::{DeviceKind, FleetSpec};
 use crate::optimizer::{Deployment, OptimizerPipeline, PipelineBudget, ProblemCtx};
 use crate::perf::ProfileBank;
 use crate::spec::ServiceId;
@@ -51,6 +52,11 @@ pub struct SimConfig {
     /// Provision for the horizon's *peak* demand instead of the
     /// instantaneous demand — the static baseline's sizing rule.
     pub peak_provision: bool,
+    /// Heterogeneous fleet: per-kind GPU counts. `None` keeps the seed
+    /// behavior (homogeneous A100, `machines × gpus_per_machine`);
+    /// `Some` overrides the GPU layout and exposes every fleet kind to
+    /// the optimizer's replans.
+    pub fleet: Option<FleetSpec>,
 }
 
 impl Default for SimConfig {
@@ -65,6 +71,7 @@ impl Default for SimConfig {
             machines: 3,
             gpus_per_machine: 8,
             peak_provision: false,
+            fleet: None,
         }
     }
 }
@@ -131,8 +138,28 @@ impl<'a> Simulation<'a> {
         anyhow::ensure!(n > 0, "trace has no services");
         anyhow::ensure!(self.cfg.tick_s > 0.0, "tick must be positive");
 
-        let mut cluster =
-            ClusterState::new(self.cfg.machines, self.cfg.gpus_per_machine);
+        let mut cluster = match &self.cfg.fleet {
+            Some(fleet) => ClusterState::from_fleet(fleet, self.cfg.gpus_per_machine),
+            None => ClusterState::new(self.cfg.machines, self.cfg.gpus_per_machine),
+        };
+        // Fail fast when the trace's failure/repair events target GPUs
+        // the (possibly overridden) fleet does not have, instead of
+        // aborting mid-run at the event's virtual instant.
+        for e in &self.trace.gpu_events {
+            anyhow::ensure!(
+                e.gpu < cluster.num_gpus(),
+                "trace {:?} schedules a GPU event on gpu {} but the fleet has only {} GPUs \
+                 (pass a --fleet at least as large as the scenario expects)",
+                self.trace.name,
+                e.gpu,
+                cluster.num_gpus()
+            );
+        }
+        let fleet_counts: BTreeMap<String, usize> = cluster
+            .gpus_by_kind()
+            .into_iter()
+            .map(|(k, c)| (k.name().to_string(), c))
+            .collect();
         let controller = Controller::new(n);
         let mut executor = Executor::new(self.cfg.seed);
         let mut control = ControlLoop::new(self.cfg.policy.clone(), n);
@@ -380,6 +407,12 @@ impl<'a> Simulation<'a> {
             ),
             horizon_s: self.trace.horizon_s,
             seed: self.cfg.seed,
+            fleet: fleet_counts,
+            used_gpus_by_kind: cluster
+                .used_gpus_by_kind()
+                .into_iter()
+                .map(|(k, c)| (k.name().to_string(), c))
+                .collect(),
             timelines,
             slo_attainment,
             unmet_demand_reqs: unmet,
@@ -414,7 +447,11 @@ impl<'a> Simulation<'a> {
             let (plan, _) = controller.plan(cluster, &Deployment::empty())?;
             return Ok(plan.actions);
         }
-        let ctx = ProblemCtx::new(self.bank, &w)?;
+        let kinds: Vec<DeviceKind> = match &self.cfg.fleet {
+            Some(fleet) => fleet.kinds(),
+            None => vec![DeviceKind::A100],
+        };
+        let ctx = ProblemCtx::new_with_kinds(self.bank, &w, &kinds)?;
         let pipeline = OptimizerPipeline::with_budget(&ctx, self.cfg.budget.clone());
         let mut target = pipeline.plan_deployment()?;
         // Snapshot-local ids → stable trace ids.

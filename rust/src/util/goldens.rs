@@ -1,9 +1,72 @@
-//! Deterministic cross-language golden inputs.
+//! Deterministic cross-language golden inputs, plus the golden-FILE
+//! snapshot harness used by `tests/golden_snapshots.rs`.
 //!
-//! Mirrors `python/compile/model.py::golden_input` exactly:
+//! Golden inputs mirror `python/compile/model.py::golden_input` exactly:
 //! `x[i] = f32(i * 2654435761 mod 2^32) / f32(2^32) - 0.5` — pure integer
 //! arithmetic followed by one f32 divide, so rust and python agree
 //! bit-for-bit and no input tensors need to be shipped in artifacts.
+//!
+//! Golden files live under `rust/tests/goldens/<name>.golden`:
+//!
+//! * missing file → the current output is **materialized** as the new
+//!   golden (first run locks the behavior; commit the file);
+//! * `MIG_GOLDEN_BLESS=1` → rewrite the golden from the current output;
+//! * mismatch → the actual output is written to `<name>.rej` next to
+//!   the golden (CI uploads `*.rej` as artifacts) and an error
+//!   describing the first divergent line is returned.
+
+use std::path::{Path, PathBuf};
+
+fn goldens_dir() -> PathBuf {
+    match std::env::var("MIG_GOLDEN_DIR") {
+        Ok(d) => PathBuf::from(d),
+        Err(_) => {
+            PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests").join("goldens")
+        }
+    }
+}
+
+/// Compare `actual` against the stored golden `name` in the default
+/// directory (`rust/tests/goldens`, overridable via `MIG_GOLDEN_DIR`).
+/// See the module docs for the materialize/bless/reject protocol.
+pub fn check_golden(name: &str, actual: &str) -> Result<(), String> {
+    check_golden_at(&goldens_dir(), name, actual)
+}
+
+/// [`check_golden`] against an explicit directory (tests use this to
+/// stay off the process-global environment).
+pub fn check_golden_at(dir: &Path, name: &str, actual: &str) -> Result<(), String> {
+    let path = dir.join(format!("{name}.golden"));
+    let bless = std::env::var("MIG_GOLDEN_BLESS").is_ok_and(|v| v == "1");
+    if bless || !path.exists() {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| format!("golden {name}: create {}: {e}", dir.display()))?;
+        std::fs::write(&path, actual)
+            .map_err(|e| format!("golden {name}: write {}: {e}", path.display()))?;
+        eprintln!("golden {name}: materialized {}", path.display());
+        return Ok(());
+    }
+    let expected = std::fs::read_to_string(&path)
+        .map_err(|e| format!("golden {name}: read {}: {e}", path.display()))?;
+    if expected == actual {
+        let _ = std::fs::remove_file(dir.join(format!("{name}.rej")));
+        return Ok(());
+    }
+    let rej = dir.join(format!("{name}.rej"));
+    let _ = std::fs::write(&rej, actual);
+    let diff_line = expected
+        .lines()
+        .zip(actual.lines())
+        .position(|(e, a)| e != a)
+        .map(|i| i + 1)
+        .unwrap_or_else(|| expected.lines().count().min(actual.lines().count()) + 1);
+    Err(format!(
+        "golden {name}: output diverges from {} at line {diff_line} \
+         (actual written to {}; rerun with MIG_GOLDEN_BLESS=1 to accept)",
+        path.display(),
+        rej.display()
+    ))
+}
 
 /// Generate the golden input of `n` elements.
 pub fn golden_input(n: usize) -> Vec<f32> {
@@ -44,5 +107,31 @@ mod tests {
     #[test]
     fn deterministic() {
         assert_eq!(golden_input(100), golden_input(100));
+    }
+
+    #[test]
+    fn golden_files_materialize_match_and_reject() {
+        // Isolated temp dir through the explicit-directory entry point:
+        // no process-global env mutation (unit tests share the process
+        // with env readers like `par::resolve_workers`).
+        let dir = std::env::temp_dir().join(format!(
+            "mig-goldens-test-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        // First run materializes.
+        check_golden_at(&dir, "unit-probe", "line1\nline2\n").unwrap();
+        assert!(dir.join("unit-probe.golden").exists());
+        // Identical content passes.
+        check_golden_at(&dir, "unit-probe", "line1\nline2\n").unwrap();
+        // Divergent content fails and leaves a .rej.
+        let err =
+            check_golden_at(&dir, "unit-probe", "line1\nDIFFERENT\n").unwrap_err();
+        assert!(err.contains("line 2"), "{err}");
+        assert!(dir.join("unit-probe.rej").exists());
+        // Matching again cleans the .rej up.
+        check_golden_at(&dir, "unit-probe", "line1\nline2\n").unwrap();
+        assert!(!dir.join("unit-probe.rej").exists());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -15,7 +15,10 @@
 //! * [`prop`]  — minimal property-testing harness (randomized invariant
 //!   checks with failure-case reporting).
 //! * [`goldens`] — the deterministic cross-language golden-input
-//!   generator shared with `python/compile/model.py`.
+//!   generator shared with `python/compile/model.py`, plus the
+//!   golden-FILE snapshot harness (`tests/goldens/*.golden`,
+//!   materialize-on-first-run, `MIG_GOLDEN_BLESS=1` to re-accept,
+//!   `*.rej` artifacts on mismatch).
 
 pub mod cli;
 pub mod goldens;

@@ -1,0 +1,65 @@
+//! Golden-file snapshot tests (satellite): lock the pure-A100 outputs
+//! of `simulate --quick` and the fig09/fig13 bench tables on fixed
+//! seeds, via the `util::goldens::check_golden` harness.
+//!
+//! Protocol (see `util/goldens.rs`): the first run materializes
+//! `rust/tests/goldens/<name>.golden` (commit it); later runs must
+//! match byte for byte; mismatches leave `<name>.rej` files that CI
+//! uploads as artifacts; `MIG_GOLDEN_BLESS=1` re-accepts.
+//!
+//! These snapshots are the regression oracle for the heterogeneous
+//! device-kind refactor's pure-A100 bit-identity guarantee: any change
+//! to the A100 code path shows up as a golden diff.
+
+use mig_serving::bench::figs::{fig09_table, fig13_tables};
+use mig_serving::perf::ProfileBank;
+use mig_serving::simkit::{scenario, SimConfig, Simulation};
+use mig_serving::util::goldens::check_golden;
+
+/// `simulate --quick` on the diurnal scenario, fixed seed: event log,
+/// per-service summary tables, and the control-vs-baseline comparison.
+#[test]
+fn golden_simulate_quick_diurnal() {
+    let bank = ProfileBank::synthetic();
+    let trace = scenario(&bank, "diurnal");
+    let cmp = Simulation::new(&bank, &trace, SimConfig::quick())
+        .run_with_baseline()
+        .unwrap();
+    let mut out = String::new();
+    out.push_str("== control event log ==\n");
+    for line in &cmp.control.event_log {
+        out.push_str(line);
+        out.push('\n');
+    }
+    out.push_str("\n== control summary ==\n");
+    out.push_str(&cmp.control.summary_table());
+    out.push_str("\n== baseline summary ==\n");
+    out.push_str(&cmp.baseline.summary_table());
+    out.push_str("\n== comparison ==\n");
+    out.push_str(&cmp.table());
+    check_golden("simulate_quick_diurnal", &out).unwrap();
+}
+
+/// The fig09 GPUs-used table at a pinned 1-round GA budget.
+#[test]
+fn golden_fig09_table() {
+    let bank = ProfileBank::synthetic();
+    let t = fig09_table(&bank, 1);
+    check_golden("fig09_gpus_used_r1", &t.render()).unwrap();
+}
+
+/// The fig13a/13b transition tables at the bench's fixed seed.
+#[test]
+fn golden_fig13_tables() {
+    let bank = ProfileBank::synthetic();
+    let (tables, _executor) = fig13_tables(&bank, 0xF13).unwrap();
+    let mut out = String::new();
+    out.push_str(&format!(
+        "daytime {} GPUs, night {} GPUs\n\n",
+        tables.day_gpus, tables.night_gpus
+    ));
+    out.push_str(&tables.runtime.render());
+    out.push('\n');
+    out.push_str(&tables.actions.render());
+    check_golden("fig13_transitions", &out).unwrap();
+}

@@ -195,6 +195,115 @@ fn interned_completion_and_excess_match_dense() {
     }
 }
 
+/// SATELLITE (heterogeneous fleets): the interned sparse
+/// `completion()`/`excess()` path matches the dense `score.rs`-side
+/// computation on randomized MIXED-FLEET deployments — 1000 seeded
+/// cases over (A100 + A30) pools with off-pool packs on both kinds
+/// sprinkled in. Exact equality, not approximate: the per-kind sparse
+/// utilities are folded in the canonical materialization order.
+#[test]
+fn mixed_fleet_interned_matches_dense_1k_cases() {
+    use mig_serving::mig::DeviceKind;
+    use mig_serving::optimizer::gpu_config::pack_residual_on;
+
+    let bank = ProfileBank::synthetic();
+    let dense_excess = |d: &mig_serving::optimizer::Deployment, ctx: &ProblemCtx| {
+        d.completion(ctx)
+            .as_slice()
+            .iter()
+            .map(|&c| (c - 1.0).max(0.0))
+            .sum::<f64>()
+    };
+    let w = micro_workload(&bank, 10, 6.0);
+    let ctx = mig_serving::optimizer::ProblemCtx::new_with_kinds(
+        &bank,
+        &w,
+        &[DeviceKind::A100, DeviceKind::A30],
+    )
+    .unwrap();
+    let pool = ConfigPool::enumerate(&ctx);
+    // The pool must actually contain both kinds or the test is vacuous.
+    assert_eq!(pool.kind_of(0), DeviceKind::A100);
+    assert_eq!(pool.kind_of(pool.len() as u32 - 1), DeviceKind::A30);
+
+    let mut rng = Rng::new(0x4E7E_0A30);
+    for case in 0..1000 {
+        let k = 1 + rng.below(10);
+        let mut genes: Vec<Gene> =
+            (0..k).map(|_| Gene::Pool(rng.below(pool.len()) as u32)).collect();
+        // Off-pool endgame packs on alternating kinds in a third of the
+        // cases, so custom genes of both kinds are exercised.
+        if case % 3 == 0 {
+            let partial = CompletionRates::from_vec(
+                (0..w.len()).map(|_| rng.f64_range(0.85, 0.99)).collect(),
+            );
+            let kind =
+                if case % 6 == 0 { DeviceKind::A30 } else { DeviceKind::A100 };
+            if let Some(packed) = pack_residual_on(&ctx, kind, &partial) {
+                genes.push(Gene::custom(&ctx, packed));
+            }
+        }
+        let interned = InternedDeployment { genes };
+        let dense = interned.materialize(&ctx, &pool);
+        assert_eq!(
+            interned.completion(&ctx, &pool).as_slice(),
+            dense.completion(&ctx).as_slice(),
+            "case {case}: sparse completion diverged from dense"
+        );
+        let se = interned.excess(&ctx, &pool);
+        let de = dense_excess(&dense, &ctx);
+        assert!(se == de, "case {case}: excess diverged: {se} vs {de}");
+        // Kind survives the materialize round-trip per gene.
+        for (g, cfg) in interned.genes.iter().zip(&dense.gpus) {
+            assert_eq!(g.kind(&pool), cfg.kind, "case {case}");
+        }
+    }
+}
+
+/// A mixed-fleet problem solves end to end through the two-phase
+/// pipeline: valid deployment, every config on a fleet kind, and the
+/// solve is deterministic across parallelism (the same contract the
+/// pure-A100 tests pin).
+#[test]
+fn mixed_fleet_two_phase_solves_and_is_parallel_deterministic() {
+    use mig_serving::mig::DeviceKind;
+    let bank = ProfileBank::synthetic();
+    let w = micro_workload(&bank, 8, 6.0);
+    let ctx = mig_serving::optimizer::ProblemCtx::new_with_kinds(
+        &bank,
+        &w,
+        &[DeviceKind::A100, DeviceKind::A30],
+    )
+    .unwrap();
+    let run = |workers: usize| {
+        let budget = PipelineBudget {
+            ga_rounds: 2,
+            ga_patience: 2,
+            mcts_iterations: 12,
+            parallelism: Some(workers),
+            ..Default::default()
+        };
+        OptimizerPipeline::with_budget(&ctx, budget).optimize().unwrap()
+    };
+    let base = run(1);
+    assert!(base.best.is_valid(&ctx));
+    for cfg in &base.best.gpus {
+        assert!(
+            cfg.kind == DeviceKind::A100 || cfg.kind == DeviceKind::A30,
+            "config on a kind outside the fleet"
+        );
+        let _ = cfg.partition(); // legality under its own kind
+    }
+    for workers in [2usize, 8] {
+        let got = run(workers);
+        assert_eq!(
+            labels(&got.best.gpus),
+            labels(&base.best.gpus),
+            "workers={workers}: mixed-fleet solve diverged"
+        );
+    }
+}
+
 /// Residual (partial-completion) solves agree between the seed full
 /// scan and the engine path — the controller's scale-up case.
 #[test]

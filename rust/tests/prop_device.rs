@@ -1,0 +1,212 @@
+//! Property tests for the heterogeneous device model (the `DeviceKind`
+//! contract, DESIGN.md §4), driven by the in-repo `util::prop` harness:
+//!
+//! 1. every enumerated partition of every kind respects the kind's
+//!    slice capacity, memory-slot bounds, start tables, and exclusion
+//!    rules;
+//! 2. the partition set is **closed under the §3 reconfiguration
+//!    rules**: any accepted `reconfigure_on` lands back inside the
+//!    enumerated legal set;
+//! 3. (kind, size, service) multisets **round-trip through `gpu_config`
+//!    canonicalization**: `config_from_pairs_on` materializes exactly
+//!    the requested multiset as a legal partition of that kind, with
+//!    sparse pool utilities bit-identical to the dense accumulation.
+
+use mig_serving::mig::partition::{all_legal_partitions_on, legal_size_multisets_on};
+use mig_serving::mig::{rules, DeviceKind, Partition, Placement};
+use mig_serving::optimizer::{ConfigPool, ProblemCtx};
+use mig_serving::perf::ProfileBank;
+use mig_serving::spec::{Slo, Workload};
+use mig_serving::util::prop;
+
+/// 1. Enumerated partitions never exceed the kind's capacity and are
+/// legal placement-by-placement.
+#[test]
+fn enumerated_partitions_respect_kind_geometry() {
+    for kind in DeviceKind::ALL {
+        let all = all_legal_partitions_on(kind);
+        assert!(all.iter().any(|p| p.is_empty()), "{kind}: empty partition missing");
+        for p in &all {
+            assert!(
+                p.used_slices() <= kind.compute_slices(),
+                "{kind}: {p} exceeds slice capacity"
+            );
+            for pl in p.placements() {
+                assert!(pl.valid_on(kind), "{kind}: invalid placement {pl:?} in {p}");
+                assert!(
+                    pl.start + pl.size.mem_slots() <= kind.mem_slots(),
+                    "{kind}: {pl:?} exceeds memory slots"
+                );
+            }
+            if kind.forbids_four_plus_three() {
+                let slices: Vec<u8> =
+                    p.placements().iter().map(|pl| pl.size.slices()).collect();
+                assert!(
+                    !(slices.contains(&4) && slices.contains(&3)),
+                    "{kind}: exclusion rule violated in {p}"
+                );
+            }
+        }
+        // Multisets stay within capacity too.
+        for ms in legal_size_multisets_on(kind) {
+            let total: u8 = ms.iter().map(|s| s.slices()).sum();
+            assert!(total <= kind.compute_slices(), "{kind}: {ms:?}");
+        }
+    }
+}
+
+/// 2. Closure under reconfiguration: random remove/add sequences that
+/// `reconfigure_on` accepts always land inside the enumerated legal
+/// set; rejected ones leave no trace.
+#[test]
+fn property_reconfiguration_closed_per_kind() {
+    for kind in DeviceKind::ALL {
+        let all = all_legal_partitions_on(kind);
+        let legal: std::collections::HashSet<Partition> = all.iter().cloned().collect();
+        // All geometrically valid placements of this kind.
+        let placements: Vec<Placement> = {
+            let mut v = Vec::new();
+            for &s in kind.sizes() {
+                for &st in kind.starts_of(s) {
+                    v.push(Placement::new(s, st));
+                }
+            }
+            v
+        };
+        prop::check(
+            &format!("reconf-closed-{}", kind.name()),
+            200,
+            0xD0D0 ^ kind.index() as u64,
+            |g| {
+                let part = all[g.rng.below(all.len())].clone();
+                let n_rm = g.size(0, part.len());
+                let rm: Vec<Placement> = g
+                    .rng
+                    .sample_indices(part.len().max(1), n_rm.min(part.len()))
+                    .into_iter()
+                    .map(|i| part.placements()[i])
+                    .collect();
+                let n_add = g.size(0, 3);
+                let add: Vec<Placement> =
+                    (0..n_add).map(|_| *g.rng.choose(&placements)).collect();
+                (part, rm, add)
+            },
+            |(part, rm, add)| match rules::reconfigure_on(kind, part, rm, add) {
+                Ok(next) => {
+                    if legal.contains(&next) {
+                        Ok(())
+                    } else {
+                        Err(format!("result {next} not in the enumerated legal set"))
+                    }
+                }
+                Err(_) => Ok(()),
+            },
+        );
+    }
+}
+
+/// 3. Round-trip through `gpu_config` canonicalization: a random legal
+/// multiset with random feasible services materializes to that exact
+/// multiset on the right kind, and the pooled sparse utility is
+/// bit-identical to the materialized config's dense utility.
+#[test]
+fn property_multisets_roundtrip_through_gpu_config() {
+    let bank = ProfileBank::synthetic();
+    let models = bank.simulation_models();
+    let services: Vec<(String, Slo)> = (0..6)
+        .map(|i| (models[i].clone(), Slo::new(500.0, 200.0)))
+        .collect();
+    let w = Workload::new("prop-device", services);
+    let ctx = ProblemCtx::new_with_kinds(&bank, &w, &DeviceKind::ALL).unwrap();
+
+    for kind in DeviceKind::ALL {
+        let multisets: Vec<_> = legal_size_multisets_on(kind)
+            .into_iter()
+            .filter(|m| !m.is_empty())
+            .collect();
+        prop::check(
+            &format!("gpu-config-roundtrip-{}", kind.name()),
+            150,
+            0xCAFE ^ kind.index() as u64,
+            |g| {
+                let ms = multisets[g.rng.below(multisets.len())].clone();
+                let svcs: Vec<usize> =
+                    ms.iter().map(|_| g.rng.below(w.len())).collect();
+                (ms, svcs)
+            },
+            |(ms, svcs)| {
+                let pairs: Vec<_> =
+                    ms.iter().copied().zip(svcs.iter().copied()).collect();
+                let all_feasible = pairs.iter().all(|&(size, sid)| {
+                    ctx.effective_on(kind, sid, size).is_some()
+                });
+                let Some(cfg) = ctx.config_from_pairs_on(kind, &pairs) else {
+                    return if all_feasible {
+                        Err(format!("feasible multiset {pairs:?} failed to materialize"))
+                    } else {
+                        Ok(()) // infeasible (model min-size / latency): fine
+                    };
+                };
+                if cfg.kind != kind {
+                    return Err("kind lost in round-trip".to_string());
+                }
+                // The partition realizes exactly the requested multiset
+                // under this kind's rules (panics if illegal).
+                let part = cfg.partition();
+                let mut got: Vec<u8> =
+                    part.placements().iter().map(|p| p.size.slices()).collect();
+                got.sort_unstable();
+                let mut want: Vec<u8> = ms.iter().map(|s| s.slices()).collect();
+                want.sort_unstable();
+                if got != want {
+                    return Err(format!("multiset changed: {want:?} -> {got:?}"));
+                }
+                // Dense utility equals the per-instance sum, bitwise, in
+                // canonical fold order (the interning contract).
+                let dense = cfg.utility(&ctx);
+                let mut sparse = vec![0.0f64; w.len()];
+                let mut sorted = pairs.clone();
+                sorted.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+                for (size, sid) in sorted {
+                    sparse[sid] += ctx.instance_utility_on(kind, sid, size).unwrap();
+                }
+                if dense.as_slice() != sparse.as_slice() {
+                    return Err("sparse fold diverged from dense utility".to_string());
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+/// The pool's segments cover every kind of a mixed problem, and every
+/// pooled config round-trips `kind_of`.
+#[test]
+fn pool_kind_segments_cover_fleet() {
+    let bank = ProfileBank::synthetic();
+    let models = bank.simulation_models();
+    let services: Vec<(String, Slo)> = (0..4)
+        .map(|i| (models[i].clone(), Slo::new(400.0, 200.0)))
+        .collect();
+    let w = Workload::new("prop-pool", services);
+    let ctx = ProblemCtx::new_with_kinds(
+        &bank,
+        &w,
+        &[DeviceKind::A100, DeviceKind::A30, DeviceKind::H100],
+    )
+    .unwrap();
+    let pool = ConfigPool::enumerate(&ctx);
+    let mut seen: std::collections::BTreeSet<DeviceKind> = Default::default();
+    let mut last_kind: Option<DeviceKind> = None;
+    let mut segments = 0;
+    for i in 0..pool.len() {
+        let k = pool.kind_of(i as u32);
+        if last_kind != Some(k) {
+            segments += 1;
+            last_kind = Some(k);
+        }
+        seen.insert(k);
+    }
+    assert_eq!(seen.len(), 3, "every kind enumerated");
+    assert_eq!(segments, 3, "pool ids are kind-contiguous segments");
+}

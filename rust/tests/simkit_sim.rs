@@ -1,11 +1,14 @@
 //! simkit integration tests: the determinism contract (identical seed
 //! ⇒ byte-identical event log + report at any optimizer parallelism),
-//! a golden-trace regression for the diurnal scenario, and one
-//! behavioral test per library scenario.
+//! a golden-trace regression for the diurnal scenario, one behavioral
+//! test per library scenario, the GPU fail→repair partition-restore
+//! regression, and the mixed-fleet end-to-end run.
 
+use mig_serving::cluster::ClusterState;
+use mig_serving::mig::{FleetSpec, Placement};
 use mig_serving::optimizer::PipelineBudget;
 use mig_serving::perf::ProfileBank;
-use mig_serving::simkit::{scenario, SimConfig, Simulation, SCENARIOS};
+use mig_serving::simkit::{scenario, scenario_fleet, SimConfig, Simulation, SCENARIOS};
 
 fn quick_cfg() -> SimConfig {
     SimConfig { tick_s: 300.0, ..Default::default() }
@@ -178,6 +181,84 @@ fn gpu_failure_scenario_recovers() {
         assert!(*a > 0.5, "svc {i} attainment {a}");
     }
     assert!(report.overall_attainment() > 0.8);
+}
+
+/// REGRESSION (satellite): `set_offline` followed by repair of the same
+/// GPU restores its partition config instead of resetting the GPU to
+/// unpartitioned — pods are lost, the MIG layout is not.
+#[test]
+fn gpu_repair_restores_partition_config() {
+    use mig_serving::cluster::Pod;
+    use mig_serving::mig::InstanceSize::*;
+
+    let mut cluster = ClusterState::new(1, 2);
+    for (pl, svc) in [(Placement::new(Four, 0), 0usize), (Placement::new(Two, 4), 1)] {
+        cluster.repartition(0, &[], &[pl]).unwrap();
+        cluster
+            .create_pod(0, pl, Pod { service: svc, batch: 8, throughput: 10.0 })
+            .unwrap();
+    }
+    assert_eq!(cluster.gpu(0).partition().label(), "4-2");
+    let killed = cluster.set_offline(0).unwrap();
+    assert_eq!(killed.len(), 2);
+    assert!(cluster.gpu(0).is_empty(), "offline GPU holds nothing");
+    cluster.set_online(0).unwrap();
+    // The partition came back; the pods did not.
+    assert_eq!(cluster.gpu(0).partition().label(), "4-2");
+    assert!(cluster.gpu(0).pods().is_empty());
+    assert_eq!(cluster.gpu(0).free_instances().len(), 2);
+    // The restored slots are immediately usable without repartitioning.
+    cluster
+        .create_pod(
+            0,
+            Placement::new(Four, 0),
+            Pod { service: 0, batch: 8, throughput: 10.0 },
+        )
+        .unwrap();
+}
+
+/// ACCEPTANCE (tentpole): a mixed a100+a30 fleet solves end to end
+/// through the simulation — replans succeed over both kinds, the
+/// report carries per-kind GPU counts, and the run is deterministic.
+#[test]
+fn mixed_fleet_simulates_end_to_end() {
+    let bank = ProfileBank::synthetic();
+    let trace = scenario(&bank, "mixed-fleet");
+    let fleet = scenario_fleet("mixed-fleet").expect("mixed-fleet has a fleet");
+    assert_eq!(fleet, FleetSpec::parse("a100=16,a30=8").unwrap());
+    let cfg = SimConfig { tick_s: 600.0, fleet: Some(fleet), ..Default::default() };
+    let report = Simulation::new(&bank, &trace, cfg.clone()).run().unwrap();
+    // Per-kind GPU counts in the report (the acceptance criterion).
+    assert_eq!(report.fleet.get("a100"), Some(&16));
+    assert_eq!(report.fleet.get("a30"), Some(&8));
+    // The loop actually served the workload across the failures.
+    assert!(report.replans >= 2, "{:#?}", report.event_log);
+    assert_eq!(report.failed_replans, 0, "{:#?}", report.event_log);
+    for (i, a) in report.slo_attainment.iter().enumerate() {
+        assert!(*a > 0.5, "svc {i} attainment {a}");
+    }
+    let log = report.event_log.join("\n");
+    assert!(log.contains("gpu 2 failed"), "{log}");
+    assert!(log.contains("gpu 20 failed"), "{log}");
+    assert!(log.contains("gpu 20 repaired"), "{log}");
+    // Deterministic replay, including across optimizer parallelism.
+    let again = Simulation::new(&bank, &trace, cfg.clone()).run().unwrap();
+    assert_eq!(report.event_log, again.event_log);
+    assert_eq!(report.to_json().to_pretty(), again.to_json().to_pretty());
+    let par8 = Simulation::new(
+        &bank,
+        &trace,
+        SimConfig {
+            budget: PipelineBudget {
+                parallelism: Some(8),
+                ..PipelineBudget::fast_only()
+            },
+            ..cfg
+        },
+    )
+    .run()
+    .unwrap();
+    assert_eq!(report.event_log, par8.event_log, "parallelism changed the sim");
 }
 
 /// Service churn: the onboarding service has no capacity before its
