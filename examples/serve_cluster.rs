@@ -55,6 +55,16 @@ fn main() -> anyhow::Result<()> {
     for (i, g) in dep.gpus.iter().enumerate() {
         println!("  GPU {i}: {}", g.label());
     }
+    // Per-kind fragmentation of the planned deployment (the same
+    // residual-slice metric SimReport tracks for live clusters): how
+    // much of the plan's leftover capacity is still usable as large
+    // contiguous profiles.
+    let frag = mig_serving::online::frag::deployment_fragmentation(&dep);
+    let mut ft = Table::new(&["kind", "fragmentation"]);
+    for (kind, v) in &frag {
+        ft.row(vec![kind.name().to_string(), fmt(*v, 3)]);
+    }
+    println!("\nplanned-deployment fragmentation:\n{}", ft.render());
 
     // Spin up the PJRT executor (compiles all artifacts) + instances.
     println!("\ncompiling artifacts on the PJRT CPU client ...");

@@ -1,0 +1,147 @@
+//! micro_online: per-event cost of the incremental scheduler vs a full
+//! pipeline replan, at 16/64/256 services.
+//!
+//! The event under test is the common case of the online setting: one
+//! service's demand drifts up 25% and the cluster must absorb it. The
+//! incremental path answers with local moves (in-place upgrade /
+//! fragmentation-aware placement / bounded repair + the lower-bound
+//! quality check); the full-replan path re-enumerates the config pool,
+//! re-solves, and re-plans the §6 transition — the cost `simulate`'s
+//! full-replan policies pay on every trigger.
+//!
+//! Outputs are **asserted valid before timing**: the incremental result
+//! passes the online invariant suite and reaches the new rate; the
+//! full-replan deployment satisfies every SLO. `--json` writes
+//! `BENCH_online.json` (CI uploads it as an artifact).
+
+use mig_serving::bench::{header, BenchArgs, BenchCtx, JsonReport};
+use mig_serving::cluster::{ClusterState, Executor};
+use mig_serving::controller::Controller;
+use mig_serving::online::{
+    check_invariants, OnlineConfig, OnlineEvent, OnlineScheduler, ServiceView,
+};
+use mig_serving::optimizer::{OptimizerPipeline, PipelineBudget, ProblemCtx};
+use mig_serving::perf::ProfileBank;
+use mig_serving::spec::Slo;
+use mig_serving::util::json::Value;
+use mig_serving::workload::micro_workload;
+
+fn main() {
+    let args = BenchArgs::parse();
+    header("micro/online", "per-event incremental cost vs full pipeline replan");
+    let bank = ProfileBank::synthetic();
+    let mut report = JsonReport::new("micro_online", args.quick);
+    let sizes: &[(usize, f64)] = if args.quick {
+        &[(16, 4.0), (64, 1.0)]
+    } else {
+        &[(16, 4.0), (64, 1.0), (256, 0.25)]
+    };
+
+    for (si, &(n, mult)) in sizes.iter().enumerate() {
+        let section_id = si + 1;
+        if !args.section_enabled(section_id) {
+            continue;
+        }
+        let section = format!("{section_id} n={n}");
+        println!("\n[{section_id}] n={n} services");
+
+        // Bring a steady-state cluster up through the full pipeline
+        // (the state every per-event measurement starts from).
+        let w = micro_workload(&bank, n, mult);
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let pipeline = OptimizerPipeline::with_budget(&ctx, PipelineBudget::fast_only());
+        let dep = pipeline.plan_deployment().unwrap();
+        let gpus = (dep.num_gpus() * 2).max(8);
+        let mut cluster = ClusterState::new(gpus.div_ceil(8), 8);
+        let controller = Controller::new(n);
+        let (plan, _) = controller.plan(&cluster, &dep).unwrap();
+        for a in &plan.actions {
+            Executor::apply(&mut cluster, a).unwrap();
+        }
+        let mut sched = OnlineScheduler::new(&bank, OnlineConfig::default());
+        let views: Vec<ServiceView> = w
+            .services
+            .iter()
+            .map(|s| ServiceView {
+                service: s.id,
+                model: &s.model,
+                latency_slo_ms: s.slo.latency_ms,
+                demand: s.slo.throughput,
+            })
+            .collect();
+        sched.sync(&views, 0.0);
+
+        // The event: +25% demand on service 0.
+        let svc = 0usize;
+        let new_rate = w.services[svc].slo.throughput * 1.25;
+        let event = OnlineEvent::DemandDelta { service: svc, rate: new_rate };
+        let mut w_after = w.clone();
+        w_after.services[svc].slo = Slo::new(new_rate, w.services[svc].slo.latency_ms);
+
+        // ---- Validity gate: both paths must produce correct output
+        //      BEFORE any timing means anything.
+        {
+            let mut scratch = cluster.clone();
+            let out = sched.handle(&mut scratch, &event).unwrap();
+            assert!(
+                out.escalate.is_none(),
+                "incremental path must absorb the delta: {:?}",
+                out.escalate
+            );
+            assert!(!out.actions.is_empty(), "the delta requires work");
+            check_invariants(&scratch).unwrap();
+            let cap = scratch.service_throughputs(n)[svc];
+            assert!(cap + 1e-6 >= new_rate, "capacity {cap} < target {new_rate}");
+            println!(
+                "    incremental: {} local actions, invariants + capacity OK",
+                out.actions.len()
+            );
+
+            let ctx_after = ProblemCtx::new(&bank, &w_after).unwrap();
+            let p2 = OptimizerPipeline::with_budget(&ctx_after, PipelineBudget::fast_only());
+            let dep2 = p2.plan_deployment().unwrap();
+            assert!(dep2.is_valid(&ctx_after), "full replan must satisfy all SLOs");
+            let (plan2, _) = controller.plan(&cluster, &dep2).unwrap();
+            println!(
+                "    full replan: {} GPUs, {} transition actions, valid",
+                dep2.num_gpus(),
+                plan2.actions.len()
+            );
+        }
+
+        // ---- Timed: per-event incremental handling (scratch clone is
+        //      part of the realistic cost) vs per-event full replan
+        //      (pool enumeration + solve + §6 plan).
+        let bc = BenchCtx::new(usize::from(!args.quick), if args.quick { 1 } else { 3 });
+        let inc = bc.time(&format!("incremental event n={n}"), || {
+            let mut scratch = cluster.clone();
+            sched.handle(&mut scratch, &event).unwrap().actions.len()
+        });
+        println!("{}", inc.report());
+        let full = bc.time(&format!("full replan       n={n}"), || {
+            let scratch = cluster.clone();
+            let ctx_after = ProblemCtx::new(&bank, &w_after).unwrap();
+            let p2 = OptimizerPipeline::with_budget(&ctx_after, PipelineBudget::fast_only());
+            let dep2 = p2.plan_deployment().unwrap();
+            let (plan2, _) = controller.plan(&scratch, &dep2).unwrap();
+            plan2.actions.len()
+        });
+        println!("{}", full.report());
+        let speedup =
+            full.mean().as_secs_f64() / inc.mean().as_secs_f64().max(1e-12);
+        println!(
+            "  -> incremental is {speedup:.1}x cheaper per event ({:?} vs {:?})",
+            inc.mean(),
+            full.mean()
+        );
+        report.record_measurement(&section, &inc);
+        report.record_measurement(&section, &full);
+        report.record(&section, "speedup", Value::Num(speedup));
+        report.record(&section, "cluster gpus", Value::from(cluster.num_gpus()));
+    }
+
+    if let Some(path) = &args.json {
+        report.write(path).expect("write bench json");
+        println!("\nwrote {}", path.display());
+    }
+}

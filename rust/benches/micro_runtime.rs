@@ -1,8 +1,8 @@
 //! Micro-benchmarks of the request path: artifact compile time, PJRT
 //! inference latency per artifact, and router+batcher overhead.
 //!
-//! The L3 target (DESIGN.md §6): routing/batching overhead must be
-//! negligible next to model service time.
+//! The L3 target (DESIGN.md §1 layer inventory): routing/batching
+//! overhead must be negligible next to model service time.
 
 use std::time::{Duration, Instant};
 

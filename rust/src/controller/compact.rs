@@ -15,7 +15,7 @@ use crate::mig::{DeviceKind, InstanceSize, Partition, Placement};
 use crate::optimizer::Deployment;
 use crate::spec::ServiceId;
 
-use super::exchange::allocate_slot;
+use super::slots::allocate_slot;
 
 /// (size, service) multiset signature of a target GPU config — the
 /// shared [`crate::optimizer::GpuConfig::size_service_counts`] multiset

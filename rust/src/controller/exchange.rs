@@ -17,6 +17,7 @@ use crate::optimizer::Deployment;
 use crate::spec::ServiceId;
 
 use super::diff::ServiceDelta;
+use super::slots::{allocate_slot, probe_slot};
 
 /// Per-GPU (size, service) needs from the pre-computed target
 /// assignment (see `compact::target_hints`). Kind is implicit: a GPU's
@@ -37,61 +38,6 @@ fn target_pod_params(
     m
 }
 
-/// Allocate a slot for a (kind, size) instance anywhere on the cluster,
-/// emitting (and applying) a repartition if the hosting GPU's layout
-/// must grow. Only GPUs of `kind` qualify; `forbidden` GPUs are skipped
-/// (used by compact for processed GPUs).
-pub(crate) fn allocate_slot(
-    state: &mut ClusterState,
-    kind: DeviceKind,
-    size: InstanceSize,
-    forbidden: &[usize],
-    actions: &mut Vec<Action>,
-) -> anyhow::Result<(usize, Placement)> {
-    // Candidate ranking: (1) an existing free instance of the right
-    // size beats repartitioning; (2) partially-used GPUs beat empty
-    // ones (§6 compactness); (3) among equals, the *least-loaded* GPU
-    // wins — spreading consecutive allocations across GPUs keeps the
-    // per-GPU action chains short so the asynchronous executor can
-    // overlap them (EXPERIMENTS.md §Perf).
-    let mut choice: Option<(usize, Placement, bool)> = None;
-    let mut best_key = (usize::MAX, usize::MAX, usize::MAX);
-    for gi in 0..state.num_gpus() {
-        if forbidden.contains(&gi) || state.is_offline(gi) || state.kind_of(gi) != kind {
-            continue;
-        }
-        let g = state.gpu(gi);
-        let load = g.partition().len();
-        if let Some(pl) = g.free_instance_of(size) {
-            let key = (0usize, 0usize, load);
-            if key < best_key {
-                best_key = key;
-                choice = Some((gi, pl, false));
-            }
-        } else if let Some(start) = g.partition().can_allocate_on(kind, size) {
-            let pl = Placement::new(size, start);
-            let empty = usize::from(g.is_empty());
-            let key = (1usize, empty, load);
-            if key < best_key {
-                best_key = key;
-                choice = Some((gi, pl, true));
-            }
-        }
-    }
-    let (gpu, pl, needs_repartition) = choice.ok_or_else(|| {
-        anyhow::anyhow!(
-            "no {} GPU can allocate a {size:?} instance (fleet segment full)",
-            kind.name()
-        )
-    })?;
-    if needs_repartition {
-        let act = Action::Repartition { gpu, remove: vec![], add: vec![pl] };
-        Executor::apply(state, &act)?;
-        actions.push(act);
-    }
-    Ok((gpu, pl))
-}
-
 /// Try to allocate a (kind, size) for `service` on a GPU whose assigned
 /// target config still needs such an instance.
 fn hinted_slot(
@@ -110,13 +56,8 @@ fn hinted_slot(
         if need == 0 {
             continue;
         }
-        let g = state.gpu(gi);
-        let (pl, needs_rep) = match g.free_instance_of(size) {
-            Some(pl) => (pl, false),
-            None => match g.partition().can_allocate_on(kind, size) {
-                Some(start) => (Placement::new(size, start), true),
-                None => continue,
-            },
+        let Some((pl, needs_rep)) = probe_slot(state.gpu(gi), kind, size) else {
+            continue;
         };
         if needs_rep {
             let act = Action::Repartition { gpu: gi, remove: vec![], add: vec![pl] };

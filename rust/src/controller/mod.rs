@@ -24,8 +24,10 @@ pub mod compact;
 pub mod diff;
 pub mod exchange;
 pub mod plan;
+pub mod slots;
 pub mod transition;
 
 pub use diff::{service_deltas, InstanceCounts};
 pub use plan::{parallelize, replan, TransitionPlan};
+pub use slots::{allocate_slot, probe_slot};
 pub use transition::{Controller, TransitionOutcome};

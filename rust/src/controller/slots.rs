@@ -1,0 +1,135 @@
+//! Shared same-kind slot search.
+//!
+//! Three callers need "find room for a (kind, size) instance":
+//!
+//! * the exchange phase's create-before-delete allocations
+//!   ([`super::exchange`], directly and through target hints);
+//! * the compact phase's scratch-space migrations
+//!   ([`super::compact::compact_phase_with`] via [`allocate_slot`]);
+//! * the online incremental scheduler's placement and repair paths
+//!   ([`crate::online::place`], [`crate::online::repair`]).
+//!
+//! Each used to re-implement the same per-GPU probe (free instance of
+//! the right size, else a legal partition extension). [`probe_slot`] is
+//! that probe, and [`allocate_slot`] is the cluster-wide allocation the
+//! exchange/compact phases rank candidates with.
+
+use crate::cluster::{Action, ClusterState, Executor, GpuSim};
+use crate::mig::{DeviceKind, InstanceSize, Placement};
+
+/// Probe one GPU for a slot of `size` under `kind`'s rules: an existing
+/// pod-free instance of exactly that size wins (no repartition), else
+/// the first legal partition extension. Returns
+/// `(placement, needs_repartition)`.
+pub fn probe_slot(
+    g: &GpuSim,
+    kind: DeviceKind,
+    size: InstanceSize,
+) -> Option<(Placement, bool)> {
+    if let Some(pl) = g.free_instance_of(size) {
+        return Some((pl, false));
+    }
+    g.partition()
+        .can_allocate_on(kind, size)
+        .map(|start| (Placement::new(size, start), true))
+}
+
+/// Allocate a slot for a (kind, size) instance anywhere on the cluster,
+/// emitting (and applying) a repartition if the hosting GPU's layout
+/// must grow. Only online GPUs of `kind` qualify; `forbidden` GPUs are
+/// skipped (used by compact for processed GPUs and by the online repair
+/// path for the GPU being repacked).
+///
+/// Candidate ranking: (1) an existing free instance of the right size
+/// beats repartitioning; (2) partially-used GPUs beat empty ones (§6
+/// compactness); (3) among equals, the *least-loaded* GPU wins —
+/// spreading consecutive allocations across GPUs keeps the per-GPU
+/// action chains short so the asynchronous executor can overlap them
+/// (EXPERIMENTS.md §Perf).
+pub fn allocate_slot(
+    state: &mut ClusterState,
+    kind: DeviceKind,
+    size: InstanceSize,
+    forbidden: &[usize],
+    actions: &mut Vec<Action>,
+) -> anyhow::Result<(usize, Placement)> {
+    let mut choice: Option<(usize, Placement, bool)> = None;
+    let mut best_key = (usize::MAX, usize::MAX, usize::MAX);
+    for gi in 0..state.num_gpus() {
+        if forbidden.contains(&gi) || state.is_offline(gi) || state.kind_of(gi) != kind {
+            continue;
+        }
+        let g = state.gpu(gi);
+        let load = g.partition().len();
+        if let Some((pl, needs_rep)) = probe_slot(g, kind, size) {
+            let empty = if needs_rep { usize::from(g.is_empty()) } else { 0 };
+            let key = (usize::from(needs_rep), empty, load);
+            if key < best_key {
+                best_key = key;
+                choice = Some((gi, pl, needs_rep));
+            }
+        }
+    }
+    let (gpu, pl, needs_repartition) = choice.ok_or_else(|| {
+        anyhow::anyhow!(
+            "no {} GPU can allocate a {size:?} instance (fleet segment full)",
+            kind.name()
+        )
+    })?;
+    if needs_repartition {
+        let act = Action::Repartition { gpu, remove: vec![], add: vec![pl] };
+        Executor::apply(state, &act)?;
+        actions.push(act);
+    }
+    Ok((gpu, pl))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Pod;
+    use crate::mig::InstanceSize::*;
+
+    #[test]
+    fn probe_prefers_existing_free_instance() {
+        let mut c = ClusterState::new(1, 1);
+        let pl = Placement::new(Two, 0);
+        c.repartition(0, &[], &[pl]).unwrap();
+        assert_eq!(probe_slot(c.gpu(0), DeviceKind::A100, Two), Some((pl, false)));
+        // A size without a free instance needs a repartition.
+        let (pl3, needs) = probe_slot(c.gpu(0), DeviceKind::A100, Three).unwrap();
+        assert!(needs);
+        assert_eq!(pl3.size, Three);
+        // Occupying the free 2/7 turns it into a repartition too.
+        c.create_pod(0, pl, Pod { service: 0, batch: 8, throughput: 1.0 }).unwrap();
+        let (_, needs) = probe_slot(c.gpu(0), DeviceKind::A100, Two).unwrap();
+        assert!(needs);
+    }
+
+    #[test]
+    fn probe_respects_device_kind() {
+        let c = ClusterState::new(1, 1);
+        // A Seven never fits an A30's geometry.
+        assert!(probe_slot(c.gpu(0), DeviceKind::A30, Seven).is_none());
+        assert!(probe_slot(c.gpu(0), DeviceKind::A30, Four).is_some());
+    }
+
+    #[test]
+    fn allocate_slot_prefers_used_gpus_and_skips_forbidden() {
+        let mut c = ClusterState::new(1, 3);
+        c.repartition(1, &[], &[Placement::new(One, 0)]).unwrap();
+        c.create_pod(1, Placement::new(One, 0), Pod { service: 0, batch: 8, throughput: 1.0 })
+            .unwrap();
+        let mut actions = Vec::new();
+        let (gpu, pl) =
+            allocate_slot(&mut c, DeviceKind::A100, Two, &[], &mut actions).unwrap();
+        assert_eq!(gpu, 1, "partially-used GPU preferred over empty ones");
+        assert_eq!(pl.size, Two);
+        assert_eq!(actions.len(), 1, "growth emits the repartition");
+        // Forbidding the used GPU falls back to an empty one.
+        let mut actions = Vec::new();
+        let (gpu, _) =
+            allocate_slot(&mut c, DeviceKind::A100, Two, &[1], &mut actions).unwrap();
+        assert_ne!(gpu, 1);
+    }
+}

@@ -9,7 +9,9 @@
 //!   partition-rule engine ([`mig`]), the optimizer pipeline (heuristic
 //!   greedy + customized MCTS + tailored GA, [`optimizer`]), the
 //!   controller with the exchange-and-compact transition algorithm
-//!   ([`controller`]), a simulated A100/Kubernetes cluster substrate
+//!   ([`controller`]), the fragmentation-aware online incremental
+//!   scheduler that absorbs workload events with local moves
+//!   ([`online`]), a simulated A100/Kubernetes cluster substrate
 //!   ([`cluster`]), a trace-driven discrete-event simulation of the
 //!   full closed loop over simulated days ([`simkit`]), and a real
 //!   serving runtime ([`serving`], [`runtime`]) that executes
@@ -34,6 +36,7 @@ pub mod spec;
 pub mod optimizer;
 pub mod controller;
 pub mod cluster;
+pub mod online;
 
 pub mod runtime;
 pub mod serving;

@@ -6,7 +6,11 @@
 //! * `transition` — plan + simulate a deployment transition;
 //! * `simulate`   — trace-driven day-scale simulation of the online
 //!                  replan→transition control loop vs. a static-peak
-//!                  baseline (simkit);
+//!                  baseline (simkit); `--policy incremental` absorbs
+//!                  drift with the fragmentation-aware online scheduler;
+//! * `online`     — clock-less replay of a scenario's workload events
+//!                  through the incremental scheduler (event/escalation
+//!                  accounting + fragmentation summary);
 //! * `serve`      — deploy on the PJRT runtime and drive load;
 //! * `study`      — the §2.2 model study (Fig 3/Fig 4 tables);
 //! * `lower-bound`— the rule-free GPU lower bound for a workload;
@@ -51,14 +55,24 @@ fn app() -> App {
             Command::new("simulate", "trace-driven cluster simulation with the online replan loop")
                 .opt("scenario", "diurnal", "diurnal|spike|gpu-failure|onboard|mixed-fleet")
                 .opt("fleet", "", "per-kind GPU counts, e.g. a100=16,a30=8 (default: the scenario's fleet, else homogeneous a100)")
-                .opt("policy", "threshold", "periodic|threshold|hysteresis")
+                .opt("policy", "threshold", "periodic|threshold|hysteresis|incremental")
                 .opt("tick", "60", "control-loop sampling interval, virtual seconds")
                 .opt("seed", "42", "simulation seed (reports are bit-replayable from it)")
                 .opt("ga-rounds", "0", "GA rounds per replan (0 = fast algorithm only)")
                 .opt("threads", "0", "worker threads for replans (0 = all cores; the report is identical at any value)")
+                .opt("gap-threshold", "0.5", "incremental policy: escalate past this optimality gap vs the §8.1 lower bound")
+                .opt("repair-depth", "4", "incremental policy: max pods evicted per local repair")
                 .opt("json", "", "write the control-vs-baseline report JSON to this path")
                 .flag("quick", "coarse tick (300s) — the CI smoke configuration")
                 .flag("verbose", "print the full event log"),
+            Command::new("online", "replay a scenario's workload events through the incremental scheduler (no clock model)")
+                .opt("scenario", "diurnal", "diurnal|spike|gpu-failure|onboard|mixed-fleet")
+                .opt("fleet", "", "per-kind GPU counts (default: the scenario's fleet, else homogeneous a100)")
+                .opt("tick", "300", "event-derivation interval, virtual seconds")
+                .opt("gap-threshold", "0.5", "escalate past this optimality gap vs the §8.1 lower bound")
+                .opt("repair-depth", "4", "max pods evicted per local repair")
+                .opt("json", "", "write the replay summary JSON to this path")
+                .flag("verbose", "print every event as it is handled"),
             Command::new("serve", "deploy on the PJRT runtime and measure throughput")
                 .opt("workload", "night", "daytime|night (scaled real-world)")
                 .opt("scale", "1.0", "workload scale multiplier")
@@ -263,6 +277,10 @@ fn cmd_simulate(args: &mig_serving::util::cli::Args) -> anyhow::Result<()> {
             scale_down_ratio: 0.7,
             hold_s: 2.0 * cfg.tick_s,
         },
+        "incremental" => ReplanPolicy::Incremental {
+            gap_threshold: args.get_f64("gap-threshold").unwrap_or(0.5),
+            repair_depth: args.get_usize("repair-depth").unwrap_or(4),
+        },
         other => anyhow::bail!("unknown policy {other:?}"),
     };
     let threads = args.get_usize("threads").unwrap_or(0);
@@ -311,6 +329,19 @@ fn cmd_simulate(args: &mig_serving::util::cli::Args) -> anyhow::Result<()> {
         })
         .collect();
     println!("fleet at horizon: {}", per_kind.join(", "));
+    let frag: Vec<String> = cmp
+        .control
+        .fragmentation
+        .iter()
+        .map(|(k, v)| format!("{k} {v:.2}"))
+        .collect();
+    println!("fragmentation at horizon: {}", frag.join(", "));
+    if cmp.control.incremental_events + cmp.control.escalations > 0 {
+        println!(
+            "incremental: {} events absorbed locally, {} escalations to the full pipeline",
+            cmp.control.incremental_events, cmp.control.escalations
+        );
+    }
     if args.flag("verbose") {
         println!("\nevent log:");
         for line in &cmp.control.event_log {
@@ -320,6 +351,235 @@ fn cmd_simulate(args: &mig_serving::util::cli::Args) -> anyhow::Result<()> {
     let out = args.get("json").unwrap();
     if !out.is_empty() {
         std::fs::write(out, cmp.to_json().to_pretty() + "\n")?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+/// Replay a scenario's workload events straight through the
+/// incremental scheduler: events are derived every `tick` seconds and
+/// applied to the live cluster immediately (no latency model — use
+/// `simulate --policy incremental` for end-to-end timing). Escalations
+/// run one fast-algorithm pipeline replan, applied instantly.
+fn cmd_online(args: &mig_serving::util::cli::Args) -> anyhow::Result<()> {
+    use mig_serving::online::{
+        check_invariants, frag, OnlineConfig, OnlineEvent, OnlineScheduler, ServiceView,
+    };
+    use mig_serving::simkit::{scenario, scenario_fleet, GpuEventKind, Trace, SCENARIOS};
+
+    let bank = ProfileBank::synthetic();
+    let name = args.get("scenario").unwrap();
+    anyhow::ensure!(
+        SCENARIOS.contains(&name),
+        "unknown scenario {name:?} (expected one of {SCENARIOS:?})"
+    );
+    let trace = scenario(&bank, name);
+    let fleet_arg = args.get("fleet").unwrap();
+    let fleet = if fleet_arg.is_empty() {
+        scenario_fleet(name)
+    } else {
+        Some(mig_serving::mig::FleetSpec::parse(fleet_arg)?)
+    };
+    let tick_s = args.get_f64("tick").unwrap_or(300.0);
+    anyhow::ensure!(tick_s > 0.0, "tick must be positive");
+    let margin = 0.15;
+    let verbose = args.flag("verbose");
+
+    let mut cluster = match &fleet {
+        Some(f) => ClusterState::from_fleet(f, 8),
+        None => ClusterState::new(3, 8),
+    };
+    for e in &trace.gpu_events {
+        anyhow::ensure!(
+            e.gpu < cluster.num_gpus(),
+            "scenario {name:?} schedules a GPU event on gpu {} but the fleet has only {}",
+            e.gpu,
+            cluster.num_gpus()
+        );
+    }
+    let n = trace.n_services();
+    let controller = Controller::new(n);
+    let mut sched = OnlineScheduler::new(&bank, OnlineConfig {
+        gap_threshold: args.get_f64("gap-threshold").unwrap_or(0.5),
+        repair_depth: args.get_usize("repair-depth").unwrap_or(4),
+        ..OnlineConfig::default()
+    });
+
+    // One fast-algorithm replan applied instantly — the escalation
+    // handler of this clock-less replay.
+    fn full_replan(
+        bank: &ProfileBank,
+        trace: &Trace,
+        cluster: &mut ClusterState,
+        controller: &Controller,
+        demand: &[f64],
+        margin: f64,
+        t: f64,
+    ) -> anyhow::Result<usize> {
+        let label = format!("{}@{t:.0}s", trace.name);
+        let (w, ids) = trace.snapshot_workload(&label, demand, margin);
+        let actions = if w.is_empty() {
+            controller.plan(cluster, &optimizer::Deployment::empty())?.0.actions
+        } else {
+            let kinds = cluster.fleet_kinds();
+            let ctx = ProblemCtx::new_with_kinds(bank, &w, &kinds)?;
+            let pipeline =
+                OptimizerPipeline::with_budget(&ctx, PipelineBudget::fast_only());
+            let mut target = pipeline.plan_deployment()?;
+            for g in &mut target.gpus {
+                for a in &mut g.assigns {
+                    a.service = ids[a.service];
+                }
+            }
+            controller.plan(cluster, &target)?.0.actions
+        };
+        for a in &actions {
+            Executor::apply(cluster, a)?;
+        }
+        Ok(actions.len())
+    }
+
+    let mut gpu_events = trace.gpu_events.clone();
+    gpu_events.sort_by(|a, b| a.at_s.total_cmp(&b.at_s));
+    let mut next_gpu_event = 0usize;
+    let mut total_actions = 0usize;
+    let mut full_replans = 0usize;
+    let mut ticks = 0usize;
+    let mut t = 0.0;
+    while t < trace.horizon_s {
+        ticks += 1;
+        // Infrastructure events due by this tick.
+        while next_gpu_event < gpu_events.len() && gpu_events[next_gpu_event].at_s <= t {
+            let e = &gpu_events[next_gpu_event];
+            next_gpu_event += 1;
+            let ev = match e.kind {
+                GpuEventKind::Fail => OnlineEvent::GpuFail { gpu: e.gpu },
+                GpuEventKind::Repair => OnlineEvent::GpuRepair { gpu: e.gpu },
+            };
+            let out = sched.handle(&mut cluster, &ev)?;
+            total_actions += out.actions.len();
+            if verbose {
+                println!(
+                    "t={t:<9.1} {:<10} gpu {} ({} actions)",
+                    ev.label(),
+                    e.gpu,
+                    out.actions.len()
+                );
+            }
+            if out.escalate.is_some() {
+                let demand = trace.demand_at(t);
+                total_actions +=
+                    full_replan(&bank, &trace, &mut cluster, &controller, &demand, margin, t)?;
+                full_replans += 1;
+                // Re-align the catalog with what the replan provisioned
+                // (same contract as the drift path below).
+                let views: Vec<ServiceView> = trace
+                    .services
+                    .iter()
+                    .enumerate()
+                    .map(|(i, s)| ServiceView {
+                        service: i,
+                        model: &s.model,
+                        latency_slo_ms: s.latency_slo_ms,
+                        demand: demand[i],
+                    })
+                    .collect();
+                sched.sync(&views, margin);
+            }
+            check_invariants(&cluster).map_err(|e| anyhow::anyhow!(e))?;
+        }
+        // Workload drift events.
+        let demand = trace.demand_at(t);
+        let capacity = cluster.service_throughputs(n);
+        let views: Vec<ServiceView> = trace
+            .services
+            .iter()
+            .enumerate()
+            .map(|(i, s)| ServiceView {
+                service: i,
+                model: &s.model,
+                latency_slo_ms: s.latency_slo_ms,
+                demand: demand[i],
+            })
+            .collect();
+        for ev in sched.derive_tick_events(&views, &capacity, margin) {
+            let out = sched.handle(&mut cluster, &ev)?;
+            total_actions += out.actions.len();
+            if verbose {
+                println!(
+                    "t={t:<9.1} {:<10} ({} actions{})",
+                    ev.label(),
+                    out.actions.len(),
+                    if out.escalate.is_some() { ", escalated" } else { "" }
+                );
+            }
+            if let Some(why) = out.escalate {
+                if verbose {
+                    println!("            -> full replan: {why}");
+                }
+                total_actions +=
+                    full_replan(&bank, &trace, &mut cluster, &controller, &demand, margin, t)?;
+                full_replans += 1;
+                sched.sync(&views, margin);
+            }
+            check_invariants(&cluster).map_err(|e| anyhow::anyhow!(e))?;
+        }
+        t += tick_s;
+    }
+
+    let q = &sched.quality;
+    let mut tbl = Table::new(&["metric", "value"]);
+    tbl.row(vec!["ticks".into(), ticks.to_string()]);
+    tbl.row(vec!["events".into(), q.events().to_string()]);
+    tbl.row(vec!["absorbed locally".into(), q.incremental.to_string()]);
+    tbl.row(vec!["escalations".into(), q.escalations.to_string()]);
+    tbl.row(vec![
+        "incremental ratio".into(),
+        format!("{:.1}%", 100.0 * q.incremental_ratio()),
+    ]);
+    tbl.row(vec!["full replans applied".into(), full_replans.to_string()]);
+    tbl.row(vec!["actions applied".into(), total_actions.to_string()]);
+    tbl.row(vec!["GPUs in use".into(), cluster.used_gpus().len().to_string()]);
+    tbl.row(vec![
+        "optimality gap".into(),
+        q.last_gap.map_or("n/a".to_string(), |g| format!("{g:.2}")),
+    ]);
+    let fragmentation = frag::cluster_fragmentation_named(&cluster);
+    for (k, v) in &fragmentation {
+        tbl.row(vec![format!("fragmentation {k}"), format!("{v:.3}")]);
+    }
+    println!(
+        "scenario={} horizon={:.1}h tick={tick_s}s gap-threshold={} repair-depth={}",
+        trace.name,
+        trace.horizon_s / 3600.0,
+        sched.cfg.gap_threshold,
+        sched.cfg.repair_depth
+    );
+    println!("{}", tbl.render());
+
+    let out = args.get("json").unwrap();
+    if !out.is_empty() {
+        let v = json::Value::obj(vec![
+            ("scenario", json::Value::from(trace.name.clone())),
+            ("ticks", json::Value::from(ticks)),
+            ("events", json::Value::from(q.events())),
+            ("incremental", json::Value::from(q.incremental)),
+            ("escalations", json::Value::from(q.escalations)),
+            ("incremental_ratio", json::Value::Num(q.incremental_ratio())),
+            ("full_replans", json::Value::from(full_replans)),
+            ("actions", json::Value::from(total_actions)),
+            ("gpus_in_use", json::Value::from(cluster.used_gpus().len())),
+            (
+                "fragmentation",
+                json::Value::Obj(
+                    fragmentation
+                        .iter()
+                        .map(|(k, &v)| (k.clone(), json::Value::Num(v)))
+                        .collect(),
+                ),
+            ),
+        ]);
+        std::fs::write(out, v.to_pretty() + "\n")?;
         println!("wrote {out}");
     }
     Ok(())
@@ -447,6 +707,7 @@ fn main() {
         "optimize" => cmd_optimize(&args),
         "transition" => cmd_transition(&args),
         "simulate" => cmd_simulate(&args),
+        "online" => cmd_online(&args),
         "serve" => cmd_serve(&args),
         "study" => cmd_study(),
         "lower-bound" => cmd_lower_bound(&args),

@@ -168,7 +168,11 @@ impl FleetSpec {
         FleetSpec { counts: vec![(kind, count)] }
     }
 
-    /// Parse a CLI-style spec: `"a100=16,a30=8"`. Duplicate kinds sum.
+    /// Parse a CLI-style spec: `"a100=16,a30=8"`. Each kind may appear
+    /// at most once and every count must be positive — a duplicate kind
+    /// or a zero count is almost always a typo in an operator-facing
+    /// fleet spec, so both are rejected with a descriptive error
+    /// instead of being silently merged/accepted.
     pub fn parse(spec: &str) -> anyhow::Result<FleetSpec> {
         let mut counts: Vec<(DeviceKind, usize)> = Vec::new();
         for part in spec.split(',') {
@@ -185,11 +189,18 @@ impl FleetSpec {
                 .trim()
                 .parse()
                 .map_err(|_| anyhow::anyhow!("fleet entry {part:?}: bad count"))?;
-            anyhow::ensure!(n > 0, "fleet entry {part:?}: count must be positive");
-            match counts.iter_mut().find(|(k, _)| *k == kind) {
-                Some((_, c)) => *c += n,
-                None => counts.push((kind, n)),
-            }
+            anyhow::ensure!(
+                n > 0,
+                "fleet entry {part:?}: count must be positive (omit the kind \
+                 instead of listing it with 0 GPUs)"
+            );
+            anyhow::ensure!(
+                !counts.iter().any(|(k, _)| *k == kind),
+                "fleet spec {spec:?}: device kind {} listed more than once \
+                 (merge the counts into a single entry)",
+                kind.name()
+            );
+            counts.push((kind, n));
         }
         anyhow::ensure!(!counts.is_empty(), "empty fleet spec {spec:?}");
         counts.sort_by_key(|&(k, _)| k);
@@ -326,13 +337,32 @@ mod tests {
         assert_eq!(f.gpu_kinds()[0], DeviceKind::A100);
         assert_eq!(f.gpu_kinds()[11], DeviceKind::A30);
 
-        let dup = FleetSpec::parse("a100=3,a100=5").unwrap();
-        assert_eq!(dup.counts(), &[(DeviceKind::A100, 8)]);
-        assert!(dup.is_pure_a100());
-
         assert!(FleetSpec::parse("").is_err());
         assert!(FleetSpec::parse("a100").is_err());
-        assert!(FleetSpec::parse("a100=0").is_err());
         assert!(FleetSpec::parse("p100=2").is_err());
+    }
+
+    #[test]
+    fn fleet_spec_rejects_duplicate_kinds() {
+        // Duplicates used to be silently summed; they are a typo.
+        let err = FleetSpec::parse("a100=3,a100=5").unwrap_err().to_string();
+        assert!(err.contains("a100") && err.contains("more than once"), "{err}");
+        // Case-insensitive names still collide.
+        let err = FleetSpec::parse("a30=1,A30=2").unwrap_err().to_string();
+        assert!(err.contains("more than once"), "{err}");
+        // The first duplicate is reported even with other kinds around.
+        assert!(FleetSpec::parse("a100=1,a30=2,a100=1").is_err());
+    }
+
+    #[test]
+    fn fleet_spec_rejects_zero_counts() {
+        let err = FleetSpec::parse("a100=0").unwrap_err().to_string();
+        assert!(err.contains("count must be positive"), "{err}");
+        // A zero anywhere in the list is rejected, not dropped.
+        let err = FleetSpec::parse("a100=4,a30=0").unwrap_err().to_string();
+        assert!(err.contains("a30=0"), "{err}");
+        // Negative and junk counts are bad-count errors.
+        assert!(FleetSpec::parse("a100=-1").is_err());
+        assert!(FleetSpec::parse("a100=x").is_err());
     }
 }

@@ -1,0 +1,87 @@
+//! The online workload-event model.
+//!
+//! The incremental scheduler consumes a stream of discrete events —
+//! service onboarding/retirement, demand deltas, GPU failure/repair —
+//! and answers each with *local moves* ([`EventOutcome::actions`])
+//! instead of a full pipeline solve. When local moves cannot absorb an
+//! event (no room even after bounded repair) or the maintained quality
+//! degrades past the configured bound, the outcome carries an
+//! [`EventOutcome::escalate`] reason and the caller runs one full
+//! [`crate::optimizer::OptimizerPipeline`] replan.
+
+use crate::cluster::Action;
+use crate::spec::ServiceId;
+
+/// Demand below this rate counts as "service not active" (matches
+/// `simkit::trace::MIN_ACTIVE_RATE`; kept separate so `online` does not
+/// depend on the simulation layer).
+pub const MIN_RATE: f64 = 1e-9;
+
+/// One workload event the online scheduler absorbs.
+#[derive(Debug, Clone, PartialEq)]
+pub enum OnlineEvent {
+    /// A new service joins: place instances for `rate` req/s.
+    Onboard {
+        service: ServiceId,
+        model: String,
+        latency_slo_ms: f64,
+        rate: f64,
+    },
+    /// A service retires: tear down all of its instances.
+    Retire { service: ServiceId },
+    /// A service's provisioning target changes to `rate` req/s (grow or
+    /// shrink — the scheduler compares against live capacity).
+    DemandDelta { service: ServiceId, rate: f64 },
+    /// A GPU fails: its pods are lost; affected services are re-placed.
+    GpuFail { gpu: usize },
+    /// A failed GPU is repaired (comes back with its saved partition).
+    GpuRepair { gpu: usize },
+}
+
+impl OnlineEvent {
+    /// Short label for logs and replay tables.
+    pub fn label(&self) -> &'static str {
+        match self {
+            OnlineEvent::Onboard { .. } => "onboard",
+            OnlineEvent::Retire { .. } => "retire",
+            OnlineEvent::DemandDelta { .. } => "delta",
+            OnlineEvent::GpuFail { .. } => "gpu-fail",
+            OnlineEvent::GpuRepair { .. } => "gpu-repair",
+        }
+    }
+}
+
+/// What handling one event produced.
+#[derive(Debug, Default)]
+pub struct EventOutcome {
+    /// The local moves, already applied to the state the scheduler was
+    /// handed (same convention as the controller's phase functions).
+    pub actions: Vec<Action>,
+    /// `Some(reason)` when the event could not be absorbed locally (or
+    /// quality degraded past the bound): the caller must run a full
+    /// pipeline replan and discard any scratch state.
+    pub escalate: Option<String>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_are_stable() {
+        let events = [
+            OnlineEvent::Onboard {
+                service: 0,
+                model: "resnet50".into(),
+                latency_slo_ms: 300.0,
+                rate: 10.0,
+            },
+            OnlineEvent::Retire { service: 0 },
+            OnlineEvent::DemandDelta { service: 0, rate: 5.0 },
+            OnlineEvent::GpuFail { gpu: 1 },
+            OnlineEvent::GpuRepair { gpu: 1 },
+        ];
+        let labels: Vec<&str> = events.iter().map(|e| e.label()).collect();
+        assert_eq!(labels, ["onboard", "retire", "delta", "gpu-fail", "gpu-repair"]);
+    }
+}

@@ -1,0 +1,244 @@
+//! The per-kind fragmentation metric (Ting et al.'s online
+//! fragmentation-aware placement, adapted to the MIG profile geometry).
+//!
+//! A GPU's *residual* is every compute slice not pinned down by a
+//! pod-hosting instance — unpartitioned slices plus pod-free instances
+//! (free instances can always be repartitioned away, so they are
+//! reshapeable capacity). The residual is only as useful as the
+//! profiles it can still realize: 6 residual slices fragmented around a
+//! running 1/7 may admit nothing larger than a 2/7. We measure that
+//! directly:
+//!
+//! ```text
+//! frag(GPU)  = 1 − largest_allocatable_slices / residual_slices   (0 when residual = 0)
+//! frag(kind) = 1 − Σ largest / Σ residual  over online GPUs of the kind
+//! ```
+//!
+//! 0.0 means every residual slice is reachable by one maximal profile
+//! (nothing lost to fragmentation); 1.0 means residual capacity exists
+//! but no profile fits it at all. The placer
+//! ([`super::place::pick_slot`]) minimizes the post-placement per-GPU
+//! score, i.e. it prefers placements that keep large contiguous
+//! profiles allocatable.
+
+use std::collections::BTreeMap;
+
+use crate::cluster::{ClusterState, GpuSim};
+use crate::mig::{DeviceKind, Partition, Placement};
+use crate::optimizer::Deployment;
+
+/// (residual slices, largest allocatable profile's slices) of a busy
+/// set — the placements that host pods, everything else reshapeable.
+fn residual_of(kind: DeviceKind, busy: &[Placement]) -> (u8, u8) {
+    let used: u8 = busy.iter().map(|p| p.size.slices()).sum();
+    let residual = kind.compute_slices().saturating_sub(used);
+    if residual == 0 {
+        return (0, 0);
+    }
+    // A subset of a legal partition is legal, so this cannot fail for
+    // placements taken from a live GPU.
+    let part = Partition::try_new_on(kind, busy.to_vec())
+        .expect("pod placements form a legal sub-partition");
+    let largest = kind
+        .sizes()
+        .iter()
+        .rev()
+        .find(|&&s| part.can_allocate_on(kind, s).is_some())
+        .map(|s| s.slices())
+        .unwrap_or(0);
+    (residual, largest)
+}
+
+/// The pod-hosting placements of a GPU (its non-reshapeable geometry).
+fn busy_placements(g: &GpuSim) -> Vec<Placement> {
+    g.pods().keys().copied().collect()
+}
+
+/// Fragmentation score of one GPU in `[0, 1]` (see module docs).
+pub fn gpu_fragmentation(kind: DeviceKind, g: &GpuSim) -> f64 {
+    let (residual, largest) = residual_of(kind, &busy_placements(g));
+    score(residual as f64, largest as f64)
+}
+
+/// The score a GPU *would* have after `candidate` starts hosting a pod
+/// (whether `candidate` is an existing free instance or a new
+/// placement). Returns `None` when the candidate conflicts with the
+/// GPU's busy placements — i.e. it was never allocatable.
+pub fn fragmentation_after(
+    kind: DeviceKind,
+    g: &GpuSim,
+    candidate: Placement,
+) -> Option<f64> {
+    let mut busy = busy_placements(g);
+    if busy.iter().any(|p| p.overlaps(&candidate)) {
+        return None;
+    }
+    busy.push(candidate);
+    if Partition::try_new_on(kind, busy.clone()).is_err() {
+        return None;
+    }
+    let (residual, largest) = residual_of(kind, &busy);
+    Some(score(residual as f64, largest as f64))
+}
+
+fn score(residual: f64, largest: f64) -> f64 {
+    if residual <= 0.0 {
+        0.0
+    } else {
+        1.0 - largest / residual
+    }
+}
+
+/// Per-kind cluster fragmentation over online GPUs: residuals and
+/// largest-allocatable profiles are summed per kind before scoring, so
+/// a kind's number is the fraction of its residual slices *not*
+/// reachable by each GPU's best remaining profile.
+pub fn cluster_fragmentation(state: &ClusterState) -> BTreeMap<DeviceKind, f64> {
+    let mut acc: BTreeMap<DeviceKind, (f64, f64)> = BTreeMap::new();
+    for gi in 0..state.num_gpus() {
+        if state.is_offline(gi) {
+            continue;
+        }
+        let kind = state.kind_of(gi);
+        let (residual, largest) = residual_of(kind, &busy_placements(state.gpu(gi)));
+        let e = acc.entry(kind).or_insert((0.0, 0.0));
+        e.0 += residual as f64;
+        e.1 += largest as f64;
+    }
+    acc.into_iter().map(|(k, (r, l))| (k, score(r, l))).collect()
+}
+
+/// [`cluster_fragmentation`] keyed by kind *name* — the `SimReport` /
+/// JSON shape.
+pub fn cluster_fragmentation_named(state: &ClusterState) -> BTreeMap<String, f64> {
+    cluster_fragmentation(state)
+        .into_iter()
+        .map(|(k, v)| (k.name().to_string(), v))
+        .collect()
+}
+
+/// Per-kind fragmentation of a planned [`Deployment`] (every assigned
+/// instance counts as busy) — lets static plans be compared on the same
+/// metric as live clusters.
+pub fn deployment_fragmentation(dep: &Deployment) -> BTreeMap<DeviceKind, f64> {
+    let mut acc: BTreeMap<DeviceKind, (f64, f64)> = BTreeMap::new();
+    for g in &dep.gpus {
+        let busy: Vec<Placement> = g.assigns.iter().map(|a| a.placement).collect();
+        let (residual, largest) = residual_of(g.kind, &busy);
+        let e = acc.entry(g.kind).or_insert((0.0, 0.0));
+        e.0 += residual as f64;
+        e.1 += largest as f64;
+    }
+    acc.into_iter().map(|(k, (r, l))| (k, score(r, l))).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Pod;
+    use crate::mig::InstanceSize::*;
+
+    fn pod(svc: usize) -> Pod {
+        Pod { service: svc, batch: 8, throughput: 10.0 }
+    }
+
+    #[test]
+    fn empty_gpu_has_zero_fragmentation() {
+        let c = ClusterState::new(1, 1);
+        assert_eq!(gpu_fragmentation(DeviceKind::A100, c.gpu(0)), 0.0);
+    }
+
+    #[test]
+    fn free_instances_are_reshapeable_capacity() {
+        // A free 1/7 at slot 0 does NOT fragment the GPU: it can be
+        // repartitioned away, so the full 7/7 stays reachable.
+        let mut c = ClusterState::new(1, 1);
+        c.repartition(0, &[], &[Placement::new(One, 0)]).unwrap();
+        assert_eq!(gpu_fragmentation(DeviceKind::A100, c.gpu(0)), 0.0);
+        // A *pod* on that 1/7 pins it: 6 residual slices remain but the
+        // largest allocatable profile is a 3/7@4 (the 4/7 only starts
+        // at slot 0, now occupied) → frag = 1 − 3/6.
+        c.create_pod(0, Placement::new(One, 0), pod(0)).unwrap();
+        let f = gpu_fragmentation(DeviceKind::A100, c.gpu(0));
+        assert!((f - 0.5).abs() < 1e-12, "{f}");
+    }
+
+    #[test]
+    fn full_gpu_has_zero_residual() {
+        let mut c = ClusterState::new(1, 1);
+        c.repartition(0, &[], &[Placement::new(Seven, 0)]).unwrap();
+        c.create_pod(0, Placement::new(Seven, 0), pod(0)).unwrap();
+        assert_eq!(gpu_fragmentation(DeviceKind::A100, c.gpu(0)), 0.0);
+    }
+
+    #[test]
+    fn fragmentation_after_ranks_placements() {
+        // A 3/7 pod occupies slots 0..4. Adding a 1/7 at slot 6 leaves
+        // the 2/7@4 profile reachable; a 1/7 at slot 4 splits the
+        // remaining space so nothing bigger than another 1/7 fits. The
+        // metric must prefer slot 6.
+        let mut c = ClusterState::new(1, 1);
+        c.repartition(0, &[], &[Placement::new(Three, 0)]).unwrap();
+        c.create_pod(0, Placement::new(Three, 0), pod(0)).unwrap();
+        let edge = fragmentation_after(DeviceKind::A100, c.gpu(0), Placement::new(One, 6))
+            .unwrap();
+        let middle =
+            fragmentation_after(DeviceKind::A100, c.gpu(0), Placement::new(One, 4))
+                .unwrap();
+        assert!(edge < middle, "edge {edge} vs middle {middle}");
+    }
+
+    #[test]
+    fn fragmentation_after_rejects_conflicts() {
+        let mut c = ClusterState::new(1, 1);
+        c.repartition(0, &[], &[Placement::new(Four, 0)]).unwrap();
+        c.create_pod(0, Placement::new(Four, 0), pod(0)).unwrap();
+        assert!(fragmentation_after(DeviceKind::A100, c.gpu(0), Placement::new(One, 2))
+            .is_none());
+        // The 4+3 exclusion rule is enforced through try_new_on.
+        assert!(fragmentation_after(DeviceKind::A100, c.gpu(0), Placement::new(Three, 4))
+            .is_none());
+    }
+
+    #[test]
+    fn cluster_metric_is_per_kind() {
+        use crate::mig::FleetSpec;
+        let fleet = FleetSpec::parse("a100=1,a30=1").unwrap();
+        let mut c = ClusterState::from_fleet(&fleet, 2);
+        c.repartition(0, &[], &[Placement::new(One, 0)]).unwrap();
+        c.create_pod(0, Placement::new(One, 0), pod(0)).unwrap();
+        let m = cluster_fragmentation(&c);
+        assert!(m[&DeviceKind::A100] > 0.0);
+        assert_eq!(m[&DeviceKind::A30], 0.0);
+        let named = cluster_fragmentation_named(&c);
+        assert_eq!(named.len(), 2);
+        assert!(named.contains_key("a100") && named.contains_key("a30"));
+    }
+
+    #[test]
+    fn offline_gpus_are_excluded() {
+        let mut c = ClusterState::new(1, 2);
+        c.repartition(0, &[], &[Placement::new(One, 3)]).unwrap();
+        c.create_pod(0, Placement::new(One, 3), pod(0)).unwrap();
+        let before = cluster_fragmentation(&c)[&DeviceKind::A100];
+        assert!(before > 0.0);
+        c.set_offline(0).unwrap();
+        // Only the healthy, empty GPU remains → zero fragmentation.
+        assert_eq!(cluster_fragmentation(&c)[&DeviceKind::A100], 0.0);
+    }
+
+    #[test]
+    fn deployment_metric_counts_all_assigns_busy() {
+        use crate::optimizer::{GpuConfig, InstanceAssign};
+        let dep = Deployment {
+            gpus: vec![GpuConfig::a100(vec![InstanceAssign {
+                placement: Placement::new(One, 3),
+                service: 0,
+                batch: 8,
+                throughput: 10.0,
+            }])],
+        };
+        let m = deployment_fragmentation(&dep);
+        assert!(m[&DeviceKind::A100] > 0.0);
+    }
+}

@@ -1,0 +1,691 @@
+//! `online` — the fragmentation-aware incremental scheduler.
+//!
+//! The two-phase pipeline (§5–§6) solves a *static* snapshot; the
+//! simkit control loop (DESIGN.md §3) reacts to change by re-running
+//! it. This subsystem absorbs the common case — service onboarding,
+//! retirement, demand drift, GPU failure/repair — with **local moves**
+//! on the live [`ClusterState`] instead:
+//!
+//! * [`event`] — the workload-event model ([`OnlineEvent`]) and the
+//!   per-event result ([`EventOutcome`]);
+//! * [`frag`] — the per-kind fragmentation metric over residual slices
+//!   (reported in `SimReport` for every policy);
+//! * [`place`] — fragmentation-aware slot picking: every candidate slot
+//!   is scored by the hosting GPU's post-placement fragmentation, so
+//!   placements keep large contiguous profiles allocatable;
+//! * [`repair`] — bounded evict-and-repack (≤ `repair_depth` pod
+//!   moves) when direct placement finds no room, built on the shared
+//!   [`crate::controller::slots`] helper;
+//! * [`quality`] — the escalation contract: after every event the
+//!   GPUs-in-use objective is compared against
+//!   [`crate::optimizer::lower_bound_gpus`] and only a gap beyond
+//!   `gap_threshold` (or an unabsorbable event) hands off to a full
+//!   [`crate::optimizer::OptimizerPipeline`] replan.
+//!
+//! Everything is deterministic: no RNG, no wall-clock — a fixed event
+//! stream produces an identical action stream at any optimizer
+//! parallelism (asserted in `tests/online_equivalence.rs`).
+
+pub mod event;
+pub mod frag;
+pub mod place;
+pub mod quality;
+pub mod repair;
+
+pub use event::{EventOutcome, OnlineEvent, MIN_RATE};
+pub use quality::QualityTracker;
+
+use std::collections::BTreeMap;
+
+use crate::cluster::{Action, ClusterState, Executor, Pod};
+use crate::mig::{DeviceKind, InstanceSize, Partition, Placement};
+use crate::perf::ProfileBank;
+use crate::spec::ServiceId;
+
+/// Knobs of the incremental scheduler.
+#[derive(Debug, Clone)]
+pub struct OnlineConfig {
+    /// Escalate when `(gpus_in_use − lower_bound) / lower_bound`
+    /// exceeds this after an event.
+    pub gap_threshold: f64,
+    /// Maximum pods evicted (and migrated) per local repair.
+    pub repair_depth: usize,
+    /// A service whose provisioning target falls below this fraction of
+    /// its previous target triggers a shrink delta
+    /// ([`OnlineScheduler::derive_tick_events`]).
+    pub scale_down_ratio: f64,
+}
+
+impl Default for OnlineConfig {
+    fn default() -> Self {
+        OnlineConfig { gap_threshold: 0.5, repair_depth: 4, scale_down_ratio: 0.7 }
+    }
+}
+
+/// One service as the event-derivation layer sees it at an instant.
+#[derive(Debug, Clone, Copy)]
+pub struct ServiceView<'a> {
+    pub service: ServiceId,
+    pub model: &'a str,
+    pub latency_slo_ms: f64,
+    /// Raw demand (req/s) at this instant; provisioning targets apply
+    /// the margin on top.
+    pub demand: f64,
+}
+
+#[derive(Debug, Clone)]
+struct ServiceEntry {
+    model: String,
+    latency_ms: f64,
+    /// Current provisioning target, req/s (margin included).
+    rate: f64,
+}
+
+/// The incremental scheduler: a service catalog plus the quality
+/// tracker. Deliberately **cluster-stateless** — every event is applied
+/// to whatever [`ClusterState`] the caller hands in (a scratch clone in
+/// simkit, the live state in the `online` CLI replay), so an aborted
+/// transition never desynchronizes the scheduler.
+pub struct OnlineScheduler<'a> {
+    bank: &'a ProfileBank,
+    pub cfg: OnlineConfig,
+    services: BTreeMap<ServiceId, ServiceEntry>,
+    pub quality: QualityTracker,
+}
+
+impl<'a> OnlineScheduler<'a> {
+    pub fn new(bank: &'a ProfileBank, cfg: OnlineConfig) -> OnlineScheduler<'a> {
+        OnlineScheduler { bank, cfg, services: BTreeMap::new(), quality: QualityTracker::default() }
+    }
+
+    /// Is the service currently onboarded?
+    pub fn onboarded(&self, service: ServiceId) -> bool {
+        self.services.contains_key(&service)
+    }
+
+    /// The provisioning target last set for a service (0 if unknown).
+    pub fn rate_of(&self, service: ServiceId) -> f64 {
+        self.services.get(&service).map_or(0.0, |e| e.rate)
+    }
+
+    /// Derive this tick's events from demand vs. live capacity:
+    /// onboard newly active services, retire inactive ones, and emit a
+    /// demand delta on a capacity deficit or a scale-down past
+    /// [`OnlineConfig::scale_down_ratio`]. `capacity` is indexed by
+    /// [`ServiceId`]; `margin` is the provisioning headroom.
+    pub fn derive_tick_events(
+        &self,
+        views: &[ServiceView],
+        capacity: &[f64],
+        margin: f64,
+    ) -> Vec<OnlineEvent> {
+        let mut events = Vec::new();
+        for v in views {
+            let active = v.demand > MIN_RATE;
+            let target = v.demand * (1.0 + margin);
+            match (active, self.services.get(&v.service)) {
+                (true, None) => events.push(OnlineEvent::Onboard {
+                    service: v.service,
+                    model: v.model.to_string(),
+                    latency_slo_ms: v.latency_slo_ms,
+                    rate: target,
+                }),
+                (false, Some(_)) => {
+                    events.push(OnlineEvent::Retire { service: v.service })
+                }
+                (true, Some(entry)) => {
+                    let deficit = capacity[v.service] + 1e-6 < v.demand;
+                    let shrink = target < self.cfg.scale_down_ratio * entry.rate;
+                    if deficit || shrink {
+                        events.push(OnlineEvent::DemandDelta {
+                            service: v.service,
+                            rate: target,
+                        });
+                    }
+                }
+                (false, None) => {
+                    // Orphan sweep: a Retire absorbed into a transition
+                    // that later aborted leaves live pods with no
+                    // catalog entry. Capacity without demand or a
+                    // catalog entry ⇒ re-emit the retire.
+                    if capacity[v.service] > MIN_RATE {
+                        events.push(OnlineEvent::Retire { service: v.service });
+                    }
+                }
+            }
+        }
+        events
+    }
+
+    /// Re-align the catalog with a full replan's provisioning (called
+    /// after an escalation): active services get `demand × (1+margin)`,
+    /// inactive ones are dropped.
+    pub fn sync(&mut self, views: &[ServiceView], margin: f64) {
+        self.services.clear();
+        for v in views {
+            if v.demand > MIN_RATE {
+                self.services.insert(v.service, ServiceEntry {
+                    model: v.model.to_string(),
+                    latency_ms: v.latency_slo_ms,
+                    rate: v.demand * (1.0 + margin),
+                });
+            }
+        }
+    }
+
+    /// Absorb one event with local moves, mutating `state` in place and
+    /// returning the applied actions. `escalate` is set when the event
+    /// needs a full replan instead (the caller discards scratch state);
+    /// `Err` is reserved for invariant bugs.
+    pub fn handle(
+        &mut self,
+        state: &mut ClusterState,
+        event: &OnlineEvent,
+    ) -> anyhow::Result<EventOutcome> {
+        let mut out = EventOutcome::default();
+        let escalate = match event {
+            OnlineEvent::Onboard { service, model, latency_slo_ms, rate } => {
+                anyhow::ensure!(
+                    self.bank.get(model).is_some(),
+                    "onboard {service}: unknown model {model}"
+                );
+                self.services.insert(*service, ServiceEntry {
+                    model: model.clone(),
+                    latency_ms: *latency_slo_ms,
+                    rate: *rate,
+                });
+                self.scale_service(state, *service, &mut out.actions)?
+            }
+            OnlineEvent::Retire { service } => {
+                self.services.remove(service);
+                retire_service(state, *service, &mut out.actions)?;
+                None
+            }
+            OnlineEvent::DemandDelta { service, rate } => {
+                let known = match self.services.get_mut(service) {
+                    Some(e) => {
+                        e.rate = *rate;
+                        true
+                    }
+                    None => false,
+                };
+                if known {
+                    self.scale_service(state, *service, &mut out.actions)?
+                } else {
+                    Some(format!("demand delta for unknown service {service}"))
+                }
+            }
+            OnlineEvent::GpuFail { gpu } => {
+                let killed = state.set_offline(*gpu)?;
+                let mut affected: Vec<ServiceId> =
+                    killed.iter().map(|p| p.service).collect();
+                affected.sort_unstable();
+                affected.dedup();
+                let mut esc = None;
+                for sid in affected {
+                    if !self.services.contains_key(&sid) {
+                        continue;
+                    }
+                    if let Some(r) = self.scale_service(state, sid, &mut out.actions)? {
+                        esc = Some(r);
+                        break;
+                    }
+                }
+                esc
+            }
+            OnlineEvent::GpuRepair { gpu } => {
+                state.set_online(*gpu)?;
+                None
+            }
+        };
+        // Quality gate: even a locally-absorbed event escalates when
+        // the maintained objective has drifted too far from the bound.
+        let escalate = escalate.or_else(|| {
+            let active: Vec<(String, f64, f64)> = self
+                .services
+                .values()
+                .filter(|e| e.rate > MIN_RATE)
+                .map(|e| (e.model.clone(), e.latency_ms, e.rate))
+                .collect();
+            self.quality.assess(self.bank, state, &active, self.cfg.gap_threshold)
+        });
+        if escalate.is_some() {
+            self.quality.escalations += 1;
+        } else {
+            self.quality.incremental += 1;
+        }
+        out.escalate = escalate;
+        Ok(out)
+    }
+
+    /// (batch, throughput) of one (kind, size) instance of a service.
+    fn eff(
+        &self,
+        kind: DeviceKind,
+        entry: &ServiceEntry,
+        size: InstanceSize,
+    ) -> Option<(usize, f64)> {
+        if !kind.supports(size) {
+            return None;
+        }
+        self.bank
+            .get(&entry.model)?
+            .best_batch_scaled(size, entry.latency_ms, kind.perf_scale())
+            .map(|(b, p)| (b, p.throughput))
+    }
+
+    /// Bring a service's live capacity to its provisioning target:
+    /// create-first growth (in-place upgrades, fragmentation-aware
+    /// placement, bounded repair — in that order), surplus-only shrink
+    /// (capacity never dips below the target). Returns an escalation
+    /// reason when the fleet cannot host the growth.
+    fn scale_service(
+        &self,
+        state: &mut ClusterState,
+        sid: ServiceId,
+        actions: &mut Vec<Action>,
+    ) -> anyhow::Result<Option<String>> {
+        let entry = self.services[&sid].clone();
+        let target = entry.rate;
+        if target <= MIN_RATE {
+            retire_service(state, sid, actions)?;
+            return Ok(None);
+        }
+        let mut capacity = capacity_of(state, sid);
+
+        if capacity >= target {
+            // Shrink: retire surplus instances, cheapest first, never
+            // dropping below the (new) target.
+            let mut pods = state.pods_of_service(sid);
+            pods.sort_by(|a, b| {
+                a.2.throughput
+                    .total_cmp(&b.2.throughput)
+                    .then_with(|| (a.0, a.1).cmp(&(b.0, b.1)))
+            });
+            for (g, pl, pod) in pods {
+                if capacity - pod.throughput >= target - 1e-9 {
+                    delete_instance(state, g, pl, sid, actions)?;
+                    capacity -= pod.throughput;
+                }
+            }
+            return Ok(None);
+        }
+
+        // Grow. Each round adds one instance; capacity is strictly
+        // increasing, so this terminates (guard for safety).
+        for _round in 0..10_000 {
+            capacity = capacity_of(state, sid);
+            let gap = target - capacity;
+            if gap <= 1e-9 {
+                return Ok(None);
+            }
+            // 1. In-place upgrade: replace one existing instance with a
+            //    larger profile on the *same GPU* when that alone covers
+            //    the gap (create-first, no capacity dip).
+            if self.try_grow_in_place(state, sid, &entry, gap, actions)? {
+                continue;
+            }
+            // Candidate (kind, size) order: tightest single instance
+            // that covers the gap first, else the biggest thr available.
+            let mut cands: Vec<(DeviceKind, InstanceSize, usize, f64)> = Vec::new();
+            for kind in state.fleet_kinds() {
+                for &size in kind.sizes() {
+                    if let Some((batch, thr)) = self.eff(kind, &entry, size) {
+                        cands.push((kind, size, batch, thr));
+                    }
+                }
+            }
+            if cands.is_empty() {
+                return Ok(Some(format!(
+                    "service {sid} ({}): no feasible (kind, size) on this fleet",
+                    entry.model
+                )));
+            }
+            cands.sort_by(|a, b| {
+                let cover_a = a.3 + 1e-9 >= gap;
+                let cover_b = b.3 + 1e-9 >= gap;
+                match (cover_a, cover_b) {
+                    (true, true) => a.3.total_cmp(&b.3), // tightest cover
+                    (true, false) => std::cmp::Ordering::Less,
+                    (false, true) => std::cmp::Ordering::Greater,
+                    (false, false) => b.3.total_cmp(&a.3), // biggest step
+                }
+                .then_with(|| (a.0, a.1).cmp(&(b.0, b.1)))
+            });
+            // 2. Fragmentation-aware direct placement.
+            let mut placed = false;
+            for &(kind, size, batch, thr) in &cands {
+                if place::place_instance(state, kind, size, sid, batch, thr, actions)?
+                    .is_some()
+                {
+                    placed = true;
+                    break;
+                }
+            }
+            // 3. Bounded evict-and-repack.
+            if !placed {
+                for &(kind, size, batch, thr) in &cands {
+                    if let Some((gpu, pl)) = repair::evict_and_repack(
+                        state,
+                        kind,
+                        size,
+                        self.cfg.repair_depth,
+                        actions,
+                    )? {
+                        let act = Action::CreatePod {
+                            gpu,
+                            placement: pl,
+                            pod: Pod { service: sid, batch, throughput: thr },
+                        };
+                        Executor::apply(state, &act)?;
+                        actions.push(act);
+                        placed = true;
+                        break;
+                    }
+                }
+            }
+            if !placed {
+                return Ok(Some(format!(
+                    "service {sid}: no room for any instance size \
+                     (repair depth {})",
+                    self.cfg.repair_depth
+                )));
+            }
+        }
+        Ok(Some(format!("service {sid}: growth did not converge")))
+    }
+
+    /// Upgrade one existing instance to a larger profile on its own GPU
+    /// when the throughput step covers the whole gap. Create-first: the
+    /// larger instance is allocated *alongside* the old one, so capacity
+    /// never dips.
+    fn try_grow_in_place(
+        &self,
+        state: &mut ClusterState,
+        sid: ServiceId,
+        entry: &ServiceEntry,
+        gap: f64,
+        actions: &mut Vec<Action>,
+    ) -> anyhow::Result<bool> {
+        for (g, pl, pod) in state.pods_of_service(sid) {
+            let kind = state.kind_of(g);
+            for &size in kind.sizes() {
+                if size <= pl.size {
+                    continue;
+                }
+                let Some((batch, thr)) = self.eff(kind, entry, size) else { continue };
+                if thr + 1e-9 < pod.throughput + gap {
+                    continue; // upgrade would not cover the gap
+                }
+                let Some(start) = state.gpu(g).partition().can_allocate_on(kind, size)
+                else {
+                    continue;
+                };
+                let new_pl = Placement::new(size, start);
+                for act in [
+                    Action::Repartition { gpu: g, remove: vec![], add: vec![new_pl] },
+                    Action::CreatePod {
+                        gpu: g,
+                        placement: new_pl,
+                        pod: Pod { service: sid, batch, throughput: thr },
+                    },
+                    Action::DeletePod { gpu: g, placement: pl, service: sid },
+                    Action::Repartition { gpu: g, remove: vec![pl], add: vec![] },
+                ] {
+                    Executor::apply(state, &act)?;
+                    actions.push(act);
+                }
+                return Ok(true);
+            }
+        }
+        Ok(false)
+    }
+}
+
+/// Live capacity (req/s) of one service.
+fn capacity_of(state: &ClusterState, sid: ServiceId) -> f64 {
+    state
+        .pods_of_service(sid)
+        .iter()
+        .map(|(_, _, pod)| pod.throughput)
+        .sum()
+}
+
+/// Tear down every instance of a service (slot returned to free space).
+fn retire_service(
+    state: &mut ClusterState,
+    sid: ServiceId,
+    actions: &mut Vec<Action>,
+) -> anyhow::Result<()> {
+    for (g, pl, _) in state.pods_of_service(sid) {
+        delete_instance(state, g, pl, sid, actions)?;
+    }
+    Ok(())
+}
+
+/// `DeletePod` + the repartition returning the slot to free space.
+fn delete_instance(
+    state: &mut ClusterState,
+    gpu: usize,
+    placement: Placement,
+    service: ServiceId,
+    actions: &mut Vec<Action>,
+) -> anyhow::Result<()> {
+    for act in [
+        Action::DeletePod { gpu, placement, service },
+        Action::Repartition { gpu, remove: vec![placement], add: vec![] },
+    ] {
+        Executor::apply(state, &act)?;
+        actions.push(act);
+    }
+    Ok(())
+}
+
+/// The online invariant suite: every GPU's partition is legal for its
+/// own [`DeviceKind`] (geometry, start tables, the 4+3 exclusion rule),
+/// slice usage is within the device's compute capacity, every pod sits
+/// on an instance of the partition, and offline GPUs hold nothing.
+/// Checked after every applied incremental action in simkit and after
+/// every event in the property suite.
+pub fn check_invariants(state: &ClusterState) -> Result<(), String> {
+    for gi in 0..state.num_gpus() {
+        let g = state.gpu(gi);
+        let kind = state.kind_of(gi);
+        let placements = g.partition().placements().to_vec();
+        let part = Partition::try_new_on(kind, placements.clone())
+            .map_err(|e| format!("gpu {gi} ({kind}): illegal partition: {e}"))?;
+        if part.used_slices() > kind.compute_slices() {
+            return Err(format!(
+                "gpu {gi} ({kind}): {} slices used > {} capacity",
+                part.used_slices(),
+                kind.compute_slices()
+            ));
+        }
+        for pl in g.pods().keys() {
+            if !placements.contains(pl) {
+                return Err(format!("gpu {gi}: pod on {pl:?} outside the partition"));
+            }
+        }
+        if state.is_offline(gi) && (!g.pods().is_empty() || !placements.is_empty()) {
+            return Err(format!("gpu {gi}: offline but not empty"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mig::FleetSpec;
+
+    fn scheduler(bank: &ProfileBank) -> OnlineScheduler<'_> {
+        OnlineScheduler::new(bank, OnlineConfig::default())
+    }
+
+    fn onboard(sid: ServiceId, model: &str, rate: f64) -> OnlineEvent {
+        OnlineEvent::Onboard {
+            service: sid,
+            model: model.to_string(),
+            latency_slo_ms: 300.0,
+            rate,
+        }
+    }
+
+    #[test]
+    fn onboard_reaches_target_and_retire_clears() {
+        let bank = ProfileBank::synthetic();
+        let mut sched = scheduler(&bank);
+        let mut state = ClusterState::new(1, 8);
+        let out = sched.handle(&mut state, &onboard(0, "resnet50", 120.0)).unwrap();
+        assert!(out.escalate.is_none(), "{:?}", out.escalate);
+        assert!(!out.actions.is_empty());
+        assert!(capacity_of(&state, 0) >= 120.0);
+        check_invariants(&state).unwrap();
+
+        let out = sched.handle(&mut state, &OnlineEvent::Retire { service: 0 }).unwrap();
+        assert!(out.escalate.is_none());
+        assert_eq!(capacity_of(&state, 0), 0.0);
+        assert!(state.used_gpus().is_empty(), "retire clears partitions");
+        assert!(!sched.onboarded(0));
+        check_invariants(&state).unwrap();
+    }
+
+    #[test]
+    fn demand_delta_grows_and_shrinks_without_dipping() {
+        let bank = ProfileBank::synthetic();
+        let mut sched = scheduler(&bank);
+        let mut state = ClusterState::new(1, 8);
+        sched.handle(&mut state, &onboard(0, "bert-base-uncased", 60.0)).unwrap();
+        let before = capacity_of(&state, 0);
+
+        // Grow: replay actions on a copy, capacity must never dip
+        // below the OLD target while reaching the new one.
+        let mut replay = state.clone();
+        let out = sched
+            .handle(&mut state, &OnlineEvent::DemandDelta { service: 0, rate: 200.0 })
+            .unwrap();
+        assert!(out.escalate.is_none(), "{:?}", out.escalate);
+        assert!(capacity_of(&state, 0) >= 200.0);
+        let mut min_cap = before;
+        for a in &out.actions {
+            Executor::apply(&mut replay, a).unwrap();
+            min_cap = min_cap.min(capacity_of(&replay, 0));
+        }
+        assert!(min_cap >= 60.0 - 1e-9, "capacity dipped to {min_cap}");
+
+        // Shrink back: never dips below the NEW (lower) target.
+        let mut replay = state.clone();
+        let out = sched
+            .handle(&mut state, &OnlineEvent::DemandDelta { service: 0, rate: 40.0 })
+            .unwrap();
+        assert!(out.escalate.is_none());
+        let cap = capacity_of(&state, 0);
+        assert!(cap >= 40.0, "shrink went too far: {cap}");
+        let mut min_cap = f64::INFINITY;
+        for a in &out.actions {
+            Executor::apply(&mut replay, a).unwrap();
+            min_cap = min_cap.min(capacity_of(&replay, 0));
+        }
+        assert!(min_cap >= 40.0 - 1e-9, "shrink dipped below new target: {min_cap}");
+        check_invariants(&state).unwrap();
+    }
+
+    #[test]
+    fn gpu_fail_relocates_lost_capacity() {
+        let bank = ProfileBank::synthetic();
+        let mut sched = scheduler(&bank);
+        let mut state = ClusterState::new(1, 8);
+        sched.handle(&mut state, &onboard(0, "resnet50", 150.0)).unwrap();
+        let victim = state.used_gpus()[0];
+        let out =
+            sched.handle(&mut state, &OnlineEvent::GpuFail { gpu: victim }).unwrap();
+        assert!(out.escalate.is_none(), "{:?}", out.escalate);
+        assert!(state.is_offline(victim));
+        assert!(capacity_of(&state, 0) >= 150.0, "capacity rebuilt elsewhere");
+        check_invariants(&state).unwrap();
+        sched.handle(&mut state, &OnlineEvent::GpuRepair { gpu: victim }).unwrap();
+        assert!(!state.is_offline(victim));
+        check_invariants(&state).unwrap();
+    }
+
+    #[test]
+    fn impossible_growth_escalates_not_errors() {
+        let bank = ProfileBank::synthetic();
+        let mut sched = scheduler(&bank);
+        // One GPU cannot serve this rate.
+        let mut state = ClusterState::new(1, 1);
+        let out = sched.handle(&mut state, &onboard(0, "resnet50", 1e5)).unwrap();
+        assert!(out.escalate.is_some());
+        assert_eq!(sched.quality.escalations, 1);
+        check_invariants(&state).unwrap();
+    }
+
+    #[test]
+    fn derive_events_onboard_retire_delta() {
+        let bank = ProfileBank::synthetic();
+        let mut sched = scheduler(&bank);
+        let mut state = ClusterState::new(1, 8);
+        let views = |d0: f64, d1: f64| {
+            vec![
+                ServiceView { service: 0, model: "resnet50", latency_slo_ms: 300.0, demand: d0 },
+                ServiceView {
+                    service: 1,
+                    model: "bert-base-uncased",
+                    latency_slo_ms: 300.0,
+                    demand: d1,
+                },
+            ]
+        };
+        // Nothing onboarded yet: active services onboard.
+        let evs = sched.derive_tick_events(&views(50.0, 0.0), &[0.0, 0.0], 0.1);
+        assert_eq!(evs.len(), 1);
+        assert!(matches!(evs[0], OnlineEvent::Onboard { service: 0, .. }));
+        for e in &evs {
+            sched.handle(&mut state, e).unwrap();
+        }
+        // Capacity satisfied, demand steady → no events.
+        let cap = capacity_of(&state, 0);
+        assert!(sched.derive_tick_events(&views(50.0, 0.0), &[cap, 0.0], 0.1).is_empty());
+        // Deficit → delta; deactivation → retire.
+        let evs = sched.derive_tick_events(&views(cap * 2.0, 0.0), &[cap, 0.0], 0.1);
+        assert!(matches!(evs[0], OnlineEvent::DemandDelta { service: 0, .. }));
+        let evs = sched.derive_tick_events(&views(0.0, 0.0), &[cap, 0.0], 0.1);
+        assert!(matches!(evs[0], OnlineEvent::Retire { service: 0 }));
+        // Scale-down past the ratio → delta.
+        let evs = sched.derive_tick_events(&views(10.0, 0.0), &[cap, 0.0], 0.1);
+        assert!(matches!(evs[0], OnlineEvent::DemandDelta { service: 0, .. }));
+    }
+
+    #[test]
+    fn mixed_fleet_growth_stays_kind_legal() {
+        let bank = ProfileBank::synthetic();
+        let mut sched = scheduler(&bank);
+        let fleet = FleetSpec::parse("a100=2,a30=2").unwrap();
+        let mut state = ClusterState::from_fleet(&fleet, 2);
+        let out = sched.handle(&mut state, &onboard(0, "resnet50", 400.0)).unwrap();
+        assert!(out.escalate.is_none(), "{:?}", out.escalate);
+        assert!(capacity_of(&state, 0) >= 400.0);
+        check_invariants(&state).unwrap();
+    }
+
+    #[test]
+    fn same_events_same_actions() {
+        let bank = ProfileBank::synthetic();
+        let events = vec![
+            onboard(0, "resnet50", 100.0),
+            onboard(1, "bert-base-uncased", 80.0),
+            OnlineEvent::DemandDelta { service: 0, rate: 160.0 },
+            OnlineEvent::Retire { service: 1 },
+        ];
+        let run = || {
+            let mut sched = scheduler(&bank);
+            let mut state = ClusterState::new(1, 8);
+            let mut all = Vec::new();
+            for e in &events {
+                all.extend(sched.handle(&mut state, e).unwrap().actions);
+            }
+            all
+        };
+        assert_eq!(run(), run(), "the scheduler must be deterministic");
+    }
+}

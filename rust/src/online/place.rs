@@ -1,0 +1,195 @@
+//! Fragmentation-aware slot picking and placement.
+//!
+//! Unlike the controller's [`crate::controller::slots::allocate_slot`]
+//! (which takes the *first* legal start per GPU and ranks GPUs by
+//! load), the online placer enumerates **every** candidate slot — each
+//! pod-free instance of the right size plus each legal partition
+//! extension — and scores the GPU's post-placement fragmentation
+//! ([`super::frag::fragmentation_after`]). The winning slot is the one
+//! that keeps the largest contiguous profiles allocatable, so steady
+//! event streams do not slowly grind the fleet into 1-slice confetti.
+
+use crate::cluster::{Action, ClusterState, Executor, GpuSim, Pod};
+use crate::mig::{DeviceKind, InstanceSize, Partition, Placement};
+use crate::spec::ServiceId;
+
+/// All slots where `size` could host a pod on this GPU right now:
+/// existing pod-free instances of that size (`needs_repartition =
+/// false`) and legal partition extensions (`true`). Extension legality
+/// is delegated to [`Partition::try_new_on`] — one source of truth for
+/// geometry, start tables, and per-kind exclusion rules.
+fn candidate_slots(
+    g: &GpuSim,
+    kind: DeviceKind,
+    size: InstanceSize,
+) -> Vec<(Placement, bool)> {
+    let mut out: Vec<(Placement, bool)> = g
+        .free_instances()
+        .into_iter()
+        .filter(|p| p.size == size)
+        .map(|p| (p, false))
+        .collect();
+    let current = g.partition().placements().to_vec();
+    for &st in kind.starts_of(size) {
+        let cand = Placement::new(size, st);
+        let mut extended = current.clone();
+        extended.push(cand);
+        if Partition::try_new_on(kind, extended).is_ok() {
+            out.push((cand, true));
+        }
+    }
+    out
+}
+
+/// Pick the best slot for a (kind, size) instance across the cluster:
+/// minimize the hosting GPU's post-placement fragmentation, then prefer
+/// no-repartition slots, partially-used GPUs over empty ones, lower
+/// load, lower GPU index. Fully deterministic. Returns
+/// `(gpu, placement, needs_repartition)`.
+pub fn pick_slot(
+    state: &ClusterState,
+    kind: DeviceKind,
+    size: InstanceSize,
+) -> Option<(usize, Placement, bool)> {
+    let mut best: Option<(usize, Placement, bool)> = None;
+    let mut best_key: Option<(f64, usize, usize, usize, usize)> = None;
+    for gi in 0..state.num_gpus() {
+        if state.is_offline(gi) || state.kind_of(gi) != kind {
+            continue;
+        }
+        let g = state.gpu(gi);
+        let load = g.partition().len();
+        for (pl, needs_rep) in candidate_slots(g, kind, size) {
+            let Some(frag) = super::frag::fragmentation_after(kind, g, pl) else {
+                continue;
+            };
+            let key =
+                (frag, usize::from(needs_rep), usize::from(g.is_empty()), load, gi);
+            let better = match &best_key {
+                None => true,
+                Some(bk) => {
+                    key.0.total_cmp(&bk.0).then_with(|| {
+                        (key.1, key.2, key.3, key.4).cmp(&(bk.1, bk.2, bk.3, bk.4))
+                    }) == std::cmp::Ordering::Less
+                }
+            };
+            if better {
+                best_key = Some(key);
+                best = Some((gi, pl, needs_rep));
+            }
+        }
+    }
+    best
+}
+
+/// Place one instance and launch its pod, appending (and applying) the
+/// actions. Returns `None` — with `state` untouched — when no GPU of
+/// `kind` has room (the caller escalates to bounded repair).
+pub fn place_instance(
+    state: &mut ClusterState,
+    kind: DeviceKind,
+    size: InstanceSize,
+    service: ServiceId,
+    batch: usize,
+    throughput: f64,
+    actions: &mut Vec<Action>,
+) -> anyhow::Result<Option<(usize, Placement)>> {
+    let Some((gpu, pl, needs_rep)) = pick_slot(state, kind, size) else {
+        return Ok(None);
+    };
+    if needs_rep {
+        let act = Action::Repartition { gpu, remove: vec![], add: vec![pl] };
+        Executor::apply(state, &act)?;
+        actions.push(act);
+    }
+    let act = Action::CreatePod {
+        gpu,
+        placement: pl,
+        pod: Pod { service, batch, throughput },
+    };
+    Executor::apply(state, &act)?;
+    actions.push(act);
+    Ok(Some((gpu, pl)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mig::InstanceSize::*;
+
+    fn pod(svc: ServiceId) -> Pod {
+        Pod { service: svc, batch: 8, throughput: 10.0 }
+    }
+
+    #[test]
+    fn picks_the_least_fragmenting_start() {
+        // GPU 0 hosts a 3/7 pod at slots 0..4. Among the legal 1/7
+        // starts {4, 5, 6}, slot 6 keeps the 2/7@4 reachable — the
+        // frag-aware placer must pick it (first-fit would take 4).
+        let mut c = ClusterState::new(1, 1);
+        c.repartition(0, &[], &[Placement::new(Three, 0)]).unwrap();
+        c.create_pod(0, Placement::new(Three, 0), pod(0)).unwrap();
+        let (gpu, pl, needs) = pick_slot(&c, DeviceKind::A100, One).unwrap();
+        assert_eq!((gpu, needs), (0, true));
+        assert_eq!(pl, Placement::new(One, 6), "frag-aware start");
+    }
+
+    #[test]
+    fn prefers_gpu_that_stays_defragmented() {
+        // GPU 0 hosts a 1/7 pod (placing a 2/7 there wastes its big
+        // profiles); GPU 1 hosts a 4/7 pod with a clean 3-slice tail.
+        // The 2/7 must go to... whichever GPU stays less fragmented —
+        // and the choice must be deterministic and legal.
+        let mut c = ClusterState::new(1, 2);
+        c.repartition(0, &[], &[Placement::new(One, 0)]).unwrap();
+        c.create_pod(0, Placement::new(One, 0), pod(0)).unwrap();
+        c.repartition(1, &[], &[Placement::new(Four, 0)]).unwrap();
+        c.create_pod(1, Placement::new(Four, 0), pod(1)).unwrap();
+        let (gpu, pl, _) = pick_slot(&c, DeviceKind::A100, Two).unwrap();
+        // GPU 1 after Two@4: residual 1, largest 1 → frag 0; GPU 0
+        // stays ≥ 0 but its best (Two@2) leaves frag > 0.
+        assert_eq!(gpu, 1);
+        assert_eq!(pl.size, Two);
+    }
+
+    #[test]
+    fn free_instance_is_used_when_it_ties() {
+        // A free 2/7 instance on an otherwise empty partition ties with
+        // re-adding the same placement; the no-repartition slot wins.
+        let mut c = ClusterState::new(1, 1);
+        c.repartition(0, &[], &[Placement::new(Two, 0)]).unwrap();
+        let (gpu, pl, needs) = pick_slot(&c, DeviceKind::A100, Two).unwrap();
+        assert_eq!((gpu, pl, needs), (0, Placement::new(Two, 0), false));
+    }
+
+    #[test]
+    fn place_instance_emits_actions_and_none_when_full() {
+        let mut c = ClusterState::new(1, 1);
+        let mut actions = Vec::new();
+        let (gpu, pl) =
+            place_instance(&mut c, DeviceKind::A100, Seven, 0, 8, 99.0, &mut actions)
+                .unwrap()
+                .expect("empty GPU has room");
+        assert_eq!((gpu, pl.size), (0, Seven));
+        assert_eq!(actions.len(), 2); // repartition + create
+        assert_eq!(c.service_throughputs(1), vec![99.0]);
+        // Cluster is now full for another 7/7.
+        let none =
+            place_instance(&mut c, DeviceKind::A100, Seven, 0, 8, 99.0, &mut actions)
+                .unwrap();
+        assert!(none.is_none());
+    }
+
+    #[test]
+    fn respects_kind_and_offline() {
+        use crate::mig::FleetSpec;
+        let fleet = FleetSpec::parse("a100=1,a30=1").unwrap();
+        let mut c = ClusterState::from_fleet(&fleet, 2);
+        // A 7/7 only fits the A100 segment.
+        let (gpu, _, _) = pick_slot(&c, DeviceKind::A100, Seven).unwrap();
+        assert_eq!(gpu, 0);
+        assert!(pick_slot(&c, DeviceKind::A30, Seven).is_none());
+        c.set_offline(0).unwrap();
+        assert!(pick_slot(&c, DeviceKind::A100, Seven).is_none());
+    }
+}

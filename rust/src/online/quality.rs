@@ -1,0 +1,171 @@
+//! Quality tracking: when is "good enough locally" no longer good
+//! enough globally?
+//!
+//! Local moves keep every SLO satisfied, but they never *compact*: a
+//! day of arrivals and departures can leave the fleet using far more
+//! GPUs than a fresh solve would. The tracker compares the
+//! incrementally-maintained objective (GPUs in use) against the
+//! rule-free lower bound ([`crate::optimizer::lower_bound_gpus`], §8.1)
+//! after every event and escalates to a full
+//! [`crate::optimizer::OptimizerPipeline`] replan only when the
+//! estimated optimality gap crosses `gap_threshold` — the dynamic-
+//! repartitioning trigger of Lipe et al., with the paper's own bound as
+//! the quality oracle.
+
+use crate::cluster::ClusterState;
+use crate::optimizer::{lower_bound_gpus, ProblemCtx};
+use crate::perf::ProfileBank;
+use crate::spec::{Slo, Workload};
+
+/// Event counters plus the latest estimated optimality gap.
+#[derive(Debug, Clone, Default)]
+pub struct QualityTracker {
+    /// Events absorbed with local moves only.
+    pub incremental: usize,
+    /// Events that forced a full pipeline replan.
+    pub escalations: usize,
+    /// Estimated optimality gap after the last assessment:
+    /// `(gpus_in_use − lower_bound) / lower_bound`.
+    pub last_gap: Option<f64>,
+    /// Lower bound memoized on the active (model, latency, rate) set —
+    /// the bound only changes when that set does, so steady event
+    /// streams skip the per-event `ProblemCtx` rebuild.
+    cached_bound: Option<(Vec<(String, f64, f64)>, usize)>,
+}
+
+impl QualityTracker {
+    /// Total events seen.
+    pub fn events(&self) -> usize {
+        self.incremental + self.escalations
+    }
+
+    /// Fraction of events absorbed without the full pipeline.
+    pub fn incremental_ratio(&self) -> f64 {
+        if self.events() == 0 {
+            1.0
+        } else {
+            self.incremental as f64 / self.events() as f64
+        }
+    }
+
+    /// Assess the gap for the currently active services
+    /// (`(model, latency_ms, rate)` with `rate > 0`). Returns the
+    /// escalation reason when the relative gap exceeds `gap_threshold`
+    /// *and* the absolute excess is at least two GPUs (one GPU of
+    /// slack absorbs the bound's rounding on tiny fleets).
+    pub fn assess(
+        &mut self,
+        bank: &ProfileBank,
+        state: &ClusterState,
+        active: &[(String, f64, f64)],
+        gap_threshold: f64,
+    ) -> Option<String> {
+        if active.is_empty() {
+            self.last_gap = Some(0.0);
+            return None;
+        }
+        let cached = match &self.cached_bound {
+            Some((set, lb)) if set == active => Some(*lb),
+            _ => None,
+        };
+        let lb = match cached {
+            Some(lb) => lb,
+            None => {
+                let services: Vec<(String, Slo)> = active
+                    .iter()
+                    .map(|(model, latency_ms, rate)| {
+                        (model.clone(), Slo::new(*rate, *latency_ms))
+                    })
+                    .collect();
+                let w = Workload::new("online-quality", services);
+                let kinds = state.fleet_kinds();
+                let ctx = match ProblemCtx::new_with_kinds(bank, &w, &kinds) {
+                    Ok(ctx) => ctx,
+                    // A service the fleet cannot host at all is beyond
+                    // local moves by definition.
+                    Err(e) => return Some(format!("infeasible service set: {e}")),
+                };
+                let lb = lower_bound_gpus(&ctx).max(1);
+                self.cached_bound = Some((active.to_vec(), lb));
+                lb
+            }
+        };
+        let used = state.used_gpus().len();
+        let gap = (used as f64 - lb as f64) / lb as f64;
+        self.last_gap = Some(gap);
+        // One GPU of slack absorbs the rule-free bound's rounding on
+        // tiny fleets (used=2 vs lb=1 is not a 100% quality problem).
+        let excess = used.saturating_sub(lb);
+        (excess >= 2 && gap > gap_threshold).then(|| {
+            format!(
+                "optimality gap {gap:.2} > {gap_threshold:.2} ({used} GPUs vs lower bound {lb})"
+            )
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Pod;
+    use crate::mig::{InstanceSize::*, Placement};
+
+    #[test]
+    fn ratio_counts_events() {
+        let mut q = QualityTracker::default();
+        assert_eq!(q.incremental_ratio(), 1.0);
+        q.incremental = 9;
+        q.escalations = 1;
+        assert!((q.incremental_ratio() - 0.9).abs() < 1e-12);
+        assert_eq!(q.events(), 10);
+    }
+
+    #[test]
+    fn tight_cluster_does_not_escalate() {
+        let bank = ProfileBank::synthetic();
+        let mut c = ClusterState::new(1, 8);
+        // One busy GPU serving a modest rate: gap ≈ 0.
+        c.repartition(0, &[], &[Placement::new(Seven, 0)]).unwrap();
+        c.create_pod(
+            0,
+            Placement::new(Seven, 0),
+            Pod { service: 0, batch: 8, throughput: 50.0 },
+        )
+        .unwrap();
+        let mut q = QualityTracker::default();
+        let active = vec![("resnet50".to_string(), 300.0, 50.0)];
+        assert!(q.assess(&bank, &c, &active, 0.5).is_none());
+        assert!(q.last_gap.is_some());
+    }
+
+    #[test]
+    fn sprawl_escalates() {
+        let bank = ProfileBank::synthetic();
+        let mut c = ClusterState::new(1, 8);
+        // Eight GPUs each pinned by one tiny pod for a rate the lower
+        // bound covers with one GPU: a huge gap.
+        for gi in 0..8 {
+            c.repartition(gi, &[], &[Placement::new(One, 0)]).unwrap();
+            c.create_pod(
+                gi,
+                Placement::new(One, 0),
+                Pod { service: 0, batch: 8, throughput: 5.0 },
+            )
+            .unwrap();
+        }
+        let mut q = QualityTracker::default();
+        let active = vec![("resnet50".to_string(), 300.0, 40.0)];
+        let reason = q.assess(&bank, &c, &active, 0.5).expect("gap too large");
+        assert!(reason.contains("optimality gap"), "{reason}");
+        assert!(q.last_gap.unwrap() > 0.5);
+    }
+
+    #[test]
+    fn no_active_services_is_gap_zero() {
+        let bank = ProfileBank::synthetic();
+        let c = ClusterState::new(1, 2);
+        let mut q = QualityTracker::default();
+        assert!(q.assess(&bank, &c, &[], 0.1).is_none());
+        assert_eq!(q.last_gap, Some(0.0));
+    }
+}

@@ -1,0 +1,231 @@
+//! Bounded local repair: evict-and-repack.
+//!
+//! When direct placement ([`super::place::pick_slot`]) finds no room
+//! for a (kind, size) instance, the repair path makes room on **one**
+//! GPU by (a) sweeping away pod-free instances whose geometry blocks
+//! the profile (zero-cost reshaping) and (b) evicting at most
+//! `depth` running pods — smallest throughput first — and migrating
+//! each to another GPU through the shared
+//! [`crate::controller::slots::allocate_slot`] helper (create-before-
+//! delete inside [`Action::MigratePod`], so capacity never dips).
+//!
+//! The move budget is the point: repair is O(depth) local actions, a
+//! full pipeline replan is not. If no GPU can be repaired within the
+//! budget, the caller escalates.
+
+use crate::cluster::{Action, ClusterState, Executor};
+use crate::controller::slots::allocate_slot;
+use crate::mig::{DeviceKind, InstanceSize, Partition, Placement};
+
+/// One GPU's repair plan: which pods leave, and where the new instance
+/// lands afterwards.
+struct RepairPlan {
+    gpu: usize,
+    /// (placement, throughput) of the pods to evict, eviction order.
+    evict: Vec<(Placement, f64)>,
+    /// Total throughput that has to migrate (the plan-ranking cost).
+    moved_throughput: f64,
+}
+
+/// Plan a repair on one GPU: start from the pod-hosting placements only
+/// (free instances are reshapeable for free) and greedily evict the
+/// smallest-throughput pods until `size` becomes allocatable, up to
+/// `depth` evictions. Returns `None` when the budget is not enough.
+fn plan_gpu(
+    state: &ClusterState,
+    gpu: usize,
+    kind: DeviceKind,
+    size: InstanceSize,
+    depth: usize,
+) -> Option<RepairPlan> {
+    let g = state.gpu(gpu);
+    // Busy-only partition: legal because it is a subset of a legal one.
+    let mut part =
+        Partition::try_new_on(kind, g.pods().keys().copied().collect()).ok()?;
+    let mut pods: Vec<(Placement, f64)> =
+        g.pods().iter().map(|(pl, pod)| (*pl, pod.throughput)).collect();
+    // Deterministic eviction order: cheapest capacity first, then
+    // placement order.
+    pods.sort_by(|a, b| a.1.total_cmp(&b.1).then_with(|| a.0.cmp(&b.0)));
+    let mut evict = Vec::new();
+    let mut moved = 0.0;
+    loop {
+        if part.can_allocate_on(kind, size).is_some() {
+            return Some(RepairPlan { gpu, evict, moved_throughput: moved });
+        }
+        if evict.len() >= depth {
+            return None;
+        }
+        let (pl, thr) = pods.get(evict.len()).copied()?;
+        part = part.remove(pl).expect("evicted pod is in the partition");
+        evict.push((pl, thr));
+        moved += thr;
+    }
+}
+
+/// Try to make room for a (kind, size) instance by repairing one GPU.
+/// On success the evictions are migrated out, the GPU repartitioned,
+/// and the freshly added placement returned; the caller creates the
+/// pod. `Ok(None)` means no GPU is repairable within `depth` (or the
+/// rest of the fleet cannot host the evicted pods) — escalate.
+///
+/// Failure contract: when `Ok(None)` is returned after migrations had
+/// already started, those capacity-preserving moves stay applied (and
+/// appended to `actions`) — no pod is ever lost or degraded, but the
+/// layout may differ from the input. Callers treat the state as valid
+/// (simkit discards the scratch clone on escalation anyway).
+pub fn evict_and_repack(
+    state: &mut ClusterState,
+    kind: DeviceKind,
+    size: InstanceSize,
+    depth: usize,
+    actions: &mut Vec<Action>,
+) -> anyhow::Result<Option<(usize, Placement)>> {
+    // Rank candidate GPUs: fewest evictions, least migrated
+    // throughput, lowest index.
+    let mut best: Option<RepairPlan> = None;
+    for gi in 0..state.num_gpus() {
+        if state.is_offline(gi) || state.kind_of(gi) != kind {
+            continue;
+        }
+        if let Some(plan) = plan_gpu(state, gi, kind, size, depth) {
+            let better = match &best {
+                None => true,
+                Some(b) => (plan.evict.len(), plan.moved_throughput, plan.gpu)
+                    < (b.evict.len(), b.moved_throughput, b.gpu),
+            };
+            if better {
+                best = Some(plan);
+            }
+        }
+    }
+    let Some(plan) = best else { return Ok(None) };
+    let gi = plan.gpu;
+
+    // 1. Migrate every evicted pod to a same-kind slot elsewhere
+    //    (create-before-delete inside MigratePod: no capacity dip).
+    for &(pl, _) in &plan.evict {
+        let pod = *state.gpu(gi).pods().get(&pl).expect("planned pod is live");
+        let Ok((dst_gpu, dst)) =
+            allocate_slot(state, kind, pl.size, &[gi], actions)
+        else {
+            // The rest of the fleet is full too. Earlier evictees (if
+            // any) already migrated — capacity intact, layout changed
+            // (see the failure contract above) — and the caller
+            // escalates from this still-valid state.
+            return Ok(None);
+        };
+        let act = Action::MigratePod { src_gpu: gi, src: pl, dst_gpu, dst, pod };
+        Executor::apply(state, &act)?;
+        actions.push(act);
+    }
+
+    // 2. One repartition: drop every now pod-free placement (evicted
+    //    slots + stale free instances) and add the target profile at
+    //    its first legal start on the busy-only layout.
+    let free_now = state.gpu(gi).free_instances();
+    let busy = Partition::try_new_on(
+        kind,
+        state.gpu(gi).pods().keys().copied().collect(),
+    )
+    .expect("live pods form a legal sub-partition");
+    let start = busy
+        .can_allocate_on(kind, size)
+        .expect("repair plan guarantees allocatability");
+    let new_pl = Placement::new(size, start);
+    let act = Action::Repartition { gpu: gi, remove: free_now, add: vec![new_pl] };
+    Executor::apply(state, &act)?;
+    actions.push(act);
+    Ok(Some((gi, new_pl)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Pod;
+    use crate::mig::InstanceSize::*;
+
+    fn pod(svc: usize, thr: f64) -> Pod {
+        Pod { service: svc, batch: 8, throughput: thr }
+    }
+
+    #[test]
+    fn reshapes_free_instances_at_zero_evictions() {
+        // A stale free 1/7 at slot 0 blocks the 4/7 profile (only start
+        // 0). Repair removes it without evicting anything.
+        let mut c = ClusterState::new(1, 1);
+        c.repartition(0, &[], &[Placement::new(One, 0)]).unwrap();
+        let mut actions = Vec::new();
+        let (gpu, pl) = evict_and_repack(&mut c, DeviceKind::A100, Four, 2, &mut actions)
+            .unwrap()
+            .expect("reshape suffices");
+        assert_eq!((gpu, pl), (0, Placement::new(Four, 0)));
+        assert!(actions.iter().all(|a| matches!(a, Action::Repartition { .. })));
+    }
+
+    #[test]
+    fn evicts_cheapest_plan_and_migrates_the_pod() {
+        // GPU 0: 1/7 pod (thr 5) blocks the 4/7@0. GPU 1: a 3/7 pod
+        // (thr 30) — also repairable in one eviction, but moving it is
+        // more expensive. Repair must pick GPU 0, migrate its 1/7 to
+        // GPU 1's tail, and free the 4/7@0.
+        let mut c = ClusterState::new(1, 2);
+        c.repartition(0, &[], &[Placement::new(One, 0)]).unwrap();
+        c.create_pod(0, Placement::new(One, 0), pod(0, 5.0)).unwrap();
+        c.repartition(1, &[], &[Placement::new(Three, 0)]).unwrap();
+        c.create_pod(1, Placement::new(Three, 0), pod(1, 30.0)).unwrap();
+        let mut actions = Vec::new();
+        let (gpu, pl) = evict_and_repack(&mut c, DeviceKind::A100, Four, 1, &mut actions)
+            .unwrap()
+            .expect("one eviction suffices");
+        assert_eq!((gpu, pl), (0, Placement::new(Four, 0)));
+        // Both pods survived; service 0's instance migrated to GPU 1.
+        assert_eq!(c.service_throughputs(2), vec![5.0, 30.0]);
+        assert_eq!(c.pods_of_service(0)[0].0, 1, "pod migrated to GPU 1");
+        assert!(actions.iter().any(|a| matches!(a, Action::MigratePod { .. })));
+    }
+
+    #[test]
+    fn respects_the_depth_budget() {
+        // GPU 0: two 1/7 pods block the 4/7@0 (two evictions needed).
+        // GPU 1: slots 0..4 pinned by pods worth three evictions (two
+        // 1/7s + the 4+3 exclusion on its 3/7). Depth 1 can repair
+        // nothing; depth 2 repairs GPU 0.
+        let mut c = ClusterState::new(1, 2);
+        for (st, thr) in [(0u8, 5.0), (1, 6.0)] {
+            let pl = Placement::new(One, st);
+            c.repartition(0, &[], &[pl]).unwrap();
+            c.create_pod(0, pl, pod(0, thr)).unwrap();
+        }
+        for (size, st) in [(One, 0u8), (One, 1), (Three, 4)] {
+            let pl = Placement::new(size, st);
+            c.repartition(1, &[], &[pl]).unwrap();
+            c.create_pod(1, pl, pod(1, 100.0)).unwrap();
+        }
+        let mut actions = Vec::new();
+        assert!(evict_and_repack(&mut c, DeviceKind::A100, Four, 1, &mut actions)
+            .unwrap()
+            .is_none());
+        // Depth 2 succeeds on GPU 0 and moves both of its pods into
+        // GPU 1's free 1/7 slots.
+        let (gpu, pl) = evict_and_repack(&mut c, DeviceKind::A100, Four, 2, &mut actions)
+            .unwrap()
+            .expect("two evictions suffice");
+        assert_eq!((gpu, pl), (0, Placement::new(Four, 0)));
+        assert!((c.service_throughputs(2)[0] - 11.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fails_when_evictees_have_nowhere_to_go() {
+        // Single GPU: the evicted pod cannot migrate anywhere.
+        let mut c = ClusterState::new(1, 1);
+        c.repartition(0, &[], &[Placement::new(One, 0)]).unwrap();
+        c.create_pod(0, Placement::new(One, 0), pod(0, 5.0)).unwrap();
+        let mut actions = Vec::new();
+        assert!(evict_and_repack(&mut c, DeviceKind::A100, Four, 3, &mut actions)
+            .unwrap()
+            .is_none());
+        // Nothing was lost.
+        assert_eq!(c.service_throughputs(1), vec![5.0]);
+    }
+}

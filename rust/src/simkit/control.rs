@@ -21,6 +21,14 @@ pub enum ReplanPolicy {
     /// Like `Threshold`, but the condition must persist for `hold_s`
     /// seconds before acting — flash noise does not thrash the cluster.
     Hysteresis { scale_down_ratio: f64, hold_s: f64 },
+    /// The incremental path: every tick's demand drift becomes a stream
+    /// of [`crate::online::OnlineEvent`]s absorbed with local moves by
+    /// the [`crate::online::OnlineScheduler`]; the full pipeline runs
+    /// only when the scheduler escalates (no room within
+    /// `repair_depth` moves, or the optimality gap vs. the §8.1 lower
+    /// bound exceeds `gap_threshold`). Handled directly by the
+    /// simulation driver, not by [`ControlLoop::decide`].
+    Incremental { gap_threshold: f64, repair_depth: usize },
 }
 
 impl ReplanPolicy {
@@ -31,6 +39,7 @@ impl ReplanPolicy {
             ReplanPolicy::Periodic { .. } => "periodic",
             ReplanPolicy::Threshold { .. } => "threshold",
             ReplanPolicy::Hysteresis { .. } => "hysteresis",
+            ReplanPolicy::Incremental { .. } => "incremental",
         }
     }
 }
@@ -68,6 +77,10 @@ impl ControlLoop {
         }
         match self.policy {
             ReplanPolicy::Never => None,
+            // The simulation driver routes incremental ticks through
+            // the OnlineScheduler before ever calling decide(); if a
+            // caller does ask, the answer is "no full replan".
+            ReplanPolicy::Incremental { .. } => None,
             ReplanPolicy::Periodic { interval_s } => {
                 (t_s - self.last_replan_s.unwrap() >= interval_s - 1e-9)
                     .then_some("periodic")

@@ -14,7 +14,10 @@
 //!   service onboarding/offboarding;
 //! * [`scenario`] — the named scenario library ([`SCENARIOS`]);
 //! * [`control`] — the online control loop: periodic / threshold /
-//!   hysteresis replan policies over demand vs. live capacity;
+//!   hysteresis full-replan policies over demand vs. live capacity,
+//!   plus the `Incremental` policy that hands each tick's drift to the
+//!   fragmentation-aware [`crate::online::OnlineScheduler`] and runs
+//!   the full pipeline only on escalation (DESIGN.md §5);
 //! * [`sim`] — the driver: replans through the shared
 //!   [`crate::optimizer::OptimizerPipeline`], plans transitions with
 //!   the §6 controller, and replays the executor's asynchronous action

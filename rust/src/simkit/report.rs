@@ -50,6 +50,17 @@ pub struct SimReport {
     pub fleet: BTreeMap<String, usize>,
     /// GPUs in use per device kind at the horizon.
     pub used_gpus_by_kind: BTreeMap<String, usize>,
+    /// Per-kind fragmentation at the horizon
+    /// ([`crate::online::frag::cluster_fragmentation_named`]) — the
+    /// fraction of residual compute slices not reachable by each GPU's
+    /// largest still-allocatable profile. Reported for every policy so
+    /// full-replan and incremental runs compare on the same metric.
+    pub fragmentation: BTreeMap<String, f64>,
+    /// Workload events absorbed by the incremental scheduler with local
+    /// moves (0 under full-replan policies).
+    pub incremental_events: usize,
+    /// Incremental events that escalated to a full pipeline replan.
+    pub escalations: usize,
     pub timelines: Vec<ServiceTimeline>,
     /// Fraction of active sampled ticks where capacity met demand, per
     /// service (1.0 for services never active).
@@ -165,6 +176,17 @@ impl SimReport {
                         .collect(),
                 ),
             ),
+            (
+                "fragmentation",
+                Value::Obj(
+                    self.fragmentation
+                        .iter()
+                        .map(|(k, &v)| (k.clone(), Value::Num(v)))
+                        .collect(),
+                ),
+            ),
+            ("incremental_events", Value::from(self.incremental_events)),
+            ("escalations", Value::from(self.escalations)),
             ("overall_attainment", Value::Num(self.overall_attainment())),
             (
                 "slo_attainment",
@@ -304,6 +326,9 @@ mod tests {
             seed: 1,
             fleet: BTreeMap::from([("a100".to_string(), 24usize)]),
             used_gpus_by_kind: BTreeMap::from([("a100".to_string(), 2usize)]),
+            fragmentation: BTreeMap::from([("a100".to_string(), 0.25f64)]),
+            incremental_events: 0,
+            escalations: 0,
             timelines: vec![ServiceTimeline {
                 service: 0,
                 model: "m".into(),
@@ -353,6 +378,12 @@ mod tests {
             v.get_path("used_gpus_by_kind.a100").and_then(|x| x.as_usize()),
             Some(2)
         );
+        assert_eq!(
+            v.get_path("fragmentation.a100").and_then(|x| x.as_f64()),
+            Some(0.25)
+        );
+        assert_eq!(v.get_path("incremental_events").and_then(|x| x.as_usize()), Some(0));
+        assert_eq!(v.get_path("escalations").and_then(|x| x.as_usize()), Some(0));
     }
 
     #[test]

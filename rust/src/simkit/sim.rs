@@ -22,6 +22,7 @@ use std::collections::BTreeMap;
 use crate::cluster::{Action, ActionKind, ClusterState, Executor};
 use crate::controller::Controller;
 use crate::mig::{DeviceKind, FleetSpec};
+use crate::online::{self, OnlineConfig, OnlineScheduler, ServiceView};
 use crate::optimizer::{Deployment, OptimizerPipeline, PipelineBudget, ProblemCtx};
 use crate::perf::ProfileBank;
 use crate::spec::ServiceId;
@@ -163,6 +164,18 @@ impl<'a> Simulation<'a> {
         let controller = Controller::new(n);
         let mut executor = Executor::new(self.cfg.seed);
         let mut control = ControlLoop::new(self.cfg.policy.clone(), n);
+        // The incremental policy routes ticks through the online
+        // scheduler instead of ControlLoop::decide.
+        let mut online_sched: Option<OnlineScheduler<'_>> = match self.cfg.policy {
+            ReplanPolicy::Incremental { gap_threshold, repair_depth } => {
+                Some(OnlineScheduler::new(self.bank, OnlineConfig {
+                    gap_threshold,
+                    repair_depth,
+                    ..OnlineConfig::default()
+                }))
+            }
+            _ => None,
+        };
         let mut queue = EventQueue::new();
         queue.push(0.0, Event::ControlTick);
         for (i, e) in self.trace.gpu_events.iter().enumerate() {
@@ -243,6 +256,115 @@ impl<'a> Simulation<'a> {
                     if inflight.is_some() {
                         continue; // one transition at a time
                     }
+                    // --- Incremental policy: the tick's demand drift
+                    // becomes workload events absorbed with local moves
+                    // on a scratch clone; only an escalation runs the
+                    // full pipeline.
+                    if let Some(sched) = online_sched.as_mut() {
+                        let views: Vec<ServiceView<'_>> = self
+                            .trace
+                            .services
+                            .iter()
+                            .enumerate()
+                            .map(|(i, s)| ServiceView {
+                                service: i,
+                                model: &s.model,
+                                latency_slo_ms: s.latency_slo_ms,
+                                demand: demand[i],
+                            })
+                            .collect();
+                        let events =
+                            sched.derive_tick_events(&views, &capacity, self.cfg.margin);
+                        if events.is_empty() {
+                            continue;
+                        }
+                        let mut scratch = cluster.clone();
+                        let mut actions: Vec<Action> = Vec::new();
+                        let mut escalation: Option<String> = None;
+                        let mut handled = 0usize;
+                        for ev in &events {
+                            let out = sched.handle(&mut scratch, ev)?;
+                            if let Some(why) = out.escalate {
+                                escalation = Some(why);
+                                break;
+                            }
+                            actions.extend(out.actions);
+                            handled += 1;
+                        }
+                        if let Some(why) = escalation {
+                            // Scratch (and its partial actions) are
+                            // discarded; replan from the live state.
+                            // The pre-escalation events' local moves
+                            // die with the scratch, so they were NOT
+                            // absorbed — retract their count.
+                            sched.quality.incremental =
+                                sched.quality.incremental.saturating_sub(handled);
+                            match self
+                                .plan_transition(&cluster, &controller, &demand, t)
+                            {
+                                Ok(actions) => {
+                                    replans += 1;
+                                    sched.sync(&views, self.cfg.margin);
+                                    if actions.is_empty() {
+                                        event_log.push(format!(
+                                            "t={t:.1} escalation replan #{replans} ({why}): target already realized"
+                                        ));
+                                        continue;
+                                    }
+                                    let fl = schedule_transition(
+                                        &mut executor,
+                                        &cluster,
+                                        actions,
+                                        t,
+                                        self.cfg.replan_latency_s,
+                                        "escalation",
+                                        &mut queue,
+                                        &mut busy_s,
+                                        &mut action_counts,
+                                        &mut next_transition_id,
+                                        n,
+                                    );
+                                    event_log.push(format!(
+                                        "t={t:.1} escalation replan #{replans} ({why}): {} actions over {:.1}s",
+                                        fl.actions.len(),
+                                        fl.duration_s
+                                    ));
+                                    inflight = Some(fl);
+                                }
+                                Err(e) => {
+                                    failed_replans += 1;
+                                    event_log.push(format!(
+                                        "t={t:.1} escalation replan failed ({why}): {e:#}"
+                                    ));
+                                }
+                            }
+                        } else if !actions.is_empty() {
+                            // Local moves only: the decision itself is
+                            // modeled as instantaneous (that is the
+                            // point of the incremental path); actions
+                            // still pay executor latency.
+                            let fl = schedule_transition(
+                                &mut executor,
+                                &cluster,
+                                actions,
+                                t,
+                                0.0,
+                                "incremental",
+                                &mut queue,
+                                &mut busy_s,
+                                &mut action_counts,
+                                &mut next_transition_id,
+                                n,
+                            );
+                            event_log.push(format!(
+                                "t={t:.1} incremental: {handled} events, {} actions over {:.1}s",
+                                fl.actions.len(),
+                                fl.duration_s
+                            ));
+                            inflight = Some(fl);
+                        }
+                        continue;
+                    }
                     let Some(reason) = control.decide(t, &demand, &capacity) else {
                         continue;
                     };
@@ -272,44 +394,24 @@ impl<'a> Simulation<'a> {
                                 ));
                                 continue;
                             }
-                            let schedule = executor.schedule_async(&cluster, &actions);
-                            for kind in ActionKind::ALL {
-                                if let Some(&v) = schedule.busy_s.get(&kind) {
-                                    *busy_s.entry(kind.label().to_string()).or_insert(0.0) += v;
-                                }
-                                if let Some(&c) = schedule.counts.get(&kind) {
-                                    *action_counts
-                                        .entry(kind.label().to_string())
-                                        .or_insert(0) += c;
-                                }
-                            }
-                            let id = next_transition_id;
-                            next_transition_id += 1;
-                            let t0 = t + self.cfg.replan_latency_s;
-                            for &(end, idx) in &schedule.entries {
-                                queue.push(t0 + end, Event::ApplyAction {
-                                    transition: id,
-                                    idx,
-                                });
-                            }
-                            queue.push(t0 + schedule.wallclock_s, Event::TransitionDone {
-                                transition: id,
-                            });
-                            let duration_s =
-                                self.cfg.replan_latency_s + schedule.wallclock_s;
-                            event_log.push(format!(
-                                "t={t:.1} replan #{replans} ({reason}): {} actions over {duration_s:.1}s",
-                                actions.len()
-                            ));
-                            let mut fl = InFlight {
-                                id,
+                            let fl = schedule_transition(
+                                &mut executor,
+                                &cluster,
                                 actions,
-                                start_s: t,
-                                duration_s,
+                                t,
+                                self.cfg.replan_latency_s,
                                 reason,
-                                min_throughput: BTreeMap::new(),
-                            };
-                            fl.note_capacity(&cluster, n);
+                                &mut queue,
+                                &mut busy_s,
+                                &mut action_counts,
+                                &mut next_transition_id,
+                                n,
+                            );
+                            event_log.push(format!(
+                                "t={t:.1} replan #{replans} ({reason}): {} actions over {:.1}s",
+                                fl.actions.len(),
+                                fl.duration_s
+                            ));
                             inflight = Some(fl);
                         }
                         Err(e) => {
@@ -334,6 +436,17 @@ impl<'a> Simulation<'a> {
                         };
                         match applied {
                             Ok(()) => {
+                                // Under the incremental policy every
+                                // intermediate state must pass the
+                                // online legality/capacity suite.
+                                if online_sched.is_some() {
+                                    if let Err(msg) = online::check_invariants(&cluster)
+                                    {
+                                        anyhow::bail!(
+                                            "t={t:.1}: invariant violated mid-transition: {msg}"
+                                        );
+                                    }
+                                }
                                 inflight.as_mut().unwrap().note_capacity(&cluster, n)
                             }
                             Err(e) => {
@@ -413,6 +526,11 @@ impl<'a> Simulation<'a> {
                 .into_iter()
                 .map(|(k, c)| (k.name().to_string(), c))
                 .collect(),
+            fragmentation: online::frag::cluster_fragmentation_named(&cluster),
+            incremental_events: online_sched
+                .as_ref()
+                .map_or(0, |s| s.quality.incremental),
+            escalations: online_sched.as_ref().map_or(0, |s| s.quality.escalations),
             timelines,
             slo_attainment,
             unmet_demand_reqs: unmet,
@@ -465,7 +583,9 @@ impl<'a> Simulation<'a> {
     }
 
     /// Run the control loop and the static-peak baseline on the same
-    /// trace (same seed/tick) and return both reports.
+    /// trace (same seed/tick) and return both reports. Incremental
+    /// policies compare against the same static-peak `Never` baseline
+    /// as full-replan policies.
     pub fn run_with_baseline(&self) -> anyhow::Result<SimComparison> {
         let control = self.run()?;
         let baseline_cfg = SimConfig {
@@ -477,6 +597,53 @@ impl<'a> Simulation<'a> {
             Simulation::new(self.bank, self.trace, baseline_cfg).run()?;
         Ok(SimComparison { control, baseline })
     }
+}
+
+/// Hand a planned action sequence to the asynchronous executor and
+/// schedule its per-action completion instants on the virtual clock —
+/// the launch mechanics shared by full replans, escalation replans, and
+/// incremental transitions. `latency_s` models the planning latency
+/// charged before the first action starts.
+#[allow(clippy::too_many_arguments)]
+fn schedule_transition(
+    executor: &mut Executor,
+    cluster: &ClusterState,
+    actions: Vec<Action>,
+    t: f64,
+    latency_s: f64,
+    reason: &'static str,
+    queue: &mut EventQueue,
+    busy_s: &mut BTreeMap<String, f64>,
+    action_counts: &mut BTreeMap<String, usize>,
+    next_transition_id: &mut usize,
+    n: usize,
+) -> InFlight {
+    let schedule = executor.schedule_async(cluster, &actions);
+    for kind in ActionKind::ALL {
+        if let Some(&v) = schedule.busy_s.get(&kind) {
+            *busy_s.entry(kind.label().to_string()).or_insert(0.0) += v;
+        }
+        if let Some(&c) = schedule.counts.get(&kind) {
+            *action_counts.entry(kind.label().to_string()).or_insert(0) += c;
+        }
+    }
+    let id = *next_transition_id;
+    *next_transition_id += 1;
+    let t0 = t + latency_s;
+    for &(end, idx) in &schedule.entries {
+        queue.push(t0 + end, Event::ApplyAction { transition: id, idx });
+    }
+    queue.push(t0 + schedule.wallclock_s, Event::TransitionDone { transition: id });
+    let mut fl = InFlight {
+        id,
+        actions,
+        start_s: t,
+        duration_s: latency_s + schedule.wallclock_s,
+        reason,
+        min_throughput: BTreeMap::new(),
+    };
+    fl.note_capacity(cluster, n);
+    fl
 }
 
 #[cfg(test)]
@@ -583,6 +750,35 @@ mod tests {
             ..Default::default()
         };
         assert!(Simulation::new(&bank, &trace, cfg).run().is_err());
+    }
+
+    #[test]
+    fn incremental_policy_absorbs_flat_demand() {
+        let bank = ProfileBank::synthetic();
+        let trace = flat_trace(120.0, 3600.0);
+        let cfg = SimConfig {
+            tick_s: 300.0,
+            policy: ReplanPolicy::Incremental { gap_threshold: 0.5, repair_depth: 4 },
+            ..Default::default()
+        };
+        let report = Simulation::new(&bank, &trace, cfg.clone()).run().unwrap();
+        assert_eq!(report.policy, "incremental");
+        assert!(
+            report.incremental_events >= 2,
+            "bring-up onboards both services incrementally: {:?}",
+            report.event_log
+        );
+        // Flat demand: after bring-up no further work, and the full
+        // pipeline is (at most rarely) involved.
+        assert!(report.replans <= 1, "replans {}", report.replans);
+        for (i, a) in report.slo_attainment.iter().enumerate() {
+            assert!(*a > 0.8, "svc {i} attainment {a}");
+        }
+        assert!(report.fragmentation.contains_key("a100"));
+        // Deterministic: same seed, same report.
+        let again = Simulation::new(&bank, &trace, cfg).run().unwrap();
+        assert_eq!(report.event_log, again.event_log);
+        assert_eq!(report.to_json().to_pretty(), again.to_json().to_pretty());
     }
 
     #[test]

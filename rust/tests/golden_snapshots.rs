@@ -13,7 +13,7 @@
 
 use mig_serving::bench::figs::{fig09_table, fig13_tables};
 use mig_serving::perf::ProfileBank;
-use mig_serving::simkit::{scenario, SimConfig, Simulation};
+use mig_serving::simkit::{scenario, ReplanPolicy, SimConfig, Simulation};
 use mig_serving::util::goldens::check_golden;
 
 /// `simulate --quick` on the diurnal scenario, fixed seed: event log,
@@ -38,6 +38,38 @@ fn golden_simulate_quick_diurnal() {
     out.push_str("\n== comparison ==\n");
     out.push_str(&cmp.table());
     check_golden("simulate_quick_diurnal", &out).unwrap();
+}
+
+/// `simulate --policy incremental --quick` on the diurnal scenario,
+/// fixed seed: the incremental event log (every absorbed tick and every
+/// escalation), the per-service summary, and the event/fragmentation
+/// accounting. Pins the online scheduler's end-to-end determinism.
+#[test]
+fn golden_simulate_quick_incremental() {
+    let bank = ProfileBank::synthetic();
+    let trace = scenario(&bank, "diurnal");
+    let cfg = SimConfig {
+        policy: ReplanPolicy::Incremental { gap_threshold: 0.5, repair_depth: 4 },
+        ..SimConfig::quick()
+    };
+    let report = Simulation::new(&bank, &trace, cfg).run().unwrap();
+    let mut out = String::new();
+    out.push_str("== incremental event log ==\n");
+    for line in &report.event_log {
+        out.push_str(line);
+        out.push('\n');
+    }
+    out.push_str(&format!(
+        "\nevents: {} absorbed, {} escalations ({} full replans)\n",
+        report.incremental_events, report.escalations, report.replans
+    ));
+    out.push_str("\n== summary ==\n");
+    out.push_str(&report.summary_table());
+    out.push_str("\n== fragmentation at horizon ==\n");
+    for (kind, v) in &report.fragmentation {
+        out.push_str(&format!("{kind}: {v:.4}\n"));
+    }
+    check_golden("simulate_quick_incremental", &out).unwrap();
 }
 
 /// The fig09 GPUs-used table at a pinned 1-round GA budget.

@@ -1,0 +1,201 @@
+//! Property tests for the online incremental scheduler (satellite):
+//! any event sequence — onboard, retire, demand delta, GPU fail/repair,
+//! valid or bogus — must leave every intermediate `ClusterState`
+//! passing the online invariant suite: partition legality per
+//! `DeviceKind` (geometry, start tables, the 4+3 exclusion rule),
+//! slice/memory capacity, pods only on partition instances, offline
+//! GPUs empty. Built on the in-tree `util::prop` harness.
+
+use mig_serving::cluster::ClusterState;
+use mig_serving::mig::FleetSpec;
+use mig_serving::online::{
+    check_invariants, OnlineConfig, OnlineEvent, OnlineScheduler,
+};
+use mig_serving::perf::ProfileBank;
+use mig_serving::util::prop;
+
+const MODELS: [&str; 3] = ["resnet50", "bert-base-uncased", "densenet121"];
+const LATENCY_MS: f64 = 300.0;
+
+fn mixed_cluster() -> ClusterState {
+    let fleet = FleetSpec::parse("a100=3,a30=2").unwrap();
+    ClusterState::from_fleet(&fleet, 3)
+}
+
+fn onboard(sid: usize, rate: f64) -> OnlineEvent {
+    OnlineEvent::Onboard {
+        service: sid,
+        model: MODELS[sid].to_string(),
+        latency_slo_ms: LATENCY_MS,
+        rate,
+    }
+}
+
+/// Random event generator: mostly sensible events, with some bogus
+/// ones (delta/retire for unknown services, repair of healthy GPUs)
+/// mixed in — the scheduler must absorb or escalate, never corrupt.
+fn gen_events(g: &mut prop::Gen) -> Vec<OnlineEvent> {
+    let n_events = g.size(1, 20);
+    let num_gpus = mixed_cluster().num_gpus();
+    (0..n_events)
+        .map(|_| {
+            let sid = g.rng.below(MODELS.len());
+            let rate = 20.0 + g.rng.below(180) as f64;
+            match g.rng.below(6) {
+                0 | 1 => onboard(sid, rate),
+                2 => OnlineEvent::DemandDelta { service: sid, rate },
+                3 => OnlineEvent::Retire { service: sid },
+                4 => OnlineEvent::GpuFail { gpu: g.rng.below(num_gpus) },
+                _ => OnlineEvent::GpuRepair { gpu: g.rng.below(num_gpus) },
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn any_event_sequence_preserves_legality_and_capacity() {
+    let bank = ProfileBank::synthetic();
+    prop::check(
+        "online-invariants",
+        60,
+        0x0411_1e5,
+        gen_events,
+        |events| {
+            let mut sched = OnlineScheduler::new(&bank, OnlineConfig::default());
+            let mut state = mixed_cluster();
+            for (i, ev) in events.iter().enumerate() {
+                let out = sched
+                    .handle(&mut state, ev)
+                    .map_err(|e| format!("event {i} ({ev:?}) errored: {e:#}"))?;
+                // Invariants hold after EVERY event, absorbed or not.
+                check_invariants(&state)
+                    .map_err(|e| format!("after event {i} ({ev:?}): {e}"))?;
+                // An absorbed demand-setting event really delivers.
+                if out.escalate.is_none() {
+                    let target = match ev {
+                        OnlineEvent::Onboard { service, rate, .. }
+                        | OnlineEvent::DemandDelta { service, rate } => {
+                            Some((*service, *rate))
+                        }
+                        _ => None,
+                    };
+                    if let Some((sid, rate)) = target {
+                        let cap = state.service_throughputs(MODELS.len())[sid];
+                        if cap + 1e-6 < rate {
+                            return Err(format!(
+                                "event {i}: svc {sid} capacity {cap} < target {rate}"
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn retire_then_onboard_round_trips() {
+    let bank = ProfileBank::synthetic();
+    prop::check(
+        "online-retire-onboard-roundtrip",
+        40,
+        0x0411_2e5,
+        |g| {
+            let sid = g.rng.below(MODELS.len());
+            let rate = 30.0 + g.rng.below(150) as f64;
+            // Optional background service to keep the cluster non-empty.
+            let other = (sid + 1) % MODELS.len();
+            let with_other = g.rng.below(2) == 1;
+            (sid, rate, other, with_other)
+        },
+        |&(sid, rate, other, with_other)| {
+            let mut sched = OnlineScheduler::new(&bank, OnlineConfig::default());
+            let mut state = mixed_cluster();
+            if with_other {
+                let out = sched.handle(&mut state, &onboard(other, 40.0)).unwrap();
+                if out.escalate.is_some() {
+                    return Ok(()); // fleet too small for this case
+                }
+            }
+            let out = sched.handle(&mut state, &onboard(sid, rate)).unwrap();
+            if out.escalate.is_some() {
+                return Ok(());
+            }
+            let before = state.service_throughputs(MODELS.len());
+
+            // Retire: every instance gone, capacity zero, invariants OK.
+            sched.handle(&mut state, &OnlineEvent::Retire { service: sid }).unwrap();
+            check_invariants(&state)?;
+            if !state.pods_of_service(sid).is_empty() {
+                return Err(format!("svc {sid} still has pods after retire"));
+            }
+            if state.service_throughputs(MODELS.len())[sid] != 0.0 {
+                return Err("capacity not zero after retire".to_string());
+            }
+
+            // Onboard again at the same rate: capacity restored, the
+            // other service untouched throughout.
+            let out = sched.handle(&mut state, &onboard(sid, rate)).unwrap();
+            check_invariants(&state)?;
+            if out.escalate.is_some() {
+                return Err(format!(
+                    "re-onboard escalated after a clean retire: {:?}",
+                    out.escalate
+                ));
+            }
+            let after = state.service_throughputs(MODELS.len());
+            if after[sid] + 1e-6 < rate {
+                return Err(format!("round-trip lost capacity: {} < {rate}", after[sid]));
+            }
+            if with_other && after[other] + 1e-6 < before[other] {
+                return Err(format!(
+                    "bystander svc {other} lost capacity: {} -> {}",
+                    before[other], after[other]
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn fail_repair_cycle_keeps_capacity_and_legality() {
+    let bank = ProfileBank::synthetic();
+    prop::check(
+        "online-fail-repair",
+        40,
+        0x0411_3e5,
+        |g| {
+            let rate = 40.0 + g.rng.below(120) as f64;
+            let gpu = g.rng.below(mixed_cluster().num_gpus());
+            (rate, gpu)
+        },
+        |&(rate, gpu)| {
+            let mut sched = OnlineScheduler::new(&bank, OnlineConfig::default());
+            let mut state = mixed_cluster();
+            let out = sched.handle(&mut state, &onboard(0, rate)).unwrap();
+            if out.escalate.is_some() {
+                return Ok(());
+            }
+            let out =
+                sched.handle(&mut state, &OnlineEvent::GpuFail { gpu }).unwrap();
+            check_invariants(&state)?;
+            if !state.is_offline(gpu) {
+                return Err("gpu not offline after fail".to_string());
+            }
+            if out.escalate.is_none() {
+                let cap = state.service_throughputs(1)[0];
+                if cap + 1e-6 < rate {
+                    return Err(format!("capacity {cap} < {rate} after absorbed failure"));
+                }
+            }
+            sched.handle(&mut state, &OnlineEvent::GpuRepair { gpu }).unwrap();
+            check_invariants(&state)?;
+            if state.is_offline(gpu) {
+                return Err("gpu still offline after repair".to_string());
+            }
+            Ok(())
+        },
+    );
+}
