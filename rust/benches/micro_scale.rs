@@ -1,0 +1,235 @@
+//! micro_scale: does the online stack survive a 10k-GPU fleet?
+//!
+//! Two sections:
+//!
+//! 1. **Pool enumeration + solve** — full vs dominance-pruned
+//!   ([`PoolPruning::Dominated`]) config pools at bench workload sizes,
+//!   with the fast-algorithm solve timed on both and the deployments
+//!   asserted label-identical (the pruning rule is greedy-exact, so any
+//!   divergence here is a bug, not a tradeoff).
+//! 2. **Event throughput at scale** — a grid of fleet sizes
+//!   (1k/4k/10k GPUs) × service counts (256/1k). Each point onboards
+//!   the services, then streams demand-delta events through the
+//!   incremental scheduler on a [`ScratchState`] (rolled back per
+//!   iteration, exactly like simkit's incremental tick) and reports
+//!   events/sec. The cluster-clone counter must not move during the
+//!   timed stream: the incremental path is journal-backed, not
+//!   clone-backed, and this bench is the regression tripwire for that.
+//!
+//! `--json BENCH_scale.json` writes the machine-readable record CI
+//! uploads. `--baseline <path>` compares the 1k-GPU events/sec points
+//! against a previously committed record and fails (exit 1) on a >2x
+//! regression.
+
+use mig_serving::bench::{header, BenchArgs, BenchCtx, JsonReport};
+use mig_serving::cluster::{cluster_clone_count, ClusterState, ScratchState};
+use mig_serving::mig::DeviceKind;
+use mig_serving::online::{check_invariants, OnlineConfig, OnlineEvent, OnlineScheduler};
+use mig_serving::optimizer::{
+    ConfigPool, OptimizerPipeline, PipelineBudget, PoolPruning, ProblemCtx,
+};
+use mig_serving::perf::ProfileBank;
+use mig_serving::util::json::{self, Value};
+use mig_serving::workload::micro_workload;
+
+/// Peak resident set (VmHWM, kB) as a coarse memory proxy; 0.0 when
+/// /proc is unavailable (non-Linux).
+fn peak_rss_kb() -> f64 {
+    std::fs::read_to_string("/proc/self/status")
+        .ok()
+        .and_then(|s| {
+            s.lines().find(|l| l.starts_with("VmHWM:")).and_then(|l| {
+                l.split_whitespace().nth(1).and_then(|v| v.parse().ok())
+            })
+        })
+        .unwrap_or(0.0)
+}
+
+/// `--baseline <path>` (ignored by [`BenchArgs`]).
+fn baseline_arg() -> Option<std::path::PathBuf> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    argv.iter()
+        .position(|a| a == "--baseline")
+        .and_then(|i| argv.get(i + 1))
+        .map(std::path::PathBuf::from)
+}
+
+/// The demand-delta stream for one timed iteration: a deterministic
+/// walk over services with rates oscillating around the onboarded rate
+/// (so both the grow and the shrink paths run).
+fn event_stream(services: usize, events: usize, base_rate: f64) -> Vec<OnlineEvent> {
+    (0..events)
+        .map(|i| OnlineEvent::DemandDelta {
+            service: (i * 17) % services,
+            rate: base_rate * (0.8 + 0.15 * ((i % 4) as f64)),
+        })
+        .collect()
+}
+
+fn main() {
+    let args = BenchArgs::parse();
+    header("micro/scale", "10k-GPU scale: pruned pools + journal-backed event loop");
+    let bank = ProfileBank::synthetic();
+    let models = bank.simulation_models();
+    let mut report = JsonReport::new("micro_scale", args.quick);
+
+    // ---- [1] pool enumeration + fast solve, full vs pruned ----------
+    if args.section_enabled(1) {
+        let sizes: &[(usize, f64)] =
+            if args.quick { &[(64, 1.0)] } else { &[(64, 1.0), (256, 0.25)] };
+        for &(n, mult) in sizes {
+            let section = format!("pool n={n}");
+            println!("\n[1] pool + solve, n={n} services");
+            let w = micro_workload(&bank, n, mult);
+            let ctx = ProblemCtx::new(&bank, &w).unwrap();
+            let bc = BenchCtx::new(usize::from(!args.quick), if args.quick { 1 } else { 3 });
+
+            let full_pool = ConfigPool::enumerate(&ctx);
+            let pruned_pool = ConfigPool::enumerate_pruned(&ctx, PoolPruning::Dominated);
+            assert!(pruned_pool.len() <= full_pool.len());
+            println!(
+                "    pool: {} configs full, {} pruned ({:.1}% dropped)",
+                full_pool.len(),
+                pruned_pool.len(),
+                100.0 * (full_pool.len() - pruned_pool.len()) as f64
+                    / full_pool.len().max(1) as f64
+            );
+
+            // Validity gate: pruning must not change the fast solve.
+            let p_full = OptimizerPipeline::with_budget(&ctx, PipelineBudget::fast_only());
+            let p_pruned = OptimizerPipeline::with_budget(
+                &ctx,
+                PipelineBudget::fast_only().with_pruning(PoolPruning::Dominated),
+            );
+            let d_full = p_full.plan_deployment().unwrap();
+            let d_pruned = p_pruned.plan_deployment().unwrap();
+            assert!(d_full.is_valid(&ctx) && d_pruned.is_valid(&ctx));
+            let l_full: Vec<String> = d_full.gpus.iter().map(|c| c.label()).collect();
+            let l_pruned: Vec<String> = d_pruned.gpus.iter().map(|c| c.label()).collect();
+            assert_eq!(l_full, l_pruned, "dominance pruning changed the fast deployment");
+            println!("    fast solve identical on both pools ({} GPUs)", d_full.num_gpus());
+
+            let enum_full =
+                bc.time(&format!("enumerate full   n={n}"), || ConfigPool::enumerate(&ctx).len());
+            let enum_pruned = bc.time(&format!("enumerate pruned n={n}"), || {
+                ConfigPool::enumerate_pruned(&ctx, PoolPruning::Dominated).len()
+            });
+            let solve_full = bc
+                .time(&format!("solve full       n={n}"), || p_full.plan_deployment().unwrap().num_gpus());
+            let solve_pruned = bc.time(&format!("solve pruned     n={n}"), || {
+                p_pruned.plan_deployment().unwrap().num_gpus()
+            });
+            for m in [&enum_full, &enum_pruned, &solve_full, &solve_pruned] {
+                println!("{}", m.report());
+                report.record_measurement(&section, m);
+            }
+            report.record(&section, "configs_full", Value::from(full_pool.len()));
+            report.record(&section, "configs_pruned", Value::from(pruned_pool.len()));
+        }
+    }
+
+    // ---- [2] incremental event throughput at fleet scale ------------
+    if args.section_enabled(2) {
+        let grid: &[usize] = &[1000, 4000, 10_000];
+        let service_counts: &[usize] = &[256, 1000];
+        let events_per_iter = if args.quick { 40 } else { 400 };
+        let base_rate = 8.0;
+
+        for &gpus in grid {
+            for &services in service_counts {
+                let key = format!("g{gpus}_s{services}");
+                println!("\n[2] {gpus} GPUs x {services} services");
+                let mut cluster =
+                    ClusterState::with_kinds(8, vec![DeviceKind::A100; gpus]);
+                let mut sched = OnlineScheduler::new(&bank, OnlineConfig::default());
+                for sid in 0..services {
+                    let onboard = OnlineEvent::Onboard {
+                        service: sid,
+                        model: models[sid % models.len()].clone(),
+                        latency_slo_ms: 300.0,
+                        rate: base_rate,
+                    };
+                    sched.handle(&mut cluster, &onboard).unwrap();
+                }
+                println!(
+                    "    onboarded: {} GPUs in use",
+                    cluster.used_gpu_count()
+                );
+                let stream = event_stream(services, events_per_iter, base_rate);
+
+                // Validity gate: the stream must be absorbable (no
+                // escalation) and leave the scratch state invariant-
+                // clean before any timing means anything.
+                {
+                    let mut scratch = ScratchState::new(&mut cluster);
+                    for ev in &stream {
+                        let out = sched.handle(&mut scratch, ev).unwrap();
+                        assert!(
+                            out.escalate.is_none(),
+                            "scale stream escalated: {:?}",
+                            out.escalate
+                        );
+                    }
+                    check_invariants(&scratch).unwrap();
+                }
+
+                let clones_before = cluster_clone_count();
+                let bc = BenchCtx::new(
+                    usize::from(!args.quick),
+                    if args.quick { 1 } else { 3 },
+                );
+                let m = bc.time(&format!("events {key}"), || {
+                    let mut actions = 0usize;
+                    let mut scratch = ScratchState::new(&mut cluster);
+                    for ev in &stream {
+                        actions += sched.handle(&mut scratch, ev).unwrap().actions.len();
+                    }
+                    actions
+                });
+                assert_eq!(
+                    cluster_clone_count(),
+                    clones_before,
+                    "incremental event path cloned the cluster at {gpus} GPUs"
+                );
+                let events_per_s =
+                    events_per_iter as f64 / m.mean().as_secs_f64().max(1e-12);
+                println!("{}", m.report());
+                println!("    -> {events_per_s:.0} events/sec, 0 cluster clones");
+                report.record_measurement("scale", &m);
+                report.record("scale", &format!("{key}_events_per_s"), Value::Num(events_per_s));
+                report.record("scale", &format!("{key}_used_gpus"), Value::from(cluster.used_gpu_count()));
+            }
+        }
+        report.record("scale", "peak_rss_kb", Value::Num(peak_rss_kb()));
+    }
+
+    if let Some(path) = &args.json {
+        report.write(path).expect("write bench json");
+        println!("\nwrote {}", path.display());
+    }
+
+    // ---- regression gate vs a committed baseline --------------------
+    if let Some(base) = baseline_arg() {
+        let old = json::parse_file(&base).expect("parse baseline json");
+        let new = report.to_value();
+        let mut failed = false;
+        for services in [256usize, 1000] {
+            let key = format!("sections.scale.g1000_s{services}_events_per_s");
+            let (Some(o), Some(n)) = (
+                old.get_path(&key).and_then(|v| v.as_f64()),
+                new.get_path(&key).and_then(|v| v.as_f64()),
+            ) else {
+                continue;
+            };
+            if n < o / 2.0 {
+                eprintln!("REGRESSION: {key} fell {o:.0} -> {n:.0} events/sec (>2x)");
+                failed = true;
+            } else {
+                println!("baseline ok: {key} {o:.0} -> {n:.0} events/sec");
+            }
+        }
+        if failed {
+            std::process::exit(1);
+        }
+    }
+}

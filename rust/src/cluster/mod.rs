@@ -12,12 +12,16 @@
 //! * [`sim`] — the action executor: applies transition plans stage by
 //!   stage (parallel within a stage, per §6 "actions can run in parallel
 //!   if the affected GPUs are separate"), accumulating simulated
-//!   wall-clock and the per-component time split of Fig 13a.
+//!   wall-clock and the per-component time split of Fig 13a;
+//! * [`scratch`] — undo-log trial-mutation overlay: what-if probes roll
+//!   back in O(touched GPUs) instead of deep-cloning the fleet.
 
 pub mod actions;
+pub mod scratch;
 pub mod sim;
 pub mod state;
 
 pub use actions::{Action, ActionKind, LatencyModel};
+pub use scratch::{Checkpoint, ScratchState};
 pub use sim::{ActionSchedule, ExecReport, Executor};
-pub use state::{ClusterError, ClusterState, GpuSim, Pod};
+pub use state::{cluster_clone_count, ClusterError, ClusterState, GpuSim, Pod};

@@ -1,9 +1,31 @@
 //! Cluster state: machines, GPUs (possibly of mixed device kinds),
 //! partitions, running pods.
+//!
+//! Every mutation keeps three derived indices in sync so the online hot
+//! paths scale with *touched* GPUs instead of fleet size (DESIGN.md
+//! §"Scale"): a per-kind free-capacity index (pod-free compute slices →
+//! GPU), a per-kind empty-GPU set, and a per-service pod index. When a
+//! journal is active (see [`super::scratch::ScratchState`]) each
+//! mutation also records its inverse, so trial changes roll back in
+//! O(touched GPUs) instead of deep-cloning the whole state.
 
 use crate::mig::{rules, DeviceKind, FleetSpec, Partition, Placement};
 use crate::spec::ServiceId;
+use std::cell::Cell;
 use std::collections::{BTreeMap, BTreeSet};
+
+thread_local! {
+    /// Per-thread count of full [`ClusterState`] deep clones — the
+    /// scale-regression oracle: incremental event handling must keep
+    /// this at zero (`ScratchState` replaces clone-per-event).
+    static CLONE_COUNT: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Full [`ClusterState`] deep clones performed by the current thread so
+/// far. Tests assert a zero delta across the incremental paths.
+pub fn cluster_clone_count() -> u64 {
+    CLONE_COUNT.with(|c| c.get())
+}
 
 /// A model-serving pod bound to one GPU instance.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -16,7 +38,7 @@ pub struct Pod {
 
 /// One simulated GPU: its MIG partition plus the pods occupying
 /// (a subset of) its instances.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct GpuSim {
     partition_placements: Vec<Placement>,
     pods: BTreeMap<Placement, Pod>,
@@ -33,11 +55,22 @@ impl GpuSim {
 
     /// Placements in the partition without a pod.
     pub fn free_instances(&self) -> Vec<Placement> {
+        self.free_instances_iter().collect()
+    }
+
+    /// Iterator form of [`GpuSim::free_instances`] — no `Vec`
+    /// allocation, for the per-GPU probes on hot paths.
+    pub fn free_instances_iter(&self) -> impl Iterator<Item = Placement> + '_ {
         self.partition_placements
             .iter()
             .filter(|p| !self.pods.contains_key(p))
             .copied()
-            .collect()
+    }
+
+    /// Does any instance lack a pod? Allocation-free replacement for
+    /// `!free_instances().is_empty()`.
+    pub fn has_free_instance(&self) -> bool {
+        self.free_instances_iter().next().is_some()
     }
 
     /// First pod-free placement of exactly `size`, without allocating
@@ -58,7 +91,7 @@ impl GpuSim {
     /// Fully occupied = every instance has a pod and nothing more fits.
     pub fn is_fully_occupied(&self) -> bool {
         !self.partition_placements.is_empty()
-            && self.free_instances().is_empty()
+            && !self.has_free_instance()
             && self.partition().is_maximal()
     }
 }
@@ -101,9 +134,29 @@ impl std::fmt::Display for ClusterError {
 
 impl std::error::Error for ClusterError {}
 
+/// One journaled mutation, recorded so [`super::ScratchState`] can roll
+/// the state back in strict reverse order. Each variant stores exactly
+/// what the forward mutation destroyed.
+#[derive(Debug)]
+enum UndoOp {
+    /// `repartition` succeeded; `prev` is the pre-call layout.
+    Repartition { gpu: usize, prev: Vec<Placement> },
+    /// `create_pod` succeeded; undo deletes the pod again.
+    CreatePod { gpu: usize, placement: Placement },
+    /// `delete_pod` succeeded; undo reinstates the pod.
+    DeletePod { gpu: usize, placement: Placement, pod: Pod },
+    /// `set_offline` ran; `killed` are the pods it destroyed. When
+    /// `newly_offline` the partition was moved into `saved_partitions`
+    /// (undo takes it back from there — no second copy is stored).
+    SetOffline { gpu: usize, newly_offline: bool, killed: Vec<(Placement, Pod)> },
+    /// `set_online` brought a failed GPU back; `restored` records
+    /// whether a saved partition was reinstalled (undo re-saves it).
+    SetOnline { gpu: usize, restored: bool },
+}
+
 /// The whole cluster: flat-indexed GPUs grouped `gpus_per_machine` to a
 /// machine, each GPU of a [`DeviceKind`] (homogeneous A100 by default).
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 pub struct ClusterState {
     pub machines: usize,
     pub gpus_per_machine: usize,
@@ -118,6 +171,66 @@ pub struct ClusterState {
     /// repair restores the MIG config instead of resetting the GPU to
     /// unpartitioned (pods stay lost either way).
     saved_partitions: BTreeMap<usize, Vec<Placement>>,
+    /// Undo log, active while a [`super::ScratchState`] overlay exists.
+    /// `None` = journaling off (mutations are permanent, zero
+    /// bookkeeping). Excluded from `Clone` and `PartialEq`.
+    journal: Option<Vec<UndoOp>>,
+    /// Compute slices pinned by pod-hosting instances, per GPU
+    /// (parallel to `gpus`). `compute_slices(kind) - pod_slices[g]` is
+    /// an upper bound on what any placement probe can use on `g`.
+    pod_slices: Vec<u8>,
+    /// Per-kind free-capacity index over **online, non-empty** GPUs:
+    /// `(compute_slices - pod_slices, gpu)` ascending. Fully-occupied
+    /// GPUs sit at key 0; empty GPUs live in `empty_gpus` instead so
+    /// placement can probe one empty representative instead of all.
+    free_index: BTreeMap<DeviceKind, BTreeSet<(u8, usize)>>,
+    /// Per-kind **online, empty-partition** GPUs.
+    empty_gpus: BTreeMap<DeviceKind, BTreeSet<usize>>,
+    /// Pod locations per service, `(gpu, placement)` ascending — the
+    /// same order a full fleet scan would visit them, so float
+    /// accumulations over a service's pods are bit-identical to the
+    /// scan. Empty sets are removed (canonical form).
+    service_pods: BTreeMap<ServiceId, BTreeSet<(usize, Placement)>>,
+}
+
+impl Clone for ClusterState {
+    fn clone(&self) -> ClusterState {
+        CLONE_COUNT.with(|c| c.set(c.get() + 1));
+        ClusterState {
+            machines: self.machines,
+            gpus_per_machine: self.gpus_per_machine,
+            gpus: self.gpus.clone(),
+            kinds: self.kinds.clone(),
+            offline: self.offline.clone(),
+            saved_partitions: self.saved_partitions.clone(),
+            // Undo records describe the original's history, not the
+            // copy's: a clone starts with journaling off.
+            journal: None,
+            pod_slices: self.pod_slices.clone(),
+            free_index: self.free_index.clone(),
+            empty_gpus: self.empty_gpus.clone(),
+            service_pods: self.service_pods.clone(),
+        }
+    }
+}
+
+impl PartialEq for ClusterState {
+    /// Structural equality over the cluster *contents* (journal
+    /// excluded): two states compare equal iff GPUs, kinds, offline
+    /// set, saved partitions, and all derived indices match — so a
+    /// rollback that restored the data but drifted an index fails `==`.
+    fn eq(&self, other: &ClusterState) -> bool {
+        self.machines == other.machines
+            && self.gpus_per_machine == other.gpus_per_machine
+            && self.gpus == other.gpus
+            && self.kinds == other.kinds
+            && self.offline == other.offline
+            && self.saved_partitions == other.saved_partitions
+            && self.pod_slices == other.pod_slices
+            && self.free_index == other.free_index
+            && self.empty_gpus == other.empty_gpus
+            && self.service_pods == other.service_pods
+    }
 }
 
 impl ClusterState {
@@ -136,13 +249,30 @@ impl ClusterState {
     pub fn with_kinds(gpus_per_machine: usize, kinds: Vec<DeviceKind>) -> ClusterState {
         assert!(gpus_per_machine > 0, "gpus_per_machine must be positive");
         assert!(!kinds.is_empty(), "cluster needs at least one GPU");
+        let mut fleet: Vec<DeviceKind> = kinds.clone();
+        fleet.sort();
+        fleet.dedup();
+        // Both per-kind indices carry an entry for every fleet kind for
+        // the state's whole lifetime (sets may be empty) so lookups and
+        // equality never depend on insertion history.
+        let free_index = fleet.iter().map(|&k| (k, BTreeSet::new())).collect();
+        let mut empty_gpus: BTreeMap<DeviceKind, BTreeSet<usize>> =
+            fleet.iter().map(|&k| (k, BTreeSet::new())).collect();
+        for (gi, &k) in kinds.iter().enumerate() {
+            empty_gpus.get_mut(&k).expect("fleet kind").insert(gi);
+        }
         ClusterState {
             machines: kinds.len().div_ceil(gpus_per_machine),
             gpus_per_machine,
             gpus: vec![GpuSim::default(); kinds.len()],
+            pod_slices: vec![0; kinds.len()],
             kinds,
             offline: BTreeSet::new(),
             saved_partitions: BTreeMap::new(),
+            journal: None,
+            free_index,
+            empty_gpus,
+            service_pods: BTreeMap::new(),
         }
     }
 
@@ -182,13 +312,47 @@ impl ClusterState {
         m
     }
 
-    /// In-use (non-empty) GPU counts per kind.
+    /// In-use (non-empty) GPU counts per kind. Offline GPUs hold
+    /// nothing, so the free-capacity index covers exactly the used set.
     pub fn used_gpus_by_kind(&self) -> BTreeMap<DeviceKind, usize> {
-        let mut m = BTreeMap::new();
-        for gi in self.used_gpus() {
-            *m.entry(self.kinds[gi]).or_insert(0) += 1;
-        }
-        m
+        self.free_index
+            .iter()
+            .filter(|(_, s)| !s.is_empty())
+            .map(|(&k, s)| (k, s.len()))
+            .collect()
+    }
+
+    /// `used_gpus().len()` without the O(fleet) scan.
+    pub fn used_gpu_count(&self) -> usize {
+        self.free_index.values().map(|s| s.len()).sum()
+    }
+
+    /// Lowest-index online GPU of `kind` with an empty partition. All
+    /// empty GPUs of a kind are interchangeable for placement probes,
+    /// so one representative stands in for the whole set.
+    pub fn first_empty_gpu(&self, kind: DeviceKind) -> Option<usize> {
+        self.empty_gpus.get(&kind).and_then(|s| s.iter().next().copied())
+    }
+
+    /// Online empty-partition GPUs of `kind`, ascending.
+    pub fn empty_gpus_of(&self, kind: DeviceKind) -> impl Iterator<Item = usize> + '_ {
+        self.empty_gpus.get(&kind).into_iter().flat_map(|s| s.iter().copied())
+    }
+
+    /// Online non-empty GPUs of `kind` whose pod-free compute (slices
+    /// not pinned by pod-hosting instances) is at least `min_free`,
+    /// ascending `(free, gpu)`. A pod-free budget ≥ the requested
+    /// instance's slices is necessary for *any* slot — free instance or
+    /// partition extension — so this is a sound placement prefilter.
+    pub fn gpus_with_free(
+        &self,
+        kind: DeviceKind,
+        min_free: u8,
+    ) -> impl Iterator<Item = usize> + '_ {
+        self.free_index
+            .get(&kind)
+            .into_iter()
+            .flat_map(move |s| s.range((min_free, 0)..).map(|&(_, gi)| gi))
     }
 
     /// Machine index of a GPU (locality for migrations, §6).
@@ -215,15 +379,27 @@ impl ClusterState {
     /// remembered so repair can restore it. Returns the killed pods so
     /// the caller can account the capacity drop. Idempotent.
     pub fn set_offline(&mut self, gpu: usize) -> Result<Vec<Pod>, ClusterError> {
-        let g = self.gpus.get_mut(gpu).ok_or(ClusterError::NoSuchGpu(gpu))?;
-        let killed: Vec<Pod> = g.pods.values().copied().collect();
-        g.pods.clear();
-        if self.offline.insert(gpu) {
+        if gpu >= self.gpus.len() {
+            return Err(ClusterError::NoSuchGpu(gpu));
+        }
+        self.deindex_gpu(gpu);
+        let killed_pairs: Vec<(Placement, Pod)> =
+            std::mem::take(&mut self.gpus[gpu].pods).into_iter().collect();
+        let newly_offline = self.offline.insert(gpu);
+        if newly_offline {
             // First failure: remember the MIG layout for repair.
             self.saved_partitions
-                .insert(gpu, std::mem::take(&mut g.partition_placements));
+                .insert(gpu, std::mem::take(&mut self.gpus[gpu].partition_placements));
         } else {
-            g.partition_placements.clear();
+            self.gpus[gpu].partition_placements.clear();
+        }
+        for &(pl, pod) in &killed_pairs {
+            self.unindex_pod(pod.service, gpu, pl);
+        }
+        self.index_gpu(gpu);
+        let killed: Vec<Pod> = killed_pairs.iter().map(|&(_, p)| p).collect();
+        if let Some(j) = self.journal.as_mut() {
+            j.push(UndoOp::SetOffline { gpu, newly_offline, killed: killed_pairs });
         }
         Ok(killed)
     }
@@ -236,8 +412,14 @@ impl ClusterState {
             return Err(ClusterError::NoSuchGpu(gpu));
         }
         if self.offline.remove(&gpu) {
-            if let Some(saved) = self.saved_partitions.remove(&gpu) {
+            let saved = self.saved_partitions.remove(&gpu);
+            let restored = saved.is_some();
+            if let Some(saved) = saved {
                 self.gpus[gpu].partition_placements = saved;
+            }
+            self.index_gpu(gpu);
+            if let Some(j) = self.journal.as_mut() {
+                j.push(UndoOp::SetOnline { gpu, restored });
             }
         }
         Ok(())
@@ -267,7 +449,15 @@ impl ClusterState {
         let next = rules::reconfigure_on(kind, &current, remove, add).map_err(|e| {
             ClusterError::IllegalRepartition { gpu, reason: e.to_string() }
         })?;
-        g.partition_placements = next.placements().to_vec();
+        self.deindex_gpu(gpu);
+        let prev = std::mem::replace(
+            &mut self.gpus[gpu].partition_placements,
+            next.placements().to_vec(),
+        );
+        self.index_gpu(gpu);
+        if let Some(j) = self.journal.as_mut() {
+            j.push(UndoOp::Repartition { gpu, prev });
+        }
         Ok(())
     }
 
@@ -288,7 +478,13 @@ impl ClusterState {
         if g.pods.contains_key(&placement) {
             return Err(ClusterError::InstanceBusy { gpu, placement });
         }
-        g.pods.insert(placement, pod);
+        self.deindex_gpu(gpu);
+        self.gpus[gpu].pods.insert(placement, pod);
+        self.index_pod(pod.service, gpu, placement);
+        self.index_gpu(gpu);
+        if let Some(j) = self.journal.as_mut() {
+            j.push(UndoOp::CreatePod { gpu, placement });
+        }
         Ok(())
     }
 
@@ -298,8 +494,18 @@ impl ClusterState {
         gpu: usize,
         placement: Placement,
     ) -> Result<Pod, ClusterError> {
-        let g = self.gpus.get_mut(gpu).ok_or(ClusterError::NoSuchGpu(gpu))?;
-        g.pods.remove(&placement).ok_or(ClusterError::NoPod { gpu, placement })
+        let g = self.gpus.get(gpu).ok_or(ClusterError::NoSuchGpu(gpu))?;
+        if !g.pods.contains_key(&placement) {
+            return Err(ClusterError::NoPod { gpu, placement });
+        }
+        self.deindex_gpu(gpu);
+        let pod = self.gpus[gpu].pods.remove(&placement).expect("checked above");
+        self.unindex_pod(pod.service, gpu, placement);
+        self.index_gpu(gpu);
+        if let Some(j) = self.journal.as_mut() {
+            j.push(UndoOp::DeletePod { gpu, placement, pod });
+        }
+        Ok(pod)
     }
 
     /// Live aggregate throughput per service over `n_services`.
@@ -318,17 +524,16 @@ impl ClusterState {
         (0..self.gpus.len()).filter(|&i| !self.gpus[i].is_empty()).collect()
     }
 
-    /// All (gpu, placement, pod) triples for a service.
+    /// All (gpu, placement, pod) triples for a service, `(gpu,
+    /// placement)` ascending — index-backed, same order as a fleet scan.
     pub fn pods_of_service(&self, service: ServiceId) -> Vec<(usize, Placement, Pod)> {
-        let mut out = Vec::new();
-        for (gi, g) in self.gpus.iter().enumerate() {
-            for (pl, pod) in &g.pods {
-                if pod.service == service {
-                    out.push((gi, *pl, *pod));
-                }
-            }
+        match self.service_pods.get(&service) {
+            Some(set) => set
+                .iter()
+                .map(|&(gi, pl)| (gi, pl, self.gpus[gi].pods[&pl]))
+                .collect(),
+            None => Vec::new(),
         }
-        out
     }
 
     /// Find a GPU and placement where `size` can be allocated with **no
@@ -368,6 +573,189 @@ impl ClusterState {
             }
         }
         empty_fallback
+    }
+
+    // ---- derived-index maintenance -------------------------------------
+    //
+    // Every mutation brackets its change with `deindex_gpu` (drop the
+    // GPU's stale entries, keyed off the cached `pod_slices`) and
+    // `index_gpu` (recompute `pod_slices` from the pods actually on the
+    // GPU — O(pods-per-GPU) ≤ 7 — and re-insert into the right set).
+    // Offline GPUs live in neither per-kind set.
+
+    fn deindex_gpu(&mut self, gi: usize) {
+        let kind = self.kinds[gi];
+        let free = kind.compute_slices() - self.pod_slices[gi];
+        self.free_index.get_mut(&kind).expect("fleet kind").remove(&(free, gi));
+        self.empty_gpus.get_mut(&kind).expect("fleet kind").remove(&gi);
+    }
+
+    fn index_gpu(&mut self, gi: usize) {
+        let ps: u8 = self.gpus[gi].pods.keys().map(|p| p.size.slices()).sum();
+        self.pod_slices[gi] = ps;
+        if self.offline.contains(&gi) {
+            return;
+        }
+        let kind = self.kinds[gi];
+        if self.gpus[gi].partition_placements.is_empty() {
+            self.empty_gpus.get_mut(&kind).expect("fleet kind").insert(gi);
+        } else {
+            let free = kind.compute_slices() - ps;
+            self.free_index.get_mut(&kind).expect("fleet kind").insert((free, gi));
+        }
+    }
+
+    fn index_pod(&mut self, service: ServiceId, gpu: usize, pl: Placement) {
+        self.service_pods.entry(service).or_default().insert((gpu, pl));
+    }
+
+    fn unindex_pod(&mut self, service: ServiceId, gpu: usize, pl: Placement) {
+        if let Some(set) = self.service_pods.get_mut(&service) {
+            set.remove(&(gpu, pl));
+            if set.is_empty() {
+                self.service_pods.remove(&service);
+            }
+        }
+    }
+
+    /// Rebuild every derived index from first principles and compare —
+    /// the drift oracle for property tests. Not used on any hot path.
+    #[doc(hidden)]
+    pub fn debug_index_consistent(&self) -> Result<(), String> {
+        let mut pod_slices = vec![0u8; self.gpus.len()];
+        let mut free_index: BTreeMap<DeviceKind, BTreeSet<(u8, usize)>> =
+            self.free_index.keys().map(|&k| (k, BTreeSet::new())).collect();
+        let mut empty_gpus: BTreeMap<DeviceKind, BTreeSet<usize>> =
+            self.empty_gpus.keys().map(|&k| (k, BTreeSet::new())).collect();
+        let mut service_pods: BTreeMap<ServiceId, BTreeSet<(usize, Placement)>> =
+            BTreeMap::new();
+        for (gi, g) in self.gpus.iter().enumerate() {
+            let kind = self.kinds[gi];
+            let ps: u8 = g.pods.keys().map(|p| p.size.slices()).sum();
+            pod_slices[gi] = ps;
+            for (pl, pod) in &g.pods {
+                service_pods.entry(pod.service).or_default().insert((gi, *pl));
+            }
+            if self.offline.contains(&gi) {
+                continue;
+            }
+            if g.partition_placements.is_empty() {
+                empty_gpus.entry(kind).or_default().insert(gi);
+            } else {
+                free_index
+                    .entry(kind)
+                    .or_default()
+                    .insert((kind.compute_slices() - ps, gi));
+            }
+        }
+        if pod_slices != self.pod_slices {
+            return Err(format!(
+                "pod_slices drift: expected {pod_slices:?}, have {:?}",
+                self.pod_slices
+            ));
+        }
+        if free_index != self.free_index {
+            return Err(format!(
+                "free_index drift: expected {free_index:?}, have {:?}",
+                self.free_index
+            ));
+        }
+        if empty_gpus != self.empty_gpus {
+            return Err(format!(
+                "empty_gpus drift: expected {empty_gpus:?}, have {:?}",
+                self.empty_gpus
+            ));
+        }
+        if service_pods != self.service_pods {
+            return Err(format!(
+                "service_pods drift: expected {service_pods:?}, have {:?}",
+                self.service_pods
+            ));
+        }
+        Ok(())
+    }
+
+    // ---- undo journal (driven by `super::ScratchState`) ----------------
+
+    pub(super) fn journal_enabled(&self) -> bool {
+        self.journal.is_some()
+    }
+
+    pub(super) fn journal_start(&mut self) {
+        debug_assert!(self.journal.is_none(), "journal already active");
+        self.journal = Some(Vec::new());
+    }
+
+    pub(super) fn journal_stop(&mut self) {
+        self.journal = None;
+    }
+
+    pub(super) fn journal_len(&self) -> usize {
+        self.journal.as_ref().map_or(0, |j| j.len())
+    }
+
+    /// Pop and invert journal entries until only `to` remain. Undo ops
+    /// run in strict reverse order, so each one sees the state exactly
+    /// as its forward mutation left it.
+    pub(super) fn journal_rollback(&mut self, to: usize) {
+        loop {
+            let op = match self.journal.as_mut() {
+                Some(j) if j.len() > to => j.pop().expect("len checked"),
+                _ => break,
+            };
+            self.apply_undo(op);
+        }
+    }
+
+    /// Invert one mutation. Touches fields directly (never the public
+    /// mutators — those would journal again) and re-syncs the touched
+    /// GPU's index entries.
+    fn apply_undo(&mut self, op: UndoOp) {
+        match op {
+            UndoOp::Repartition { gpu, prev } => {
+                self.deindex_gpu(gpu);
+                self.gpus[gpu].partition_placements = prev;
+                self.index_gpu(gpu);
+            }
+            UndoOp::CreatePod { gpu, placement } => {
+                self.deindex_gpu(gpu);
+                let pod = self.gpus[gpu]
+                    .pods
+                    .remove(&placement)
+                    .expect("journaled pod present at rollback");
+                self.unindex_pod(pod.service, gpu, placement);
+                self.index_gpu(gpu);
+            }
+            UndoOp::DeletePod { gpu, placement, pod } => {
+                self.deindex_gpu(gpu);
+                self.gpus[gpu].pods.insert(placement, pod);
+                self.index_pod(pod.service, gpu, placement);
+                self.index_gpu(gpu);
+            }
+            UndoOp::SetOffline { gpu, newly_offline, killed } => {
+                // The GPU is offline and empty here (reverse-order
+                // rollback), so it has no index entries to drop.
+                if newly_offline {
+                    self.offline.remove(&gpu);
+                    let prev = self.saved_partitions.remove(&gpu).unwrap_or_default();
+                    self.gpus[gpu].partition_placements = prev;
+                }
+                for &(pl, pod) in &killed {
+                    self.gpus[gpu].pods.insert(pl, pod);
+                    self.index_pod(pod.service, gpu, pl);
+                }
+                self.index_gpu(gpu);
+            }
+            UndoOp::SetOnline { gpu, restored } => {
+                self.deindex_gpu(gpu);
+                self.offline.insert(gpu);
+                if restored {
+                    let cur = std::mem::take(&mut self.gpus[gpu].partition_placements);
+                    self.saved_partitions.insert(gpu, cur);
+                }
+                self.index_gpu(gpu);
+            }
+        }
     }
 }
 
@@ -591,5 +979,76 @@ mod tests {
         c.create_pod(0, Placement::new(Three, 4), pod(1)).unwrap();
         assert_eq!(c.service_throughputs(2), vec![100.0, 100.0]);
         assert_eq!(c.pods_of_service(0).len(), 1);
+    }
+
+    #[test]
+    fn indices_track_mutations() {
+        use crate::mig::DeviceKind;
+        let mut c = ClusterState::new(1, 3);
+        assert_eq!(c.used_gpu_count(), 0);
+        assert_eq!(c.first_empty_gpu(DeviceKind::A100), Some(0));
+        c.repartition(1, &[], &[Placement::new(Four, 0)]).unwrap();
+        assert_eq!(c.used_gpu_count(), 1);
+        assert_eq!(c.first_empty_gpu(DeviceKind::A100), Some(0));
+        // Pod-free budget: GPU 1 still has all 7 compute slices free of
+        // pods, so it qualifies for any minimum up to 7.
+        assert_eq!(c.gpus_with_free(DeviceKind::A100, 7).collect::<Vec<_>>(), vec![1]);
+        c.create_pod(1, Placement::new(Four, 0), pod(0)).unwrap();
+        assert_eq!(c.gpus_with_free(DeviceKind::A100, 4).collect::<Vec<_>>(), vec![1]);
+        assert!(c.gpus_with_free(DeviceKind::A100, 5).next().is_none());
+        c.set_offline(1).unwrap();
+        assert_eq!(c.used_gpu_count(), 0);
+        assert!(c.gpus_with_free(DeviceKind::A100, 0).next().is_none());
+        c.set_online(1).unwrap();
+        // Repair restores the partition podless: 7 slices pod-free.
+        assert_eq!(c.gpus_with_free(DeviceKind::A100, 7).collect::<Vec<_>>(), vec![1]);
+        c.debug_index_consistent().unwrap();
+    }
+
+    #[test]
+    fn journal_rolls_back_every_mutation_kind() {
+        let mut c = ClusterState::new(1, 2);
+        c.repartition(0, &[], &[Placement::new(Two, 0)]).unwrap();
+        c.create_pod(0, Placement::new(Two, 0), pod(0)).unwrap();
+        let snapshot = c.clone();
+        assert!(!c.journal_enabled());
+
+        c.journal_start();
+        c.repartition(0, &[], &[Placement::new(Two, 2)]).unwrap();
+        c.create_pod(0, Placement::new(Two, 2), pod(1)).unwrap();
+        c.delete_pod(0, Placement::new(Two, 0)).unwrap();
+        c.set_offline(0).unwrap();
+        c.set_offline(0).unwrap(); // idempotent second failure
+        c.set_online(0).unwrap();
+        c.repartition(1, &[], &[Placement::new(Seven, 0)]).unwrap();
+        assert_ne!(c, snapshot);
+        c.journal_rollback(0);
+        c.journal_stop();
+
+        assert_eq!(c, snapshot);
+        c.debug_index_consistent().unwrap();
+    }
+
+    #[test]
+    fn partial_rollback_keeps_earlier_mutations() {
+        let mut c = ClusterState::new(1, 1);
+        c.journal_start();
+        c.repartition(0, &[], &[Placement::new(Three, 0)]).unwrap();
+        let mark = c.journal_len();
+        c.create_pod(0, Placement::new(Three, 0), pod(0)).unwrap();
+        c.journal_rollback(mark);
+        c.journal_stop();
+        assert_eq!(c.gpu(0).partition().label(), "3");
+        assert!(c.gpu(0).pods().is_empty());
+        c.debug_index_consistent().unwrap();
+    }
+
+    #[test]
+    fn clone_counter_counts_deep_clones() {
+        let c = ClusterState::new(1, 1);
+        let before = cluster_clone_count();
+        let c2 = c.clone();
+        assert_eq!(cluster_clone_count(), before + 1);
+        assert_eq!(c, c2);
     }
 }

@@ -181,8 +181,8 @@ pub fn compact_phase_with(
             "compact leftover: gpu {gi} still hosts {} pods",
             g.pods().len()
         );
-        let free = g.free_instances();
-        if !free.is_empty() {
+        if g.has_free_instance() {
+            let free = g.free_instances();
             let act = Action::Repartition { gpu: gi, remove: free, add: vec![] };
             Executor::apply(state, &act)?;
             actions.push(act);

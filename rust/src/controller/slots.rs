@@ -34,6 +34,11 @@ pub fn probe_slot(
         .map(|start| (Placement::new(size, start), true))
 }
 
+/// Candidate-GPU budget for [`allocate_slot`] — same rationale as the
+/// online placer's cap: candidates arrive best-fit first, so the tail
+/// is ever looser fits.
+const ALLOC_CANDIDATE_CAP: usize = 64;
+
 /// Allocate a slot for a (kind, size) instance anywhere on the cluster,
 /// emitting (and applying) a repartition if the hosting GPU's layout
 /// must grow. Only online GPUs of `kind` qualify; `forbidden` GPUs are
@@ -46,6 +51,15 @@ pub fn probe_slot(
 /// spreading consecutive allocations across GPUs keeps the per-GPU
 /// action chains short so the asynchronous executor can overlap them
 /// (EXPERIMENTS.md §Perf).
+///
+/// Candidates come from the per-kind free-capacity index
+/// ([`ClusterState::gpus_with_free`]) rather than a fleet scan: only
+/// GPUs whose pod-free compute can possibly host `size` are probed,
+/// best-fit first, capped at [`ALLOC_CANDIDATE_CAP`]. Empty GPUs all
+/// probe identically, so the lowest-index non-forbidden one stands in
+/// for the whole set — with the GPU index breaking ranking ties, that
+/// reproduces the old full scan's winner exactly whenever the
+/// candidates fit the cap.
 pub fn allocate_slot(
     state: &mut ClusterState,
     kind: DeviceKind,
@@ -53,17 +67,20 @@ pub fn allocate_slot(
     forbidden: &[usize],
     actions: &mut Vec<Action>,
 ) -> anyhow::Result<(usize, Placement)> {
+    let mut cands: Vec<usize> = state
+        .gpus_with_free(kind, size.slices())
+        .filter(|gi| !forbidden.contains(gi))
+        .take(ALLOC_CANDIDATE_CAP)
+        .collect();
+    cands.extend(state.empty_gpus_of(kind).find(|gi| !forbidden.contains(gi)));
     let mut choice: Option<(usize, Placement, bool)> = None;
-    let mut best_key = (usize::MAX, usize::MAX, usize::MAX);
-    for gi in 0..state.num_gpus() {
-        if forbidden.contains(&gi) || state.is_offline(gi) || state.kind_of(gi) != kind {
-            continue;
-        }
+    let mut best_key = (usize::MAX, usize::MAX, usize::MAX, usize::MAX);
+    for gi in cands {
         let g = state.gpu(gi);
         let load = g.partition().len();
         if let Some((pl, needs_rep)) = probe_slot(g, kind, size) {
             let empty = if needs_rep { usize::from(g.is_empty()) } else { 0 };
-            let key = (usize::from(needs_rep), empty, load);
+            let key = (usize::from(needs_rep), empty, load, gi);
             if key < best_key {
                 best_key = key;
                 choice = Some((gi, pl, needs_rep));

@@ -516,6 +516,7 @@ pub fn check_invariants(state: &ClusterState) -> Result<(), String> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::ScratchState;
     use crate::mig::FleetSpec;
 
     fn scheduler(bank: &ProfileBank) -> OnlineScheduler<'_> {
@@ -558,35 +559,52 @@ mod tests {
         sched.handle(&mut state, &onboard(0, "bert-base-uncased", 60.0)).unwrap();
         let before = capacity_of(&state, 0);
 
-        // Grow: replay actions on a copy, capacity must never dip
-        // below the OLD target while reaching the new one.
-        let mut replay = state.clone();
-        let out = sched
-            .handle(&mut state, &OnlineEvent::DemandDelta { service: 0, rate: 200.0 })
-            .unwrap();
+        // Grow: trial-run the event on a scratch overlay (no clone),
+        // roll it back, then replay the captured actions on the real
+        // state — capacity must never dip below the OLD target while
+        // reaching the new one. (Every handle mutation goes through
+        // `Executor::apply`, so the action list reproduces it exactly.)
+        let out = {
+            let mut scratch = ScratchState::new(&mut state);
+            let out = sched
+                .handle(
+                    &mut scratch,
+                    &OnlineEvent::DemandDelta { service: 0, rate: 200.0 },
+                )
+                .unwrap();
+            scratch.rollback();
+            out
+        };
         assert!(out.escalate.is_none(), "{:?}", out.escalate);
-        assert!(capacity_of(&state, 0) >= 200.0);
         let mut min_cap = before;
         for a in &out.actions {
-            Executor::apply(&mut replay, a).unwrap();
-            min_cap = min_cap.min(capacity_of(&replay, 0));
+            Executor::apply(&mut state, a).unwrap();
+            min_cap = min_cap.min(capacity_of(&state, 0));
         }
         assert!(min_cap >= 60.0 - 1e-9, "capacity dipped to {min_cap}");
+        assert!(capacity_of(&state, 0) >= 200.0);
 
         // Shrink back: never dips below the NEW (lower) target.
-        let mut replay = state.clone();
-        let out = sched
-            .handle(&mut state, &OnlineEvent::DemandDelta { service: 0, rate: 40.0 })
-            .unwrap();
+        let out = {
+            let mut scratch = ScratchState::new(&mut state);
+            let out = sched
+                .handle(
+                    &mut scratch,
+                    &OnlineEvent::DemandDelta { service: 0, rate: 40.0 },
+                )
+                .unwrap();
+            scratch.rollback();
+            out
+        };
         assert!(out.escalate.is_none());
-        let cap = capacity_of(&state, 0);
-        assert!(cap >= 40.0, "shrink went too far: {cap}");
         let mut min_cap = f64::INFINITY;
         for a in &out.actions {
-            Executor::apply(&mut replay, a).unwrap();
-            min_cap = min_cap.min(capacity_of(&replay, 0));
+            Executor::apply(&mut state, a).unwrap();
+            min_cap = min_cap.min(capacity_of(&state, 0));
         }
         assert!(min_cap >= 40.0 - 1e-9, "shrink dipped below new target: {min_cap}");
+        let cap = capacity_of(&state, 0);
+        assert!(cap >= 40.0, "shrink went too far: {cap}");
         check_invariants(&state).unwrap();
     }
 

@@ -90,7 +90,7 @@ impl QualityTracker {
                 lb
             }
         };
-        let used = state.used_gpus().len();
+        let used = state.used_gpu_count();
         let gap = (used as f64 - lb as f64) / lb as f64;
         self.last_gap = Some(gap);
         // One GPU of slack absorbs the rule-free bound's rounding on

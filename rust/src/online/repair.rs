@@ -13,7 +13,7 @@
 //! full pipeline replan is not. If no GPU can be repaired within the
 //! budget, the caller escalates.
 
-use crate::cluster::{Action, ClusterState, Executor};
+use crate::cluster::{Action, ClusterState, Executor, ScratchState};
 use crate::controller::slots::allocate_slot;
 use crate::mig::{DeviceKind, InstanceSize, Partition, Placement};
 
@@ -69,11 +69,11 @@ fn plan_gpu(
 /// pod. `Ok(None)` means no GPU is repairable within `depth` (or the
 /// rest of the fleet cannot host the evicted pods) — escalate.
 ///
-/// Failure contract: when `Ok(None)` is returned after migrations had
-/// already started, those capacity-preserving moves stay applied (and
-/// appended to `actions`) — no pod is ever lost or degraded, but the
-/// layout may differ from the input. Callers treat the state as valid
-/// (simkit discards the scratch clone on escalation anyway).
+/// Failure contract: rejection is rollback-only. The trial migrations
+/// run inside a [`ScratchState`]; if any evictee has nowhere to go, the
+/// journal rolls the state back and `actions` is truncated, so
+/// `Ok(None)` always leaves both exactly as passed in — no clone, no
+/// leftover half-repair.
 pub fn evict_and_repack(
     state: &mut ClusterState,
     kind: DeviceKind,
@@ -81,13 +81,15 @@ pub fn evict_and_repack(
     depth: usize,
     actions: &mut Vec<Action>,
 ) -> anyhow::Result<Option<(usize, Placement)>> {
-    // Rank candidate GPUs: fewest evictions, least migrated
-    // throughput, lowest index.
+    // Rank candidate GPUs: fewest evictions, least migrated throughput,
+    // lowest index. Eviction can free any amount of compute, so every
+    // online non-empty GPU of the kind is a candidate (straight from
+    // the free-capacity index); empty GPUs all yield the same
+    // zero-eviction plan, so the lowest-index one represents them.
+    let mut cands: Vec<usize> = state.gpus_with_free(kind, 0).collect();
+    cands.extend(state.first_empty_gpu(kind));
     let mut best: Option<RepairPlan> = None;
-    for gi in 0..state.num_gpus() {
-        if state.is_offline(gi) || state.kind_of(gi) != kind {
-            continue;
-        }
+    for gi in cands {
         if let Some(plan) = plan_gpu(state, gi, kind, size, depth) {
             let better = match &best {
                 None => true,
@@ -101,32 +103,36 @@ pub fn evict_and_repack(
     }
     let Some(plan) = best else { return Ok(None) };
     let gi = plan.gpu;
+    let actions_base = actions.len();
+    let mut scratch = ScratchState::new(state);
 
     // 1. Migrate every evicted pod to a same-kind slot elsewhere
     //    (create-before-delete inside MigratePod: no capacity dip).
     for &(pl, _) in &plan.evict {
-        let pod = *state.gpu(gi).pods().get(&pl).expect("planned pod is live");
+        let pod = *scratch.gpu(gi).pods().get(&pl).expect("planned pod is live");
         let Ok((dst_gpu, dst)) =
-            allocate_slot(state, kind, pl.size, &[gi], actions)
+            allocate_slot(&mut scratch, kind, pl.size, &[gi], actions)
         else {
-            // The rest of the fleet is full too. Earlier evictees (if
-            // any) already migrated — capacity intact, layout changed
-            // (see the failure contract above) — and the caller
-            // escalates from this still-valid state.
+            // The rest of the fleet is full too: drop the scratch (the
+            // journal undoes any earlier trial migrations) and retract
+            // their actions — the caller escalates from the *input*
+            // state.
+            scratch.rollback();
+            actions.truncate(actions_base);
             return Ok(None);
         };
         let act = Action::MigratePod { src_gpu: gi, src: pl, dst_gpu, dst, pod };
-        Executor::apply(state, &act)?;
+        Executor::apply(&mut scratch, &act)?;
         actions.push(act);
     }
 
     // 2. One repartition: drop every now pod-free placement (evicted
     //    slots + stale free instances) and add the target profile at
     //    its first legal start on the busy-only layout.
-    let free_now = state.gpu(gi).free_instances();
+    let free_now = scratch.gpu(gi).free_instances();
     let busy = Partition::try_new_on(
         kind,
-        state.gpu(gi).pods().keys().copied().collect(),
+        scratch.gpu(gi).pods().keys().copied().collect(),
     )
     .expect("live pods form a legal sub-partition");
     let start = busy
@@ -134,8 +140,9 @@ pub fn evict_and_repack(
         .expect("repair plan guarantees allocatability");
     let new_pl = Placement::new(size, start);
     let act = Action::Repartition { gpu: gi, remove: free_now, add: vec![new_pl] };
-    Executor::apply(state, &act)?;
+    Executor::apply(&mut scratch, &act)?;
     actions.push(act);
+    scratch.commit();
     Ok(Some((gi, new_pl)))
 }
 
@@ -221,11 +228,45 @@ mod tests {
         let mut c = ClusterState::new(1, 1);
         c.repartition(0, &[], &[Placement::new(One, 0)]).unwrap();
         c.create_pod(0, Placement::new(One, 0), pod(0, 5.0)).unwrap();
+        let snapshot = c.clone();
+        let clones_before = crate::cluster::cluster_clone_count();
         let mut actions = Vec::new();
         assert!(evict_and_repack(&mut c, DeviceKind::A100, Four, 3, &mut actions)
             .unwrap()
             .is_none());
-        // Nothing was lost.
+        // Rejection is rollback-only: state byte-identical, no actions
+        // emitted, and no ClusterState clone along the way.
+        assert_eq!(c, snapshot);
+        assert!(actions.is_empty());
+        assert_eq!(crate::cluster::cluster_clone_count(), clones_before);
         assert_eq!(c.service_throughputs(1), vec![5.0]);
+    }
+
+    #[test]
+    fn rejection_mid_migration_rolls_back_partial_moves() {
+        // GPU 0 needs two evictions for a 4/7; the fleet can absorb the
+        // first evictee but not the second, so the repair must reject
+        // AND unwind the first trial migration.
+        let mut c = ClusterState::new(1, 2);
+        for (st, thr) in [(0u8, 5.0), (1, 6.0)] {
+            let pl = Placement::new(One, st);
+            c.repartition(0, &[], &[pl]).unwrap();
+            c.create_pod(0, pl, pod(0, thr)).unwrap();
+        }
+        // GPU 1: exactly one free 1/7 slot, everything else pinned.
+        for (sz, st) in [(Four, 0u8), (One, 4), (One, 5)] {
+            let pl = Placement::new(sz, st);
+            c.repartition(1, &[], &[pl]).unwrap();
+            c.create_pod(1, pl, pod(1, 50.0)).unwrap();
+        }
+        c.repartition(1, &[], &[Placement::new(One, 6)]).unwrap();
+        let snapshot = c.clone();
+        let mut actions = Vec::new();
+        assert!(evict_and_repack(&mut c, DeviceKind::A100, Four, 2, &mut actions)
+            .unwrap()
+            .is_none());
+        assert_eq!(c, snapshot, "partial trial migration must roll back");
+        assert!(actions.is_empty());
+        c.debug_index_consistent().unwrap();
     }
 }

@@ -315,6 +315,30 @@ impl PooledConfig {
     }
 }
 
+/// Dominance pruning policy for [`ConfigPool::enumerate_pruned`].
+///
+/// `Dominated` drops a config when an **earlier-enumerated** config of
+/// the same (kind, size multiset, service set) has pointwise
+/// greater-or-equal utility. Within such a group the slice budget is
+/// identical, so the kept dominator scores `>=` the dropped config
+/// against *every* remaining-requirement vector, and — being earlier —
+/// wins every score tie the dropped config could have won (both
+/// [`ConfigPool::best_by_score`] and the incremental score engine break
+/// ties toward the lower id). The greedy/fast selection sequence over
+/// the pruned pool is therefore provably identical to the unpruned one.
+/// Randomized GA rounds and MCTS top-k tails may still observe the
+/// missing ids, so `Off` (the default) remains the bit-identity escape
+/// hatch for the full pipeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PoolPruning {
+    /// Keep every enumerated config (bit-identity escape hatch).
+    #[default]
+    Off,
+    /// Drop pointwise-dominated configs (same kind, size multiset, and
+    /// service set).
+    Dominated,
+}
+
 /// The enumerated configuration pool (§5.1 "the utility space for all
 /// possible GPU configurations is enormous"; the fast algorithm works
 /// over configs mixing at most two services, App. A.1).
@@ -331,10 +355,20 @@ impl ConfigPool {
     /// result — configs, ids, and order — is exactly the seed
     /// single-kind enumeration.
     pub fn enumerate(ctx: &ProblemCtx) -> ConfigPool {
+        Self::enumerate_pruned(ctx, PoolPruning::Off)
+    }
+
+    /// [`ConfigPool::enumerate`] with a [`PoolPruning`] policy. Pruning
+    /// preserves the per-kind id-contiguous segment structure (it only
+    /// deletes entries and compacts ids).
+    pub fn enumerate_pruned(ctx: &ProblemCtx, pruning: PoolPruning) -> ConfigPool {
         let n = ctx.workload.len();
         let mut configs: Vec<PooledConfig> = Vec::new();
         for &kind in ctx.kinds() {
             Self::enumerate_kind(ctx, kind, &mut configs);
+        }
+        if pruning == PoolPruning::Dominated {
+            configs = prune_dominated(configs);
         }
         let mut by_service = vec![Vec::new(); n];
         for (i, c) in configs.iter().enumerate() {
@@ -445,11 +479,18 @@ impl ConfigPool {
     }
 
     /// The global top-`k` configs by clipped heuristic score against
-    /// `remaining` (positive scores only, ties kept in index order by
-    /// the stable sort). Shared by [`super::engine::ScoreEngine`]'s
-    /// rollout-pool query and the branch-and-bound's candidate cut so
-    /// both rank identically.
+    /// `remaining` (positive scores only, ties in index order). Shared
+    /// by [`super::engine::ScoreEngine`]'s rollout-pool query and the
+    /// branch-and-bound's candidate cut so both rank identically.
+    ///
+    /// Selection is `select_nth_unstable_by` + a sort of just the top
+    /// `k` — O(pool + k log k) instead of a full O(pool log pool) sort.
+    /// The comparator (score descending, id ascending) is total, so the
+    /// output is exactly the old stable full sort's prefix.
     pub fn top_by_score(&self, remaining: &[f64], k: usize) -> Vec<u32> {
+        if k == 0 {
+            return Vec::new();
+        }
         let mut scored: Vec<(f64, u32)> = self
             .configs
             .iter()
@@ -459,8 +500,14 @@ impl ConfigPool {
                 (s > 0.0).then_some((s, i as u32))
             })
             .collect();
-        scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
-        scored.truncate(k);
+        let cmp = |a: &(f64, u32), b: &(f64, u32)| {
+            b.0.total_cmp(&a.0).then_with(|| a.1.cmp(&b.1))
+        };
+        if scored.len() > k {
+            scored.select_nth_unstable_by(k - 1, cmp);
+            scored.truncate(k);
+        }
+        scored.sort_unstable_by(cmp);
         scored.into_iter().map(|(_, i)| i).collect()
     }
 
@@ -508,6 +555,46 @@ fn push_config(
         }
     }
     configs.push(PooledConfig { kind, pairs, sparse_util: sparse });
+}
+
+/// Keep only non-dominated configs, preserving enumeration order (ids
+/// compact). Dominance is checked within (kind, size multiset, service
+/// set) groups only: a dominator must cover every service of the
+/// dominated config with `>=` utility, and with at most two services
+/// per config and fixed per-(kind, service, size) instance utilities,
+/// candidates outside the group cannot dominate. Groups are the splits
+/// of one size multiset across one service pair — a handful of entries
+/// each — so this pass is O(pool), not O(pool²).
+fn prune_dominated(configs: Vec<PooledConfig>) -> Vec<PooledConfig> {
+    type GroupKey = (DeviceKind, Vec<InstanceSize>, Vec<ServiceId>);
+    let mut kept: Vec<PooledConfig> = Vec::with_capacity(configs.len());
+    // Group members as indices into `kept`.
+    let mut groups: std::collections::BTreeMap<GroupKey, Vec<usize>> =
+        std::collections::BTreeMap::new();
+    for c in configs {
+        // `pairs` is canonically sorted, so the size multiset is
+        // directly comparable as a Vec.
+        let sizes: Vec<InstanceSize> = c.pairs.iter().map(|&(s, _)| s).collect();
+        let mut services: Vec<ServiceId> =
+            c.sparse_util.iter().map(|&(s, _)| s).collect();
+        services.sort_unstable();
+        let members = groups.entry((c.kind, sizes, services)).or_default();
+        let dominated = members.iter().any(|&ki| dominates(&kept[ki], &c));
+        if !dominated {
+            members.push(kept.len());
+            kept.push(c);
+        }
+    }
+    kept
+}
+
+/// Does `b`'s sparse utility cover `a`'s pointwise (`>=` on every
+/// service `a` touches — equality counts, so exact duplicates collapse
+/// onto their first occurrence)?
+fn dominates(b: &PooledConfig, a: &PooledConfig) -> bool {
+    a.sparse_util
+        .iter()
+        .all(|&(sid, ua)| b.sparse_util.iter().any(|&(sb, ub)| sb == sid && ub >= ua))
 }
 
 /// Endgame packing (App. A.1 lines 18–22): when services are almost
@@ -751,6 +838,87 @@ mod tests {
         assert_eq!(pool.kind_of(last as u32), DeviceKind::A30);
         let _ = cfg.partition();
         assert!(cfg.label().starts_with("a30|"), "{}", cfg.label());
+    }
+
+    /// SATELLITE: the partial-sort `top_by_score` must reproduce the
+    /// old full-stable-sort implementation exactly — every k, every
+    /// remaining vector.
+    #[test]
+    fn top_by_score_matches_full_sort_reference() {
+        let (bank, w) = setup();
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let pool = ConfigPool::enumerate(&ctx);
+        // The pre-optimization reference: full stable sort by score
+        // descending, then truncate.
+        let reference = |remaining: &[f64], k: usize| -> Vec<u32> {
+            let mut scored: Vec<(f64, u32)> = pool
+                .configs
+                .iter()
+                .enumerate()
+                .filter_map(|(i, c)| {
+                    let s = c.score_clipped(remaining);
+                    (s > 0.0).then_some((s, i as u32))
+                })
+                .collect();
+            scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+            scored.truncate(k);
+            scored.into_iter().map(|(_, i)| i).collect()
+        };
+        let mut rng = crate::util::rng::Rng::new(0xC0FFEE);
+        for case in 0..50 {
+            let remaining: Vec<f64> = (0..w.len())
+                .map(|_| if rng.below(4) == 0 { 0.0 } else { rng.f64() * 3.0 })
+                .collect();
+            for k in [0, 1, 3, 17, pool.len(), pool.len() + 10] {
+                assert_eq!(
+                    pool.top_by_score(&remaining, k),
+                    reference(&remaining, k),
+                    "case {case} k={k} remaining={remaining:?}"
+                );
+            }
+        }
+    }
+
+    /// TENTPOLE: dominance pruning shrinks the pool, keeps ids
+    /// compacted in enumeration order, and never changes the greedy
+    /// winner: `best_by_score` over the pruned pool materializes the
+    /// same config the unpruned pool picks, for any remaining vector.
+    #[test]
+    fn pruned_pool_drops_only_dominated_configs() {
+        let (bank, w) = setup();
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let full = ConfigPool::enumerate(&ctx);
+        let pruned = ConfigPool::enumerate_pruned(&ctx, PoolPruning::Dominated);
+        assert!(pruned.len() < full.len(), "{} !< {}", pruned.len(), full.len());
+        // Kept configs are a subsequence of the full enumeration.
+        let mut fi = 0;
+        for c in &pruned.configs {
+            while full.configs[fi].pairs != c.pairs || full.configs[fi].kind != c.kind {
+                fi += 1;
+            }
+            assert_eq!(full.configs[fi].sparse_util, c.sparse_util);
+            fi += 1;
+        }
+        // Greedy winner identical (bit-identical utility) for a spread
+        // of remaining vectors.
+        let mut rng = crate::util::rng::Rng::new(0xB0B);
+        for _ in 0..100 {
+            let remaining: Vec<f64> =
+                (0..w.len()).map(|_| rng.f64() * 2.0).collect();
+            match (full.best_by_score(&remaining), pruned.best_by_score(&remaining)) {
+                (None, None) => {}
+                (Some(bf), Some(bp)) => {
+                    assert_eq!(
+                        full.configs[bf].pairs, pruned.configs[bp].pairs,
+                        "winner drifted for {remaining:?}"
+                    );
+                    assert_eq!(
+                        full.configs[bf].sparse_util, pruned.configs[bp].sparse_util
+                    );
+                }
+                (f, p) => panic!("winner presence drifted: {f:?} vs {p:?}"),
+            }
+        }
     }
 
     #[test]

@@ -46,7 +46,7 @@ pub mod two_phase;
 pub use comp_rates::CompletionRates;
 pub use engine::ScoreEngine;
 pub use ga::{GaConfig, GeneticAlgorithm};
-pub use gpu_config::{ConfigPool, GpuConfig, InstanceAssign, ProblemCtx};
+pub use gpu_config::{ConfigPool, GpuConfig, InstanceAssign, PoolPruning, ProblemCtx};
 pub use greedy::Greedy;
 pub use interned::{ConfigId, CustomConfig, Gene, InternedDeployment};
 pub use lower_bound::lower_bound_gpus;

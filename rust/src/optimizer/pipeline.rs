@@ -15,7 +15,7 @@ use std::time::{Duration, Instant};
 use super::comp_rates::CompletionRates;
 use super::engine::ScoreEngine;
 use super::ga::{GaConfig, GaHistory, GeneticAlgorithm};
-use super::gpu_config::{ConfigPool, GpuConfig, ProblemCtx};
+use super::gpu_config::{ConfigPool, GpuConfig, PoolPruning, ProblemCtx};
 use super::greedy::{run_with_engine, run_with_engine_tracked};
 use super::interned::InternedDeployment;
 use super::mcts::MctsConfig;
@@ -44,6 +44,10 @@ pub struct PipelineBudget {
     /// `time_budget` is set, in which case faster (more-parallel) runs
     /// fit more GA rounds before the wall-clock cutoff.
     pub parallelism: Option<usize>,
+    /// Config-pool pruning applied at enumeration time. `Off` (the
+    /// default) keeps the historical pool and is the bit-identity
+    /// escape hatch; see [`PoolPruning`] for what `Dominated` drops.
+    pub pruning: PoolPruning,
 }
 
 impl Default for PipelineBudget {
@@ -55,6 +59,7 @@ impl Default for PipelineBudget {
             time_budget: None,
             seed: 0x6A,
             parallelism: None,
+            pruning: PoolPruning::default(),
         }
     }
 }
@@ -68,6 +73,12 @@ impl PipelineBudget {
     /// Pin the phase-2 worker count (builder-style).
     pub fn with_parallelism(mut self, parallelism: Option<usize>) -> PipelineBudget {
         self.parallelism = parallelism;
+        self
+    }
+
+    /// Select the pool-pruning mode (builder-style).
+    pub fn with_pruning(mut self, pruning: PoolPruning) -> PipelineBudget {
+        self.pruning = pruning;
         self
     }
 
@@ -118,7 +129,8 @@ impl<'a> OptimizerPipeline<'a> {
         ctx: &'a ProblemCtx<'a>,
         budget: PipelineBudget,
     ) -> OptimizerPipeline<'a> {
-        OptimizerPipeline { ctx, pool: ConfigPool::enumerate(ctx), budget }
+        let pool = ConfigPool::enumerate_pruned(ctx, budget.pruning);
+        OptimizerPipeline { ctx, pool, budget }
     }
 
     pub fn ctx(&self) -> &'a ProblemCtx<'a> {

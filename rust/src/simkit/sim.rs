@@ -19,7 +19,7 @@
 
 use std::collections::BTreeMap;
 
-use crate::cluster::{Action, ActionKind, ClusterState, Executor};
+use crate::cluster::{Action, ActionKind, ClusterState, Executor, ScratchState};
 use crate::controller::Controller;
 use crate::mig::{DeviceKind, FleetSpec};
 use crate::online::{self, OnlineConfig, OnlineScheduler, ServiceView};
@@ -230,7 +230,7 @@ impl<'a> Simulation<'a> {
                     total[i] += demand[i] * dt;
                     unmet[i] += (demand[i] - capacity[i]).max(0.0) * dt;
                 }
-                gpu_seconds += cluster.used_gpus().len() as f64 * dt;
+                gpu_seconds += cluster.used_gpu_count() as f64 * dt;
             }
             prev_t = t;
 
@@ -258,8 +258,9 @@ impl<'a> Simulation<'a> {
                     }
                     // --- Incremental policy: the tick's demand drift
                     // becomes workload events absorbed with local moves
-                    // on a scratch clone; only an escalation runs the
-                    // full pipeline.
+                    // on an undo-log scratch overlay (rolled back in
+                    // O(touched GPUs) — no fleet clone); only an
+                    // escalation runs the full pipeline.
                     if let Some(sched) = online_sched.as_mut() {
                         let views: Vec<ServiceView<'_>> = self
                             .trace
@@ -278,24 +279,31 @@ impl<'a> Simulation<'a> {
                         if events.is_empty() {
                             continue;
                         }
-                        let mut scratch = cluster.clone();
                         let mut actions: Vec<Action> = Vec::new();
                         let mut escalation: Option<String> = None;
                         let mut handled = 0usize;
-                        for ev in &events {
-                            let out = sched.handle(&mut scratch, ev)?;
-                            if let Some(why) = out.escalate {
-                                escalation = Some(why);
-                                break;
+                        {
+                            // Trial-run the events on a scratch overlay;
+                            // the captured actions are replayed on the
+                            // live cluster by the executor at their
+                            // completion instants, so the overlay is
+                            // always rolled back when this scope ends.
+                            let mut scratch = ScratchState::new(&mut cluster);
+                            for ev in &events {
+                                let out = sched.handle(&mut scratch, ev)?;
+                                if let Some(why) = out.escalate {
+                                    escalation = Some(why);
+                                    break;
+                                }
+                                actions.extend(out.actions);
+                                handled += 1;
                             }
-                            actions.extend(out.actions);
-                            handled += 1;
                         }
                         if let Some(why) = escalation {
-                            // Scratch (and its partial actions) are
-                            // discarded; replan from the live state.
+                            // The scratch (and its partial actions) was
+                            // rolled back; replan from the live state.
                             // The pre-escalation events' local moves
-                            // die with the scratch, so they were NOT
+                            // died with the scratch, so they were NOT
                             // absorbed — retract their count.
                             sched.quality.incremental =
                                 sched.quality.incremental.saturating_sub(handled);

@@ -1,0 +1,298 @@
+//! Property tests for the scale-path machinery (tentpole):
+//!
+//! * the [`ScratchState`] undo journal: any event sequence handled on a
+//!   scratch and then rolled back must restore the `ClusterState`
+//!   **exactly** (field-for-field, indices included) without a single
+//!   deep clone;
+//! * nested checkpoints: `rollback_to` peels precisely the suffix after
+//!   the checkpoint, leaving earlier scratch work intact;
+//! * the bounded candidate searches ([`pick_slot`], [`allocate_slot`])
+//!   driven by the per-kind free-capacity index must agree with the
+//!   original full-fleet scans on every reachable state (test fleets
+//!   fit the candidate caps, so equivalence is exact).
+//!
+//! Built on the in-tree `util::prop` harness, same idioms as
+//! `prop_online.rs`.
+
+use mig_serving::cluster::{cluster_clone_count, ClusterState, ScratchState};
+use mig_serving::controller::probe_slot;
+use mig_serving::mig::{DeviceKind, FleetSpec, InstanceSize, Partition, Placement};
+use mig_serving::online::frag::fragmentation_after;
+use mig_serving::online::place::pick_slot;
+use mig_serving::online::{OnlineConfig, OnlineEvent, OnlineScheduler};
+use mig_serving::perf::ProfileBank;
+use mig_serving::util::prop;
+
+const MODELS: [&str; 3] = ["resnet50", "bert-base-uncased", "densenet121"];
+const LATENCY_MS: f64 = 300.0;
+
+fn mixed_cluster() -> ClusterState {
+    let fleet = FleetSpec::parse("a100=3,a30=2").unwrap();
+    ClusterState::from_fleet(&fleet, 3)
+}
+
+/// Random event generator — same shape as `prop_online.rs`: mostly
+/// sensible events with bogus ones mixed in.
+fn gen_events(g: &mut prop::Gen) -> Vec<OnlineEvent> {
+    let n_events = g.size(1, 20);
+    let num_gpus = mixed_cluster().num_gpus();
+    (0..n_events)
+        .map(|_| {
+            let sid = g.rng.below(MODELS.len());
+            let rate = 20.0 + g.rng.below(180) as f64;
+            match g.rng.below(6) {
+                0 | 1 => OnlineEvent::Onboard {
+                    service: sid,
+                    model: MODELS[sid].to_string(),
+                    latency_slo_ms: LATENCY_MS,
+                    rate,
+                },
+                2 => OnlineEvent::DemandDelta { service: sid, rate },
+                3 => OnlineEvent::Retire { service: sid },
+                4 => OnlineEvent::GpuFail { gpu: g.rng.below(num_gpus) },
+                _ => OnlineEvent::GpuRepair { gpu: g.rng.below(num_gpus) },
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn scratch_rollback_restores_state_exactly() {
+    let bank = ProfileBank::synthetic();
+    prop::check(
+        "scratch-rollback-exact",
+        80,
+        0x5CA1_E001,
+        gen_events,
+        |events| {
+            let mut sched = OnlineScheduler::new(&bank, OnlineConfig::default());
+            let mut state = mixed_cluster();
+            // Pre-populate so rollbacks cross non-trivial state.
+            sched
+                .handle(
+                    &mut state,
+                    &OnlineEvent::Onboard {
+                        service: 0,
+                        model: MODELS[0].to_string(),
+                        latency_slo_ms: LATENCY_MS,
+                        rate: 60.0,
+                    },
+                )
+                .map_err(|e| format!("seed onboard: {e:#}"))?;
+            let snapshot = state.clone();
+            let clones_before = cluster_clone_count();
+            {
+                let mut scratch = ScratchState::new(&mut state);
+                for (i, ev) in events.iter().enumerate() {
+                    sched
+                        .handle(&mut scratch, ev)
+                        .map_err(|e| format!("event {i} ({ev:?}): {e:#}"))?;
+                }
+            } // drop => rollback
+            if cluster_clone_count() != clones_before {
+                return Err("scratch event handling deep-cloned the cluster".into());
+            }
+            if state != snapshot {
+                return Err("rollback did not restore the state exactly".into());
+            }
+            state
+                .debug_index_consistent()
+                .map_err(|e| format!("index drift after rollback: {e}"))?;
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn nested_checkpoints_roll_back_exact_suffixes() {
+    let bank = ProfileBank::synthetic();
+    prop::check(
+        "scratch-checkpoint-suffix",
+        60,
+        0x5CA1_E002,
+        |g| {
+            let a = gen_events(g);
+            let b = gen_events(g);
+            let c = gen_events(g);
+            (a, b, c)
+        },
+        |(batch_a, batch_b, batch_c)| {
+            let mut sched = OnlineScheduler::new(&bank, OnlineConfig::default());
+            let mut state = mixed_cluster();
+            let base = state.clone();
+            let mut scratch = ScratchState::new(&mut state);
+            for ev in batch_a {
+                sched.handle(&mut scratch, ev).map_err(|e| format!("{e:#}"))?;
+            }
+            let mid = ClusterState::clone(&scratch);
+            let cp = scratch.checkpoint();
+            for ev in batch_b {
+                sched.handle(&mut scratch, ev).map_err(|e| format!("{e:#}"))?;
+            }
+            scratch.rollback_to(cp);
+            if *scratch != mid {
+                return Err("rollback_to(cp) did not restore the checkpoint".into());
+            }
+            scratch
+                .debug_index_consistent()
+                .map_err(|e| format!("index drift at checkpoint: {e}"))?;
+            // Work after a partial rollback still composes and the full
+            // rollback still lands on the original state.
+            for ev in batch_c {
+                sched.handle(&mut scratch, ev).map_err(|e| format!("{e:#}"))?;
+            }
+            drop(scratch);
+            if state != base {
+                return Err("full rollback after rollback_to diverged".into());
+            }
+            state
+                .debug_index_consistent()
+                .map_err(|e| format!("index drift after full rollback: {e}"))?;
+            Ok(())
+        },
+    );
+}
+
+/// The original full-fleet scan [`pick_slot`] replaced: every online
+/// GPU of the kind, every pod-free instance + legal extension, ranked
+/// by (fragmentation, needs-repartition, emptiness, load, index).
+fn reference_pick_slot(
+    state: &ClusterState,
+    kind: DeviceKind,
+    size: InstanceSize,
+) -> Option<(usize, Placement, bool)> {
+    let mut best: Option<(usize, Placement, bool)> = None;
+    let mut best_key: Option<(f64, usize, usize, usize, usize)> = None;
+    for gi in 0..state.num_gpus() {
+        if state.is_offline(gi) || state.kind_of(gi) != kind {
+            continue;
+        }
+        let g = state.gpu(gi);
+        let load = g.partition().len();
+        let mut slots: Vec<(Placement, bool)> = g
+            .free_instances()
+            .into_iter()
+            .filter(|p| p.size == size)
+            .map(|p| (p, false))
+            .collect();
+        let current = g.partition().placements().to_vec();
+        for &st in kind.starts_of(size) {
+            let cand = Placement::new(size, st);
+            let mut extended = current.clone();
+            extended.push(cand);
+            if Partition::try_new_on(kind, extended).is_ok() {
+                slots.push((cand, true));
+            }
+        }
+        for (pl, needs_rep) in slots {
+            let Some(frag) = fragmentation_after(kind, g, pl) else {
+                continue;
+            };
+            let key =
+                (frag, usize::from(needs_rep), usize::from(g.is_empty()), load, gi);
+            let better = match &best_key {
+                None => true,
+                Some(bk) => {
+                    key.0.total_cmp(&bk.0).then_with(|| {
+                        (key.1, key.2, key.3, key.4).cmp(&(bk.1, bk.2, bk.3, bk.4))
+                    }) == std::cmp::Ordering::Less
+                }
+            };
+            if better {
+                best_key = Some(key);
+                best = Some((gi, pl, needs_rep));
+            }
+        }
+    }
+    best
+}
+
+/// The original full-fleet ranking [`allocate_slot`] replaced:
+/// first-fit probe per GPU, min (needs-repartition, emptiness, load,
+/// index).
+fn reference_alloc_choice(
+    state: &ClusterState,
+    kind: DeviceKind,
+    size: InstanceSize,
+    forbidden: &[usize],
+) -> Option<(usize, Placement, bool)> {
+    let mut choice: Option<(usize, Placement, bool)> = None;
+    let mut best_key = (usize::MAX, usize::MAX, usize::MAX, usize::MAX);
+    for gi in 0..state.num_gpus() {
+        if state.is_offline(gi)
+            || state.kind_of(gi) != kind
+            || forbidden.contains(&gi)
+        {
+            continue;
+        }
+        let g = state.gpu(gi);
+        if let Some((pl, needs_rep)) = probe_slot(g, kind, size) {
+            let empty = if needs_rep { usize::from(g.is_empty()) } else { 0 };
+            let key = (usize::from(needs_rep), empty, g.partition().len(), gi);
+            if key < best_key {
+                best_key = key;
+                choice = Some((gi, pl, needs_rep));
+            }
+        }
+    }
+    choice
+}
+
+#[test]
+fn index_backed_searches_match_full_scans() {
+    let bank = ProfileBank::synthetic();
+    prop::check(
+        "index-search-equivalence",
+        60,
+        0x5CA1_E003,
+        |g| {
+            let events = gen_events(g);
+            let forbidden_bits = g.rng.below(1 << mixed_cluster().num_gpus());
+            (events, forbidden_bits)
+        },
+        |(events, forbidden_bits)| {
+            let mut sched = OnlineScheduler::new(&bank, OnlineConfig::default());
+            let mut state = mixed_cluster();
+            for ev in events {
+                sched.handle(&mut state, ev).map_err(|e| format!("{e:#}"))?;
+            }
+            let forbidden: Vec<usize> = (0..state.num_gpus())
+                .filter(|gi| forbidden_bits & (1 << gi) != 0)
+                .collect();
+            for kind in [DeviceKind::A100, DeviceKind::A30] {
+                for &size in kind.sizes() {
+                    let got = pick_slot(&state, kind, size);
+                    let want = reference_pick_slot(&state, kind, size);
+                    if got != want {
+                        return Err(format!(
+                            "pick_slot({kind:?}, {size:?}): {got:?} != reference {want:?}"
+                        ));
+                    }
+                    let want =
+                        reference_alloc_choice(&state, kind, size, &forbidden);
+                    let mut actions = Vec::new();
+                    let got = mig_serving::controller::allocate_slot(
+                        &mut state,
+                        kind,
+                        size,
+                        &forbidden,
+                        &mut actions,
+                    )
+                    .ok();
+                    let want_pair = want.map(|(gpu, pl, _)| (gpu, pl));
+                    if got != want_pair {
+                        return Err(format!(
+                            "allocate_slot({kind:?}, {size:?}): {got:?} != reference {want_pair:?}"
+                        ));
+                    }
+                    // A successful allocate_slot mutates (repartition);
+                    // keep the indices honest before the next probe.
+                    state
+                        .debug_index_consistent()
+                        .map_err(|e| format!("index drift after alloc: {e}"))?;
+                }
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,145 @@
+//! Differential tests for the dominance-pruned config pool (tentpole)
+//! and the no-clone incremental path.
+//!
+//! The pruning rule ([`PoolPruning::Dominated`]) is designed to be
+//! *greedy-exact*: a config is dropped only when an earlier-enumerated
+//! config of the same (kind, size-multiset, service-set) pointwise
+//! dominates its utility vector, so the fast algorithm's pick sequence
+//! — and therefore its deployment — is bit-identical on both pools.
+//! These tests enforce that on randomized small instances (homogeneous
+//! and heterogeneous fleets, pinned parallelism 1 and 8) and check the
+//! GA still produces valid deployments from a pruned pool.
+
+use mig_serving::cluster::{cluster_clone_count, ClusterState};
+use mig_serving::mig::DeviceKind;
+use mig_serving::online::{OnlineConfig, OnlineEvent, OnlineScheduler};
+use mig_serving::optimizer::{
+    lower_bound_gpus, OptimizerPipeline, PipelineBudget, PoolPruning, ProblemCtx,
+};
+use mig_serving::perf::ProfileBank;
+use mig_serving::spec::{Slo, Workload};
+use mig_serving::util::prop;
+
+#[test]
+fn pruned_fast_solve_is_bit_identical_on_random_instances() {
+    let bank = ProfileBank::synthetic();
+    let models = bank.simulation_models();
+    prop::check(
+        "pruned-pool-bit-identity",
+        40,
+        0x00D0_0017,
+        |g| {
+            let n = g.size(2, 10);
+            let services: Vec<(usize, f64, f64)> = (0..n)
+                .map(|_| {
+                    let model = g.rng.below(models.len());
+                    let thr = 50.0 + g.rng.below(900) as f64;
+                    let latency = 200.0 + 100.0 * g.rng.below(2) as f64;
+                    (model, thr, latency)
+                })
+                .collect();
+            let hetero = g.rng.below(2) == 1;
+            (services, hetero)
+        },
+        |(services, hetero)| {
+            let specs: Vec<(String, Slo)> = services
+                .iter()
+                .map(|&(m, thr, lat)| (models[m].clone(), Slo::new(thr, lat)))
+                .collect();
+            let w = Workload::new("equivalence", specs);
+            let kinds: &[DeviceKind] = if *hetero {
+                &[DeviceKind::A100, DeviceKind::A30]
+            } else {
+                &[DeviceKind::A100]
+            };
+            let Ok(ctx) = ProblemCtx::new_with_kinds(&bank, &w, kinds) else {
+                return Ok(()); // infeasible draw (e.g. SLO too tight)
+            };
+            for par in [1usize, 8] {
+                let base = PipelineBudget::fast_only().with_parallelism(Some(par));
+                let p_full = OptimizerPipeline::with_budget(&ctx, base.clone());
+                let p_pruned = OptimizerPipeline::with_budget(
+                    &ctx,
+                    base.with_pruning(PoolPruning::Dominated),
+                );
+                if p_pruned.pool().len() > p_full.pool().len() {
+                    return Err("pruned pool larger than full pool".into());
+                }
+                let d_full =
+                    p_full.plan_deployment().map_err(|e| format!("{e:#}"))?;
+                let d_pruned =
+                    p_pruned.plan_deployment().map_err(|e| format!("{e:#}"))?;
+                let l_full: Vec<String> =
+                    d_full.gpus.iter().map(|c| c.label()).collect();
+                let l_pruned: Vec<String> =
+                    d_pruned.gpus.iter().map(|c| c.label()).collect();
+                if l_full != l_pruned {
+                    return Err(format!(
+                        "parallelism {par}: pruned deployment diverged:\n\
+                         full:   {l_full:?}\npruned: {l_pruned:?}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn ga_on_pruned_pool_stays_valid() {
+    let bank = ProfileBank::synthetic();
+    let models = bank.simulation_models();
+    let services: Vec<(String, Slo)> = (0..5)
+        .map(|i| (models[i % models.len()].clone(), Slo::new(600.0, 150.0)))
+        .collect();
+    let w = Workload::new("ga-pruned", services);
+    let ctx = ProblemCtx::new(&bank, &w).unwrap();
+    let budget = PipelineBudget {
+        ga_rounds: 2,
+        ga_patience: 2,
+        mcts_iterations: 15,
+        pruning: PoolPruning::Dominated,
+        ..Default::default()
+    };
+    let pipeline = OptimizerPipeline::with_budget(&ctx, budget);
+    let out = pipeline.optimize().unwrap();
+    assert!(out.fast.is_valid(&ctx));
+    assert!(out.best.is_valid(&ctx));
+    assert!(out.best.num_gpus() <= out.fast.num_gpus());
+    assert!(out.best.num_gpus() >= lower_bound_gpus(&ctx));
+}
+
+#[test]
+fn incremental_rejection_paths_never_clone_the_cluster() {
+    let bank = ProfileBank::synthetic();
+    let mut sched = OnlineScheduler::new(&bank, OnlineConfig::default());
+    let mut state = ClusterState::new(1, 1);
+    let clones_before = cluster_clone_count();
+    let out = sched
+        .handle(
+            &mut state,
+            &OnlineEvent::Onboard {
+                service: 0,
+                model: "resnet50".into(),
+                latency_slo_ms: 300.0,
+                rate: 40.0,
+            },
+        )
+        .unwrap();
+    assert!(out.escalate.is_none(), "one A100 hosts 40 req/s: {:?}", out.escalate);
+    // Demand no single GPU can serve: placement fails, bounded repair
+    // finds nowhere to move anything, and the event escalates — all of
+    // it journal-backed, none of it cloning.
+    let out = sched
+        .handle(
+            &mut state,
+            &OnlineEvent::DemandDelta { service: 0, rate: 100_000.0 },
+        )
+        .unwrap();
+    assert!(out.escalate.is_some(), "impossible demand must escalate");
+    assert_eq!(
+        cluster_clone_count(),
+        clones_before,
+        "the incremental event path deep-cloned the cluster"
+    );
+}
