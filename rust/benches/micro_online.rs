@@ -20,7 +20,9 @@ use mig_serving::controller::Controller;
 use mig_serving::online::{
     check_invariants, OnlineConfig, OnlineEvent, OnlineScheduler, ServiceView,
 };
-use mig_serving::optimizer::{OptimizerPipeline, PipelineBudget, ProblemCtx};
+use mig_serving::optimizer::{
+    ctx_rebuild_count, OptimizerPipeline, PipelineBudget, ProblemCtx,
+};
 use mig_serving::perf::ProfileBank;
 use mig_serving::spec::Slo;
 use mig_serving::util::json::Value;
@@ -54,7 +56,7 @@ fn main() {
         let gpus = (dep.num_gpus() * 2).max(8);
         let mut cluster = ClusterState::new(gpus.div_ceil(8), 8);
         let controller = Controller::new(n);
-        let (plan, _) = controller.plan(&cluster, &dep).unwrap();
+        let (plan, _) = controller.plan(&mut cluster, &dep).unwrap();
         for a in &plan.actions {
             Executor::apply(&mut cluster, a).unwrap();
         }
@@ -101,7 +103,7 @@ fn main() {
             let p2 = OptimizerPipeline::with_budget(&ctx_after, PipelineBudget::fast_only());
             let dep2 = p2.plan_deployment().unwrap();
             assert!(dep2.is_valid(&ctx_after), "full replan must satisfy all SLOs");
-            let (plan2, _) = controller.plan(&cluster, &dep2).unwrap();
+            let (plan2, _) = controller.plan(&mut cluster, &dep2).unwrap();
             println!(
                 "    full replan: {} GPUs, {} transition actions, valid",
                 dep2.num_gpus(),
@@ -113,17 +115,27 @@ fn main() {
         //      part of the realistic cost) vs per-event full replan
         //      (pool enumeration + solve + §6 plan).
         let bc = BenchCtx::new(usize::from(!args.quick), if args.quick { 1 } else { 3 });
+        // The validity gate above warmed the quality tracker's bound
+        // cache; steady-state DemandDelta events are rate-only, so the
+        // whole timing loop must run without a single ProblemCtx
+        // rebuild (the memo is keyed on the service *set*).
+        let rebuilds_before = ctx_rebuild_count();
         let inc = bc.time(&format!("incremental event n={n}"), || {
             let mut scratch = cluster.clone();
             sched.handle(&mut scratch, &event).unwrap().actions.len()
         });
+        assert_eq!(
+            ctx_rebuild_count(),
+            rebuilds_before,
+            "steady-state DemandDelta loop rebuilt a ProblemCtx"
+        );
         println!("{}", inc.report());
         let full = bc.time(&format!("full replan       n={n}"), || {
-            let scratch = cluster.clone();
+            let mut scratch = cluster.clone();
             let ctx_after = ProblemCtx::new(&bank, &w_after).unwrap();
             let p2 = OptimizerPipeline::with_budget(&ctx_after, PipelineBudget::fast_only());
             let dep2 = p2.plan_deployment().unwrap();
-            let (plan2, _) = controller.plan(&scratch, &dep2).unwrap();
+            let (plan2, _) = controller.plan(&mut scratch, &dep2).unwrap();
             plan2.actions.len()
         });
         println!("{}", full.report());

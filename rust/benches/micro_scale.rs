@@ -1,6 +1,6 @@
 //! micro_scale: does the online stack survive a 10k-GPU fleet?
 //!
-//! Two sections:
+//! Three sections:
 //!
 //! 1. **Pool enumeration + solve** — full vs dominance-pruned
 //!   ([`PoolPruning::Dominated`]) config pools at bench workload sizes,
@@ -16,9 +16,19 @@
 //!   timed stream: the incremental path is journal-backed, not
 //!   clone-backed, and this bench is the regression tripwire for that.
 //!
+//! 3. **Solve scale** — the full replan cost (pool enumeration + fast
+//!   solve + GA/MCTS) at growing service counts: the bounded pool
+//!   ([`PoolBounding::Bucketed`]) with delta-evaluated GA offspring vs
+//!   the unbounded no-delta path every replan used to pay. The
+//!   unbounded leg only runs where its O(services²) pool fits in
+//!   memory; past that the point reports an explicitly-labeled
+//!   extrapolated baseline. Written to `BENCH_solve_scale.json` next
+//!   to the `--json` path.
+//!
 //! `--json BENCH_scale.json` writes the machine-readable record CI
 //! uploads. `--baseline <path>` compares the 1k-GPU events/sec points
-//! against a previously committed record and fails (exit 1) on a >2x
+//! against a previously committed record, `--baseline-solve <path>`
+//! the bounded replan times, and either fails (exit 1) on a >2x
 //! regression.
 
 use mig_serving::bench::{header, BenchArgs, BenchCtx, JsonReport};
@@ -26,7 +36,8 @@ use mig_serving::cluster::{cluster_clone_count, ClusterState, ScratchState};
 use mig_serving::mig::DeviceKind;
 use mig_serving::online::{check_invariants, OnlineConfig, OnlineEvent, OnlineScheduler};
 use mig_serving::optimizer::{
-    ConfigPool, OptimizerPipeline, PipelineBudget, PoolPruning, ProblemCtx,
+    ctx_rebuild_count, ConfigPool, OptimizerPipeline, PipelineBudget, PoolBounding,
+    PoolPruning, ProblemCtx,
 };
 use mig_serving::perf::ProfileBank;
 use mig_serving::util::json::{self, Value};
@@ -45,11 +56,12 @@ fn peak_rss_kb() -> f64 {
         .unwrap_or(0.0)
 }
 
-/// `--baseline <path>` (ignored by [`BenchArgs`]).
-fn baseline_arg() -> Option<std::path::PathBuf> {
+/// `--baseline <path>` / `--baseline-solve <path>` (ignored by
+/// [`BenchArgs`]).
+fn flag_arg(flag: &str) -> Option<std::path::PathBuf> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     argv.iter()
-        .position(|a| a == "--baseline")
+        .position(|a| a == flag)
         .and_then(|i| argv.get(i + 1))
         .map(std::path::PathBuf::from)
 }
@@ -174,6 +186,7 @@ fn main() {
                 }
 
                 let clones_before = cluster_clone_count();
+                let rebuilds_before = ctx_rebuild_count();
                 let bc = BenchCtx::new(
                     usize::from(!args.quick),
                     if args.quick { 1 } else { 3 },
@@ -191,6 +204,14 @@ fn main() {
                     clones_before,
                     "incremental event path cloned the cluster at {gpus} GPUs"
                 );
+                // Demand deltas leave the active service set unchanged,
+                // so the quality gate must patch its cached bound — a
+                // single ProblemCtx rebuild here means the memo broke.
+                assert_eq!(
+                    ctx_rebuild_count(),
+                    rebuilds_before,
+                    "steady-state event stream rebuilt a ProblemCtx at {gpus} GPUs"
+                );
                 let events_per_s =
                     events_per_iter as f64 / m.mean().as_secs_f64().max(1e-12);
                 println!("{}", m.report());
@@ -203,16 +224,199 @@ fn main() {
         report.record("scale", "peak_rss_kb", Value::Num(peak_rss_kb()));
     }
 
+    // ---- [3] solve scale: bounded pool + delta GA vs the unbounded
+    //      no-delta replan path ------------------------------------
+    let mut solve_report = JsonReport::new("micro_solve_scale", args.quick);
+    if args.section_enabled(3) {
+        let bounding = PoolBounding::Bucketed { buckets: 16, partners: 4 };
+        let pairs_of = |m: usize| (m * m.saturating_sub(1) / 2) as f64;
+        // (services, rate multiplier, run the unbounded leg too). The
+        // unbounded pool is O(services²) pairs — at 1k services tens of
+        // millions of configs, which does not fit in memory — so the
+        // unbounded leg only runs where it fits and later points report
+        // an explicitly-labeled extrapolation from the last measured
+        // one (per-pair config yield and per-config replan seconds both
+        // scale linearly).
+        let cases: &[(usize, f64, bool)] = if args.quick {
+            &[(64, 1.0, true), (256, 0.25, false)]
+        } else {
+            &[(256, 0.25, true), (1000, 0.1, false)]
+        };
+        let replan_budget = |bounding: PoolBounding, ga_delta: bool| {
+            PipelineBudget {
+                ga_rounds: 1,
+                ga_patience: 1,
+                mcts_iterations: 8,
+                ..Default::default()
+            }
+            .with_bounding(bounding)
+            .with_ga_delta(ga_delta)
+        };
+        // (per-pair configs, replan seconds per config, single-service
+        // configs per service) from the last measured unbounded leg.
+        let mut full_base: Option<(f64, f64, f64)> = None;
+        for &(n, mult, run_full) in cases {
+            let section = "solve";
+            println!(
+                "\n[3] solve scale, n={n} services (unbounded leg: {})",
+                if run_full { "measured" } else { "extrapolated" }
+            );
+            let w = micro_workload(&bank, n, mult);
+            let ctx = ProblemCtx::new(&bank, &w).unwrap();
+            let bc = BenchCtx::new(usize::from(!args.quick), if args.quick { 1 } else { 2 });
+
+            let bounded_pool =
+                ConfigPool::enumerate_bounded(&ctx, PoolPruning::Off, bounding);
+            let p_bounded =
+                OptimizerPipeline::with_budget(&ctx, replan_budget(bounding, true));
+            let fast_bounded = p_bounded.fast().unwrap();
+            assert!(fast_bounded.is_valid(&ctx), "bounded fast solve invalid");
+            println!(
+                "    bounded pool: {} configs, fast solve {} GPUs",
+                bounded_pool.len(),
+                fast_bounded.num_gpus()
+            );
+
+            let enum_bounded = bc.time(&format!("enumerate bounded    n={n}"), || {
+                ConfigPool::enumerate_bounded(&ctx, PoolPruning::Off, bounding).len()
+            });
+            // The replan cost an event pays end to end: enumeration +
+            // fast solve + one GA round of MCTS crossovers.
+            let replan_bounded = bc.time(&format!("replan bounded+delta n={n}"), || {
+                OptimizerPipeline::with_budget(&ctx, replan_budget(bounding, true))
+                    .plan_deployment()
+                    .unwrap()
+                    .num_gpus()
+            });
+            for m in [&enum_bounded, &replan_bounded] {
+                println!("{}", m.report());
+                solve_report.record_measurement(section, m);
+            }
+            solve_report.record(
+                section,
+                &format!("s{n}_pool_bounded"),
+                Value::from(bounded_pool.len()),
+            );
+            solve_report.record(
+                section,
+                &format!("s{n}_replan_bounded_s"),
+                Value::Num(replan_bounded.mean().as_secs_f64()),
+            );
+            solve_report.record(
+                section,
+                &format!("s{n}_fast_gpus_bounded"),
+                Value::from(fast_bounded.num_gpus()),
+            );
+
+            if run_full {
+                let full_pool = ConfigPool::enumerate(&ctx);
+                let p_full = OptimizerPipeline::with_budget(
+                    &ctx,
+                    replan_budget(PoolBounding::Off, false),
+                );
+                let fast_full = p_full.fast().unwrap();
+                assert!(fast_full.is_valid(&ctx), "full fast solve invalid");
+                // Acceptance: the bounded fast solve lands within 2%
+                // GPUs (1-GPU floor for small fleets) of the unbounded
+                // one.
+                let (gb, gf) = (fast_bounded.num_gpus(), fast_full.num_gpus());
+                assert!(
+                    gb <= gf + (gf / 50).max(1),
+                    "bounded fast solve {gb} GPUs vs full {gf}: over the 2% budget"
+                );
+                println!("    fast solve: {gb} GPUs bounded vs {gf} full (within 2%)");
+                let enum_full = bc.time(&format!("enumerate full       n={n}"), || {
+                    ConfigPool::enumerate(&ctx).len()
+                });
+                let replan_full = bc.time(&format!("replan full no-delta n={n}"), || {
+                    OptimizerPipeline::with_budget(
+                        &ctx,
+                        replan_budget(PoolBounding::Off, false),
+                    )
+                    .plan_deployment()
+                    .unwrap()
+                    .num_gpus()
+                });
+                for m in [&enum_full, &replan_full] {
+                    println!("{}", m.report());
+                    solve_report.record_measurement(section, m);
+                }
+                let speedup = replan_full.mean().as_secs_f64()
+                    / replan_bounded.mean().as_secs_f64().max(1e-12);
+                println!(
+                    "    -> bounded+delta replan is {speedup:.1}x faster ({} vs {} configs)",
+                    bounded_pool.len(),
+                    full_pool.len()
+                );
+                solve_report.record(
+                    section,
+                    &format!("s{n}_pool_full"),
+                    Value::from(full_pool.len()),
+                );
+                solve_report.record(
+                    section,
+                    &format!("s{n}_replan_full_s"),
+                    Value::Num(replan_full.mean().as_secs_f64()),
+                );
+                solve_report.record(
+                    section,
+                    &format!("s{n}_fast_gpus_full"),
+                    Value::from(fast_full.num_gpus()),
+                );
+                solve_report.record(section, &format!("s{n}_speedup"), Value::Num(speedup));
+                let singles = full_pool
+                    .configs
+                    .iter()
+                    .filter(|c| c.sparse_util.len() == 1)
+                    .count();
+                full_base = Some((
+                    (full_pool.len() - singles) as f64 / pairs_of(n).max(1.0),
+                    replan_full.mean().as_secs_f64() / full_pool.len().max(1) as f64,
+                    singles as f64 / n as f64,
+                ));
+            } else if let Some((per_pair, secs_per_cfg, singles_per_svc)) = full_base {
+                let est_pool = singles_per_svc * n as f64 + per_pair * pairs_of(n);
+                let est_s = secs_per_cfg * est_pool;
+                let speedup = est_s / replan_bounded.mean().as_secs_f64().max(1e-12);
+                println!(
+                    "    unbounded leg does not fit at n={n}: extrapolated baseline \
+                     ~{est_pool:.0} configs, ~{est_s:.1}s replan -> {speedup:.1}x \
+                     speedup for bounded+delta"
+                );
+                solve_report.record(
+                    section,
+                    &format!("s{n}_pool_full_extrapolated"),
+                    Value::Num(est_pool),
+                );
+                solve_report.record(
+                    section,
+                    &format!("s{n}_replan_full_extrapolated_s"),
+                    Value::Num(est_s),
+                );
+                solve_report.record(
+                    section,
+                    &format!("s{n}_speedup_vs_extrapolated"),
+                    Value::Num(speedup),
+                );
+            } else {
+                println!("    unbounded leg skipped (no measured case to extrapolate from)");
+            }
+        }
+    }
+
     if let Some(path) = &args.json {
         report.write(path).expect("write bench json");
         println!("\nwrote {}", path.display());
+        let solve_path = path.with_file_name("BENCH_solve_scale.json");
+        solve_report.write(&solve_path).expect("write solve bench json");
+        println!("wrote {}", solve_path.display());
     }
 
-    // ---- regression gate vs a committed baseline --------------------
-    if let Some(base) = baseline_arg() {
+    // ---- regression gates vs committed baselines --------------------
+    let mut failed = false;
+    if let Some(base) = flag_arg("--baseline") {
         let old = json::parse_file(&base).expect("parse baseline json");
         let new = report.to_value();
-        let mut failed = false;
         for services in [256usize, 1000] {
             let key = format!("sections.scale.g1000_s{services}_events_per_s");
             let (Some(o), Some(n)) = (
@@ -228,8 +432,27 @@ fn main() {
                 println!("baseline ok: {key} {o:.0} -> {n:.0} events/sec");
             }
         }
-        if failed {
-            std::process::exit(1);
+    }
+    if let Some(base) = flag_arg("--baseline-solve") {
+        let old = json::parse_file(&base).expect("parse solve baseline json");
+        let new = solve_report.to_value();
+        for services in [64usize, 256, 1000] {
+            let key = format!("sections.solve.s{services}_replan_bounded_s");
+            let (Some(o), Some(n)) = (
+                old.get_path(&key).and_then(|v| v.as_f64()),
+                new.get_path(&key).and_then(|v| v.as_f64()),
+            ) else {
+                continue;
+            };
+            if n > o * 2.0 {
+                eprintln!("REGRESSION: {key} rose {o:.3}s -> {n:.3}s (>2x)");
+                failed = true;
+            } else {
+                println!("baseline ok: {key} {o:.3}s -> {n:.3}s");
+            }
         }
+    }
+    if failed {
+        std::process::exit(1);
     }
 }

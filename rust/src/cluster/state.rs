@@ -524,6 +524,13 @@ impl ClusterState {
         (0..self.gpus.len()).filter(|&i| !self.gpus[i].is_empty()).collect()
     }
 
+    /// Services with at least one live pod, ascending — index-backed,
+    /// so walking "every service's pods" (e.g. the plan diff's count
+    /// pass) is O(pods) instead of O(fleet).
+    pub fn services_with_pods(&self) -> impl Iterator<Item = ServiceId> + '_ {
+        self.service_pods.keys().copied()
+    }
+
     /// All (gpu, placement, pod) triples for a service, `(gpu,
     /// placement)` ascending — index-backed, same order as a fleet scan.
     pub fn pods_of_service(&self, service: ServiceId) -> Vec<(usize, Placement, Pod)> {

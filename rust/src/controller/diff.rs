@@ -54,15 +54,18 @@ impl ServiceDelta {
     }
 }
 
-/// Instance counts per service currently live on the cluster.
+/// Instance counts per service currently live on the cluster. Walks
+/// the per-service pod index — O(pods), independent of fleet size —
+/// instead of scanning every GPU; the counts are plain integer adds,
+/// so the result is identical to the full scan.
 pub fn cluster_counts(cluster: &ClusterState, n_services: usize) -> Vec<InstanceCounts> {
     let mut counts = vec![InstanceCounts::default(); n_services];
-    for gi in 0..cluster.num_gpus() {
-        let kind = cluster.kind_of(gi);
-        for (pl, pod) in cluster.gpu(gi).pods() {
-            if pod.service < n_services {
-                counts[pod.service].add(kind, pl.size);
-            }
+    for sid in cluster.services_with_pods() {
+        if sid >= n_services {
+            continue;
+        }
+        for (gi, pl, _) in cluster.pods_of_service(sid) {
+            counts[sid].add(cluster.kind_of(gi), pl.size);
         }
     }
     counts

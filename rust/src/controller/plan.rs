@@ -96,7 +96,9 @@ pub fn parallelize(actions: Vec<Action>) -> TransitionPlan {
 /// The replan path: run the shared [`OptimizerPipeline`] under its
 /// budget to produce a target deployment for the *current* workload,
 /// then plan the transition from the cluster's live state to it. Pure
-/// planning — the cluster is not touched; execute the returned plan
+/// planning — the transition is simulated in an undo-log scratch
+/// overlay (hence `&mut`) and rolled back before returning, so the
+/// cluster is observably untouched; execute the returned plan
 /// through [`crate::cluster::Executor`] (or use
 /// [`super::transition::Controller::replan`], which does both).
 ///
@@ -104,7 +106,7 @@ pub fn parallelize(actions: Vec<Action>) -> TransitionPlan {
 /// algorithm seconds (optimizer + exchange-and-compact) — the Fig 13a
 /// "algorithm" slice of a reconfiguration.
 pub fn replan(
-    cluster: &ClusterState,
+    cluster: &mut ClusterState,
     controller: &super::transition::Controller,
     pipeline: &OptimizerPipeline<'_>,
 ) -> anyhow::Result<(TransitionPlan, Deployment, f64)> {
@@ -204,10 +206,10 @@ mod tests {
         let ctx = ProblemCtx::new(&bank, &w).unwrap();
         let pipeline =
             OptimizerPipeline::with_budget(&ctx, PipelineBudget::fast_only());
-        let cluster = ClusterState::new(1, 8);
+        let mut cluster = ClusterState::new(1, 8);
         let controller = crate::controller::Controller::new(w.len());
         let (plan, target, algorithm_s) =
-            replan(&cluster, &controller, &pipeline).unwrap();
+            replan(&mut cluster, &controller, &pipeline).unwrap();
         assert!(plan.num_actions() > 0);
         assert!(target.num_gpus() >= 1);
         assert!(algorithm_s >= 0.0);

@@ -11,11 +11,34 @@
 //! estimated optimality gap crosses `gap_threshold` — the dynamic-
 //! repartitioning trigger of Lipe et al., with the paper's own bound as
 //! the quality oracle.
+//!
+//! The bound is maintained incrementally: a [`ProblemCtx`] is built —
+//! and the profile bank scanned — only when the active service **set**
+//! (models + latency SLOs) or the fleet's kind mix changes. Rate-only
+//! changes, i.e. every steady-state `DemandDelta`, are O(changed
+//! services) patches of the cached [`IncrementalBound`], whose result
+//! is bit-identical to a from-scratch `lower_bound_gpus` at the same
+//! rates. `micro_online.rs` asserts zero ctx rebuilds across its
+//! steady-state timing loop via
+//! [`crate::optimizer::ctx_rebuild_count`].
 
 use crate::cluster::ClusterState;
-use crate::optimizer::{lower_bound_gpus, ProblemCtx};
+use crate::mig::DeviceKind;
+use crate::optimizer::{IncrementalBound, ProblemCtx};
 use crate::perf::ProfileBank;
 use crate::spec::{Slo, Workload};
+
+/// The memoized bound state: valid for one (service set, fleet kinds)
+/// pair, patched in place across rate changes.
+#[derive(Debug, Clone)]
+struct BoundCache {
+    /// The (model, latency_ms) identity of each active service, in
+    /// assessment order — the memo key. Rates deliberately excluded.
+    set: Vec<(String, f64)>,
+    /// Fleet kind mix the bound's throughput tables were built for.
+    kinds: Vec<DeviceKind>,
+    bound: IncrementalBound,
+}
 
 /// Event counters plus the latest estimated optimality gap.
 #[derive(Debug, Clone, Default)]
@@ -27,10 +50,10 @@ pub struct QualityTracker {
     /// Estimated optimality gap after the last assessment:
     /// `(gpus_in_use − lower_bound) / lower_bound`.
     pub last_gap: Option<f64>,
-    /// Lower bound memoized on the active (model, latency, rate) set —
-    /// the bound only changes when that set does, so steady event
-    /// streams skip the per-event `ProblemCtx` rebuild.
-    cached_bound: Option<(Vec<(String, f64, f64)>, usize)>,
+    /// Incremental bound memoized on the active service *set* — rate
+    /// changes patch it in place, so steady event streams never rebuild
+    /// a `ProblemCtx`.
+    cache: Option<BoundCache>,
 }
 
 impl QualityTracker {
@@ -64,31 +87,53 @@ impl QualityTracker {
             self.last_gap = Some(0.0);
             return None;
         }
-        let cached = match &self.cached_bound {
-            Some((set, lb)) if set == active => Some(*lb),
-            _ => None,
-        };
-        let lb = match cached {
-            Some(lb) => lb,
-            None => {
-                let services: Vec<(String, Slo)> = active
+        let kinds = state.fleet_kinds();
+        let hit = self.cache.as_ref().is_some_and(|c| {
+            c.kinds == kinds
+                && c.set.len() == active.len()
+                && c.set
                     .iter()
-                    .map(|(model, latency_ms, rate)| {
-                        (model.clone(), Slo::new(*rate, *latency_ms))
-                    })
-                    .collect();
-                let w = Workload::new("online-quality", services);
-                let kinds = state.fleet_kinds();
-                let ctx = match ProblemCtx::new_with_kinds(bank, &w, &kinds) {
-                    Ok(ctx) => ctx,
-                    // A service the fleet cannot host at all is beyond
-                    // local moves by definition.
-                    Err(e) => return Some(format!("infeasible service set: {e}")),
-                };
-                let lb = lower_bound_gpus(&ctx).max(1);
-                self.cached_bound = Some((active.to_vec(), lb));
-                lb
+                    .zip(active)
+                    .all(|((m, l), (am, al, _))| m == am && l == al)
+        });
+        let lb = if hit {
+            // Rate-only delta: patch the services whose rate moved —
+            // O(changed) — and re-fold. Bit-identical to rebuilding.
+            let bound = &mut self.cache.as_mut().unwrap().bound;
+            for (i, (_, _, rate)) in active.iter().enumerate() {
+                if bound.rate(i) != *rate {
+                    bound.set_rate(i, *rate);
+                }
             }
+            bound.gpus().max(1)
+        } else {
+            let services: Vec<(String, Slo)> = active
+                .iter()
+                .map(|(model, latency_ms, rate)| {
+                    (model.clone(), Slo::new(*rate, *latency_ms))
+                })
+                .collect();
+            let w = Workload::new("online-quality", services);
+            let ctx = match ProblemCtx::new_with_kinds(bank, &w, &kinds) {
+                Ok(ctx) => ctx,
+                // A service the fleet cannot host at all is beyond
+                // local moves by definition.
+                Err(e) => {
+                    self.cache = None;
+                    return Some(format!("infeasible service set: {e}"));
+                }
+            };
+            let bound = IncrementalBound::new(&ctx);
+            let lb = bound.gpus().max(1);
+            self.cache = Some(BoundCache {
+                set: active
+                    .iter()
+                    .map(|(m, l, _)| (m.clone(), *l))
+                    .collect(),
+                kinds,
+                bound,
+            });
+            lb
         };
         let used = state.used_gpu_count();
         let gap = (used as f64 - lb as f64) / lb as f64;
@@ -109,6 +154,7 @@ mod tests {
     use super::*;
     use crate::cluster::Pod;
     use crate::mig::{InstanceSize::*, Placement};
+    use crate::optimizer::{ctx_rebuild_count, lower_bound_gpus};
 
     #[test]
     fn ratio_counts_events() {
@@ -167,5 +213,54 @@ mod tests {
         let mut q = QualityTracker::default();
         assert!(q.assess(&bank, &c, &[], 0.1).is_none());
         assert_eq!(q.last_gap, Some(0.0));
+    }
+
+    /// SATELLITE: the memo is keyed on the service *set*, not the
+    /// (model, latency, rate) tuple — a 100-event stream of rate-only
+    /// deltas builds exactly one `ProblemCtx`, and every patched bound
+    /// equals the from-scratch bound at the same rates.
+    #[test]
+    fn rate_deltas_never_rebuild_ctx() {
+        let bank = ProfileBank::synthetic();
+        let models = bank.simulation_models();
+        let c = ClusterState::new(1, 8);
+        let mut q = QualityTracker::default();
+        let mut active: Vec<(String, f64, f64)> = (0..6)
+            .map(|i| (models[i % models.len()].clone(), 200.0, 300.0 + 10.0 * i as f64))
+            .collect();
+        let mut rng = crate::util::rng::Rng::new(0x9A11);
+        let before = ctx_rebuild_count();
+        q.assess(&bank, &c, &active, 0.5);
+        assert_eq!(ctx_rebuild_count() - before, 1, "first assessment builds ctx");
+        let steady = ctx_rebuild_count();
+        for _ in 0..100 {
+            // Rate-only delta on a random service.
+            let i = rng.below(active.len());
+            active[i].2 = 50.0 + rng.f64() * 900.0;
+            q.assess(&bank, &c, &active, 0.5);
+            // The patched bound must equal the from-scratch bound over
+            // a workload carrying the current rates.
+            let services: Vec<(String, Slo)> = active
+                .iter()
+                .map(|(m, l, r)| (m.clone(), Slo::new(*r, *l)))
+                .collect();
+            let w = Workload::new("oracle", services);
+            let ctx =
+                ProblemCtx::new_with_kinds(&bank, &w, &c.fleet_kinds()).unwrap();
+            let expect = lower_bound_gpus(&ctx).max(1);
+            let got = q.cache.as_ref().unwrap().bound.gpus().max(1);
+            assert_eq!(got, expect);
+        }
+        // 100 oracle rebuilds above, zero from the tracker itself.
+        assert_eq!(
+            ctx_rebuild_count() - steady,
+            100,
+            "tracker rebuilt ctx during rate-only deltas"
+        );
+        // Changing the *set* (drop a service) does rebuild, once.
+        active.pop();
+        let before_set = ctx_rebuild_count();
+        q.assess(&bank, &c, &active, 0.5);
+        assert_eq!(ctx_rebuild_count() - before_set, 1);
     }
 }

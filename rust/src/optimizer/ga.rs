@@ -34,13 +34,13 @@
 //! * **Stop**: round limit, no improvement in the last 10 rounds, or an
 //!   optional wall-clock budget ([`GaConfig::time_budget`]).
 
-use std::collections::HashSet;
+use std::collections::{BTreeSet, HashSet};
 use std::time::{Duration, Instant};
 
 use super::comp_rates::CompletionRates;
 use super::engine::ScoreEngine;
 use super::gpu_config::{ConfigPool, ProblemCtx};
-use super::interned::{Gene, GeneKey, InternedDeployment};
+use super::interned::{Gene, InternedDeployment};
 use super::mcts::{Mcts, MctsConfig, RefillStep};
 use super::{par, Deployment};
 use crate::mig::InstanceSize;
@@ -80,6 +80,18 @@ pub struct GaConfig {
     /// count (leave `time_budget` unset) when replayability across
     /// machines/thread counts matters.
     pub parallelism: Option<usize>,
+    /// Evaluate offspring by patching the parent's cached completion
+    /// rates — only the services touched by mutation swaps and erased
+    /// genes are re-folded, and crossover refills accumulate into the
+    /// running vector — instead of re-folding the whole genome three
+    /// times per offspring (crossover base, validity check, scoring).
+    /// Bit-identical to the re-folding reference path (`false`):
+    /// untouched per-service sums keep their fold order, touched ones
+    /// are re-folded in gene order, so every float, RNG draw, and
+    /// tie-break matches. Asserted per offspring in debug builds and
+    /// differentially (parallelism 1 and 8) in
+    /// `tests/solve_incremental.rs`.
+    pub delta_fitness: bool,
 }
 
 impl Default for GaConfig {
@@ -96,6 +108,7 @@ impl Default for GaConfig {
             time_budget: None,
             seed: 0x6A,
             parallelism: None,
+            delta_fitness: true,
         }
     }
 }
@@ -107,13 +120,42 @@ pub struct GaHistory {
     pub best_gpus_per_round: Vec<usize>,
 }
 
-/// A population member with its fitness `(gpus, excess)` and canonical
-/// dedup key computed exactly once.
+/// A population member with its fitness `(gpus, excess)`, canonical
+/// dedup fingerprint, and completion rates computed exactly once. The
+/// cached completion is what delta-fitness offspring patch instead of
+/// re-folding the genome; the `u64` key (see
+/// [`InternedDeployment::key_hash`]) replaces the sorted-gene-key
+/// vectors the population dedup used to allocate, clone, and compare.
 struct Scored {
     dep: InternedDeployment,
     gpus: usize,
     excess: f64,
-    key: Vec<GeneKey>,
+    key: u64,
+    comp: CompletionRates,
+}
+
+/// Recompute `comp`'s entries for `services` only, folding their
+/// contributions in gene order. Bit-identical to the corresponding
+/// entries of a from-scratch [`InternedDeployment::completion`] fold:
+/// a service's sum accumulates in gene order either way, and other
+/// services' contributions never interleave into it. Entries outside
+/// `services` are untouched (their contributing genes didn't change).
+fn refold_services(
+    pool: &ConfigPool,
+    genes: &[Gene],
+    comp: &mut CompletionRates,
+    services: &BTreeSet<ServiceId>,
+) {
+    for &s in services {
+        comp.set(s, 0.0);
+    }
+    for g in genes {
+        for &(sid, u) in g.sparse_util(pool) {
+            if services.contains(&sid) {
+                comp.set(sid, comp.get(sid) + u);
+            }
+        }
+    }
 }
 
 /// One derived RNG stream per offspring slot (SplitMix64-style
@@ -144,14 +186,25 @@ impl GeneticAlgorithm {
         pool: &ConfigPool,
         dep: InternedDeployment,
     ) -> Scored {
-        let completion = dep.completion(ctx, pool);
-        let excess = completion
+        let comp = dep.completion(ctx, pool);
+        Self::score_with(pool, dep, comp)
+    }
+
+    /// Score from an already-computed completion vector (the delta path
+    /// carries one through mutation and crossover, so the genome is
+    /// never re-folded here).
+    fn score_with(
+        pool: &ConfigPool,
+        dep: InternedDeployment,
+        comp: CompletionRates,
+    ) -> Scored {
+        let excess = comp
             .as_slice()
             .iter()
             .map(|&c| (c - 1.0).max(0.0))
             .sum();
-        let key = dep.canonical_key(pool);
-        Scored { gpus: dep.num_gpus(), excess, key, dep }
+        let key = dep.key_hash(pool);
+        Scored { gpus: dep.num_gpus(), excess, key, dep, comp }
     }
 
     /// Evolve from a dense seed deployment; returns (best deployment,
@@ -211,15 +264,41 @@ impl GeneticAlgorithm {
                 }
             }
             let population_ref = &population;
+            let delta = self.cfg.delta_fitness;
             let offspring: Vec<Option<Scored>> =
                 par::run_indexed(slots, workers, |(parent, stream_seed)| {
                     let mut rng = Rng::new(stream_seed);
                     // Mutate a copy first (diversify service mixes),
                     // then cross over. The copy is a memcpy.
-                    let mut child = population_ref[parent].dep.clone();
-                    self.mutate(ctx, pool, &mut child, &mut rng);
-                    self.crossover(ctx, engine, &child, &mcts, &mut rng)
-                        .map(|dep| Self::score_individual(ctx, pool, dep))
+                    let parent = &population_ref[parent];
+                    let mut child = parent.dep.clone();
+                    if delta {
+                        // Delta path: carry the parent's cached
+                        // completion through mutation (re-fold only the
+                        // swapped services) and crossover (patch out the
+                        // erased genes, accumulate the refill). Same
+                        // RNG draws, same floats as the reference path.
+                        let mut comp = parent.comp.clone();
+                        let touched = self.mutate(ctx, pool, &mut child, &mut rng);
+                        if !touched.is_empty() {
+                            refold_services(pool, &child.genes, &mut comp, &touched);
+                        }
+                        #[cfg(debug_assertions)]
+                        {
+                            let fresh = child.completion(ctx, pool);
+                            debug_assert_eq!(
+                                comp.as_slice(),
+                                fresh.as_slice(),
+                                "delta mutation drifted from full fold"
+                            );
+                        }
+                        self.crossover_delta(ctx, engine, &child, comp, &mcts, &mut rng)
+                            .map(|(dep, comp)| Self::score_with(pool, dep, comp))
+                    } else {
+                        let _ = self.mutate(ctx, pool, &mut child, &mut rng);
+                        self.crossover(ctx, engine, &child, &mcts, &mut rng)
+                            .map(|dep| Self::score_individual(ctx, pool, dep))
+                    }
                 });
             // Elitism: originals compete with offspring (merged in slot
             // order — deterministic). Fitness is (GPUs, total
@@ -233,11 +312,13 @@ impl GeneticAlgorithm {
                     .then(a.excess.partial_cmp(&b.excess).unwrap())
             });
             // Canonical dedup: identical deployments reached via
-            // different mutation/refill orders share a key, adjacent or
-            // not.
-            let mut seen: HashSet<Vec<GeneKey>> =
+            // different mutation/refill orders share a fingerprint,
+            // adjacent or not. The u64 hash is order-insensitive over
+            // genes (sorted per-gene hashes), so retain is a Copy
+            // insert — no per-individual key clones.
+            let mut seen: HashSet<u64> =
                 HashSet::with_capacity(population.len());
-            population.retain(|s| seen.insert(s.key.clone()));
+            population.retain(|s| seen.insert(s.key));
             population.truncate(self.cfg.population);
 
             if population[0].gpus < best_gpus {
@@ -297,6 +378,77 @@ impl GeneticAlgorithm {
         dep.is_valid(ctx, pool).then_some(dep)
     }
 
+    /// [`GeneticAlgorithm::crossover`], delta-evaluated: the caller
+    /// hands in the parent's completion vector; erased genes' services
+    /// are re-folded over the kept genome (everything else keeps its
+    /// fold bit-for-bit), the refill accumulates gene by gene in append
+    /// order — exactly where a from-scratch fold would add it — and the
+    /// finished vector doubles as the validity check and the child's
+    /// cached score input. Same RNG draws as the reference path: the
+    /// MCTS sees a bit-identical residual, so it returns a bit-identical
+    /// refill.
+    fn crossover_delta(
+        &self,
+        ctx: &ProblemCtx,
+        engine: &ScoreEngine,
+        parent: &InternedDeployment,
+        mut comp: CompletionRates,
+        mcts: &Mcts,
+        rng: &mut Rng,
+    ) -> Option<(InternedDeployment, CompletionRates)> {
+        let n = parent.num_gpus();
+        if n == 0 {
+            return None;
+        }
+        let pool = engine.pool();
+        let n_erase = ((n as f64 * self.cfg.erase_fraction).round() as usize)
+            .clamp(1, self.cfg.erase_max.min(n));
+        let erased: HashSet<usize> =
+            rng.sample_indices(n, n_erase).into_iter().collect();
+        // Services the erased genes served must be re-folded over the
+        // kept genome; every other entry of `comp` already equals the
+        // kept-genome fold (erased genes never contributed to it).
+        let mut touched: BTreeSet<ServiceId> = BTreeSet::new();
+        for &i in &erased {
+            for &(sid, _) in parent.genes[i].sparse_util(pool) {
+                touched.insert(sid);
+            }
+        }
+        let mut genes: Vec<Gene> = parent
+            .genes
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| !erased.contains(i))
+            .map(|(_, g)| g.clone())
+            .collect();
+        refold_services(pool, &genes, &mut comp, &touched);
+        #[cfg(debug_assertions)]
+        {
+            let mut fresh = CompletionRates::zeros(ctx.workload.len());
+            for g in &genes {
+                g.add_utility(pool, &mut fresh);
+            }
+            debug_assert_eq!(
+                comp.as_slice(),
+                fresh.as_slice(),
+                "delta erase drifted from full fold"
+            );
+        }
+        let refill = mcts.search_steps(ctx, engine, &comp, rng);
+        for s in refill {
+            let g = match s {
+                RefillStep::Pool(i) => Gene::Pool(i),
+                RefillStep::Packed(cfg) => Gene::custom(ctx, cfg),
+            };
+            g.add_utility(pool, &mut comp);
+            genes.push(g);
+        }
+        let dep = InternedDeployment { genes };
+        // `comp` now equals the full-genome fold (kept genes in order,
+        // refill appended in order), so all-satisfied IS `is_valid`.
+        comp.all_satisfied().then_some((dep, comp))
+    }
+
     /// Mutation: swap services between randomly chosen same-kind,
     /// same-size instance pairs running different services. Throughput
     /// totals are preserved (same (kind, size) ⇒ the same profiled
@@ -307,13 +459,23 @@ impl GeneticAlgorithm {
     /// (min-size / latency infeasibility) are skipped. Operates on
     /// (size, service) pair lists and re-materializes **only the
     /// touched genes** as custom genes on their own kind.
+    ///
+    /// Returns the services whose gene membership changed (the two
+    /// swapped services per applied swap). Their per-service totals are
+    /// value-preserved but their *fold order* across genes is not, so
+    /// the delta path re-folds exactly this set; every other service —
+    /// including bystanders inside rebuilt genes — keeps its
+    /// contribution positions and hence its bit-exact sum (rebuilt
+    /// custom genes recompute per-pair utilities in canonical order,
+    /// matching the pool-backed originals). Empty when no swap applied
+    /// (or the all-or-nothing rebuild bailed, leaving `dep` untouched).
     fn mutate(
         &self,
         ctx: &ProblemCtx,
         pool: &ConfigPool,
         dep: &mut InternedDeployment,
         rng: &mut Rng,
-    ) {
+    ) -> BTreeSet<ServiceId> {
         // Pair lists per gene, and (gene, slot) ids grouped by
         // (kind, size) class. For a pure-A100 fleet every kind tag is
         // equal, so the classes — and hence the RNG draws — are exactly
@@ -333,6 +495,7 @@ impl GeneticAlgorithm {
             }
         }
         let mut dirty = vec![false; dep.genes.len()];
+        let mut touched: BTreeSet<ServiceId> = BTreeSet::new();
         for _ in 0..self.cfg.mutation_swaps {
             // Pick a (kind, size) class with at least two instances.
             let classes: Vec<&Vec<(usize, usize)>> =
@@ -368,6 +531,8 @@ impl GeneticAlgorithm {
             pairs[g2][p2].1 = s1;
             dirty[g1] = true;
             dirty[g2] = true;
+            touched.insert(s1);
+            touched.insert(s2);
         }
         // Re-materialize touched genes on their own kind; sizes are
         // unchanged so the partitions stay realizable. All-or-nothing
@@ -380,12 +545,13 @@ impl GeneticAlgorithm {
             }
             match ctx.config_from_pairs_on(kinds[gi], &pairs[gi]) {
                 Some(cfg) => rebuilt.push((gi, Gene::custom(ctx, cfg))),
-                None => return,
+                None => return BTreeSet::new(),
             }
         }
         for (gi, g) in rebuilt {
             dep.genes[gi] = g;
         }
+        touched
     }
 }
 
@@ -585,10 +751,11 @@ mod tests {
         genes.reverse();
         let b = InternedDeployment { genes };
         assert_eq!(a.canonical_key(&pool), b.canonical_key(&pool));
+        assert_eq!(a.key_hash(&pool), b.key_hash(&pool));
         let sa = GeneticAlgorithm::score_individual(&ctx, &pool, a);
         let sb = GeneticAlgorithm::score_individual(&ctx, &pool, b);
-        let mut seen: HashSet<Vec<GeneKey>> = HashSet::new();
-        assert!(seen.insert(sa.key.clone()));
-        assert!(!seen.insert(sb.key.clone()), "reordered duplicate slipped through");
+        let mut seen: HashSet<u64> = HashSet::new();
+        assert!(seen.insert(sa.key));
+        assert!(!seen.insert(sb.key), "reordered duplicate slipped through");
     }
 }

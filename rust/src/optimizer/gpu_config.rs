@@ -5,7 +5,24 @@ use crate::mig::{partition::legal_size_multisets_on, DeviceKind, InstanceSize, P
 use crate::perf::ProfileBank;
 use crate::spec::{ServiceId, Workload};
 
+use std::cell::Cell;
+
 use super::comp_rates::CompletionRates;
+
+thread_local! {
+    /// Per-thread count of [`ProblemCtx`] table builds — the online
+    /// steady-state oracle: the quality gate's cached lower bound must
+    /// keep this flat across demand-delta streams (it only rebuilds
+    /// when the active service *set* changes).
+    static CTX_BUILD_COUNT: Cell<u64> = const { Cell::new(0) };
+}
+
+/// [`ProblemCtx`] effective-throughput table builds performed by the
+/// current thread so far (every `new`/`new_with_kinds`). Benches and
+/// tests assert a zero delta across incremental demand-delta paths.
+pub fn ctx_rebuild_count() -> u64 {
+    CTX_BUILD_COUNT.with(|c| c.get())
+}
 
 /// One instance within a GPU configuration: a placed instance running a
 /// service at the paper's batch choice (§7: largest batch under the
@@ -65,7 +82,7 @@ impl GpuConfig {
     pub fn utility(&self, ctx: &ProblemCtx) -> CompletionRates {
         let mut u = CompletionRates::zeros(ctx.workload.len());
         for a in &self.assigns {
-            let req = ctx.workload.services[a.service].slo.throughput;
+            let req = ctx.rate(a.service);
             u.set(a.service, u.get(a.service) + a.throughput / req);
         }
         u
@@ -104,6 +121,12 @@ pub struct ProblemCtx<'a> {
     /// `eff[kind_idx][sid][size_idx]` = Some((batch, throughput)) if
     /// the model fits on that (kind, size) under its latency SLO.
     eff: Vec<Vec<[Option<(usize, f64)>; 5]>>,
+    /// Per-service provisioning rate (req/s), seeded from each
+    /// service's SLO throughput. Owned rather than read through the
+    /// workload borrow so [`ProblemCtx::update_rates`] can retarget
+    /// demand in place: the `eff` tables depend only on (model,
+    /// latency, kind, size) and survive a rate change untouched.
+    rates: Vec<f64>,
 }
 
 impl<'a> ProblemCtx<'a> {
@@ -144,7 +167,32 @@ impl<'a> ProblemCtx<'a> {
             }
             eff.push(per_service);
         }
-        Ok(ProblemCtx { bank, workload, kinds, eff })
+        let rates: Vec<f64> =
+            workload.services.iter().map(|s| s.slo.throughput).collect();
+        CTX_BUILD_COUNT.with(|c| c.set(c.get() + 1));
+        Ok(ProblemCtx { bank, workload, kinds, eff, rates })
+    }
+
+    /// The provisioning rate (req/s) the optimizer targets for
+    /// `service`. Starts at the service's SLO throughput; see
+    /// [`ProblemCtx::update_rates`].
+    #[inline]
+    pub fn rate(&self, service: ServiceId) -> f64 {
+        self.rates[service]
+    }
+
+    /// Retarget demand in place: patch the provisioning rates of the
+    /// given services without rebuilding the context. The effective-
+    /// throughput tables are latency-derived and stay valid; everything
+    /// *rate*-derived — instance utilities, enumerated pool
+    /// `sparse_util`s, the lower bound — must be recomputed against the
+    /// new rates (a [`ConfigPool`] enumerated before the update is
+    /// stale).
+    pub fn update_rates(&mut self, updates: &[(ServiceId, f64)]) {
+        for &(sid, rate) in updates {
+            assert!(rate > 0.0, "service {sid}: rate must be positive, got {rate}");
+            self.rates[sid] = rate;
+        }
     }
 
     /// The fleet's distinct device kinds, ascending.
@@ -211,8 +259,7 @@ impl<'a> ProblemCtx<'a> {
         service: ServiceId,
         size: InstanceSize,
     ) -> Option<f64> {
-        self.effective_on(kind, service, size)
-            .map(|(_, thr)| thr / self.workload.services[service].slo.throughput)
+        self.effective_on(kind, service, size).map(|(_, thr)| thr / self.rates[service])
     }
 
     /// Build an [`InstanceAssign`] for a placement on the primary kind
@@ -339,6 +386,37 @@ pub enum PoolPruning {
     Dominated,
 }
 
+/// Pair-enumeration bounding policy for
+/// [`ConfigPool::enumerate_bounded`].
+///
+/// Full enumeration splits every legal size multiset across every
+/// unordered service pair per kind — O(n²) pairs, which at 1k services
+/// is both the dominant replan cost and (multiplied by the per-pair
+/// splits) more configs than comfortably fit in memory. `Bucketed`
+/// keeps the pair loop at O(n·(B+K)): per kind, services are ordered
+/// by fractional slice demand (provisioning rate over the kind's best
+/// throughput-per-slice — the same quantity the §8.1 lower bound
+/// sums), partitioned into ≤B contiguous demand-similarity buckets,
+/// and each service is paired only with every bucket representative
+/// plus its K nearest demand neighbors. Single-service configs are
+/// never bounded, so the fast solve stays complete (any SLO-feasible
+/// instance can still be provisioned); what bounding trades away is
+/// some cross-service packing quality, empirically ≤2% GPUs on the
+/// fast solve (see `tests/solve_incremental.rs`). `Off` is the
+/// bit-identity escape hatch: the pool — configs, ids, order, floats —
+/// is byte-identical to the seed enumeration. Composes with
+/// [`PoolPruning`] (bounding picks the pairs, pruning then drops
+/// dominated splits).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PoolBounding {
+    /// Enumerate every cross-service pair (bit-identity escape hatch).
+    #[default]
+    Off,
+    /// Demand-bucketed pair bounding: ≤`buckets` representatives plus
+    /// each service's `partners` nearest demand neighbors per kind.
+    Bucketed { buckets: usize, partners: usize },
+}
+
 /// The enumerated configuration pool (§5.1 "the utility space for all
 /// possible GPU configurations is enormous"; the fast algorithm works
 /// over configs mixing at most two services, App. A.1).
@@ -346,6 +424,10 @@ pub struct ConfigPool {
     pub configs: Vec<PooledConfig>,
     /// configs touching each service (for MCTS's per-service cut).
     by_service: Vec<Vec<u32>>,
+    /// Precomputed canonical-key hash per config — the deterministic
+    /// u64 fingerprint GA population dedup uses instead of comparing
+    /// sorted gene-key vectors (see `interned::hash_config_key`).
+    key_hashes: Vec<u64>,
 }
 
 impl ConfigPool {
@@ -362,10 +444,22 @@ impl ConfigPool {
     /// preserves the per-kind id-contiguous segment structure (it only
     /// deletes entries and compacts ids).
     pub fn enumerate_pruned(ctx: &ProblemCtx, pruning: PoolPruning) -> ConfigPool {
+        Self::enumerate_bounded(ctx, pruning, PoolBounding::Off)
+    }
+
+    /// [`ConfigPool::enumerate_pruned`] with a [`PoolBounding`] policy
+    /// on the two-service pair loop. Bounding selects *which* pairs get
+    /// split; pruning then drops dominated splits — the two compose,
+    /// and `(Off, Off)` is byte-identical to the seed enumeration.
+    pub fn enumerate_bounded(
+        ctx: &ProblemCtx,
+        pruning: PoolPruning,
+        bounding: PoolBounding,
+    ) -> ConfigPool {
         let n = ctx.workload.len();
         let mut configs: Vec<PooledConfig> = Vec::new();
         for &kind in ctx.kinds() {
-            Self::enumerate_kind(ctx, kind, &mut configs);
+            Self::enumerate_kind(ctx, kind, bounding, &mut configs);
         }
         if pruning == PoolPruning::Dominated {
             configs = prune_dominated(configs);
@@ -376,12 +470,21 @@ impl ConfigPool {
                 by_service[sid].push(i as u32);
             }
         }
-        ConfigPool { configs, by_service }
+        let key_hashes: Vec<u64> = configs
+            .iter()
+            .map(|c| super::interned::hash_config_key(c.kind, &c.pairs))
+            .collect();
+        ConfigPool { configs, by_service, key_hashes }
     }
 
     /// One kind's segment of the enumeration (the seed loop,
     /// kind-parameterized).
-    fn enumerate_kind(ctx: &ProblemCtx, kind: DeviceKind, configs: &mut Vec<PooledConfig>) {
+    fn enumerate_kind(
+        ctx: &ProblemCtx,
+        kind: DeviceKind,
+        bounding: PoolBounding,
+        configs: &mut Vec<PooledConfig>,
+    ) {
         let n = ctx.workload.len();
         let multisets: Vec<Vec<InstanceSize>> = legal_size_multisets_on(kind)
             .into_iter()
@@ -391,6 +494,26 @@ impl ConfigPool {
         // Feasibility matrix: service x size on this kind.
         let fits =
             |sid: ServiceId, size: InstanceSize| ctx.effective_on(kind, sid, size).is_some();
+
+        // The unordered cross-service pairs to split sizes across:
+        // every (a, b) in the seed loop's exact ascending-lexicographic
+        // order (`Off`), or the bounded demand-bucket selection — also
+        // ascending-lexicographic, so bounded enumeration emits a
+        // subsequence of the full enumeration.
+        let pair_list: Vec<(usize, usize)> = match bounding {
+            PoolBounding::Off => {
+                let mut v = Vec::with_capacity(n * n.saturating_sub(1) / 2);
+                for a in 0..n {
+                    for b in (a + 1)..n {
+                        v.push((a, b));
+                    }
+                }
+                v
+            }
+            PoolBounding::Bucketed { buckets, partners } => {
+                bounded_pairs(ctx, kind, buckets, partners)
+            }
+        };
 
         for ms in &multisets {
             // Distinct sizes with counts, descending.
@@ -409,52 +532,51 @@ impl ConfigPool {
                     push_config(ctx, kind, configs, pairs);
                 }
             }
-            // Two-service splits: for each unordered pair, distribute the
-            // count of every distinct size between a and b.
-            for a in 0..n {
-                for b in (a + 1)..n {
-                    // Enumerate per-size splits via mixed-radix counter.
-                    let radix: Vec<usize> = counts.iter().map(|(_, c)| c + 1).collect();
-                    let mut digit = vec![0usize; counts.len()];
-                    'outer: loop {
-                        // digits = instances of each size going to `a`.
-                        let a_total: usize = digit.iter().sum();
-                        let b_total: usize =
-                            counts.iter().map(|(_, c)| *c).sum::<usize>() - a_total;
-                        if a_total > 0 && b_total > 0 {
-                            let mut ok = true;
-                            let mut pairs = Vec::with_capacity(ms.len());
-                            for (di, &(size, c)) in counts.iter().enumerate() {
-                                let ka = digit[di];
-                                if ka > 0 && !fits(a, size) {
-                                    ok = false;
-                                    break;
-                                }
-                                if c - ka > 0 && !fits(b, size) {
-                                    ok = false;
-                                    break;
-                                }
-                                for _ in 0..ka {
-                                    pairs.push((size, a));
-                                }
-                                for _ in 0..(c - ka) {
-                                    pairs.push((size, b));
-                                }
+            // Two-service splits: for each selected unordered pair,
+            // distribute the count of every distinct size between a
+            // and b.
+            for &(a, b) in &pair_list {
+                // Enumerate per-size splits via mixed-radix counter.
+                let radix: Vec<usize> = counts.iter().map(|(_, c)| c + 1).collect();
+                let mut digit = vec![0usize; counts.len()];
+                'outer: loop {
+                    // digits = instances of each size going to `a`.
+                    let a_total: usize = digit.iter().sum();
+                    let b_total: usize =
+                        counts.iter().map(|(_, c)| *c).sum::<usize>() - a_total;
+                    if a_total > 0 && b_total > 0 {
+                        let mut ok = true;
+                        let mut pairs = Vec::with_capacity(ms.len());
+                        for (di, &(size, c)) in counts.iter().enumerate() {
+                            let ka = digit[di];
+                            if ka > 0 && !fits(a, size) {
+                                ok = false;
+                                break;
                             }
-                            if ok {
-                                push_config(ctx, kind, configs, pairs);
+                            if c - ka > 0 && !fits(b, size) {
+                                ok = false;
+                                break;
+                            }
+                            for _ in 0..ka {
+                                pairs.push((size, a));
+                            }
+                            for _ in 0..(c - ka) {
+                                pairs.push((size, b));
                             }
                         }
-                        // Increment mixed-radix counter.
-                        for i in 0..digit.len() {
-                            digit[i] += 1;
-                            if digit[i] < radix[i] {
-                                continue 'outer;
-                            }
-                            digit[i] = 0;
+                        if ok {
+                            push_config(ctx, kind, configs, pairs);
                         }
-                        break;
                     }
+                    // Increment mixed-radix counter.
+                    for i in 0..digit.len() {
+                        digit[i] += 1;
+                        if digit[i] < radix[i] {
+                            continue 'outer;
+                        }
+                        digit[i] = 0;
+                    }
+                    break;
                 }
             }
         }
@@ -463,6 +585,14 @@ impl ConfigPool {
     /// The device kind pool entry `id` is enumerated for.
     pub fn kind_of(&self, id: u32) -> DeviceKind {
         self.configs[id as usize].kind
+    }
+
+    /// The precomputed canonical-key hash of pool entry `id` — a
+    /// deterministic (FNV-1a, platform-independent) fingerprint of the
+    /// config's (kind, sorted (slices, service) multiset).
+    #[inline]
+    pub fn key_hash(&self, id: u32) -> u64 {
+        self.key_hashes[id as usize]
     }
 
     pub fn len(&self) -> usize {
@@ -531,6 +661,67 @@ impl ConfigPool {
         ctx.config_from_pairs_on(self.configs[i].kind, &self.configs[i].pairs)
             .expect("pooled configs are feasible by construction")
     }
+}
+
+/// The bounded pair selection for [`PoolBounding::Bucketed`] on one
+/// kind. Services feasible on the kind are ordered by fractional slice
+/// demand — provisioning rate over the kind's best
+/// throughput-per-slice, the same per-service quantity the §8.1 lower
+/// bound sums — then every service is paired with each of the ≤B
+/// contiguous-bucket representatives and with its K nearest demand
+/// neighbors (which, in demand-sorted order, live within K positions on
+/// either side). Services with no feasible size are excluded outright:
+/// the full loop emits nothing for their pairs either. All orders are
+/// total, so the selection is deterministic; the result is
+/// ascending-lexicographic `(a, b)` with `a < b`.
+fn bounded_pairs(
+    ctx: &ProblemCtx,
+    kind: DeviceKind,
+    buckets: usize,
+    partners: usize,
+) -> Vec<(usize, usize)> {
+    let n = ctx.workload.len();
+    let mut order: Vec<(f64, usize)> = (0..n)
+        .filter_map(|sid| {
+            let mut best: Option<f64> = None;
+            for &size in kind.sizes() {
+                if let Some((_, thr)) = ctx.effective_on(kind, sid, size) {
+                    let per = thr / size.slices() as f64;
+                    if best.map(|b| per > b).unwrap_or(true) {
+                        best = Some(per);
+                    }
+                }
+            }
+            best.map(|per| (ctx.rate(sid) / per, sid))
+        })
+        .collect();
+    order.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+    let m = order.len();
+    if m < 2 {
+        return Vec::new();
+    }
+    let chunk = m.div_ceil(buckets.clamp(1, m));
+    let reps: Vec<usize> = (0..m).step_by(chunk).map(|i| order[i].1).collect();
+    let mut set = std::collections::BTreeSet::new();
+    for (pos, &(d, sid)) in order.iter().enumerate() {
+        for &r in &reps {
+            if r != sid {
+                set.insert((sid.min(r), sid.max(r)));
+            }
+        }
+        let lo = pos.saturating_sub(partners);
+        let hi = (pos + partners + 1).min(m);
+        let mut near: Vec<(f64, usize)> = order[lo..hi]
+            .iter()
+            .filter(|&&(_, o)| o != sid)
+            .map(|&(od, o)| ((od - d).abs(), o))
+            .collect();
+        near.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        for &(_, o) in near.iter().take(partners) {
+            set.insert((sid.min(o), sid.max(o)));
+        }
+    }
+    set.into_iter().collect()
 }
 
 fn push_config(
@@ -919,6 +1110,84 @@ mod tests {
                 (f, p) => panic!("winner presence drifted: {f:?} vs {p:?}"),
             }
         }
+    }
+
+    /// TENTPOLE: `PoolBounding::Off` is the bit-identity escape hatch —
+    /// `enumerate_bounded(Off, Off)` must equal `enumerate` byte for
+    /// byte: configs, pairs, utilities, kinds, and key hashes.
+    #[test]
+    fn bounded_pool_off_is_bit_identical() {
+        let (bank, w) = setup();
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let full = ConfigPool::enumerate(&ctx);
+        let off =
+            ConfigPool::enumerate_bounded(&ctx, PoolPruning::Off, PoolBounding::Off);
+        assert_eq!(full.len(), off.len());
+        for i in 0..full.len() {
+            assert_eq!(full.configs[i].kind, off.configs[i].kind, "config {i}");
+            assert_eq!(full.configs[i].pairs, off.configs[i].pairs, "config {i}");
+            assert_eq!(
+                full.configs[i].sparse_util, off.configs[i].sparse_util,
+                "config {i}"
+            );
+            assert_eq!(full.key_hash(i as u32), off.key_hash(i as u32), "config {i}");
+        }
+        for sid in 0..w.len() {
+            assert_eq!(full.touching(sid), off.touching(sid), "service {sid}");
+        }
+    }
+
+    /// TENTPOLE: bucketed bounding emits a strict subsequence of the
+    /// full enumeration (same order, same floats for kept configs),
+    /// never drops a single-service config, and composes with
+    /// dominance pruning.
+    #[test]
+    fn bounded_pool_is_subsequence_with_all_singles() {
+        let (bank, w) = setup();
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let full = ConfigPool::enumerate(&ctx);
+        let bounded = ConfigPool::enumerate_bounded(
+            &ctx,
+            PoolPruning::Off,
+            PoolBounding::Bucketed { buckets: 1, partners: 0 },
+        );
+        assert!(
+            bounded.len() < full.len(),
+            "{} !< {}",
+            bounded.len(),
+            full.len()
+        );
+        // Kept configs are a subsequence of the full enumeration.
+        let mut fi = 0;
+        for c in &bounded.configs {
+            while full.configs[fi].pairs != c.pairs || full.configs[fi].kind != c.kind {
+                fi += 1;
+            }
+            assert_eq!(full.configs[fi].sparse_util, c.sparse_util);
+            fi += 1;
+        }
+        // Single-service configs are never bounded away.
+        let singles = |p: &ConfigPool| {
+            p.configs
+                .iter()
+                .filter(|c| c.sparse_util.len() == 1)
+                .map(|c| (c.kind, c.pairs.clone()))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(singles(&full), singles(&bounded));
+        // Every service still has configs (fast algorithm stays
+        // feasible over the bounded pool).
+        for sid in 0..w.len() {
+            assert!(!bounded.touching(sid).is_empty(), "service {sid}");
+        }
+        // Composes with dominance pruning: bounded+pruned is a subset
+        // of bounded.
+        let both = ConfigPool::enumerate_bounded(
+            &ctx,
+            PoolPruning::Dominated,
+            PoolBounding::Bucketed { buckets: 1, partners: 0 },
+        );
+        assert!(both.len() <= bounded.len());
     }
 
     #[test]

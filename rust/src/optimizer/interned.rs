@@ -53,6 +53,45 @@ pub type ConfigId = u32;
 /// A100 deliver different throughput.
 pub type GeneKey = (u8, Vec<(u8, ServiceId)>);
 
+/// 64-bit FNV-1a over a word stream (each word contributes its 8
+/// little-endian bytes). Deterministic and platform-independent —
+/// population dedup fingerprints must be stable across runs and
+/// machines, which rules out `std`'s `DefaultHasher` (randomized per
+/// process and therefore a replay hazard).
+fn fnv1a64(words: impl IntoIterator<Item = u64>) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for w in words {
+        for b in w.to_le_bytes() {
+            h ^= u64::from(b);
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// FNV-1a fingerprint of a [`GeneKey`]: the kind tag followed by the
+/// sorted (slices, service) pairs. Equal keys hash equal; distinct
+/// keys collide with probability ~2⁻⁶⁴.
+pub(crate) fn hash_gene_key(key: &GeneKey) -> u64 {
+    fnv1a64(
+        std::iter::once(u64::from(key.0))
+            .chain(key.1.iter().flat_map(|&(sl, sid)| [u64::from(sl), sid as u64])),
+    )
+}
+
+/// [`hash_gene_key`] computed straight from a config's (size, service)
+/// pair list (any order — the key sorts). This is what
+/// [`ConfigPool`] precomputes per entry at enumeration time.
+pub(crate) fn hash_config_key(
+    kind: DeviceKind,
+    pairs: &[(crate::mig::InstanceSize, ServiceId)],
+) -> u64 {
+    let mut sp: Vec<(u8, ServiceId)> =
+        pairs.iter().map(|&(size, sid)| (size.slices(), sid)).collect();
+    sp.sort_unstable();
+    hash_gene_key(&(kind.index(), sp))
+}
+
 /// An off-pool GPU configuration with its cached exact sparse utility.
 ///
 /// `util` holds the nonzero per-service totals of `cfg.utility(ctx)` in
@@ -67,6 +106,8 @@ pub struct CustomConfig {
     /// Kind tag + sorted (slices, service) multiset — the canonical
     /// dedup key.
     pub key: GeneKey,
+    /// Precomputed [`hash_gene_key`] of `key`.
+    pub key_hash: u64,
 }
 
 impl CustomConfig {
@@ -85,7 +126,8 @@ impl CustomConfig {
             .collect();
         pairs.sort_unstable();
         let key = (cfg.kind.index(), pairs);
-        CustomConfig { cfg, util, key }
+        let key_hash = hash_gene_key(&key);
+        CustomConfig { cfg, util, key, key_hash }
     }
 }
 
@@ -148,21 +190,34 @@ impl Gene {
         }
     }
 
+    /// The precomputed deterministic fingerprint of [`Gene::key`] —
+    /// what population dedup compares instead of building and sorting
+    /// key vectors (pool genes read the pool's enumeration-time hash,
+    /// custom genes their construction-time hash).
+    #[inline]
+    pub fn key_hash(&self, pool: &ConfigPool) -> u64 {
+        match self {
+            Gene::Pool(id) => pool.key_hash(*id),
+            Gene::Custom(c) => c.key_hash,
+        }
+    }
+
+    /// This gene's cached sparse (service, utility) entries in the
+    /// canonical fold order — exactly what [`Gene::add_utility`] adds.
+    #[inline]
+    pub fn sparse_util<'p>(&'p self, pool: &'p ConfigPool) -> &'p [(ServiceId, f64)] {
+        match self {
+            Gene::Pool(id) => &pool.configs[*id as usize].sparse_util,
+            Gene::Custom(c) => &c.util,
+        }
+    }
+
     /// Add this gene's per-service utility totals to `comp` —
     /// bit-identical to the dense `comp.add(&cfg.utility(ctx))` of the
     /// materialized config.
     pub fn add_utility(&self, pool: &ConfigPool, comp: &mut CompletionRates) {
-        match self {
-            Gene::Pool(id) => {
-                for &(sid, u) in &pool.configs[*id as usize].sparse_util {
-                    comp.set(sid, comp.get(sid) + u);
-                }
-            }
-            Gene::Custom(c) => {
-                for &(sid, u) in &c.util {
-                    comp.set(sid, comp.get(sid) + u);
-                }
-            }
+        for &(sid, u) in self.sparse_util(pool) {
+            comp.set(sid, comp.get(sid) + u);
         }
     }
 
@@ -244,6 +299,22 @@ impl InternedDeployment {
         keys.sort_unstable();
         keys
     }
+
+    /// Order-insensitive u64 fingerprint of [`canonical_key`]: the
+    /// multiset of per-gene key hashes, sorted and FNV-folded together
+    /// with the gene count. Equal canonical keys always hash equal;
+    /// distinct keys collide with probability ~2⁻⁶⁴ (the population
+    /// dedup trade: a collision would deterministically drop one
+    /// distinct individual — it cannot break solve validity or
+    /// replayability). Costs two small allocations less than
+    /// [`canonical_key`] per comparison and no per-gene key clones.
+    ///
+    /// [`canonical_key`]: InternedDeployment::canonical_key
+    pub fn key_hash(&self, pool: &ConfigPool) -> u64 {
+        let mut hs: Vec<u64> = self.genes.iter().map(|g| g.key_hash(pool)).collect();
+        hs.sort_unstable();
+        fnv1a64(std::iter::once(hs.len() as u64).chain(hs))
+    }
 }
 
 #[cfg(test)]
@@ -318,7 +389,7 @@ mod tests {
     #[test]
     fn pool_and_custom_backing_share_keys() {
         // The same configuration interned as Pool(id) or as a custom
-        // gene must dedup together.
+        // gene must dedup together — keys and key hashes.
         let (bank, w) = fixture(3, 600.0);
         let ctx = ProblemCtx::new(&bank, &w).unwrap();
         let pool = ConfigPool::enumerate(&ctx);
@@ -326,6 +397,41 @@ mod tests {
             let as_pool = Gene::Pool(id as u32);
             let as_custom = Gene::custom(&ctx, pool.materialize(&ctx, id));
             assert_eq!(as_pool.key(&pool), as_custom.key(&pool), "config {id}");
+            assert_eq!(as_pool.key_hash(&pool), as_custom.key_hash(&pool), "config {id}");
+            assert_eq!(as_pool.key_hash(&pool), hash_gene_key(&as_pool.key(&pool)));
+        }
+    }
+
+    #[test]
+    fn key_hash_tracks_canonical_key() {
+        // The u64 fingerprint must be order-insensitive exactly like
+        // canonical_key, and distinguish the deployments the key does
+        // (no collisions across this pool's pairwise comparisons).
+        let (bank, w) = fixture(4, 500.0);
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let pool = ConfigPool::enumerate(&ctx);
+        let mut rng = Rng::new(0x51AB);
+        let deps: Vec<InternedDeployment> = (0..40)
+            .map(|_| {
+                let k = 1 + rng.below(6);
+                InternedDeployment {
+                    genes: (0..k)
+                        .map(|_| Gene::Pool(rng.below(pool.len()) as u32))
+                        .collect(),
+                }
+            })
+            .collect();
+        for a in &deps {
+            let mut shuffled = a.clone();
+            shuffled.genes.reverse();
+            assert_eq!(a.key_hash(&pool), shuffled.key_hash(&pool));
+            for b in &deps {
+                assert_eq!(
+                    a.canonical_key(&pool) == b.canonical_key(&pool),
+                    a.key_hash(&pool) == b.key_hash(&pool),
+                    "hash equality must track key equality"
+                );
+            }
         }
     }
 

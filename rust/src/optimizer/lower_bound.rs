@@ -7,12 +7,13 @@
 
 use super::gpu_config::ProblemCtx;
 
-/// Fractional compute slices needed by one service when it always runs
-/// on its most slice-efficient (kind, instance size) of the fleet
-/// (under its latency SLO). For a pure-A100 problem the scan order and
-/// floats match the seed single-kind implementation exactly.
-pub fn slices_needed(ctx: &ProblemCtx, service: usize) -> Option<f64> {
-    let slo = ctx.workload.services[service].slo;
+/// The best throughput-per-slice `service` achieves on any latency-
+/// feasible (kind, size) of the fleet — the **rate-independent** factor
+/// of [`slices_needed`]. Depends only on (model, latency SLO, fleet
+/// kinds), so callers can cache it across demand changes and rebuild
+/// only when the service set or the fleet changes (the scan order and
+/// floats match the seed implementation exactly).
+pub fn best_throughput_per_slice(ctx: &ProblemCtx, service: usize) -> Option<f64> {
     let mut best_per_slice: Option<f64> = None;
     for &kind in ctx.kinds() {
         for &s in kind.sizes() {
@@ -23,12 +24,20 @@ pub fn slices_needed(ctx: &ProblemCtx, service: usize) -> Option<f64> {
             }
         }
     }
-    Some(slo.throughput / best_per_slice?)
+    best_per_slice
+}
+
+/// Fractional compute slices needed by one service when it always runs
+/// on its most slice-efficient (kind, instance size) of the fleet
+/// (under its latency SLO). For a pure-A100 problem the scan order and
+/// floats match the seed single-kind implementation exactly.
+pub fn slices_needed(ctx: &ProblemCtx, service: usize) -> Option<f64> {
+    Some(ctx.rate(service) / best_throughput_per_slice(ctx, service)?)
 }
 
 /// Slice capacity of the largest device in the fleet — the per-GPU
 /// denominator of the rule-free bound (7.0 for any A100/H100 fleet).
-fn gpu_slice_capacity(ctx: &ProblemCtx) -> f64 {
+pub fn gpu_slice_capacity(ctx: &ProblemCtx) -> f64 {
     ctx.kinds()
         .iter()
         .map(|k| k.compute_slices())
@@ -89,6 +98,74 @@ impl SliceNeeds {
             .zip(remaining)
             .map(|(&need, &r)| if r <= 0.0 { 0.0 } else { need * r })
             .sum();
+        (total / self.capacity).ceil() as usize
+    }
+}
+
+/// Incrementally maintained [`lower_bound_gpus`] over a mutable-rate
+/// service catalog — the online quality gate's steady-state bound.
+///
+/// Construction caches the rate-independent [`best_throughput_per_slice`]
+/// per service (one `ProblemCtx` scan); after that, a demand change is
+/// an O(changed-services) patch of the cached per-service slice needs
+/// plus one trivial float fold — no profile-bank scan, no
+/// effective-throughput table rebuild, no `ProblemCtx` at all. The
+/// per-service need is computed by the exact expression
+/// [`slices_needed`] uses and [`IncrementalBound::gpus`] folds the
+/// needs in service order, so the bound is **bit-identical** to a
+/// from-scratch [`lower_bound_gpus`] over a context carrying the same
+/// rates (asserted on every event-stream prefix in
+/// `tests/solve_incremental.rs`).
+#[derive(Debug, Clone)]
+pub struct IncrementalBound {
+    /// Rate-independent best throughput-per-slice per service.
+    per_slice: Vec<f64>,
+    /// Current provisioning rate per service.
+    rates: Vec<f64>,
+    /// `needs[s] = rates[s] / per_slice[s]` — exactly [`slices_needed`].
+    needs: Vec<f64>,
+    capacity: f64,
+}
+
+impl IncrementalBound {
+    /// Snapshot the rate-independent factors (and current rates) of
+    /// `ctx`. This is the only place a `ProblemCtx` is needed.
+    pub fn new(ctx: &ProblemCtx) -> IncrementalBound {
+        let n = ctx.workload.len();
+        let per_slice: Vec<f64> = (0..n)
+            .map(|s| best_throughput_per_slice(ctx, s).expect("workload validated"))
+            .collect();
+        let rates: Vec<f64> = (0..n).map(|s| ctx.rate(s)).collect();
+        let needs: Vec<f64> =
+            rates.iter().zip(&per_slice).map(|(&r, &p)| r / p).collect();
+        IncrementalBound { per_slice, rates, needs, capacity: gpu_slice_capacity(ctx) }
+    }
+
+    /// Number of services covered.
+    pub fn len(&self) -> usize {
+        self.rates.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rates.is_empty()
+    }
+
+    /// The rate currently provisioned for `service`.
+    pub fn rate(&self, service: usize) -> f64 {
+        self.rates[service]
+    }
+
+    /// Retarget one service's demand — O(1).
+    pub fn set_rate(&mut self, service: usize, rate: f64) {
+        assert!(rate > 0.0, "service {service}: rate must be positive, got {rate}");
+        self.rates[service] = rate;
+        self.needs[service] = rate / self.per_slice[service];
+    }
+
+    /// The §8.1 lower bound at the current rates — bit-identical to
+    /// [`lower_bound_gpus`] recomputed from scratch at the same rates.
+    pub fn gpus(&self) -> usize {
+        let total: f64 = self.needs.iter().sum();
         (total / self.capacity).ceil() as usize
     }
 }
@@ -154,6 +231,39 @@ mod tests {
                 lower_bound_remaining(&ctx, &rem),
                 "{rem:?}"
             );
+        }
+    }
+
+    #[test]
+    fn incremental_bound_matches_rebuilt_ctx() {
+        // `ProblemCtx::update_rates` + `IncrementalBound::set_rate`
+        // must both equal a context built fresh over a workload that
+        // carries the new rates, bit for bit.
+        let bank = ProfileBank::synthetic();
+        let models = bank.simulation_models();
+        let services: Vec<(String, Slo)> = (0..5)
+            .map(|i| (models[i].clone(), Slo::new(400.0 + 50.0 * i as f64, 200.0)))
+            .collect();
+        let w = Workload::new("inc", services);
+        let mut ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let mut inc = IncrementalBound::new(&ctx);
+        assert_eq!(inc.gpus(), lower_bound_gpus(&ctx));
+        for (sid, rate) in [(1usize, 910.0), (3, 120.0), (1, 2222.0), (0, 55.5)] {
+            ctx.update_rates(&[(sid, rate)]);
+            inc.set_rate(sid, rate);
+            let fresh_services: Vec<(String, Slo)> = (0..w.len())
+                .map(|s| {
+                    let svc = &w.services[s];
+                    (svc.model.clone(), Slo::new(inc.rate(s), svc.slo.latency_ms))
+                })
+                .collect();
+            let wf = Workload::new("inc-fresh", fresh_services);
+            let fresh = ProblemCtx::new(&bank, &wf).unwrap();
+            assert_eq!(lower_bound_gpus(&ctx), lower_bound_gpus(&fresh));
+            assert_eq!(inc.gpus(), lower_bound_gpus(&fresh));
+            for s in 0..w.len() {
+                assert_eq!(slices_needed(&ctx, s), slices_needed(&fresh, s));
+            }
         }
     }
 

@@ -36,6 +36,7 @@ use std::collections::HashMap;
 use super::comp_rates::CompletionRates;
 use super::engine::ScoreEngine;
 use super::gpu_config::{pack_residual, ConfigPool, GpuConfig, ProblemCtx};
+use super::lower_bound::SliceNeeds;
 use super::OptimizerProcedure;
 use crate::util::rng::Rng;
 
@@ -153,6 +154,9 @@ impl Mcts {
             return Vec::new();
         }
         let pool = engine.pool();
+        // Cached per-service slice needs for the rollout's pack gate
+        // (one ctx scan per search, reused by every rollout).
+        let needs = SliceNeeds::new(ctx);
         let mut nodes: Vec<Node> = vec![Node {
             comp: completion.clone(),
             depth: 0,
@@ -166,7 +170,7 @@ impl Mcts {
         // Seed with one rollout from the root so there is always a
         // complete incumbent.
         let mut best_solution: Vec<RefillStep> =
-            self.rollout(ctx, engine, completion, &mut rollout_cache, rng);
+            self.rollout(ctx, engine, &needs, completion, &mut rollout_cache, rng);
         let mut best_len = best_solution.len();
 
         // ---------------- batched root-candidate evaluation
@@ -214,9 +218,11 @@ impl Mcts {
                     jobs
                 };
                 let workers = super::par::resolve_workers(self.cfg.parallelism);
+                let needs_ref = &needs;
                 let evals: Vec<(Vec<RefillStep>, HashMap<u64, Vec<u32>>)> =
                     super::par::run_indexed(jobs, workers, |(comp, mut r, mut local)| {
-                        let tail = self.rollout(ctx, engine, &comp, &mut local, &mut r);
+                        let tail =
+                            self.rollout(ctx, engine, needs_ref, &comp, &mut local, &mut r);
                         (tail, local)
                     });
                 for (i, (tail, local)) in evals.into_iter().enumerate() {
@@ -316,8 +322,14 @@ impl Mcts {
             }
 
             // ---------------- rollout (memoized + randomized)
-            let tail =
-                self.rollout(ctx, engine, &nodes[cur].comp, &mut rollout_cache, rng);
+            let tail = self.rollout(
+                ctx,
+                engine,
+                &needs,
+                &nodes[cur].comp,
+                &mut rollout_cache,
+                rng,
+            );
             let total = nodes[cur].depth + tail.len();
 
             // Track the incumbent complete solution.
@@ -370,6 +382,7 @@ impl Mcts {
         &self,
         ctx: &ProblemCtx,
         engine: &ScoreEngine,
+        needs: &SliceNeeds,
         comp: &CompletionRates,
         cache: &mut HashMap<u64, Vec<u32>>,
         rng: &mut Rng,
@@ -380,17 +393,27 @@ impl Mcts {
         // Far more than any sane deployment; break glass on bugs.
         const MAX_STEPS: usize = 100_000;
         while !comp.all_satisfied() && out.len() < MAX_STEPS {
+            let remaining = comp.remaining();
             // Endgame: one multi-service GPU finishing the job beats any
-            // sequence of pooled two-service configs.
-            if let Some(cfg) = pack_residual(ctx, &comp) {
-                let mut after = comp.clone();
-                after.add(&cfg.utility(ctx));
-                if after.all_satisfied() {
-                    out.push(RefillStep::Packed(cfg));
-                    break;
+            // sequence of pooled two-service configs. A pack is only
+            // *accepted* when it satisfies everything, so the attempt —
+            // a full residual-packing search, and the rollout's
+            // dominant cost far from the leaf — is gated on the cached
+            // rule-free bound. The gate is observably identical: the
+            // bound is admissible, a pack consumes no RNG, and the one
+            // extra GPU of slack makes the ε-satisfaction tolerance
+            // (≤ EPS · Σ needs slices, ≪ 1 slice) provably unable to
+            // flip the outcome when the bound says > 2 GPUs remain.
+            if needs.lower_bound_remaining(&remaining) <= 2 {
+                if let Some(cfg) = pack_residual(ctx, &comp) {
+                    let mut after = comp.clone();
+                    after.add(&cfg.utility(ctx));
+                    if after.all_satisfied() {
+                        out.push(RefillStep::Packed(cfg));
+                        break;
+                    }
                 }
             }
-            let remaining = comp.remaining();
             let sig = comp.unsatisfied_signature();
             let cands = cache
                 .entry(sig)
@@ -571,12 +594,14 @@ mod tests {
         let zero = CompletionRates::zeros(w.len());
         let engine = ScoreEngine::new(&pool, &zero);
         let mcts = Mcts::new(MctsConfig { iterations: 30, ..Default::default() });
+        let needs = SliceNeeds::new(&ctx);
         let mut cache = HashMap::new();
         let mut rng = Rng::new(3);
         let mut total_steps = 0;
         for _ in 0..10 {
-            total_steps +=
-                mcts.rollout(&ctx, &engine, &zero, &mut cache, &mut rng).len();
+            total_steps += mcts
+                .rollout(&ctx, &engine, &needs, &zero, &mut cache, &mut rng)
+                .len();
         }
         assert!(
             cache.len() < total_steps,

@@ -46,10 +46,13 @@ pub mod two_phase;
 pub use comp_rates::CompletionRates;
 pub use engine::ScoreEngine;
 pub use ga::{GaConfig, GeneticAlgorithm};
-pub use gpu_config::{ConfigPool, GpuConfig, InstanceAssign, PoolPruning, ProblemCtx};
+pub use gpu_config::{
+    ctx_rebuild_count, ConfigPool, GpuConfig, InstanceAssign, PoolBounding,
+    PoolPruning, ProblemCtx,
+};
 pub use greedy::Greedy;
 pub use interned::{ConfigId, CustomConfig, Gene, InternedDeployment};
-pub use lower_bound::lower_bound_gpus;
+pub use lower_bound::{lower_bound_gpus, IncrementalBound};
 pub use mcts::{Mcts, MctsConfig, RefillStep};
 pub use pipeline::{OptimizerPipeline, PipelineBudget, PipelineOutcome};
 pub use two_phase::{TwoPhase, TwoPhaseConfig};
@@ -97,7 +100,7 @@ impl Deployment {
     pub fn throughput_per_service(&self, ctx: &ProblemCtx) -> Vec<f64> {
         let c = self.completion(ctx);
         (0..ctx.workload.len())
-            .map(|i| c.get(i) * ctx.workload.services[i].slo.throughput)
+            .map(|i| c.get(i) * ctx.rate(i))
             .collect()
     }
 }

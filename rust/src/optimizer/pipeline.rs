@@ -15,7 +15,7 @@ use std::time::{Duration, Instant};
 use super::comp_rates::CompletionRates;
 use super::engine::ScoreEngine;
 use super::ga::{GaConfig, GaHistory, GeneticAlgorithm};
-use super::gpu_config::{ConfigPool, GpuConfig, PoolPruning, ProblemCtx};
+use super::gpu_config::{ConfigPool, GpuConfig, PoolBounding, PoolPruning, ProblemCtx};
 use super::greedy::{run_with_engine, run_with_engine_tracked};
 use super::interned::InternedDeployment;
 use super::mcts::MctsConfig;
@@ -48,6 +48,18 @@ pub struct PipelineBudget {
     /// default) keeps the historical pool and is the bit-identity
     /// escape hatch; see [`PoolPruning`] for what `Dominated` drops.
     pub pruning: PoolPruning,
+    /// Pair-enumeration bounding applied at enumeration time. `Off`
+    /// (the default) enumerates every cross-service pair and is the
+    /// bit-identity escape hatch; `Bucketed` keeps the pair loop — and
+    /// the pool size — O(services·(buckets+partners)) instead of
+    /// O(services²), the scale knob for 1k-service replans. Composes
+    /// with `pruning`; see [`PoolBounding`].
+    pub bounding: PoolBounding,
+    /// Delta-evaluated GA offspring (patch the parent's cached
+    /// completion instead of re-folding the genome). Bit-identical to
+    /// the full recompute — `false` is the reference path kept for
+    /// differential tests and baseline benches.
+    pub ga_delta: bool,
 }
 
 impl Default for PipelineBudget {
@@ -60,6 +72,8 @@ impl Default for PipelineBudget {
             seed: 0x6A,
             parallelism: None,
             pruning: PoolPruning::default(),
+            bounding: PoolBounding::default(),
+            ga_delta: true,
         }
     }
 }
@@ -82,6 +96,18 @@ impl PipelineBudget {
         self
     }
 
+    /// Select the pair-bounding mode (builder-style).
+    pub fn with_bounding(mut self, bounding: PoolBounding) -> PipelineBudget {
+        self.bounding = bounding;
+        self
+    }
+
+    /// Toggle delta-evaluated GA offspring (builder-style).
+    pub fn with_ga_delta(mut self, ga_delta: bool) -> PipelineBudget {
+        self.ga_delta = ga_delta;
+        self
+    }
+
     /// The [`GaConfig`] realizing this budget (other GA knobs default).
     pub fn ga_config(&self) -> GaConfig {
         GaConfig {
@@ -91,6 +117,7 @@ impl PipelineBudget {
             time_budget: self.time_budget,
             seed: self.seed,
             parallelism: self.parallelism,
+            delta_fitness: self.ga_delta,
             ..Default::default()
         }
     }
@@ -129,7 +156,7 @@ impl<'a> OptimizerPipeline<'a> {
         ctx: &'a ProblemCtx<'a>,
         budget: PipelineBudget,
     ) -> OptimizerPipeline<'a> {
-        let pool = ConfigPool::enumerate_pruned(ctx, budget.pruning);
+        let pool = ConfigPool::enumerate_bounded(ctx, budget.pruning, budget.bounding);
         OptimizerPipeline { ctx, pool, budget }
     }
 

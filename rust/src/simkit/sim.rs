@@ -308,7 +308,7 @@ impl<'a> Simulation<'a> {
                             sched.quality.incremental =
                                 sched.quality.incremental.saturating_sub(handled);
                             match self
-                                .plan_transition(&cluster, &controller, &demand, t)
+                                .plan_transition(&mut cluster, &controller, &demand, t)
                             {
                                 Ok(actions) => {
                                     replans += 1;
@@ -381,7 +381,8 @@ impl<'a> Simulation<'a> {
                     } else {
                         demand.clone()
                     };
-                    match self.plan_transition(&cluster, &controller, &provision_demand, t)
+                    match self
+                        .plan_transition(&mut cluster, &controller, &provision_demand, t)
                     {
                         Ok(actions) => {
                             let provisioned: Vec<f64> = provision_demand
@@ -560,7 +561,7 @@ impl<'a> Simulation<'a> {
     /// ids, then the §6 exchange-and-compact plan from the live state.
     fn plan_transition(
         &self,
-        cluster: &ClusterState,
+        cluster: &mut ClusterState,
         controller: &Controller,
         demand: &[f64],
         t_s: f64,

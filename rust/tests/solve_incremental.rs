@@ -1,0 +1,221 @@
+//! SATELLITE: the incremental-replan contracts.
+//!
+//! Three oracles for the 1k-service solve path:
+//!
+//! 1. **Delta fitness is exact** — the GA with delta-evaluated
+//!    offspring (patched completion rates) produces bit-identical
+//!    deployments and per-round history to the full-recompute
+//!    reference, across 40 (workload, seed, parallelism) cases.
+//! 2. **Bounded pools are near-exact** — demand-bucketed pair
+//!    enumeration ([`PoolBounding::Bucketed`]) keeps the fast solve
+//!    within 2% GPUs (1-GPU floor) of the unbounded pool at 256
+//!    services; at 1k services — where the O(n²) unbounded pool does
+//!    not fit in memory, so no differential is possible — the bounded
+//!    pool must still cover every service and solve validly.
+//! 3. **The incremental lower bound is exact** — after every prefix of
+//!    a random rate-delta stream, the O(changed)-patched
+//!    [`IncrementalBound`] equals a from-scratch
+//!    [`lower_bound_gpus`] over a context carrying the same rates.
+
+use mig_serving::optimizer::{
+    lower_bound_gpus, ConfigPool, IncrementalBound, OptimizerPipeline, PipelineBudget,
+    PoolBounding, PoolPruning, ProblemCtx,
+};
+use mig_serving::perf::ProfileBank;
+use mig_serving::spec::{Slo, Workload};
+use mig_serving::util::rng::Rng;
+use mig_serving::workload::micro_workload;
+
+fn fixture(bank: &ProfileBank, n: usize, thr: f64) -> Workload {
+    let models = bank.simulation_models();
+    Workload::new(
+        format!("solve-incremental-{n}"),
+        (0..n)
+            .map(|i| {
+                (
+                    models[i % models.len()].clone(),
+                    Slo::new(thr * (1.0 + 0.17 * (i % 5) as f64), 200.0),
+                )
+            })
+            .collect(),
+    )
+}
+
+/// A 256/1k-service workload with per-service rates drawn from `rng`
+/// (the "random instances" of the bounded-pool differential).
+fn random_workload(bank: &ProfileBank, n: usize, rng: &mut Rng) -> Workload {
+    let models = bank.simulation_models();
+    Workload::new(
+        format!("solve-random-{n}"),
+        (0..n)
+            .map(|i| {
+                (
+                    models[i % models.len()].clone(),
+                    Slo::new(20.0 + rng.f64() * 180.0, 300.0),
+                )
+            })
+            .collect(),
+    )
+}
+
+/// 1: 20 (workload, seed) cases x parallelism {1, 8}: the delta-fitness
+/// GA must match the full-recompute GA bit for bit — same best
+/// deployment (labels), same per-round history, at every worker count.
+#[test]
+fn delta_fitness_ga_is_bit_identical_to_full_recompute() {
+    let bank = ProfileBank::synthetic();
+    for case in 0..20u64 {
+        let n = 4 + (case as usize % 5);
+        let thr = 400.0 + 60.0 * (case % 7) as f64;
+        let w = fixture(&bank, n, thr);
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        for par in [1usize, 8] {
+            let budget = |ga_delta: bool| PipelineBudget {
+                ga_rounds: 2,
+                ga_patience: 2,
+                mcts_iterations: 10,
+                seed: 0xC0DE + case,
+                parallelism: Some(par),
+                ..Default::default()
+            }
+            .with_ga_delta(ga_delta);
+            let delta = OptimizerPipeline::with_budget(&ctx, budget(true))
+                .optimize()
+                .unwrap();
+            let full = OptimizerPipeline::with_budget(&ctx, budget(false))
+                .optimize()
+                .unwrap();
+            let l_delta: Vec<String> =
+                delta.best.gpus.iter().map(|c| c.label()).collect();
+            let l_full: Vec<String> =
+                full.best.gpus.iter().map(|c| c.label()).collect();
+            assert_eq!(
+                l_delta, l_full,
+                "case {case} par {par}: delta-fitness GA diverged from reference"
+            );
+            assert_eq!(
+                delta.history.best_gpus_per_round, full.history.best_gpus_per_round,
+                "case {case} par {par}: GA round history diverged"
+            );
+            assert!(delta.best.is_valid(&ctx));
+        }
+    }
+}
+
+/// 2a: bounded pools keep the fast solve within 2% GPUs (1-GPU floor)
+/// of the unbounded pool on 256-service instances — one structured,
+/// two random.
+#[test]
+fn bounded_pool_fast_solve_within_two_percent_at_256() {
+    let bank = ProfileBank::synthetic();
+    let bounding = PoolBounding::Bucketed { buckets: 16, partners: 4 };
+    let mut rng = Rng::new(0xB0B);
+    let workloads = vec![
+        micro_workload(&bank, 256, 0.25),
+        random_workload(&bank, 256, &mut rng),
+        random_workload(&bank, 256, &mut rng),
+    ];
+    for w in &workloads {
+        let ctx = ProblemCtx::new(&bank, w).unwrap();
+        let p_full =
+            OptimizerPipeline::with_budget(&ctx, PipelineBudget::fast_only());
+        let p_bounded = OptimizerPipeline::with_budget(
+            &ctx,
+            PipelineBudget::fast_only().with_bounding(bounding),
+        );
+        let d_full = p_full.fast().unwrap();
+        let d_bounded = p_bounded.fast().unwrap();
+        assert!(d_full.is_valid(&ctx));
+        assert!(d_bounded.is_valid(&ctx), "{}: bounded solve invalid", w.name);
+        let (gf, gb) = (d_full.num_gpus(), d_bounded.num_gpus());
+        assert!(
+            gb <= gf + (gf / 50).max(1),
+            "{}: bounded fast solve {gb} GPUs vs full {gf} — over the 2% budget",
+            w.name
+        );
+        assert!(p_bounded.pool().len() < p_full.pool().len());
+    }
+}
+
+/// 2b: at 1k services the unbounded pool is out of reach (O(n²) pairs,
+/// tens of millions of configs — no differential possible), so the
+/// bounded pool carries the structural guarantees alone: every service
+/// still reachable, singles unbounded, solve valid, pool
+/// O(n·(buckets+partners)) rather than O(n²).
+#[test]
+fn bounded_pool_structural_guarantees_at_1k() {
+    let bank = ProfileBank::synthetic();
+    let w = micro_workload(&bank, 1000, 0.1);
+    let ctx = ProblemCtx::new(&bank, &w).unwrap();
+    let bounding = PoolBounding::Bucketed { buckets: 8, partners: 2 };
+    let pool = ConfigPool::enumerate_bounded(&ctx, PoolPruning::Off, bounding);
+    assert!(!pool.is_empty());
+    for sid in 0..w.len() {
+        assert!(
+            !pool.touching(sid).is_empty(),
+            "service {sid} unreachable in the bounded pool"
+        );
+    }
+    // The whole point: far fewer pairs than the 499,500 of the full
+    // enumeration — the pool stays linear-ish in services.
+    let per_service = pool.len() as f64 / w.len() as f64;
+    assert!(
+        per_service < 2000.0,
+        "bounded pool grew superlinearly: {} configs for 1k services",
+        pool.len()
+    );
+    let p_bounded = OptimizerPipeline::with_budget(
+        &ctx,
+        PipelineBudget::fast_only().with_bounding(bounding),
+    );
+    let dep = p_bounded.fast().unwrap();
+    assert!(dep.is_valid(&ctx), "bounded fast solve invalid at 1k services");
+}
+
+/// 3: the incrementally-patched lower bound equals the from-scratch
+/// bound after **every** prefix of a 100-event random rate stream, and
+/// `ProblemCtx::update_rates` + `lower_bound_gpus` agrees with both.
+#[test]
+fn incremental_lower_bound_matches_from_scratch_on_every_prefix() {
+    let bank = ProfileBank::synthetic();
+    let models = bank.simulation_models();
+    let n = 12usize;
+    let mut rates: Vec<f64> =
+        (0..n).map(|i| 150.0 + 25.0 * i as f64).collect();
+    let build = |rates: &[f64]| {
+        Workload::new(
+            "lb-stream",
+            (0..n)
+                .map(|i| {
+                    (models[i % models.len()].clone(), Slo::new(rates[i], 250.0))
+                })
+                .collect(),
+        )
+    };
+    let w0 = build(&rates);
+    let mut ctx = ProblemCtx::new(&bank, &w0).unwrap();
+    let mut bound = IncrementalBound::new(&ctx);
+    let mut rng = Rng::new(0x10_B0_57);
+    for step in 0..100 {
+        let sid = rng.below(n);
+        let rate = 40.0 + rng.f64() * 600.0;
+        rates[sid] = rate;
+        // O(changed) patches on both incremental paths...
+        bound.set_rate(sid, rate);
+        ctx.update_rates(&[(sid, rate)]);
+        // ...vs a context built from scratch at the prefix's rates.
+        let w = build(&rates);
+        let fresh = ProblemCtx::new(&bank, &w).unwrap();
+        let expect = lower_bound_gpus(&fresh);
+        assert_eq!(
+            bound.gpus(),
+            expect,
+            "step {step}: patched IncrementalBound drifted from scratch"
+        );
+        assert_eq!(
+            lower_bound_gpus(&ctx),
+            expect,
+            "step {step}: update_rates ctx drifted from scratch"
+        );
+    }
+}
