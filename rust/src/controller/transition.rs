@@ -44,6 +44,7 @@ impl Controller {
         cluster: &mut ClusterState,
         target: &Deployment,
     ) -> anyhow::Result<(TransitionPlan, f64)> {
+        let _span = crate::obsv::span("controller.plan");
         let t0 = Instant::now();
         let mut scratch = ScratchState::new(cluster);
         let mut actions = Vec::new();
@@ -62,7 +63,52 @@ impl Controller {
         // roll back in Drop).
         scratch.rollback();
         let algorithm_s = t0.elapsed().as_secs_f64();
-        Ok((parallelize(actions), algorithm_s))
+        let plan = parallelize(actions);
+        if crate::obsv::active() {
+            self.record_plan_timeline(cluster, &plan);
+        }
+        Ok((plan, algorithm_s))
+    }
+
+    /// Observability only: replay the plan's actions on a fresh scratch
+    /// overlay and emit one `transition.action` record per action with
+    /// its aggregate-capacity delta (req/s across all services). Rolled
+    /// back before returning, so it is as pure — and clone-free — as
+    /// [`Controller::plan`] itself; never called unless a recorder is
+    /// installed.
+    fn record_plan_timeline(&self, cluster: &mut ClusterState, plan: &TransitionPlan) {
+        let mut scratch = ScratchState::new(cluster);
+        let mut capacity: f64 =
+            scratch.service_throughputs(self.n_services).iter().sum();
+        for (i, act) in plan.actions.iter().enumerate() {
+            let kind =
+                act.kind(|a, b| scratch.same_machine(a, b)).label().to_string();
+            if Executor::apply(&mut scratch, act).is_err() {
+                // The real executor surfaces this; the timeline is
+                // best-effort and must never fail planning.
+                break;
+            }
+            let after: f64 =
+                scratch.service_throughputs(self.n_services).iter().sum();
+            crate::obsv::event(
+                "transition.action",
+                &[
+                    ("idx", i.into()),
+                    ("kind", kind.into()),
+                    ("capacity_delta", (after - capacity).into()),
+                    ("capacity", after.into()),
+                ],
+            );
+            capacity = after;
+        }
+        crate::obsv::event(
+            "transition.plan",
+            &[
+                ("actions", plan.num_actions().into()),
+                ("stages", plan.num_stages().into()),
+            ],
+        );
+        scratch.rollback();
     }
 
     /// Plan and execute a transition on `cluster` through `executor`
@@ -273,5 +319,40 @@ mod tests {
         // back state is byte-identical.
         let (plan2, _) = controller.plan(&mut cluster, &dep).unwrap();
         assert_eq!(plan.num_actions(), plan2.num_actions());
+    }
+
+    /// With a recorder installed, planning additionally emits one
+    /// `transition.action` record per planned action — and stays just
+    /// as pure and clone-free as the recorder-off path.
+    #[test]
+    fn plan_timeline_records_every_action_and_stays_pure() {
+        use crate::obsv;
+        let bank = ProfileBank::synthetic();
+        let w = Workload::new(
+            "timeline",
+            vec![("bert-base-uncased".to_string(), Slo::new(100.0, 300.0))],
+        );
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let dep = Greedy::new().solve(&ctx).unwrap();
+        let mut cluster = ClusterState::new(1, 8);
+        let controller = Controller::new(1);
+        let rec = std::sync::Arc::new(obsv::Recorder::new(obsv::Clock::Logical));
+        let _g = obsv::install(rec.clone());
+        let clones_before = crate::cluster::cluster_clone_count();
+        let (plan, _) = controller.plan(&mut cluster, &dep).unwrap();
+        assert_eq!(
+            crate::cluster::cluster_clone_count(),
+            clones_before,
+            "the timeline replay must not clone the cluster"
+        );
+        assert!(cluster.used_gpus().is_empty(), "plan() must stay pure");
+        let records = rec.records();
+        let actions = records
+            .iter()
+            .filter(|r| r.name() == "transition.action")
+            .count();
+        assert_eq!(actions, plan.num_actions());
+        assert!(records.iter().any(|r| r.name() == "transition.plan"));
+        assert!(records.iter().any(|r| r.name() == "controller.plan"));
     }
 }

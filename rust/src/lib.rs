@@ -33,6 +33,8 @@ pub mod mig;
 pub mod perf;
 pub mod spec;
 
+pub mod obsv;
+
 pub mod optimizer;
 pub mod controller;
 pub mod cluster;

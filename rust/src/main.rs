@@ -45,6 +45,8 @@ fn app() -> App {
                 .opt("time-budget-s", "0", "wall-clock budget for phase 2, seconds (0 = unlimited)")
                 .opt("threads", "0", "worker threads for the two-phase solve (0 = all cores; output is identical at any value unless --time-budget-s cuts rounds short)")
                 .opt("out", "", "write the deployment as JSON to this path")
+                .opt("trace-out", "", "write a deterministic trace of the solve (Chrome trace_event JSON; .jsonl for JSONL)")
+                .opt("metrics-out", "", "write solver metrics in Prometheus text exposition to this path")
                 .flag("verbose", "print per-GPU configurations"),
             Command::new("transition", "plan + simulate a deployment transition")
                 .opt("from", "daytime", "current workload")
@@ -63,6 +65,8 @@ fn app() -> App {
                 .opt("gap-threshold", "0.5", "incremental policy: escalate past this optimality gap vs the §8.1 lower bound")
                 .opt("repair-depth", "4", "incremental policy: max pods evicted per local repair")
                 .opt("json", "", "write the control-vs-baseline report JSON to this path")
+                .opt("trace-out", "", "write a virtual-clock trace of the run (Chrome trace_event JSON; .jsonl for JSONL)")
+                .opt("metrics-out", "", "write run metrics in Prometheus text exposition to this path")
                 .flag("quick", "coarse tick (300s) — the CI smoke configuration")
                 .flag("verbose", "print the full event log"),
             Command::new("online", "replay a scenario's workload events through the incremental scheduler (no clock model)")
@@ -72,6 +76,8 @@ fn app() -> App {
                 .opt("gap-threshold", "0.5", "escalate past this optimality gap vs the §8.1 lower bound")
                 .opt("repair-depth", "4", "max pods evicted per local repair")
                 .opt("json", "", "write the replay summary JSON to this path")
+                .opt("trace-out", "", "write a trace of the replay (Chrome trace_event JSON; .jsonl for JSONL)")
+                .opt("metrics-out", "", "write replay metrics in Prometheus text exposition to this path")
                 .flag("verbose", "print every event as it is handled"),
             Command::new("serve", "deploy on the PJRT runtime and measure throughput")
                 .opt("workload", "night", "daytime|night (scaled real-world)")
@@ -85,6 +91,44 @@ fn app() -> App {
                 .opt("kind", "a100", "device kind: a100|a30|h100"),
         ],
     }
+}
+
+/// Install a recorder for the duration of a subcommand when
+/// `--trace-out` / `--metrics-out` were passed; the caller keeps the
+/// pair alive across the run and hands it to [`obsv_export`] at the
+/// end. `None` (the default) leaves every hook on its disabled fast
+/// path.
+fn obsv_setup(
+    args: &mig_serving::util::cli::Args,
+    clock: mig_serving::obsv::Clock,
+) -> Option<(std::sync::Arc<mig_serving::obsv::Recorder>, mig_serving::obsv::InstallGuard)>
+{
+    let trace = args.get("trace-out").unwrap();
+    let metrics = args.get("metrics-out").unwrap();
+    if trace.is_empty() && metrics.is_empty() {
+        return None;
+    }
+    let rec = std::sync::Arc::new(mig_serving::obsv::Recorder::new(clock));
+    let guard = mig_serving::obsv::install(rec.clone());
+    Some((rec, guard))
+}
+
+/// Write the requested trace / metrics files from the run's recorder.
+fn obsv_export(
+    args: &mig_serving::util::cli::Args,
+    rec: &mig_serving::obsv::Recorder,
+) -> anyhow::Result<()> {
+    let trace = args.get("trace-out").unwrap();
+    if !trace.is_empty() {
+        rec.write_trace(std::path::Path::new(trace))?;
+        println!("wrote {trace}");
+    }
+    let metrics = args.get("metrics-out").unwrap();
+    if !metrics.is_empty() {
+        rec.write_metrics(std::path::Path::new(metrics))?;
+        println!("wrote {metrics}");
+    }
+    Ok(())
 }
 
 fn load_workload(bank: &ProfileBank, name: &str) -> anyhow::Result<Workload> {
@@ -118,6 +162,7 @@ fn parse_kinds(spec: &str) -> anyhow::Result<Vec<mig_serving::mig::DeviceKind>> 
 }
 
 fn cmd_optimize(args: &mig_serving::util::cli::Args) -> anyhow::Result<()> {
+    let obsv = obsv_setup(args, mig_serving::obsv::Clock::Logical);
     let bank = ProfileBank::synthetic();
     let w = load_workload(&bank, args.get("workload").unwrap())?;
     let kinds = parse_kinds(args.get("kinds").unwrap())?;
@@ -161,6 +206,10 @@ fn cmd_optimize(args: &mig_serving::util::cli::Args) -> anyhow::Result<()> {
         let v = deployment_json(&dep);
         std::fs::write(out, v.to_pretty())?;
         println!("wrote {out}");
+    }
+    if let Some((rec, guard)) = obsv {
+        drop(guard);
+        obsv_export(args, &rec)?;
     }
     Ok(())
 }
@@ -249,6 +298,7 @@ fn cmd_simulate(args: &mig_serving::util::cli::Args) -> anyhow::Result<()> {
         scenario, scenario_fleet, ReplanPolicy, SimConfig, Simulation, SCENARIOS,
     };
 
+    let obsv = obsv_setup(args, mig_serving::obsv::Clock::Virtual);
     let bank = ProfileBank::synthetic();
     let name = args.get("scenario").unwrap();
     anyhow::ensure!(
@@ -353,6 +403,10 @@ fn cmd_simulate(args: &mig_serving::util::cli::Args) -> anyhow::Result<()> {
         std::fs::write(out, cmp.to_json().to_pretty() + "\n")?;
         println!("wrote {out}");
     }
+    if let Some((rec, guard)) = obsv {
+        drop(guard);
+        obsv_export(args, &rec)?;
+    }
     Ok(())
 }
 
@@ -367,6 +421,7 @@ fn cmd_online(args: &mig_serving::util::cli::Args) -> anyhow::Result<()> {
     };
     use mig_serving::simkit::{scenario, scenario_fleet, GpuEventKind, Trace, SCENARIOS};
 
+    let obsv = obsv_setup(args, mig_serving::obsv::Clock::Logical);
     let bank = ProfileBank::synthetic();
     let name = args.get("scenario").unwrap();
     anyhow::ensure!(
@@ -581,6 +636,10 @@ fn cmd_online(args: &mig_serving::util::cli::Args) -> anyhow::Result<()> {
         ]);
         std::fs::write(out, v.to_pretty() + "\n")?;
         println!("wrote {out}");
+    }
+    if let Some((rec, guard)) = obsv {
+        drop(guard);
+        obsv_export(args, &rec)?;
     }
     Ok(())
 }

@@ -1,0 +1,255 @@
+//! Exporters: Chrome `trace_event` JSON (open in Perfetto or
+//! `chrome://tracing`), Prometheus-style text exposition, and JSONL
+//! event logs. All three serialize the recorder's state in a fixed
+//! order (record stream order; metrics in sorted-name order), so equal
+//! recorder states produce byte-equal exports.
+
+use std::path::Path;
+
+use super::recorder::{Record, Recorder};
+use crate::util::json::Value;
+
+/// Prometheus metric-name charset: `[a-zA-Z0-9_:]`; everything else
+/// (dots, dashes) maps to `_`.
+fn sanitize(name: &str) -> String {
+    name.chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == ':' { c } else { '_' })
+        .collect()
+}
+
+fn args_obj(args: &[(String, Value)]) -> Value {
+    Value::Obj(args.to_vec())
+}
+
+impl Recorder {
+    /// The trace as one Chrome `trace_event` JSON document.
+    pub fn to_chrome_json(&self) -> String {
+        self.with_inner(|records, _, _, _| {
+            let events: Vec<Value> = records
+                .iter()
+                .map(|r| {
+                    let mut fields: Vec<(&str, Value)> = vec![
+                        ("name", Value::from(r.name())),
+                        ("ph", Value::from(match r {
+                            Record::Begin { .. } => "B",
+                            Record::End { .. } => "E",
+                            Record::Event { .. } => "i",
+                        })),
+                        ("ts", Value::Num(r.ts_us() as f64)),
+                        ("pid", Value::Num(1.0)),
+                        ("tid", Value::Num(1.0)),
+                    ];
+                    match r {
+                        Record::Begin { args, .. } if !args.is_empty() => {
+                            fields.push(("args", args_obj(args)));
+                        }
+                        Record::Event { args, .. } => {
+                            // Instant events carry thread scope.
+                            fields.push(("s", Value::from("t")));
+                            if !args.is_empty() {
+                                fields.push(("args", args_obj(args)));
+                            }
+                        }
+                        _ => {}
+                    }
+                    Value::obj(fields)
+                })
+                .collect();
+            Value::obj(vec![
+                ("traceEvents", Value::Arr(events)),
+                ("displayTimeUnit", Value::from("ms")),
+            ])
+            .to_string()
+        })
+    }
+
+    /// The record stream as JSONL: one compact JSON object per line.
+    pub fn to_jsonl(&self) -> String {
+        self.with_inner(|records, _, _, _| {
+            let mut out = String::new();
+            for r in records {
+                let kind = match r {
+                    Record::Begin { .. } => "begin",
+                    Record::End { .. } => "end",
+                    Record::Event { .. } => "event",
+                };
+                let mut fields: Vec<(&str, Value)> = vec![
+                    ("kind", Value::from(kind)),
+                    ("name", Value::from(r.name())),
+                    ("ts_us", Value::Num(r.ts_us() as f64)),
+                ];
+                match r {
+                    Record::Begin { args, .. } | Record::Event { args, .. }
+                        if !args.is_empty() =>
+                    {
+                        fields.push(("args", args_obj(args)));
+                    }
+                    _ => {}
+                }
+                out.push_str(&Value::obj(fields).to_string());
+                out.push('\n');
+            }
+            out
+        })
+    }
+
+    /// The metrics registry as Prometheus text exposition. Counters and
+    /// gauges are one sample each; histograms expose as summaries with
+    /// p50/p90/p99 quantiles plus `_sum`, `_count`, and the explicit
+    /// `_overflow` counter (samples past the bucket ceiling).
+    pub fn to_prometheus(&self) -> String {
+        self.with_inner(|_, counters, gauges, hists| {
+            let mut out = String::new();
+            for (name, v) in counters {
+                let n = sanitize(name);
+                out.push_str(&format!("# TYPE {n} counter\n{n} {v}\n"));
+            }
+            for (name, v) in gauges {
+                let n = sanitize(name);
+                out.push_str(&format!("# TYPE {n} gauge\n{n} {v}\n"));
+            }
+            for (name, h) in hists {
+                let n = sanitize(name);
+                out.push_str(&format!("# TYPE {n} summary\n"));
+                for (q, p) in [("0.5", 50.0), ("0.9", 90.0), ("0.99", 99.0)] {
+                    out.push_str(&format!(
+                        "{n}{{quantile=\"{q}\"}} {}\n",
+                        h.percentile(p)
+                    ));
+                }
+                out.push_str(&format!("{n}_sum {}\n", h.mean() * h.count() as f64));
+                out.push_str(&format!("{n}_count {}\n", h.count()));
+                out.push_str(&format!("{n}_overflow {}\n", h.overflow()));
+            }
+            out
+        })
+    }
+
+    /// A compact, deterministic roll-up for embedding in reports
+    /// (record counts by kind plus the counter registry).
+    pub fn summary_json(&self) -> Value {
+        self.with_inner(|records, counters, gauges, _| {
+            let mut spans = 0usize;
+            let mut events = 0usize;
+            for r in records {
+                match r {
+                    Record::Begin { .. } => spans += 1,
+                    Record::Event { .. } => events += 1,
+                    Record::End { .. } => {}
+                }
+            }
+            Value::obj(vec![
+                ("spans", Value::from(spans)),
+                ("events", Value::from(events)),
+                (
+                    "counters",
+                    Value::Obj(
+                        counters
+                            .iter()
+                            .map(|(k, &v)| (k.clone(), Value::Num(v as f64)))
+                            .collect(),
+                    ),
+                ),
+                (
+                    "gauges",
+                    Value::Obj(
+                        gauges
+                            .iter()
+                            .map(|(k, &v)| (k.clone(), Value::Num(v)))
+                            .collect(),
+                    ),
+                ),
+            ])
+        })
+    }
+
+    /// Write the trace to `path`: `.jsonl` extension selects the JSONL
+    /// event log, anything else the Chrome trace JSON.
+    pub fn write_trace(&self, path: &Path) -> anyhow::Result<()> {
+        let body = if path.extension().is_some_and(|e| e == "jsonl") {
+            self.to_jsonl()
+        } else {
+            self.to_chrome_json()
+        };
+        std::fs::write(path, body)
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))
+    }
+
+    /// Write the Prometheus exposition to `path`.
+    pub fn write_metrics(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_prometheus())
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::recorder::Clock;
+    use super::*;
+
+    fn sample() -> Recorder {
+        let r = Recorder::new(Clock::Logical);
+        r.span_begin("solve", &[("gpus", Value::from(3.0))]);
+        r.event("round", &[("best", Value::from(2.0))]);
+        r.span_end("solve");
+        r.counter_add("mcts.rollouts", 7);
+        r.gauge_set("frag.score", 0.25);
+        r.hist_record("online.gap", 0.1);
+        r.hist_record("online.gap", 250.0); // overflow
+        r
+    }
+
+    #[test]
+    fn chrome_json_parses_and_is_balanced() {
+        let r = sample();
+        let v = crate::util::json::parse(&r.to_chrome_json()).unwrap();
+        let events = v.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 3);
+        let phases: Vec<&str> =
+            events.iter().map(|e| e.get("ph").unwrap().as_str().unwrap()).collect();
+        assert_eq!(phases, vec!["B", "i", "E"]);
+        for e in events {
+            assert!(e.get("ts").unwrap().as_f64().is_some());
+            assert_eq!(e.get("pid").unwrap().as_f64(), Some(1.0));
+            assert_eq!(e.get("tid").unwrap().as_f64(), Some(1.0));
+        }
+        assert_eq!(
+            events[0].get_path("args.gpus").unwrap().as_f64(),
+            Some(3.0)
+        );
+    }
+
+    #[test]
+    fn jsonl_one_parseable_object_per_line() {
+        let r = sample();
+        let jsonl = r.to_jsonl();
+        let lines: Vec<&str> = jsonl.lines().collect();
+        assert_eq!(lines.len(), 3);
+        for line in lines {
+            let v = crate::util::json::parse(line).unwrap();
+            assert!(v.get("kind").is_some());
+            assert!(v.get("name").is_some());
+        }
+    }
+
+    #[test]
+    fn prometheus_exposition_shape() {
+        let r = sample();
+        let text = r.to_prometheus();
+        assert!(text.contains("# TYPE mcts_rollouts counter\nmcts_rollouts 7\n"));
+        assert!(text.contains("# TYPE frag_score gauge\nfrag_score 0.25\n"));
+        assert!(text.contains("online_gap{quantile=\"0.5\"}"));
+        assert!(text.contains("online_gap_count 2\n"));
+        assert!(text.contains("online_gap_overflow 1\n"));
+    }
+
+    #[test]
+    fn summary_counts_kinds() {
+        let r = sample();
+        let s = r.summary_json();
+        assert_eq!(s.get("spans").unwrap().as_usize(), Some(1));
+        assert_eq!(s.get("events").unwrap().as_usize(), Some(1));
+        let counters = s.get("counters").unwrap();
+        assert_eq!(counters.get("mcts.rollouts").unwrap().as_u64(), Some(7));
+    }
+}

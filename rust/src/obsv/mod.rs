@@ -1,0 +1,322 @@
+//! Deterministic tracing + metrics for every decision-making path.
+//!
+//! The solver pipeline, the online scheduler, the transition
+//! controller, and the simkit loop all make decisions the seed code
+//! made invisibly. This module is the shared instrumentation substrate:
+//! a [`Recorder`] holding spans (nested), monotonically-ordered events,
+//! and a metrics registry (counters / gauges / histograms, reusing
+//! [`crate::util::stats::Histogram`]), exported as Chrome `trace_event`
+//! JSON (Perfetto-loadable), Prometheus-style text exposition, or JSONL
+//! event logs.
+//!
+//! Design constraints (DESIGN.md §11):
+//!
+//! * **Off by default, near-zero when off.** Every hook starts with one
+//!   relaxed atomic load ([`active`]); no recorder installed means no
+//!   lock, no allocation, no formatting. The `micro_optimizer` bench
+//!   asserts the disabled-hook budget stays under 1% of a solve.
+//! * **Strictly read-only.** Instrumentation observes decisions, it
+//!   never feeds them: nothing in this module is consulted by solver,
+//!   scheduler, controller, or simulator control flow.
+//! * **Deterministic.** Timestamps come from a logical sequence counter
+//!   or (under simkit) the virtual clock via [`set_time_s`] — never
+//!   wall clock. Parallel stages record into per-slot [`Lane`] buffers
+//!   that the owning thread merges in deterministic (round, slot) order
+//!   ([`merge_lanes`]); cross-thread counter increments are plain sums,
+//!   which are order-independent. With a fixed seed the exported trace
+//!   is byte-identical across runs and worker counts.
+//! * **Scoped, not global.** A recorder is installed per thread via
+//!   [`install`] (RAII guard), so parallel `cargo test` threads never
+//!   observe each other's recorders. [`crate::optimizer::par`]
+//!   re-installs the caller's recorder inside its workers.
+
+mod export;
+mod recorder;
+
+pub use recorder::{Clock, Lane, Record, Recorder};
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::util::json::Value;
+
+/// Count of live [`install`] guards across all threads; the disabled
+/// fast path is one relaxed load of this.
+static ACTIVE_RECORDERS: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    static CURRENT: RefCell<Option<Arc<Recorder>>> = const { RefCell::new(None) };
+}
+
+/// Is a recorder installed on this thread? The first check is one
+/// relaxed atomic load, so with no recorder anywhere in the process
+/// every hook costs a load-and-branch.
+#[inline(always)]
+pub fn active() -> bool {
+    ACTIVE_RECORDERS.load(Ordering::Relaxed) != 0
+        && CURRENT.with(|c| c.borrow().is_some())
+}
+
+/// RAII guard for [`install`]; restores the previously-installed
+/// recorder (if any) on drop.
+pub struct InstallGuard {
+    prev: Option<Arc<Recorder>>,
+}
+
+/// Install `rec` as this thread's recorder until the guard drops.
+/// Guards nest (the previous recorder is restored), and installation is
+/// per-thread: other threads — including other tests in the same
+/// binary — are unaffected unless they install too.
+pub fn install(rec: Arc<Recorder>) -> InstallGuard {
+    ACTIVE_RECORDERS.fetch_add(1, Ordering::Relaxed);
+    let prev = CURRENT.with(|c| c.borrow_mut().replace(rec));
+    InstallGuard { prev }
+}
+
+impl Drop for InstallGuard {
+    fn drop(&mut self) {
+        CURRENT.with(|c| *c.borrow_mut() = self.prev.take());
+        ACTIVE_RECORDERS.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// This thread's recorder, for handing to worker threads (see
+/// [`crate::optimizer::par::run_indexed`]).
+pub fn current() -> Option<Arc<Recorder>> {
+    if ACTIVE_RECORDERS.load(Ordering::Relaxed) == 0 {
+        return None;
+    }
+    CURRENT.with(|c| c.borrow().clone())
+}
+
+#[inline]
+fn with<R>(f: impl FnOnce(&Recorder) -> R) -> Option<R> {
+    if ACTIVE_RECORDERS.load(Ordering::Relaxed) == 0 {
+        return None;
+    }
+    CURRENT.with(|c| c.borrow().as_ref().map(|r| f(r)))
+}
+
+/// Advance the recorder's virtual clock (no-op for [`Clock::Logical`]
+/// recorders). Simkit calls this at every event pop so trace timestamps
+/// are simulated seconds, not wall clock.
+pub fn set_time_s(t: f64) {
+    with(|r| r.set_time_s(t));
+}
+
+/// Record an instant event with structured args.
+pub fn event(name: &str, args: &[(&str, Value)]) {
+    with(|r| r.event(name, args));
+}
+
+/// Add to a named monotonic counter. Sums are order-independent, so
+/// this is safe to call from worker threads (with the recorder
+/// installed there) without breaking determinism.
+pub fn counter_add(name: &str, v: u64) {
+    with(|r| r.counter_add(name, v));
+}
+
+/// Set a named gauge to its latest value.
+pub fn gauge_set(name: &str, v: f64) {
+    with(|r| r.gauge_set(name, v));
+}
+
+/// Record a sample into a named histogram
+/// ([`crate::util::stats::Histogram`], bucket width 0.01 over
+/// `[0, 100)`; out-of-range samples land in the overflow counter).
+pub fn hist_record(name: &str, v: f64) {
+    with(|r| r.hist_record(name, v));
+}
+
+/// RAII span: begin on construction, end on drop. Captures the
+/// recorder at construction so the end always lands in the same
+/// recorder as the begin.
+pub struct SpanGuard {
+    rec: Option<Arc<Recorder>>,
+    name: &'static str,
+}
+
+/// Open a named span (no args).
+pub fn span(name: &'static str) -> SpanGuard {
+    span_with(name, &[])
+}
+
+/// Open a named span with structured args on the begin record.
+pub fn span_with(name: &'static str, args: &[(&str, Value)]) -> SpanGuard {
+    let rec = current();
+    if let Some(r) = &rec {
+        r.span_begin(name, args);
+    }
+    SpanGuard { rec, name }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some(r) = &self.rec {
+            r.span_end(self.name);
+        }
+    }
+}
+
+/// Merge per-slot lane buffers into this thread's recorder, in the
+/// order given (callers pass slots in (round, slot) order). Timestamps
+/// and sequence numbers are assigned here, on the owning thread — so
+/// the merged record stream is identical no matter how many workers
+/// filled the lanes.
+pub fn merge_lanes(lanes: Vec<Lane>) {
+    with(|r| r.merge_lanes(lanes));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inactive_by_default() {
+        assert!(!active());
+        // All hooks are no-ops without a recorder.
+        event("x", &[]);
+        counter_add("c", 1);
+        gauge_set("g", 1.0);
+        hist_record("h", 1.0);
+        set_time_s(5.0);
+        let _s = span("s");
+    }
+
+    #[test]
+    fn install_scopes_to_thread_and_guard() {
+        let rec = Arc::new(Recorder::new(Clock::Logical));
+        {
+            let _g = install(rec.clone());
+            assert!(active());
+            event("e", &[("k", Value::from(1.0))]);
+            counter_add("c", 2);
+        }
+        assert!(!active());
+        // The drop above must not have lost the records.
+        assert_eq!(rec.record_count(), 1);
+        assert_eq!(rec.counter("c"), Some(2));
+        // Other threads never see this thread's recorder.
+        let rec2 = Arc::new(Recorder::new(Clock::Logical));
+        let _g = install(rec2.clone());
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                assert!(!active());
+                event("invisible", &[]);
+            });
+        });
+        assert_eq!(rec2.record_count(), 0);
+    }
+
+    #[test]
+    fn install_nests_and_restores() {
+        let a = Arc::new(Recorder::new(Clock::Logical));
+        let b = Arc::new(Recorder::new(Clock::Logical));
+        let _ga = install(a.clone());
+        {
+            let _gb = install(b.clone());
+            event("inner", &[]);
+        }
+        event("outer", &[]);
+        assert_eq!(a.record_count(), 1);
+        assert_eq!(b.record_count(), 1);
+    }
+
+    #[test]
+    fn spans_nest_and_close_in_order() {
+        let rec = Arc::new(Recorder::new(Clock::Logical));
+        let _g = install(rec.clone());
+        {
+            let _outer = span("outer");
+            {
+                let _inner = span_with("inner", &[("depth", Value::from(2.0))]);
+            }
+        }
+        let kinds: Vec<String> = rec
+            .records()
+            .iter()
+            .map(|r| match r {
+                Record::Begin { name, .. } => format!("B:{name}"),
+                Record::End { name, .. } => format!("E:{name}"),
+                Record::Event { name, .. } => format!("i:{name}"),
+            })
+            .collect();
+        assert_eq!(kinds, vec!["B:outer", "B:inner", "E:inner", "E:outer"]);
+    }
+
+    #[test]
+    fn lanes_merge_in_caller_order() {
+        let rec = Arc::new(Recorder::new(Clock::Logical));
+        let _g = install(rec.clone());
+        // Lanes filled "by workers" in arbitrary real-time order; the
+        // merge order is the vector order, so the stream is stable.
+        let mut lanes: Vec<Lane> = (0..4).map(|_| Lane::new()).collect();
+        for (slot, lane) in lanes.iter_mut().enumerate().rev() {
+            lane.event("slot", &[("i", Value::from(slot))]);
+            lane.counter_add("work", 1);
+        }
+        merge_lanes(lanes);
+        let order: Vec<f64> = rec
+            .records()
+            .iter()
+            .filter_map(|r| match r {
+                Record::Event { args, .. } => args
+                    .iter()
+                    .find(|(k, _)| k == "i")
+                    .and_then(|(_, v)| v.as_f64()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(order, vec![0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(rec.counter("work"), Some(4));
+    }
+
+    #[test]
+    fn lane_disabled_without_recorder_buffers_nothing() {
+        assert!(!active());
+        let mut lane = Lane::new();
+        lane.event("dropped", &[]);
+        lane.counter_add("dropped", 1);
+        assert!(lane.is_empty());
+    }
+
+    #[test]
+    fn virtual_clock_timestamps() {
+        let rec = Arc::new(Recorder::new(Clock::Virtual));
+        let _g = install(rec.clone());
+        set_time_s(1.5);
+        event("a", &[]);
+        set_time_s(2.0);
+        event("b", &[]);
+        let ts: Vec<u64> = rec
+            .records()
+            .iter()
+            .map(|r| match r {
+                Record::Event { ts_us, .. } => *ts_us,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(ts, vec![1_500_000, 2_000_000]);
+    }
+
+    #[test]
+    fn identical_streams_export_identical_bytes() {
+        let run = || {
+            let rec = Arc::new(Recorder::new(Clock::Logical));
+            let _g = install(rec.clone());
+            let _s = span("solve");
+            event("found", &[("gpus", Value::from(12.0))]);
+            counter_add("iters", 40);
+            hist_record("gap", 0.25);
+            gauge_set("frag", 0.5);
+            drop(_s);
+            (rec.to_chrome_json(), rec.to_prometheus(), rec.to_jsonl())
+        };
+        let (c1, p1, j1) = run();
+        let (c2, p2, j2) = run();
+        assert_eq!(c1, c2);
+        assert_eq!(p1, p2);
+        assert_eq!(j1, j2);
+    }
+}

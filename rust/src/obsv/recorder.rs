@@ -1,0 +1,259 @@
+//! The recorder: an append-only record stream plus a metrics registry
+//! behind one mutex. Hot paths touch it only when a recorder is
+//! installed (see the module-level fast path), so the lock is
+//! uncontended in every configuration we run: parallel stages buffer
+//! into [`Lane`]s and only the owning thread merges, and the one
+//! cross-thread write path (counter adds from `par` workers) is rare
+//! and order-independent.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::json::Value;
+use crate::util::stats::Histogram;
+
+/// Where timestamps come from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Clock {
+    /// `ts_us` is the record's sequence number: a pure logical clock
+    /// for paths with no meaningful time axis (solver runs, replay
+    /// loops). Trivially deterministic.
+    Logical,
+    /// `ts_us` is the last value handed to [`super::set_time_s`]
+    /// (microseconds of simulated time). Simkit drives this from its
+    /// event queue, so traces line up with the simulation timeline and
+    /// stay deterministic. Wall clock is never consulted.
+    Virtual,
+}
+
+/// One trace record. `ts_us` is logical or virtual per [`Clock`];
+/// records are strictly ordered by their position in the stream (equal
+/// timestamps preserve append order).
+#[derive(Debug, Clone)]
+pub enum Record {
+    /// Span opened (Chrome `ph: "B"`).
+    Begin { name: String, ts_us: u64, args: Vec<(String, Value)> },
+    /// Span closed (Chrome `ph: "E"`).
+    End { name: String, ts_us: u64 },
+    /// Instant event (Chrome `ph: "i"`).
+    Event { name: String, ts_us: u64, args: Vec<(String, Value)> },
+}
+
+impl Record {
+    pub fn name(&self) -> &str {
+        match self {
+            Record::Begin { name, .. }
+            | Record::End { name, .. }
+            | Record::Event { name, .. } => name,
+        }
+    }
+
+    pub fn ts_us(&self) -> u64 {
+        match self {
+            Record::Begin { ts_us, .. }
+            | Record::End { ts_us, .. }
+            | Record::Event { ts_us, .. } => *ts_us,
+        }
+    }
+}
+
+/// Histogram shape for [`Recorder::hist_record`]: bucket width 0.01
+/// over `[0, 100)` — covers rates in `[0, 1]`, optimality gaps, and
+/// second-scale durations; anything larger is counted in overflow.
+const HIST_BUCKET_WIDTH: f64 = 0.01;
+const HIST_BUCKETS: usize = 10_000;
+
+#[derive(Default)]
+struct Inner {
+    seq: u64,
+    records: Vec<Record>,
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    hists: BTreeMap<String, Histogram>,
+}
+
+/// The trace/metrics sink. See the module docs for the determinism and
+/// read-only contracts.
+pub struct Recorder {
+    clock: Clock,
+    /// Virtual-clock position in microseconds (ignored for
+    /// [`Clock::Logical`]). Atomic so [`super::set_time_s`] never takes
+    /// the record lock.
+    now_us: AtomicU64,
+    inner: Mutex<Inner>,
+}
+
+impl Recorder {
+    pub fn new(clock: Clock) -> Recorder {
+        Recorder {
+            clock,
+            now_us: AtomicU64::new(0),
+            inner: Mutex::new(Inner::default()),
+        }
+    }
+
+    pub fn clock(&self) -> Clock {
+        self.clock
+    }
+
+    pub fn set_time_s(&self, t: f64) {
+        self.now_us.store((t * 1e6).round() as u64, Ordering::Relaxed);
+    }
+
+    fn stamp(&self, inner: &mut Inner) -> u64 {
+        inner.seq += 1;
+        match self.clock {
+            Clock::Logical => inner.seq,
+            Clock::Virtual => self.now_us.load(Ordering::Relaxed),
+        }
+    }
+
+    fn own_args(args: &[(&str, Value)]) -> Vec<(String, Value)> {
+        args.iter().map(|(k, v)| (k.to_string(), v.clone())).collect()
+    }
+
+    pub fn span_begin(&self, name: &str, args: &[(&str, Value)]) {
+        let mut inner = self.inner.lock().expect("recorder lock");
+        let ts_us = self.stamp(&mut inner);
+        inner.records.push(Record::Begin {
+            name: name.to_string(),
+            ts_us,
+            args: Self::own_args(args),
+        });
+    }
+
+    pub fn span_end(&self, name: &str) {
+        let mut inner = self.inner.lock().expect("recorder lock");
+        let ts_us = self.stamp(&mut inner);
+        inner.records.push(Record::End { name: name.to_string(), ts_us });
+    }
+
+    pub fn event(&self, name: &str, args: &[(&str, Value)]) {
+        let mut inner = self.inner.lock().expect("recorder lock");
+        let ts_us = self.stamp(&mut inner);
+        inner.records.push(Record::Event {
+            name: name.to_string(),
+            ts_us,
+            args: Self::own_args(args),
+        });
+    }
+
+    pub fn counter_add(&self, name: &str, v: u64) {
+        let mut inner = self.inner.lock().expect("recorder lock");
+        match inner.counters.get_mut(name) {
+            Some(c) => *c += v,
+            None => {
+                inner.counters.insert(name.to_string(), v);
+            }
+        }
+    }
+
+    pub fn gauge_set(&self, name: &str, v: f64) {
+        let mut inner = self.inner.lock().expect("recorder lock");
+        match inner.gauges.get_mut(name) {
+            Some(g) => *g = v,
+            None => {
+                inner.gauges.insert(name.to_string(), v);
+            }
+        }
+    }
+
+    pub fn hist_record(&self, name: &str, v: f64) {
+        let mut inner = self.inner.lock().expect("recorder lock");
+        inner
+            .hists
+            .entry(name.to_string())
+            .or_insert_with(|| Histogram::new(HIST_BUCKET_WIDTH, HIST_BUCKETS))
+            .record(v);
+    }
+
+    /// Append every lane's buffered records in the given order,
+    /// stamping them here (owning thread) — the (round, slot) merge
+    /// that makes parallel-stage traces worker-count-invariant.
+    pub fn merge_lanes(&self, lanes: Vec<Lane>) {
+        let mut inner = self.inner.lock().expect("recorder lock");
+        for lane in lanes {
+            for (name, args) in lane.events {
+                let ts_us = self.stamp(&mut inner);
+                inner.records.push(Record::Event { name, ts_us, args });
+            }
+            for (name, v) in lane.counters {
+                match inner.counters.get_mut(&name) {
+                    Some(c) => *c += v,
+                    None => {
+                        inner.counters.insert(name, v);
+                    }
+                }
+            }
+        }
+    }
+
+    // ---- read side (exporters, reports, tests) ----
+
+    pub fn record_count(&self) -> usize {
+        self.inner.lock().expect("recorder lock").records.len()
+    }
+
+    /// Snapshot of the record stream.
+    pub fn records(&self) -> Vec<Record> {
+        self.inner.lock().expect("recorder lock").records.clone()
+    }
+
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.inner.lock().expect("recorder lock").counters.get(name).copied()
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.inner.lock().expect("recorder lock").gauges.get(name).copied()
+    }
+
+    pub(crate) fn with_inner<R>(
+        &self,
+        f: impl FnOnce(
+            &[Record],
+            &BTreeMap<String, u64>,
+            &BTreeMap<String, f64>,
+            &BTreeMap<String, Histogram>,
+        ) -> R,
+    ) -> R {
+        let inner = self.inner.lock().expect("recorder lock");
+        f(&inner.records, &inner.counters, &inner.gauges, &inner.hists)
+    }
+}
+
+/// A worker-side record buffer for parallel stages. Workers never
+/// touch the shared recorder stream directly; they fill a lane, the
+/// fan-out returns it index-aligned, and the owning thread merges all
+/// lanes in slot order ([`super::merge_lanes`]). When no recorder is
+/// installed on the creating thread the lane is disabled and buffers
+/// nothing.
+#[derive(Debug, Default)]
+pub struct Lane {
+    enabled: bool,
+    events: Vec<(String, Vec<(String, Value)>)>,
+    counters: Vec<(String, u64)>,
+}
+
+impl Lane {
+    /// A lane enabled iff this thread has a recorder installed.
+    pub fn new() -> Lane {
+        Lane { enabled: super::active(), events: Vec::new(), counters: Vec::new() }
+    }
+
+    pub fn event(&mut self, name: &str, args: &[(&str, Value)]) {
+        if self.enabled {
+            self.events.push((name.to_string(), Recorder::own_args(args)));
+        }
+    }
+
+    pub fn counter_add(&mut self, name: &str, v: u64) {
+        if self.enabled {
+            self.counters.push((name.to_string(), v));
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty() && self.counters.is_empty()
+    }
+}

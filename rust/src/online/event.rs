@@ -9,6 +9,8 @@
 //! [`EventOutcome::escalate`] reason and the caller runs one full
 //! [`crate::optimizer::OptimizerPipeline`] replan.
 
+use std::fmt;
+
 use crate::cluster::Action;
 use crate::spec::ServiceId;
 
@@ -51,6 +53,80 @@ impl OnlineEvent {
     }
 }
 
+/// Why an event could not be absorbed with local moves. Structured so
+/// callers (the obsv layer, replay tables) can aggregate by kind; the
+/// [`fmt::Display`] impl reproduces the historical free-form strings
+/// byte-for-byte, so every `{why}` log line is unchanged.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EscalationReason {
+    /// The quality tracker could not even build a [`crate::optimizer::ProblemCtx`]
+    /// for the active set — some service has no feasible profile on this
+    /// fleet at all.
+    InfeasibleServiceSet { detail: String },
+    /// GPUs-in-use drifted past `gap_threshold` over the §8.1 lower
+    /// bound (with ≥ 2 GPUs of absolute excess).
+    OptimalityGap { gap: f64, threshold: f64, used: usize, lower_bound: usize },
+    /// A `DemandDelta` arrived for a service not in the catalog.
+    UnknownService { service: ServiceId },
+    /// No (kind, size) on this fleet yields positive throughput under
+    /// the service's latency SLO.
+    NoFeasibleInstance { service: ServiceId, model: String },
+    /// Direct placement and bounded evict-and-repack both failed.
+    NoRoom { service: ServiceId, repair_depth: usize },
+    /// The growth loop hit its iteration guard (invariant backstop).
+    GrowthDiverged { service: ServiceId },
+}
+
+impl EscalationReason {
+    /// Stable short label for metrics keys and aggregation.
+    pub fn label(&self) -> &'static str {
+        match self {
+            EscalationReason::InfeasibleServiceSet { .. } => "infeasible-set",
+            EscalationReason::OptimalityGap { .. } => "optimality-gap",
+            EscalationReason::UnknownService { .. } => "unknown-service",
+            EscalationReason::NoFeasibleInstance { .. } => "no-feasible-instance",
+            EscalationReason::NoRoom { .. } => "no-room",
+            EscalationReason::GrowthDiverged { .. } => "growth-diverged",
+        }
+    }
+}
+
+impl fmt::Display for EscalationReason {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EscalationReason::InfeasibleServiceSet { detail } => {
+                write!(f, "infeasible service set: {detail}")
+            }
+            EscalationReason::OptimalityGap { gap, threshold, used, lower_bound } => {
+                write!(
+                    f,
+                    "optimality gap {gap:.2} > {threshold:.2} \
+                     ({used} GPUs vs lower bound {lower_bound})"
+                )
+            }
+            EscalationReason::UnknownService { service } => {
+                write!(f, "demand delta for unknown service {service}")
+            }
+            EscalationReason::NoFeasibleInstance { service, model } => {
+                write!(
+                    f,
+                    "service {service} ({model}): no feasible (kind, size) on this fleet"
+                )
+            }
+            EscalationReason::NoRoom { service, repair_depth } => {
+                write!(
+                    f,
+                    "service {service}: no room for any instance size \
+                     (repair depth {repair_depth})"
+                )
+            }
+            EscalationReason::GrowthDiverged { service } => {
+                write!(f, "service {service}: growth did not converge")
+            }
+        }
+    }
+}
+
 /// What handling one event produced.
 #[derive(Debug, Default)]
 pub struct EventOutcome {
@@ -60,7 +136,7 @@ pub struct EventOutcome {
     /// `Some(reason)` when the event could not be absorbed locally (or
     /// quality degraded past the bound): the caller must run a full
     /// pipeline replan and discard any scratch state.
-    pub escalate: Option<String>,
+    pub escalate: Option<EscalationReason>,
 }
 
 #[cfg(test)]
@@ -83,5 +159,54 @@ mod tests {
         ];
         let labels: Vec<&str> = events.iter().map(|e| e.label()).collect();
         assert_eq!(labels, ["onboard", "retire", "delta", "gpu-fail", "gpu-repair"]);
+    }
+
+    /// The Display strings are a log-format contract: simkit event logs
+    /// interpolate `{why}`, and goldens/smoke greps match on them.
+    #[test]
+    fn escalation_display_matches_legacy_strings() {
+        let cases = [
+            (
+                EscalationReason::InfeasibleServiceSet { detail: "no profile".into() },
+                "infeasible service set: no profile",
+            ),
+            (
+                EscalationReason::OptimalityGap {
+                    gap: 1.5,
+                    threshold: 0.5,
+                    used: 10,
+                    lower_bound: 4,
+                },
+                "optimality gap 1.50 > 0.50 (10 GPUs vs lower bound 4)",
+            ),
+            (
+                EscalationReason::UnknownService { service: 3 },
+                "demand delta for unknown service 3",
+            ),
+            (
+                EscalationReason::NoFeasibleInstance { service: 2, model: "resnet50".into() },
+                "service 2 (resnet50): no feasible (kind, size) on this fleet",
+            ),
+            (
+                EscalationReason::NoRoom { service: 1, repair_depth: 4 },
+                "service 1: no room for any instance size (repair depth 4)",
+            ),
+            (
+                EscalationReason::GrowthDiverged { service: 0 },
+                "service 0: growth did not converge",
+            ),
+        ];
+        let labels = [
+            "infeasible-set",
+            "optimality-gap",
+            "unknown-service",
+            "no-feasible-instance",
+            "no-room",
+            "growth-diverged",
+        ];
+        for ((reason, expect), label) in cases.iter().zip(labels) {
+            assert_eq!(reason.to_string(), *expect);
+            assert_eq!(reason.label(), label);
+        }
     }
 }

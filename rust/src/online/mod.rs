@@ -32,7 +32,7 @@ pub mod place;
 pub mod quality;
 pub mod repair;
 
-pub use event::{EventOutcome, OnlineEvent, MIN_RATE};
+pub use event::{EscalationReason, EventOutcome, OnlineEvent, MIN_RATE};
 pub use quality::QualityTracker;
 
 use std::collections::BTreeMap;
@@ -183,6 +183,10 @@ impl<'a> OnlineScheduler<'a> {
         event: &OnlineEvent,
     ) -> anyhow::Result<EventOutcome> {
         let mut out = EventOutcome::default();
+        // Observability pre-state (read-only; only when a recorder is
+        // installed — `frag_before: None` keeps the hot path free of
+        // the fragmentation scan).
+        let frag_before = crate::obsv::active().then(|| frag_mean(state));
         let escalate = match event {
             OnlineEvent::Onboard { service, model, latency_slo_ms, rate } => {
                 anyhow::ensure!(
@@ -212,7 +216,7 @@ impl<'a> OnlineScheduler<'a> {
                 if known {
                     self.scale_service(state, *service, &mut out.actions)?
                 } else {
-                    Some(format!("demand delta for unknown service {service}"))
+                    Some(EscalationReason::UnknownService { service: *service })
                 }
             }
             OnlineEvent::GpuFail { gpu } => {
@@ -254,6 +258,29 @@ impl<'a> OnlineScheduler<'a> {
         } else {
             self.quality.incremental += 1;
         }
+        // One structured record per event: outcome, fragmentation
+        // before/after, gap vs the §8.1 lower bound, escalation kind.
+        if let Some(frag_before) = frag_before {
+            let frag_after = frag_mean(state);
+            let gap = self.quality.last_gap.unwrap_or(0.0);
+            let mut args: Vec<(&str, crate::util::json::Value)> = vec![
+                ("event", event.label().into()),
+                ("actions", out.actions.len().into()),
+                ("frag_before", frag_before.into()),
+                ("frag_after", frag_after.into()),
+                ("gap", gap.into()),
+            ];
+            if let Some(r) = &escalate {
+                args.push(("escalation", r.label().into()));
+            }
+            crate::obsv::event("online.event", &args);
+            crate::obsv::counter_add("online.events", 1);
+            if escalate.is_some() {
+                crate::obsv::counter_add("online.escalations", 1);
+            }
+            crate::obsv::gauge_set("online.frag", frag_after);
+            crate::obsv::hist_record("online.gap", gap.max(0.0));
+        }
         out.escalate = escalate;
         Ok(out)
     }
@@ -284,7 +311,7 @@ impl<'a> OnlineScheduler<'a> {
         state: &mut ClusterState,
         sid: ServiceId,
         actions: &mut Vec<Action>,
-    ) -> anyhow::Result<Option<String>> {
+    ) -> anyhow::Result<Option<EscalationReason>> {
         let entry = self.services[&sid].clone();
         let target = entry.rate;
         if target <= MIN_RATE {
@@ -336,10 +363,10 @@ impl<'a> OnlineScheduler<'a> {
                 }
             }
             if cands.is_empty() {
-                return Ok(Some(format!(
-                    "service {sid} ({}): no feasible (kind, size) on this fleet",
-                    entry.model
-                )));
+                return Ok(Some(EscalationReason::NoFeasibleInstance {
+                    service: sid,
+                    model: entry.model.clone(),
+                }));
             }
             cands.sort_by(|a, b| {
                 let cover_a = a.3 + 1e-9 >= gap;
@@ -385,14 +412,13 @@ impl<'a> OnlineScheduler<'a> {
                 }
             }
             if !placed {
-                return Ok(Some(format!(
-                    "service {sid}: no room for any instance size \
-                     (repair depth {})",
-                    self.cfg.repair_depth
-                )));
+                return Ok(Some(EscalationReason::NoRoom {
+                    service: sid,
+                    repair_depth: self.cfg.repair_depth,
+                }));
             }
         }
-        Ok(Some(format!("service {sid}: growth did not converge")))
+        Ok(Some(EscalationReason::GrowthDiverged { service: sid }))
     }
 
     /// Upgrade one existing instance to a larger profile on its own GPU
@@ -439,6 +465,17 @@ impl<'a> OnlineScheduler<'a> {
             }
         }
         Ok(false)
+    }
+}
+
+/// Mean per-kind fragmentation score — the scalar the per-event obsv
+/// record carries (per-kind detail stays in `SimReport`).
+fn frag_mean(state: &ClusterState) -> f64 {
+    let m = frag::cluster_fragmentation(state);
+    if m.is_empty() {
+        0.0
+    } else {
+        m.values().sum::<f64>() / m.len() as f64
     }
 }
 
@@ -705,5 +742,54 @@ mod tests {
             all
         };
         assert_eq!(run(), run(), "the scheduler must be deterministic");
+    }
+
+    /// With a recorder installed, every handled event leaves exactly one
+    /// `online.event` record (with outcome + fragmentation args) and
+    /// bumps the event counters — and the action stream is unchanged.
+    #[test]
+    fn handle_emits_one_obsv_record_per_event() {
+        use crate::obsv;
+        let bank = ProfileBank::synthetic();
+
+        let plain = {
+            let mut sched = scheduler(&bank);
+            let mut state = ClusterState::new(1, 8);
+            sched.handle(&mut state, &onboard(0, "resnet50", 120.0)).unwrap().actions
+        };
+
+        let rec = std::sync::Arc::new(obsv::Recorder::new(obsv::Clock::Logical));
+        let _g = obsv::install(rec.clone());
+        let mut sched = scheduler(&bank);
+        let mut state = ClusterState::new(1, 8);
+        let out = sched.handle(&mut state, &onboard(0, "resnet50", 120.0)).unwrap();
+        sched.handle(&mut state, &OnlineEvent::Retire { service: 0 }).unwrap();
+
+        assert_eq!(out.actions, plain, "recorder must not change decisions");
+        assert_eq!(rec.counter("online.events"), Some(2));
+        assert_eq!(rec.counter("online.escalations"), None);
+        let events: Vec<_> = rec
+            .records()
+            .into_iter()
+            .filter(|r| r.name() == "online.event")
+            .collect();
+        assert_eq!(events.len(), 2);
+    }
+
+    /// An escalating event records the structured escalation label.
+    #[test]
+    fn escalation_label_lands_in_obsv_record() {
+        use crate::obsv;
+        let bank = ProfileBank::synthetic();
+        let rec = std::sync::Arc::new(obsv::Recorder::new(obsv::Clock::Logical));
+        let _g = obsv::install(rec.clone());
+        let mut sched = scheduler(&bank);
+        let mut state = ClusterState::new(1, 1);
+        let out = sched.handle(&mut state, &onboard(0, "resnet50", 1e5)).unwrap();
+        assert!(matches!(
+            out.escalate,
+            Some(EscalationReason::NoRoom { .. })
+        ));
+        assert_eq!(rec.counter("online.escalations"), Some(1));
     }
 }

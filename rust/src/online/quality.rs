@@ -24,6 +24,7 @@
 
 use crate::cluster::ClusterState;
 use crate::mig::DeviceKind;
+use crate::online::event::EscalationReason;
 use crate::optimizer::{IncrementalBound, ProblemCtx};
 use crate::perf::ProfileBank;
 use crate::spec::{Slo, Workload};
@@ -82,7 +83,7 @@ impl QualityTracker {
         state: &ClusterState,
         active: &[(String, f64, f64)],
         gap_threshold: f64,
-    ) -> Option<String> {
+    ) -> Option<EscalationReason> {
         if active.is_empty() {
             self.last_gap = Some(0.0);
             return None;
@@ -120,7 +121,9 @@ impl QualityTracker {
                 // local moves by definition.
                 Err(e) => {
                     self.cache = None;
-                    return Some(format!("infeasible service set: {e}"));
+                    return Some(EscalationReason::InfeasibleServiceSet {
+                        detail: e.to_string(),
+                    });
                 }
             };
             let bound = IncrementalBound::new(&ctx);
@@ -141,10 +144,11 @@ impl QualityTracker {
         // One GPU of slack absorbs the rule-free bound's rounding on
         // tiny fleets (used=2 vs lb=1 is not a 100% quality problem).
         let excess = used.saturating_sub(lb);
-        (excess >= 2 && gap > gap_threshold).then(|| {
-            format!(
-                "optimality gap {gap:.2} > {gap_threshold:.2} ({used} GPUs vs lower bound {lb})"
-            )
+        (excess >= 2 && gap > gap_threshold).then(|| EscalationReason::OptimalityGap {
+            gap,
+            threshold: gap_threshold,
+            used,
+            lower_bound: lb,
         })
     }
 }
@@ -202,7 +206,11 @@ mod tests {
         let mut q = QualityTracker::default();
         let active = vec![("resnet50".to_string(), 300.0, 40.0)];
         let reason = q.assess(&bank, &c, &active, 0.5).expect("gap too large");
-        assert!(reason.contains("optimality gap"), "{reason}");
+        assert!(
+            matches!(reason, EscalationReason::OptimalityGap { .. }),
+            "{reason}"
+        );
+        assert!(reason.to_string().contains("optimality gap"), "{reason}");
         assert!(q.last_gap.unwrap() > 0.5);
     }
 

@@ -44,6 +44,7 @@ use super::interned::{Gene, InternedDeployment};
 use super::mcts::{Mcts, MctsConfig, RefillStep};
 use super::{par, Deployment};
 use crate::mig::InstanceSize;
+use crate::obsv;
 use crate::spec::ServiceId;
 use crate::util::rng::Rng;
 
@@ -265,14 +266,18 @@ impl GeneticAlgorithm {
             }
             let population_ref = &population;
             let delta = self.cfg.delta_fitness;
-            let offspring: Vec<Option<Scored>> =
+            let results: Vec<(Option<Scored>, obsv::Lane)> =
                 par::run_indexed(slots, workers, |(parent, stream_seed)| {
                     let mut rng = Rng::new(stream_seed);
+                    // Per-slot obsv buffer: filled on whatever worker
+                    // runs this slot, merged below in slot order.
+                    let mut lane = obsv::Lane::new();
                     // Mutate a copy first (diversify service mixes),
                     // then cross over. The copy is a memcpy.
+                    let parent_idx = parent;
                     let parent = &population_ref[parent];
                     let mut child = parent.dep.clone();
-                    if delta {
+                    let out = if delta {
                         // Delta path: carry the parent's cached
                         // completion through mutation (re-fold only the
                         // swapped services) and crossover (patch out the
@@ -298,13 +303,30 @@ impl GeneticAlgorithm {
                         let _ = self.mutate(ctx, pool, &mut child, &mut rng);
                         self.crossover(ctx, engine, &child, &mcts, &mut rng)
                             .map(|dep| Self::score_individual(ctx, pool, dep))
+                    };
+                    if let Some(s) = &out {
+                        lane.event(
+                            "ga.slot",
+                            &[
+                                ("parent", parent_idx.into()),
+                                ("gpus", s.gpus.into()),
+                            ],
+                        );
                     }
+                    (out, lane)
                 });
             // Elitism: originals compete with offspring (merged in slot
             // order — deterministic). Fitness is (GPUs, total
             // overshoot), cached per individual: among equal-GPU
             // deployments the tighter one survives, so lateral moves
             // accumulate into savings in later rounds.
+            let mut offspring = Vec::with_capacity(results.len());
+            let mut lanes = Vec::with_capacity(results.len());
+            for (o, lane) in results {
+                offspring.push(o);
+                lanes.push(lane);
+            }
+            obsv::merge_lanes(lanes);
             population.extend(offspring.into_iter().flatten());
             population.sort_by(|a, b| {
                 a.gpus
@@ -329,6 +351,17 @@ impl GeneticAlgorithm {
                 stale_rounds += 1;
             }
             history.best_gpus_per_round.push(best_gpus);
+            if obsv::active() {
+                // The generation-by-generation fitness curve.
+                obsv::event(
+                    "ga.round",
+                    &[
+                        ("round", round.into()),
+                        ("best_gpus", best_gpus.into()),
+                        ("population", population.len().into()),
+                    ],
+                );
+            }
             if stale_rounds >= self.cfg.patience {
                 break;
             }

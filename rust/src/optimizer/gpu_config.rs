@@ -461,8 +461,19 @@ impl ConfigPool {
         for &kind in ctx.kinds() {
             Self::enumerate_kind(ctx, kind, bounding, &mut configs);
         }
+        let enumerated = configs.len();
         if pruning == PoolPruning::Dominated {
             configs = prune_dominated(configs);
+        }
+        if crate::obsv::active() {
+            crate::obsv::counter_add("pool.enumerated", enumerated as u64);
+            crate::obsv::counter_add(
+                "pool.pruned_dropped",
+                (enumerated - configs.len()) as u64,
+            );
+            if matches!(bounding, PoolBounding::Bucketed { .. }) {
+                crate::obsv::counter_add("pool.bounded_enumerations", 1);
+            }
         }
         let mut by_service = vec![Vec::new(); n];
         for (i, c) in configs.iter().enumerate() {

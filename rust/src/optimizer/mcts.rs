@@ -371,7 +371,17 @@ impl Mcts {
             .map(|i| unsat[i])
             .collect();
         let remaining = comp.remaining();
-        engine.top_k_touching(&picked, &remaining, self.cfg.top_k)
+        let children = engine.top_k_touching(&picked, &remaining, self.cfg.top_k);
+        if crate::obsv::active() {
+            // Sums only: order-independent, so bit-identical at any
+            // worker count (expand runs on `par` workers too).
+            crate::obsv::counter_add("mcts.expansions", 1);
+            crate::obsv::counter_add(
+                "mcts.expanded_children",
+                children.len() as u64,
+            );
+        }
+        children
     }
 
     /// Memoized randomized playout: complete the deployment from `comp`,
@@ -460,6 +470,10 @@ impl Mcts {
                 comp.set(sid, comp.get(sid) + u);
             }
             out.push(RefillStep::Pool(ci));
+        }
+        if crate::obsv::active() {
+            crate::obsv::counter_add("mcts.rollouts", 1);
+            crate::obsv::counter_add("mcts.rollout_steps", out.len() as u64);
         }
         out
     }

@@ -62,21 +62,29 @@ where
     let job = &job;
     let slots_ref = &slots;
     let next_ref = &next;
+    // The caller's obsv recorder (if any) is re-installed in every
+    // worker, so jobs can fill obsv::Lane buffers / bump counters.
+    // Purely observational: job outputs don't depend on it.
+    let recorder = crate::obsv::current();
+    let recorder_ref = &recorder;
     std::thread::scope(|scope| {
         for _ in 0..workers {
-            scope.spawn(move || loop {
-                let i = next_ref.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
+            scope.spawn(move || {
+                let _obsv = recorder_ref.clone().map(crate::obsv::install);
+                loop {
+                    let i = next_ref.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let input = slots_ref[i]
+                        .lock()
+                        .expect("slot lock")
+                        .0
+                        .take()
+                        .expect("input consumed once");
+                    let output = job(input);
+                    slots_ref[i].lock().expect("slot lock").1 = Some(output);
                 }
-                let input = slots_ref[i]
-                    .lock()
-                    .expect("slot lock")
-                    .0
-                    .take()
-                    .expect("input consumed once");
-                let output = job(input);
-                slots_ref[i].lock().expect("slot lock").1 = Some(output);
             });
         }
     });
@@ -104,6 +112,19 @@ mod tests {
     fn empty_input_is_fine() {
         let got: Vec<u32> = run_indexed(Vec::<u32>::new(), 4, |x| x);
         assert!(got.is_empty());
+    }
+
+    #[test]
+    fn recorder_propagates_to_workers() {
+        use crate::obsv;
+        let rec = std::sync::Arc::new(obsv::Recorder::new(obsv::Clock::Logical));
+        let _g = obsv::install(rec.clone());
+        let out: Vec<usize> = run_indexed((0..16).collect(), 4, |i: usize| {
+            obsv::counter_add("par.jobs", 1);
+            i
+        });
+        assert_eq!(out.len(), 16);
+        assert_eq!(rec.counter("par.jobs"), Some(16));
     }
 
     #[test]

@@ -156,7 +156,17 @@ impl<'a> OptimizerPipeline<'a> {
         ctx: &'a ProblemCtx<'a>,
         budget: PipelineBudget,
     ) -> OptimizerPipeline<'a> {
+        let _span = crate::obsv::span("pipeline.pool");
         let pool = ConfigPool::enumerate_bounded(ctx, budget.pruning, budget.bounding);
+        if crate::obsv::active() {
+            crate::obsv::event(
+                "pool.enumerated",
+                &[
+                    ("configs", pool.len().into()),
+                    ("services", ctx.workload.len().into()),
+                ],
+            );
+        }
         OptimizerPipeline { ctx, pool, budget }
     }
 
@@ -192,8 +202,13 @@ impl<'a> OptimizerPipeline<'a> {
         &self,
         completion: &CompletionRates,
     ) -> anyhow::Result<Vec<GpuConfig>> {
+        let _span = crate::obsv::span("pipeline.fast");
         let mut engine = self.engine_at(completion);
-        run_with_engine(self.ctx, &mut engine)
+        let cfgs = run_with_engine(self.ctx, &mut engine)?;
+        if crate::obsv::active() {
+            crate::obsv::event("pipeline.fast.done", &[("gpus", cfgs.len().into())]);
+        }
+        Ok(cfgs)
     }
 
     /// The full two-phase pipeline under this pipeline's budget. Phase
@@ -202,8 +217,19 @@ impl<'a> OptimizerPipeline<'a> {
     pub fn optimize(&self) -> anyhow::Result<PipelineOutcome> {
         let t0 = Instant::now();
         let mut engine = self.engine();
-        let (fast_cfgs, fast_genes) = run_with_engine_tracked(self.ctx, &mut engine)?;
-        let fast = Deployment { gpus: fast_cfgs };
+        let (fast, fast_genes) = {
+            let _span = crate::obsv::span("pipeline.fast");
+            let (fast_cfgs, fast_genes) =
+                run_with_engine_tracked(self.ctx, &mut engine)?;
+            let fast = Deployment { gpus: fast_cfgs };
+            if crate::obsv::active() {
+                crate::obsv::event(
+                    "pipeline.fast.done",
+                    &[("gpus", fast.num_gpus().into())],
+                );
+            }
+            (fast, fast_genes)
+        };
         anyhow::ensure!(
             fast.is_valid(self.ctx),
             "fast algorithm produced invalid deployment"
@@ -213,13 +239,24 @@ impl<'a> OptimizerPipeline<'a> {
                 GaHistory { best_gpus_per_round: vec![fast.num_gpus()] };
             (fast.clone(), history)
         } else {
+            let _span = crate::obsv::span("pipeline.ga");
             let ga = GeneticAlgorithm::new(self.budget.ga_config());
             let (best_interned, history) = ga.evolve_interned(
                 self.ctx,
                 &engine,
                 InternedDeployment { genes: fast_genes },
             );
-            (best_interned.materialize(self.ctx, &self.pool), history)
+            let best = best_interned.materialize(self.ctx, &self.pool);
+            if crate::obsv::active() {
+                crate::obsv::event(
+                    "pipeline.ga.done",
+                    &[
+                        ("gpus", best.num_gpus().into()),
+                        ("rounds", (history.best_gpus_per_round.len() - 1).into()),
+                    ],
+                );
+            }
+            (best, history)
         };
         Ok(PipelineOutcome { fast, best, history, elapsed: t0.elapsed() })
     }

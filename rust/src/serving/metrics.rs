@@ -53,6 +53,50 @@ impl ServiceMetrics {
     pub fn latency_mean(&self) -> f64 {
         self.latency.lock().unwrap().mean()
     }
+
+    /// Completions whose latency exceeded the 60 s histogram ceiling.
+    /// They still count toward `completed` and the mean, but fall in no
+    /// bucket — previously they vanished silently; now they are
+    /// reported here and in [`ServiceMetrics::exposition`].
+    pub fn latency_overflow(&self) -> u64 {
+        self.latency.lock().unwrap().overflow()
+    }
+
+    /// Prometheus-style text exposition of this service's metrics,
+    /// with `service` interpolated as a label.
+    pub fn exposition(&self, service: &str) -> String {
+        let (p50, p90, p99, mean, count, overflow) = {
+            let h = self.latency.lock().unwrap();
+            (
+                h.percentile(50.0),
+                h.percentile(90.0),
+                h.percentile(99.0),
+                h.mean(),
+                h.count(),
+                h.overflow(),
+            )
+        };
+        let label = format!("{{service=\"{service}\"}}");
+        let mut out = String::new();
+        out.push_str("# TYPE serving_completed counter\n");
+        out.push_str(&format!("serving_completed{label} {}\n", self.completed()));
+        out.push_str("# TYPE serving_errors counter\n");
+        out.push_str(&format!("serving_errors{label} {}\n", self.errors()));
+        out.push_str("# TYPE serving_latency_ms summary\n");
+        for (q, v) in [("0.5", p50), ("0.9", p90), ("0.99", p99)] {
+            out.push_str(&format!(
+                "serving_latency_ms{{service=\"{service}\",quantile=\"{q}\"}} {v}\n"
+            ));
+        }
+        out.push_str(&format!(
+            "serving_latency_ms_sum{label} {}\n",
+            mean * count as f64
+        ));
+        out.push_str(&format!("serving_latency_ms_count{label} {count}\n"));
+        out.push_str("# TYPE serving_latency_overflow counter\n");
+        out.push_str(&format!("serving_latency_overflow{label} {overflow}\n"));
+        out
+    }
 }
 
 impl Default for ServiceMetrics {
@@ -77,6 +121,24 @@ mod tests {
         let p90 = m.latency_percentile(90.0);
         assert!((85.0..=95.0).contains(&p90), "p90={p90}");
         assert!((m.latency_mean() - 50.5).abs() < 1.5);
+    }
+
+    #[test]
+    fn overflow_counted_and_exposed() {
+        let m = ServiceMetrics::new();
+        m.record_completion(Duration::from_millis(100));
+        // Above the 60 s bucket ceiling: clamped out of every bucket,
+        // but no longer silently — the overflow counter sees it.
+        m.record_completion(Duration::from_secs(120));
+        assert_eq!(m.completed(), 2);
+        assert_eq!(m.latency_overflow(), 1);
+        let text = m.exposition("resnet50");
+        assert!(text.contains("serving_completed{service=\"resnet50\"} 2\n"));
+        assert!(
+            text.contains("serving_latency_overflow{service=\"resnet50\"} 1\n"),
+            "{text}"
+        );
+        assert!(text.contains("serving_latency_ms{service=\"resnet50\",quantile=\"0.9\"}"));
     }
 
     #[test]

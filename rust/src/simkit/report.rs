@@ -84,6 +84,11 @@ pub struct SimReport {
     /// Human-readable deterministic event log (one line per event of
     /// note); byte-identical across thread counts for a fixed seed.
     pub event_log: Vec<String>,
+    /// Observability summary ([`crate::obsv::Recorder::summary_json`])
+    /// when a recorder was installed for the run; `None` — and absent
+    /// from the JSON — otherwise, so recorder-off reports stay
+    /// byte-stable against earlier versions.
+    pub obsv: Option<Value>,
 }
 
 impl SimReport {
@@ -153,7 +158,7 @@ impl SimReport {
                 })
                 .collect(),
         );
-        Value::obj(vec![
+        let mut fields = vec![
             ("scenario", Value::from(self.scenario.clone())),
             ("policy", Value::from(self.policy.clone())),
             ("horizon_s", Value::Num(self.horizon_s)),
@@ -235,7 +240,11 @@ impl SimReport {
                     self.event_log.iter().map(|l| Value::from(l.clone())).collect(),
                 ),
             ),
-        ])
+        ];
+        if let Some(o) = &self.obsv {
+            fields.push(("obsv", o.clone()));
+        }
+        Value::obj(fields)
     }
 
     /// Per-service summary table.
@@ -352,6 +361,7 @@ mod tests {
             action_counts: BTreeMap::from([("creation".to_string(), 3usize)]),
             events_processed: 5,
             event_log: vec!["t=0.0 bring-up".into()],
+            obsv: None,
         }
     }
 
@@ -360,6 +370,21 @@ mod tests {
         let r = tiny_report();
         assert!((r.overall_attainment() - 0.975).abs() < 1e-12);
         assert_eq!(r.transition_seconds(), 40.0);
+    }
+
+    /// The obsv field is absent when no recorder ran (byte-stable
+    /// recorder-off JSON) and present when the run produced a summary.
+    #[test]
+    fn obsv_summary_only_when_present() {
+        let off = tiny_report();
+        assert!(off.to_json().get("obsv").is_none());
+        let mut on = tiny_report();
+        on.obsv = Some(Value::obj(vec![("spans", Value::from(2usize))]));
+        let v = on.to_json();
+        assert_eq!(
+            v.get_path("obsv.spans").and_then(|x| x.as_usize()),
+            Some(2)
+        );
     }
 
     #[test]

@@ -22,7 +22,7 @@ use std::collections::BTreeMap;
 use crate::cluster::{Action, ActionKind, ClusterState, Executor, ScratchState};
 use crate::controller::Controller;
 use crate::mig::{DeviceKind, FleetSpec};
-use crate::online::{self, OnlineConfig, OnlineScheduler, ServiceView};
+use crate::online::{self, EscalationReason, OnlineConfig, OnlineScheduler, ServiceView};
 use crate::optimizer::{Deployment, OptimizerPipeline, PipelineBudget, ProblemCtx};
 use crate::perf::ProfileBank;
 use crate::spec::ServiceId;
@@ -214,6 +214,9 @@ impl<'a> Simulation<'a> {
 
         while let Some(ev) = queue.pop() {
             let t = ev.at_s;
+            // Drive the recorder's virtual clock from the event queue:
+            // trace timestamps are simulated seconds, never wall clock.
+            crate::obsv::set_time_s(t);
             events_processed += 1;
             // Advance the integrals over [prev_t, t): capacity is
             // piecewise-constant between events, demand is sampled at
@@ -280,7 +283,7 @@ impl<'a> Simulation<'a> {
                             continue;
                         }
                         let mut actions: Vec<Action> = Vec::new();
-                        let mut escalation: Option<String> = None;
+                        let mut escalation: Option<EscalationReason> = None;
                         let mut handled = 0usize;
                         {
                             // Trial-run the events on a scratch overlay;
@@ -307,6 +310,10 @@ impl<'a> Simulation<'a> {
                             // absorbed — retract their count.
                             sched.quality.incremental =
                                 sched.quality.incremental.saturating_sub(handled);
+                            crate::obsv::event(
+                                "sim.escalation",
+                                &[("reason", why.label().into())],
+                            );
                             match self
                                 .plan_transition(&mut cluster, &controller, &demand, t)
                             {
@@ -421,6 +428,15 @@ impl<'a> Simulation<'a> {
                                 fl.actions.len(),
                                 fl.duration_s
                             ));
+                            if crate::obsv::active() {
+                                crate::obsv::event(
+                                    "sim.replan",
+                                    &[
+                                        ("reason", reason.into()),
+                                        ("actions", fl.actions.len().into()),
+                                    ],
+                                );
+                            }
                             inflight = Some(fl);
                         }
                         Err(e) => {
@@ -497,10 +513,25 @@ impl<'a> Simulation<'a> {
                                 e.gpu,
                                 killed.len()
                             ));
+                            if crate::obsv::active() {
+                                crate::obsv::event(
+                                    "sim.gpu_fail",
+                                    &[
+                                        ("gpu", e.gpu.into()),
+                                        ("pods_lost", killed.len().into()),
+                                    ],
+                                );
+                            }
                         }
                         GpuEventKind::Repair => {
                             cluster.set_online(e.gpu)?;
                             event_log.push(format!("t={t:.1} gpu {} repaired", e.gpu));
+                            if crate::obsv::active() {
+                                crate::obsv::event(
+                                    "sim.gpu_repair",
+                                    &[("gpu", e.gpu.into())],
+                                );
+                            }
                         }
                     }
                 }
@@ -552,6 +583,9 @@ impl<'a> Simulation<'a> {
             action_counts,
             events_processed,
             event_log,
+            // Snapshot of the installed recorder (if any) at report
+            // time; `None` keeps the recorder-off JSON byte-stable.
+            obsv: crate::obsv::current().map(|r| r.summary_json()),
         })
     }
 
@@ -788,6 +822,41 @@ mod tests {
         let again = Simulation::new(&bank, &trace, cfg).run().unwrap();
         assert_eq!(report.event_log, again.event_log);
         assert_eq!(report.to_json().to_pretty(), again.to_json().to_pretty());
+    }
+
+    /// A virtual-clock recorder changes nothing about the run (same
+    /// event log, same metrics), lands a summary in the report, and
+    /// stamps every record with simulated — monotone, in-horizon —
+    /// time.
+    #[test]
+    fn recorder_on_is_read_only_and_uses_virtual_time() {
+        use crate::obsv;
+        let bank = ProfileBank::synthetic();
+        let trace = flat_trace(90.0, 1800.0);
+        let cfg = SimConfig { tick_s: 300.0, ..Default::default() };
+        let off = Simulation::new(&bank, &trace, cfg.clone()).run().unwrap();
+
+        let rec = std::sync::Arc::new(obsv::Recorder::new(obsv::Clock::Virtual));
+        let _g = obsv::install(rec.clone());
+        let on = Simulation::new(&bank, &trace, cfg).run().unwrap();
+
+        assert_eq!(off.event_log, on.event_log, "recorder must be read-only");
+        assert_eq!(off.replans, on.replans);
+        assert_eq!(off.gpu_hours, on.gpu_hours);
+        assert!(off.obsv.is_none());
+        assert!(on.obsv.is_some());
+
+        let records = rec.records();
+        assert!(!records.is_empty(), "a replan must leave trace records");
+        let horizon_us = (trace.horizon_s * 1e6) as u64;
+        let mut prev = 0u64;
+        for r in &records {
+            assert!(r.ts_us() <= horizon_us, "{} past horizon", r.ts_us());
+            assert!(r.ts_us() >= prev, "virtual time went backwards");
+            prev = r.ts_us();
+        }
+        assert!(records.iter().any(|r| r.name() == "sim.replan"));
+        assert!(records.iter().any(|r| r.name() == "controller.plan"));
     }
 
     #[test]

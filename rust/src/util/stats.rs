@@ -20,10 +20,13 @@ pub fn std_dev(xs: &[f64]) -> f64 {
 }
 
 /// Percentile by linear interpolation on the sorted copy.
-/// `p` in [0, 100]. Panics on empty input.
+/// `p` in [0, 100]. Returns 0.0 on empty input (matching
+/// [`Histogram::percentile`]'s empty behavior).
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
-    assert!(!xs.is_empty(), "percentile of empty slice");
     assert!((0.0..=100.0).contains(&p), "p={p}");
+    if xs.is_empty() {
+        return 0.0;
+    }
     let mut s = xs.to_vec();
     s.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let rank = p / 100.0 * (s.len() - 1) as f64;
@@ -50,17 +53,29 @@ pub struct Summary {
 }
 
 impl Summary {
+    /// Percentiles are histogram-derived ([`Histogram`], 4096 buckets
+    /// spanning `[min, max]`) so every latency-stat path in the tree —
+    /// this bundle and `serving/metrics.rs` — agrees on one estimator
+    /// instead of two interpolation conventions.
     pub fn of(xs: &[f64]) -> Summary {
         assert!(!xs.is_empty(), "Summary::of empty");
-        Summary {
-            n: xs.len(),
-            min: xs.iter().cloned().fold(f64::INFINITY, f64::min),
-            max: xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
-            mean: mean(xs),
-            p50: percentile(xs, 50.0),
-            p90: percentile(xs, 90.0),
-            p99: percentile(xs, 99.0),
-        }
+        let min = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let (p50, p90, p99) = if max > min {
+            // Shift by min so the fixed-origin histogram spans the data.
+            let mut h = Histogram::new((max - min) / 4096.0, 4096);
+            for &x in xs {
+                h.record(x - min);
+            }
+            (
+                min + h.percentile(50.0),
+                min + h.percentile(90.0),
+                min + h.percentile(99.0),
+            )
+        } else {
+            (min, min, min)
+        };
+        Summary { n: xs.len(), min, max, mean: mean(xs), p50, p90, p99 }
     }
 }
 
@@ -108,6 +123,12 @@ impl Histogram {
 
     pub fn count(&self) -> u64 {
         self.count
+    }
+
+    /// Samples that landed past the bucket ceiling (recorded in
+    /// `count`/`sum`/`min`/`max` but not in any bucket).
+    pub fn overflow(&self) -> u64 {
+        self.overflow
     }
 
     pub fn mean(&self) -> f64 {
@@ -182,6 +203,13 @@ mod tests {
     }
 
     #[test]
+    fn percentile_empty_returns_zero() {
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile(&[], 0.0), 0.0);
+        assert_eq!(percentile(&[], 100.0), 0.0);
+    }
+
+    #[test]
     fn percentile_unsorted_input() {
         let xs = [5.0, 1.0, 3.0, 2.0, 4.0];
         assert_eq!(percentile(&xs, 50.0), 3.0);
@@ -216,6 +244,24 @@ mod tests {
         h.record(5.0);
         h.record(500.0);
         assert_eq!(h.percentile(100.0), 500.0);
+        assert_eq!(h.overflow(), 1);
+    }
+
+    #[test]
+    fn summary_percentiles_histogram_routed() {
+        // Degenerate spread: every percentile is the single value.
+        let s = Summary::of(&[3.0, 3.0, 3.0]);
+        assert_eq!((s.p50, s.p90, s.p99), (3.0, 3.0, 3.0));
+        // Percentiles sit within one bucket width of the sort-based
+        // estimate and are monotone.
+        let xs: Vec<f64> = (1..=1000).map(|i| i as f64).collect();
+        let s = Summary::of(&xs);
+        let width = (s.max - s.min) / 4096.0;
+        assert!((s.p50 - 500.0).abs() <= 1.0 + width, "p50={}", s.p50);
+        assert!((s.p90 - 900.0).abs() <= 1.0 + width, "p90={}", s.p90);
+        assert!((s.p99 - 990.0).abs() <= 1.0 + width, "p99={}", s.p99);
+        assert!(s.p50 <= s.p90 && s.p90 <= s.p99);
+        assert!(s.p99 <= s.max + width);
     }
 
     #[test]

@@ -72,6 +72,68 @@ fn golden_simulate_quick_incremental() {
     check_golden("simulate_quick_incremental", &out).unwrap();
 }
 
+/// ACCEPTANCE (obsv): installing a recorder around the quick diurnal
+/// simulation changes NOTHING in the snapshot text — event log, summary
+/// tables, escalation accounting, fragmentation — at parallelism 1 and
+/// 8, and the exported Chrome trace is byte-identical across repeat
+/// runs at the fixed scenario seed. This is the end-to-end form of the
+/// read-only guarantee the unit tests pin per layer.
+#[test]
+fn golden_simulate_quick_recorder_on_is_byte_identical() {
+    use mig_serving::obsv::{install, Clock, Recorder};
+    use mig_serving::optimizer::PipelineBudget;
+    use std::sync::Arc;
+
+    let bank = ProfileBank::synthetic();
+    let trace = scenario(&bank, "diurnal");
+    let render = |workers: usize| {
+        let cfg = SimConfig {
+            policy: ReplanPolicy::Incremental { gap_threshold: 0.5, repair_depth: 4 },
+            budget: PipelineBudget {
+                parallelism: Some(workers),
+                ..PipelineBudget::fast_only()
+            },
+            ..SimConfig::quick()
+        };
+        let report = Simulation::new(&bank, &trace, cfg).run().unwrap();
+        let mut out = String::new();
+        for line in &report.event_log {
+            out.push_str(line);
+            out.push('\n');
+        }
+        out.push_str(&format!(
+            "events: {} absorbed, {} escalations ({} full replans)\n",
+            report.incremental_events, report.escalations, report.replans
+        ));
+        out.push_str(&report.summary_table());
+        for (kind, v) in &report.fragmentation {
+            out.push_str(&format!("{kind}: {v:.4}\n"));
+        }
+        out
+    };
+
+    let off = render(1);
+    let traced = |workers: usize| {
+        let rec = Arc::new(Recorder::new(Clock::Virtual));
+        let guard = install(rec.clone());
+        let out = render(workers);
+        drop(guard);
+        (out, rec.to_chrome_json())
+    };
+    let (on1, trace_a) = traced(1);
+    let (on8, _) = traced(8);
+    let (on1b, trace_b) = traced(1);
+
+    assert_eq!(on1, off, "recorder-on output diverged at parallelism 1");
+    assert_eq!(on8, off, "recorder-on output diverged at parallelism 8");
+    assert_eq!(trace_a, trace_b, "trace bytes diverged across repeat runs");
+    // The trace carries the per-event online records and the
+    // per-action transition timelines the issue demands.
+    for needle in ["online.event", "transition.action", "controller.plan"] {
+        assert!(trace_a.contains(needle), "trace missing {needle}");
+    }
+}
+
 /// The fig09 GPUs-used table at a pinned 1-round GA budget.
 #[test]
 fn golden_fig09_table() {

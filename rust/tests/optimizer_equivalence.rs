@@ -304,6 +304,65 @@ fn mixed_fleet_two_phase_solves_and_is_parallel_deterministic() {
     }
 }
 
+/// ACCEPTANCE (obsv): turning the recorder ON changes nothing about
+/// the solve — best deployment and `GaHistory` stay byte-identical to
+/// the recorder-off run at parallelism 1 and 8 — and the exported
+/// Chrome trace + Prometheus text are themselves byte-identical across
+/// worker counts and across repeated runs at the same seed. Events
+/// recorded by workers flow through per-slot `Lane`s merged in slot
+/// order, so the record stream never sees worker interleaving.
+#[test]
+fn recorder_on_preserves_bit_identity_and_trace_is_deterministic() {
+    use mig_serving::obsv::{install, Clock, Recorder};
+    use std::sync::Arc;
+
+    let bank = ProfileBank::synthetic();
+    let w = micro_workload(&bank, 12, 8.0);
+    let ctx = ProblemCtx::new(&bank, &w).unwrap();
+    let solve = |workers: usize| {
+        let budget = PipelineBudget {
+            ga_rounds: 2,
+            ga_patience: 2,
+            mcts_iterations: 12,
+            parallelism: Some(workers),
+            ..Default::default()
+        };
+        OptimizerPipeline::with_budget(&ctx, budget).optimize().unwrap()
+    };
+    // Recorder-off reference.
+    let off = solve(1);
+
+    // One FRESH recorder per run (records are cumulative per recorder).
+    let traced = |workers: usize| {
+        let rec = Arc::new(Recorder::new(Clock::Logical));
+        let guard = install(rec.clone());
+        let out = solve(workers);
+        drop(guard);
+        (out, rec.to_chrome_json(), rec.to_prometheus())
+    };
+
+    let (a1, trace1, prom1) = traced(1);
+    let (a8, trace8, prom8) = traced(8);
+    let (b1, trace1b, _) = traced(1);
+
+    // Read-only: recorder on ⇒ same solve as recorder off.
+    assert_eq!(labels(&a1.best.gpus), labels(&off.best.gpus));
+    assert_eq!(a1.history.best_gpus_per_round, off.history.best_gpus_per_round);
+    assert_eq!(labels(&a8.best.gpus), labels(&off.best.gpus));
+    assert_eq!(a8.history.best_gpus_per_round, off.history.best_gpus_per_round);
+
+    // Trace bytes are invariant to worker count and replayable.
+    assert_eq!(trace1, trace8, "trace bytes diverged across parallelism");
+    assert_eq!(prom1, prom8, "metrics bytes diverged across parallelism");
+    assert_eq!(trace1, trace1b, "trace bytes diverged across repeat runs");
+
+    // The trace actually contains the per-stage spans and GA curve.
+    for needle in ["pipeline.pool", "pipeline.fast", "pipeline.ga", "ga.round"] {
+        assert!(trace1.contains(needle), "trace missing {needle}");
+    }
+    assert!(prom1.contains("mcts_rollouts"), "metrics missing MCTS counters");
+}
+
 /// Residual (partial-completion) solves agree between the seed full
 /// scan and the engine path — the controller's scale-up case.
 #[test]

@@ -1,0 +1,141 @@
+#!/usr/bin/env python3
+"""Schema checks for the obsv exporter artifacts CI produces.
+
+Usage: check_obsv.py FILE [FILE ...]
+
+Files ending in ``.json`` are validated as Chrome ``trace_event``
+documents (the format Perfetto / chrome://tracing loads):
+
+* the document parses as JSON and has a ``traceEvents`` array;
+* every event has a ``ph`` in {B, E, i}, a non-empty ``name``, and a
+  non-negative integer ``ts``;
+* B/E span events balance per (pid, tid) — every End pops the Begin
+  with the same name, and nothing is left open at EOF;
+* timestamps are monotonically non-decreasing in stream order (the
+  recorder's determinism contract).
+
+Files ending in ``.prom`` are validated as Prometheus text exposition:
+
+* every non-blank line is a ``# HELP``/``# TYPE`` comment or a
+  ``name{labels} value`` sample;
+* metric names match ``[a-zA-Z_:][a-zA-Z0-9_:]*``;
+* every sample parses to a finite float;
+* every ``# TYPE`` is followed by at least one sample of that family.
+
+Exit 0 when every file passes; exit 1 with one line per violation.
+"""
+
+import json
+import math
+import re
+import sys
+
+SAMPLE_RE = re.compile(
+    r"^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)"
+    r"(?P<labels>\{[^{}]*\})?"
+    r"\s+(?P<value>\S+)$"
+)
+COMMENT_RE = re.compile(r"^# (HELP|TYPE) [a-zA-Z_:][a-zA-Z0-9_:]*( .*)?$")
+
+
+def check_trace(path, errors):
+    with open(path, encoding="utf-8") as f:
+        try:
+            doc = json.load(f)
+        except json.JSONDecodeError as e:
+            errors.append(f"{path}: not valid JSON: {e}")
+            return
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        errors.append(f"{path}: missing traceEvents array")
+        return
+    if not events:
+        errors.append(f"{path}: traceEvents is empty")
+        return
+    stacks = {}  # (pid, tid) -> [names of open B spans]
+    last_ts = -1
+    for i, ev in enumerate(events):
+        ph = ev.get("ph")
+        name = ev.get("name", "")
+        ts = ev.get("ts")
+        where = f"{path}: traceEvents[{i}]"
+        if ph not in ("B", "E", "i"):
+            errors.append(f"{where}: unexpected ph {ph!r}")
+            continue
+        if ph != "E" and not name:
+            errors.append(f"{where}: empty name")
+        if not isinstance(ts, int) or ts < 0:
+            errors.append(f"{where}: bad ts {ts!r}")
+            continue
+        if ts < last_ts:
+            errors.append(f"{where}: ts {ts} < previous {last_ts} (not monotone)")
+        last_ts = ts
+        key = (ev.get("pid"), ev.get("tid"))
+        if ph == "B":
+            stacks.setdefault(key, []).append(name)
+        elif ph == "E":
+            stack = stacks.get(key) or []
+            if not stack:
+                errors.append(f"{where}: E with no open B on {key}")
+            else:
+                stack.pop()
+    for key, stack in stacks.items():
+        if stack:
+            errors.append(f"{path}: unclosed spans on {key}: {stack}")
+
+
+def check_metrics(path, errors):
+    typed = set()
+    sampled = set()
+    with open(path, encoding="utf-8") as f:
+        for lineno, line in enumerate(f, 1):
+            line = line.rstrip("\n")
+            if not line.strip():
+                continue
+            where = f"{path}:{lineno}"
+            if line.startswith("#"):
+                m = COMMENT_RE.match(line)
+                if not m:
+                    errors.append(f"{where}: malformed comment: {line!r}")
+                elif m.group(1) == "TYPE":
+                    typed.add(line.split()[2])
+                continue
+            m = SAMPLE_RE.match(line)
+            if not m:
+                errors.append(f"{where}: malformed sample: {line!r}")
+                continue
+            try:
+                v = float(m.group("value"))
+            except ValueError:
+                errors.append(f"{where}: non-numeric value: {line!r}")
+                continue
+            if not math.isfinite(v):
+                errors.append(f"{where}: non-finite value: {line!r}")
+            sampled.add(m.group("name"))
+    if not sampled:
+        errors.append(f"{path}: no samples at all")
+    for family in sorted(typed):
+        # Histogram families expose samples as family_quantiles/_sum/...
+        if not any(s == family or s.startswith(family + "_") for s in sampled):
+            errors.append(f"{path}: # TYPE {family} has no samples")
+
+
+def main(argv):
+    if len(argv) < 2:
+        print(__doc__.strip().splitlines()[2], file=sys.stderr)
+        return 2
+    errors = []
+    for path in argv[1:]:
+        if path.endswith(".prom"):
+            check_metrics(path, errors)
+        else:
+            check_trace(path, errors)
+    for e in errors:
+        print(e, file=sys.stderr)
+    if not errors:
+        print(f"ok: {len(argv) - 1} artifact(s) pass schema checks")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
