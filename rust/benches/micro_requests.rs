@@ -1,0 +1,115 @@
+//! Request-level simulation bench: simulated-requests/second through
+//! the full control loop at production arrival volumes.
+//!
+//! Section 1 asserts the determinism contract for the request layer
+//! (byte-identical report — including the `requests` block — at
+//! optimizer parallelism 1 vs 8, ~1M lifetimes) **before** timing
+//! anything. Sections 2/3 time the diurnal scenario at 1M and 10M
+//! requests/day (10M skipped under `--quick`). `--json` writes
+//! `BENCH_requests.json` (CI uploads it as an artifact).
+
+use std::time::Instant;
+
+use mig_serving::bench::{header, BenchArgs, JsonReport};
+use mig_serving::optimizer::PipelineBudget;
+use mig_serving::perf::ProfileBank;
+use mig_serving::simkit::{scenario, SimConfig, SimReport, Simulation};
+use mig_serving::util::json::Value;
+
+fn cfg_at(requests_per_day: f64) -> SimConfig {
+    SimConfig {
+        requests_per_day: Some(requests_per_day),
+        ..SimConfig::quick()
+    }
+}
+
+/// One timed control-loop run; returns (report, simulated req/s).
+fn timed_run(bank: &ProfileBank, rpd: f64) -> (SimReport, f64) {
+    let trace = scenario(bank, "diurnal");
+    let t0 = Instant::now();
+    let report = Simulation::new(bank, &trace, cfg_at(rpd)).run().expect("sim runs");
+    let wall = t0.elapsed().as_secs_f64();
+    let injected = report.requests.as_ref().expect("requests on").total.injected;
+    (report, injected as f64 / wall)
+}
+
+fn main() {
+    let args = BenchArgs::parse();
+    header(
+        "micro_requests",
+        "request-level simkit: per-instance queues, dynamic batching, measured tail latency",
+    );
+    let bank = ProfileBank::synthetic();
+    let mut report = JsonReport::new("micro_requests", args.quick);
+
+    // ---- Section 1: determinism gate (always before timing).
+    if args.section_enabled(1) {
+        println!("\n[1] determinism: diurnal at 1M req/day, parallelism 1 vs 8");
+        let trace = scenario(&bank, "diurnal");
+        let run = |par: usize| {
+            let cfg = SimConfig {
+                budget: PipelineBudget {
+                    parallelism: Some(par),
+                    ..PipelineBudget::fast_only()
+                },
+                ..cfg_at(1_000_000.0)
+            };
+            Simulation::new(&bank, &trace, cfg).run().expect("sim runs")
+        };
+        let p1 = run(1);
+        let p8 = run(8);
+        assert_eq!(
+            p1.to_json().to_pretty(),
+            p8.to_json().to_pretty(),
+            "request-level report must be bit-identical at any parallelism"
+        );
+        let rq = p1.requests.as_ref().expect("requests on");
+        assert!(
+            rq.total.injected > 900_000,
+            "expected ~1M lifetimes, got {}",
+            rq.total.injected
+        );
+        println!(
+            "    OK: {} injected, {} completed, {} dropped, p99 {:.1} ms",
+            rq.total.injected, rq.total.completed, rq.total.dropped, rq.total.p99_ms
+        );
+        report.record("determinism", "identical", Value::Bool(true));
+        report.record(
+            "determinism",
+            "injected",
+            Value::from(rq.total.injected as usize),
+        );
+    }
+
+    // ---- Sections 2/3: simulated-requests/sec at 1M and 10M req/day.
+    for (section, rpd) in [(2usize, 1_000_000.0f64), (3, 10_000_000.0)] {
+        if !args.section_enabled(section) {
+            continue;
+        }
+        if args.quick && section == 3 {
+            println!("\n[3] skipped under --quick (10M req/day)");
+            continue;
+        }
+        let label = format!("{}M_per_day", (rpd / 1_000_000.0) as u64);
+        println!("\n[{section}] diurnal at {rpd:.0} requests/day");
+        let (rep, req_per_s) = timed_run(&bank, rpd);
+        let rq = rep.requests.as_ref().expect("requests on");
+        println!(
+            "    {:.0} simulated req/s wall-clock ({} injected, {} dropped, \
+             p50 {:.1} ms, p99 {:.1} ms)",
+            req_per_s, rq.total.injected, rq.total.dropped, rq.total.p50_ms, rq.total.p99_ms
+        );
+        report.record(&label, "sim_requests_per_sec", Value::Num(req_per_s));
+        report.record(&label, "injected", Value::from(rq.total.injected as usize));
+        report.record(&label, "completed", Value::from(rq.total.completed as usize));
+        report.record(&label, "dropped", Value::from(rq.total.dropped as usize));
+        report.record(&label, "p50_ms", Value::Num(rq.total.p50_ms));
+        report.record(&label, "p99_ms", Value::Num(rq.total.p99_ms));
+        report.record(&label, "replans", Value::from(rep.replans));
+    }
+
+    if let Some(path) = &args.json {
+        report.write(path).expect("write bench json");
+        println!("\nwrote {}", path.display());
+    }
+}

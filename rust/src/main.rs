@@ -64,6 +64,7 @@ fn app() -> App {
                 .opt("threads", "0", "worker threads for replans (0 = all cores; the report is identical at any value)")
                 .opt("gap-threshold", "0.5", "incremental policy: escalate past this optimality gap vs the §8.1 lower bound")
                 .opt("repair-depth", "4", "incremental policy: max pods evicted per local repair")
+                .opt("requests-per-day", "0", "run the request-level simulator with the trace rescaled to this many arrivals/day: measured p50/p90/p99 latency + drops (0 = fluid model only)")
                 .opt("json", "", "write the control-vs-baseline report JSON to this path")
                 .opt("trace-out", "", "write a virtual-clock trace of the run (Chrome trace_event JSON; .jsonl for JSONL)")
                 .opt("metrics-out", "", "write run metrics in Prometheus text exposition to this path")
@@ -336,6 +337,8 @@ fn cmd_simulate(args: &mig_serving::util::cli::Args) -> anyhow::Result<()> {
     let threads = args.get_usize("threads").unwrap_or(0);
     cfg.seed = args.get_u64("seed").unwrap_or(42);
     cfg.fleet = fleet;
+    let rpd = args.get_f64("requests-per-day").unwrap_or(0.0);
+    cfg.requests_per_day = (rpd > 0.0).then_some(rpd);
     cfg.budget = PipelineBudget {
         ga_rounds: args.get_usize("ga-rounds").unwrap_or(0),
         parallelism: (threads > 0).then_some(threads),
@@ -361,6 +364,12 @@ fn cmd_simulate(args: &mig_serving::util::cli::Args) -> anyhow::Result<()> {
 
     println!("\ncontrol loop — per service:\n{}", cmp.control.summary_table());
     println!("static-peak baseline — per service:\n{}", cmp.baseline.summary_table());
+    if let Some(t) = cmp.control.requests_table() {
+        println!("control loop — measured request lifetimes:\n{t}");
+    }
+    if let Some(t) = cmp.baseline.requests_table() {
+        println!("static-peak baseline — measured request lifetimes:\n{t}");
+    }
     println!("comparison:\n{}", cmp.table());
     println!(
         "GPU-hours saved by the control loop: {:.1} ({} replans, {:.1}s in transitions)",

@@ -30,11 +30,20 @@ pub enum Msg {
 /// Collect a batch: block (with timeout) for the first request, then
 /// drain up to `max_batch - 1` more without waiting.
 /// Returns None on Stop or channel close; re-queues nothing.
+///
+/// A Stop drained *mid-batch* still returns the partial batch (those
+/// requests must be served), but is remembered in `stop_seen`: the next
+/// call returns None immediately. The caller owns the flag because the
+/// channel gives no way to push the message back.
 pub fn collect_batch(
     rx: &mpsc::Receiver<Msg>,
     max_batch: usize,
     first_timeout: Duration,
+    stop_seen: &mut bool,
 ) -> Option<Vec<Request>> {
+    if *stop_seen {
+        return None;
+    }
     let first = loop {
         match rx.recv_timeout(first_timeout) {
             Ok(Msg::Req(r)) => break r,
@@ -48,8 +57,8 @@ pub fn collect_batch(
         match rx.try_recv() {
             Ok(Msg::Req(r)) => batch.push(r),
             Ok(Msg::Stop) => {
-                // Serve what we have; the caller sees Stop next round.
-                // (Stop is idempotent: re-send it to ourselves.)
+                // Serve what we have; the flag terminates next round.
+                *stop_seen = true;
                 return Some(batch);
             }
             Err(_) => break,
@@ -72,9 +81,12 @@ mod tests {
         for _ in 0..10 {
             tx.send(req()).unwrap();
         }
-        let b = collect_batch(&rx, 8, Duration::from_millis(50)).unwrap();
+        let mut stop_seen = false;
+        let b = collect_batch(&rx, 8, Duration::from_millis(50), &mut stop_seen)
+            .unwrap();
         assert_eq!(b.len(), 8);
-        let b2 = collect_batch(&rx, 8, Duration::from_millis(50)).unwrap();
+        let b2 = collect_batch(&rx, 8, Duration::from_millis(50), &mut stop_seen)
+            .unwrap();
         assert_eq!(b2.len(), 2);
     }
 
@@ -83,7 +95,7 @@ mod tests {
         let (tx, rx) = mpsc::channel();
         tx.send(req()).unwrap();
         let t0 = Instant::now();
-        let b = collect_batch(&rx, 8, Duration::from_secs(5)).unwrap();
+        let b = collect_batch(&rx, 8, Duration::from_secs(5), &mut false).unwrap();
         assert_eq!(b.len(), 1);
         assert!(t0.elapsed() < Duration::from_millis(100), "batcher waited");
     }
@@ -92,13 +104,37 @@ mod tests {
     fn stop_terminates() {
         let (tx, rx) = mpsc::channel();
         tx.send(Msg::Stop).unwrap();
-        assert!(collect_batch(&rx, 8, Duration::from_millis(10)).is_none());
+        assert!(collect_batch(&rx, 8, Duration::from_millis(10), &mut false)
+            .is_none());
     }
 
     #[test]
     fn disconnect_terminates() {
         let (tx, rx) = mpsc::channel::<Msg>();
         drop(tx);
-        assert!(collect_batch(&rx, 8, Duration::from_millis(10)).is_none());
+        assert!(collect_batch(&rx, 8, Duration::from_millis(10), &mut false)
+            .is_none());
+    }
+
+    #[test]
+    fn stop_drained_mid_batch_terminates_next_round() {
+        // Regression: a Stop drained while batching used to be
+        // swallowed (the comment claimed a re-send that never
+        // happened), leaving the instance loop spinning on its
+        // recv timeout until the atomic flag was polled.
+        let (tx, rx) = mpsc::channel();
+        tx.send(req()).unwrap();
+        tx.send(Msg::Stop).unwrap();
+        let mut stop_seen = false;
+        let b = collect_batch(&rx, 8, Duration::from_millis(50), &mut stop_seen)
+            .unwrap();
+        assert_eq!(b.len(), 1);
+        assert!(stop_seen);
+        // The next round must terminate immediately — not block the
+        // full first-request timeout waiting on an empty channel.
+        let t0 = Instant::now();
+        assert!(collect_batch(&rx, 8, Duration::from_secs(5), &mut stop_seen)
+            .is_none());
+        assert!(t0.elapsed() < Duration::from_millis(100), "Stop was swallowed");
     }
 }

@@ -104,8 +104,10 @@ impl LoadGen {
     /// Concurrent open-loop arrival for many services at once: service
     /// `i` receives requests at `rates[i]` req/s for `duration`.
     /// Completion is tracked through metrics; the report's
-    /// `achieved_throughput` is completions/duration (≈ the offered rate
-    /// when the deployment keeps up — the Fig 14 satisfaction measure).
+    /// `achieved_throughput` is completions within the send window over
+    /// that window's true length (≈ the offered rate when the
+    /// deployment keeps up — the Fig 14 satisfaction measure — and
+    /// never above it).
     pub fn open_loop_all(
         cluster: &ServingCluster,
         rates: &[f64],
@@ -140,19 +142,30 @@ impl LoadGen {
                 });
             }
         });
-        // Drain window: let in-flight batches finish.
-        std::thread::sleep(Duration::from_millis(500));
+        // Snapshot the accounting window *before* the drain sleep:
+        // completions landing during the drain belong to requests whose
+        // service time extends past the window — crediting them while
+        // still dividing by `duration` reported throughputs above the
+        // offered rate. Counters are read before the clock so a stall
+        // between the two shrinks the ratio instead of inflating it.
+        let window: Vec<(u64, u64)> = (0..rates.len())
+            .map(|s| (cluster.metrics[s].completed(), cluster.metrics[s].errors()))
+            .collect();
         let elapsed = t0.elapsed();
+        // Drain: let in-flight batches finish so the cumulative latency
+        // percentiles below include them (counters above are frozen).
+        std::thread::sleep(Duration::from_millis(500));
         (0..rates.len())
             .zip(base)
-            .map(|(svc, (c0, e0))| {
+            .zip(window)
+            .map(|((svc, (c0, e0)), (c1, e1))| {
                 let m = &cluster.metrics[svc];
-                let completed = m.completed() - c0;
+                let completed = c1 - c0;
                 LoadReport {
                     service: svc,
-                    achieved_throughput: completed as f64 / duration.as_secs_f64(),
+                    achieved_throughput: completed as f64 / elapsed.as_secs_f64(),
                     completed,
-                    errors: m.errors() - e0,
+                    errors: e1 - e0,
                     p50_ms: m.latency_percentile(50.0),
                     p90_ms: m.latency_percentile(90.0),
                     p99_ms: m.latency_percentile(99.0),
@@ -188,20 +201,81 @@ impl LoadGen {
             });
             next += interval;
         }
-        // Drain window: let in-flight work finish.
-        std::thread::sleep(Duration::from_millis(300));
+        // Freeze the accounting window before draining (see
+        // `open_loop_all`: drained completions must not be divided by
+        // the shorter send window; counters before clock).
+        let c1 = cluster.metrics[service].completed();
+        let e1 = cluster.metrics[service].errors();
         let elapsed = t0.elapsed();
+        // Drain: in-flight work still lands in the latency histogram.
+        std::thread::sleep(Duration::from_millis(300));
         let m = &cluster.metrics[service];
-        let completed = m.completed() - c0;
+        let completed = c1 - c0;
         LoadReport {
             service,
-            achieved_throughput: completed as f64 / duration.as_secs_f64(),
+            achieved_throughput: completed as f64 / elapsed.as_secs_f64(),
             completed,
-            errors: m.errors() - e0,
+            errors: e1 - e0,
             p50_ms: m.latency_percentile(50.0),
             p90_ms: m.latency_percentile(90.0),
             p99_ms: m.latency_percentile(99.0),
             duration: elapsed,
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer::{Greedy, OptimizerProcedure, ProblemCtx};
+    use crate::perf::ProfileBank;
+    use crate::spec::{Slo, Workload};
+
+    fn paced_cluster(slo_rate: f64) -> ServingCluster {
+        let bank = ProfileBank::synthetic();
+        let w = Workload::new(
+            "loadgen-test",
+            vec![("resnet50".to_string(), Slo::new(slo_rate, 400.0))],
+        );
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let dep = Greedy::new().solve(&ctx).unwrap();
+        ServingCluster::deploy_paced(&dep, &w, 1).unwrap()
+    }
+
+    #[test]
+    fn open_loop_throughput_bounded_by_offered_rate() {
+        // Regression: completions landing during the post-`duration`
+        // drain sleep used to be counted while still dividing by
+        // `duration`, so a keeping-up deployment reported more than the
+        // offered rate (the boundary-instant request alone pushed it
+        // over: floor(duration/interval) + 1 sends in `duration`).
+        let cluster = paced_cluster(40.0);
+        let rate = 30.0;
+        let rep =
+            LoadGen::open_loop(&cluster, 0, rate, Duration::from_millis(1000));
+        assert!(rep.completed > 0, "nothing completed");
+        assert!(
+            rep.achieved_throughput <= rate,
+            "achieved {} exceeds offered {rate}",
+            rep.achieved_throughput
+        );
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn open_loop_all_throughput_bounded_by_offered_rates() {
+        let cluster = paced_cluster(40.0);
+        let rates = [25.0];
+        let reps =
+            LoadGen::open_loop_all(&cluster, &rates, Duration::from_millis(1000));
+        assert_eq!(reps.len(), 1);
+        assert!(reps[0].completed > 0, "nothing completed");
+        assert!(
+            reps[0].achieved_throughput <= rates[0],
+            "achieved {} exceeds offered {}",
+            reps[0].achieved_throughput,
+            rates[0]
+        );
+        cluster.shutdown();
     }
 }

@@ -2,6 +2,14 @@
 //! instances, weighted by profiled instance throughput (§7: "MIG-SERVING
 //! relies on load balancing systems to dispatch user requests
 //! accordingly" — this is that system).
+//!
+//! Hot-path shape: cumulative weights are precomputed at
+//! [`Router::add_instance`] time and each draw is one RNG call plus a
+//! binary search — `route()` allocates nothing and contends only on the
+//! *per-service* RNG lock (previously every request rebuilt a weights
+//! `Vec` and serialized through one global `Mutex<Rng>`). The chosen
+//! stream is identical to the old linear scan for the same seed
+//! (asserted in `binary_search_matches_linear_scan_stream`).
 
 use std::sync::mpsc;
 use std::sync::Mutex;
@@ -11,17 +19,35 @@ use crate::util::rng::Rng;
 
 use super::batcher::{Msg, Request};
 
+/// One service's instance pool: senders, prefix-summed weights, and a
+/// dedicated RNG stream (forked from the router seed in service-index
+/// order, so streams are deterministic and lock contention is scoped to
+/// the service).
+struct ServicePool {
+    txs: Vec<mpsc::Sender<Msg>>,
+    /// `cum[i] = w_0 + … + w_i`, accumulated in registration order —
+    /// the same sequential sum `Rng::weighted` computes, so the two
+    /// draw procedures see bit-identical totals.
+    cum: Vec<f64>,
+    rng: Mutex<Rng>,
+}
+
 /// Routing table: per-service weighted instance queues.
 pub struct Router {
-    per_service: Vec<Vec<(mpsc::Sender<Msg>, f64)>>,
-    rng: Mutex<Rng>,
+    per_service: Vec<ServicePool>,
 }
 
 impl Router {
     pub fn new(n_services: usize, seed: u64) -> Router {
+        let mut master = Rng::new(seed);
         Router {
-            per_service: (0..n_services).map(|_| Vec::new()).collect(),
-            rng: Mutex::new(Rng::new(seed)),
+            per_service: (0..n_services)
+                .map(|_| ServicePool {
+                    txs: Vec::new(),
+                    cum: Vec::new(),
+                    rng: Mutex::new(master.fork()),
+                })
+                .collect(),
         }
     }
 
@@ -29,26 +55,36 @@ impl Router {
     /// (profiled throughput).
     pub fn add_instance(&mut self, service: ServiceId, tx: mpsc::Sender<Msg>, weight: f64) {
         assert!(weight > 0.0);
-        self.per_service[service].push((tx, weight));
+        let pool = &mut self.per_service[service];
+        let total = pool.cum.last().copied().unwrap_or(0.0);
+        pool.txs.push(tx);
+        pool.cum.push(total + weight);
     }
 
     pub fn instances_of(&self, service: ServiceId) -> usize {
-        self.per_service[service].len()
+        self.per_service[service].txs.len()
+    }
+
+    /// Draw the weighted instance index for `service` without sending
+    /// (advances the service's RNG stream). `u = f64() * total` picks
+    /// the first `i` with `cum[i] >= u` — exactly the index the linear
+    /// scan in [`Rng::weighted`] returns, found in `O(log n)`.
+    pub fn choose_instance(&self, service: ServiceId) -> anyhow::Result<usize> {
+        let pool = &self.per_service[service];
+        anyhow::ensure!(
+            !pool.txs.is_empty(),
+            "service {service} has no instances"
+        );
+        let total = *pool.cum.last().unwrap();
+        let u = pool.rng.lock().unwrap().f64() * total;
+        Ok(pool.cum.partition_point(|&c| c < u).min(pool.cum.len() - 1))
     }
 
     /// Dispatch a request to one of its service's instances
     /// (throughput-weighted random choice).
     pub fn route(&self, req: Request) -> anyhow::Result<()> {
-        let pool = &self.per_service[req.service];
-        anyhow::ensure!(
-            !pool.is_empty(),
-            "service {} has no instances",
-            req.service
-        );
-        let weights: Vec<f64> = pool.iter().map(|(_, w)| *w).collect();
-        let ix = self.rng.lock().unwrap().weighted(&weights);
-        pool[ix]
-            .0
+        let ix = self.choose_instance(req.service)?;
+        self.per_service[req.service].txs[ix]
             .send(Msg::Req(req))
             .map_err(|_| anyhow::anyhow!("instance queue closed"))
     }
@@ -97,5 +133,44 @@ mod tests {
         router.route(req(1)).unwrap();
         assert_eq!(rx0.try_iter().count(), 1);
         assert_eq!(rx1.try_iter().count(), 1);
+    }
+
+    #[test]
+    fn binary_search_matches_linear_scan_stream() {
+        // The refactor must not change which instance any request goes
+        // to: replay 50k draws against the pre-refactor linear scan
+        // (`Rng::weighted`) fed by the same per-service stream — the
+        // first fork of the router seed.
+        let weights = [30.0, 10.0, 20.0, 5.0, 12.5];
+        let mut router = Router::new(1, 42);
+        let mut rxs = Vec::new();
+        for &w in &weights {
+            let (tx, rx) = mpsc::channel();
+            router.add_instance(0, tx, w);
+            rxs.push(rx);
+        }
+        let mut reference = Rng::new(42).fork();
+        for step in 0..50_000 {
+            let chosen = router.choose_instance(0).unwrap();
+            let expect = reference.weighted(&weights);
+            assert_eq!(chosen, expect, "streams diverged at draw {step}");
+        }
+    }
+
+    #[test]
+    fn choose_instance_covers_all_and_only_valid_indices() {
+        let mut router = Router::new(1, 11);
+        let weights = [1.0, 2.0, 3.0];
+        for &w in &weights {
+            // choose_instance never sends, so the rx can drop here.
+            let (tx, _rx) = mpsc::channel();
+            router.add_instance(0, tx, w);
+        }
+        let mut seen = [0usize; 3];
+        for _ in 0..10_000 {
+            seen[router.choose_instance(0).unwrap()] += 1;
+        }
+        assert!(seen.iter().all(|&c| c > 0), "{seen:?}");
+        assert!(seen[2] > seen[0], "{seen:?}");
     }
 }

@@ -99,6 +99,43 @@ impl ServingCluster {
         Ok(ServingCluster { router, metrics, instances, stop })
     }
 
+    /// Bring up a pacing-only cluster: same router, batcher, and
+    /// metrics wiring as [`ServingCluster::deploy`], but instances pace
+    /// completions at the profile-calibrated service time without
+    /// running inference — no artifact manifest or PJRT server needed.
+    /// This is the CI-runnable path for exercising routing, batching,
+    /// and load-generator accounting.
+    pub fn deploy_paced(
+        deployment: &Deployment,
+        workload: &Workload,
+        seed: u64,
+    ) -> anyhow::Result<ServingCluster> {
+        let n = workload.len();
+        let mut router = Router::new(n, seed);
+        let metrics: Vec<Arc<ServiceMetrics>> =
+            (0..n).map(|_| Arc::new(ServiceMetrics::new())).collect();
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut instances = Vec::new();
+        for g in &deployment.gpus {
+            for a in &g.assigns {
+                let (tx, rx) = mpsc::channel::<Msg>();
+                router.add_instance(a.service, tx.clone(), a.throughput);
+                let m = metrics[a.service].clone();
+                let stop2 = stop.clone();
+                let throughput = a.throughput;
+                let max_batch = a.batch.max(1);
+                let service = a.service;
+                let join = std::thread::Builder::new()
+                    .name(format!("paced-{}-{}", service, a.placement.size.slices()))
+                    .spawn(move || {
+                        paced_instance_loop(rx, m, stop2, throughput, max_batch);
+                    })?;
+                instances.push(InstanceHandle { service, tx, join: Some(join) });
+            }
+        }
+        Ok(ServingCluster { router, metrics, instances, stop })
+    }
+
     pub fn num_instances(&self) -> usize {
         self.instances.len()
     }
@@ -133,8 +170,12 @@ fn instance_loop(
     // real).
     let inputs: Vec<Vec<f32>> =
         metas.iter().map(|m| golden_input(m.input_len())).collect();
+    // Carries a Stop drained mid-batch over to the next round so the
+    // loop exits after serving the partial batch.
+    let mut stop_seen = false;
     while !stop.load(Ordering::SeqCst) {
-        let Some(batch) = collect_batch(&rx, max_batch, Duration::from_millis(50))
+        let Some(batch) =
+            collect_batch(&rx, max_batch, Duration::from_millis(50), &mut stop_seen)
         else {
             break;
         };
@@ -176,6 +217,35 @@ fn instance_loop(
     }
 }
 
+/// [`instance_loop`] minus the exec server: drain, sleep the profiled
+/// service time for the batch, record completions.
+fn paced_instance_loop(
+    rx: mpsc::Receiver<Msg>,
+    metrics: Arc<ServiceMetrics>,
+    stop: Arc<AtomicBool>,
+    throughput: f64,
+    max_batch: usize,
+) {
+    let mut stop_seen = false;
+    while !stop.load(Ordering::SeqCst) {
+        let Some(batch) =
+            collect_batch(&rx, max_batch, Duration::from_millis(50), &mut stop_seen)
+        else {
+            break;
+        };
+        std::thread::sleep(Duration::from_secs_f64(
+            batch.len() as f64 / throughput,
+        ));
+        let now = Instant::now();
+        for req in batch {
+            metrics.record_completion(now - req.submitted);
+            if let Some(done) = req.done {
+                let _ = done.try_send(());
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -189,6 +259,32 @@ mod tests {
         root.join("manifest.json")
             .exists()
             .then(|| Manifest::load(root).unwrap())
+    }
+
+    #[test]
+    fn deploy_paced_serves_without_artifacts() {
+        let bank = ProfileBank::synthetic();
+        let w = Workload::new(
+            "paced-test",
+            vec![("resnet50".to_string(), Slo::new(40.0, 400.0))],
+        );
+        let ctx = ProblemCtx::new(&bank, &w).unwrap();
+        let dep = Greedy::new().solve(&ctx).unwrap();
+        let cluster = ServingCluster::deploy_paced(&dep, &w, 1).unwrap();
+        assert!(cluster.num_instances() > 0);
+        let (done_tx, done_rx) = mpsc::sync_channel(1);
+        cluster
+            .router
+            .route(Request {
+                service: 0,
+                submitted: Instant::now(),
+                done: Some(done_tx),
+            })
+            .unwrap();
+        done_rx.recv_timeout(Duration::from_secs(10)).expect("completed");
+        assert_eq!(cluster.metrics[0].completed(), 1);
+        assert_eq!(cluster.metrics[0].errors(), 0);
+        cluster.shutdown();
     }
 
     #[test]

@@ -23,10 +23,16 @@
 //!   the §6 controller, and replays the executor's asynchronous action
 //!   schedule on the virtual clock so capacity is degraded
 //!   mid-transition exactly as the stages dictate;
+//! * [`reqsim`] — optional request-level layer under the same clock:
+//!   per-service Poisson arrivals thinned against the trace demand
+//!   curve, one FIFO queue per deployed instance with dynamic batching
+//!   (drain-up-to-batch, never wait), drain-latency routing, and
+//!   measured per-request latency percentiles / drop rates;
 //! * [`report`] — [`SimReport`]: per-service SLO-attainment timeline,
 //!   unmet-demand integral, GPU-hours, replan counts/durations, and
 //!   the transition-time breakdown, plus the control-loop vs.
-//!   static-peak [`SimComparison`].
+//!   static-peak [`SimComparison`] and (when request simulation is
+//!   on) the [`RequestReport`] latency/drop summary.
 //!
 //! Determinism: a fixed seed produces a byte-identical event log and
 //! `SimReport` at any optimizer `parallelism` (asserted in
@@ -35,13 +41,18 @@
 pub mod control;
 pub mod event;
 pub mod report;
+pub mod reqsim;
 pub mod scenario;
 pub mod sim;
 pub mod trace;
 
 pub use control::{ControlLoop, ReplanPolicy};
 pub use event::{Event, EventQueue};
-pub use report::{ServiceTimeline, SimComparison, SimReport, TransitionRecord};
+pub use report::{
+    RequestReport, RequestStats, ServiceTimeline, SimComparison, SimReport,
+    TransitionRecord,
+};
+pub use reqsim::{InstanceKey, ReqSim};
 pub use scenario::{scenario, scenario_fleet, SCENARIOS};
 pub use sim::{SimConfig, Simulation};
 pub use trace::{DemandShape, GpuEvent, GpuEventKind, ServiceTrace, Trace};

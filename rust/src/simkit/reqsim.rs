@@ -1,0 +1,755 @@
+//! Request-level serving simulation: individual request lifetimes on
+//! the virtual clock, layered over the fluid demand/capacity model.
+//!
+//! The fluid integrals in [`super::sim`] answer "was there enough
+//! aggregate throughput?" — they cannot see queueing, batching, or the
+//! tail latency a mid-transition capacity dip causes. This module
+//! simulates every request:
+//!
+//! * **Arrivals** — open-loop Poisson thinning per service: candidate
+//!   instants at the service's closed-form peak rate, accepted with
+//!   probability `demand(t)/peak`. Each service owns a forked
+//!   [`Rng`] stream drawn in service-index order at construction, so
+//!   the arrival sequence is a pure function of `(trace, seed)` —
+//!   independent of event boundaries and optimizer parallelism.
+//! * **Queues** — one FIFO [`VecDeque`] per deployed instance, keyed
+//!   `(gpu, Placement)` in a [`BTreeMap`] for deterministic iteration.
+//! * **Batching** — dynamic batching at service-start, the same
+//!   contract as `serving/batcher.rs`: when the instance frees up it
+//!   drains whatever is queued up to the pod's profiled batch and
+//!   never waits to fill a batch; a batch of `k` requests occupies the
+//!   instance for `k / throughput` seconds (the profile-calibrated
+//!   service time `serving/service.rs` paces at).
+//! * **Routing** — each arrival goes to the live instance of its
+//!   service with the minimal *expected drain latency*
+//!   `max(busy_until − t, 0) + queue_len / throughput` (SNIPPETS
+//!   snippet 3), ties broken by instance key order.
+//! * **Transitions** — [`ReqSim::sync`] diffs the instance set against
+//!   the mutated [`ClusterState`]: a deleted/repartitioned instance
+//!   commits the batches it already started (graceful drain — a batch
+//!   started before the delete completes), then its *unstarted* queue
+//!   is re-routed to surviving instances of the service, or dropped
+//!   when none remain. Requests thus never vanish: at every replan
+//!   boundary `injected = completed + dropped + still-queued`.
+//!
+//! Batch simulation is *lazy*: an instance's timeline is only advanced
+//! when an arrival routes to its service, when the cluster mutates, or
+//! at the caller's event boundary — each batch is committed (latency
+//! recorded per request) at its start instant, so the result is
+//! independent of where event boundaries fall.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::cluster::ClusterState;
+use crate::mig::Placement;
+use crate::util::rng::Rng;
+use crate::util::stats::Histogram;
+
+use super::report::{RequestReport, RequestStats};
+use super::trace::{Trace, MIN_ACTIVE_RATE};
+
+/// A deployed instance's identity: (GPU index, placement on it).
+pub type InstanceKey = (usize, Placement);
+
+/// Latency histograms: 5 ms buckets up to 300 s; the overload tail
+/// past the ceiling is counted in `overflow` and reported via `max`.
+const LAT_BUCKET_MS: f64 = 5.0;
+const LAT_BUCKETS: usize = 60_000;
+
+fn latency_histogram() -> Histogram {
+    Histogram::new(LAT_BUCKET_MS, LAT_BUCKETS)
+}
+
+/// One queued (not yet batch-started) request.
+#[derive(Debug, Clone, Copy)]
+struct QueuedReq {
+    /// Global injection sequence number (FIFO witness for tests).
+    seq: u64,
+    /// Open-loop arrival instant — latency is measured from here even
+    /// after a re-route.
+    arrival_s: f64,
+    /// Batch-eligibility instant: the arrival for directly routed
+    /// requests, the re-route instant for requests displaced by a
+    /// transition. Nondecreasing along every queue, so draining the
+    /// contiguous ready prefix preserves FIFO order.
+    ready_s: f64,
+}
+
+/// One live instance: pod parameters + queue + busy horizon.
+#[derive(Debug)]
+struct InstanceSim {
+    service: usize,
+    /// Dynamic-batching cap (the pod's profiled batch size).
+    batch: usize,
+    /// Profiled throughput, req/s (per-request service time `1/thr`).
+    throughput: f64,
+    /// Finish instant of the last committed batch.
+    busy_until_s: f64,
+    queue: VecDeque<QueuedReq>,
+}
+
+/// Per-service arrival generator (Poisson thinning).
+#[derive(Debug)]
+struct ArrivalGen {
+    rng: Rng,
+    /// Thinning envelope: the shape's closed-form peak rate.
+    peak: f64,
+    /// Next candidate instant (infinity for never-active services).
+    next_s: f64,
+}
+
+impl ArrivalGen {
+    /// Exponential inter-candidate gap at the envelope rate.
+    fn draw_gap(&mut self) -> f64 {
+        -(1.0 - self.rng.f64()).ln() / self.peak
+    }
+}
+
+/// Lifetime counters + latency histogram for one service.
+#[derive(Debug)]
+struct ServiceCounters {
+    injected: u64,
+    completed: u64,
+    dropped: u64,
+    latency_ms: Histogram,
+}
+
+/// Per-replan-window stats (reset at every replan boundary; surfaced
+/// as `reqsim.window` obsv events, read-only for the simulation).
+#[derive(Debug)]
+struct WindowStats {
+    completed: u64,
+    dropped: u64,
+    latency_ms: Histogram,
+}
+
+impl WindowStats {
+    fn reset(&mut self) {
+        self.completed = 0;
+        self.dropped = 0;
+        self.latency_ms.reset();
+    }
+}
+
+/// The request-level simulator. Owned by [`super::sim::Simulation`]'s
+/// event loop; drive with [`advance`](ReqSim::advance) before every
+/// event's cluster mutation and [`sync`](ReqSim::sync) after it.
+pub struct ReqSim<'t> {
+    trace: &'t Trace,
+    arrivals: Vec<ArrivalGen>,
+    instances: BTreeMap<InstanceKey, InstanceSim>,
+    /// Sorted instance keys per service (the routing scan order).
+    by_service: Vec<Vec<InstanceKey>>,
+    per_service: Vec<ServiceCounters>,
+    window: Vec<WindowStats>,
+    seq: u64,
+    /// When set, every enqueue/commit is logged for FIFO assertions.
+    recording: bool,
+    insertions: Vec<(InstanceKey, u64)>,
+    completions: Vec<(InstanceKey, u64)>,
+}
+
+impl<'t> ReqSim<'t> {
+    /// Build the simulator: one forked arrival stream per service, in
+    /// service-index order, so streams are independent of everything
+    /// but `(trace, seed)`.
+    pub fn new(trace: &'t Trace, seed: u64) -> ReqSim<'t> {
+        let mut master = Rng::new(seed);
+        let n = trace.n_services();
+        let arrivals = trace
+            .services
+            .iter()
+            .map(|s| {
+                let rng = master.fork();
+                let peak = s.peak_demand(trace.horizon_s);
+                let mut g = ArrivalGen { rng, peak, next_s: f64::INFINITY };
+                if peak > MIN_ACTIVE_RATE {
+                    g.next_s = g.draw_gap();
+                }
+                g
+            })
+            .collect();
+        ReqSim {
+            trace,
+            arrivals,
+            instances: BTreeMap::new(),
+            by_service: vec![Vec::new(); n],
+            per_service: (0..n)
+                .map(|_| ServiceCounters {
+                    injected: 0,
+                    completed: 0,
+                    dropped: 0,
+                    latency_ms: latency_histogram(),
+                })
+                .collect(),
+            window: (0..n)
+                .map(|_| WindowStats {
+                    completed: 0,
+                    dropped: 0,
+                    latency_ms: latency_histogram(),
+                })
+                .collect(),
+            seq: 0,
+            recording: false,
+            insertions: Vec::new(),
+            completions: Vec::new(),
+        }
+    }
+
+    /// Log every enqueue and batch commit (tests only — the logs grow
+    /// with the request count).
+    pub fn set_recording(&mut self, on: bool) {
+        self.recording = on;
+    }
+
+    /// `(insertions, completions)` as `(instance, seq)` in event order.
+    pub fn logs(&self) -> (&[(InstanceKey, u64)], &[(InstanceKey, u64)]) {
+        (&self.insertions, &self.completions)
+    }
+
+    /// Process all arrivals strictly before `to_s` and commit every
+    /// batch starting strictly before `to_s`. Idempotent at a fixed
+    /// `to_s`; call before a cluster mutation at `to_s` so displaced
+    /// work reflects the pre-mutation state. Arrivals at exactly a
+    /// mutation instant route against the post-mutation cluster.
+    pub fn advance(&mut self, to_s: f64) {
+        for svc in 0..self.arrivals.len() {
+            loop {
+                let (tc, accepted) = {
+                    let gen = &mut self.arrivals[svc];
+                    if gen.next_s >= to_s {
+                        break;
+                    }
+                    let tc = gen.next_s;
+                    let d = self.trace.services[svc].demand_at(tc);
+                    let accepted = gen.rng.f64() * gen.peak < d;
+                    gen.next_s = tc + gen.draw_gap();
+                    (tc, accepted)
+                };
+                if !accepted {
+                    continue;
+                }
+                self.advance_instances_of(svc, tc);
+                self.seq += 1;
+                let q = QueuedReq { seq: self.seq, arrival_s: tc, ready_s: tc };
+                self.per_service[svc].injected += 1;
+                if !self.route(svc, q, tc) {
+                    self.per_service[svc].dropped += 1;
+                    self.window[svc].dropped += 1;
+                }
+            }
+            self.advance_instances_of(svc, to_s);
+        }
+    }
+
+    /// Reconcile the instance set with the (just mutated) cluster at
+    /// `t_s`. Call only after `advance(t_s)`. Removed or repartitioned
+    /// instances keep every batch already started (graceful drain);
+    /// their unstarted queues are re-routed to surviving instances of
+    /// the service (`ready_s = t_s`, original arrival preserved) or
+    /// counted as dropped when none remain. New pods start idle.
+    pub fn sync(&mut self, cluster: &ClusterState, t_s: f64) {
+        let mut desired: BTreeMap<InstanceKey, crate::cluster::Pod> = BTreeMap::new();
+        for gi in 0..cluster.num_gpus() {
+            for (&pl, &pod) in cluster.gpu(gi).pods() {
+                desired.insert((gi, pl), pod);
+            }
+        }
+        let stale: Vec<InstanceKey> = self
+            .instances
+            .iter()
+            .filter(|(k, inst)| {
+                desired.get(*k).map_or(true, |p| {
+                    p.service != inst.service
+                        || p.batch != inst.batch
+                        || p.throughput != inst.throughput
+                })
+            })
+            .map(|(&k, _)| k)
+            .collect();
+        let mut displaced: Vec<(usize, QueuedReq)> = Vec::new();
+        for key in stale {
+            // Commit the batches this instance started before the
+            // mutation — a started batch finishes even if the instance
+            // is torn down underneath it.
+            self.advance_instances_of_key(key, t_s);
+            let inst = self.instances.remove(&key).expect("stale key listed");
+            self.by_service[inst.service].retain(|k| *k != key);
+            for q in inst.queue {
+                displaced.push((inst.service, q));
+            }
+        }
+        for (&key, pod) in &desired {
+            if self.instances.contains_key(&key) {
+                continue;
+            }
+            debug_assert!(pod.service < self.by_service.len());
+            debug_assert!(pod.throughput > 0.0);
+            self.instances.insert(key, InstanceSim {
+                service: pod.service,
+                batch: pod.batch.max(1),
+                throughput: pod.throughput,
+                busy_until_s: t_s,
+                queue: VecDeque::new(),
+            });
+            let v = &mut self.by_service[pod.service];
+            v.push(key);
+            v.sort_unstable();
+        }
+        for (svc, q) in displaced {
+            let rerouted = QueuedReq { ready_s: t_s, ..q };
+            if !self.route(svc, rerouted, t_s) {
+                self.per_service[svc].dropped += 1;
+                self.window[svc].dropped += 1;
+            }
+        }
+    }
+
+    /// A replan boundary at `t_s`: verify request conservation, emit
+    /// the per-service window latency summary as `reqsim.window` obsv
+    /// events (when a recorder is installed — read-only either way),
+    /// and reset the window.
+    pub fn replan_boundary(&mut self, t_s: f64) {
+        debug_assert!(
+            self.check_conservation().is_ok(),
+            "request conservation violated at t={t_s}: {:?}",
+            self.check_conservation()
+        );
+        if crate::obsv::active() {
+            for (i, w) in self.window.iter().enumerate() {
+                if w.completed == 0 && w.dropped == 0 {
+                    continue;
+                }
+                crate::obsv::event("reqsim.window", &[
+                    ("t_s", t_s.into()),
+                    ("service", i.into()),
+                    ("completed", (w.completed as usize).into()),
+                    ("dropped", (w.dropped as usize).into()),
+                    ("p50_ms", w.latency_ms.percentile(50.0).into()),
+                    ("p99_ms", w.latency_ms.percentile(99.0).into()),
+                ]);
+            }
+        }
+        for w in &mut self.window {
+            w.reset();
+        }
+    }
+
+    /// `injected == completed + dropped + still-queued`, per service.
+    pub fn check_conservation(&self) -> Result<(), String> {
+        let queued = self.queued_per_service();
+        for (i, c) in self.per_service.iter().enumerate() {
+            let rhs = c.completed + c.dropped + queued[i];
+            if c.injected != rhs {
+                return Err(format!(
+                    "service {i}: injected {} != completed {} + dropped {} + queued {}",
+                    c.injected, c.completed, c.dropped, queued[i]
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Unstarted requests currently queued, per service.
+    pub fn queued_per_service(&self) -> Vec<u64> {
+        let mut queued = vec![0u64; self.per_service.len()];
+        for inst in self.instances.values() {
+            queued[inst.service] += inst.queue.len() as u64;
+        }
+        queued
+    }
+
+    /// `(injected, completed, dropped)` totals across services.
+    pub fn totals(&self) -> (u64, u64, u64) {
+        self.per_service.iter().fold((0, 0, 0), |(i, c, d), s| {
+            (i + s.injected, c + s.completed, d + s.dropped)
+        })
+    }
+
+    /// Final per-service + aggregate request statistics.
+    pub fn report(&self, requests_per_day: f64) -> RequestReport {
+        let queued = self.queued_per_service();
+        let per_service: Vec<RequestStats> = self
+            .per_service
+            .iter()
+            .zip(&queued)
+            .map(|(c, &q)| stats_of(c, q))
+            .collect();
+        let mut total_hist = latency_histogram();
+        let mut total = ServiceCounters {
+            injected: 0,
+            completed: 0,
+            dropped: 0,
+            latency_ms: latency_histogram(),
+        };
+        for c in &self.per_service {
+            total.injected += c.injected;
+            total.completed += c.completed;
+            total.dropped += c.dropped;
+            total_hist.merge(&c.latency_ms);
+        }
+        total.latency_ms = total_hist;
+        let total = stats_of(&total, queued.iter().sum());
+        RequestReport { requests_per_day, total, per_service }
+    }
+
+    /// Commit every batch of `svc`'s instances starting before `to_s`.
+    fn advance_instances_of(&mut self, svc: usize, to_s: f64) {
+        let ReqSim {
+            instances,
+            by_service,
+            per_service,
+            window,
+            recording,
+            completions,
+            ..
+        } = self;
+        for &key in &by_service[svc] {
+            let inst = instances.get_mut(&key).expect("indexed key");
+            drain_started_batches(
+                key,
+                inst,
+                to_s,
+                &mut per_service[svc],
+                &mut window[svc],
+                *recording,
+                completions,
+            );
+        }
+    }
+
+    /// [`Self::advance_instances_of`] for a single instance.
+    fn advance_instances_of_key(&mut self, key: InstanceKey, to_s: f64) {
+        let ReqSim { instances, per_service, window, recording, completions, .. } =
+            self;
+        let Some(inst) = instances.get_mut(&key) else { return };
+        let svc = inst.service;
+        drain_started_batches(
+            key,
+            inst,
+            to_s,
+            &mut per_service[svc],
+            &mut window[svc],
+            *recording,
+            completions,
+        );
+    }
+
+    /// Route one request to the minimal-drain-latency instance of its
+    /// service (instances must already be advanced to `now_s`). Returns
+    /// false when the service has no live instance (caller drops).
+    fn route(&mut self, svc: usize, q: QueuedReq, now_s: f64) -> bool {
+        let mut best: Option<(f64, InstanceKey)> = None;
+        for &key in &self.by_service[svc] {
+            let inst = &self.instances[&key];
+            let drain = (inst.busy_until_s - now_s).max(0.0)
+                + inst.queue.len() as f64 / inst.throughput;
+            if best.map_or(true, |(b, _)| drain < b) {
+                best = Some((drain, key));
+            }
+        }
+        let Some((_, key)) = best else { return false };
+        if self.recording {
+            self.insertions.push((key, q.seq));
+        }
+        self.instances.get_mut(&key).expect("chosen key").queue.push_back(q);
+        true
+    }
+}
+
+/// Commit `inst`'s batches with start instants strictly before `to_s`:
+/// start = max(busy horizon, head's ready instant); the batch is the
+/// contiguous ready-by-start prefix capped at the profiled batch (ready
+/// is nondecreasing along the queue, so this is exactly "everything
+/// queued when the instance freed up" — drain, never wait); a batch of
+/// `k` holds the instance `k / throughput` seconds. Latency is recorded
+/// at commit: finish − open-loop arrival.
+fn drain_started_batches(
+    key: InstanceKey,
+    inst: &mut InstanceSim,
+    to_s: f64,
+    counters: &mut ServiceCounters,
+    window: &mut WindowStats,
+    recording: bool,
+    completions: &mut Vec<(InstanceKey, u64)>,
+) {
+    while let Some(front) = inst.queue.front() {
+        let start = inst.busy_until_s.max(front.ready_s);
+        if start >= to_s {
+            break;
+        }
+        let mut k = 1;
+        while k < inst.batch {
+            match inst.queue.get(k) {
+                Some(q) if q.ready_s <= start => k += 1,
+                _ => break,
+            }
+        }
+        let finish = start + k as f64 / inst.throughput;
+        for _ in 0..k {
+            let q = inst.queue.pop_front().expect("k <= queue len");
+            let lat_ms = (finish - q.arrival_s) * 1000.0;
+            counters.completed += 1;
+            counters.latency_ms.record(lat_ms);
+            window.completed += 1;
+            window.latency_ms.record(lat_ms);
+            if recording {
+                completions.push((key, q.seq));
+            }
+        }
+        inst.busy_until_s = finish;
+    }
+}
+
+fn stats_of(c: &ServiceCounters, still_queued: u64) -> RequestStats {
+    let h = &c.latency_ms;
+    let (mean_ms, max_ms) = if c.completed == 0 {
+        (0.0, 0.0)
+    } else {
+        (h.mean(), h.max())
+    };
+    RequestStats {
+        injected: c.injected,
+        completed: c.completed,
+        dropped: c.dropped,
+        still_queued,
+        mean_ms,
+        p50_ms: h.percentile(50.0),
+        p90_ms: h.percentile(90.0),
+        p99_ms: h.percentile(99.0),
+        max_ms,
+        overflow: h.overflow(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Pod;
+    use crate::mig::InstanceSize;
+    use crate::simkit::trace::{DemandShape, ServiceTrace};
+
+    fn one_service_trace(rate: f64, horizon_s: f64) -> Trace {
+        Trace {
+            name: "req-test".to_string(),
+            horizon_s,
+            services: vec![ServiceTrace::always(
+                "resnet50",
+                300.0,
+                DemandShape::Constant { rate },
+            )],
+            gpu_events: vec![],
+        }
+    }
+
+    /// Two GPUs, each one full-GPU instance serving service 0.
+    fn two_instance_cluster(thr_a: f64, thr_b: f64, batch: usize) -> ClusterState {
+        let mut c = ClusterState::new(1, 2);
+        for (gpu, thr) in [(0, thr_a), (1, thr_b)] {
+            let pl = Placement::new(InstanceSize::Seven, 0);
+            c.repartition(gpu, &[], &[pl]).unwrap();
+            c.create_pod(gpu, pl, Pod { service: 0, batch, throughput: thr })
+                .unwrap();
+        }
+        c
+    }
+
+    #[test]
+    fn arrivals_match_demand_rate() {
+        let trace = one_service_trace(50.0, 2000.0);
+        let mut rs = ReqSim::new(&trace, 7);
+        let cluster = two_instance_cluster(100.0, 100.0, 8);
+        rs.sync(&cluster, 0.0);
+        rs.advance(2000.0);
+        let (injected, completed, dropped) = rs.totals();
+        let expect = 50.0 * 2000.0;
+        assert!(
+            (injected as f64 - expect).abs() < 5.0 * expect.sqrt(),
+            "injected {injected} vs expected {expect}"
+        );
+        assert_eq!(dropped, 0);
+        assert!(completed > 0);
+        rs.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn no_instances_means_drops_not_latency() {
+        let trace = one_service_trace(20.0, 500.0);
+        let mut rs = ReqSim::new(&trace, 3);
+        rs.advance(500.0);
+        let (injected, completed, dropped) = rs.totals();
+        assert!(injected > 0);
+        assert_eq!(completed, 0);
+        assert_eq!(dropped, injected);
+        let rep = rs.report(1.0);
+        assert_eq!(rep.total.p99_ms, 0.0);
+        assert_eq!(rep.total.max_ms, 0.0);
+    }
+
+    #[test]
+    fn advance_is_boundary_invariant() {
+        let trace = one_service_trace(40.0, 1000.0);
+        let cluster = two_instance_cluster(30.0, 25.0, 4);
+        let run = |cuts: &[f64]| {
+            let mut rs = ReqSim::new(&trace, 11);
+            rs.sync(&cluster, 0.0);
+            for &c in cuts {
+                rs.advance(c);
+            }
+            rs.advance(1000.0);
+            let rep = rs.report(1.0);
+            (rs.totals(), rep.total.p50_ms, rep.total.p99_ms)
+        };
+        let a = run(&[]);
+        let b = run(&[1.0, 3.0, 250.0, 250.0, 999.0]);
+        assert_eq!(a, b, "request path must not depend on event boundaries");
+    }
+
+    #[test]
+    fn latency_reflects_service_time_when_underloaded() {
+        // 10 req/s offered into thr 100 req/s: batches are mostly
+        // single requests, latency ≈ 1/thr = 10 ms (5 ms buckets →
+        // upper edge 10 ms).
+        let trace = one_service_trace(10.0, 2000.0);
+        let cluster = two_instance_cluster(100.0, 100.0, 8);
+        let mut rs = ReqSim::new(&trace, 5);
+        rs.sync(&cluster, 0.0);
+        rs.advance(2000.0);
+        let rep = rs.report(1.0);
+        assert!(rep.total.completed > 10_000);
+        assert!(
+            rep.total.p50_ms <= 15.0,
+            "underloaded p50 {} should sit at the service time",
+            rep.total.p50_ms
+        );
+        assert!(rep.total.p50_ms <= rep.total.p90_ms);
+        assert!(rep.total.p90_ms <= rep.total.p99_ms);
+    }
+
+    #[test]
+    fn overload_queues_grow_and_tail_explodes() {
+        // 50 req/s into a single 20 req/s instance: the queue grows
+        // without bound and the tail latency is seconds, not ms.
+        let trace = one_service_trace(50.0, 300.0);
+        let mut c = ClusterState::new(1, 1);
+        let pl = Placement::new(InstanceSize::Seven, 0);
+        c.repartition(0, &[], &[pl]).unwrap();
+        c.create_pod(0, pl, Pod { service: 0, batch: 4, throughput: 20.0 })
+            .unwrap();
+        let mut rs = ReqSim::new(&trace, 9);
+        rs.sync(&c, 0.0);
+        rs.advance(300.0);
+        rs.check_conservation().unwrap();
+        let rep = rs.report(1.0);
+        assert!(rep.total.still_queued > 1000, "queue {}", rep.total.still_queued);
+        assert!(rep.total.p99_ms > 1000.0, "p99 {}", rep.total.p99_ms);
+    }
+
+    #[test]
+    fn batching_drains_up_to_cap() {
+        // Burst far above one instance's rate with a large batch cap:
+        // committed batches should reach the cap (visible through the
+        // completion log's per-commit grouping being FIFO and the
+        // instance finishing all requests eventually).
+        let trace = one_service_trace(200.0, 100.0);
+        let mut c = ClusterState::new(1, 1);
+        let pl = Placement::new(InstanceSize::Seven, 0);
+        c.repartition(0, &[], &[pl]).unwrap();
+        c.create_pod(0, pl, Pod { service: 0, batch: 8, throughput: 400.0 })
+            .unwrap();
+        let mut rs = ReqSim::new(&trace, 13);
+        rs.set_recording(true);
+        rs.sync(&c, 0.0);
+        rs.advance(100.0);
+        rs.check_conservation().unwrap();
+        let (ins, outs) = rs.logs();
+        // FIFO: completion order == insertion order on the single queue.
+        let in_seqs: Vec<u64> = ins.iter().map(|&(_, s)| s).collect();
+        let out_seqs: Vec<u64> = outs.iter().map(|&(_, s)| s).collect();
+        assert_eq!(&in_seqs[..out_seqs.len()], &out_seqs[..]);
+        let (injected, completed, _) = rs.totals();
+        assert!(completed > injected / 2, "{completed}/{injected}");
+    }
+
+    #[test]
+    fn removed_instance_reroutes_unstarted_queue() {
+        let trace = one_service_trace(60.0, 600.0);
+        let mut cluster = two_instance_cluster(20.0, 20.0, 4);
+        let mut rs = ReqSim::new(&trace, 17);
+        rs.set_recording(true);
+        rs.sync(&cluster, 0.0);
+        rs.advance(300.0);
+        let queued_before: u64 = rs.queued_per_service().iter().sum();
+        assert!(queued_before > 100, "need backlog: {queued_before}");
+        // Tear down GPU 1's instance mid-run.
+        cluster.delete_pod(1, Placement::new(InstanceSize::Seven, 0)).unwrap();
+        rs.sync(&cluster, 300.0);
+        rs.check_conservation().unwrap();
+        rs.advance(600.0);
+        rs.check_conservation().unwrap();
+        let (_, _, dropped) = rs.totals();
+        assert_eq!(dropped, 0, "survivor exists: re-route, don't drop");
+        // Every completion on the dead instance happened for a request
+        // inserted there, in insertion order (graceful drain is FIFO).
+        let (ins, outs) = rs.logs();
+        let dead = (1usize, Placement::new(InstanceSize::Seven, 0));
+        let dead_in: Vec<u64> =
+            ins.iter().filter(|&&(k, _)| k == dead).map(|&(_, s)| s).collect();
+        let dead_out: Vec<u64> =
+            outs.iter().filter(|&&(k, _)| k == dead).map(|&(_, s)| s).collect();
+        assert_eq!(&dead_in[..dead_out.len()], &dead_out[..]);
+        assert!(dead_out.len() < dead_in.len(), "unstarted work was re-routed");
+    }
+
+    #[test]
+    fn all_instances_removed_drops_queue() {
+        let trace = one_service_trace(30.0, 400.0);
+        let mut cluster = two_instance_cluster(10.0, 10.0, 2);
+        let mut rs = ReqSim::new(&trace, 19);
+        rs.sync(&cluster, 0.0);
+        rs.advance(200.0);
+        let queued: u64 = rs.queued_per_service().iter().sum();
+        assert!(queued > 0);
+        for gpu in 0..2 {
+            cluster.delete_pod(gpu, Placement::new(InstanceSize::Seven, 0)).unwrap();
+        }
+        rs.sync(&cluster, 200.0);
+        rs.check_conservation().unwrap();
+        let (_, _, dropped) = rs.totals();
+        assert!(dropped >= queued - 2, "queued work must be dropped");
+        assert_eq!(rs.queued_per_service()[0], 0);
+    }
+
+    #[test]
+    fn routing_prefers_lower_drain_latency() {
+        // A fast empty instance vs a slow one: everything should land
+        // on the fast one until its queue builds up.
+        let trace = one_service_trace(30.0, 10.0);
+        let cluster = two_instance_cluster(100.0, 5.0, 1);
+        let mut rs = ReqSim::new(&trace, 23);
+        rs.set_recording(true);
+        rs.sync(&cluster, 0.0);
+        rs.advance(10.0);
+        let (ins, _) = rs.logs();
+        let fast = ins.iter().filter(|&&((g, _), _)| g == 0).count();
+        assert!(
+            fast * 2 > ins.len(),
+            "fast instance got {fast}/{} routes",
+            ins.len()
+        );
+    }
+
+    #[test]
+    fn same_seed_same_stream() {
+        let trace = one_service_trace(25.0, 800.0);
+        let cluster = two_instance_cluster(40.0, 30.0, 4);
+        let run = || {
+            let mut rs = ReqSim::new(&trace, 42);
+            rs.sync(&cluster, 0.0);
+            rs.advance(800.0);
+            let rep = rs.report(1.0);
+            (rs.totals(), rep.total.p50_ms, rep.total.p99_ms, rep.total.mean_ms)
+        };
+        assert_eq!(run(), run());
+    }
+}

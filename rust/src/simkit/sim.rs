@@ -30,7 +30,12 @@ use crate::spec::ServiceId;
 use super::control::{ControlLoop, ReplanPolicy};
 use super::event::{Event, EventQueue};
 use super::report::{ServiceTimeline, SimComparison, SimReport, TransitionRecord};
+use super::reqsim::ReqSim;
 use super::trace::{GpuEventKind, Trace, MIN_ACTIVE_RATE};
+
+/// Decorrelates the request-arrival RNG from the executor's
+/// action-latency stream (both derive from [`SimConfig::seed`]).
+const REQSIM_SEED_SALT: u64 = 0x7E40_5EED_C0DE_0009;
 
 /// Simulation knobs.
 #[derive(Debug, Clone)]
@@ -58,6 +63,12 @@ pub struct SimConfig {
     /// `Some` overrides the GPU layout and exposes every fleet kind to
     /// the optimizer's replans.
     pub fleet: Option<FleetSpec>,
+    /// Run the request-level simulator ([`super::reqsim::ReqSim`]) on
+    /// the trace rescaled to this many requests/day: measured
+    /// p50/p90/p99 latency and drop counts land in
+    /// [`SimReport::requests`]. `None` keeps the fluid-only seed
+    /// behavior (and the report JSON byte-stable).
+    pub requests_per_day: Option<f64>,
 }
 
 impl Default for SimConfig {
@@ -73,6 +84,7 @@ impl Default for SimConfig {
             gpus_per_machine: 8,
             peak_provision: false,
             fleet: None,
+            requests_per_day: None,
         }
     }
 }
@@ -135,9 +147,24 @@ impl<'a> Simulation<'a> {
             self.cfg.budget.time_budget.is_none(),
             "simkit needs a deterministic optimizer budget: set rounds, not time_budget"
         );
-        let n = self.trace.n_services();
+        // `--requests-per-day` rescales the whole trace — the optimizer
+        // provisions for the same curves the request simulator samples,
+        // so utilization (and therefore queueing) is scale-consistent.
+        let scaled_trace;
+        let trace: &Trace = match self.cfg.requests_per_day {
+            Some(r) => {
+                scaled_trace = self.trace.scaled_to_requests_per_day(r)?;
+                &scaled_trace
+            }
+            None => self.trace,
+        };
+        let n = trace.n_services();
         anyhow::ensure!(n > 0, "trace has no services");
         anyhow::ensure!(self.cfg.tick_s > 0.0, "tick must be positive");
+        let mut reqsim: Option<ReqSim<'_>> = self
+            .cfg
+            .requests_per_day
+            .map(|_| ReqSim::new(trace, self.cfg.seed ^ REQSIM_SEED_SALT));
 
         let mut cluster = match &self.cfg.fleet {
             Some(fleet) => ClusterState::from_fleet(fleet, self.cfg.gpus_per_machine),
@@ -146,12 +173,12 @@ impl<'a> Simulation<'a> {
         // Fail fast when the trace's failure/repair events target GPUs
         // the (possibly overridden) fleet does not have, instead of
         // aborting mid-run at the event's virtual instant.
-        for e in &self.trace.gpu_events {
+        for e in &trace.gpu_events {
             anyhow::ensure!(
                 e.gpu < cluster.num_gpus(),
                 "trace {:?} schedules a GPU event on gpu {} but the fleet has only {} GPUs \
                  (pass a --fleet at least as large as the scenario expects)",
-                self.trace.name,
+                trace.name,
                 e.gpu,
                 cluster.num_gpus()
             );
@@ -178,15 +205,14 @@ impl<'a> Simulation<'a> {
         };
         let mut queue = EventQueue::new();
         queue.push(0.0, Event::ControlTick);
-        for (i, e) in self.trace.gpu_events.iter().enumerate() {
-            if e.at_s <= self.trace.horizon_s {
+        for (i, e) in trace.gpu_events.iter().enumerate() {
+            if e.at_s <= trace.horizon_s {
                 queue.push(e.at_s, Event::Gpu { idx: i });
             }
         }
-        queue.push(self.trace.horizon_s, Event::Horizon);
+        queue.push(trace.horizon_s, Event::Horizon);
 
-        let mut timelines: Vec<ServiceTimeline> = self
-            .trace
+        let mut timelines: Vec<ServiceTimeline> = trace
             .services
             .iter()
             .enumerate()
@@ -228,7 +254,7 @@ impl<'a> Simulation<'a> {
             // and the tick branch share the same vector.
             let capacity = cluster.service_throughputs(n);
             if dt > 0.0 {
-                let demand = self.trace.demand_at(prev_t);
+                let demand = trace.demand_at(prev_t);
                 for i in 0..n {
                     total[i] += demand[i] * dt;
                     unmet[i] += (demand[i] - capacity[i]).max(0.0) * dt;
@@ -236,14 +262,29 @@ impl<'a> Simulation<'a> {
                 gpu_seconds += cluster.used_gpu_count() as f64 * dt;
             }
             prev_t = t;
+            // Request-level path: arrivals and batch commits strictly
+            // before `t` see the pre-mutation cluster; [`ReqSim::sync`]
+            // below re-reconciles after any mutation at `t`.
+            if let Some(rs) = reqsim.as_mut() {
+                rs.advance(t);
+            }
 
             match ev.event {
                 Event::Horizon => {
                     event_log.push(format!("t={t:.1} horizon reached"));
+                    if let Some(rs) = reqsim.as_mut() {
+                        rs.replan_boundary(t);
+                        let (inj, comp, drop) = rs.totals();
+                        let queued: u64 = rs.queued_per_service().iter().sum();
+                        event_log.push(format!(
+                            "t={t:.1} requests: {inj} injected, {comp} completed, \
+                             {drop} dropped, {queued} queued"
+                        ));
+                    }
                     break;
                 }
                 Event::ControlTick => {
-                    let demand = self.trace.demand_at(t);
+                    let demand = trace.demand_at(t);
                     for i in 0..n {
                         timelines[i].samples.push((t, demand[i], capacity[i]));
                         if demand[i] > MIN_ACTIVE_RATE {
@@ -253,7 +294,7 @@ impl<'a> Simulation<'a> {
                             }
                         }
                     }
-                    if t + self.cfg.tick_s < self.trace.horizon_s - 1e-9 {
+                    if t + self.cfg.tick_s < trace.horizon_s - 1e-9 {
                         queue.push(t + self.cfg.tick_s, Event::ControlTick);
                     }
                     if inflight.is_some() {
@@ -265,8 +306,7 @@ impl<'a> Simulation<'a> {
                     // O(touched GPUs) — no fleet clone); only an
                     // escalation runs the full pipeline.
                     if let Some(sched) = online_sched.as_mut() {
-                        let views: Vec<ServiceView<'_>> = self
-                            .trace
+                        let views: Vec<ServiceView<'_>> = trace
                             .services
                             .iter()
                             .enumerate()
@@ -314,11 +354,14 @@ impl<'a> Simulation<'a> {
                                 "sim.escalation",
                                 &[("reason", why.label().into())],
                             );
-                            match self
-                                .plan_transition(&mut cluster, &controller, &demand, t)
-                            {
+                            match self.plan_transition(
+                                trace, &mut cluster, &controller, &demand, t,
+                            ) {
                                 Ok(actions) => {
                                     replans += 1;
+                                    if let Some(rs) = reqsim.as_mut() {
+                                        rs.replan_boundary(t);
+                                    }
                                     sched.sync(&views, self.cfg.margin);
                                     if actions.is_empty() {
                                         event_log.push(format!(
@@ -384,13 +427,13 @@ impl<'a> Simulation<'a> {
                         continue;
                     };
                     let provision_demand: Vec<f64> = if self.cfg.peak_provision {
-                        self.trace.peak_demand()
+                        trace.peak_demand()
                     } else {
                         demand.clone()
                     };
-                    match self
-                        .plan_transition(&mut cluster, &controller, &provision_demand, t)
-                    {
+                    match self.plan_transition(
+                        trace, &mut cluster, &controller, &provision_demand, t,
+                    ) {
                         Ok(actions) => {
                             let provisioned: Vec<f64> = provision_demand
                                 .iter()
@@ -404,6 +447,9 @@ impl<'a> Simulation<'a> {
                                 .collect();
                             control.note_replanned(t, provisioned);
                             replans += 1;
+                            if let Some(rs) = reqsim.as_mut() {
+                                rs.replan_boundary(t);
+                            }
                             if actions.is_empty() {
                                 event_log.push(format!(
                                     "t={t:.1} replan #{replans} ({reason}): target already realized"
@@ -472,7 +518,14 @@ impl<'a> Simulation<'a> {
                                         );
                                     }
                                 }
-                                inflight.as_mut().unwrap().note_capacity(&cluster, n)
+                                inflight.as_mut().unwrap().note_capacity(&cluster, n);
+                                // The applied action may have created,
+                                // deleted, or repartitioned instances:
+                                // reconcile queues (started batches
+                                // drain; unstarted work re-routes).
+                                if let Some(rs) = reqsim.as_mut() {
+                                    rs.sync(&cluster, t);
+                                }
                             }
                             Err(e) => {
                                 event_log.push(format!(
@@ -492,7 +545,7 @@ impl<'a> Simulation<'a> {
                     }
                 }
                 Event::Gpu { idx } => {
-                    let e = &self.trace.gpu_events[idx];
+                    let e = &trace.gpu_events[idx];
                     match e.kind {
                         GpuEventKind::Fail => {
                             let killed = cluster.set_offline(e.gpu)?;
@@ -522,9 +575,19 @@ impl<'a> Simulation<'a> {
                                     ],
                                 );
                             }
+                            // A failure kills pods instantly: their
+                            // queued requests re-route or drop — no
+                            // graceful drain of in-flight batches is
+                            // assumed beyond what already committed.
+                            if let Some(rs) = reqsim.as_mut() {
+                                rs.sync(&cluster, t);
+                            }
                         }
                         GpuEventKind::Repair => {
                             cluster.set_online(e.gpu)?;
+                            if let Some(rs) = reqsim.as_mut() {
+                                rs.sync(&cluster, t);
+                            }
                             event_log.push(format!("t={t:.1} gpu {} repaired", e.gpu));
                             if crate::obsv::active() {
                                 crate::obsv::event(
@@ -552,13 +615,13 @@ impl<'a> Simulation<'a> {
             })
             .collect();
         Ok(SimReport {
-            scenario: self.trace.name.clone(),
+            scenario: trace.name.clone(),
             policy: format!(
                 "{}{}",
                 self.cfg.policy.label(),
                 if self.cfg.peak_provision { " (static-peak)" } else { "" }
             ),
-            horizon_s: self.trace.horizon_s,
+            horizon_s: trace.horizon_s,
             seed: self.cfg.seed,
             fleet: fleet_counts,
             used_gpus_by_kind: cluster
@@ -583,6 +646,9 @@ impl<'a> Simulation<'a> {
             action_counts,
             events_processed,
             event_log,
+            requests: reqsim
+                .as_ref()
+                .map(|rs| rs.report(self.cfg.requests_per_day.unwrap_or(0.0))),
             // Snapshot of the installed recorder (if any) at report
             // time; `None` keeps the recorder-off JSON byte-stable.
             obsv: crate::obsv::current().map(|r| r.summary_json()),
@@ -595,13 +661,14 @@ impl<'a> Simulation<'a> {
     /// ids, then the §6 exchange-and-compact plan from the live state.
     fn plan_transition(
         &self,
+        trace: &Trace,
         cluster: &mut ClusterState,
         controller: &Controller,
         demand: &[f64],
         t_s: f64,
     ) -> anyhow::Result<Vec<Action>> {
-        let label = format!("{}@{t_s:.0}s", self.trace.name);
-        let (w, ids) = self.trace.snapshot_workload(&label, demand, self.cfg.margin);
+        let label = format!("{}@{t_s:.0}s", trace.name);
+        let (w, ids) = trace.snapshot_workload(&label, demand, self.cfg.margin);
         if w.is_empty() {
             // Every service offboarded: transition to the empty
             // deployment (tear everything down).

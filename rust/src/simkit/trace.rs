@@ -50,6 +50,35 @@ impl DemandShape {
         }
     }
 
+    /// The same shape with every rate multiplied by `factor` — used to
+    /// rescale a scenario to a target requests/day without changing
+    /// its temporal structure.
+    pub fn scaled(&self, factor: f64) -> DemandShape {
+        match self {
+            DemandShape::Constant { rate } => {
+                DemandShape::Constant { rate: rate * factor }
+            }
+            DemandShape::Diurnal(curve) => DemandShape::Diurnal(DiurnalCurve {
+                peak: curve.peak * factor,
+                trough: curve.trough * factor,
+                peak_hour: curve.peak_hour,
+            }),
+            DemandShape::Spike { base, spike, start_s, end_s } => {
+                DemandShape::Spike {
+                    base: base * factor,
+                    spike: spike * factor,
+                    start_s: *start_s,
+                    end_s: *end_s,
+                }
+            }
+            DemandShape::Step { before, after, at_s } => DemandShape::Step {
+                before: before * factor,
+                after: after * factor,
+                at_s: *at_s,
+            },
+        }
+    }
+
     /// The shape's maximum demand, closed-form — no sampling grid to
     /// miss a short spike between samples.
     pub fn peak(&self) -> f64 {
@@ -158,6 +187,58 @@ impl Trace {
         self.services.iter().map(|s| s.peak_demand(self.horizon_s)).collect()
     }
 
+    /// Total offered requests over the horizon: ∫ Σᵢ demandᵢ(t) dt by
+    /// a deterministic 60 s left-endpoint Riemann sum (demand is
+    /// piecewise-smooth; steps/spikes land within one grid cell of
+    /// exact, which is all the requests/day rescale needs).
+    pub fn total_requests(&self) -> f64 {
+        if self.horizon_s <= 0.0 {
+            return 0.0;
+        }
+        let step = 60.0f64.min(self.horizon_s);
+        let mut total = 0.0;
+        let mut t = 0.0;
+        while t < self.horizon_s {
+            let dt = step.min(self.horizon_s - t);
+            total += self.demand_at(t).iter().sum::<f64>() * dt;
+            t += dt;
+        }
+        total
+    }
+
+    /// The same trace with every demand curve rescaled so the horizon
+    /// offers `requests_per_day × horizon / 86400` total requests —
+    /// the `--requests-per-day` knob. Scaling the *demand* (not the
+    /// profiled service times) keeps arrivals and provisioning
+    /// consistent: the optimizer sees the same curves the request
+    /// simulator samples, and absolute latencies stay physical.
+    pub fn scaled_to_requests_per_day(
+        &self,
+        requests_per_day: f64,
+    ) -> anyhow::Result<Trace> {
+        anyhow::ensure!(
+            requests_per_day > 0.0,
+            "requests-per-day must be positive (got {requests_per_day})"
+        );
+        let base = self.total_requests();
+        anyhow::ensure!(
+            base > 0.0,
+            "trace {:?} offers no demand to rescale",
+            self.name
+        );
+        let factor = requests_per_day * self.horizon_s / 86_400.0 / base;
+        Ok(Trace {
+            name: self.name.clone(),
+            horizon_s: self.horizon_s,
+            services: self
+                .services
+                .iter()
+                .map(|s| ServiceTrace { shape: s.shape.scaled(factor), ..s.clone() })
+                .collect(),
+            gpu_events: self.gpu_events.clone(),
+        })
+    }
+
     /// Snapshot [`Workload`] for the given per-service demand levels
     /// (req/s, indexed by trace [`ServiceId`]), each provisioned with
     /// `margin` headroom. Inactive services (demand ≤
@@ -252,6 +333,51 @@ mod tests {
         assert_eq!(ids, vec![0, 1]);
         assert_eq!(w.services[1].model, "bert-base-uncased");
         assert!((w.services[1].slo.throughput - 40.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn total_requests_integrates_shapes() {
+        let t = two_service_trace();
+        // Service 0: 50 req/s × 1000 s. Service 1: onboarded [100, 800)
+        // at 10 req/s with a 40 req/s spike over [200, 400).
+        let exact = 50.0 * 1000.0 + 10.0 * 500.0 + 40.0 * 200.0;
+        let got = t.total_requests();
+        // 60 s left-endpoint grid: within a few cells of exact.
+        assert!(
+            (got - exact).abs() <= 4.0 * 60.0 * 50.0,
+            "got {got}, exact {exact}"
+        );
+    }
+
+    #[test]
+    fn scaled_to_requests_per_day_hits_target() {
+        let t = two_service_trace();
+        let target = 200_000.0; // per day; horizon is 1000 s
+        let scaled = t.scaled_to_requests_per_day(target).unwrap();
+        let got = scaled.total_requests();
+        let want = target * t.horizon_s / 86_400.0;
+        assert!((got - want).abs() < 1e-6 * want, "got {got}, want {want}");
+        // Temporal structure preserved: same on/offboard gating, same
+        // ratio at every instant.
+        for probe in [0.0, 150.0, 300.0, 500.0, 900.0] {
+            let a = t.demand_at(probe);
+            let b = scaled.demand_at(probe);
+            for (x, y) in a.iter().zip(&b) {
+                if *x == 0.0 {
+                    assert_eq!(*y, 0.0);
+                } else {
+                    assert!((y / x - got / t.total_requests()).abs() < 1e-9);
+                }
+            }
+        }
+        assert!(t.scaled_to_requests_per_day(0.0).is_err());
+        let empty = Trace {
+            name: "empty".into(),
+            horizon_s: 100.0,
+            services: vec![],
+            gpu_events: vec![],
+        };
+        assert!(empty.scaled_to_requests_per_day(1000.0).is_err());
     }
 
     #[test]

@@ -165,6 +165,18 @@ impl Histogram {
         self.max
     }
 
+    /// Forget every sample but keep the bucket layout — lets hot-path
+    /// windowed consumers (simkit's per-replan-window latency stats)
+    /// reuse the allocation instead of reallocating per window.
+    pub fn reset(&mut self) {
+        self.buckets.fill(0);
+        self.overflow = 0;
+        self.count = 0;
+        self.sum = 0.0;
+        self.min = f64::INFINITY;
+        self.max = f64::NEG_INFINITY;
+    }
+
     pub fn merge(&mut self, other: &Histogram) {
         assert_eq!(self.bucket_width, other.bucket_width);
         assert_eq!(self.buckets.len(), other.buckets.len());
@@ -262,6 +274,20 @@ mod tests {
         assert!((s.p99 - 990.0).abs() <= 1.0 + width, "p99={}", s.p99);
         assert!(s.p50 <= s.p90 && s.p90 <= s.p99);
         assert!(s.p99 <= s.max + width);
+    }
+
+    #[test]
+    fn histogram_reset_clears_everything() {
+        let mut h = Histogram::new(1.0, 10);
+        h.record(3.0);
+        h.record(42.0); // overflow
+        h.reset();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.overflow(), 0);
+        assert_eq!(h.percentile(99.0), 0.0);
+        h.record(5.0);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.percentile(50.0), 6.0);
     }
 
     #[test]

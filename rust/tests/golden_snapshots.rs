@@ -134,6 +134,37 @@ fn golden_simulate_quick_recorder_on_is_byte_identical() {
     }
 }
 
+/// `simulate --quick --requests-per-day 1000000` on the diurnal
+/// scenario, fixed seed: the request-level layer's event-log lines and
+/// measured-latency table. ~1M simulated request lifetimes; any change
+/// to arrival thinning, routing, batching, or latency accounting shows
+/// up as a golden diff.
+#[test]
+fn golden_simulate_quick_requests() {
+    let bank = ProfileBank::synthetic();
+    let trace = scenario(&bank, "diurnal");
+    let cfg = SimConfig {
+        requests_per_day: Some(1_000_000.0),
+        ..SimConfig::quick()
+    };
+    let report = Simulation::new(&bank, &trace, cfg).run().unwrap();
+    let rq = report.requests.as_ref().expect("requests enabled");
+    assert!(
+        rq.total.injected > 900_000,
+        "expected ~1M lifetimes, got {}",
+        rq.total.injected
+    );
+    let mut out = String::new();
+    out.push_str("== event log ==\n");
+    for line in &report.event_log {
+        out.push_str(line);
+        out.push('\n');
+    }
+    out.push_str("\n== measured request lifetimes ==\n");
+    out.push_str(&report.requests_table().expect("requests enabled"));
+    check_golden("simulate_quick_requests", &out).unwrap();
+}
+
 /// The fig09 GPUs-used table at a pinned 1-round GA budget.
 #[test]
 fn golden_fig09_table() {
