@@ -76,6 +76,12 @@ impl Controller {
     /// back before returning, so it is as pure — and clone-free — as
     /// [`Controller::plan`] itself; never called unless a recorder is
     /// installed.
+    ///
+    /// Causality: these records (and the enclosing `controller.plan`
+    /// span) inherit the caller's cause scope automatically — when the
+    /// simulator plans under a `sim.replan` decision, every action here
+    /// joins that replan's chain without this module knowing about
+    /// [`crate::obsv::CauseId`] at all (DESIGN.md §13).
     fn record_plan_timeline(&self, cluster: &mut ClusterState, plan: &TransitionPlan) {
         let mut scratch = ScratchState::new(cluster);
         let mut capacity: f64 =

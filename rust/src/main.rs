@@ -11,6 +11,10 @@
 //! * `online`     — clock-less replay of a scenario's workload events
 //!                  through the incremental scheduler (event/escalation
 //!                  accounting + fragmentation summary);
+//! * `analyze`    — causal analysis of a JSONL trace (`--trace-out
+//!                  x.jsonl` from `simulate`/`online`): per-decision
+//!                  cost attribution, SLO burn rates, critical path,
+//!                  and a two-run diff;
 //! * `serve`      — deploy on the PJRT runtime and drive load;
 //! * `study`      — the §2.2 model study (Fig 3/Fig 4 tables);
 //! * `lower-bound`— the rule-free GPU lower bound for a workload;
@@ -80,6 +84,12 @@ fn app() -> App {
                 .opt("trace-out", "", "write a trace of the replay (Chrome trace_event JSON; .jsonl for JSONL)")
                 .opt("metrics-out", "", "write replay metrics in Prometheus text exposition to this path")
                 .flag("verbose", "print every event as it is handled"),
+            Command::new("analyze", "causal analysis of a JSONL trace: cost attribution, SLO burn rate, critical path")
+                .opt("trace", "", "JSONL trace to analyze (required; from simulate/online --trace-out x.jsonl)")
+                .opt("compare", "", "second JSONL trace: print a two-run regression diff instead of one report")
+                .opt("slo-target", "0.99", "availability target for burn-rate/error-budget accounting")
+                .opt("out", "", "also write the analysis (or diff) to this path")
+                .flag("json", "emit JSON instead of text tables"),
             Command::new("serve", "deploy on the PJRT runtime and measure throughput")
                 .opt("workload", "night", "daytime|night (scaled real-world)")
                 .opt("scale", "1.0", "workload scale multiplier")
@@ -415,6 +425,50 @@ fn cmd_simulate(args: &mig_serving::util::cli::Args) -> anyhow::Result<()> {
     if let Some((rec, guard)) = obsv {
         drop(guard);
         obsv_export(args, &rec)?;
+    }
+    Ok(())
+}
+
+/// Causal analysis of a recorded JSONL trace (see
+/// [`mig_serving::obsv::analyze`]): per-decision attribution chains,
+/// SLO burn-rate timelines, and the span critical path; with
+/// `--compare`, a two-run regression diff.
+fn cmd_analyze(args: &mig_serving::util::cli::Args) -> anyhow::Result<()> {
+    use mig_serving::obsv::analyze;
+
+    let trace_path = args.get("trace").unwrap();
+    anyhow::ensure!(
+        !trace_path.is_empty(),
+        "analyze needs --trace <file.jsonl> (write one with simulate/online --trace-out x.jsonl)"
+    );
+    let slo_target = args.get_f64("slo-target").unwrap_or(0.99);
+    let text = std::fs::read_to_string(trace_path)
+        .map_err(|e| anyhow::anyhow!("read {trace_path}: {e}"))?;
+    let a = analyze::analyze_jsonl(&text, slo_target)
+        .map_err(|e| anyhow::anyhow!("{trace_path}: {e}"))?;
+    let compare_path = args.get("compare").unwrap();
+    let rendered = if compare_path.is_empty() {
+        if args.flag("json") {
+            a.to_json().to_pretty() + "\n"
+        } else {
+            a.render_text()
+        }
+    } else {
+        let text_b = std::fs::read_to_string(compare_path)
+            .map_err(|e| anyhow::anyhow!("read {compare_path}: {e}"))?;
+        let b = analyze::analyze_jsonl(&text_b, slo_target)
+            .map_err(|e| anyhow::anyhow!("{compare_path}: {e}"))?;
+        if args.flag("json") {
+            a.diff_json(&b).to_pretty() + "\n"
+        } else {
+            a.diff_text(&b)
+        }
+    };
+    print!("{rendered}");
+    let out = args.get("out").unwrap();
+    if !out.is_empty() {
+        std::fs::write(out, &rendered)?;
+        println!("wrote {out}");
     }
     Ok(())
 }
@@ -775,6 +829,7 @@ fn main() {
         "optimize" => cmd_optimize(&args),
         "transition" => cmd_transition(&args),
         "simulate" => cmd_simulate(&args),
+        "analyze" => cmd_analyze(&args),
         "online" => cmd_online(&args),
         "serve" => cmd_serve(&args),
         "study" => cmd_study(),

@@ -1,0 +1,965 @@
+//! Causal trace analysis: turn a recorded stream (in-memory
+//! [`Record`]s or a JSONL trace file) into attribution a human can act
+//! on. Four products, all deterministic (DESIGN.md §13):
+//!
+//! * **Per-cause cost attribution** — for every decision
+//!   ([`super::decision`]): its transition actions, the capacity /
+//!   GPU dip integrated over the transition's apply timeline
+//!   (`transition.start` / `transition.apply` / `transition.done`
+//!   points), and the request-latency windows (`reqsim.window`) joined
+//!   to it by cause — completed, dropped, worst p99, and the p99 delta
+//!   vs the run's median window.
+//! * **Per-service SLO burn rate** — windowed availability vs a target:
+//!   per window `error_rate = dropped / (completed + dropped)`,
+//!   `burn = error_rate / (1 − target)`, with two-window (fast/slow)
+//!   burn alerts at the conventional 14.4× (page) and 6× (ticket)
+//!   thresholds.
+//! * **Critical path** — which span dominated each decision, by
+//!   *exclusive* duration then exclusive record count (the logical
+//!   fallback when the virtual clock makes planning spans zero-width).
+//! * **Two-run diff** — the same roll-ups, side by side, for
+//!   regression triage.
+//!
+//! Ingestion validates the causality contract and fails loudly: ids
+//! must be strictly increasing and every `cause` must reference an
+//! already-minted id (no dangling or forward references — which also
+//! makes chains acyclic).
+
+use std::collections::BTreeMap;
+
+use super::recorder::Record;
+use crate::util::json::{self, Value};
+use crate::util::table::{f, pct, Table};
+
+/// Default `--slo-target` for the burn-rate analysis.
+pub const DEFAULT_SLO_TARGET: f64 = 0.99;
+
+/// Multi-window burn-alert thresholds (error-budget multiples), the
+/// conventional SRE page/ticket pair for coarse windows.
+const BURN_PAGE: f64 = 14.4;
+const BURN_TICKET: f64 = 6.0;
+/// The "slow" alert window: mean burn over this many trailing windows.
+const SLOW_WINDOWS: usize = 3;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Kind {
+    Begin,
+    End,
+    Event,
+}
+
+/// One record view, unified over in-memory records and JSONL lines.
+#[derive(Debug, Clone)]
+struct Rec {
+    kind: Kind,
+    name: String,
+    ts_us: u64,
+    id: Option<u64>,
+    cause: Option<u64>,
+    args: Value,
+}
+
+impl Rec {
+    fn arg_f64(&self, k: &str) -> Option<f64> {
+        self.args.get(k).and_then(|v| v.as_f64())
+    }
+
+    fn arg_u64(&self, k: &str) -> Option<u64> {
+        self.args.get(k).and_then(|v| v.as_u64())
+    }
+
+    fn arg_str(&self, k: &str) -> Option<&str> {
+        self.args.get(k).and_then(|v| v.as_str())
+    }
+}
+
+fn views_from_records(records: &[Record]) -> Vec<Rec> {
+    records
+        .iter()
+        .map(|r| {
+            let (kind, args) = match r {
+                Record::Begin { args, .. } => (Kind::Begin, args.as_slice()),
+                Record::End { .. } => (Kind::End, &[][..]),
+                Record::Event { args, .. } => (Kind::Event, args.as_slice()),
+            };
+            Rec {
+                kind,
+                name: r.name().to_string(),
+                ts_us: r.ts_us(),
+                id: r.cause_id().map(|c| c.get()),
+                cause: r.cause().map(|c| c.get()),
+                args: if args.is_empty() {
+                    Value::Null
+                } else {
+                    Value::Obj(args.to_vec())
+                },
+            }
+        })
+        .collect()
+}
+
+fn views_from_jsonl(text: &str) -> anyhow::Result<Vec<Rec>> {
+    let mut out = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = json::parse(line)
+            .map_err(|e| anyhow::anyhow!("trace line {}: {e:?}", lineno + 1))?;
+        let kind = match v.get("kind").and_then(|k| k.as_str()) {
+            Some("begin") => Kind::Begin,
+            Some("end") => Kind::End,
+            Some("event") => Kind::Event,
+            other => anyhow::bail!(
+                "trace line {}: unknown record kind {other:?}",
+                lineno + 1
+            ),
+        };
+        let name = v
+            .get("name")
+            .and_then(|n| n.as_str())
+            .ok_or_else(|| anyhow::anyhow!("trace line {}: no name", lineno + 1))?
+            .to_string();
+        let ts_us = v
+            .get("ts_us")
+            .and_then(|t| t.as_u64())
+            .ok_or_else(|| anyhow::anyhow!("trace line {}: no ts_us", lineno + 1))?;
+        out.push(Rec {
+            kind,
+            name,
+            ts_us,
+            id: v.get("id").and_then(|x| x.as_u64()),
+            cause: v.get("cause").and_then(|x| x.as_u64()),
+            args: v.get("args").cloned().unwrap_or(Value::Null),
+        });
+    }
+    Ok(out)
+}
+
+/// Attribution for one decision in the cause forest.
+#[derive(Debug, Clone)]
+pub struct CauseReport {
+    pub id: u64,
+    pub name: String,
+    /// Human label from the decision's args (reason / event kind).
+    pub label: String,
+    pub parent: Option<u64>,
+    /// Root ancestor (== `id` for roots).
+    pub root: u64,
+    pub depth: usize,
+    pub children: usize,
+    /// `transition.action` records attributed to this decision.
+    pub actions: usize,
+    /// `reqsim.window` records joined to this decision by cause.
+    pub windows: usize,
+    pub completed: u64,
+    pub dropped: u64,
+    /// Worst window p99 attributed to this decision (0 if no windows).
+    pub p99_max_ms: f64,
+    /// `p99_max_ms` minus the run's median window p99.
+    pub p99_delta_ms: f64,
+    /// ∫ max(0, capacity(start) − capacity(t)) dt over the transition's
+    /// apply timeline — requests of serving capacity lost to the dip.
+    pub dip_cap_req_s: f64,
+    /// Same integral over GPUs in use — GPU-seconds of dip.
+    pub dip_gpu_s: f64,
+    /// Span that dominated this decision's pipeline (exclusive
+    /// duration, then exclusive record count); empty if none.
+    pub dominant_span: String,
+    /// Total exclusive records across this decision's spans.
+    pub span_records: u64,
+}
+
+/// One `reqsim.window` in a service's burn timeline.
+#[derive(Debug, Clone)]
+pub struct SloWindow {
+    pub t_s: f64,
+    pub completed: u64,
+    pub dropped: u64,
+    pub p99_ms: f64,
+    pub error_rate: f64,
+    pub burn_rate: f64,
+    pub cause: Option<u64>,
+}
+
+/// Per-service SLO attainment and error-budget accounting.
+#[derive(Debug, Clone)]
+pub struct ServiceSlo {
+    pub service: String,
+    pub windows: Vec<SloWindow>,
+    pub completed: u64,
+    pub dropped: u64,
+    /// Overall availability: completed / (completed + dropped).
+    pub attainment: f64,
+    /// Fraction of the error budget `(1 − target)` consumed.
+    pub budget_consumed: f64,
+    pub alerts: Vec<String>,
+}
+
+/// The full analysis of one trace.
+#[derive(Debug, Clone)]
+pub struct TraceAnalysis {
+    pub slo_target: f64,
+    pub records: usize,
+    pub causes: Vec<CauseReport>,
+    pub services: Vec<ServiceSlo>,
+}
+
+/// Analyze an in-memory record stream.
+pub fn analyze_records(
+    records: &[Record],
+    slo_target: f64,
+) -> anyhow::Result<TraceAnalysis> {
+    analyze_views(views_from_records(records), slo_target)
+}
+
+/// Analyze a JSONL trace (the `--trace-out foo.jsonl` format).
+pub fn analyze_jsonl(text: &str, slo_target: f64) -> anyhow::Result<TraceAnalysis> {
+    analyze_views(views_from_jsonl(text)?, slo_target)
+}
+
+#[derive(Debug, Default)]
+struct Node {
+    name: String,
+    label: String,
+    parent: Option<u64>,
+    root: u64,
+    depth: usize,
+    children: usize,
+    actions: usize,
+    windows: usize,
+    completed: u64,
+    dropped: u64,
+    p99_max_ms: f64,
+    /// (ts_us, capacity req/s, gpus in use) transition timeline points.
+    cap_points: Vec<(u64, f64, f64)>,
+    /// span name → (exclusive duration us, exclusive records).
+    spans: BTreeMap<String, (u64, u64)>,
+}
+
+fn decision_label(r: &Rec) -> String {
+    if let Some(s) = r.arg_str("reason") {
+        return s.to_string();
+    }
+    if let Some(s) = r.arg_str("event") {
+        return s.to_string();
+    }
+    if let Some(g) = r.arg_u64("gpu") {
+        return format!("gpu {g}");
+    }
+    String::new()
+}
+
+fn analyze_views(views: Vec<Rec>, slo_target: f64) -> anyhow::Result<TraceAnalysis> {
+    anyhow::ensure!(
+        slo_target < 1.0 && slo_target > 0.0,
+        "slo target must be in (0, 1), got {slo_target}"
+    );
+    let mut nodes: BTreeMap<u64, Node> = BTreeMap::new();
+    let mut last_id = 0u64;
+    // Pass 1: validate the causality contract, collect decisions.
+    for (i, r) in views.iter().enumerate() {
+        if let Some(c) = r.cause {
+            anyhow::ensure!(
+                nodes.contains_key(&c),
+                "record {} ({}): cause {c} references an unminted decision \
+                 (dangling or forward reference)",
+                i,
+                r.name
+            );
+        }
+        if let Some(id) = r.id {
+            anyhow::ensure!(
+                id > last_id,
+                "record {} ({}): decision id {id} is not strictly increasing \
+                 (last minted {last_id})",
+                i,
+                r.name
+            );
+            last_id = id;
+            let (root, depth) = match r.cause {
+                // Parents are already in the map (validated above), so
+                // root/depth resolve in one lookup.
+                Some(p) => {
+                    let pn = &nodes[&p];
+                    (pn.root, pn.depth + 1)
+                }
+                None => (id, 0),
+            };
+            if let Some(p) = r.cause {
+                nodes.get_mut(&p).expect("validated parent").children += 1;
+            }
+            nodes.insert(id, Node {
+                name: r.name.clone(),
+                label: decision_label(r),
+                parent: r.cause,
+                root,
+                depth,
+                ..Node::default()
+            });
+        }
+    }
+
+    // Pass 2: attribution joins + span critical path.
+    let mut service_windows: BTreeMap<String, Vec<SloWindow>> = BTreeMap::new();
+    let mut all_p99: Vec<f64> = Vec::new();
+    // Span stack: (name, cause, start_ts, start_idx, child_dur, child_recs).
+    let mut stack: Vec<(String, Option<u64>, u64, usize, u64, u64)> = Vec::new();
+    for (i, r) in views.iter().enumerate() {
+        match r.kind {
+            Kind::Begin => {
+                stack.push((r.name.clone(), r.cause, r.ts_us, i, 0, 0));
+            }
+            Kind::End => {
+                // Spans are well-nested per stream; tolerate orphan
+                // ends from truncated traces by ignoring them.
+                if stack.last().is_some_and(|(n, ..)| *n == r.name) {
+                    let (name, cause, t0, i0, cdur, crecs) = stack.pop().unwrap();
+                    let dur = r.ts_us.saturating_sub(t0);
+                    let recs = (i - i0 - 1) as u64;
+                    if let Some((.., pdur, precs)) = stack.last_mut() {
+                        *pdur += dur;
+                        *precs += recs + 2;
+                    }
+                    if let Some(c) = cause {
+                        let e = nodes
+                            .get_mut(&c)
+                            .expect("validated cause")
+                            .spans
+                            .entry(name)
+                            .or_insert((0, 0));
+                        e.0 += dur.saturating_sub(cdur);
+                        e.1 += recs.saturating_sub(crecs);
+                    }
+                }
+            }
+            Kind::Event => match r.name.as_str() {
+                "transition.action" => {
+                    if let Some(c) = r.cause {
+                        nodes.get_mut(&c).expect("validated cause").actions += 1;
+                    }
+                }
+                "transition.start" | "transition.apply" | "transition.done"
+                | "transition.abort" => {
+                    if let Some(c) = r.cause {
+                        let cap = r.arg_f64("capacity").unwrap_or(0.0);
+                        let gpus = r.arg_f64("gpus").unwrap_or(0.0);
+                        nodes
+                            .get_mut(&c)
+                            .expect("validated cause")
+                            .cap_points
+                            .push((r.ts_us, cap, gpus));
+                    }
+                }
+                "reqsim.window" => {
+                    // `reqsim` emits the service as a numeric trace
+                    // index; synthetic traces may use a name.
+                    let service = match r.args.get("service") {
+                        Some(Value::Str(s)) => s.clone(),
+                        Some(Value::Num(x)) => format!("svc{}", *x as usize),
+                        _ => "?".to_string(),
+                    };
+                    let completed = r.arg_u64("completed").unwrap_or(0);
+                    let dropped = r.arg_u64("dropped").unwrap_or(0);
+                    let p99 = r.arg_f64("p99_ms").unwrap_or(0.0);
+                    all_p99.push(p99);
+                    if let Some(c) = r.cause {
+                        let n = nodes.get_mut(&c).expect("validated cause");
+                        n.windows += 1;
+                        n.completed += completed;
+                        n.dropped += dropped;
+                        n.p99_max_ms = n.p99_max_ms.max(p99);
+                    }
+                    service_windows.entry(service).or_default().push(SloWindow {
+                        t_s: r.arg_f64("t_s").unwrap_or(r.ts_us as f64 / 1e6),
+                        completed,
+                        dropped,
+                        p99_ms: p99,
+                        error_rate: 0.0,
+                        burn_rate: 0.0,
+                        cause: r.cause,
+                    });
+                }
+                _ => {}
+            },
+        }
+    }
+
+    // Run-level median window p99, the baseline for per-cause deltas.
+    all_p99.sort_by(|a, b| a.total_cmp(b));
+    let median_p99 =
+        if all_p99.is_empty() { 0.0 } else { all_p99[all_p99.len() / 2] };
+
+    let causes: Vec<CauseReport> = nodes
+        .iter()
+        .map(|(&id, n)| {
+            // Dip integrals: capacity is piecewise-constant between
+            // timeline points; the dip is measured against the
+            // transition's starting point.
+            let (mut dip_cap, mut dip_gpu) = (0.0f64, 0.0f64);
+            if let Some(&(_, cap0, gpus0)) = n.cap_points.first() {
+                for w in n.cap_points.windows(2) {
+                    let dt = (w[1].0 - w[0].0) as f64 / 1e6;
+                    dip_cap += (cap0 - w[0].1).max(0.0) * dt;
+                    dip_gpu += (gpus0 - w[0].2).max(0.0) * dt;
+                }
+            }
+            let mut dominant = "";
+            let mut best = (0u64, 0u64);
+            let mut span_records = 0u64;
+            for (name, &(dur, recs)) in &n.spans {
+                span_records += recs;
+                if (dur, recs) > best {
+                    best = (dur, recs);
+                    dominant = name.as_str();
+                }
+            }
+            CauseReport {
+                id,
+                name: n.name.clone(),
+                label: n.label.clone(),
+                parent: n.parent,
+                root: n.root,
+                depth: n.depth,
+                children: n.children,
+                actions: n.actions,
+                windows: n.windows,
+                completed: n.completed,
+                dropped: n.dropped,
+                p99_max_ms: n.p99_max_ms,
+                p99_delta_ms: if n.windows > 0 {
+                    n.p99_max_ms - median_p99
+                } else {
+                    0.0
+                },
+                dip_cap_req_s: dip_cap,
+                dip_gpu_s: dip_gpu,
+                dominant_span: dominant.to_string(),
+                span_records,
+            }
+        })
+        .collect();
+
+    // SLO burn: per-window error rate and burn, multi-window alerts.
+    let budget = (1.0 - slo_target).max(1e-12);
+    let services: Vec<ServiceSlo> = service_windows
+        .into_iter()
+        .map(|(service, mut windows)| {
+            let mut burns: Vec<f64> = Vec::with_capacity(windows.len());
+            let mut alerts = Vec::new();
+            for w in windows.iter_mut() {
+                let total = w.completed + w.dropped;
+                w.error_rate =
+                    if total == 0 { 0.0 } else { w.dropped as f64 / total as f64 };
+                w.burn_rate = w.error_rate / budget;
+                burns.push(w.burn_rate);
+                let lo = burns.len().saturating_sub(SLOW_WINDOWS);
+                let slow =
+                    burns[lo..].iter().sum::<f64>() / (burns.len() - lo) as f64;
+                let level = if w.burn_rate >= BURN_PAGE && slow >= BURN_PAGE {
+                    Some("page")
+                } else if w.burn_rate >= BURN_TICKET && slow >= BURN_TICKET {
+                    Some("ticket")
+                } else {
+                    None
+                };
+                if let Some(level) = level {
+                    alerts.push(format!(
+                        "t={:.0}s {service}: burn {:.1}x (slow {:.1}x) -> {level}",
+                        w.t_s, w.burn_rate, slow
+                    ));
+                }
+            }
+            let completed: u64 = windows.iter().map(|w| w.completed).sum();
+            let dropped: u64 = windows.iter().map(|w| w.dropped).sum();
+            let total = completed + dropped;
+            let attainment =
+                if total == 0 { 1.0 } else { completed as f64 / total as f64 };
+            ServiceSlo {
+                service,
+                windows,
+                completed,
+                dropped,
+                attainment,
+                budget_consumed: (1.0 - attainment) / budget,
+                alerts,
+            }
+        })
+        .collect();
+
+    Ok(TraceAnalysis { slo_target, records: views.len(), causes, services })
+}
+
+impl TraceAnalysis {
+    /// Look up one cause by id.
+    pub fn cause(&self, id: u64) -> Option<&CauseReport> {
+        self.causes.iter().find(|c| c.id == id)
+    }
+
+    pub fn roots(&self) -> usize {
+        self.causes.iter().filter(|c| c.parent.is_none()).count()
+    }
+
+    /// Deterministic text rendering (tables in id / name order).
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "== causal chains ==\n{} records, {} decisions, {} roots\n\n",
+            self.records,
+            self.causes.len(),
+            self.roots()
+        ));
+        let mut t = Table::new(&[
+            "id", "parent", "decision", "label", "act", "win", "completed",
+            "dropped", "p99 ms", "p99Δ ms", "dip req·s", "dip gpu·s", "hot span",
+        ]);
+        for c in &self.causes {
+            t.row(vec![
+                c.id.to_string(),
+                c.parent.map_or("-".to_string(), |p| p.to_string()),
+                c.name.clone(),
+                c.label.clone(),
+                c.actions.to_string(),
+                c.windows.to_string(),
+                c.completed.to_string(),
+                c.dropped.to_string(),
+                if c.windows > 0 { f(c.p99_max_ms, 1) } else { "-".to_string() },
+                if c.windows > 0 { f(c.p99_delta_ms, 1) } else { "-".to_string() },
+                f(c.dip_cap_req_s, 1),
+                f(c.dip_gpu_s, 1),
+                if c.dominant_span.is_empty() {
+                    "-".to_string()
+                } else {
+                    c.dominant_span.clone()
+                },
+            ]);
+        }
+        out.push_str(&t.render());
+        out.push_str(&format!(
+            "\n== slo burn rate (target {}, error budget {}) ==\n",
+            pct(self.slo_target, 2),
+            pct(1.0 - self.slo_target, 2)
+        ));
+        let mut s = Table::new(&[
+            "service", "windows", "completed", "dropped", "attainment",
+            "budget used", "alerts",
+        ]);
+        for sv in &self.services {
+            s.row(vec![
+                sv.service.clone(),
+                sv.windows.len().to_string(),
+                sv.completed.to_string(),
+                sv.dropped.to_string(),
+                pct(sv.attainment, 3),
+                format!("{}x", f(sv.budget_consumed, 2)),
+                sv.alerts.len().to_string(),
+            ]);
+        }
+        out.push_str(&s.render());
+        for sv in &self.services {
+            for a in &sv.alerts {
+                out.push_str(&format!("ALERT {a}\n"));
+            }
+        }
+        out
+    }
+
+    /// The analysis as a JSON document (schema checked by
+    /// `scripts/check_obsv.py`).
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("slo_target", Value::Num(self.slo_target)),
+            ("records", Value::from(self.records)),
+            ("decisions", Value::from(self.causes.len())),
+            ("roots", Value::from(self.roots())),
+            (
+                "causes",
+                Value::Arr(
+                    self.causes
+                        .iter()
+                        .map(|c| {
+                            let mut fields: Vec<(&str, Value)> = vec![
+                                ("id", Value::Num(c.id as f64)),
+                                ("name", Value::from(c.name.as_str())),
+                                ("label", Value::from(c.label.as_str())),
+                            ];
+                            if let Some(p) = c.parent {
+                                fields.push(("parent", Value::Num(p as f64)));
+                            }
+                            fields.extend([
+                                ("root", Value::Num(c.root as f64)),
+                                ("depth", Value::from(c.depth)),
+                                ("children", Value::from(c.children)),
+                                ("actions", Value::from(c.actions)),
+                                ("windows", Value::from(c.windows)),
+                                ("completed", Value::Num(c.completed as f64)),
+                                ("dropped", Value::Num(c.dropped as f64)),
+                                ("p99_max_ms", Value::Num(c.p99_max_ms)),
+                                ("p99_delta_ms", Value::Num(c.p99_delta_ms)),
+                                ("dip_cap_req_s", Value::Num(c.dip_cap_req_s)),
+                                ("dip_gpu_s", Value::Num(c.dip_gpu_s)),
+                                (
+                                    "dominant_span",
+                                    Value::from(c.dominant_span.as_str()),
+                                ),
+                            ]);
+                            Value::obj(fields)
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "services",
+                Value::Arr(
+                    self.services
+                        .iter()
+                        .map(|sv| {
+                            Value::obj(vec![
+                                ("service", Value::from(sv.service.as_str())),
+                                ("completed", Value::Num(sv.completed as f64)),
+                                ("dropped", Value::Num(sv.dropped as f64)),
+                                ("attainment", Value::Num(sv.attainment)),
+                                (
+                                    "budget_consumed",
+                                    Value::Num(sv.budget_consumed),
+                                ),
+                                (
+                                    "windows",
+                                    Value::Arr(
+                                        sv.windows
+                                            .iter()
+                                            .map(|w| {
+                                                let mut fields: Vec<(
+                                                    &str,
+                                                    Value,
+                                                )> = vec![
+                                                    ("t_s", Value::Num(w.t_s)),
+                                                    (
+                                                        "completed",
+                                                        Value::Num(
+                                                            w.completed as f64,
+                                                        ),
+                                                    ),
+                                                    (
+                                                        "dropped",
+                                                        Value::Num(
+                                                            w.dropped as f64,
+                                                        ),
+                                                    ),
+                                                    (
+                                                        "p99_ms",
+                                                        Value::Num(w.p99_ms),
+                                                    ),
+                                                    (
+                                                        "error_rate",
+                                                        Value::Num(w.error_rate),
+                                                    ),
+                                                    (
+                                                        "burn_rate",
+                                                        Value::Num(w.burn_rate),
+                                                    ),
+                                                ];
+                                                if let Some(c) = w.cause {
+                                                    fields.push((
+                                                        "cause",
+                                                        Value::Num(c as f64),
+                                                    ));
+                                                }
+                                                Value::obj(fields)
+                                            })
+                                            .collect(),
+                                    ),
+                                ),
+                                (
+                                    "alerts",
+                                    Value::Arr(
+                                        sv.alerts
+                                            .iter()
+                                            .map(|a| Value::from(a.as_str()))
+                                            .collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Two-run diff for regression triage: decision mix, drops, worst
+    /// p99, and per-service attainment, side by side with deltas.
+    pub fn diff_text(&self, other: &TraceAnalysis) -> String {
+        let mut out = String::new();
+        out.push_str("== trace diff (a = --trace, b = --compare) ==\n");
+        let mut t = Table::new(&["metric", "a", "b", "delta"]);
+        let row_u = |t: &mut Table, name: &str, a: f64, b: f64, d: usize| {
+            let delta = b - a;
+            let sign = if delta >= 0.0 { "+" } else { "" };
+            t.row(vec![
+                name.to_string(),
+                f(a, d),
+                f(b, d),
+                format!("{sign}{}", f(delta, d)),
+            ]);
+        };
+        row_u(&mut t, "records", self.records as f64, other.records as f64, 0);
+        row_u(
+            &mut t,
+            "decisions",
+            self.causes.len() as f64,
+            other.causes.len() as f64,
+            0,
+        );
+        let count = |an: &TraceAnalysis, name: &str| {
+            an.causes.iter().filter(|c| c.name == name).count() as f64
+        };
+        let mut names: Vec<&str> =
+            self.causes.iter().chain(&other.causes).map(|c| c.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        for name in names {
+            row_u(
+                &mut t,
+                &format!("decisions[{name}]"),
+                count(self, name),
+                count(other, name),
+                0,
+            );
+        }
+        let dropped = |an: &TraceAnalysis| {
+            an.services.iter().map(|s| s.dropped).sum::<u64>() as f64
+        };
+        row_u(&mut t, "dropped", dropped(self), dropped(other), 0);
+        let p99 = |an: &TraceAnalysis| {
+            an.causes.iter().map(|c| c.p99_max_ms).fold(0.0f64, f64::max)
+        };
+        row_u(&mut t, "worst p99 ms", p99(self), p99(other), 1);
+        let mut svcs: Vec<&str> = self
+            .services
+            .iter()
+            .chain(&other.services)
+            .map(|s| s.service.as_str())
+            .collect();
+        svcs.sort_unstable();
+        svcs.dedup();
+        for svc in svcs {
+            let att = |an: &TraceAnalysis| {
+                an.services
+                    .iter()
+                    .find(|s| s.service == svc)
+                    .map_or(1.0, |s| s.attainment)
+            };
+            row_u(&mut t, &format!("attainment[{svc}]"), att(self), att(other), 4);
+        }
+        out.push_str(&t.render());
+        out
+    }
+
+    /// The diff as JSON (for `analyze --compare --json`).
+    pub fn diff_json(&self, other: &TraceAnalysis) -> Value {
+        Value::obj(vec![
+            ("a", self.to_json()),
+            ("b", other.to_json()),
+        ])
+    }
+}
+
+/// The compact `causes` block embedded in `SimReport` when a recorder
+/// is installed: decision counts by name plus chain shape.
+pub fn cause_summary(records: &[Record]) -> Value {
+    let views = views_from_records(records);
+    let mut by_name: BTreeMap<String, usize> = BTreeMap::new();
+    let mut decisions = 0usize;
+    let mut roots = 0usize;
+    let mut max_depth = 0usize;
+    let mut depths: BTreeMap<u64, usize> = BTreeMap::new();
+    let mut attributed = 0usize;
+    for r in &views {
+        if let Some(id) = r.id {
+            decisions += 1;
+            *by_name.entry(r.name.clone()).or_insert(0) += 1;
+            let depth = match r.cause {
+                Some(p) => depths.get(&p).copied().unwrap_or(0) + 1,
+                None => {
+                    roots += 1;
+                    0
+                }
+            };
+            max_depth = max_depth.max(depth);
+            depths.insert(id, depth);
+        } else if r.cause.is_some() {
+            attributed += 1;
+        }
+    }
+    Value::obj(vec![
+        ("decisions", Value::from(decisions)),
+        ("roots", Value::from(roots)),
+        ("max_depth", Value::from(max_depth)),
+        ("attributed_records", Value::from(attributed)),
+        (
+            "by_name",
+            Value::Obj(
+                by_name
+                    .into_iter()
+                    .map(|(k, v)| (k, Value::Num(v as f64)))
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{install, Clock, Recorder};
+    use super::*;
+    use std::sync::Arc;
+
+    /// Build a tiny but complete causal trace: a replan with actions,
+    /// a transition dip, and latency windows.
+    fn sample() -> Arc<Recorder> {
+        let rec = Arc::new(Recorder::new(Clock::Virtual));
+        let g = install(rec.clone());
+        super::super::set_time_s(0.0);
+        let ev = super::super::decision(
+            "online.event",
+            &[("event", Value::from("delta"))],
+            None,
+        );
+        let esc = super::super::decision(
+            "sim.escalation",
+            &[("reason", Value::from("optimality-gap"))],
+            ev,
+        );
+        let rp = super::super::decision(
+            "sim.replan",
+            &[("reason", Value::from("escalation"))],
+            esc,
+        );
+        {
+            let _cs = super::super::cause_scope(rp);
+            {
+                let _sp = super::super::span("controller.plan");
+                super::super::event(
+                    "transition.action",
+                    &[("idx", Value::from(0.0))],
+                );
+                super::super::event(
+                    "transition.action",
+                    &[("idx", Value::from(1.0))],
+                );
+            }
+            super::super::event(
+                "transition.start",
+                &[("capacity", Value::from(100.0)), ("gpus", Value::from(8.0))],
+            );
+            super::super::set_time_s(10.0);
+            super::super::event(
+                "transition.apply",
+                &[("capacity", Value::from(60.0)), ("gpus", Value::from(6.0))],
+            );
+            super::super::set_time_s(30.0);
+            super::super::event(
+                "transition.done",
+                &[("capacity", Value::from(120.0)), ("gpus", Value::from(9.0))],
+            );
+            super::super::set_time_s(60.0);
+            super::super::event("reqsim.window", &[
+                ("t_s", Value::from(60.0)),
+                ("service", Value::from("svc")),
+                ("completed", Value::from(900.0)),
+                ("dropped", Value::from(100.0)),
+                ("p99_ms", Value::from(750.0)),
+            ]);
+        }
+        super::super::event("reqsim.window", &[
+            ("t_s", Value::from(120.0)),
+            ("service", Value::from("svc")),
+            ("completed", Value::from(1000.0)),
+            ("dropped", Value::from(0.0)),
+            ("p99_ms", Value::from(40.0)),
+        ]);
+        drop(g);
+        rec
+    }
+
+    #[test]
+    fn attribution_joins_windows_actions_and_dips() {
+        let rec = sample();
+        let an = analyze_records(&rec.records(), 0.99).unwrap();
+        assert_eq!(an.causes.len(), 3);
+        assert_eq!(an.roots(), 1);
+        let rp = an.causes.iter().find(|c| c.name == "sim.replan").unwrap();
+        assert_eq!(rp.label, "escalation");
+        assert_eq!(rp.actions, 2);
+        assert_eq!(rp.windows, 1);
+        assert_eq!(rp.dropped, 100);
+        assert_eq!(rp.p99_max_ms, 750.0);
+        // Chain: replan -> escalation -> online.event (root).
+        let esc = an.cause(rp.parent.unwrap()).unwrap();
+        assert_eq!(esc.name, "sim.escalation");
+        let root = an.cause(esc.parent.unwrap()).unwrap();
+        assert_eq!(root.name, "online.event");
+        assert!(root.parent.is_none());
+        assert_eq!(rp.root, root.id);
+        assert_eq!(rp.depth, 2);
+        // Dip: cap0 = 100; [0,10)s at 100 (no dip), [10,30)s at 60 →
+        // 40 req/s * 20 s = 800 req·s; gpus0 = 8, dip 2 gpus * 20 s.
+        assert!((rp.dip_cap_req_s - 800.0).abs() < 1e-9, "{}", rp.dip_cap_req_s);
+        assert!((rp.dip_gpu_s - 40.0).abs() < 1e-9);
+        assert_eq!(rp.dominant_span, "controller.plan");
+        // p99 delta vs median (windows sorted: [40, 750] → median 750
+        // at index 1).
+        assert_eq!(rp.p99_delta_ms, 0.0);
+        // Burn rate: window 1 error rate 10%, budget 1% → burn 10x.
+        let svc = &an.services[0];
+        assert_eq!(svc.service, "svc");
+        assert_eq!(svc.windows.len(), 2);
+        assert!((svc.windows[0].burn_rate - 10.0).abs() < 1e-6);
+        // 10x exceeds ticket (6x) on both fast and slow windows.
+        assert_eq!(svc.alerts.len(), 1);
+        assert!(svc.alerts[0].contains("ticket"), "{}", svc.alerts[0]);
+        assert!((svc.attainment - 1900.0 / 2000.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn file_and_memory_ingestion_are_identical() {
+        let rec = sample();
+        let a = analyze_records(&rec.records(), 0.99).unwrap();
+        let b = analyze_jsonl(&rec.to_jsonl(), 0.99).unwrap();
+        assert_eq!(a.render_text(), b.render_text());
+        assert_eq!(a.to_json().to_pretty(), b.to_json().to_pretty());
+    }
+
+    #[test]
+    fn dangling_and_forward_references_are_rejected() {
+        let bad = "{\"kind\":\"event\",\"name\":\"x\",\"ts_us\":1,\"cause\":7}\n";
+        let err = analyze_jsonl(bad, 0.99).unwrap_err().to_string();
+        assert!(err.contains("unminted"), "{err}");
+        // Non-increasing ids are rejected too.
+        let dup = "{\"kind\":\"event\",\"name\":\"a\",\"ts_us\":1,\"id\":2}\n\
+                   {\"kind\":\"event\",\"name\":\"b\",\"ts_us\":2,\"id\":2}\n";
+        let err = analyze_jsonl(dup, 0.99).unwrap_err().to_string();
+        assert!(err.contains("strictly increasing"), "{err}");
+    }
+
+    #[test]
+    fn diff_reports_deltas() {
+        let rec = sample();
+        let a = analyze_records(&rec.records(), 0.99).unwrap();
+        let d = a.diff_text(&a);
+        assert!(d.contains("decisions[sim.replan]"));
+        assert!(d.contains("attainment[svc]"));
+    }
+
+    #[test]
+    fn cause_summary_counts_chains() {
+        let rec = sample();
+        let s = cause_summary(&rec.records());
+        assert_eq!(s.get("decisions").unwrap().as_usize(), Some(3));
+        assert_eq!(s.get("roots").unwrap().as_usize(), Some(1));
+        assert_eq!(s.get("max_depth").unwrap().as_usize(), Some(2));
+        let by_name = s.get("by_name").unwrap();
+        assert_eq!(by_name.get("sim.replan").unwrap().as_usize(), Some(1));
+    }
+}

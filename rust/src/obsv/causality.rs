@@ -1,0 +1,201 @@
+//! Causal correlation through the control loop: every root decision —
+//! an online workload event, an escalation, a replan, a GPU
+//! failure/repair — mints a [`CauseId`] and records it on a *decision
+//! record* ([`super::Record::Event`] with `id: Some(..)`). Every other
+//! record carries `cause: Option<CauseId>`, a parent reference to the
+//! innermost decision scope active when it was recorded, so the flat
+//! record stream becomes a forest of attribution chains:
+//!
+//! ```text
+//! online.event ── sim.escalation ── sim.replan ─┬─ transition.action
+//!  (root)                                       ├─ transition.apply
+//!                                               └─ reqsim.window
+//! ```
+//!
+//! Chains are closed and acyclic **by construction**: ids are minted
+//! from a monotone counter under the recorder's lock, a parent can only
+//! be an id a *previous* `decision()` call returned, and the decision
+//! record is appended at mint time — so every `cause` reference points
+//! strictly backwards in the stream (`scripts/check_obsv.py` and
+//! `tests/prop_obsv.rs` re-verify this on real traces).
+//!
+//! Determinism: minting happens only on the owning (single) decision
+//! thread — the simkit event loop, the online replayer, the CLI — never
+//! in optimizer workers, and the counter lives next to the record
+//! sequence counter. Ids are therefore logical-sequence-derived and the
+//! traced stream is byte-identical across optimizer parallelism.
+//!
+//! The scope itself is a plain thread-local stack ([`cause_scope`]):
+//! pushing costs nothing when no recorder is installed, and the
+//! disabled-hook fast path ([`super::active`]) is untouched — the stack
+//! is only *read* inside recorder methods, which are only reached when
+//! a recorder is on.
+
+use std::cell::RefCell;
+use std::fmt;
+
+use crate::util::json::Value;
+
+/// A monotonically-assigned decision id, unique within one recorder's
+/// stream. `CauseId(0)` never occurs (ids are 1-based), so exporters
+/// can treat 0 as "absent" if they ever need a sentinel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct CauseId(pub u64);
+
+impl CauseId {
+    pub fn get(self) -> u64 {
+        self.0
+    }
+}
+
+impl fmt::Display for CauseId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+thread_local! {
+    /// The decision-scope stack. Entries are `Option` so an inner scope
+    /// can *mask* an outer one with `None` (e.g. [`cause_scope`] with a
+    /// stored previous-window cause in `reqsim`, which may be absent).
+    static CAUSE_STACK: RefCell<Vec<Option<CauseId>>> = const { RefCell::new(Vec::new()) };
+}
+
+/// The innermost cause scope on this thread: the parent every new
+/// record is stamped with. `None` outside any scope, or when the
+/// innermost scope deliberately masks with `None`.
+pub fn current_cause() -> Option<CauseId> {
+    CAUSE_STACK.with(|s| s.borrow().last().copied().flatten())
+}
+
+/// RAII guard for [`cause_scope`]: pops the pushed scope on drop.
+#[must_use = "dropping the guard immediately closes the cause scope"]
+pub struct CauseScope {
+    pushed: bool,
+}
+
+/// Enter a cause scope: until the guard drops, every record this thread
+/// appends carries `cause` as its parent (including `None`, which masks
+/// any outer scope). A no-op — no thread-local traffic at all — when no
+/// recorder is installed.
+pub fn cause_scope(cause: Option<CauseId>) -> CauseScope {
+    if !super::active() {
+        return CauseScope { pushed: false };
+    }
+    CAUSE_STACK.with(|s| s.borrow_mut().push(cause));
+    CauseScope { pushed: true }
+}
+
+impl Drop for CauseScope {
+    fn drop(&mut self) {
+        if self.pushed {
+            CAUSE_STACK.with(|s| {
+                s.borrow_mut().pop();
+            });
+        }
+    }
+}
+
+/// Mint a decision: appends an event record carrying a fresh id (and
+/// `parent` as its own cause) and returns the id for chaining into
+/// child decisions or a [`cause_scope`]. Returns `None` when no
+/// recorder is installed — pass the result straight to [`cause_scope`].
+pub fn decision(
+    name: &str,
+    args: &[(&str, Value)],
+    parent: Option<CauseId>,
+) -> Option<CauseId> {
+    super::with(|r| r.decision(name, args, parent))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{install, Clock, Record, Recorder};
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn no_recorder_means_no_scope() {
+        assert!(current_cause().is_none());
+        let g = cause_scope(Some(CauseId(7)));
+        // Without a recorder the scope is a pure no-op.
+        assert!(current_cause().is_none());
+        drop(g);
+        assert!(decision("d", &[], None).is_none());
+    }
+
+    #[test]
+    fn decisions_mint_monotone_ids_and_scope_stamps_children() {
+        let rec = Arc::new(Recorder::new(Clock::Logical));
+        let _g = install(rec.clone());
+        let root = decision("root", &[], None);
+        assert_eq!(root, Some(CauseId(1)));
+        let child = decision("child", &[], root);
+        assert_eq!(child, Some(CauseId(2)));
+        {
+            let _cs = cause_scope(child);
+            assert_eq!(current_cause(), child);
+            super::super::event("leaf", &[]);
+            {
+                // Inner scope masks the outer one.
+                let _mask = cause_scope(None);
+                assert_eq!(current_cause(), None);
+                super::super::event("orphan", &[]);
+            }
+            assert_eq!(current_cause(), child);
+        }
+        assert_eq!(current_cause(), None);
+        let records = rec.records();
+        let find = |n: &str| records.iter().find(|r| r.name() == n).unwrap();
+        match find("root") {
+            Record::Event { id, cause, .. } => {
+                assert_eq!(*id, Some(CauseId(1)));
+                assert_eq!(*cause, None);
+            }
+            _ => panic!("decision must be an event record"),
+        }
+        match find("child") {
+            Record::Event { id, cause, .. } => {
+                assert_eq!(*id, Some(CauseId(2)));
+                assert_eq!(*cause, Some(CauseId(1)));
+            }
+            _ => panic!(),
+        }
+        match find("leaf") {
+            Record::Event { id, cause, .. } => {
+                assert_eq!(*id, None);
+                assert_eq!(*cause, Some(CauseId(2)));
+            }
+            _ => panic!(),
+        }
+        match find("orphan") {
+            Record::Event { cause, .. } => assert_eq!(*cause, None),
+            _ => panic!(),
+        }
+    }
+
+    /// Every `cause` reference points strictly backwards: the parent id
+    /// was minted (and its record appended) before any child record.
+    #[test]
+    fn chains_are_closed_by_construction() {
+        let rec = Arc::new(Recorder::new(Clock::Logical));
+        let _g = install(rec.clone());
+        let a = decision("a", &[], None);
+        let b = decision("b", &[], a);
+        {
+            let _cs = cause_scope(b);
+            super::super::event("w", &[]);
+        }
+        let mut minted = std::collections::BTreeSet::new();
+        for r in rec.records() {
+            if let Record::Event { id, cause, .. } = &r {
+                if let Some(c) = cause {
+                    assert!(minted.contains(c), "dangling/forward cause {c}");
+                }
+                if let Some(i) = id {
+                    assert!(minted.insert(*i), "duplicate id {i}");
+                }
+            }
+        }
+    }
+}

@@ -17,6 +17,43 @@ fn sanitize(name: &str) -> String {
         .collect()
 }
 
+/// Escape a label value per the Prometheus text format: backslash,
+/// double quote, and line feed are the only characters that need it.
+fn escape_label_value(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+/// One exposition sample line, label values escaped.
+fn sample_line(name: &str, labels: &[(&str, &str)], value: f64) -> String {
+    let mut s = String::from(name);
+    if !labels.is_empty() {
+        s.push('{');
+        for (i, (k, v)) in labels.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(k);
+            s.push_str("=\"");
+            s.push_str(&escape_label_value(v));
+            s.push('"');
+        }
+        s.push('}');
+    }
+    s.push(' ');
+    s.push_str(&format!("{value}"));
+    s.push('\n');
+    s
+}
+
 fn args_obj(args: &[(String, Value)]) -> Value {
     Value::Obj(args.to_vec())
 }
@@ -40,14 +77,30 @@ impl Recorder {
                         ("tid", Value::Num(1.0)),
                     ];
                     match r {
-                        Record::Begin { args, .. } if !args.is_empty() => {
-                            fields.push(("args", args_obj(args)));
+                        Record::Begin { args, cause, .. } => {
+                            let mut a = args.clone();
+                            if let Some(c) = cause {
+                                a.push(("cause".to_string(), Value::Num(c.get() as f64)));
+                            }
+                            if !a.is_empty() {
+                                fields.push(("args", args_obj(&a)));
+                            }
                         }
-                        Record::Event { args, .. } => {
+                        Record::Event { args, id, cause, .. } => {
                             // Instant events carry thread scope.
                             fields.push(("s", Value::from("t")));
-                            if !args.is_empty() {
-                                fields.push(("args", args_obj(args)));
+                            let mut a = args.clone();
+                            if let Some(i) = id {
+                                a.push((
+                                    "cause_id".to_string(),
+                                    Value::Num(i.get() as f64),
+                                ));
+                            }
+                            if let Some(c) = cause {
+                                a.push(("cause".to_string(), Value::Num(c.get() as f64)));
+                            }
+                            if !a.is_empty() {
+                                fields.push(("args", args_obj(&a)));
                             }
                         }
                         _ => {}
@@ -78,6 +131,12 @@ impl Recorder {
                     ("name", Value::from(r.name())),
                     ("ts_us", Value::Num(r.ts_us() as f64)),
                 ];
+                if let Some(i) = r.cause_id() {
+                    fields.push(("id", Value::Num(i.get() as f64)));
+                }
+                if let Some(c) = r.cause() {
+                    fields.push(("cause", Value::Num(c.get() as f64)));
+                }
                 match r {
                     Record::Begin { args, .. } | Record::Event { args, .. }
                         if !args.is_empty() =>
@@ -102,20 +161,21 @@ impl Recorder {
             let mut out = String::new();
             for (name, v) in counters {
                 let n = sanitize(name);
-                out.push_str(&format!("# TYPE {n} counter\n{n} {v}\n"));
+                out.push_str(&format!(
+                    "# HELP {n} {name}\n# TYPE {n} counter\n{n} {v}\n"
+                ));
             }
             for (name, v) in gauges {
                 let n = sanitize(name);
-                out.push_str(&format!("# TYPE {n} gauge\n{n} {v}\n"));
+                out.push_str(&format!(
+                    "# HELP {n} {name}\n# TYPE {n} gauge\n{n} {v}\n"
+                ));
             }
             for (name, h) in hists {
                 let n = sanitize(name);
-                out.push_str(&format!("# TYPE {n} summary\n"));
+                out.push_str(&format!("# HELP {n} {name}\n# TYPE {n} summary\n"));
                 for (q, p) in [("0.5", 50.0), ("0.9", 90.0), ("0.99", 99.0)] {
-                    out.push_str(&format!(
-                        "{n}{{quantile=\"{q}\"}} {}\n",
-                        h.percentile(p)
-                    ));
+                    out.push_str(&sample_line(&n, &[("quantile", q)], h.percentile(p)));
                 }
                 out.push_str(&format!("{n}_sum {}\n", h.mean() * h.count() as f64));
                 out.push_str(&format!("{n}_count {}\n", h.count()));
@@ -241,6 +301,48 @@ mod tests {
         assert!(text.contains("online_gap{quantile=\"0.5\"}"));
         assert!(text.contains("online_gap_count 2\n"));
         assert!(text.contains("online_gap_overflow 1\n"));
+        // Every metric family carries a HELP line (original name as the
+        // help text) immediately before its TYPE line.
+        assert!(text.contains(
+            "# HELP mcts_rollouts mcts.rollouts\n# TYPE mcts_rollouts counter\n"
+        ));
+        assert!(text.contains(
+            "# HELP frag_score frag.score\n# TYPE frag_score gauge\n"
+        ));
+        assert!(text.contains(
+            "# HELP online_gap online.gap\n# TYPE online_gap summary\n"
+        ));
+    }
+
+    /// SATELLITE: label values are escaped per the Prometheus text
+    /// format — backslash, double quote, and newline.
+    #[test]
+    fn label_values_are_escaped() {
+        let line = sample_line("m", &[("path", "a\"b\\c\nd")], 1.0);
+        assert_eq!(line, "m{path=\"a\\\"b\\\\c\\nd\"} 1\n");
+        assert_eq!(escape_label_value("plain"), "plain");
+        let multi = sample_line("m", &[("a", "x"), ("b", "y")], 0.5);
+        assert_eq!(multi, "m{a=\"x\",b=\"y\"} 0.5\n");
+    }
+
+    /// JSONL carries the causal fields: decisions emit `id` (+ optional
+    /// `cause` parent), scoped records a `cause` reference.
+    #[test]
+    fn jsonl_carries_cause_fields() {
+        use super::super::causality::CauseId;
+        let r = Recorder::new(Clock::Logical);
+        let root = r.decision("sim.replan", &[("reason", Value::from("deficit"))], None);
+        assert_eq!(root, CauseId(1));
+        let child = r.decision("child", &[], Some(root));
+        assert_eq!(child, CauseId(2));
+        let jsonl = r.to_jsonl();
+        let lines: Vec<&str> = jsonl.lines().collect();
+        let first = crate::util::json::parse(lines[0]).unwrap();
+        assert_eq!(first.get("id").unwrap().as_u64(), Some(1));
+        assert!(first.get("cause").is_none());
+        let second = crate::util::json::parse(lines[1]).unwrap();
+        assert_eq!(second.get("id").unwrap().as_u64(), Some(2));
+        assert_eq!(second.get("cause").unwrap().as_u64(), Some(1));
     }
 
     #[test]

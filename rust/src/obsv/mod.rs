@@ -29,10 +29,19 @@
 //!   [`install`] (RAII guard), so parallel `cargo test` threads never
 //!   observe each other's recorders. [`crate::optimizer::par`]
 //!   re-installs the caller's recorder inside its workers.
+//!
+//! Since PR 10 the stream also carries *causality* (DESIGN.md §13):
+//! root decisions mint [`CauseId`]s via [`decision`], scopes propagate
+//! them as parent references onto every record ([`cause_scope`]), and
+//! [`analyze`] turns the resulting chains into per-cause cost
+//! attribution, SLO burn rates, and critical-path breakdowns.
 
+pub mod analyze;
+mod causality;
 mod export;
 mod recorder;
 
+pub use causality::{cause_scope, current_cause, decision, CauseId, CauseScope};
 pub use recorder::{Clock, Lane, Record, Recorder};
 
 use std::cell::RefCell;

@@ -10,6 +10,7 @@ use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
+use super::causality::{self, CauseId};
 use crate::util::json::Value;
 use crate::util::stats::Histogram;
 
@@ -29,15 +30,29 @@ pub enum Clock {
 
 /// One trace record. `ts_us` is logical or virtual per [`Clock`];
 /// records are strictly ordered by their position in the stream (equal
-/// timestamps preserve append order).
+/// timestamps preserve append order). `cause` is the parent decision
+/// scope active at record time ([`super::causality`]); event records
+/// additionally carry `id: Some(..)` when they *are* a decision
+/// ([`Recorder::decision`]).
 #[derive(Debug, Clone)]
 pub enum Record {
     /// Span opened (Chrome `ph: "B"`).
-    Begin { name: String, ts_us: u64, args: Vec<(String, Value)> },
+    Begin {
+        name: String,
+        ts_us: u64,
+        args: Vec<(String, Value)>,
+        cause: Option<CauseId>,
+    },
     /// Span closed (Chrome `ph: "E"`).
     End { name: String, ts_us: u64 },
     /// Instant event (Chrome `ph: "i"`).
-    Event { name: String, ts_us: u64, args: Vec<(String, Value)> },
+    Event {
+        name: String,
+        ts_us: u64,
+        args: Vec<(String, Value)>,
+        id: Option<CauseId>,
+        cause: Option<CauseId>,
+    },
 }
 
 impl Record {
@@ -56,6 +71,22 @@ impl Record {
             | Record::Event { ts_us, .. } => *ts_us,
         }
     }
+
+    /// The parent decision this record is attributed to, if any.
+    pub fn cause(&self) -> Option<CauseId> {
+        match self {
+            Record::Begin { cause, .. } | Record::Event { cause, .. } => *cause,
+            Record::End { .. } => None,
+        }
+    }
+
+    /// The decision id this record *minted*, if it is a decision.
+    pub fn cause_id(&self) -> Option<CauseId> {
+        match self {
+            Record::Event { id, .. } => *id,
+            _ => None,
+        }
+    }
 }
 
 /// Histogram shape for [`Recorder::hist_record`]: bucket width 0.01
@@ -67,6 +98,11 @@ const HIST_BUCKETS: usize = 10_000;
 #[derive(Default)]
 struct Inner {
     seq: u64,
+    /// Count of minted decision ids (ids are `1..=causes`). Lives next
+    /// to `seq` under the same lock so ids are logical-sequence-derived
+    /// and parallelism-invariant (minting only ever happens on the
+    /// owning decision thread).
+    causes: u64,
     records: Vec<Record>,
     counters: BTreeMap<String, u64>,
     gauges: BTreeMap<String, f64>,
@@ -114,12 +150,14 @@ impl Recorder {
     }
 
     pub fn span_begin(&self, name: &str, args: &[(&str, Value)]) {
+        let cause = causality::current_cause();
         let mut inner = self.inner.lock().expect("recorder lock");
         let ts_us = self.stamp(&mut inner);
         inner.records.push(Record::Begin {
             name: name.to_string(),
             ts_us,
             args: Self::own_args(args),
+            cause,
         });
     }
 
@@ -130,13 +168,40 @@ impl Recorder {
     }
 
     pub fn event(&self, name: &str, args: &[(&str, Value)]) {
+        let cause = causality::current_cause();
         let mut inner = self.inner.lock().expect("recorder lock");
         let ts_us = self.stamp(&mut inner);
         inner.records.push(Record::Event {
             name: name.to_string(),
             ts_us,
             args: Self::own_args(args),
+            id: None,
+            cause,
         });
+    }
+
+    /// Mint a decision: one event record carrying a fresh
+    /// monotonically-assigned [`CauseId`] (and `parent` as its own
+    /// `cause`), appended at mint time so every later reference points
+    /// strictly backwards in the stream. See [`super::causality`].
+    pub fn decision(
+        &self,
+        name: &str,
+        args: &[(&str, Value)],
+        parent: Option<CauseId>,
+    ) -> CauseId {
+        let mut inner = self.inner.lock().expect("recorder lock");
+        inner.causes += 1;
+        let id = CauseId(inner.causes);
+        let ts_us = self.stamp(&mut inner);
+        inner.records.push(Record::Event {
+            name: name.to_string(),
+            ts_us,
+            args: Self::own_args(args),
+            id: Some(id),
+            cause: parent,
+        });
+        id
     }
 
     pub fn counter_add(&self, name: &str, v: u64) {
@@ -172,11 +237,17 @@ impl Recorder {
     /// stamping them here (owning thread) — the (round, slot) merge
     /// that makes parallel-stage traces worker-count-invariant.
     pub fn merge_lanes(&self, lanes: Vec<Lane>) {
+        // Lanes are merged on the owning thread, so worker-side records
+        // inherit the owning thread's decision scope (e.g. the replan
+        // that launched the parallel stage) — deterministically.
+        let cause = causality::current_cause();
         let mut inner = self.inner.lock().expect("recorder lock");
         for lane in lanes {
             for (name, args) in lane.events {
                 let ts_us = self.stamp(&mut inner);
-                inner.records.push(Record::Event { name, ts_us, args });
+                inner
+                    .records
+                    .push(Record::Event { name, ts_us, args, id: None, cause });
             }
             for (name, v) in lane.counters {
                 match inner.counters.get_mut(&name) {

@@ -137,6 +137,10 @@ pub struct EventOutcome {
     /// quality degraded past the bound): the caller must run a full
     /// pipeline replan and discard any scratch state.
     pub escalate: Option<EscalationReason>,
+    /// The `online.event` decision id minted while handling this event
+    /// (when a recorder is installed) — the causal parent for anything
+    /// the event triggers downstream, e.g. an escalation replan.
+    pub cause: Option<crate::obsv::CauseId>,
 }
 
 #[cfg(test)]

@@ -260,6 +260,8 @@ impl<'a> OnlineScheduler<'a> {
         }
         // One structured record per event: outcome, fragmentation
         // before/after, gap vs the §8.1 lower bound, escalation kind.
+        // The record is a *decision* — it mints a cause id that parents
+        // any downstream escalation replan (DESIGN.md §13).
         if let Some(frag_before) = frag_before {
             let frag_after = frag_mean(state);
             let gap = self.quality.last_gap.unwrap_or(0.0);
@@ -273,7 +275,8 @@ impl<'a> OnlineScheduler<'a> {
             if let Some(r) = &escalate {
                 args.push(("escalation", r.label().into()));
             }
-            crate::obsv::event("online.event", &args);
+            out.cause =
+                crate::obsv::decision("online.event", &args, crate::obsv::current_cause());
             crate::obsv::counter_add("online.events", 1);
             if escalate.is_some() {
                 crate::obsv::counter_add("online.escalations", 1);

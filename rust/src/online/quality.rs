@@ -141,6 +141,12 @@ impl QualityTracker {
         let used = state.used_gpu_count();
         let gap = (used as f64 - lb as f64) / lb as f64;
         self.last_gap = Some(gap);
+        if crate::obsv::active() {
+            // The two sides of the quality gate, so burn-rate and gap
+            // regressions can be read straight off the exported gauges.
+            crate::obsv::gauge_set("online.lower_bound", lb as f64);
+            crate::obsv::gauge_set("online.used_gpus", used as f64);
+        }
         // One GPU of slack absorbs the rule-free bound's rounding on
         // tiny fleets (used=2 vs lb=1 is not a 100% quality problem).
         let excess = used.saturating_sub(lb);

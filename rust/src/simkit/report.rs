@@ -158,6 +158,11 @@ pub struct SimReport {
     /// from the JSON — otherwise, so recorder-off reports stay
     /// byte-stable against earlier versions.
     pub obsv: Option<Value>,
+    /// Causality roll-up ([`crate::obsv::analyze::cause_summary`]) —
+    /// decision counts by name plus chain shape — when a recorder was
+    /// installed; absent from the JSON otherwise (same byte-stability
+    /// contract as `obsv`).
+    pub causes: Option<Value>,
 }
 
 impl SimReport {
@@ -316,6 +321,9 @@ impl SimReport {
         if let Some(o) = &self.obsv {
             fields.push(("obsv", o.clone()));
         }
+        if let Some(c) = &self.causes {
+            fields.push(("causes", c.clone()));
+        }
         Value::obj(fields)
     }
 
@@ -472,6 +480,7 @@ mod tests {
             event_log: vec!["t=0.0 bring-up".into()],
             requests: None,
             obsv: None,
+            causes: None,
         }
     }
 
@@ -531,18 +540,26 @@ mod tests {
         assert!(!s_off.contains("\"requests\""));
     }
 
-    /// The obsv field is absent when no recorder ran (byte-stable
-    /// recorder-off JSON) and present when the run produced a summary.
+    /// The obsv and causes fields are absent when no recorder ran
+    /// (byte-stable recorder-off JSON) and present when the run
+    /// produced them.
     #[test]
     fn obsv_summary_only_when_present() {
         let off = tiny_report();
         assert!(off.to_json().get("obsv").is_none());
+        assert!(off.to_json().get("causes").is_none());
+        assert!(!off.to_json().to_pretty().contains("\"causes\""));
         let mut on = tiny_report();
         on.obsv = Some(Value::obj(vec![("spans", Value::from(2usize))]));
+        on.causes = Some(Value::obj(vec![("decisions", Value::from(3usize))]));
         let v = on.to_json();
         assert_eq!(
             v.get_path("obsv.spans").and_then(|x| x.as_usize()),
             Some(2)
+        );
+        assert_eq!(
+            v.get_path("causes.decisions").and_then(|x| x.as_usize()),
+            Some(3)
         );
     }
 

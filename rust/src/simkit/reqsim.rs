@@ -142,6 +142,12 @@ pub struct ReqSim<'t> {
     by_service: Vec<Vec<InstanceKey>>,
     per_service: Vec<ServiceCounters>,
     window: Vec<WindowStats>,
+    /// The decision (replan) that *started* the currently-accumulating
+    /// window: windows emitted at a boundary carry the cause of the
+    /// replan whose aftermath they measured, so a mid-transition dip
+    /// attributes to the replan that launched the transition
+    /// (DESIGN.md §13).
+    window_cause: Option<crate::obsv::CauseId>,
     seq: u64,
     /// When set, every enqueue/commit is logged for FIFO assertions.
     recording: bool,
@@ -189,6 +195,7 @@ impl<'t> ReqSim<'t> {
                     latency_ms: latency_histogram(),
                 })
                 .collect(),
+            window_cause: None,
             seq: 0,
             recording: false,
             insertions: Vec::new(),
@@ -316,6 +323,11 @@ impl<'t> ReqSim<'t> {
             self.check_conservation()
         );
         if crate::obsv::active() {
+            // Windows are attributed to the replan that *started* them
+            // (stored at the previous boundary); the replan firing right
+            // now — the boundary caller's scope — owns the next window.
+            let next = crate::obsv::current_cause();
+            let _cs = crate::obsv::cause_scope(self.window_cause);
             for (i, w) in self.window.iter().enumerate() {
                 if w.completed == 0 && w.dropped == 0 {
                     continue;
@@ -329,6 +341,7 @@ impl<'t> ReqSim<'t> {
                     ("p99_ms", w.latency_ms.percentile(99.0).into()),
                 ]);
             }
+            self.window_cause = next;
         }
         for w in &mut self.window {
             w.reset();

@@ -104,6 +104,10 @@ struct InFlight {
     duration_s: f64,
     reason: &'static str,
     min_throughput: BTreeMap<ServiceId, f64>,
+    /// The decision (replan) this transition executes, captured at
+    /// schedule time so the apply/done records emitted at later virtual
+    /// instants re-enter the same cause scope (DESIGN.md §13).
+    cause: Option<crate::obsv::CauseId>,
 }
 
 impl InFlight {
@@ -324,6 +328,8 @@ impl<'a> Simulation<'a> {
                         }
                         let mut actions: Vec<Action> = Vec::new();
                         let mut escalation: Option<EscalationReason> = None;
+                        let mut escalation_cause: Option<crate::obsv::CauseId> =
+                            None;
                         let mut handled = 0usize;
                         {
                             // Trial-run the events on a scratch overlay;
@@ -336,6 +342,7 @@ impl<'a> Simulation<'a> {
                                 let out = sched.handle(&mut scratch, ev)?;
                                 if let Some(why) = out.escalate {
                                     escalation = Some(why);
+                                    escalation_cause = out.cause;
                                     break;
                                 }
                                 actions.extend(out.actions);
@@ -350,10 +357,22 @@ impl<'a> Simulation<'a> {
                             // absorbed — retract their count.
                             sched.quality.incremental =
                                 sched.quality.incremental.saturating_sub(handled);
-                            crate::obsv::event(
+                            // Causal chain: the escalating online.event
+                            // (decision minted inside `handle`) parents
+                            // the escalation, which parents the replan;
+                            // everything planned/scheduled below records
+                            // under the replan's scope.
+                            let esc = crate::obsv::decision(
                                 "sim.escalation",
                                 &[("reason", why.label().into())],
+                                escalation_cause,
                             );
+                            let replan_cause = crate::obsv::decision(
+                                "sim.replan",
+                                &[("reason", "escalation".into())],
+                                esc,
+                            );
+                            let _cs = crate::obsv::cause_scope(replan_cause);
                             match self.plan_transition(
                                 trace, &mut cluster, &controller, &demand, t,
                             ) {
@@ -431,6 +450,15 @@ impl<'a> Simulation<'a> {
                     } else {
                         demand.clone()
                     };
+                    // Root decision: threshold-triggered replans have no
+                    // upstream event; the scope covers planning, the
+                    // request-window boundary, and transition launch.
+                    let replan_cause = crate::obsv::decision(
+                        "sim.replan",
+                        &[("reason", reason.into())],
+                        None,
+                    );
+                    let _cs = crate::obsv::cause_scope(replan_cause);
                     match self.plan_transition(
                         trace, &mut cluster, &controller, &provision_demand, t,
                     ) {
@@ -474,15 +502,6 @@ impl<'a> Simulation<'a> {
                                 fl.actions.len(),
                                 fl.duration_s
                             ));
-                            if crate::obsv::active() {
-                                crate::obsv::event(
-                                    "sim.replan",
-                                    &[
-                                        ("reason", reason.into()),
-                                        ("actions", fl.actions.len().into()),
-                                    ],
-                                );
-                            }
                             inflight = Some(fl);
                         }
                         Err(e) => {
@@ -519,6 +538,19 @@ impl<'a> Simulation<'a> {
                                     }
                                 }
                                 inflight.as_mut().unwrap().note_capacity(&cluster, n);
+                                if crate::obsv::active() {
+                                    // Timeline point for the dip
+                                    // integral, under the owning
+                                    // replan's scope.
+                                    let fl = inflight.as_ref().unwrap();
+                                    let _cs = crate::obsv::cause_scope(fl.cause);
+                                    crate::obsv::event("transition.apply", &[
+                                        ("transition", transition.into()),
+                                        ("idx", idx.into()),
+                                        ("capacity", capacity_sum(&cluster, n).into()),
+                                        ("gpus", (cluster.used_gpu_count() as f64).into()),
+                                    ]);
+                                }
                                 // The applied action may have created,
                                 // deleted, or repartitioned instances:
                                 // reconcile queues (started batches
@@ -532,6 +564,14 @@ impl<'a> Simulation<'a> {
                                     "t={t:.1} transition #{transition}: action failed ({e}); aborting"
                                 ));
                                 let fl = inflight.take().unwrap();
+                                if crate::obsv::active() {
+                                    let _cs = crate::obsv::cause_scope(fl.cause);
+                                    crate::obsv::event("transition.abort", &[
+                                        ("transition", transition.into()),
+                                        ("capacity", capacity_sum(&cluster, n).into()),
+                                        ("gpus", (cluster.used_gpu_count() as f64).into()),
+                                    ]);
+                                }
                                 transitions.push(fl.into_record(true, Some(t)));
                             }
                         }
@@ -541,6 +581,15 @@ impl<'a> Simulation<'a> {
                     if inflight.as_ref().is_some_and(|fl| fl.id == transition) {
                         let fl = inflight.take().unwrap();
                         event_log.push(format!("t={t:.1} transition #{transition} done"));
+                        if crate::obsv::active() {
+                            // Closing point of the dip timeline.
+                            let _cs = crate::obsv::cause_scope(fl.cause);
+                            crate::obsv::event("transition.done", &[
+                                ("transition", transition.into()),
+                                ("capacity", capacity_sum(&cluster, n).into()),
+                                ("gpus", (cluster.used_gpu_count() as f64).into()),
+                            ]);
+                        }
                         transitions.push(fl.into_record(false, None));
                     }
                 }
@@ -559,6 +608,14 @@ impl<'a> Simulation<'a> {
                                     "t={t:.1} transition #{} aborted by failure",
                                     fl.id
                                 ));
+                                if crate::obsv::active() {
+                                    let _cs = crate::obsv::cause_scope(fl.cause);
+                                    crate::obsv::event("transition.abort", &[
+                                        ("transition", fl.id.into()),
+                                        ("capacity", capacity_sum(&cluster, n).into()),
+                                        ("gpus", (cluster.used_gpu_count() as f64).into()),
+                                    ]);
+                                }
                                 transitions.push(fl.into_record(true, Some(t)));
                             }
                             event_log.push(format!(
@@ -567,12 +624,15 @@ impl<'a> Simulation<'a> {
                                 killed.len()
                             ));
                             if crate::obsv::active() {
-                                crate::obsv::event(
+                                // Root decision: hardware faults start
+                                // their own attribution chains.
+                                crate::obsv::decision(
                                     "sim.gpu_fail",
                                     &[
                                         ("gpu", e.gpu.into()),
                                         ("pods_lost", killed.len().into()),
                                     ],
+                                    None,
                                 );
                             }
                             // A failure kills pods instantly: their
@@ -590,9 +650,10 @@ impl<'a> Simulation<'a> {
                             }
                             event_log.push(format!("t={t:.1} gpu {} repaired", e.gpu));
                             if crate::obsv::active() {
-                                crate::obsv::event(
+                                crate::obsv::decision(
                                     "sim.gpu_repair",
                                     &[("gpu", e.gpu.into())],
+                                    None,
                                 );
                             }
                         }
@@ -652,6 +713,8 @@ impl<'a> Simulation<'a> {
             // Snapshot of the installed recorder (if any) at report
             // time; `None` keeps the recorder-off JSON byte-stable.
             obsv: crate::obsv::current().map(|r| r.summary_json()),
+            causes: crate::obsv::current()
+                .map(|r| crate::obsv::analyze::cause_summary(&r.records())),
         })
     }
 
@@ -751,9 +814,26 @@ fn schedule_transition(
         duration_s: latency_s + schedule.wallclock_s,
         reason,
         min_throughput: BTreeMap::new(),
+        cause: crate::obsv::current_cause(),
     };
     fl.note_capacity(cluster, n);
+    if crate::obsv::active() {
+        // Opening point of the transition's capacity timeline; the
+        // analyzer integrates the dip below this baseline.
+        crate::obsv::event("transition.start", &[
+            ("transition", id.into()),
+            ("actions", fl.actions.len().into()),
+            ("capacity", capacity_sum(cluster, n).into()),
+            ("gpus", (cluster.used_gpu_count() as f64).into()),
+        ]);
+    }
     fl
+}
+
+/// Total serving capacity (req/s summed over services) — the scalar the
+/// `transition.*` timeline records carry for dip attribution.
+fn capacity_sum(cluster: &ClusterState, n: usize) -> f64 {
+    cluster.service_throughputs(n).iter().sum()
 }
 
 #[cfg(test)]

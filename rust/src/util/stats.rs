@@ -303,4 +303,39 @@ mod tests {
         assert_eq!(a.min(), 0.0);
         assert_eq!(a.max(), 99.0);
     }
+
+    /// Pin the merge contract the request-level report relies on:
+    /// merging per-shard histograms is exactly equivalent to recording
+    /// every sample into one histogram — same counts, same moments,
+    /// same percentiles (including the overflow tail).
+    #[test]
+    fn histogram_merge_equals_single_pass_on_random_samples() {
+        let mut rng = crate::util::rng::Rng::new(20_250_807);
+        let samples: Vec<f64> =
+            (0..5_000).map(|_| rng.f64_range(0.0, 120.0)).collect();
+        let mut single = Histogram::new(0.5, 200); // ceiling 100: overflow hit
+        let mut shards: Vec<Histogram> =
+            (0..7).map(|_| Histogram::new(0.5, 200)).collect();
+        for (i, &x) in samples.iter().enumerate() {
+            single.record(x);
+            shards[i % 7].record(x);
+        }
+        let mut merged = Histogram::new(0.5, 200);
+        for s in &shards {
+            merged.merge(s);
+        }
+        assert_eq!(merged.count(), single.count());
+        assert_eq!(merged.overflow(), single.overflow());
+        assert!(merged.overflow() > 0, "ceiling must actually be exercised");
+        assert_eq!(merged.min(), single.min());
+        assert_eq!(merged.max(), single.max());
+        assert!((merged.mean() - single.mean()).abs() < 1e-9);
+        for p in [0.0, 10.0, 50.0, 90.0, 99.0, 99.9, 100.0] {
+            assert_eq!(
+                merged.percentile(p),
+                single.percentile(p),
+                "percentile {p} diverges after merge"
+            );
+        }
+    }
 }

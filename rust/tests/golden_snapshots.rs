@@ -134,6 +134,30 @@ fn golden_simulate_quick_recorder_on_is_byte_identical() {
     }
 }
 
+/// The `analyze` text report on the quick incremental scenario with
+/// the request layer on, fixed seed: causal-chain attribution table and
+/// per-service SLO burn roll-up. Any change to cause minting, the
+/// window/cause join, or the burn-rate math shows up as a golden diff.
+#[test]
+fn golden_analyze_quick_incremental() {
+    use mig_serving::obsv::{analyze::analyze_records, install, Clock, Recorder};
+    use std::sync::Arc;
+
+    let bank = ProfileBank::synthetic();
+    let trace = scenario(&bank, "diurnal");
+    let cfg = SimConfig {
+        policy: ReplanPolicy::Incremental { gap_threshold: 0.5, repair_depth: 4 },
+        requests_per_day: Some(200_000.0),
+        ..SimConfig::quick()
+    };
+    let rec = Arc::new(Recorder::new(Clock::Virtual));
+    let guard = install(rec.clone());
+    Simulation::new(&bank, &trace, cfg).run().unwrap();
+    drop(guard);
+    let an = analyze_records(&rec.records(), 0.99).unwrap();
+    check_golden("analyze_quick_incremental", &an.render_text()).unwrap();
+}
+
 /// `simulate --quick --requests-per-day 1000000` on the diurnal
 /// scenario, fixed seed: the request-level layer's event-log lines and
 /// measured-latency table. ~1M simulated request lifetimes; any change

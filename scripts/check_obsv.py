@@ -3,16 +3,31 @@
 
 Usage: check_obsv.py FILE [FILE ...]
 
-Files ending in ``.json`` are validated as Chrome ``trace_event``
-documents (the format Perfetto / chrome://tracing loads):
+Files ending in ``.jsonl`` are validated as record-stream traces (the
+``--trace-out foo.jsonl`` format) including the causality contract:
 
-* the document parses as JSON and has a ``traceEvents`` array;
+* every line parses as JSON with ``kind`` in {begin, end, event}, a
+  non-empty ``name``, and a non-negative integer ``ts_us``;
+* decision ids (``id``) are strictly increasing in stream order;
+* every ``cause`` references an id minted on an *earlier* line — no
+  dangling or forward references, which also makes chains acyclic;
+* every ``reqsim.window`` cause chain terminates at a root decision.
+
+Files ending in ``.json`` are inspected: documents with a
+``traceEvents`` array are validated as Chrome ``trace_event`` documents
+(the format Perfetto / chrome://tracing loads):
+
 * every event has a ``ph`` in {B, E, i}, a non-empty ``name``, and a
   non-negative integer ``ts``;
 * B/E span events balance per (pid, tid) — every End pops the Begin
   with the same name, and nothing is left open at EOF;
 * timestamps are monotonically non-decreasing in stream order (the
   recorder's determinism contract).
+
+Documents with ``causes``/``services`` keys are validated as ``analyze
+--json`` reports: decision counts consistent with the causes array,
+parent/root/depth bookkeeping intact, attainment in [0, 1], finite
+non-negative burn rates.
 
 Files ending in ``.prom`` are validated as Prometheus text exposition:
 
@@ -38,13 +53,14 @@ SAMPLE_RE = re.compile(
 COMMENT_RE = re.compile(r"^# (HELP|TYPE) [a-zA-Z_:][a-zA-Z0-9_:]*( .*)?$")
 
 
-def check_trace(path, errors):
-    with open(path, encoding="utf-8") as f:
-        try:
-            doc = json.load(f)
-        except json.JSONDecodeError as e:
-            errors.append(f"{path}: not valid JSON: {e}")
-            return
+def check_trace(path, errors, doc=None):
+    if doc is None:
+        with open(path, encoding="utf-8") as f:
+            try:
+                doc = json.load(f)
+            except json.JSONDecodeError as e:
+                errors.append(f"{path}: not valid JSON: {e}")
+                return
     events = doc.get("traceEvents")
     if not isinstance(events, list):
         errors.append(f"{path}: missing traceEvents array")
@@ -82,6 +98,147 @@ def check_trace(path, errors):
     for key, stack in stacks.items():
         if stack:
             errors.append(f"{path}: unclosed spans on {key}: {stack}")
+
+
+def check_causality(path, errors):
+    """The JSONL record stream: minting order + closed, acyclic chains."""
+    minted = set()  # decision ids seen so far
+    parent = {}  # decision id -> cause id (or None)
+    last_id = 0
+    window_chains = []  # (lineno, line, cause) of reqsim.window events
+    n = 0
+    with open(path, encoding="utf-8") as f:
+        for lineno, line in enumerate(f, 1):
+            line = line.rstrip("\n")
+            if not line.strip():
+                continue
+            n += 1
+            where = f"{path}:{lineno}"
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError as e:
+                errors.append(f"{where}: not valid JSON: {e}")
+                continue
+            if rec.get("kind") not in ("begin", "end", "event"):
+                errors.append(f"{where}: bad kind in {line!r}")
+                continue
+            if not rec.get("name"):
+                errors.append(f"{where}: empty name in {line!r}")
+            ts = rec.get("ts_us")
+            if not isinstance(ts, int) or ts < 0:
+                errors.append(f"{where}: bad ts_us in {line!r}")
+            cause = rec.get("cause")
+            if cause is not None and cause not in minted:
+                errors.append(
+                    f"{where}: cause {cause} references an unminted decision "
+                    f"(dangling or forward): {line!r}"
+                )
+            rid = rec.get("id")
+            if rid is not None:
+                if rid <= last_id:
+                    errors.append(
+                        f"{where}: decision id {rid} not strictly increasing "
+                        f"(last {last_id}): {line!r}"
+                    )
+                last_id = max(last_id, rid)
+                minted.add(rid)
+                parent[rid] = cause
+            if rec.get("name") == "reqsim.window" and cause is not None:
+                window_chains.append((lineno, line, cause))
+    if n == 0:
+        errors.append(f"{path}: empty trace")
+    # Every attributed latency window must chain to a root decision.
+    for lineno, line, cause in window_chains:
+        cur, hops = cause, 0
+        while cur is not None:
+            if cur not in parent:
+                errors.append(
+                    f"{path}:{lineno}: window cause chain hits unknown "
+                    f"decision {cur}: {line!r}"
+                )
+                break
+            cur = parent[cur]
+            hops += 1
+            if hops > len(parent):
+                errors.append(
+                    f"{path}:{lineno}: window cause chain does not "
+                    f"terminate: {line!r}"
+                )
+                break
+
+
+def check_analysis(path, errors, doc):
+    """The ``analyze --json`` report schema."""
+    causes = doc.get("causes")
+    services = doc.get("services")
+    if not isinstance(causes, list) or not isinstance(services, list):
+        errors.append(f"{path}: analysis needs causes[] and services[]")
+        return
+    if doc.get("decisions") != len(causes):
+        errors.append(
+            f"{path}: decisions {doc.get('decisions')} != len(causes) "
+            f"{len(causes)}"
+        )
+    roots = sum(1 for c in causes if "parent" not in c)
+    if doc.get("roots") != roots:
+        errors.append(f"{path}: roots {doc.get('roots')} != counted {roots}")
+    by_id = {}
+    for i, c in enumerate(causes):
+        where = f"{path}: causes[{i}]"
+        if not isinstance(c.get("id"), (int, float)) or not c.get("name"):
+            errors.append(f"{where}: needs id and name: {c!r}")
+            continue
+        by_id[c["id"]] = c
+        p = c.get("parent")
+        if p is None:
+            if c.get("depth") != 0 or c.get("root") != c["id"]:
+                errors.append(f"{where}: root must have depth 0, root == id")
+        else:
+            pn = by_id.get(p)
+            if pn is None:
+                errors.append(f"{where}: parent {p} not minted earlier")
+            elif c.get("depth") != pn.get("depth", -2) + 1 or c.get(
+                "root"
+            ) != pn.get("root"):
+                errors.append(f"{where}: depth/root disagree with parent {p}")
+    for i, s in enumerate(services):
+        where = f"{path}: services[{i}]"
+        if not s.get("service") or not isinstance(s.get("windows"), list):
+            errors.append(f"{where}: needs service and windows[]: {s!r}")
+            continue
+        att = s.get("attainment")
+        if not isinstance(att, (int, float)) or not 0.0 <= att <= 1.0:
+            errors.append(f"{where}: attainment {att!r} not in [0, 1]")
+        for j, w in enumerate(s["windows"]):
+            burn = w.get("burn_rate")
+            if (
+                not isinstance(burn, (int, float))
+                or not math.isfinite(burn)
+                or burn < 0
+            ):
+                errors.append(
+                    f"{where}: windows[{j}]: bad burn_rate {burn!r}"
+                )
+    if not causes:
+        errors.append(f"{path}: analysis reports zero decisions")
+
+
+def check_json(path, errors):
+    with open(path, encoding="utf-8") as f:
+        try:
+            doc = json.load(f)
+        except json.JSONDecodeError as e:
+            errors.append(f"{path}: not valid JSON: {e}")
+            return
+    if isinstance(doc, dict) and "traceEvents" in doc:
+        check_trace(path, errors, doc)
+    elif isinstance(doc, dict) and "causes" in doc and "services" in doc:
+        check_analysis(path, errors, doc)
+    else:
+        errors.append(
+            f"{path}: neither a Chrome trace (traceEvents) nor an analyze "
+            f"report (causes/services)"
+        )
 
 
 def check_metrics(path, errors):
@@ -128,8 +285,10 @@ def main(argv):
     for path in argv[1:]:
         if path.endswith(".prom"):
             check_metrics(path, errors)
+        elif path.endswith(".jsonl"):
+            check_causality(path, errors)
         else:
-            check_trace(path, errors)
+            check_json(path, errors)
     for e in errors:
         print(e, file=sys.stderr)
     if not errors:
